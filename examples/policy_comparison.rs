@@ -1,0 +1,82 @@
+//! Policy comparison across all five Table I accelerators — the Table II
+//! experiment as a runnable example.
+//!
+//!     cargo run --release --example policy_comparison
+//!
+//! Runs Proposed / core-only / bram-only / power-gating / oracle over the
+//! same bursty 40%-mean workload and prints the per-benchmark power gains
+//! next to the paper's numbers.
+
+use wavescale::arch::TABLE1;
+use wavescale::platform::{build_platform, PlatformConfig, Policy};
+use wavescale::report::{row, table};
+use wavescale::vscale::Mode;
+use wavescale::workload::{bursty, BurstyConfig};
+
+fn main() -> Result<(), String> {
+    let trace = bursty(&BurstyConfig { steps: 1200, ..Default::default() });
+    println!(
+        "workload: {} steps, mean load {:.3} (paper: 40% average, H=0.76)\n",
+        trace.len(),
+        trace.mean()
+    );
+
+    // Paper Table II for side-by-side comparison.
+    let paper: &[(&str, f64, f64, f64)] = &[
+        ("tabla", 4.1, 2.9, 2.7),
+        ("dnnweaver", 4.4, 2.9, 2.9),
+        ("diannao", 3.9, 3.1, 1.9),
+        ("stripes", 3.9, 3.1, 1.8),
+        ("proteus", 3.8, 3.1, 2.0),
+    ];
+
+    let mut rows = vec![row([
+        "benchmark", "prop", "(paper)", "core-only", "(paper)", "bram-only", "(paper)", "pg",
+        "oracle",
+    ])];
+    let mut sums = [0.0f64; 5];
+    for spec in TABLE1 {
+        let run = |policy: Policy| -> Result<f64, String> {
+            let mut p = build_platform(spec.name, PlatformConfig::default(), policy)?;
+            Ok(p.run(&trace.loads).power_gain)
+        };
+        let prop = run(Policy::Dvfs(Mode::Proposed))?;
+        let core = run(Policy::Dvfs(Mode::CoreOnly))?;
+        let bram = run(Policy::Dvfs(Mode::BramOnly))?;
+        let pg = run(Policy::PowerGating)?;
+        let oracle = run(Policy::DvfsOracle(Mode::Proposed))?;
+        let (_, pp, pc, pb) = *paper.iter().find(|(n, ..)| *n == spec.name).unwrap();
+        rows.push(vec![
+            spec.name.to_string(),
+            format!("{prop:.2}x"),
+            format!("{pp:.1}x"),
+            format!("{core:.2}x"),
+            format!("{pc:.1}x"),
+            format!("{bram:.2}x"),
+            format!("{pb:.1}x"),
+            format!("{pg:.2}x"),
+            format!("{oracle:.2}x"),
+        ]);
+        for (i, v) in [prop, core, bram, pg, oracle].into_iter().enumerate() {
+            sums[i] += v / TABLE1.len() as f64;
+        }
+    }
+    rows.push(vec![
+        "average".into(),
+        format!("{:.2}x", sums[0]),
+        "4.0x".into(),
+        format!("{:.2}x", sums[1]),
+        "3.0x".into(),
+        format!("{:.2}x", sums[2]),
+        "2.3x".into(),
+        format!("{:.2}x", sums[3]),
+        format!("{:.2}x", sums[4]),
+    ]);
+    print!("{}", table(&rows));
+
+    println!(
+        "\nproposed vs best single-rail: +{:.1}% (paper: +33.6%)",
+        (sums[0] / sums[1] - 1.0) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Quickstart: build the full stack for one benchmark and run the paper's
+//! DVFS framework over a bursty workload.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Walks the public API end to end: characterization library → benchmark
+//! netlist → STA → power model → voltage optimizer → LUT → platform
+//! simulation, and prints the headline power gain.
+
+use wavescale::arch::{BenchmarkSpec, DeviceFamily};
+use wavescale::chars::{CharLibrary, ResourceClass};
+use wavescale::netlist::gen::{generate, GenConfig};
+use wavescale::platform::{build_platform, PlatformConfig, Policy};
+use wavescale::power::{DesignPower, PowerParams};
+use wavescale::sta::{analyze, DelayParams};
+use wavescale::vscale::{Mode, Optimizer, VoltageLut};
+use wavescale::workload::{bursty, BurstyConfig};
+
+fn main() -> Result<(), String> {
+    // 1. The pre-characterized library (COFFE substitute): delay & power
+    //    vs voltage for each resource class (paper Figs. 1-3).
+    let chars = CharLibrary::stratix_iv_22nm();
+    println!("characterization (22nm, 45C):");
+    for class in ResourceClass::ALL {
+        println!(
+            "  {:<8} delay x{:.2} @0.65V | static x{:.2} @0.65V-rail",
+            class.name(),
+            chars.delay_scale(class, if class.on_bram_rail() { 0.80 } else { 0.65 }),
+            chars.static_scale(class, if class.on_bram_rail() { 0.80 } else { 0.65 }),
+        );
+    }
+
+    // 2. A Table I benchmark: synthesize its netlist, run STA.
+    let spec = BenchmarkSpec::by_name("tabla").unwrap();
+    let net = generate(spec, &GenConfig { scale: 0.05, seed: 2019, luts_per_lab: 10 });
+    let timing = analyze(&net, &DelayParams::default(), 8)?;
+    println!(
+        "\ntabla: fmax {:.1} MHz (Table I: {:.0}), alpha {:.2}",
+        timing.fmax_mhz,
+        spec.freq_mhz,
+        timing.cp.alpha()
+    );
+
+    // 3. Power model on the VTR-sized device; rail tables for Eq. (1)-(3).
+    let design = DesignPower::from_spec(
+        spec,
+        &DeviceFamily::stratix_iv(),
+        chars.clone(),
+        PowerParams::default(),
+    )?;
+    let nominal = design.nominal();
+    println!(
+        "power: {:.2} W nominal (beta {:.2}, gamma_l {:.2})",
+        nominal.total_w(),
+        nominal.beta(),
+        nominal.gamma_l()
+    );
+
+    // 4. The core contribution: minimum-power (Vcore, Vbram) at 40% load.
+    let tables = design.rail_tables(&timing.cp);
+    let opt = Optimizer::new(chars.grid(), tables).with_paths(&chars, timing.top_paths.clone());
+    let pt = opt.optimize(2.5, Mode::Proposed);
+    println!(
+        "at 40% workload: Vcore {:.3} V, Vbram {:.3} V -> {:.1}% of nominal power",
+        pt.vcore,
+        pt.vbram,
+        pt.power_norm * 100.0
+    );
+
+    // 5. Synthesis-time LUT (what the Central Controller stores).
+    let lut = VoltageLut::build(&opt, 10, 0.05, Mode::Proposed);
+    println!("LUT: {} bins, top bin freq ratio {:.2}", lut.m_bins(), lut.entries[9].freq_ratio);
+
+    // 6. Simulate the multi-FPGA platform on a bursty 40%-mean workload.
+    let trace = bursty(&BurstyConfig { steps: 600, ..Default::default() });
+    let mut platform = build_platform("tabla", PlatformConfig::default(), Policy::Dvfs(Mode::Proposed))?;
+    let report = platform.run(&trace.loads);
+    println!(
+        "\nsimulated {} steps (mean load {:.2}): power gain {:.2}x, QoS violations {:.1}%",
+        trace.len(),
+        trace.mean(),
+        report.power_gain,
+        report.violation_rate * 100.0
+    );
+    assert!(report.power_gain > 2.0, "expected a clear win over nominal");
+    println!("quickstart OK");
+    Ok(())
+}

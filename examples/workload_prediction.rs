@@ -1,0 +1,70 @@
+//! Workload predictor study (paper §IV.A / Fig. 8).
+//!
+//!     cargo run --release --example workload_prediction
+//!
+//! Compares the Markov-chain predictor against periodic/EWMA/last-value
+//! baselines on four workload shapes, reporting exact-bin accuracy and
+//! QoS coverage (prediction + 5% margin >= actual).
+
+use wavescale::markov::{
+    EwmaPredictor, LastValuePredictor, MarkovPredictor, PeriodicPredictor, Predictor,
+};
+use wavescale::report::{row, table};
+use wavescale::workload;
+
+fn evaluate(p: &mut dyn Predictor, loads: &[f64], warmup: usize) -> (f64, f64) {
+    let bins = 10.0;
+    let bin_of = |x: f64| ((x.clamp(0.0, 1.0) * bins).ceil() as usize).clamp(1, 10) - 1;
+    let mut exact = 0usize;
+    let mut covered = 0usize;
+    let mut total = 0usize;
+    for (i, &load) in loads.iter().enumerate() {
+        if i > warmup {
+            total += 1;
+            let pred = p.predict();
+            if bin_of(pred) == bin_of(load) {
+                exact += 1;
+            }
+            if pred * 1.05 + 1.0 / bins >= load {
+                covered += 1;
+            }
+        }
+        p.observe(load);
+    }
+    (exact as f64 / total as f64, covered as f64 / total as f64)
+}
+
+fn main() {
+    let steps = 4000;
+    let traces = vec![
+        workload::bursty(&workload::BurstyConfig { steps, ..Default::default() }),
+        workload::periodic(steps, 96, 0.15, 0.85, 0.03, 11),
+        workload::poisson(steps, 0.4, 1000.0, 12),
+        workload::square(steps, 60, 0.2, 0.8),
+    ];
+
+    for trace in traces {
+        let stats = trace.measured_stats(1000.0);
+        println!(
+            "\n{} | mean {:.2} | Hurst(R/S) {:.2} | IDC {:.0}",
+            trace.label, stats.mean_load, stats.hurst_rs, stats.idc
+        );
+        let mut rows = vec![row(["predictor", "exact-bin", "coverage(+5%)"])];
+        let mut predictors: Vec<Box<dyn Predictor>> = vec![
+            Box::new(MarkovPredictor::new(10, 20)),
+            Box::new(PeriodicPredictor::new(96)),
+            Box::new(EwmaPredictor::new(0.3)),
+            Box::new(LastValuePredictor::default()),
+        ];
+        for p in predictors.iter_mut() {
+            let (exact, covered) = evaluate(p.as_mut(), &trace.loads, 20);
+            rows.push(vec![
+                p.name().to_string(),
+                format!("{:.1}%", exact * 100.0),
+                format!("{:.1}%", covered * 100.0),
+            ]);
+        }
+        print!("{}", table(&rows));
+    }
+    println!("\nworkload_prediction OK");
+}

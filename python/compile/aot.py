@@ -1,0 +1,226 @@
+"""AOT bridge: lower the Layer-2 graphs to HLO *text* + a manifest.
+
+Run once by ``make artifacts``; the rust binary is self-contained after.
+
+HLO text — not ``.serialize()`` — is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/load_hlo/).
+
+Emitted artifacts:
+  voltage_opt_{prop,core_only,bram_only}.hlo.txt   Voltage Selector variants
+  dnn_{tabla,dnnweaver,diannao,stripes,proteus}.hlo.txt  served models
+  manifest.json                                    shapes/dtypes/meta index
+
+Every artifact is numerically self-checked against its oracle before being
+written; a failing check aborts the build.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(dt) -> str:
+    return {"float32": "f32", "int32": "i32"}[np.dtype(dt).name]
+
+
+def _arg_meta(args):
+    return [{"shape": list(a.shape), "dtype": _dtype_name(a.dtype)} for a in args]
+
+
+def _hlo_stats(text: str) -> dict:
+    """Cheap structural stats recorded in the manifest (perf tracking)."""
+    lines = text.splitlines()
+    return {
+        "bytes": len(text),
+        "computations": sum(1 for l in lines if l.lstrip().startswith("%fused") or l.startswith("ENTRY")),
+        "fusions": sum(1 for l in lines if " fusion(" in l),
+        "while_loops": sum(1 for l in lines if " while(" in l),
+        "dots": sum(1 for l in lines if " dot(" in l),
+    }
+
+
+def _check(name, got, want, atol=1e-5, rtol=1e-5):
+    got = np.asarray(got)
+    want = np.asarray(want)
+    if got.dtype.kind == "i":
+        ok = np.array_equal(got, want)
+    else:
+        ok = np.allclose(got, want, atol=atol, rtol=rtol)
+    if not ok:
+        raise SystemExit(f"AOT self-check FAILED for {name}: kernel != oracle")
+
+
+def build_voltage_opt(out_dir: str, mode: str, rng: np.random.Generator) -> dict:
+    """Lower one Voltage Selector variant; self-check vs the oracle first."""
+    nv, nm, b = model.NV, model.NM, model.OPT_BATCH
+    tables = ref.example_tables(nv, nm)
+    alpha = jnp.asarray(rng.uniform(0.0, 0.5, b), jnp.float32)
+    beta = jnp.asarray(rng.uniform(0.1, 0.7, b), jnp.float32)
+    gl = jnp.asarray(rng.uniform(0.3, 0.9, b), jnp.float32)
+    gm = jnp.asarray(rng.uniform(0.3, 0.9, b), jnp.float32)
+    sw = jnp.asarray(rng.uniform(1.0, 8.0, b), jnp.float32)
+
+    fn = lambda *a: model.voltage_optimize(*a, mode=mode)  # noqa: E731
+    got = jax.jit(fn)(*tables, alpha, beta, gl, gm, sw)
+    want = ref.vgrid_optimize_ref(*tables, alpha, beta, gl, gm, sw, mode=mode)
+    for g, w, part in zip(got, want, ("icore", "ibram", "power")):
+        _check(f"voltage_opt_{mode}.{part}", g, w)
+
+    spec = lambda n: jax.ShapeDtypeStruct((n,), jnp.float32)  # noqa: E731
+    args = [spec(nv), spec(nm), spec(nv), spec(nv), spec(nm), spec(nm)] + [
+        spec(b)
+    ] * 5
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    name = f"voltage_opt_{mode}"
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+    return {
+        "path": path,
+        "args": _arg_meta(args),
+        "results": [
+            {"shape": [b], "dtype": "i32"},
+            {"shape": [b], "dtype": "i32"},
+            {"shape": [b], "dtype": "f32"},
+        ],
+        "meta": {
+            "kind": "voltage_opt",
+            "mode": mode,
+            "nv": nv,
+            "nm": nm,
+            "batch": b,
+            "vcore_nom": model.VCORE_NOM,
+            "vbram_nom": model.VBRAM_NOM,
+            "v_step": model.V_STEP,
+            "v_crash": model.V_CRASH,
+            "hlo": _hlo_stats(text),
+        },
+    }
+
+
+def build_dnn(out_dir: str, variant: str, rng: np.random.Generator) -> dict:
+    """Lower one served-model variant; self-check vs the pure-jnp oracle."""
+    x_shape, layer_shapes = model.dnn_param_shapes(variant)
+    params = model.dnn_init_params(variant)
+    x = jnp.asarray(rng.standard_normal(x_shape), jnp.float32)
+
+    got = jax.jit(model.dnn_forward)(x, *params)
+
+    def forward_ref(x, *params):
+        n = len(params) // 2
+        for i in range(n):
+            w, b = params[2 * i], params[2 * i + 1]
+            x = ref.matmul_ref(x, w) + b[None, :]
+            if i + 1 < n:
+                x = jax.nn.relu(x)
+        return x
+
+    _check(f"dnn_{variant}", got, forward_ref(x, *params), atol=1e-3, rtol=1e-4)
+
+    arg_specs = [jax.ShapeDtypeStruct(x_shape, jnp.float32)]
+    for (w_shape, b_shape) in layer_shapes:
+        arg_specs.append(jax.ShapeDtypeStruct(w_shape, jnp.float32))
+        arg_specs.append(jax.ShapeDtypeStruct(b_shape, jnp.float32))
+    lowered = jax.jit(model.dnn_forward).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    name = f"dnn_{variant}"
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+
+    # Side files so the rust runtime can execute with the exact parameters
+    # used here and smoke-check numerics after its own compile:
+    #   <name>.params.bin  f32-LE params concatenated in arg order
+    #   <name>.golden.bin  f32-LE x then y, flattened row-major
+    params_bin = f"{name}.params.bin"
+    golden_bin = f"{name}.golden.bin"
+    with open(os.path.join(out_dir, params_bin), "wb") as f:
+        for p in params:
+            f.write(np.asarray(p, dtype="<f4").tobytes())
+    with open(os.path.join(out_dir, golden_bin), "wb") as f:
+        f.write(np.asarray(x, dtype="<f4").tobytes())
+        f.write(np.asarray(got, dtype="<f4").tobytes())
+    golden = {
+        "x_first8": np.asarray(x).reshape(-1)[:8].tolist(),
+        "y_first8": np.asarray(got).reshape(-1)[:8].tolist(),
+        "params_bin": params_bin,
+        "golden_bin": golden_bin,
+    }
+    return {
+        "path": path,
+        "args": _arg_meta(arg_specs),
+        "results": [{"shape": list(got.shape), "dtype": "f32"}],
+        "meta": {
+            "kind": "dnn",
+            "variant": variant,
+            "batch": x_shape[0],
+            "layers": list(model.DNN_VARIANTS[variant]),
+            "golden": golden,
+            "hlo": _hlo_stats(text),
+        },
+    }
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--skip-dnn", action="store_true", help="voltage artifacts only (fast dev)"
+    )
+    ns = parser.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+    rng = np.random.default_rng(2019)
+
+    artifacts = {}
+    for mode in ("prop", "core_only", "bram_only"):
+        name = f"voltage_opt_{mode}"
+        artifacts[name] = build_voltage_opt(ns.out_dir, mode, rng)
+        print(f"  {name}: {artifacts[name]['meta']['hlo']['bytes']} bytes")
+    if not ns.skip_dnn:
+        for variant in model.DNN_VARIANTS:
+            name = f"dnn_{variant}"
+            artifacts[name] = build_dnn(ns.out_dir, variant, rng)
+            print(f"  {name}: {artifacts[name]['meta']['hlo']['bytes']} bytes")
+
+    src_digest = hashlib.sha256()
+    here = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in os.walk(here):
+        for fname in sorted(files):
+            if fname.endswith(".py"):
+                with open(os.path.join(root, fname), "rb") as f:
+                    src_digest.update(f.read())
+
+    manifest = {
+        "version": 1,
+        "jax": jax.__version__,
+        "source_sha256": src_digest.hexdigest(),
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(ns.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {len(artifacts)} artifacts + manifest.json to {ns.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

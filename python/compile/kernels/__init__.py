@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for wavescale.
+
+Two kernels:
+  * ``vgrid``  -- the paper's numeric hot-spot: evaluate the (Vcore, Vbram)
+    voltage grid (delay feasibility, Eq. (2); power, Eq. (3)) for a batch of
+    (alpha, beta, Sw) operating points and reduce to the optimal pair.
+  * ``matmul`` -- MXU-tiled matmul used by the served DNN forward pass.
+
+Both are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the correctness path; real-TPU
+performance is estimated from the BlockSpecs (see DESIGN.md section 7).
+"""
+
+from compile.kernels.vgrid import vgrid_optimize, MODES  # noqa: F401
+from compile.kernels.matmul import matmul  # noqa: F401

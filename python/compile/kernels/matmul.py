@@ -1,0 +1,61 @@
+"""MXU-tiled Pallas matmul — the served accelerator's compute hot-spot.
+
+The multi-FPGA platform in the paper hosts DNN accelerators (Tabla,
+DnnWeaver, DianNao, Stripes, Proteus); in this reproduction each simulated
+FPGA instance executes an AOT-compiled DNN forward pass whose matmuls lower
+through this kernel.
+
+TPU adaptation (DESIGN.md section 7): the FPGA accelerators' systolic MAC
+arrays map onto the MXU; tiling is (bm, bk) x (bk, bn) blocks resident in
+VMEM with the K reduction carried across the innermost grid dimension. The
+output block's index_map ignores k, so the same VMEM tile is revisited and
+accumulated in place — the Pallas idiom for a K-loop with double-buffered
+operand streaming.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(x, y, *, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Blocked matmul ``x @ y`` with (bm, bn, bk) MXU tiles.
+
+    Dimensions must divide by the respective tile. f32 accumulate
+    (bfloat16 inputs are upcast by ``preferred_element_type``).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {y.shape}")
+    bm = min(bm, m)
+    bn = min(bn, n)
+    bk = min(bk, k)
+    if m % bm or n % bn or k % bk:
+        raise ValueError(f"shapes {x.shape} @ {y.shape} not tiled by ({bm},{bn},{bk})")
+    nk = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)

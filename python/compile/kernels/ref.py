@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness bar).
+
+Every kernel in this package must match its oracle to float tolerance under
+pytest/hypothesis before ``aot.py`` is allowed to emit artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Oracle for kernels.matmul."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def vgrid_optimize_ref(
+    dl, dm, pl_dyn, pl_st, pm_dyn, pm_st, alpha, beta, gl, gm, sw, *, mode="prop"
+):
+    """Oracle for kernels.vgrid_optimize (vectorized, no Pallas).
+
+    Mirrors Eq. (1)-(3) of the paper with identical flattened-argmin
+    tie-breaking (row-major over (icore, ibram), lowest index wins).
+    """
+    dl = jnp.asarray(dl)
+    dm = jnp.asarray(dm)
+    nv, nm = dl.shape[0], dm.shape[0]
+
+    delay = dl[None, :, None] + alpha[:, None, None] * dm[None, None, :]
+    budget = ((1.0 + alpha) * sw)[:, None, None]
+    feasible = delay <= budget
+
+    fr = (1.0 / sw)[:, None]
+    p_core = gl[:, None] * pl_dyn[None, :] * fr + (1.0 - gl)[:, None] * pl_st[None, :]
+    p_bram = gm[:, None] * pm_dyn[None, :] * fr + (1.0 - gm)[:, None] * pm_st[None, :]
+    power = (
+        (1.0 - beta)[:, None, None] * p_core[:, :, None]
+        + beta[:, None, None] * p_bram[:, None, :]
+    )
+
+    if mode == "core_only":
+        idx = jnp.arange(nm)[None, None, :]
+        feasible = jnp.logical_and(feasible, idx == 0)
+    elif mode == "bram_only":
+        idx = jnp.arange(nv)[None, :, None]
+        feasible = jnp.logical_and(feasible, idx == 0)
+
+    masked = jnp.where(feasible, power, jnp.inf)
+    flat = masked.reshape((masked.shape[0], nv * nm))
+    best = jnp.argmin(flat, axis=1).astype(jnp.int32)
+    return best // nm, best % nm, jnp.min(flat, axis=1)
+
+
+def example_tables(nv: int = 13, nm: int = 19):
+    """Synthetic-but-realistic characterization tables for tests.
+
+    Shapes follow the paper's Figures 1-3: index 0 = nominal voltage
+    (Vcore 0.80 V / Vbram 0.95 V), 25 mV descending steps, delay scale
+    rising super-linearly toward the crash voltage, dynamic power ~ V^2,
+    static power dropping exponentially (DIBL). The rust `chars` module is
+    the production generator; this is only a test fixture with the same
+    qualitative structure.
+    """
+    v_core = 0.80 - 0.025 * np.arange(nv)
+    v_bram = 0.95 - 0.025 * np.arange(nm)
+
+    def delay_scale(v, v0, vth, a=1.3):
+        # Clamp the overdrive so deep grids (tests sweep nv/nm past the
+        # physical crash voltage) stay finite; the rust chars module owns
+        # the real crash-voltage semantics.
+        ov = np.maximum(v - vth, 0.02)
+        return ((v0 - vth) ** a / ov**a) * (v / v0)
+
+    dl = delay_scale(v_core, 0.80, 0.35)
+    # BRAM: high-Vth cells, flat region near nominal then a spike (Fig. 1).
+    dm = delay_scale(v_bram, 0.95, 0.42, a=1.6)
+    pl_dyn = (v_core / 0.80) ** 2
+    pm_dyn = (v_bram / 0.95) ** 2
+    pl_st = (v_core / 0.80) * np.exp((v_core - 0.80) / 0.045)
+    pm_st = (v_bram / 0.95) * np.exp((v_bram - 0.95) / 0.040)
+    f32 = lambda a: jnp.asarray(np.asarray(a), jnp.float32)  # noqa: E731
+    return tuple(f32(t) for t in (dl, dm, pl_dyn, pl_st, pm_dyn, pm_st))

@@ -1,0 +1,173 @@
+"""Voltage-grid optimizer kernel (the paper's Eq. (1)-(3) hot-spot).
+
+Given the pre-characterized per-voltage tables of the FPGA resource library
+(DESIGN.md S1) and a batch of operating points, the kernel evaluates every
+``(Vcore, Vbram)`` pair on the DC-DC grid and selects, per operating point,
+the minimum-power pair that still meets the workload-stretched critical
+path:
+
+    delay(i, j)  = dl[i] + alpha * dm[j]            (Eq. 1, normalized)
+    feasible     = delay(i, j) <= (1 + alpha) * sw  (Eq. 2)
+    power(i, j)  = (1-beta) * (gl * pl_dyn[i] / sw + (1-gl) * pl_st[i])
+                 +    beta  * (gm * pm_dyn[j] / sw + (1-gm) * pm_st[j])
+                                                    (Eq. 3; f = f_nom / sw)
+
+Table convention: index 0 is the nominal voltage; ascending index means
+*descending* voltage (25 mV DC-DC steps, ref. [39] of the paper). Index 0 is
+therefore always feasible for sw >= 1, so the masked argmin is total.
+
+TPU adaptation (DESIGN.md section 7): the voltage grid is tiny (NV x NM ~
+13 x 19) and lives in VMEM for the whole batch; the batch is tiled along the
+Pallas grid, and the six characterization tables are re-used by every
+program instance (constant index_map), so the HBM<->VMEM traffic is one
+table load plus one batch-tile stream -- the same schedule a GPU version
+would express with a threadblock-resident lookup table.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Optimization modes: which rail(s) the policy may scale. Baked per artifact
+# so the rust runtime gets one executable per policy variant.
+MODES = ("prop", "core_only", "bram_only")
+
+# Default batch tile. The voltage surface per element is NV*NM floats; at
+# (13, 19) a 64-element tile keeps the whole working set < 1 MiB of VMEM.
+DEFAULT_BLOCK_B = 64
+
+
+def _vgrid_kernel(
+    dl_ref,
+    dm_ref,
+    pl_dyn_ref,
+    pl_st_ref,
+    pm_dyn_ref,
+    pm_st_ref,
+    alpha_ref,
+    beta_ref,
+    gl_ref,
+    gm_ref,
+    sw_ref,
+    icore_ref,
+    ibram_ref,
+    power_ref,
+    *,
+    mode: str,
+):
+    dl = dl_ref[...]  # (NV,)  logic+routing delay scale vs Vcore
+    dm = dm_ref[...]  # (NM,)  BRAM delay scale vs Vbram
+    pl_dyn = pl_dyn_ref[...]  # (NV,)  core-rail dynamic energy/cycle scale
+    pl_st = pl_st_ref[...]  # (NV,)  core-rail static power scale
+    pm_dyn = pm_dyn_ref[...]  # (NM,)  bram-rail dynamic energy/cycle scale
+    pm_st = pm_st_ref[...]  # (NM,)  bram-rail static power scale
+
+    alpha = alpha_ref[...]  # (B,) BRAM share of critical-path delay
+    beta = beta_ref[...]  # (B,) BRAM share of total power
+    gl = gl_ref[...]  # (B,) dynamic fraction of core-rail power
+    gm = gm_ref[...]  # (B,) dynamic fraction of bram-rail power
+    sw = sw_ref[...]  # (B,) workload slack factor (>= 1)
+
+    nv = dl.shape[0]
+    nm = dm.shape[0]
+
+    # Delay surface (B, NV, NM) and the Eq. (2) feasibility mask.
+    delay = dl[None, :, None] + alpha[:, None, None] * dm[None, None, :]
+    budget = ((1.0 + alpha) * sw)[:, None, None]
+    feasible = delay <= budget
+
+    # Rail powers at the workload-scaled frequency f = f_nom / sw.
+    fr = (1.0 / sw)[:, None]  # frequency ratio, (B, 1)
+    p_core = gl[:, None] * pl_dyn[None, :] * fr + (1.0 - gl)[:, None] * pl_st[None, :]
+    p_bram = gm[:, None] * pm_dyn[None, :] * fr + (1.0 - gm)[:, None] * pm_st[None, :]
+    power = (
+        (1.0 - beta)[:, None, None] * p_core[:, :, None]
+        + beta[:, None, None] * p_bram[:, None, :]
+    )
+
+    # Policy restriction: single-rail baselines pin the other rail to
+    # index 0 (nominal voltage).
+    if mode == "core_only":
+        col = jax.lax.broadcasted_iota(jnp.int32, power.shape, 2)
+        feasible = jnp.logical_and(feasible, col == 0)
+    elif mode == "bram_only":
+        row = jax.lax.broadcasted_iota(jnp.int32, power.shape, 1)
+        feasible = jnp.logical_and(feasible, row == 0)
+
+    masked = jnp.where(feasible, power, jnp.inf)
+    flat = masked.reshape((masked.shape[0], nv * nm))
+    best = jnp.argmin(flat, axis=1).astype(jnp.int32)
+    best_power = jnp.min(flat, axis=1)
+
+    icore_ref[...] = best // nm
+    ibram_ref[...] = best % nm
+    power_ref[...] = best_power
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_b"))
+def vgrid_optimize(
+    dl,
+    dm,
+    pl_dyn,
+    pl_st,
+    pm_dyn,
+    pm_st,
+    alpha,
+    beta,
+    gl,
+    gm,
+    sw,
+    *,
+    mode: str = "prop",
+    block_b: int = DEFAULT_BLOCK_B,
+):
+    """Batched optimal-voltage-pair selection on the DC-DC grid.
+
+    Args:
+      dl, pl_dyn, pl_st: f32[NV] core-rail tables (index 0 = nominal).
+      dm, pm_dyn, pm_st: f32[NM] bram-rail tables (index 0 = nominal).
+      alpha, beta, gl, gm, sw: f32[B] per-operating-point parameters.
+      mode: "prop" (both rails), "core_only", or "bram_only".
+      block_b: Pallas batch tile; B must be a multiple.
+
+    Returns:
+      (icore i32[B], ibram i32[B], power f32[B]) -- chosen table indices and
+      the achieved normalized power.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    b = alpha.shape[0]
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not a multiple of block_b {block_b}")
+    nv = dl.shape[0]
+    nm = dm.shape[0]
+
+    table = lambda n: pl.BlockSpec((n,), lambda i: (0,))  # noqa: E731
+    batch = pl.BlockSpec((block_b,), lambda i: (i,))
+
+    return pl.pallas_call(
+        functools.partial(_vgrid_kernel, mode=mode),
+        grid=(b // block_b,),
+        in_specs=[
+            table(nv),
+            table(nm),
+            table(nv),
+            table(nv),
+            table(nm),
+            table(nm),
+            batch,
+            batch,
+            batch,
+            batch,
+            batch,
+        ],
+        out_specs=[batch, batch, batch],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.float32),
+        ],
+        interpret=True,
+    )(dl, dm, pl_dyn, pl_st, pm_dyn, pm_st, alpha, beta, gl, gm, sw)

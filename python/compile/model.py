@@ -1,0 +1,126 @@
+"""Layer-2 JAX model: the compute graphs that get AOT-lowered to HLO text.
+
+Two graph families:
+
+* ``voltage_optimize``  — the central controller's Voltage Selector
+  (paper §V): batched optimal (Vcore, Vbram) selection on the DC-DC grid,
+  built on the :mod:`compile.kernels.vgrid` Pallas kernel. The
+  characterization tables are *runtime inputs* so one artifact serves any
+  rust-side characterization library.
+
+* ``dnn_forward``       — the served accelerator workload: an MLP forward
+  pass built on the :mod:`compile.kernels.matmul` Pallas kernel, with one
+  shape variant per paper benchmark (Table I). Each simulated FPGA instance
+  executes one of these through PJRT on the request path.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from compile import kernels
+
+# ---------------------------------------------------------------------------
+# Voltage grid dimensions (paper §III/§IV):
+#   Vcore: 0.800 V nominal down to 0.500 V crash voltage, 25 mV steps -> 13
+#   Vbram: 0.950 V nominal down to 0.500 V crash voltage, 25 mV steps -> 19
+# Index 0 = nominal; ascending index = descending voltage.
+# ---------------------------------------------------------------------------
+VCORE_NOM = 0.800
+VBRAM_NOM = 0.950
+V_CRASH = 0.500
+V_STEP = 0.025
+NV = int(round((VCORE_NOM - V_CRASH) / V_STEP)) + 1  # 13
+NM = int(round((VBRAM_NOM - V_CRASH) / V_STEP)) + 1  # 19
+
+# AOT batch of operating points per Voltage Selector call. The rust CC pads
+# its (benchmark x workload-level) queries up to this.
+OPT_BATCH = 64
+
+# Served-model batch (requests per inference dispatch).
+DNN_BATCH = 16
+
+# Benchmark shape variants, loosely scaled after Table I logic utilization
+# (LAB counts: Tabla 127 ... Stripes 12343). (input, hidden..., output);
+# all dims are multiples of the 64-wide MXU-tile floor used at this size.
+DNN_VARIANTS = {
+    "tabla": (128, 256, 256, 64),
+    "dnnweaver": (256, 512, 512, 64),
+    "diannao": (512, 1024, 1024, 64),
+    "stripes": (1024, 1024, 1024, 64),
+    "proteus": (512, 1024, 512, 64),
+}
+
+
+def voltage_optimize(
+    dl, dm, pl_dyn, pl_st, pm_dyn, pm_st, alpha, beta, gl, gm, sw, *, mode="prop"
+):
+    """Optimal voltage pairs for a batch of operating points.
+
+    See :func:`compile.kernels.vgrid.vgrid_optimize`. ``sw`` is clamped to
+    >= 1 (a platform never runs faster than nominal), which also guarantees
+    the nominal grid point stays feasible and the argmin is total.
+    """
+    sw = jnp.maximum(sw, 1.0)
+    return kernels.vgrid_optimize(
+        dl, dm, pl_dyn, pl_st, pm_dyn, pm_st, alpha, beta, gl, gm, sw, mode=mode
+    )
+
+
+def matmul_tiles(m, k, n):
+    """Deployment-aware Pallas tile selection (perf pass, EXPERIMENTS.md
+    §Perf-L1).
+
+    The artifacts in this repo execute on the CPU PJRT client, where each
+    Pallas grid step lowers to one while-loop iteration — iteration count,
+    not VMEM residency, dominates wall time (measured 80x on the stripes
+    variant). Default therefore maximizes tile size (minimizes grid steps).
+    Set WAVESCALE_TPU_TILES=1 to emit the TPU deploy shape instead:
+    (128, 512, 512) keeps x/w/acc tiles ~2.3 MiB — double-buffered well
+    under the ~16 MiB VMEM budget — with MXU-aligned 128-multiples.
+    """
+    if os.environ.get("WAVESCALE_TPU_TILES") == "1":
+        return min(m, 128), min(n, 512), min(k, 512)
+    return min(m, 128), min(n, 1024), min(k, 1024)
+
+
+def dnn_forward(x, *params):
+    """MLP forward pass over Pallas matmuls: relu(x@W+b) ... @W_last+b_last.
+
+    ``params`` is a flat (W0, b0, W1, b1, ...) tuple so the lowered HLO has
+    a stable positional signature for the rust runtime.
+    """
+    if len(params) < 2 or len(params) % 2 != 0:
+        raise ValueError("params must be a non-empty flat (W, b, ...) tuple")
+    n_layers = len(params) // 2
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        bm, bn, bk = matmul_tiles(x.shape[0], w.shape[0], w.shape[1])
+        x = kernels.matmul(x, w, bm=bm, bn=bn, bk=bk) + b[None, :]
+        if i + 1 < n_layers:
+            x = jax.nn.relu(x)
+    return x
+
+
+def dnn_param_shapes(variant: str, batch: int = DNN_BATCH):
+    """(x_shape, [(w, b) shapes...]) for a Table-I benchmark variant."""
+    dims = DNN_VARIANTS[variant]
+    x_shape = (batch, dims[0])
+    layer_shapes = []
+    for din, dout in zip(dims[:-1], dims[1:]):
+        layer_shapes.append(((din, dout), (dout,)))
+    return x_shape, layer_shapes
+
+
+def dnn_init_params(variant: str, seed: int = 0):
+    """Deterministic small random parameters for a variant (He-ish init)."""
+    _, layer_shapes = dnn_param_shapes(variant)
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for (w_shape, b_shape) in layer_shapes:
+        key, kw = jax.random.split(key)
+        scale = (2.0 / w_shape[0]) ** 0.5
+        params.append(jax.random.normal(kw, w_shape, jnp.float32) * scale)
+        params.append(jnp.zeros(b_shape, jnp.float32))
+    return params

@@ -1,0 +1,57 @@
+"""AOT pipeline smoke: artifacts + manifest are well-formed HLO text."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+PYROOT = os.path.dirname(HERE)
+
+
+@pytest.fixture(scope="module")
+def aot_dir(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out), "--skip-dnn"],
+        cwd=PYROOT,
+        check=True,
+    )
+    return out
+
+
+def test_manifest_schema(aot_dir):
+    with open(aot_dir / "manifest.json") as f:
+        manifest = json.load(f)
+    assert manifest["version"] == 1
+    arts = manifest["artifacts"]
+    for mode in ("prop", "core_only", "bram_only"):
+        art = arts[f"voltage_opt_{mode}"]
+        assert art["meta"]["nv"] == 13
+        assert art["meta"]["nm"] == 19
+        assert len(art["args"]) == 11
+        assert [r["dtype"] for r in art["results"]] == ["i32", "i32", "f32"]
+        assert (aot_dir / art["path"]).exists()
+
+
+def test_hlo_is_text(aot_dir):
+    """The artifact must be parseable HLO text (the 0.5.1-compat format)."""
+    with open(aot_dir / "voltage_opt_prop.hlo.txt") as f:
+        head = f.read(4096)
+    assert head.startswith("HloModule"), head[:80]
+    assert "ENTRY" in head or "ENTRY" in open(aot_dir / "voltage_opt_prop.hlo.txt").read()
+
+
+def test_aot_is_deterministic(aot_dir, tmp_path):
+    """Same sources -> byte-identical HLO (cache-friendly `make artifacts`)."""
+    out2 = tmp_path / "again"
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out2), "--skip-dnn"],
+        cwd=PYROOT,
+        check=True,
+    )
+    a = (aot_dir / "voltage_opt_prop.hlo.txt").read_text()
+    b = (out2 / "voltage_opt_prop.hlo.txt").read_text()
+    assert a == b

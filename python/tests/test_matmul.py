@@ -1,0 +1,83 @@
+"""matmul Pallas kernel vs jnp.dot oracle (hypothesis over shapes/tiles)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul import matmul
+from compile.kernels.ref import matmul_ref
+
+
+def _rand(rng, shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    m=st.sampled_from([16, 32, 64, 128]),
+    k=st.sampled_from([32, 64, 128, 256]),
+    n=st.sampled_from([32, 64, 128]),
+)
+def test_matches_oracle_hypothesis(seed, m, k, n):
+    rng = np.random.default_rng(seed)
+    x, y = _rand(rng, (m, k)), _rand(rng, (k, n))
+    # Tiled K accumulates in a different order than the one-shot oracle;
+    # tolerance scales with sqrt(k) worth of f32 rounding.
+    np.testing.assert_allclose(
+        matmul(x, y), matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    bm=st.sampled_from([16, 32, 64]),
+    bn=st.sampled_from([32, 64]),
+    bk=st.sampled_from([32, 64]),
+)
+def test_tile_sizes_hypothesis(seed, bm, bn, bk):
+    """Result is tile-shape independent."""
+    rng = np.random.default_rng(seed)
+    x, y = _rand(rng, (64, 128)), _rand(rng, (128, 64))
+    np.testing.assert_allclose(
+        matmul(x, y, bm=bm, bn=bn, bk=bk),
+        matmul_ref(x, y),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_k_accumulation_order():
+    """Multi-step K reduction (nk > 1) accumulates exactly."""
+    rng = np.random.default_rng(3)
+    x, y = _rand(rng, (32, 512)), _rand(rng, (512, 32))
+    np.testing.assert_allclose(
+        matmul(x, y, bk=64), matmul_ref(x, y), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_bfloat16_upcast():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.standard_normal((32, 64)), jnp.bfloat16)
+    y = jnp.asarray(rng.standard_normal((64, 32)), jnp.bfloat16)
+    out = matmul(x, y)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(
+        out, matmul_ref(x, y).astype(jnp.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_shape_mismatch_rejected():
+    x = jnp.zeros((32, 64), jnp.float32)
+    y = jnp.zeros((32, 64), jnp.float32)
+    with pytest.raises(ValueError):
+        matmul(x, y)
+
+
+def test_untiled_shape_rejected():
+    x = jnp.zeros((30, 64), jnp.float32)
+    y = jnp.zeros((64, 32), jnp.float32)
+    with pytest.raises(ValueError):
+        matmul(x, y, bm=16)

@@ -1,0 +1,97 @@
+"""Layer-2 model graphs: shapes, variants, and oracle agreement."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+@pytest.mark.parametrize("variant", sorted(model.DNN_VARIANTS))
+def test_dnn_forward_shape(variant):
+    x_shape, layer_shapes = model.dnn_param_shapes(variant)
+    params = model.dnn_init_params(variant)
+    assert len(params) == 2 * len(layer_shapes)
+    x = jnp.zeros(x_shape, jnp.float32)
+    out = model.dnn_forward(x, *params)
+    assert out.shape == (x_shape[0], model.DNN_VARIANTS[variant][-1])
+
+
+def test_dnn_forward_matches_oracle():
+    variant = "tabla"
+    x_shape, _ = model.dnn_param_shapes(variant)
+    params = model.dnn_init_params(variant)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(x_shape), jnp.float32)
+
+    got = model.dnn_forward(x, *params)
+    want = x
+    n = len(params) // 2
+    for i in range(n):
+        w, b = params[2 * i], params[2 * i + 1]
+        want = ref.matmul_ref(want, w) + b[None, :]
+        if i + 1 < n:
+            want = jax.nn.relu(want)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dnn_variant_dims_are_tiled():
+    """All variant dims must be multiples of the 64-wide tile floor."""
+    for dims in model.DNN_VARIANTS.values():
+        assert all(d % 64 == 0 for d in dims), dims
+    assert model.DNN_BATCH % 16 == 0
+
+
+def test_voltage_grid_constants():
+    assert model.NV == 13
+    assert model.NM == 19
+    # grid index -> voltage round trip
+    assert model.VCORE_NOM - model.V_STEP * (model.NV - 1) == pytest.approx(0.5)
+    assert model.VBRAM_NOM - model.V_STEP * (model.NM - 1) == pytest.approx(0.5)
+
+
+def test_voltage_optimize_clamps_sw():
+    """sw < 1 (overload) must behave exactly like sw == 1."""
+    tables = ref.example_tables()
+    b = 64
+    ones = jnp.ones((b,), jnp.float32)
+    common = (ones * 0.2, ones * 0.4, ones * 0.7, ones * 0.6)
+    out_lo = model.voltage_optimize(*tables, *common, ones * 0.5)
+    out_1 = model.voltage_optimize(*tables, *common, ones)
+    for a, b_ in zip(out_lo, out_1):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_dnn_forward_rejects_bad_params():
+    x = jnp.zeros((16, 128), jnp.float32)
+    with pytest.raises(ValueError):
+        model.dnn_forward(x)
+    with pytest.raises(ValueError):
+        model.dnn_forward(x, jnp.zeros((128, 64)))
+
+
+def test_matmul_tiles_cpu_vs_tpu(monkeypatch):
+    """Tile selection is deployment-aware (EXPERIMENTS.md §Perf-L1)."""
+    monkeypatch.delenv("WAVESCALE_TPU_TILES", raising=False)
+    assert model.matmul_tiles(16, 1024, 1024) == (16, 1024, 1024)
+    monkeypatch.setenv("WAVESCALE_TPU_TILES", "1")
+    bm, bn, bk = model.matmul_tiles(16, 1024, 1024)
+    assert (bm, bn, bk) == (16, 512, 512)
+    # TPU tiles bound VMEM: x + w + acc under ~2.5 MiB for f32.
+    assert (bm * bk + bk * bn + bm * bn) * 4 <= 2.5 * 2**20
+
+
+def test_tpu_tiles_do_not_change_numerics(monkeypatch):
+    import numpy as np
+
+    x_shape, _ = model.dnn_param_shapes("tabla")
+    params = model.dnn_init_params("tabla")
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.standard_normal(x_shape), jnp.float32)
+    monkeypatch.delenv("WAVESCALE_TPU_TILES", raising=False)
+    a = model.dnn_forward(x, *params)
+    monkeypatch.setenv("WAVESCALE_TPU_TILES", "1")
+    b = model.dnn_forward(x, *params)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)

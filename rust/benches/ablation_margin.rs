@@ -1,0 +1,41 @@
+//! Ablation: throughput margin t (paper §IV.A uses 5%) — power cost of
+//! the safety margin vs the QoS violations it prevents.
+
+mod common;
+
+use wavescale::platform::{build_platform, PlatformConfig, Policy};
+use wavescale::report::{row, table};
+use wavescale::vscale::Mode;
+use wavescale::workload::{bursty, BurstyConfig};
+
+fn main() {
+    println!("=== Ablation: throughput margin t ===");
+    let trace = bursty(&BurstyConfig { steps: 1000, ..Default::default() });
+    let mut rows = vec![row(["margin_t", "power_gain", "violations%"])];
+    let mut v_at_0 = 0.0;
+    let mut v_at_10 = 0.0;
+    for t in [0.0, 0.025, 0.05, 0.075, 0.10, 0.15, 0.20] {
+        let cfg = PlatformConfig { margin_t: t, ..Default::default() };
+        let mut p = build_platform("tabla", cfg, Policy::Dvfs(Mode::Proposed)).unwrap();
+        let r = p.run(&trace.loads);
+        if t == 0.0 {
+            v_at_0 = r.violation_rate;
+        }
+        if t == 0.10 {
+            v_at_10 = r.violation_rate;
+        }
+        rows.push(vec![
+            format!("{:.1}%", t * 100.0),
+            format!("{:.3}x", r.power_gain),
+            format!("{:.2}", r.violation_rate * 100.0),
+        ]);
+    }
+    print!("{}", table(&rows));
+    common::emit_csv("ablation_margin.csv", &rows);
+    println!(
+        "\nmargin buys QoS: violations {:.1}% (t=0) -> {:.1}% (t=10%)  {}",
+        v_at_0 * 100.0,
+        v_at_10 * 100.0,
+        if v_at_10 <= v_at_0 { "OK" } else { "MISMATCH" }
+    );
+}

@@ -1,0 +1,67 @@
+#![allow(dead_code)]
+
+//! Shared helpers for the figure/table regeneration benches.
+
+use wavescale::chars::{CharLibrary, ResourceClass};
+use wavescale::power::{OperatingParams, RailTables};
+use wavescale::vscale::Optimizer;
+
+/// Analytic rail tables for the §III motivational model: core-rail delay
+/// blends logic/routing/DSP with the paper's representative weights; the
+/// power tables use the given dynamic fractions.
+pub fn analytic_optimizer(alpha: f64, beta: f64, gamma_l: f64, gamma_m: f64) -> Optimizer {
+    let chars = CharLibrary::stratix_iv_22nm();
+    let grid = chars.grid();
+    let (wl, wr, wd) = (0.40, 0.55, 0.05);
+    let dl = grid
+        .vcore
+        .iter()
+        .map(|&v| {
+            wl * chars.delay_scale(ResourceClass::Logic, v)
+                + wr * chars.delay_scale(ResourceClass::Routing, v)
+                + wd * chars.delay_scale(ResourceClass::Dsp, v)
+        })
+        .collect();
+    let dm = grid
+        .vbram
+        .iter()
+        .map(|&v| chars.delay_scale(ResourceClass::Bram, v))
+        .collect();
+    let pl_dyn = grid.vcore.iter().map(|&v| chars.dyn_scale(ResourceClass::Logic, v)).collect();
+    let pl_st = grid
+        .vcore
+        .iter()
+        .map(|&v| {
+            wl * chars.static_scale(ResourceClass::Logic, v)
+                + wr * chars.static_scale(ResourceClass::Routing, v)
+                + wd * chars.static_scale(ResourceClass::Dsp, v)
+        })
+        .collect();
+    let pm_dyn = grid.vbram.iter().map(|&v| chars.dyn_scale(ResourceClass::Bram, v)).collect();
+    let pm_st = grid.vbram.iter().map(|&v| chars.static_scale(ResourceClass::Bram, v)).collect();
+    Optimizer::new(
+        grid,
+        RailTables {
+            dl,
+            dm,
+            pl_dyn,
+            pl_st,
+            pm_dyn,
+            pm_st,
+            op: OperatingParams { alpha, beta, gamma_l, gamma_m },
+        },
+    )
+}
+
+/// True when AOT artifacts exist (PJRT-dependent benches skip otherwise).
+pub fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+/// Emit a CSV into results/ and log the path.
+pub fn emit_csv(name: &str, rows: &[Vec<String>]) {
+    match wavescale::report::write_results(name, &wavescale::report::csv(rows)) {
+        Ok(p) => println!("[csv] {}", p.display()),
+        Err(e) => eprintln!("[csv] failed to write {name}: {e}"),
+    }
+}

@@ -1,0 +1,66 @@
+//! Figure 11: Vcore/Vbram traces of all techniques for the Fig. 10 run.
+
+mod common;
+
+use wavescale::platform::{build_platform, PlatformConfig, Policy, SimReport};
+use wavescale::report::row;
+use wavescale::util::stats;
+use wavescale::vscale::Mode;
+use wavescale::workload::{bursty, BurstyConfig};
+
+fn main() {
+    println!("=== Figure 11: voltage traces (Tabla, 40% avg bursty workload) ===");
+    let trace = bursty(&BurstyConfig { steps: 1000, ..Default::default() });
+    let run = |policy: Policy| -> SimReport {
+        let mut p = build_platform("tabla", PlatformConfig::default(), policy).unwrap();
+        p.run(&trace.loads)
+    };
+    let prop = run(Policy::Dvfs(Mode::Proposed));
+    let core = run(Policy::Dvfs(Mode::CoreOnly));
+    let bram = run(Policy::Dvfs(Mode::BramOnly));
+
+    let mut csv = vec![row([
+        "step", "load", "vcore_prop", "vbram_prop", "vcore_coreonly", "vbram_bramonly",
+    ])];
+    println!("\nstep  load   Vc(prop) Vb(prop) Vc(core) Vb(bram)  (every 50th)");
+    for i in 0..trace.len() {
+        csv.push(vec![
+            i.to_string(),
+            format!("{:.4}", trace.loads[i]),
+            format!("{:.3}", prop.records[i].vcore),
+            format!("{:.3}", prop.records[i].vbram),
+            format!("{:.3}", core.records[i].vcore),
+            format!("{:.3}", bram.records[i].vbram),
+        ]);
+        if i % 50 == 0 {
+            println!(
+                "{i:>4}  {:.2}   {:.3}    {:.3}    {:.3}    {:.3}",
+                trace.loads[i],
+                prop.records[i].vcore,
+                prop.records[i].vbram,
+                core.records[i].vcore,
+                bram.records[i].vbram
+            );
+        }
+    }
+    common::emit_csv("fig11_voltage_trace.csv", &csv);
+
+    // Paper's observation: bram-only tracks the same trend as prop's
+    // Vbram, but prop keeps Vbram higher (it also scales Vcore).
+    let skip = 20;
+    let vb_prop: Vec<f64> = prop.records[skip..].iter().map(|r| r.vbram).collect();
+    let vb_bram: Vec<f64> = bram.records[skip..].iter().map(|r| r.vbram).collect();
+    let mean_prop = stats::mean(&vb_prop);
+    let mean_bram = stats::mean(&vb_bram);
+    println!(
+        "\nmean Vbram: prop {mean_prop:.3} V vs bram-only {mean_bram:.3} V — prop stays higher: {}",
+        if mean_prop >= mean_bram - 1e-9 { "OK" } else { "MISMATCH" }
+    );
+    let frac_ge = vb_prop
+        .iter()
+        .zip(&vb_bram)
+        .filter(|(a, b)| **a >= **b - 1e-9)
+        .count() as f64
+        / vb_prop.len() as f64;
+    println!("Vbram(prop) >= Vbram(bram-only) on {:.0}% of steps", frac_ge * 100.0);
+}

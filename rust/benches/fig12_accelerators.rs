@@ -1,0 +1,65 @@
+//! Figure 12: power efficiency of the proposed technique across all five
+//! accelerator frameworks, plus the Tabla-vs-Proteus Vbram comparison.
+
+mod common;
+
+use wavescale::arch::TABLE1;
+use wavescale::platform::{build_platform, PlatformConfig, Policy, SimReport};
+use wavescale::report::row;
+use wavescale::util::stats;
+use wavescale::vscale::Mode;
+use wavescale::workload::{bursty, BurstyConfig};
+
+fn main() {
+    println!("=== Figure 12: proposed technique across accelerators ===");
+    let trace = bursty(&BurstyConfig { steps: 1000, ..Default::default() });
+    let mut reports: Vec<(String, SimReport)> = Vec::new();
+    for spec in TABLE1 {
+        let mut p =
+            build_platform(spec.name, PlatformConfig::default(), Policy::Dvfs(Mode::Proposed))
+                .unwrap();
+        reports.push((spec.name.to_string(), p.run(&trace.loads)));
+    }
+
+    let mut csv = vec![{
+        let mut h = vec!["step".to_string(), "load".to_string()];
+        h.extend(reports.iter().map(|(n, _)| format!("gain_{n}")));
+        h.push("vbram_tabla".into());
+        h.push("vbram_proteus".into());
+        h
+    }];
+    for i in 0..trace.len() {
+        let mut cells = vec![i.to_string(), format!("{:.4}", trace.loads[i])];
+        for (_, r) in &reports {
+            cells.push(format!("{:.3}", r.nominal_power_w / r.records[i].power_w));
+        }
+        cells.push(format!("{:.3}", reports[0].1.records[i].vbram)); // tabla
+        cells.push(format!("{:.3}", reports[4].1.records[i].vbram)); // proteus
+        csv.push(cells);
+    }
+    common::emit_csv("fig12_accelerators.csv", &csv);
+
+    println!("\naverage gains under the proposed technique:");
+    for (name, r) in &reports {
+        println!("  {name:<10} {:.2}x", r.power_gain);
+    }
+
+    // Paper: the gain trends overlap across accelerators (workload
+    // dominates), yet Tabla and Proteus reach different minimum Vbram.
+    let gains: Vec<f64> = reports.iter().map(|(_, r)| r.power_gain).collect();
+    let spread = (stats::max(&gains) - stats::min(&gains)) / stats::mean(&gains);
+    println!("\ngain spread across accelerators: {:.0}% (paper: trends nearly overlap)", spread * 100.0);
+    let skip = 20;
+    let vb_min = |r: &SimReport| {
+        r.records[skip..]
+            .iter()
+            .map(|x| x.vbram)
+            .fold(f64::INFINITY, f64::min)
+    };
+    let t = vb_min(&reports[0].1);
+    let p = vb_min(&reports[4].1);
+    println!(
+        "min Vbram: tabla {t:.3} V vs proteus {p:.3} V — noticeably different points: {}",
+        if (t - p).abs() >= 0.024 { "OK" } else { "MISMATCH" }
+    );
+}

@@ -1,0 +1,57 @@
+//! Figure 1: delay of FPGA resources versus voltage.
+//!
+//! Regenerates the per-class delay-vs-voltage curves from the
+//! characterization library and checks the paper's §III shape claims.
+
+mod common;
+
+use wavescale::chars::{CharLibrary, ResourceClass};
+use wavescale::report::{row, table};
+
+fn main() {
+    println!("=== Figure 1: delay vs voltage ===");
+    let lib = CharLibrary::stratix_iv_22nm();
+    let grid = lib.grid();
+
+    let mut rows = vec![row(["vcore", "logic", "routing", "dsp", "vbram", "memory"])];
+    let mut csv = rows.clone();
+    let n = grid.vbram.len();
+    for i in 0..n {
+        let vb = grid.vbram[i];
+        let vc = grid.vcore.get(i).copied();
+        let f = |x: f64| format!("{x:.3}");
+        let cells = vec![
+            vc.map(|v| f(v)).unwrap_or_else(|| "-".into()),
+            vc.map(|v| f(lib.delay_scale(ResourceClass::Logic, v))).unwrap_or_else(|| "-".into()),
+            vc.map(|v| f(lib.delay_scale(ResourceClass::Routing, v))).unwrap_or_else(|| "-".into()),
+            vc.map(|v| f(lib.delay_scale(ResourceClass::Dsp, v))).unwrap_or_else(|| "-".into()),
+            f(vb),
+            f(lib.delay_scale(ResourceClass::Bram, vb)),
+        ];
+        rows.push(cells.clone());
+        csv.push(cells);
+    }
+    print!("{}", table(&rows));
+    common::emit_csv("fig1_delay.csv", &csv);
+
+    // Paper §III shape claims.
+    let mem_080 = lib.delay_scale(ResourceClass::Bram, 0.80);
+    let mem_070 = lib.delay_scale(ResourceClass::Bram, 0.70);
+    let logic_060 = lib.delay_scale(ResourceClass::Logic, 0.60);
+    let rout_060 = lib.delay_scale(ResourceClass::Routing, 0.60);
+    println!("\nshape checks (paper §III):");
+    println!("  memory 0.95->0.80 V small delay effect: x{mem_080:.2} (want < 1.25)  {}",
+        ok(mem_080 < 1.25));
+    println!("  memory spike below ~0.75 V: x{mem_070:.2} @0.70 V (want > 1.8)      {}",
+        ok(mem_070 > 1.8));
+    println!("  routing tolerant vs logic @0.60 V: {rout_060:.2} vs {logic_060:.2}    {}",
+        ok(logic_060 > 1.25 * rout_060));
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "OK"
+    } else {
+        "MISMATCH"
+    }
+}

@@ -1,0 +1,33 @@
+//! Figure 2: dynamic power of FPGA resources versus voltage (CV²f).
+
+mod common;
+
+use wavescale::chars::{CharLibrary, ResourceClass};
+use wavescale::report::{row, table};
+
+fn main() {
+    println!("=== Figure 2: dynamic power vs voltage ===");
+    let lib = CharLibrary::stratix_iv_22nm();
+    let grid = lib.grid();
+    let mut rows = vec![row(["vcore", "logic", "routing", "dsp", "vbram", "memory"])];
+    for i in 0..grid.vbram.len() {
+        let vb = grid.vbram[i];
+        let vc = grid.vcore.get(i).copied();
+        let f = |x: f64| format!("{x:.3}");
+        rows.push(vec![
+            vc.map(|v| f(v)).unwrap_or_else(|| "-".into()),
+            vc.map(|v| f(lib.dyn_scale(ResourceClass::Logic, v))).unwrap_or_else(|| "-".into()),
+            vc.map(|v| f(lib.dyn_scale(ResourceClass::Routing, v))).unwrap_or_else(|| "-".into()),
+            vc.map(|v| f(lib.dyn_scale(ResourceClass::Dsp, v))).unwrap_or_else(|| "-".into()),
+            f(vb),
+            f(lib.dyn_scale(ResourceClass::Bram, vb)),
+        ]);
+    }
+    print!("{}", table(&rows));
+    common::emit_csv("fig2_dynamic_power.csv", &rows);
+
+    // V² sanity: half voltage -> quarter dynamic power.
+    let q = lib.dyn_scale(ResourceClass::Logic, 0.40);
+    println!("\nCV² check: dyn(0.40 V)/dyn(0.80 V) = {q:.3} (want 0.250)  {}",
+        if (q - 0.25).abs() < 1e-9 { "OK" } else { "MISMATCH" });
+}

@@ -1,0 +1,47 @@
+//! Figure 6: comparing DVFS techniques across BRAM power shares
+//! (β sweep at 50% workload, α = 0.2).
+
+mod common;
+
+use wavescale::report::{row, table};
+use wavescale::vscale::Mode;
+
+fn main() {
+    println!("=== Figure 6: technique power vs beta (50% workload, alpha=0.2) ===");
+    let mut rows = vec![row(["beta", "prop", "core-only", "bram-only"])];
+    let mut core_gains = Vec::new();
+    let mut bram_gains = Vec::new();
+    for step in 0..=6 {
+        let beta = 0.1 + step as f64 * 0.1;
+        let opt = common::analytic_optimizer(0.2, beta, 0.7, 0.5);
+        let sw = 2.0;
+        let prop = opt.optimize(sw, Mode::Proposed).power_norm;
+        let core = opt.optimize(sw, Mode::CoreOnly).power_norm;
+        let bram = opt.optimize(sw, Mode::BramOnly).power_norm;
+        core_gains.push(1.0 / core);
+        bram_gains.push(1.0 / bram);
+        rows.push(vec![
+            format!("{beta:.1}"),
+            format!("{prop:.3}"),
+            format!("{core:.3}"),
+            format!("{bram:.3}"),
+        ]);
+    }
+    print!("{}", table(&rows));
+    common::emit_csv("fig6_beta.csv", &rows);
+
+    // Paper: core-only effectiveness degrades / bram-only improves as the
+    // BRAM power share grows.
+    let core_trend = core_gains.first().unwrap() > core_gains.last().unwrap();
+    let bram_trend = bram_gains.first().unwrap() < bram_gains.last().unwrap();
+    println!("\ncore-only degrades with beta: {}", ok(core_trend));
+    println!("bram-only improves with beta: {}", ok(bram_trend));
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "OK"
+    } else {
+        "MISMATCH"
+    }
+}

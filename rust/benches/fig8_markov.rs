@@ -1,0 +1,64 @@
+//! Figure 8: the Markov-chain workload predictor — transition matrix of a
+//! 4-state example plus online prediction accuracy across workload shapes.
+
+mod common;
+
+use wavescale::markov::{MarkovPredictor, Predictor};
+use wavescale::report::{row, table};
+use wavescale::workload;
+
+fn main() {
+    println!("=== Figure 8: Markov workload predictor ===");
+
+    // 4-state example as drawn in the paper.
+    let mut p = MarkovPredictor::new(4, 0);
+    let cycle = [0.10, 0.35, 0.60, 0.85, 0.60, 0.35];
+    for i in 0..600 {
+        p.observe(cycle[i % cycle.len()]);
+    }
+    println!("\nlearned transition matrix (4 states, cyclic workload):");
+    let mut rows = vec![row(["from\\to", "S0", "S1", "S2", "S3"])];
+    for (i, r) in p.transition_matrix().iter().enumerate() {
+        let mut cells = vec![format!("S{i}")];
+        cells.extend(r.iter().map(|x| format!("{x:.2}")));
+        rows.push(cells);
+    }
+    print!("{}", table(&rows));
+
+    // Accuracy across workload shapes (M = 10 bins, 5% margin).
+    println!("\nprediction quality (10 bins, t = 5%):");
+    let mut rows = vec![row(["workload", "exact-bin%", "coverage%", "mispred/step"])];
+    let steps = 6000;
+    for trace in [
+        workload::bursty(&workload::BurstyConfig { steps, ..Default::default() }),
+        workload::periodic(steps, 96, 0.15, 0.85, 0.03, 5),
+        workload::poisson(steps, 0.4, 1000.0, 6),
+        workload::square(steps, 60, 0.2, 0.8),
+    ] {
+        let mut p = MarkovPredictor::new(10, 20);
+        let (mut exact, mut covered, mut mis, mut total) = (0, 0, 0, 0);
+        for (i, &load) in trace.loads.iter().enumerate() {
+            if i > 20 {
+                total += 1;
+                let pred = p.predict();
+                if p.bin_of(pred) == p.bin_of(load) {
+                    exact += 1;
+                } else {
+                    mis += 1;
+                }
+                if pred * 1.05 >= load {
+                    covered += 1;
+                }
+            }
+            p.observe(load);
+        }
+        rows.push(vec![
+            trace.label.clone(),
+            format!("{:.1}", 100.0 * exact as f64 / total as f64),
+            format!("{:.1}", 100.0 * covered as f64 / total as f64),
+            format!("{:.3}", mis as f64 / total as f64),
+        ]);
+    }
+    print!("{}", table(&rows));
+    common::emit_csv("fig8_markov.csv", &rows);
+}

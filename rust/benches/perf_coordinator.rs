@@ -1,0 +1,74 @@
+//! Perf: serving coordinator — submit/dispatch overhead and end-to-end
+//! throughput with real PJRT inference. Requires `make artifacts`.
+
+mod common;
+
+use std::time::{Duration, Instant};
+
+use wavescale::bench_support::section;
+use wavescale::coordinator::{Coordinator, ServingConfig};
+use wavescale::platform::{build_platform, PlatformConfig, Policy};
+use wavescale::util::prng::Rng;
+use wavescale::vscale::Mode;
+
+fn main() {
+    section("perf: serving coordinator");
+    if !common::artifacts_available() {
+        println!("(artifacts/ missing — run `make artifacts` first)");
+        return;
+    }
+    let platform = build_platform(
+        "tabla",
+        PlatformConfig::default(),
+        Policy::Dvfs(Mode::Proposed),
+    )
+    .unwrap();
+    let cfg = ServingConfig {
+        n_instances: 2,
+        epoch: Duration::from_millis(100),
+        // Small service time so the bench measures the coordinator, not
+        // the simulated FPGA occupancy.
+        cycles_per_batch: 1.0e4,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(
+        cfg,
+        "artifacts".into(),
+        platform.design.clone(),
+        platform.optimizer_ref().clone(),
+    )
+    .expect("coordinator");
+
+    let mut rng = Rng::new(3);
+    let payloads: Vec<Vec<f32>> = (0..4096).map(|_| rng.normal_vec_f32(coord.in_dim)).collect();
+
+    // Submit-side overhead.
+    let t0 = Instant::now();
+    let mut sent = 0u64;
+    for p in &payloads {
+        if coord.submit(p.clone()).is_ok() {
+            sent += 1;
+        }
+    }
+    let submit_us = t0.elapsed().as_secs_f64() * 1e6 / payloads.len() as f64;
+    println!("submit(): {submit_us:.2} us/request ({sent} accepted)");
+
+    // Drain and measure end-to-end throughput.
+    let t0 = Instant::now();
+    while coord.stats().completed < sent {
+        if t0.elapsed() > Duration::from_secs(30) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (stats, records) = coord.shutdown().expect("shutdown");
+    println!(
+        "drained {} requests in {wall:.2} s -> {:.0} req/s | p50 {:.1} ms p99 {:.1} ms",
+        stats.completed,
+        stats.completed as f64 / wall,
+        stats.p50_latency_s * 1e3,
+        stats.p99_latency_s * 1e3
+    );
+    println!("CC epochs recorded: {}", records.len());
+}

@@ -1,0 +1,60 @@
+//! Perf: the voltage optimizer hot path — single optimize() call, LUT
+//! build, and the batched PJRT Voltage Selector (when artifacts exist).
+
+mod common;
+
+use wavescale::bench_support::{bench_fn, black_box, section};
+use wavescale::vscale::{Mode, VoltageLut};
+
+fn main() {
+    section("perf: voltage optimizer");
+    let opt = common::analytic_optimizer(0.25, 0.4, 0.7, 0.5);
+
+    let r = bench_fn("optimize(prop) single point", || {
+        black_box(opt.optimize(black_box(2.5), Mode::Proposed))
+    });
+    println!("{}", r.report());
+
+    let r = bench_fn("optimize all 4 modes", || {
+        for m in Mode::ALL {
+            black_box(opt.optimize(black_box(2.5), m));
+        }
+    });
+    println!("{}", r.report());
+
+    let r = bench_fn("VoltageLut::build (10 bins)", || {
+        black_box(VoltageLut::build(&opt, 10, 0.05, Mode::Proposed))
+    });
+    println!("{}", r.report());
+
+    let r = bench_fn("sweep 100 workload levels", || {
+        let mut acc = 0.0;
+        for i in 1..=100 {
+            acc += opt.optimize(1.0 / (i as f64 / 100.0), Mode::Proposed).power_norm;
+        }
+        black_box(acc)
+    });
+    println!("{}", r.report());
+
+    if common::artifacts_available() {
+        use wavescale::runtime::{Engine, OpQuery, VoltageSelectorClient};
+        let engine = Engine::open("artifacts").expect("engine");
+        let vs = VoltageSelectorClient::new(&engine);
+        // Warm the compile cache.
+        let q = OpQuery { alpha: 0.25, beta: 0.4, gamma_l: 0.7, gamma_m: 0.5, sw: 2.5 };
+        vs.select(Mode::Proposed, &opt.tables, &[q]).expect("select");
+        let queries: Vec<OpQuery> = (0..64)
+            .map(|i| OpQuery { sw: 1.0 + i as f32 * 0.1, ..q })
+            .collect();
+        let r = bench_fn("PJRT voltage_opt_prop batch=64", || {
+            black_box(vs.select(Mode::Proposed, &opt.tables, &queries).unwrap())
+        });
+        println!("{}", r.report());
+        println!(
+            "  -> {:.1} us per operating point (batched)",
+            r.median.as_secs_f64() * 1e6 / 64.0
+        );
+    } else {
+        println!("(artifacts/ missing — run `make artifacts` for the PJRT benches)");
+    }
+}

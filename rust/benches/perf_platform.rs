@@ -1,0 +1,54 @@
+//! Perf: platform simulator throughput (steps/second) — the Fig. 10-12
+//! inner loop — plus the workload generator.
+
+mod common;
+
+use wavescale::bench_support::{bench_fn, black_box, section};
+use wavescale::platform::{build_platform, PlatformConfig, Policy};
+use wavescale::vscale::Mode;
+use wavescale::workload::{bursty, BurstyConfig};
+
+fn main() {
+    section("perf: platform simulator");
+    let trace = bursty(&BurstyConfig { steps: 10_000, ..Default::default() });
+
+    let r = bench_fn("bursty trace gen (10k steps)", || {
+        black_box(bursty(&BurstyConfig { steps: 10_000, ..Default::default() }))
+    });
+    println!("{}", r.report());
+
+    for policy in [
+        Policy::Dvfs(Mode::Proposed),
+        Policy::PowerGating,
+        Policy::NominalStatic,
+    ] {
+        let r = bench_fn(&format!("run 10k steps ({})", policy.name()), || {
+            let mut p =
+                build_platform("tabla", PlatformConfig::default(), policy).unwrap();
+            black_box(p.run(&trace.loads).power_gain)
+        });
+        let steps_per_sec = 10_000.0 / r.median.as_secs_f64();
+        println!("{}", r.report());
+        println!("  -> {:.2} M steps/s (incl. platform build)", steps_per_sec / 1e6);
+    }
+
+    // Steady-state stepping without rebuild.
+    let mut p = build_platform(
+        "tabla",
+        PlatformConfig::default(),
+        Policy::Dvfs(Mode::Proposed),
+    )
+    .unwrap();
+    let r = bench_fn("step() x1000 steady-state", || {
+        let mut acc = 0.0;
+        for i in 0..1000 {
+            acc += p.step(trace.loads[i % trace.loads.len()], None).power_w;
+        }
+        black_box(acc)
+    });
+    println!("{}", r.report());
+    println!(
+        "  -> {:.2} M steps/s steady-state",
+        1000.0 / r.median.as_secs_f64() / 1e6
+    );
+}

@@ -1,0 +1,35 @@
+//! Perf: PJRT runtime — artifact compile time and inference latency per
+//! served model variant. Requires `make artifacts`.
+
+mod common;
+
+use wavescale::bench_support::{bench_fn, black_box, section};
+use wavescale::runtime::{DnnClient, Engine};
+use wavescale::util::prng::Rng;
+
+fn main() {
+    section("perf: PJRT runtime");
+    if !common::artifacts_available() {
+        println!("(artifacts/ missing — run `make artifacts` first)");
+        return;
+    }
+    let engine = Engine::open("artifacts").expect("engine");
+    println!("platform: {}", engine.platform_name());
+    let mut rng = Rng::new(1);
+
+    for variant in engine.manifest.dnn_variants() {
+        let t0 = std::time::Instant::now();
+        let dnn = DnnClient::new(&engine, &variant).expect("client");
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let x = rng.normal_vec_f32(dnn.batch * dnn.in_dim);
+        let r = bench_fn(&format!("dnn_{variant} infer batch={}", dnn.batch), || {
+            black_box(dnn.infer(&x).unwrap())
+        });
+        println!("{}", r.report());
+        println!(
+            "  compile+load {compile_ms:.0} ms | {:.1} us/request | {:.0} req/s/instance",
+            r.median.as_secs_f64() * 1e6 / dnn.batch as f64,
+            dnn.batch as f64 / r.median.as_secs_f64()
+        );
+    }
+}

@@ -1,0 +1,41 @@
+//! Perf: netlist generation + static timing analysis at full Table I
+//! scale (stripes: ~123k LUTs).
+
+mod common;
+
+use wavescale::arch::BenchmarkSpec;
+use wavescale::bench_support::{bench_fn, black_box, section};
+use wavescale::chars::CharLibrary;
+use wavescale::netlist::gen::{generate, GenConfig};
+use wavescale::sta::{analyze, cp_delay_at, DelayParams};
+
+fn main() {
+    section("perf: netlist generation + STA");
+    let d = DelayParams::default();
+    let chars = CharLibrary::stratix_iv_22nm();
+
+    for (name, scale) in [("tabla", 1.0), ("diannao", 1.0), ("stripes", 1.0)] {
+        let spec = BenchmarkSpec::by_name(name).unwrap();
+        let net = generate(spec, &GenConfig { scale, seed: 2019, luts_per_lab: 10 });
+        let c = net.counts();
+        println!(
+            "\n{name} @scale {scale}: {} nodes, {} edges",
+            net.node_count(),
+            net.edges.len()
+        );
+        let r = bench_fn(&format!("generate {name}"), || {
+            black_box(generate(spec, &GenConfig { scale, seed: 2019, luts_per_lab: 10 }))
+        });
+        println!("{}", r.report());
+        let r = bench_fn(&format!("analyze {name} (top-8 paths)"), || {
+            black_box(analyze(&net, &d, 8).unwrap())
+        });
+        println!("{}", r.report());
+        let per_node = r.median.as_secs_f64() * 1e9 / net.node_count() as f64;
+        println!("  -> {per_node:.1} ns/node ({} LUTs)", c.luts);
+        let r = bench_fn(&format!("cp_delay_at {name} (full re-STA)"), || {
+            black_box(cp_delay_at(&net, &d, &chars, 0.65, 0.8).unwrap())
+        });
+        println!("{}", r.report());
+    }
+}

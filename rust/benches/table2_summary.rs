@@ -1,0 +1,89 @@
+//! Table II: average power-gain comparison of all techniques across the
+//! five benchmarks, with the paper's numbers and efficiency deltas.
+
+mod common;
+
+use wavescale::arch::TABLE1;
+use wavescale::platform::{build_platform, PlatformConfig, Policy};
+use wavescale::report::{row, table};
+use wavescale::vscale::Mode;
+use wavescale::workload::{bursty, BurstyConfig};
+
+const PAPER: &[(&str, f64, f64, f64)] = &[
+    ("tabla", 4.1, 2.9, 2.7),
+    ("dnnweaver", 4.4, 2.9, 2.9),
+    ("diannao", 3.9, 3.1, 1.9),
+    ("stripes", 3.9, 3.1, 1.8),
+    ("proteus", 3.8, 3.1, 2.0),
+];
+
+fn main() {
+    println!("=== Table II: power efficiency of the approaches ===");
+    let trace = bursty(&BurstyConfig { steps: 1500, ..Default::default() });
+    println!("workload: {} steps, mean {:.3}\n", trace.len(), trace.mean());
+
+    let mut rows = vec![row([
+        "technique", "tabla", "dnnweaver", "diannao", "stripes", "proteus", "average",
+    ])];
+    let mut gains = std::collections::BTreeMap::<&str, Vec<f64>>::new();
+    for (label, policy) in [
+        ("core-only", Policy::Dvfs(Mode::CoreOnly)),
+        ("bram-only", Policy::Dvfs(Mode::BramOnly)),
+        ("proposed", Policy::Dvfs(Mode::Proposed)),
+    ] {
+        let mut cells = vec![label.to_string()];
+        let mut sum = 0.0;
+        for spec in TABLE1 {
+            let mut p = build_platform(spec.name, PlatformConfig::default(), policy).unwrap();
+            let g = p.run(&trace.loads).power_gain;
+            gains.entry(label).or_default().push(g);
+            cells.push(format!("{g:.2}x"));
+            sum += g;
+        }
+        cells.push(format!("{:.2}x", sum / TABLE1.len() as f64));
+        rows.push(cells);
+    }
+    // Efficiency row: prop vs best single-rail per benchmark.
+    let mut cells = vec!["efficiency".to_string()];
+    let mut lo = f64::INFINITY;
+    let mut hi: f64 = 0.0;
+    for i in 0..TABLE1.len() {
+        let prop = gains["proposed"][i];
+        let core = gains["core-only"][i];
+        let bram = gains["bram-only"][i];
+        let best = core.max(bram);
+        let worst = core.min(bram);
+        let a = (prop / best - 1.0) * 100.0;
+        let b = (prop / worst - 1.0) * 100.0;
+        lo = lo.min(a);
+        hi = hi.max(b);
+        cells.push(format!("{a:.0}-{b:.0}%"));
+    }
+    cells.push(format!("{lo:.0}%-{hi:.0}%"));
+    rows.push(cells);
+    print!("{}", table(&rows));
+    common::emit_csv("table2_summary.csv", &rows);
+
+    println!("\npaper Table II:");
+    let mut prows = vec![row(["technique", "tabla", "dnnweaver", "diannao", "stripes", "proteus", "average"])];
+    for (label, idx) in [("core-only", 2usize), ("bram-only", 3), ("proposed", 1)] {
+        let mut cells = vec![label.to_string()];
+        let mut sum = 0.0;
+        for (_, p, c, b) in PAPER {
+            let v = [0.0, *p, *c, *b][idx];
+            cells.push(format!("{v:.1}x"));
+            sum += v;
+        }
+        cells.push(format!("{:.2}x", sum / PAPER.len() as f64));
+        prows.push(cells);
+    }
+    print!("{}", table(&prows));
+
+    let avg = |k: &str| gains[k].iter().sum::<f64>() / gains[k].len() as f64;
+    println!(
+        "\nheadline: proposed {:.2}x avg (paper 4.0x); vs core-only +{:.1}% (paper +33.6%); vs bram-only +{:.1}% (paper up to +83%)",
+        avg("proposed"),
+        (avg("proposed") / avg("core-only") - 1.0) * 100.0,
+        (avg("proposed") / avg("bram-only") - 1.0) * 100.0
+    );
+}

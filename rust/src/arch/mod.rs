@@ -1,0 +1,207 @@
+//! FPGA architecture model — Stratix-IV-like device family (DESIGN.md S2).
+//!
+//! The paper maps each benchmark onto "the smallest possible FPGA device"
+//! with VTR, after raising I/O pad capacity from 2 to 4 because the
+//! accelerators are heavily I/O-bound. We model the same flow: a family of
+//! devices with LAB/M9K/M144K/DSP/IO capacities, a utilization type, and a
+//! smallest-fitting-device search. The oversized device the I/O demand
+//! forces is exactly what makes idle-resource static power significant
+//! (paper §VI.B).
+
+pub mod benchmarks;
+
+pub use benchmarks::{BenchmarkSpec, TABLE1};
+
+/// One device of the family. Counts follow Stratix IV GX conventions:
+/// a LAB holds [`DeviceFamily::luts_per_lab`] 6-input LUTs.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    pub labs: usize,
+    pub m9ks: usize,
+    pub m144ks: usize,
+    pub dsps: usize,
+    pub io_pads: usize,
+    /// Relative routing capacity (switch+connection mux count per LAB).
+    pub route_muxes_per_lab: usize,
+}
+
+impl Device {
+    pub fn luts(&self, family: &DeviceFamily) -> usize {
+        self.labs * family.luts_per_lab
+    }
+
+    pub fn route_muxes(&self) -> usize {
+        self.labs * self.route_muxes_per_lab
+    }
+}
+
+/// Post-P&R resource demand of a design (Table I row).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Utilization {
+    pub labs: usize,
+    pub dsps: usize,
+    pub m9ks: usize,
+    pub m144ks: usize,
+    /// I/O *pins* (the paper reports pins; pads hold `io_per_pad` pins).
+    pub io_pins: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct DeviceFamily {
+    pub name: &'static str,
+    pub luts_per_lab: usize,
+    /// Pins per I/O pad (paper's VTR amendment: 2 -> 4).
+    pub io_per_pad: usize,
+    /// Devices sorted small -> large.
+    pub devices: Vec<Device>,
+}
+
+impl DeviceFamily {
+    /// Stratix-IV-GX-like family. The two largest members are synthetic
+    /// interposer-expanded devices so the I/O-hungriest benchmark
+    /// (Stripes, 8797 pins) still maps — the paper's testbed handles this
+    /// with its own device choice; what matters downstream is the *ratio*
+    /// of used to total resources.
+    pub fn stratix_iv() -> Self {
+        let d = |name, labs, m9ks, m144ks, dsps, io_pads| Device {
+            name,
+            labs,
+            m9ks,
+            m144ks,
+            dsps,
+            io_pads,
+            route_muxes_per_lab: 60,
+        };
+        DeviceFamily {
+            name: "stratix-iv-gx",
+            luts_per_lab: 10,
+            io_per_pad: 4,
+            devices: vec![
+                d("S70", 2_904, 462, 16, 48, 372),
+                d("S110", 4_160, 660, 16, 64, 488),
+                d("S230", 9_120, 1_235, 22, 161, 744),
+                d("S290", 11_600, 936, 36, 104, 936),
+                d("S530", 21_240, 1_280, 64, 128, 1_120),
+                d("S820i", 32_800, 1_920, 96, 192, 1_760),
+                d("S1150i", 45_600, 2_640, 128, 256, 2_400),
+            ],
+        }
+    }
+
+    /// Smallest device satisfying every capacity (the VTR mapping rule).
+    pub fn smallest_fitting(&self, u: &Utilization) -> Option<&Device> {
+        let pads_needed = u.io_pins.div_ceil(self.io_per_pad);
+        self.devices.iter().find(|d| {
+            d.labs >= u.labs
+                && d.dsps >= u.dsps
+                && d.m9ks >= u.m9ks
+                && d.m144ks >= u.m144ks
+                && d.io_pads >= pads_needed
+        })
+    }
+
+    /// VTR-style minimum custom device: the paper maps each benchmark onto
+    /// "the smallest possible FPGA device" that VTR synthesizes — a W×W
+    /// fabric with perimeter I/O (4 pads per position after the paper's
+    /// capacity amendment) and Stratix-IV column ratios (1 M9K per 16
+    /// LABs, 1 M144K per 330, 1 DSP per 166). Heavily I/O-bound designs
+    /// therefore land on fabrics far larger than their logic needs — the
+    /// idle-leakage opportunity the framework exploits.
+    pub fn vtr_min_device(&self, u: &Utilization) -> Device {
+        let need = |n: usize, per: f64| ((n as f64 * per).sqrt()).ceil() as usize;
+        let w_io = u.io_pins.div_ceil(4 * self.io_per_pad);
+        let w = [
+            w_io,
+            need((u.labs as f64 * 1.15) as usize, 1.0),
+            need(u.m9ks, 16.0),
+            need(u.m144ks, 330.0),
+            need(u.dsps, 166.0),
+            4, // minimum fabric
+        ]
+        .into_iter()
+        .max()
+        .unwrap();
+        let labs = w * w;
+        Device {
+            name: "vtr-min",
+            labs,
+            m9ks: labs.div_ceil(16),
+            m144ks: labs.div_ceil(330),
+            dsps: labs.div_ceil(166),
+            io_pads: 4 * w * self.io_per_pad,
+            route_muxes_per_lab: 60,
+        }
+    }
+
+    /// Which capacity binds the mapping (for the utilization report).
+    pub fn binding_constraint(&self, u: &Utilization, dev: &Device) -> &'static str {
+        let frac = [
+            (u.labs as f64 / dev.labs as f64, "labs"),
+            (u.dsps as f64 / dev.dsps.max(1) as f64, "dsps"),
+            (u.m9ks as f64 / dev.m9ks.max(1) as f64, "m9k"),
+            (u.m144ks as f64 / dev.m144ks.max(1) as f64, "m144k"),
+            (
+                u.io_pins.div_ceil(self.io_per_pad) as f64 / dev.io_pads as f64,
+                "io",
+            ),
+        ];
+        frac.iter()
+            .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .unwrap()
+            .1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_is_sorted_small_to_large() {
+        let f = DeviceFamily::stratix_iv();
+        for w in f.devices.windows(2) {
+            assert!(w[0].labs <= w[1].labs);
+            assert!(w[0].io_pads <= w[1].io_pads);
+        }
+    }
+
+    #[test]
+    fn smallest_fitting_picks_minimum() {
+        let f = DeviceFamily::stratix_iv();
+        let u = Utilization { labs: 100, dsps: 0, m9ks: 10, m144ks: 1, io_pins: 100 };
+        assert_eq!(f.smallest_fitting(&u).unwrap().name, "S70");
+    }
+
+    #[test]
+    fn io_bound_designs_get_oversized_devices() {
+        let f = DeviceFamily::stratix_iv();
+        // Stripes: tiny memory demand but 8797 pins -> 2200 pads.
+        let u = Utilization { labs: 12_343, dsps: 16, m9ks: 15, m144ks: 1, io_pins: 8_797 };
+        let d = f.smallest_fitting(&u).unwrap();
+        assert_eq!(d.name, "S1150i");
+        assert_eq!(f.binding_constraint(&u, d), "io");
+    }
+
+    #[test]
+    fn unmappable_returns_none() {
+        let f = DeviceFamily::stratix_iv();
+        let u = Utilization { labs: 1_000_000, ..Default::default() };
+        assert!(f.smallest_fitting(&u).is_none());
+    }
+
+    #[test]
+    fn all_table1_benchmarks_map() {
+        let f = DeviceFamily::stratix_iv();
+        for spec in TABLE1 {
+            let d = f.smallest_fitting(&spec.utilization());
+            assert!(d.is_some(), "{} does not map", spec.name);
+        }
+    }
+
+    #[test]
+    fn luts_count() {
+        let f = DeviceFamily::stratix_iv();
+        assert_eq!(f.devices[0].luts(&f), 29_040);
+    }
+}

@@ -1,0 +1,104 @@
+//! Tiny benchmark harness (criterion is unavailable offline; DESIGN.md
+//! S15). Used by the `harness = false` bench binaries.
+//!
+//! `bench_fn` warms up, then runs timed iterations until both a minimum
+//! iteration count and a minimum wall time are reached, and reports
+//! median / mean / p95 per-iteration times.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+    pub throughput_hz: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} {:>10} iters  median {:>12?}  mean {:>12?}  p95 {:>12?}  ({:.1}/s)",
+            self.name, self.iters, self.median, self.mean, self.p95, self.throughput_hz
+        )
+    }
+}
+
+/// Benchmark a closure. The closure's return value is black-boxed.
+pub fn bench_fn<T>(name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup: at least 3 iterations / 50 ms.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0;
+    while warm_iters < 3 || warm_start.elapsed() < Duration::from_millis(50) {
+        black_box(f());
+        warm_iters += 1;
+        if warm_iters > 10_000 {
+            break;
+        }
+    }
+
+    let mut samples: Vec<Duration> = Vec::new();
+    let run_start = Instant::now();
+    while samples.len() < 10 || run_start.elapsed() < Duration::from_millis(300) {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+        if samples.len() >= 100_000 {
+            break;
+        }
+    }
+    samples.sort();
+    let iters = samples.len();
+    let total: Duration = samples.iter().sum();
+    let mean = total / iters as u32;
+    let median = samples[iters / 2];
+    let p95 = samples[((iters as f64 * 0.95) as usize).min(iters - 1)];
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        median,
+        mean,
+        p95,
+        throughput_hz: iters as f64 / total.as_secs_f64().max(1e-12),
+    }
+}
+
+/// Prevent the optimizer from discarding a value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Print a bench section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_fn_reports_sane_stats() {
+        let mut calls = 0u64;
+        let r = bench_fn("noop", || {
+            calls += 1;
+            calls
+        });
+        assert!(r.iters >= 10);
+        assert!(calls as usize >= r.iters);
+        assert!(r.median <= r.p95);
+        assert!(r.throughput_hz > 0.0);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn bench_fn_measures_real_work() {
+        let fast = bench_fn("fast", || 1 + 1);
+        let slow = bench_fn("slow", || {
+            std::thread::sleep(std::time::Duration::from_micros(300));
+        });
+        assert!(slow.median > fast.median * 5, "{:?} vs {:?}", slow.median, fast.median);
+    }
+}

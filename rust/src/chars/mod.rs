@@ -1,0 +1,25 @@
+//! Pre-characterized delay/power-vs-voltage library of FPGA resources —
+//! the COFFE + 22nm-PTM SPICE substitute (DESIGN.md S1, §6).
+//!
+//! The paper characterizes four resource classes (Figs. 1–3): logic (LUTs),
+//! routing (switch boxes / connection-block muxes), on-chip BRAM, and DSP
+//! hard macros. Logic/routing/DSP share the `Vcore` rail (0.80 V nominal);
+//! BRAM has its own high-threshold `Vbram` rail (0.95 V nominal).
+//! Configuration-SRAM and I/O rails are never scaled (paper §III).
+//!
+//! Behavioural models, calibrated to reproduce the figures' shapes:
+//!   delay:   alpha-power-law `(v/v0)·((v0-vth)/(v-vth))^a` blended with a
+//!            voltage-insensitive fraction (pass-transistor routing with
+//!            boosted gates; BRAM peripheral timing) plus an exponential
+//!            failure knee (sense-amp margin for BRAM, crash for logic).
+//!   dynamic: CV²f  → `(v/v0)²` per toggle.
+//!   static:  subthreshold+DIBL leakage `(v/v0)·exp((v-v0)/s)`, with an
+//!            Arrhenius-ish temperature factor (datacenter boards run hot).
+//!
+//! Every query is normalized to the class's nominal voltage so the rest of
+//! the stack works in scale factors; absolute calibration (ns / W) lives in
+//! `arch`/`power`.
+
+pub mod model;
+
+pub use model::{CharLibrary, ClassParams, ResourceClass, VoltageGrid};

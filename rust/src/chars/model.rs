@@ -1,0 +1,448 @@
+//! Analytic resource models and the characterization tables they generate.
+
+use crate::util::json::Json;
+
+/// The four characterized resource classes of the paper (Figs. 1–3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ResourceClass {
+    /// LUTs / LAB internals (Vcore rail).
+    Logic,
+    /// Switch boxes and connection-block muxes (Vcore rail).
+    Routing,
+    /// On-chip block RAM (dedicated Vbram rail, high-threshold process).
+    Bram,
+    /// DSP hard macros (Vcore rail).
+    Dsp,
+}
+
+impl ResourceClass {
+    pub const ALL: [ResourceClass; 4] = [
+        ResourceClass::Logic,
+        ResourceClass::Routing,
+        ResourceClass::Bram,
+        ResourceClass::Dsp,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ResourceClass::Logic => "logic",
+            ResourceClass::Routing => "routing",
+            ResourceClass::Bram => "memory",
+            ResourceClass::Dsp => "dsp",
+        }
+    }
+
+    /// True if the class is powered from the BRAM rail.
+    pub fn on_bram_rail(self) -> bool {
+        matches!(self, ResourceClass::Bram)
+    }
+}
+
+/// Per-class behavioural model parameters (the "SPICE deck").
+#[derive(Clone, Copy, Debug)]
+pub struct ClassParams {
+    /// Nominal rail voltage (0.80 V core / 0.95 V bram).
+    pub v_nom: f64,
+    /// Effective threshold voltage of the delay path.
+    pub vth: f64,
+    /// Alpha-power-law velocity-saturation exponent.
+    pub alpha_pow: f64,
+    /// Voltage-insensitive fraction of the delay (0..1).
+    pub flat_frac: f64,
+    /// Failure-knee center voltage (sense-amp margin / functional crash).
+    pub knee_v: f64,
+    /// Failure-knee width (V).
+    pub knee_w: f64,
+    /// Leakage exponential slope (V per e-fold, subthreshold + DIBL).
+    pub leak_s: f64,
+    /// Below this voltage the class is non-functional (delay = inf).
+    pub v_crash: f64,
+}
+
+impl ClassParams {
+    fn delay_raw(&self, v: f64) -> f64 {
+        if v < self.v_crash {
+            return f64::INFINITY;
+        }
+        let od = (v - self.vth).max(1e-3);
+        let od0 = self.v_nom - self.vth;
+        let ap = (v / self.v_nom) * (od0 / od).powf(self.alpha_pow);
+        let base = self.flat_frac + (1.0 - self.flat_frac) * ap;
+        let knee = 1.0 + (-(v - self.knee_v) / self.knee_w).exp();
+        base * knee
+    }
+}
+
+/// The DC-DC converter's reachable voltage points for both rails
+/// (25 mV resolution, 0.45–1.0 V range; ref. [39] of the paper).
+/// Index 0 is the nominal voltage; ascending index = descending voltage.
+#[derive(Clone, Debug)]
+pub struct VoltageGrid {
+    pub vcore: Vec<f64>,
+    pub vbram: Vec<f64>,
+    pub step: f64,
+}
+
+impl VoltageGrid {
+    pub fn new(vcore_nom: f64, vbram_nom: f64, v_floor: f64, step: f64) -> Self {
+        let levels = |nom: f64| {
+            let n = ((nom - v_floor) / step).round() as usize + 1;
+            (0..n).map(|i| nom - step * i as f64).collect::<Vec<f64>>()
+        };
+        VoltageGrid { vcore: levels(vcore_nom), vbram: levels(vbram_nom), step }
+    }
+
+    /// Snap an arbitrary voltage to the nearest grid index for a rail.
+    pub fn snap_core(&self, v: f64) -> usize {
+        snap(&self.vcore, v)
+    }
+
+    pub fn snap_bram(&self, v: f64) -> usize {
+        snap(&self.vbram, v)
+    }
+}
+
+fn snap(levels: &[f64], v: f64) -> usize {
+    let mut best = 0;
+    let mut best_d = f64::INFINITY;
+    for (i, &l) in levels.iter().enumerate() {
+        let d = (l - v).abs();
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
+/// The characterization library: per-class scale-factor queries plus the
+/// sampled tables the optimizer and the AOT'd Voltage Selector consume.
+#[derive(Clone, Debug)]
+pub struct CharLibrary {
+    pub logic: ClassParams,
+    pub routing: ClassParams,
+    pub bram: ClassParams,
+    pub dsp: ClassParams,
+    /// Junction temperature in °C (leakage scales exponentially with it;
+    /// datacenter FPGA boards run hot — paper §I cites [16]).
+    pub temp_c: f64,
+    /// Leakage e-folding temperature delta (°C).
+    pub temp_s: f64,
+}
+
+pub const VCORE_NOM: f64 = 0.80;
+pub const VBRAM_NOM: f64 = 0.95;
+pub const V_CRASH: f64 = 0.50;
+pub const V_STEP: f64 = 0.025;
+
+impl CharLibrary {
+    /// Default calibration: Stratix-IV-like fabric on a 22 nm predictive
+    /// process at 45 °C board temperature. Constants are tuned so the
+    /// generated tables reproduce the shapes of the paper's Figs. 1–3 (see
+    /// chars::tests and benches/fig1..fig3).
+    pub fn stratix_iv_22nm() -> Self {
+        CharLibrary {
+            logic: ClassParams {
+                v_nom: VCORE_NOM,
+                vth: 0.32,
+                alpha_pow: 1.22,
+                flat_frac: 0.00,
+                knee_v: 0.505,
+                knee_w: 0.012,
+                leak_s: 0.505,
+                v_crash: V_CRASH,
+            },
+            routing: ClassParams {
+                v_nom: VCORE_NOM,
+                vth: 0.18,
+                alpha_pow: 1.10,
+                flat_frac: 0.25,
+                knee_v: 0.500,
+                knee_w: 0.012,
+                leak_s: 0.565,
+                v_crash: V_CRASH,
+            },
+            bram: ClassParams {
+                v_nom: VBRAM_NOM,
+                vth: 0.30,
+                alpha_pow: 1.20,
+                flat_frac: 0.55,
+                knee_v: 0.72,
+                knee_w: 0.030,
+                leak_s: 0.110,
+                v_crash: V_CRASH,
+            },
+            dsp: ClassParams {
+                v_nom: VCORE_NOM,
+                vth: 0.32,
+                alpha_pow: 1.25,
+                flat_frac: 0.10,
+                knee_v: 0.505,
+                knee_w: 0.012,
+                leak_s: 0.505,
+                v_crash: V_CRASH,
+            },
+            temp_c: 45.0,
+            temp_s: 30.0,
+        }
+    }
+
+    pub fn params(&self, class: ResourceClass) -> &ClassParams {
+        match class {
+            ResourceClass::Logic => &self.logic,
+            ResourceClass::Routing => &self.routing,
+            ResourceClass::Bram => &self.bram,
+            ResourceClass::Dsp => &self.dsp,
+        }
+    }
+
+    /// Delay scale factor at voltage `v`, normalized to 1.0 at the class's
+    /// nominal rail voltage. `inf` below the crash voltage.
+    pub fn delay_scale(&self, class: ResourceClass, v: f64) -> f64 {
+        let p = self.params(class);
+        p.delay_raw(v) / p.delay_raw(p.v_nom)
+    }
+
+    /// Dynamic energy-per-toggle scale (CV²), normalized at nominal.
+    pub fn dyn_scale(&self, class: ResourceClass, v: f64) -> f64 {
+        let p = self.params(class);
+        (v / p.v_nom).powi(2)
+    }
+
+    /// Static power scale (v·I_leak(v)), normalized at nominal, including
+    /// the library's temperature factor (which cancels in the ratio — it
+    /// matters only for absolute watts in `power`).
+    pub fn static_scale(&self, class: ResourceClass, v: f64) -> f64 {
+        let p = self.params(class);
+        (v / p.v_nom) * ((v - p.v_nom) / p.leak_s).exp()
+    }
+
+    /// Absolute leakage temperature multiplier vs 25 °C.
+    pub fn temp_leak_factor(&self) -> f64 {
+        ((self.temp_c - 25.0) / self.temp_s).exp()
+    }
+
+    /// The DC-DC grid both rails can reach.
+    pub fn grid(&self) -> VoltageGrid {
+        VoltageGrid::new(VCORE_NOM, VBRAM_NOM, V_CRASH, V_STEP)
+    }
+
+    /// Sample a per-class scale table over the grid of the class's rail.
+    pub fn delay_table(&self, class: ResourceClass) -> Vec<f64> {
+        self.rail_levels(class)
+            .iter()
+            .map(|&v| self.delay_scale(class, v))
+            .collect()
+    }
+
+    pub fn dyn_table(&self, class: ResourceClass) -> Vec<f64> {
+        self.rail_levels(class).iter().map(|&v| self.dyn_scale(class, v)).collect()
+    }
+
+    pub fn static_table(&self, class: ResourceClass) -> Vec<f64> {
+        self.rail_levels(class)
+            .iter()
+            .map(|&v| self.static_scale(class, v))
+            .collect()
+    }
+
+    fn rail_levels(&self, class: ResourceClass) -> Vec<f64> {
+        let g = self.grid();
+        if class.on_bram_rail() {
+            g.vbram
+        } else {
+            g.vcore
+        }
+    }
+
+    // ------------------------ serialization ------------------------
+
+    pub fn to_json(&self) -> Json {
+        let class = |p: &ClassParams| {
+            Json::obj(vec![
+                ("v_nom", Json::Num(p.v_nom)),
+                ("vth", Json::Num(p.vth)),
+                ("alpha_pow", Json::Num(p.alpha_pow)),
+                ("flat_frac", Json::Num(p.flat_frac)),
+                ("knee_v", Json::Num(p.knee_v)),
+                ("knee_w", Json::Num(p.knee_w)),
+                ("leak_s", Json::Num(p.leak_s)),
+                ("v_crash", Json::Num(p.v_crash)),
+            ])
+        };
+        Json::obj(vec![
+            ("logic", class(&self.logic)),
+            ("routing", class(&self.routing)),
+            ("bram", class(&self.bram)),
+            ("dsp", class(&self.dsp)),
+            ("temp_c", Json::Num(self.temp_c)),
+            ("temp_s", Json::Num(self.temp_s)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let class = |name: &str| -> Result<ClassParams, String> {
+            let o = v.get(name).ok_or_else(|| format!("missing class {name}"))?;
+            let f = |k: &str| -> Result<f64, String> {
+                o.get(k)
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| format!("missing {name}.{k}"))
+            };
+            Ok(ClassParams {
+                v_nom: f("v_nom")?,
+                vth: f("vth")?,
+                alpha_pow: f("alpha_pow")?,
+                flat_frac: f("flat_frac")?,
+                knee_v: f("knee_v")?,
+                knee_w: f("knee_w")?,
+                leak_s: f("leak_s")?,
+                v_crash: f("v_crash")?,
+            })
+        };
+        Ok(CharLibrary {
+            logic: class("logic")?,
+            routing: class("routing")?,
+            bram: class("bram")?,
+            dsp: class("dsp")?,
+            temp_c: v.get("temp_c").and_then(Json::as_f64).unwrap_or(45.0),
+            temp_s: v.get("temp_s").and_then(Json::as_f64).unwrap_or(30.0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lib() -> CharLibrary {
+        CharLibrary::stratix_iv_22nm()
+    }
+
+    #[test]
+    fn normalized_at_nominal() {
+        let l = lib();
+        for c in ResourceClass::ALL {
+            let v0 = l.params(c).v_nom;
+            assert!((l.delay_scale(c, v0) - 1.0).abs() < 1e-12, "{c:?}");
+            assert!((l.dyn_scale(c, v0) - 1.0).abs() < 1e-12);
+            assert!((l.static_scale(c, v0) - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn delay_monotone_decreasing_voltage_increases_delay() {
+        let l = lib();
+        for c in ResourceClass::ALL {
+            let levels = if c.on_bram_rail() {
+                l.grid().vbram
+            } else {
+                l.grid().vcore
+            };
+            let mut prev = 0.0;
+            for &v in &levels {
+                let d = l.delay_scale(c, v);
+                assert!(d >= prev - 1e-9, "{c:?} delay not monotone at {v}");
+                prev = d;
+            }
+        }
+    }
+
+    #[test]
+    fn fig1_memory_delay_flat_then_spike() {
+        // Paper §III: 0.95 -> 0.80 V has a relatively small effect on BRAM
+        // delay; below ~0.75 V it spikes.
+        let l = lib();
+        let at = |v| l.delay_scale(ResourceClass::Bram, v);
+        assert!(at(0.80) < 1.25, "bram delay at 0.80 V: {}", at(0.80));
+        assert!(at(0.70) > 1.8, "bram delay at 0.70 V should spike: {}", at(0.70));
+    }
+
+    #[test]
+    fn fig1_routing_tolerant_logic_sensitive() {
+        let l = lib();
+        let logic = l.delay_scale(ResourceClass::Logic, 0.60);
+        let routing = l.delay_scale(ResourceClass::Routing, 0.60);
+        assert!(
+            logic > 1.25 * routing,
+            "logic ({logic}) should degrade much faster than routing ({routing})"
+        );
+        assert!(routing < 1.45, "routing at 0.60 V: {routing}");
+    }
+
+    #[test]
+    fn fig3_memory_static_drops_75pct_by_080() {
+        // Paper §III: Vbram 0.95 -> 0.80 V cuts BRAM static power > 75 %.
+        let l = lib();
+        let s = l.static_scale(ResourceClass::Bram, 0.80);
+        assert!(s < 0.25, "bram static at 0.80 V: {s}");
+        assert!(s > 0.05, "should not be a total collapse: {s}");
+    }
+
+    #[test]
+    fn dynamic_power_is_v_squared() {
+        let l = lib();
+        let d = l.dyn_scale(ResourceClass::Logic, 0.40);
+        assert!((d - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn crash_voltage_is_infinite_delay() {
+        let l = lib();
+        for c in ResourceClass::ALL {
+            assert!(l.delay_scale(c, 0.49).is_infinite(), "{c:?}");
+            assert!(l.delay_scale(c, 0.51).is_finite(), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn grid_dimensions_match_artifacts() {
+        // Must agree with python/compile/model.py NV/NM.
+        let g = lib().grid();
+        assert_eq!(g.vcore.len(), 13);
+        assert_eq!(g.vbram.len(), 19);
+        assert!((g.vcore[0] - 0.80).abs() < 1e-12);
+        assert!((g.vbram[0] - 0.95).abs() < 1e-12);
+        assert!((g.vcore[12] - 0.50).abs() < 1e-9);
+        assert!((g.vbram[18] - 0.50).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grid_snap() {
+        let g = lib().grid();
+        assert_eq!(g.snap_core(0.80), 0);
+        assert_eq!(g.snap_core(0.791), 0);
+        // 0.762 is nearer to 0.750 (idx 2) than to 0.775 (idx 1).
+        assert_eq!(g.snap_core(0.762), 2);
+        assert_eq!(g.snap_bram(0.50), 18);
+    }
+
+    #[test]
+    fn temperature_raises_leakage() {
+        let mut l = lib();
+        let base = l.temp_leak_factor();
+        l.temp_c = 65.0;
+        assert!(l.temp_leak_factor() > base * 1.5);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let l = lib();
+        let j = l.to_json();
+        let l2 = CharLibrary::from_json(&j).unwrap();
+        for c in ResourceClass::ALL {
+            for v in [0.95, 0.8, 0.65, 0.55] {
+                assert!((l.delay_scale(c, v) - l2.delay_scale(c, v)).abs() < 1e-12);
+            }
+        }
+        assert!(CharLibrary::from_json(&Json::Null).is_err());
+    }
+
+    #[test]
+    fn tables_have_grid_length() {
+        let l = lib();
+        assert_eq!(l.delay_table(ResourceClass::Logic).len(), 13);
+        assert_eq!(l.delay_table(ResourceClass::Bram).len(), 19);
+        assert_eq!(l.static_table(ResourceClass::Routing).len(), 13);
+        assert_eq!(l.dyn_table(ResourceClass::Bram).len(), 19);
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal CLI argument parser (clap is unavailable offline; DESIGN.md S13).
+//!
+//! Grammar: `wavescale <subcommand> [--flag value] [--switch] [positional]`.
+//!
+//! Flags are greedy: `--name value` binds the next token unless it starts
+//! with `--`, so positionals must precede trailing switches (or use
+//! `--flag=value`).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (excluding argv[0]).
+    pub fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("bare -- is not supported".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn flag_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        self.flag(name)
+            .map(|v| v.parse::<f64>().map_err(|_| format!("--{name} must be a number")))
+            .transpose()
+    }
+
+    pub fn flag_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        self.flag(name)
+            .map(|v| v.parse::<usize>().map_err(|_| format!("--{name} must be an integer")))
+            .transpose()
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flag(name) == Some("true")
+    }
+
+    /// Flags the command did not consume (typo guard).
+    pub fn check_known(&self, known: &[&str]) -> Result<(), String> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                return Err(format!("unknown flag --{k}"));
+            }
+        }
+        for s in &self.switches {
+            if !known.contains(&s.as_str()) {
+                return Err(format!("unknown switch --{s}"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        let argv: Vec<String> = s.split_whitespace().map(String::from).collect();
+        Args::parse(&argv).unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_switches_positionals() {
+        let a = parse("simulate trace.csv --benchmark tabla --steps=500 --verbose");
+        assert_eq!(a.subcommand, "simulate");
+        assert_eq!(a.flag("benchmark"), Some("tabla"));
+        assert_eq!(a.flag("steps"), Some("500"));
+        assert!(a.switch("verbose"));
+        assert_eq!(a.positional, vec!["trace.csv"]);
+        // Greedy binding: a positional after a bare flag becomes its value.
+        let b = parse("x --verbose trace.csv");
+        assert_eq!(b.flag("verbose"), Some("trace.csv"));
+    }
+
+    #[test]
+    fn typed_flags() {
+        let a = parse("x --f 1.5 --n 3");
+        assert_eq!(a.flag_f64("f").unwrap(), Some(1.5));
+        assert_eq!(a.flag_usize("n").unwrap(), Some(3));
+        assert_eq!(a.flag_f64("missing").unwrap(), None);
+        let b = parse("x --n abc");
+        assert!(b.flag_usize("n").is_err());
+    }
+
+    #[test]
+    fn trailing_switch_and_check_known() {
+        let a = parse("run --fast");
+        assert!(a.switch("fast"));
+        assert!(a.check_known(&["fast"]).is_ok());
+        assert!(a.check_known(&["slow"]).is_err());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse("--help");
+        assert_eq!(a.subcommand, "");
+        assert!(a.switch("help"));
+    }
+}

@@ -1,0 +1,210 @@
+//! Typed configuration: defaults → JSON file → CLI flag overrides
+//! (DESIGN.md S12). Serialization uses the in-repo JSON module.
+
+use crate::platform::{PlatformConfig, Policy};
+use crate::util::json::Json;
+use crate::vscale::Mode;
+use crate::workload::BurstyConfig;
+
+/// Top-level experiment configuration for `wavescale simulate`.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub benchmark: String,
+    pub policy: Policy,
+    pub platform: PlatformConfig,
+    pub workload: BurstyConfig,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            benchmark: "tabla".into(),
+            policy: Policy::Dvfs(Mode::Proposed),
+            platform: PlatformConfig::default(),
+            workload: BurstyConfig::default(),
+        }
+    }
+}
+
+pub fn mode_by_name(name: &str) -> Result<Mode, String> {
+    Ok(match name {
+        "prop" | "proposed" => Mode::Proposed,
+        "core-only" | "core" => Mode::CoreOnly,
+        "bram-only" | "bram" => Mode::BramOnly,
+        "freq-only" | "freq" => Mode::FreqOnly,
+        other => return Err(format!("unknown mode {other}")),
+    })
+}
+
+pub fn policy_by_name(name: &str) -> Result<Policy, String> {
+    Ok(match name {
+        "power-gating" | "pg" => Policy::PowerGating,
+        "nominal" => Policy::NominalStatic,
+        other => {
+            if let Some(m) = other.strip_prefix("oracle-") {
+                Policy::DvfsOracle(mode_by_name(m)?)
+            } else {
+                Policy::Dvfs(mode_by_name(other)?)
+            }
+        }
+    })
+}
+
+impl SimConfig {
+    /// Apply a parsed JSON object on top of the current values.
+    pub fn apply_json(&mut self, v: &Json) -> Result<(), String> {
+        if let Some(b) = v.get("benchmark").and_then(Json::as_str) {
+            self.benchmark = b.to_string();
+        }
+        if let Some(p) = v.get("policy").and_then(Json::as_str) {
+            self.policy = policy_by_name(p)?;
+        }
+        if let Some(p) = v.get("platform") {
+            let f = |k: &str| p.get(k).and_then(Json::as_f64);
+            let u = |k: &str| p.get(k).and_then(Json::as_usize);
+            if let Some(x) = u("n_fpgas") {
+                self.platform.n_fpgas = x;
+            }
+            if let Some(x) = f("tau_s") {
+                self.platform.tau_s = x;
+            }
+            if let Some(x) = u("m_bins") {
+                self.platform.m_bins = x;
+            }
+            if let Some(x) = f("margin_t") {
+                self.platform.margin_t = x;
+            }
+            if let Some(x) = u("warmup_steps") {
+                self.platform.warmup_steps = x;
+            }
+            if let Some(x) = p.get("dual_pll").and_then(Json::as_bool) {
+                self.platform.dual_pll = x;
+            }
+            if let Some(x) = f("pll_lock_us") {
+                self.platform.pll_lock_us = x;
+            }
+            if let Some(x) = f("pg_residual") {
+                self.platform.pg_residual = x;
+            }
+        }
+        if let Some(w) = v.get("workload") {
+            let f = |k: &str| w.get(k).and_then(Json::as_f64);
+            if let Some(x) = w.get("steps").and_then(Json::as_usize) {
+                self.workload.steps = x;
+            }
+            if let Some(x) = f("mean_load") {
+                self.workload.mean_load = x;
+            }
+            if let Some(x) = f("hurst") {
+                self.workload.hurst = x;
+            }
+            if let Some(x) = w.get("sources").and_then(Json::as_usize) {
+                self.workload.sources = x;
+            }
+            if let Some(x) = f("mean_on") {
+                self.workload.mean_on = x;
+            }
+            if let Some(x) = w.get("seed").and_then(Json::as_usize) {
+                self.workload.seed = x as u64;
+            }
+        }
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.platform.n_fpgas == 0 {
+            return Err("n_fpgas must be >= 1".into());
+        }
+        if self.platform.m_bins < 2 {
+            return Err("m_bins must be >= 2".into());
+        }
+        if !(0.0..1.0).contains(&self.platform.margin_t) {
+            return Err("margin_t must be in [0, 1)".into());
+        }
+        if !(0.5..1.0).contains(&self.workload.hurst) {
+            return Err("hurst must be in (0.5, 1)".into());
+        }
+        if crate::arch::BenchmarkSpec::by_name(&self.benchmark).is_none() {
+            return Err(format!("unknown benchmark {}", self.benchmark));
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("benchmark", Json::Str(self.benchmark.clone())),
+            ("policy", Json::Str(self.policy.name())),
+            (
+                "platform",
+                Json::obj(vec![
+                    ("n_fpgas", Json::Num(self.platform.n_fpgas as f64)),
+                    ("tau_s", Json::Num(self.platform.tau_s)),
+                    ("m_bins", Json::Num(self.platform.m_bins as f64)),
+                    ("margin_t", Json::Num(self.platform.margin_t)),
+                    ("warmup_steps", Json::Num(self.platform.warmup_steps as f64)),
+                    ("dual_pll", Json::Bool(self.platform.dual_pll)),
+                    ("pll_lock_us", Json::Num(self.platform.pll_lock_us)),
+                    ("pg_residual", Json::Num(self.platform.pg_residual)),
+                ]),
+            ),
+            (
+                "workload",
+                Json::obj(vec![
+                    ("steps", Json::Num(self.workload.steps as f64)),
+                    ("mean_load", Json::Num(self.workload.mean_load)),
+                    ("hurst", Json::Num(self.workload.hurst)),
+                    ("sources", Json::Num(self.workload.sources as f64)),
+                    ("mean_on", Json::Num(self.workload.mean_on)),
+                    ("seed", Json::Num(self.workload.seed as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        SimConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut c = SimConfig::default();
+        c.benchmark = "stripes".into();
+        c.platform.n_fpgas = 8;
+        c.workload.mean_load = 0.3;
+        let j = c.to_json();
+        let mut d = SimConfig::default();
+        d.apply_json(&j).unwrap();
+        assert_eq!(d.benchmark, "stripes");
+        assert_eq!(d.platform.n_fpgas, 8);
+        assert!((d.workload.mean_load - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for name in ["prop", "core-only", "bram-only", "freq-only", "pg", "nominal", "oracle-prop"] {
+            let p = policy_by_name(name).unwrap();
+            // Round-trip through the canonical name.
+            policy_by_name(&p.name()).unwrap();
+        }
+        assert!(policy_by_name("bogus").is_err());
+    }
+
+    #[test]
+    fn validation_rejects_bad_values() {
+        let mut c = SimConfig::default();
+        c.benchmark = "nope".into();
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::default();
+        c.platform.m_bins = 1;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::default();
+        c.workload.hurst = 1.2;
+        assert!(c.validate().is_err());
+    }
+}

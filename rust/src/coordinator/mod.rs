@@ -1,0 +1,442 @@
+//! Serving coordinator — the paper's platform as a live request path
+//! (DESIGN.md S11).
+//!
+//! Layer-3 topology (Fig. 9 adapted to a serving framework):
+//!   * a bounded central request queue with backpressure,
+//!   * one worker thread per simulated FPGA instance, each executing the
+//!     benchmark's AOT-compiled DNN artifact through its own PJRT client
+//!     (batch formation: up to the artifact batch, bounded wait),
+//!   * a Central Controller (CC) epoch loop: per DVFS epoch it reads the
+//!     arrival counter, updates the Markov predictor, picks the frequency
+//!     bin, queries the Voltage Selector (the AOT'd Pallas artifact via
+//!     PJRT — or the native optimizer as fallback), and publishes the
+//!     (freq_ratio, Vcore, Vbram) the workers honour next epoch.
+//!
+//! The FPGA's *service rate* is simulated: a batch occupies its instance
+//! for `cycles / (f_nom · freq_ratio)`; the numeric inference itself is
+//! real PJRT execution. Energy is integrated from the power model at the
+//! operating point of each epoch. Rust threads + channels only — no
+//! external runtime (DESIGN.md §6).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::markov::{MarkovPredictor, Predictor};
+use crate::metrics::{Counter, Gauge, Histogram};
+use crate::power::DesignPower;
+use crate::runtime::{DnnClient, Engine, OpQuery, VoltageSelectorClient};
+use crate::vscale::{Mode, Optimizer, VoltageLut};
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct ServingConfig {
+    /// Benchmark / artifact variant (tabla, dnnweaver, ...).
+    pub variant: String,
+    /// Number of simulated FPGA instances (worker threads).
+    pub n_instances: usize,
+    /// DVFS epoch length (the simulator's τ, compressed for serving runs).
+    pub epoch: Duration,
+    /// Max requests queued before submit() applies backpressure.
+    pub queue_capacity: usize,
+    /// Max wait to fill a batch before dispatching a partial one.
+    pub batch_timeout: Duration,
+    /// Cycles one batch occupies an instance (service time = cycles / f).
+    pub cycles_per_batch: f64,
+    /// Voltage mode for the CC.
+    pub mode: Mode,
+    /// Use the AOT'd Pallas Voltage Selector through PJRT (true) or the
+    /// native optimizer (false).
+    pub selector_via_pjrt: bool,
+    /// Nominal service capacity used to normalize the arrival counter.
+    pub m_bins: usize,
+    pub margin_t: f64,
+    pub warmup_epochs: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            variant: "tabla".into(),
+            n_instances: 2,
+            epoch: Duration::from_millis(200),
+            queue_capacity: 4096,
+            batch_timeout: Duration::from_millis(5),
+            cycles_per_batch: 2.0e5,
+            mode: Mode::Proposed,
+            selector_via_pjrt: true,
+            m_bins: 10,
+            margin_t: 0.05,
+            warmup_epochs: 2,
+        }
+    }
+}
+
+/// One inference request.
+pub struct Request {
+    pub id: u64,
+    pub payload: Vec<f32>,
+    pub submitted: Instant,
+}
+
+/// Completed request record.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub worker: usize,
+    pub latency: Duration,
+    /// First output logit (proof of real compute).
+    pub y0: f32,
+}
+
+/// Error returned when the queue is full (backpressure).
+#[derive(Debug, PartialEq, Eq)]
+pub struct QueueFull;
+
+struct Shared {
+    queue: Mutex<VecDeque<Request>>,
+    notify: Condvar,
+    shutdown: AtomicBool,
+    /// Current freq ratio (f64 bits) published by the CC.
+    freq_ratio: AtomicU64,
+    vcore_mv: AtomicU64,
+    vbram_mv: AtomicU64,
+    arrivals_this_epoch: AtomicU64,
+    pub completed: Counter,
+    pub rejected: Counter,
+    pub latency_us: Histogram,
+    pub energy_j: Gauge,
+    pub nominal_energy_j: Gauge,
+}
+
+impl Shared {
+    fn freq_ratio(&self) -> f64 {
+        f64::from_bits(self.freq_ratio.load(Ordering::Relaxed))
+    }
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug)]
+pub struct ServingStats {
+    pub completed: u64,
+    pub rejected: u64,
+    pub mean_latency_s: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub energy_j: f64,
+    pub nominal_energy_j: f64,
+    pub power_gain: f64,
+    pub epochs: usize,
+    pub freq_ratio_now: f64,
+    pub vcore_now: f64,
+    pub vbram_now: f64,
+}
+
+/// Per-epoch CC trace row.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub load: f64,
+    pub predicted: f64,
+    pub freq_ratio: f64,
+    pub vcore: f64,
+    pub vbram: f64,
+    pub power_w: f64,
+}
+
+pub struct Coordinator {
+    pub cfg: ServingConfig,
+    shared: Arc<Shared>,
+    workers: Vec<std::thread::JoinHandle<Result<()>>>,
+    controller: Option<std::thread::JoinHandle<Vec<EpochRecord>>>,
+    next_id: AtomicU64,
+    pub in_dim: usize,
+    pub batch: usize,
+}
+
+impl Coordinator {
+    /// Start workers + CC. `artifacts_dir` must contain `make artifacts`
+    /// output; `design`/`optimizer` come from the platform build.
+    pub fn start(
+        cfg: ServingConfig,
+        artifacts_dir: std::path::PathBuf,
+        design: DesignPower,
+        optimizer: Optimizer,
+    ) -> Result<Self> {
+        // Probe the artifact shape once (cheap engine, then dropped).
+        let probe = Engine::open(&artifacts_dir)?;
+        let client = DnnClient::new(&probe, &cfg.variant)?;
+        let (in_dim, batch) = (client.in_dim, client.batch);
+        drop(client);
+        drop(probe);
+
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            notify: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            freq_ratio: AtomicU64::new(1.0f64.to_bits()),
+            vcore_mv: AtomicU64::new(800),
+            vbram_mv: AtomicU64::new(950),
+            arrivals_this_epoch: AtomicU64::new(0),
+            completed: Counter::default(),
+            rejected: Counter::default(),
+            latency_us: Histogram::latency_us(),
+            energy_j: Gauge::default(),
+            nominal_energy_j: Gauge::default(),
+        });
+
+        // ---- workers --------------------------------------------------
+        let mut workers = Vec::with_capacity(cfg.n_instances);
+        for wid in 0..cfg.n_instances {
+            let shared = shared.clone();
+            let cfg2 = cfg.clone();
+            let dir = artifacts_dir.clone();
+            workers.push(std::thread::spawn(move || -> Result<()> {
+                // Each instance owns its PJRT client (threads don't share
+                // the engine, so no Sync bound is needed).
+                let engine = Engine::open(&dir)?;
+                let dnn = DnnClient::new(&engine, &cfg2.variant)?;
+                let f_nom_hz = 1.0e6 * 100.0; // normalized; ratio matters
+                loop {
+                    // ---- batch formation ---------------------------------
+                    let mut batch_reqs: Vec<Request> = Vec::with_capacity(dnn.batch);
+                    {
+                        let mut q = shared.queue.lock().unwrap();
+                        loop {
+                            while let Some(r) = q.pop_front() {
+                                batch_reqs.push(r);
+                                if batch_reqs.len() == dnn.batch {
+                                    break;
+                                }
+                            }
+                            if batch_reqs.len() == dnn.batch
+                                || (!batch_reqs.is_empty())
+                                || shared.shutdown.load(Ordering::Relaxed)
+                            {
+                                break;
+                            }
+                            let (qq, _timeout) = shared
+                                .notify
+                                .wait_timeout(q, cfg2.batch_timeout)
+                                .unwrap();
+                            q = qq;
+                            if shared.shutdown.load(Ordering::Relaxed) && q.is_empty() {
+                                break;
+                            }
+                        }
+                    }
+                    if batch_reqs.is_empty() {
+                        if shared.shutdown.load(Ordering::Relaxed) {
+                            return Ok(());
+                        }
+                        // Wait a little for work.
+                        std::thread::sleep(cfg2.batch_timeout);
+                        continue;
+                    }
+                    // Partial batches wait briefly for stragglers.
+                    if batch_reqs.len() < dnn.batch {
+                        let deadline = Instant::now() + cfg2.batch_timeout;
+                        while batch_reqs.len() < dnn.batch && Instant::now() < deadline {
+                            let mut q = shared.queue.lock().unwrap();
+                            while let Some(r) = q.pop_front() {
+                                batch_reqs.push(r);
+                                if batch_reqs.len() == dnn.batch {
+                                    break;
+                                }
+                            }
+                            drop(q);
+                            if batch_reqs.len() < dnn.batch {
+                                std::thread::sleep(Duration::from_micros(200));
+                            }
+                        }
+                    }
+
+                    // ---- real inference ----------------------------------
+                    let mut x = vec![0.0f32; dnn.batch * dnn.in_dim];
+                    for (i, r) in batch_reqs.iter().enumerate() {
+                        x[i * dnn.in_dim..(i + 1) * dnn.in_dim]
+                            .copy_from_slice(&r.payload);
+                    }
+                    let y = dnn.infer(&x)?;
+
+                    // ---- simulated FPGA occupancy ------------------------
+                    let fr = shared.freq_ratio().max(0.05);
+                    let service = cfg2.cycles_per_batch / (f_nom_hz * fr);
+                    std::thread::sleep(Duration::from_secs_f64(service));
+
+                    let now = Instant::now();
+                    for (i, r) in batch_reqs.iter().enumerate() {
+                        let lat = now.duration_since(r.submitted);
+                        shared.latency_us.observe(lat.as_secs_f64() * 1e6);
+                        shared.completed.inc();
+                        let _ = Completion {
+                            id: r.id,
+                            worker: wid,
+                            latency: lat,
+                            y0: y[i * dnn.out_dim],
+                        };
+                    }
+                }
+            }));
+        }
+
+        // ---- central controller ----------------------------------------
+        let controller = {
+            let shared = shared.clone();
+            let cfg2 = cfg.clone();
+            let dir = artifacts_dir.clone();
+            let design = design.clone();
+            let optimizer = optimizer.clone();
+            std::thread::spawn(move || -> Vec<EpochRecord> {
+                let engine = if cfg2.selector_via_pjrt {
+                    Engine::open(&dir).ok()
+                } else {
+                    None
+                };
+                let lut = VoltageLut::build(&optimizer, cfg2.m_bins, cfg2.margin_t, cfg2.mode);
+                let mut predictor = MarkovPredictor::new(cfg2.m_bins, cfg2.warmup_epochs);
+                // Nominal epoch capacity: all instances at f_nom.
+                let f_nom_hz = 1.0e6 * 100.0;
+                let cap = cfg2.n_instances as f64
+                    * (f_nom_hz / cfg2.cycles_per_batch)
+                    * 16.0 // artifact batch
+                    * cfg2.epoch.as_secs_f64();
+                let mut records = Vec::new();
+                let mut epoch = 0usize;
+                while !shared.shutdown.load(Ordering::Relaxed) {
+                    std::thread::sleep(cfg2.epoch);
+                    let arrivals =
+                        shared.arrivals_this_epoch.swap(0, Ordering::Relaxed) as f64;
+                    let load = (arrivals / cap).min(1.0);
+                    predictor.observe(load);
+                    let predicted = predictor.predict();
+
+                    let entry = lut.entry_for_load(predicted);
+                    let mut choice = entry.point;
+                    // Ask the AOT'd Voltage Selector when enabled; fall
+                    // back to the native point on any error.
+                    if let Some(engine) = &engine {
+                        let vs = VoltageSelectorClient::new(engine);
+                        let sw = 1.0 / entry.freq_ratio;
+                        let q = OpQuery {
+                            alpha: optimizer.tables.op.alpha as f32,
+                            beta: optimizer.tables.op.beta as f32,
+                            gamma_l: optimizer.tables.op.gamma_l as f32,
+                            gamma_m: optimizer.tables.op.gamma_m as f32,
+                            sw: sw as f32,
+                        };
+                        if let Ok(choices) = vs.select(cfg2.mode, &optimizer.tables, &[q]) {
+                            if let Some(c) = choices.first() {
+                                choice.vcore = c.vcore;
+                                choice.vbram = c.vbram;
+                                choice.power_norm = c.power_norm;
+                            }
+                        }
+                    }
+
+                    shared
+                        .freq_ratio
+                        .store(entry.freq_ratio.to_bits(), Ordering::Relaxed);
+                    shared
+                        .vcore_mv
+                        .store((choice.vcore * 1000.0) as u64, Ordering::Relaxed);
+                    shared
+                        .vbram_mv
+                        .store((choice.vbram * 1000.0) as u64, Ordering::Relaxed);
+
+                    // Energy integration at this epoch's operating point.
+                    let f_mhz = design.spec.freq_mhz * entry.freq_ratio;
+                    let p = design.breakdown(choice.vcore, choice.vbram, f_mhz).total_w()
+                        * cfg2.n_instances as f64;
+                    let p_nom = design.nominal().total_w() * cfg2.n_instances as f64;
+                    shared.energy_j.add(p * cfg2.epoch.as_secs_f64());
+                    shared
+                        .nominal_energy_j
+                        .add(p_nom * cfg2.epoch.as_secs_f64());
+                    records.push(EpochRecord {
+                        epoch,
+                        load,
+                        predicted,
+                        freq_ratio: entry.freq_ratio,
+                        vcore: choice.vcore,
+                        vbram: choice.vbram,
+                        power_w: p,
+                    });
+                    epoch += 1;
+                }
+                records
+            })
+        };
+
+        Ok(Coordinator {
+            cfg,
+            shared,
+            workers,
+            controller: Some(controller),
+            next_id: AtomicU64::new(0),
+            in_dim,
+            batch,
+        })
+    }
+
+    /// Submit one request; `Err(QueueFull)` signals backpressure.
+    pub fn submit(&self, payload: Vec<f32>) -> std::result::Result<u64, QueueFull> {
+        assert_eq!(payload.len(), self.in_dim, "payload must be in_dim floats");
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.len() >= self.cfg.queue_capacity {
+            self.shared.rejected.inc();
+            return Err(QueueFull);
+        }
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        q.push_back(Request { id, payload, submitted: Instant::now() });
+        drop(q);
+        self.shared.arrivals_this_epoch.fetch_add(1, Ordering::Relaxed);
+        self.shared.notify.notify_one();
+        Ok(id)
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    pub fn stats(&self) -> ServingStats {
+        let s = &self.shared;
+        let energy = s.energy_j.get();
+        let nominal = s.nominal_energy_j.get();
+        ServingStats {
+            completed: s.completed.get(),
+            rejected: s.rejected.get(),
+            mean_latency_s: s.latency_us.mean() / 1e6,
+            p50_latency_s: s.latency_us.quantile(0.5) / 1e6,
+            p99_latency_s: s.latency_us.quantile(0.99) / 1e6,
+            energy_j: energy,
+            nominal_energy_j: nominal,
+            power_gain: if energy > 0.0 { nominal / energy } else { 1.0 },
+            epochs: 0,
+            freq_ratio_now: s.freq_ratio(),
+            vcore_now: s.vcore_mv.load(Ordering::Relaxed) as f64 / 1000.0,
+            vbram_now: s.vbram_mv.load(Ordering::Relaxed) as f64 / 1000.0,
+        }
+    }
+
+    /// Stop accepting work, drain, join workers, and return the CC trace.
+    pub fn shutdown(mut self) -> Result<(ServingStats, Vec<EpochRecord>)> {
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        self.shared.notify.notify_all();
+        for w in self.workers.drain(..) {
+            w.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        }
+        let records = self
+            .controller
+            .take()
+            .unwrap()
+            .join()
+            .map_err(|_| anyhow::anyhow!("controller panicked"))?;
+        let mut stats = self.stats();
+        stats.epochs = records.len();
+        Ok((stats, records))
+    }
+}

@@ -1,0 +1,29 @@
+//! # wavescale
+//!
+//! Workload-aware opportunistic energy efficiency for multi-FPGA platforms —
+//! a production-shaped reproduction of Salamat et al., 2019 (cs.AR), built
+//! as a three-layer Rust + JAX + Pallas stack (see DESIGN.md).
+//!
+//! Layer 3 (this crate) owns the platform: characterization library,
+//! benchmark netlists + STA, the voltage/frequency optimizer, the Markov
+//! workload predictor, the multi-FPGA simulator, and a serving coordinator
+//! that executes the AOT-compiled JAX/Pallas artifacts through PJRT.
+//! Python (layers 1–2) runs only at build time (`make artifacts`).
+
+pub mod arch;
+pub mod bench_support;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod metrics;
+pub mod report;
+pub mod chars;
+pub mod netlist;
+pub mod platform;
+pub mod power;
+pub mod runtime;
+pub mod sta;
+pub mod markov;
+pub mod util;
+pub mod workload;
+pub mod vscale;

@@ -1,0 +1,489 @@
+//! wavescale CLI — launcher for the multi-FPGA DVFS platform.
+//!
+//! Subcommands:
+//!   characterize  dump the resource characterization tables (Figs. 1-3)
+//!   sta           generate a benchmark netlist and report timing (Table I)
+//!   lut           build the synthesis-time voltage LUT for a benchmark
+//!   simulate      run the platform simulator over a workload trace
+//!   predict       exercise the Markov predictor on a generated workload
+//!   serve         live serving demo: PJRT inference + DVFS epochs
+//!   artifacts     verify AOT artifacts against their golden data
+
+use wavescale::arch::{BenchmarkSpec, DeviceFamily, TABLE1};
+use wavescale::chars::{CharLibrary, ResourceClass};
+use wavescale::cli::Args;
+use wavescale::config::{policy_by_name, SimConfig};
+use wavescale::markov::{MarkovPredictor, Predictor};
+use wavescale::netlist::gen::{generate, GenConfig};
+use wavescale::platform::{build_platform, Policy};
+use wavescale::power::{DesignPower, PowerParams};
+use wavescale::report::{table, write_results};
+use wavescale::runtime::{DnnClient, Engine};
+use wavescale::sta::{analyze, DelayParams};
+use wavescale::util::json::Json;
+use wavescale::vscale::{Mode, VoltageLut};
+use wavescale::workload;
+
+const USAGE: &str = "\
+wavescale — workload-aware opportunistic energy efficiency for multi-FPGA platforms
+
+USAGE: wavescale <SUBCOMMAND> [FLAGS]
+
+SUBCOMMANDS:
+  characterize                      dump delay/power-vs-voltage tables
+  sta        --benchmark <name>     netlist + timing report (Table I row)
+  lut        --benchmark <name> --mode <prop|core-only|bram-only>
+  simulate   --benchmark <name> --policy <prop|core-only|bram-only|pg|nominal|oracle-prop>
+             [--steps N] [--mean-load X] [--n-fpgas N] [--seed N]
+             [--config file.json] [--csv out.csv]
+  predict    [--steps N] [--bins M] [--kind bursty|periodic|poisson|square]
+  serve      --artifacts <dir> [--variant name] [--instances N]
+             [--epochs N] [--epoch-ms N] [--rps N]
+  artifacts  --artifacts <dir>      compile + golden-check all artifacts
+  fleet      --groups tabla:0.4,diannao:0.6 [--policy prop] [--steps N]
+  experiment <fig1|fig2|fig3|fig4|fig5|fig6|fig8|table1|fig10|fig11|fig12|table2|pll>
+             re-run a paper experiment (same code as `cargo bench`)
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<(), String> {
+    let args = Args::parse(argv)?;
+    if args.switch("help") || args.subcommand.is_empty() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.subcommand.as_str() {
+        "characterize" => characterize(&args),
+        "sta" => sta_cmd(&args),
+        "lut" => lut_cmd(&args),
+        "simulate" => simulate(&args),
+        "predict" => predict(&args),
+        "serve" => serve(&args),
+        "artifacts" => artifacts_cmd(&args),
+        "fleet" => fleet_cmd(&args),
+        "experiment" => experiment_cmd(&args),
+        other => Err(format!("unknown subcommand {other}\n{USAGE}")),
+    }
+}
+
+fn characterize(args: &Args) -> Result<(), String> {
+    args.check_known(&["json"])?;
+    let lib = CharLibrary::stratix_iv_22nm();
+    if args.switch("json") {
+        println!("{}", lib.to_json().to_string_pretty());
+        return Ok(());
+    }
+    let grid = lib.grid();
+    let mut rows = vec![wavescale::report::row([
+        "rail_v", "d_logic", "d_route", "d_dsp", "d_bram", "st_logic", "st_bram",
+    ])];
+    for i in 0..grid.vbram.len() {
+        let vb = grid.vbram[i];
+        let vc = if i < grid.vcore.len() { grid.vcore[i] } else { f64::NAN };
+        let fmt = |x: f64| {
+            if x.is_nan() {
+                "-".to_string()
+            } else if x.is_infinite() {
+                "inf".to_string()
+            } else {
+                format!("{x:.3}")
+            }
+        };
+        rows.push(vec![
+            format!("{vc:.3}/{vb:.3}"),
+            fmt(if vc.is_nan() { f64::NAN } else { lib.delay_scale(ResourceClass::Logic, vc) }),
+            fmt(if vc.is_nan() { f64::NAN } else { lib.delay_scale(ResourceClass::Routing, vc) }),
+            fmt(if vc.is_nan() { f64::NAN } else { lib.delay_scale(ResourceClass::Dsp, vc) }),
+            fmt(lib.delay_scale(ResourceClass::Bram, vb)),
+            fmt(if vc.is_nan() { f64::NAN } else { lib.static_scale(ResourceClass::Logic, vc) }),
+            fmt(lib.static_scale(ResourceClass::Bram, vb)),
+        ]);
+    }
+    print!("{}", table(&rows));
+    Ok(())
+}
+
+fn sta_cmd(args: &Args) -> Result<(), String> {
+    args.check_known(&["benchmark", "scale", "seed"])?;
+    let name = args.flag_or("benchmark", "tabla");
+    let spec = BenchmarkSpec::by_name(name).ok_or_else(|| format!("unknown benchmark {name}"))?;
+    let scale = args.flag_f64("scale")?.unwrap_or(0.05);
+    let seed = args.flag_usize("seed")?.unwrap_or(2019) as u64;
+    let net = generate(spec, &GenConfig { scale, seed, luts_per_lab: 10 });
+    let rep = analyze(&net, &DelayParams::default(), 8)?;
+    let c = net.counts();
+    println!("benchmark {name} (scale {scale}):");
+    println!(
+        "  netlist: {} LUTs, {} BRAMs, {} DSPs, {} in, {} out, {} routed segments",
+        c.luts, c.brams, c.dsps, c.inputs, c.outputs, c.routed_segments
+    );
+    println!(
+        "  fmax {:.1} MHz (Table I: {:.1} MHz), cp {:.2} ns, alpha {:.3}",
+        rep.fmax_mhz,
+        spec.freq_mhz,
+        rep.cp.total_ns(),
+        rep.cp.alpha()
+    );
+    println!(
+        "  cp decomposition: logic {:.2} ns, routing {:.2} ns, bram {:.2} ns, dsp {:.2} ns",
+        rep.cp.logic_ns, rep.cp.routing_ns, rep.cp.bram_ns, rep.cp.dsp_ns
+    );
+    println!("  near-critical paths tracked: {}", rep.top_paths.len());
+    Ok(())
+}
+
+fn lut_cmd(args: &Args) -> Result<(), String> {
+    args.check_known(&["benchmark", "mode", "bins", "margin"])?;
+    let name = args.flag_or("benchmark", "tabla");
+    let mode = wavescale::config::mode_by_name(args.flag_or("mode", "prop"))?;
+    let bins = args.flag_usize("bins")?.unwrap_or(10);
+    let margin = args.flag_f64("margin")?.unwrap_or(0.05);
+    let platform = build_platform(name, Default::default(), Policy::Dvfs(mode))?;
+    let opt = platform.optimizer_ref();
+    let lut = VoltageLut::build(opt, bins, margin, mode);
+    let mut rows = vec![wavescale::report::row([
+        "bin", "load_range", "freq_ratio", "vcore", "vbram", "power_norm",
+    ])];
+    for (b, e) in lut.entries.iter().enumerate() {
+        rows.push(vec![
+            format!("{b}"),
+            format!("({:.2}, {:.2}]", b as f64 / bins as f64, (b + 1) as f64 / bins as f64),
+            format!("{:.3}", e.freq_ratio),
+            format!("{:.3}", e.point.vcore),
+            format!("{:.3}", e.point.vbram),
+            format!("{:.4}", e.point.power_norm),
+        ]);
+    }
+    print!("{}", table(&rows));
+    Ok(())
+}
+
+fn simulate(args: &Args) -> Result<(), String> {
+    args.check_known(&[
+        "benchmark", "policy", "steps", "mean-load", "n-fpgas", "seed", "config", "csv",
+        "trace",
+    ])?;
+    let mut cfg = SimConfig::default();
+    if let Some(path) = args.flag("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        let json = Json::parse(&text).map_err(|e| e.to_string())?;
+        cfg.apply_json(&json)?;
+    }
+    if let Some(b) = args.flag("benchmark") {
+        cfg.benchmark = b.to_string();
+    }
+    if let Some(p) = args.flag("policy") {
+        cfg.policy = policy_by_name(p)?;
+    }
+    if let Some(s) = args.flag_usize("steps")? {
+        cfg.workload.steps = s;
+    }
+    if let Some(m) = args.flag_f64("mean-load")? {
+        cfg.workload.mean_load = m;
+    }
+    if let Some(n) = args.flag_usize("n-fpgas")? {
+        cfg.platform.n_fpgas = n;
+    }
+    if let Some(s) = args.flag_usize("seed")? {
+        cfg.workload.seed = s as u64;
+    }
+    cfg.validate()?;
+
+    let trace = match args.flag("trace") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            workload::Trace::from_csv(&text, path)?
+        }
+        None => workload::bursty(&cfg.workload),
+    };
+    let mut platform = build_platform(&cfg.benchmark, cfg.platform.clone(), cfg.policy)?;
+    let report = platform.run(&trace.loads);
+
+    println!("benchmark {} | policy {} | {} steps | mean load {:.3}",
+        cfg.benchmark, report.policy, trace.len(), trace.mean());
+    println!(
+        "  avg power {:.3} W (nominal {:.3} W) -> power gain {:.2}x",
+        report.avg_power_w, report.nominal_power_w, report.power_gain
+    );
+    println!(
+        "  energy {:.1} J (PLL {:.2} J) | QoS violations {} ({:.2}%) | mispredictions {}",
+        report.energy_j,
+        report.pll_energy_j,
+        report.qos_violations,
+        report.violation_rate * 100.0,
+        report.mispredictions
+    );
+    if let Some(csv_path) = args.flag("csv") {
+        let mut rows = vec![wavescale::report::row([
+            "step", "load", "predicted", "freq_ratio", "vcore", "vbram", "power_w",
+            "qos_violation",
+        ])];
+        for r in &report.records {
+            rows.push(vec![
+                r.step.to_string(),
+                format!("{:.4}", r.load),
+                format!("{:.4}", r.predicted_load),
+                format!("{:.4}", r.freq_ratio),
+                format!("{:.3}", r.vcore),
+                format!("{:.3}", r.vbram),
+                format!("{:.4}", r.power_w),
+                (r.qos_violation as u8).to_string(),
+            ]);
+        }
+        let path = write_results(csv_path, &wavescale::report::csv(&rows))
+            .map_err(|e| e.to_string())?;
+        println!("  per-step trace written to {}", path.display());
+    }
+    Ok(())
+}
+
+fn predict(args: &Args) -> Result<(), String> {
+    args.check_known(&["steps", "bins", "kind", "seed"])?;
+    let steps = args.flag_usize("steps")?.unwrap_or(2000);
+    let bins = args.flag_usize("bins")?.unwrap_or(10);
+    let seed = args.flag_usize("seed")?.unwrap_or(7) as u64;
+    let kind = args.flag_or("kind", "bursty");
+    let trace = match kind {
+        "bursty" => workload::bursty(&workload::BurstyConfig { steps, seed, ..Default::default() }),
+        "poisson" => workload::poisson(steps, 0.4, 1000.0, seed),
+        "periodic" => workload::periodic(steps, 96, 0.15, 0.85, 0.03, seed),
+        "square" => workload::square(steps, 50, 0.2, 0.8),
+        other => return Err(format!("unknown workload kind {other}")),
+    };
+    let mut p = MarkovPredictor::new(bins, 20);
+    let mut covered = 0usize;
+    let mut exact = 0usize;
+    let mut total = 0usize;
+    for (i, &load) in trace.loads.iter().enumerate() {
+        if i > 20 {
+            total += 1;
+            let pred = p.predict();
+            if p.bin_of(pred) == p.bin_of(load) {
+                exact += 1;
+            }
+            if pred * 1.05 >= load {
+                covered += 1;
+            }
+        }
+        p.observe(load);
+    }
+    println!("workload {} ({} steps, mean {:.3})", trace.label, trace.len(), trace.mean());
+    println!(
+        "  markov({bins} bins): exact-bin {:.1}%, coverage(with 5% margin) {:.1}%",
+        100.0 * exact as f64 / total as f64,
+        100.0 * covered as f64 / total as f64
+    );
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<(), String> {
+    args.check_known(&["artifacts", "variant", "instances", "epochs", "epoch-ms", "rps", "mode"])?;
+    let dir = args.flag_or("artifacts", "artifacts");
+    let variant = args.flag_or("variant", "tabla").to_string();
+    let n_instances = args.flag_usize("instances")?.unwrap_or(2);
+    let epochs = args.flag_usize("epochs")?.unwrap_or(10);
+    let epoch_ms = args.flag_usize("epoch-ms")?.unwrap_or(200);
+    let rps = args.flag_f64("rps")?.unwrap_or(2000.0);
+    let mode = wavescale::config::mode_by_name(args.flag_or("mode", "prop"))?;
+
+    let platform = build_platform(&variant, Default::default(), Policy::Dvfs(mode))?;
+    let design = platform.design.clone();
+    let optimizer = platform.optimizer_ref().clone();
+
+    let cfg = wavescale::coordinator::ServingConfig {
+        variant: variant.clone(),
+        n_instances,
+        epoch: std::time::Duration::from_millis(epoch_ms as u64),
+        mode,
+        ..Default::default()
+    };
+    let coord = wavescale::coordinator::Coordinator::start(
+        cfg,
+        std::path::PathBuf::from(dir),
+        design,
+        optimizer,
+    )
+    .map_err(|e| e.to_string())?;
+
+    println!("serving dnn_{variant} on {n_instances} instances for {epochs} epochs...");
+    let mut rng = wavescale::util::prng::Rng::new(42);
+    let total = std::time::Duration::from_millis((epochs * epoch_ms) as u64);
+    let start = std::time::Instant::now();
+    let mut sent = 0u64;
+    while start.elapsed() < total {
+        // Sinusoidal offered load between 20% and 100% of rps.
+        let phase = start.elapsed().as_secs_f64() / total.as_secs_f64();
+        let rate = rps * (0.6 - 0.4 * (phase * std::f64::consts::TAU).cos());
+        let _ = coord.submit(rng.normal_vec_f32(coord.in_dim));
+        sent += 1;
+        std::thread::sleep(std::time::Duration::from_secs_f64(1.0 / rate.max(1.0)));
+    }
+    let (stats, records) = coord.shutdown().map_err(|e| e.to_string())?;
+    println!(
+        "  submitted {sent} | completed {} | rejected {} | p50 {:.1} ms | p99 {:.1} ms",
+        stats.completed,
+        stats.rejected,
+        stats.p50_latency_s * 1e3,
+        stats.p99_latency_s * 1e3
+    );
+    println!(
+        "  energy {:.2} J vs nominal {:.2} J -> power gain {:.2}x over {} epochs",
+        stats.energy_j, stats.nominal_energy_j, stats.power_gain, stats.epochs
+    );
+    for r in records.iter().take(6) {
+        println!(
+            "    epoch {:>2}: load {:.2} predicted {:.2} freq {:.2} vcore {:.3} vbram {:.3} {:.2} W",
+            r.epoch, r.load, r.predicted, r.freq_ratio, r.vcore, r.vbram, r.power_w
+        );
+    }
+    Ok(())
+}
+
+fn artifacts_cmd(args: &Args) -> Result<(), String> {
+    args.check_known(&["artifacts"])?;
+    let dir = args.flag_or("artifacts", "artifacts");
+    let engine = Engine::open(dir).map_err(|e| e.to_string())?;
+    println!(
+        "PJRT platform: {} | manifest: {} artifacts (jax {})",
+        engine.platform_name(),
+        engine.manifest.artifacts.len(),
+        engine.manifest.jax_version
+    );
+    for variant in engine.manifest.dnn_variants() {
+        let dnn = DnnClient::new(&engine, &variant).map_err(|e| e.to_string())?;
+        let err = dnn.verify_golden(&engine).map_err(|e| e.to_string())?;
+        println!("  dnn_{variant}: golden max rel err {err:.2e} {}",
+            if err < 1e-3 { "OK" } else { "FAIL" });
+        if err >= 1e-3 {
+            return Err(format!("dnn_{variant} golden check failed"));
+        }
+    }
+    // Cross-check one voltage selection against the native optimizer.
+    let spec = TABLE1[0];
+    let chars = CharLibrary::stratix_iv_22nm();
+    let design = DesignPower::from_spec(
+        BenchmarkSpec::by_name(spec.name).unwrap(),
+        &DeviceFamily::stratix_iv(),
+        chars.clone(),
+        PowerParams::default(),
+    )?;
+    let net = generate(&spec, &GenConfig { scale: 0.05, seed: 2019, luts_per_lab: 10 });
+    let rep = analyze(&net, &DelayParams::default(), 8)?;
+    let tables = design.rail_tables(&rep.cp);
+    let opt = wavescale::vscale::Optimizer::new(chars.grid(), tables.clone());
+    let vs = wavescale::runtime::VoltageSelectorClient::new(&engine);
+    let q = wavescale::runtime::OpQuery {
+        alpha: tables.op.alpha as f32,
+        beta: tables.op.beta as f32,
+        gamma_l: tables.op.gamma_l as f32,
+        gamma_m: tables.op.gamma_m as f32,
+        sw: 2.5,
+    };
+    let got = vs
+        .select(Mode::Proposed, &tables, &[q])
+        .map_err(|e| e.to_string())?[0];
+    let want = opt.optimize(2.5, Mode::Proposed);
+    println!(
+        "  voltage_opt_prop: pjrt ({:.3}, {:.3}) vs native ({:.3}, {:.3}) {}",
+        got.vcore,
+        got.vbram,
+        want.vcore,
+        want.vbram,
+        if got.icore == want.icore && got.ibram == want.ibram { "OK" } else { "FAIL" }
+    );
+    Ok(())
+}
+
+fn fleet_cmd(args: &Args) -> Result<(), String> {
+    args.check_known(&["groups", "policy", "steps", "mean-load", "seed"])?;
+    let spec = args.flag_or("groups", "tabla:0.4,diannao:0.35,stripes:0.25");
+    let mut groups: Vec<(&str, f64)> = Vec::new();
+    for part in spec.split(',') {
+        let (name, share) = part
+            .split_once(':')
+            .ok_or_else(|| format!("bad group spec {part:?} (want name:share)"))?;
+        groups.push((name, share.parse().map_err(|_| format!("bad share in {part:?}"))?));
+    }
+    let policy = policy_by_name(args.flag_or("policy", "prop"))?;
+    let steps = args.flag_usize("steps")?.unwrap_or(600);
+    let mean = args.flag_f64("mean-load")?.unwrap_or(0.4);
+    let seed = args.flag_usize("seed")?.unwrap_or(2019) as u64;
+    let trace = workload::bursty(&wavescale::workload::BurstyConfig {
+        steps,
+        mean_load: mean,
+        seed,
+        ..Default::default()
+    });
+    let mut fleet = wavescale::platform::fleet::Fleet::new(
+        &groups,
+        Default::default(),
+        policy,
+    )?;
+    let r = fleet.run(&trace.loads);
+    let mut rows = vec![wavescale::report::row([
+        "group", "share", "nominal_W", "avg_W", "gain", "violations%",
+    ])];
+    for (g, (name, rep)) in fleet.groups.iter().zip(&r.per_group) {
+        rows.push(vec![
+            name.clone(),
+            format!("{:.2}", g.share),
+            format!("{:.2}", rep.nominal_power_w),
+            format!("{:.2}", rep.avg_power_w),
+            format!("{:.2}x", rep.power_gain),
+            format!("{:.1}", rep.violation_rate * 100.0),
+        ]);
+    }
+    rows.push(vec![
+        "fleet".into(),
+        "1.00".into(),
+        format!("{:.2}", r.nominal_power_w),
+        format!("{:.2}", r.avg_power_w),
+        format!("{:.2}x", r.power_gain),
+        format!("{:.1}", r.violation_rate * 100.0),
+    ]);
+    print!("{}", table(&rows));
+    Ok(())
+}
+
+fn experiment_cmd(args: &Args) -> Result<(), String> {
+    let id = args
+        .positional
+        .first()
+        .ok_or("experiment needs an id (e.g. fig10, table2)")?;
+    let bench = match id.as_str() {
+        "fig1" => "fig1_delay",
+        "fig2" => "fig2_dynamic_power",
+        "fig3" => "fig3_static_power",
+        "fig4" => "fig4_workload",
+        "fig5" => "fig5_alpha",
+        "fig6" => "fig6_beta",
+        "fig8" => "fig8_markov",
+        "table1" => "table1_utilization",
+        "fig10" => "fig10_tabla_trace",
+        "fig11" => "fig11_voltage_trace",
+        "fig12" => "fig12_accelerators",
+        "table2" => "table2_summary",
+        "pll" => "pll_overhead",
+        other => return Err(format!("unknown experiment {other}")),
+    };
+    // The experiments live as bench binaries so `cargo bench` regenerates
+    // everything; this subcommand is the single-experiment launcher.
+    let status = std::process::Command::new("cargo")
+        .args(["bench", "--offline", "--bench", bench])
+        .status()
+        .map_err(|e| format!("failed to launch cargo: {e}"))?;
+    if !status.success() {
+        return Err(format!("experiment {id} failed"));
+    }
+    Ok(())
+}

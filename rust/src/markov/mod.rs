@@ -1,0 +1,396 @@
+//! Workload prediction (paper §IV.A, §V) — DESIGN.md S7.
+//!
+//! The paper uses a light-weight online predictor in the PRESS [37] style:
+//! * workloads with known periodic signatures use the per-phase average of
+//!   previous periods as a bias (`PeriodicPredictor`);
+//! * otherwise a discrete-time Markov chain over M workload bins learns
+//!   transition probabilities online (`MarkovPredictor`), predicts the next
+//!   bin, and adds a t% throughput margin to absorb one-bin
+//!   under-estimates. Mispredictions snap the chain to the observed state
+//!   and (past a threshold) re-learn the offending edge.
+//!
+//! `EwmaPredictor` and `LastValuePredictor` are baselines for the
+//! prediction-accuracy bench (Fig. 8).
+
+/// Common interface: observe the load of the finished time step, then
+/// predict the next step's load (both normalized to peak, in [0, 1]).
+pub trait Predictor {
+    /// Record the actual load of the just-finished step.
+    fn observe(&mut self, load: f64);
+    /// Predict the next step's load.
+    fn predict(&self) -> f64;
+    fn name(&self) -> &'static str;
+}
+
+/// Discrete-time Markov chain over M bins with online count learning.
+#[derive(Clone, Debug)]
+pub struct MarkovPredictor {
+    m: usize,
+    /// Transition counts; row = current bin.
+    counts: Vec<Vec<f64>>,
+    state: usize,
+    steps_seen: usize,
+    /// Steps of pure training before predictions are trusted (paper: the
+    /// platform runs at nominal frequency for the first I steps).
+    warmup: usize,
+    /// Consecutive-misprediction counter per edge (predicted -> actual).
+    mispredictions: usize,
+    /// After this many mispredictions the offending row is re-weighted.
+    mispredict_threshold: usize,
+    last_prediction: Option<usize>,
+}
+
+impl MarkovPredictor {
+    pub fn new(m: usize, warmup: usize) -> Self {
+        assert!(m >= 2, "need at least 2 bins");
+        MarkovPredictor {
+            m,
+            // Laplace prior keeps rows stochastic before data arrives.
+            counts: vec![vec![1.0 / m as f64; m]; m],
+            state: 0,
+            steps_seen: 0,
+            warmup,
+            mispredictions: 0,
+            mispredict_threshold: 8,
+            last_prediction: None,
+        }
+    }
+
+    /// Load a pre-trained transition matrix (the paper's "if a pre-trained
+    /// model of the workload is available, it can be loaded on FPGA").
+    pub fn with_matrix(m: usize, rows: Vec<Vec<f64>>) -> Result<Self, String> {
+        if rows.len() != m || rows.iter().any(|r| r.len() != m) {
+            return Err(format!("matrix must be {m}x{m}"));
+        }
+        for (i, row) in rows.iter().enumerate() {
+            let s: f64 = row.iter().sum();
+            if (s - 1.0).abs() > 1e-6 {
+                return Err(format!("row {i} sums to {s}, not 1"));
+            }
+            if row.iter().any(|&p| p < 0.0) {
+                return Err(format!("row {i} has negative probability"));
+            }
+        }
+        let mut p = MarkovPredictor::new(m, 0);
+        // Scale to pseudo-counts so online learning keeps adapting.
+        p.counts = rows
+            .into_iter()
+            .map(|r| r.into_iter().map(|x| x * 16.0).collect())
+            .collect();
+        Ok(p)
+    }
+
+    pub fn m_bins(&self) -> usize {
+        self.m
+    }
+
+    pub fn bin_of(&self, load: f64) -> usize {
+        ((load.clamp(0.0, 1.0) * self.m as f64).ceil() as usize).clamp(1, self.m) - 1
+    }
+
+    /// Upper edge of a bin — the load the platform must be able to serve
+    /// when it predicts this bin.
+    pub fn bin_upper(&self, bin: usize) -> f64 {
+        (bin + 1) as f64 / self.m as f64
+    }
+
+    /// Row-normalized transition probabilities.
+    pub fn transition_matrix(&self) -> Vec<Vec<f64>> {
+        self.counts
+            .iter()
+            .map(|row| {
+                let s: f64 = row.iter().sum();
+                row.iter().map(|&c| c / s).collect()
+            })
+            .collect()
+    }
+
+    /// Whether the last prediction missed the observed bin, and by how
+    /// many bins (signed: positive = under-estimate).
+    pub fn last_misprediction(&self, observed: f64) -> Option<i64> {
+        self.last_prediction.map(|p| self.bin_of(observed) as i64 - p as i64)
+    }
+
+    pub fn in_warmup(&self) -> bool {
+        self.steps_seen < self.warmup
+    }
+
+    pub fn predicted_bin(&self) -> usize {
+        if self.in_warmup() {
+            // Training phase: platform runs at maximum frequency.
+            return self.m - 1;
+        }
+        let row = &self.counts[self.state];
+        let mut best = 0;
+        let mut best_c = -1.0;
+        for (j, &c) in row.iter().enumerate() {
+            if c > best_c {
+                best_c = c;
+                best = j;
+            }
+        }
+        best
+    }
+}
+
+impl Predictor for MarkovPredictor {
+    fn observe(&mut self, load: f64) {
+        let actual = self.bin_of(load);
+        // Misprediction handling (paper §V): snap to the observed state;
+        // past the threshold, boost the corrected edge so the chain
+        // re-learns quickly.
+        if let Some(pred) = self.last_prediction {
+            if pred != actual {
+                self.mispredictions += 1;
+                if self.mispredictions >= self.mispredict_threshold {
+                    self.counts[self.state][actual] += 4.0;
+                    self.mispredictions = 0;
+                }
+            } else {
+                self.mispredictions = 0;
+            }
+        }
+        self.counts[self.state][actual] += 1.0;
+        self.state = actual;
+        self.steps_seen += 1;
+        self.last_prediction = Some(self.predicted_bin());
+    }
+
+    fn predict(&self) -> f64 {
+        self.bin_upper(self.predicted_bin())
+    }
+
+    fn name(&self) -> &'static str {
+        "markov"
+    }
+}
+
+/// Periodic-signature predictor: per-phase running average over a known
+/// period (paper: "workloads with repeating patterns are divided into time
+/// intervals which are repeated with the period").
+#[derive(Clone, Debug)]
+pub struct PeriodicPredictor {
+    period: usize,
+    phase: usize,
+    sums: Vec<f64>,
+    counts: Vec<usize>,
+}
+
+impl PeriodicPredictor {
+    pub fn new(period: usize) -> Self {
+        assert!(period >= 1);
+        PeriodicPredictor { period, phase: 0, sums: vec![0.0; period], counts: vec![0; period] }
+    }
+}
+
+impl Predictor for PeriodicPredictor {
+    fn observe(&mut self, load: f64) {
+        self.sums[self.phase] += load.clamp(0.0, 1.0);
+        self.counts[self.phase] += 1;
+        self.phase = (self.phase + 1) % self.period;
+    }
+
+    fn predict(&self) -> f64 {
+        if self.counts[self.phase] == 0 {
+            return 1.0; // untrained phase: be safe, run at maximum
+        }
+        self.sums[self.phase] / self.counts[self.phase] as f64
+    }
+
+    fn name(&self) -> &'static str {
+        "periodic"
+    }
+}
+
+/// Exponentially-weighted moving average baseline.
+#[derive(Clone, Debug)]
+pub struct EwmaPredictor {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl EwmaPredictor {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        EwmaPredictor { alpha, value: None }
+    }
+}
+
+impl Predictor for EwmaPredictor {
+    fn observe(&mut self, load: f64) {
+        let load = load.clamp(0.0, 1.0);
+        self.value = Some(match self.value {
+            None => load,
+            Some(v) => self.alpha * load + (1.0 - self.alpha) * v,
+        });
+    }
+
+    fn predict(&self) -> f64 {
+        self.value.unwrap_or(1.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "ewma"
+    }
+}
+
+/// Naive last-value baseline.
+#[derive(Clone, Debug, Default)]
+pub struct LastValuePredictor {
+    value: Option<f64>,
+}
+
+impl Predictor for LastValuePredictor {
+    fn observe(&mut self, load: f64) {
+        self.value = Some(load.clamp(0.0, 1.0));
+    }
+
+    fn predict(&self) -> f64 {
+        self.value.unwrap_or(1.0)
+    }
+
+    fn name(&self) -> &'static str {
+        "last-value"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn bins_partition_unit_interval() {
+        let p = MarkovPredictor::new(4, 0);
+        assert_eq!(p.bin_of(0.0), 0);
+        assert_eq!(p.bin_of(0.25), 0);
+        assert_eq!(p.bin_of(0.2501), 1);
+        assert_eq!(p.bin_of(0.75), 2);
+        assert_eq!(p.bin_of(1.0), 3);
+        assert_eq!(p.bin_upper(3), 1.0);
+    }
+
+    #[test]
+    fn rows_stay_stochastic() {
+        let mut p = MarkovPredictor::new(5, 0);
+        let mut rng = Rng::new(1);
+        for _ in 0..500 {
+            p.observe(rng.f64());
+        }
+        for row in p.transition_matrix() {
+            let s: f64 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-9);
+            assert!(row.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn warmup_predicts_maximum() {
+        let mut p = MarkovPredictor::new(4, 10);
+        for _ in 0..5 {
+            p.observe(0.1);
+            assert_eq!(p.predict(), 1.0, "training phase must run at max");
+        }
+    }
+
+    #[test]
+    fn learns_a_deterministic_cycle() {
+        // 0.1 -> 0.5 -> 0.9 -> 0.1 ... must become perfectly predictable.
+        let mut p = MarkovPredictor::new(10, 5);
+        let cycle = [0.1, 0.5, 0.9];
+        for i in 0..60 {
+            p.observe(cycle[i % 3]);
+        }
+        let mut correct = 0;
+        for i in 60..90 {
+            let predicted = p.predict();
+            let actual = cycle[i % 3];
+            if p.bin_of(predicted) == p.bin_of(actual) {
+                correct += 1;
+            }
+            p.observe(actual);
+        }
+        assert!(correct >= 28, "cycle accuracy {correct}/30");
+    }
+
+    #[test]
+    fn prediction_covers_sticky_workloads() {
+        // Slowly varying (high-Hurst-ish) loads: next bin ~ current bin.
+        let mut p = MarkovPredictor::new(10, 10);
+        let mut rng = Rng::new(3);
+        let mut load = 0.4;
+        let mut hits = 0;
+        let mut total = 0;
+        for step in 0..2000 {
+            load = (load + rng.normal() * 0.02).clamp(0.05, 0.95);
+            if step > 100 {
+                total += 1;
+                // Covered if predicted bin >= actual bin (enough capacity).
+                if p.predict() >= load - 0.1 {
+                    hits += 1;
+                }
+            }
+            p.observe(load);
+        }
+        assert!(hits as f64 / total as f64 > 0.9, "coverage {hits}/{total}");
+    }
+
+    #[test]
+    fn misprediction_is_reported_signed() {
+        let mut p = MarkovPredictor::new(4, 0);
+        for _ in 0..10 {
+            p.observe(0.1); // learns to predict bin 0
+        }
+        assert_eq!(p.predicted_bin(), 0);
+        // A burst to bin 3 is an under-estimate of +3.
+        assert_eq!(p.last_misprediction(0.9), Some(3));
+        assert_eq!(p.last_misprediction(0.1), Some(0));
+    }
+
+    #[test]
+    fn pretrained_matrix_round_trip() {
+        let rows = vec![
+            vec![0.9, 0.1, 0.0],
+            vec![0.2, 0.6, 0.2],
+            vec![0.0, 0.5, 0.5],
+        ];
+        let p = MarkovPredictor::with_matrix(3, rows.clone()).unwrap();
+        let got = p.transition_matrix();
+        for (a, b) in rows.iter().flatten().zip(got.iter().flatten()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        assert!(MarkovPredictor::with_matrix(3, vec![vec![1.0; 3]; 3]).is_err());
+        assert!(MarkovPredictor::with_matrix(2, vec![vec![1.0, 0.0]]).is_err());
+    }
+
+    #[test]
+    fn periodic_predictor_learns_signature() {
+        let mut p = PeriodicPredictor::new(24);
+        let signal = |h: usize| 0.2 + 0.6 * ((h as f64 / 24.0) * std::f64::consts::TAU).sin().abs();
+        for day in 0..5 {
+            for h in 0..24 {
+                let _ = day;
+                p.observe(signal(h));
+            }
+        }
+        for h in 0..24 {
+            let err = (p.predict() - signal(h)).abs();
+            assert!(err < 0.05, "phase {h}: err {err}");
+            p.observe(signal(h));
+        }
+    }
+
+    #[test]
+    fn ewma_and_last_value() {
+        let mut e = EwmaPredictor::new(0.5);
+        assert_eq!(e.predict(), 1.0); // safe default
+        e.observe(0.4);
+        e.observe(0.8);
+        assert!((e.predict() - 0.6).abs() < 1e-12);
+
+        let mut l = LastValuePredictor::default();
+        assert_eq!(l.predict(), 1.0);
+        l.observe(0.3);
+        assert_eq!(l.predict(), 0.3);
+    }
+}

@@ -1,0 +1,211 @@
+//! Lightweight metrics: counters, gauges, and log-linear latency
+//! histograms (DESIGN.md S14). Lock-free on the hot path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// f64 gauge stored as bits.
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+
+    /// Atomic add (CAS loop; fine for low-rate updates).
+    pub fn add(&self, dv: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + dv).to_bits();
+            match self
+                .0
+                .compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => return,
+                Err(c) => cur = c,
+            }
+        }
+    }
+}
+
+/// Log-linear histogram: `buckets_per_decade` linear buckets within each
+/// power of 10, spanning `min_value`..`min_value * 10^decades`.
+#[derive(Debug)]
+pub struct Histogram {
+    min_value: f64,
+    buckets_per_decade: usize,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_micro: AtomicU64,
+    overflow: AtomicU64,
+}
+
+impl Histogram {
+    /// Default: 1 µs .. 100 s with 20 buckets/decade (for seconds-valued
+    /// observations scaled by the caller).
+    pub fn new(min_value: f64, decades: usize, buckets_per_decade: usize) -> Self {
+        Histogram {
+            min_value,
+            buckets_per_decade,
+            buckets: (0..decades * buckets_per_decade)
+                .map(|_| AtomicU64::new(0))
+                .collect(),
+            count: AtomicU64::new(0),
+            sum_micro: AtomicU64::new(0),
+            overflow: AtomicU64::new(0),
+        }
+    }
+
+    pub fn latency_us() -> Self {
+        // 1 µs .. 10^8 µs (100 s)
+        Histogram::new(1.0, 8, 20)
+    }
+
+    fn bucket_of(&self, v: f64) -> Option<usize> {
+        if v < self.min_value {
+            return Some(0);
+        }
+        let decades = (v / self.min_value).log10();
+        let idx = (decades * self.buckets_per_decade as f64) as usize;
+        if idx >= self.buckets.len() {
+            None
+        } else {
+            Some(idx)
+        }
+    }
+
+    pub fn observe(&self, v: f64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_micro
+            .fetch_add((v * 1e6).max(0.0) as u64, Ordering::Relaxed);
+        match self.bucket_of(v) {
+            Some(i) => {
+                self.buckets[i].fetch_add(1, Ordering::Relaxed);
+            }
+            None => {
+                self.overflow.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_micro.load(Ordering::Relaxed) as f64 / 1e6 / c as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper edge).
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return self.min_value
+                    * 10f64.powf((i + 1) as f64 / self.buckets_per_decade as f64);
+            }
+        }
+        f64::INFINITY
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        g.set(2.5);
+        g.add(0.5);
+        assert!((g.get() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_quantiles_are_ordered() {
+        let h = Histogram::latency_us();
+        for i in 1..=1000u64 {
+            h.observe(i as f64);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p95 = h.quantile(0.95);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // Log-linear resolution: within a bucket (~12% at 20/decade).
+        assert!((400.0..700.0).contains(&p50), "p50 {p50}");
+        assert!((850.0..1300.0).contains(&p95), "p95 {p95}");
+        assert!((h.mean() - 500.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_overflow_and_underflow() {
+        let h = Histogram::new(1.0, 2, 10); // 1..100
+        h.observe(0.01); // underflow -> bucket 0
+        h.observe(1e9); // overflow
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.25) <= 2.0);
+        assert_eq!(h.quantile(1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn concurrent_updates() {
+        use std::sync::Arc;
+        let c = Arc::new(Counter::default());
+        let h = Arc::new(Histogram::latency_us());
+        let mut threads = Vec::new();
+        for _ in 0..4 {
+            let c = c.clone();
+            let h = h.clone();
+            threads.push(std::thread::spawn(move || {
+                for i in 0..10_000 {
+                    c.inc();
+                    h.observe(i as f64);
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(c.get(), 40_000);
+        assert_eq!(h.count(), 40_000);
+    }
+}

@@ -1,0 +1,230 @@
+//! Deterministic synthetic netlist generation from a Table I row.
+
+use super::{Edge, Netlist, NodeKind};
+use crate::arch::BenchmarkSpec;
+use crate::util::prng::Rng;
+
+/// Generation knobs. `scale` shrinks resource counts uniformly (tests run
+/// at ~0.02; experiments at 1.0 keep Table I counts and the same timing,
+/// since the critical-path construction is scale-independent).
+#[derive(Clone, Copy, Debug)]
+pub struct GenConfig {
+    pub scale: f64,
+    pub seed: u64,
+    pub luts_per_lab: usize,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig { scale: 1.0, seed: 2019, luts_per_lab: 10 }
+    }
+}
+
+/// Build a layered DAG reproducing the benchmark's resource mix and
+/// intended critical path:
+///
+/// * `depth` LUT layers; every LUT draws 2–4 fan-ins from the previous
+///   layer (or primary inputs) over 1–4 routing segments.
+/// * One *spine* path threads all layers with above-average segment counts
+///   and splices a BRAM access between the middle layers (plus a DSP for
+///   `cp_has_dsp` benchmarks) — this is the intended critical path.
+/// * Remaining BRAM/DSP blocks bridge layer `i` to layer `i+3`, so the
+///   paths through them stay shorter than the spine.
+pub fn generate(spec: &BenchmarkSpec, cfg: &GenConfig) -> Netlist {
+    let mut rng = Rng::new(cfg.seed ^ fxhash(spec.name));
+    let depth = spec.cp_logic_depth.max(2);
+
+    let scaled = |n: usize| ((n as f64 * cfg.scale).round() as usize).max(1);
+    let n_luts = scaled(spec.labs * cfg.luts_per_lab).max(depth * 2);
+    let n_brams = if spec.m9ks + spec.m144ks > 0 {
+        scaled(spec.m9ks + spec.m144ks)
+    } else {
+        0
+    }
+    .max(usize::from(spec.cp_has_bram));
+    let n_dsps = if spec.dsps > 0 { scaled(spec.dsps) } else { 0 }
+        .max(usize::from(spec.cp_has_dsp));
+    let n_in = scaled(spec.io_pins * 2 / 3).max(2);
+    let n_out = scaled(spec.io_pins / 3).max(1);
+
+    // ---- node numbering ----------------------------------------------
+    let mut kinds = Vec::with_capacity(n_in + n_luts + n_brams + n_dsps + n_out);
+    kinds.resize(n_in, NodeKind::Input);
+
+    // LUT layers: distribute evenly, at least one per layer.
+    let lut_base = kinds.len() as u32;
+    let mut layer_of = Vec::with_capacity(n_luts);
+    for i in 0..n_luts {
+        layer_of.push(i % depth);
+    }
+    // Shuffle layer assignment for variety while keeping counts balanced.
+    rng.shuffle(&mut layer_of);
+    kinds.resize(kinds.len() + n_luts, NodeKind::Lut);
+
+    let bram_base = kinds.len() as u32;
+    kinds.resize(kinds.len() + n_brams, NodeKind::Bram);
+    let dsp_base = kinds.len() as u32;
+    kinds.resize(kinds.len() + n_dsps, NodeKind::Dsp);
+    let out_base = kinds.len() as u32;
+    kinds.resize(kinds.len() + n_out, NodeKind::Output);
+
+    // Per-layer node id lists.
+    let mut layers: Vec<Vec<u32>> = vec![Vec::new(); depth];
+    for (i, &l) in layer_of.iter().enumerate() {
+        layers[l].push(lut_base + i as u32);
+    }
+
+    let mut edges: Vec<Edge> = Vec::with_capacity(n_luts * 3 + n_out + n_brams * 2);
+    let push = |edges: &mut Vec<Edge>, src: u32, dst: u32, segments: u8| {
+        edges.push(Edge { src, dst, segments });
+    };
+
+    // ---- general fabric ----------------------------------------------
+    for l in 0..depth {
+        for &lut in &layers[l] {
+            let fanin = rng.index(2, 5);
+            for _ in 0..fanin {
+                let src = if l == 0 {
+                    rng.below(n_in as u64) as u32
+                } else {
+                    *rng.choose(&layers[l - 1])
+                };
+                // Short hops only (1-3 segments): the spine's 3-segment
+                // edges plus its BRAM splice then dominate every fabric
+                // path by construction (worst fabric hop 1.0 ns vs spine
+                // 1.0 ns/hop + 2.8 ns of hard-block slack).
+                let segs = if rng.bool(0.25) { 3 } else { rng.index(1, 3) as u8 };
+                push(&mut edges, src, lut, segs);
+            }
+        }
+    }
+
+    // Outputs tap the last layer.
+    for o in 0..n_out {
+        let src = *rng.choose(&layers[depth - 1]);
+        push(&mut edges, src, out_base + o as u32, rng.index(1, 4) as u8);
+    }
+
+    // ---- the spine (intended critical path) ---------------------------
+    // input -> L0 -> L1 -> ... -> L(depth-1) -> output, long segments.
+    let spine: Vec<u32> = (0..depth).map(|l| layers[l][0]).collect();
+    push(&mut edges, 0, spine[0], 3);
+    for w in spine.windows(2) {
+        push(&mut edges, w[0], w[1], 3);
+    }
+    push(&mut edges, spine[depth - 1], out_base, 3);
+
+    // Splice the CP BRAM between the middle spine stages (parallel to the
+    // direct hop, so it adds its access time on the longest path).
+    if spec.cp_has_bram && n_brams > 0 {
+        let m = depth / 2;
+        let cp_bram = bram_base;
+        push(&mut edges, spine[m - 1], cp_bram, 2);
+        push(&mut edges, cp_bram, spine[m], 2);
+    }
+    if spec.cp_has_dsp && n_dsps > 0 {
+        let m = (depth * 3 / 4).max(1);
+        let cp_dsp = dsp_base;
+        push(&mut edges, spine[m - 1], cp_dsp, 2);
+        push(&mut edges, cp_dsp, spine[m], 2);
+    }
+
+    // ---- remaining hard blocks: layer i -> i+3 bridges (short paths) ---
+    let bridge = |rng: &mut Rng, edges: &mut Vec<Edge>, node: u32, depth: usize, layers: &Vec<Vec<u32>>| {
+        if depth < 4 {
+            // Shallow designs: hang the block off the fabric sideways
+            // (input-fed, output-draining) so it cannot extend the CP.
+            let src = rng.below(n_in as u64) as u32;
+            edges.push(Edge { src, dst: node, segments: 1 });
+            let dst = out_base + rng.below(n_out as u64) as u32;
+            edges.push(Edge { src: node, dst, segments: 1 });
+        } else {
+            let i = rng.index(0, depth - 3);
+            let src = *rng.choose(&layers[i]);
+            let dst = *rng.choose(&layers[i + 3]);
+            edges.push(Edge { src, dst: node, segments: 2 });
+            edges.push(Edge { src: node, dst, segments: 2 });
+        }
+    };
+    let cp_bram_used = usize::from(spec.cp_has_bram && n_brams > 0);
+    for b in cp_bram_used..n_brams {
+        bridge(&mut rng, &mut edges, bram_base + b as u32, depth, &layers);
+    }
+    let cp_dsp_used = usize::from(spec.cp_has_dsp && n_dsps > 0);
+    for d in cp_dsp_used..n_dsps {
+        bridge(&mut rng, &mut edges, dsp_base + d as u32, depth, &layers);
+    }
+
+    Netlist { name: spec.name.to_string(), kinds, edges }
+}
+
+/// Tiny FNV-style string hash for seed mixing.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::TABLE1;
+
+    fn small(spec: &BenchmarkSpec) -> Netlist {
+        generate(spec, &GenConfig { scale: 0.02, seed: 7, luts_per_lab: 10 })
+    }
+
+    #[test]
+    fn all_benchmarks_generate_valid_netlists() {
+        for spec in TABLE1 {
+            let n = small(spec);
+            n.validate().unwrap_or_else(|e| panic!("{}: {e}", spec.name));
+            let c = n.counts();
+            assert!(c.luts >= spec.cp_logic_depth, "{}", spec.name);
+            assert!(c.inputs >= 2 && c.outputs >= 1);
+            if spec.cp_has_bram {
+                assert!(c.brams >= 1);
+            }
+            if spec.cp_has_dsp {
+                assert!(c.dsps >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let spec = &TABLE1[0];
+        let a = small(spec);
+        let b = small(spec);
+        assert_eq!(a.kinds, b.kinds);
+        assert_eq!(a.edges, b.edges);
+    }
+
+    #[test]
+    fn different_seed_differs() {
+        let spec = &TABLE1[0];
+        let a = small(spec);
+        let b = generate(spec, &GenConfig { scale: 0.02, seed: 8, luts_per_lab: 10 });
+        assert_ne!(a.edges, b.edges);
+    }
+
+    #[test]
+    fn scale_controls_size() {
+        let spec = BenchmarkSpec::by_name("diannao").unwrap();
+        let a = generate(spec, &GenConfig { scale: 0.01, seed: 1, luts_per_lab: 10 });
+        let b = generate(spec, &GenConfig { scale: 0.05, seed: 1, luts_per_lab: 10 });
+        assert!(b.counts().luts > 3 * a.counts().luts);
+    }
+
+    #[test]
+    fn full_scale_matches_table1_counts() {
+        let spec = BenchmarkSpec::by_name("tabla").unwrap();
+        let n = generate(spec, &GenConfig::default());
+        let c = n.counts();
+        assert_eq!(c.luts, 127 * 10);
+        assert_eq!(c.brams, 48); // 47 M9K + 1 M144K
+    }
+}

@@ -1,0 +1,235 @@
+//! Synthetic benchmark netlists — the Quartus→VQM→BLIF→VTR substitute
+//! (DESIGN.md S3).
+//!
+//! The generator produces a layered DAG whose resource counts follow a
+//! Table I row and whose intended critical path reproduces the benchmark's
+//! post-P&R timing: `cp_logic_depth` LUT stages threaded with routing
+//! segments, with a BRAM access (and optionally a DSP macro) spliced in.
+//! STA (DESIGN.md S4) then treats these netlists exactly as VTR's timing
+//! analyzer treats real ones.
+//!
+//! A BLIF-lite reader/writer round-trips netlists to disk so experiments
+//! can pin a generated design.
+
+pub mod blif;
+pub mod gen;
+
+pub use gen::{generate, GenConfig};
+
+/// Node kinds carried by a netlist. FFs are folded into LUT stages (LAB
+/// registers), matching the level of detail the paper's framework needs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum NodeKind {
+    Input,
+    Output,
+    Lut,
+    Bram,
+    Dsp,
+}
+
+impl NodeKind {
+    pub fn code(self) -> u8 {
+        match self {
+            NodeKind::Input => 0,
+            NodeKind::Output => 1,
+            NodeKind::Lut => 2,
+            NodeKind::Bram => 3,
+            NodeKind::Dsp => 4,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<NodeKind> {
+        Some(match c {
+            0 => NodeKind::Input,
+            1 => NodeKind::Output,
+            2 => NodeKind::Lut,
+            3 => NodeKind::Bram,
+            4 => NodeKind::Dsp,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            NodeKind::Input => "input",
+            NodeKind::Output => "output",
+            NodeKind::Lut => "lut",
+            NodeKind::Bram => "bram",
+            NodeKind::Dsp => "dsp",
+        }
+    }
+}
+
+/// A directed connection routed through `segments` wire segments.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Edge {
+    pub src: u32,
+    pub dst: u32,
+    pub segments: u8,
+}
+
+/// Flat netlist representation sized for 10^5..10^6-node designs.
+#[derive(Clone, Debug)]
+pub struct Netlist {
+    pub name: String,
+    pub kinds: Vec<NodeKind>,
+    pub edges: Vec<Edge>,
+}
+
+/// Resource counts of a netlist (compare with `arch::Utilization`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counts {
+    pub inputs: usize,
+    pub outputs: usize,
+    pub luts: usize,
+    pub brams: usize,
+    pub dsps: usize,
+    pub routed_segments: usize,
+}
+
+impl Netlist {
+    pub fn node_count(&self) -> usize {
+        self.kinds.len()
+    }
+
+    pub fn counts(&self) -> Counts {
+        let mut c = Counts::default();
+        for &k in &self.kinds {
+            match k {
+                NodeKind::Input => c.inputs += 1,
+                NodeKind::Output => c.outputs += 1,
+                NodeKind::Lut => c.luts += 1,
+                NodeKind::Bram => c.brams += 1,
+                NodeKind::Dsp => c.dsps += 1,
+            }
+        }
+        c.routed_segments = self.edges.iter().map(|e| e.segments as usize).sum();
+        c
+    }
+
+    /// CSR-style fan-in adjacency: returns (offsets, in_edges) where
+    /// `in_edges[offsets[n]..offsets[n+1]]` are indices into `self.edges`
+    /// of the edges terminating at node `n`.
+    pub fn fanin_index(&self) -> (Vec<u32>, Vec<u32>) {
+        let n = self.kinds.len();
+        let mut deg = vec![0u32; n + 1];
+        for e in &self.edges {
+            deg[e.dst as usize + 1] += 1;
+        }
+        for i in 0..n {
+            deg[i + 1] += deg[i];
+        }
+        let mut pos = deg.clone();
+        let mut idx = vec![0u32; self.edges.len()];
+        for (ei, e) in self.edges.iter().enumerate() {
+            let d = e.dst as usize;
+            idx[pos[d] as usize] = ei as u32;
+            pos[d] += 1;
+        }
+        (deg, idx)
+    }
+
+    /// Validate structural invariants (DAG-ness is checked by STA's
+    /// topological sort; here: edge endpoints, I/O edge directions).
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.kinds.len() as u32;
+        for (i, e) in self.edges.iter().enumerate() {
+            if e.src >= n || e.dst >= n {
+                return Err(format!("edge {i} out of range: {e:?}"));
+            }
+            if e.src == e.dst {
+                return Err(format!("edge {i} is a self-loop: {e:?}"));
+            }
+            if self.kinds[e.dst as usize] == NodeKind::Input {
+                return Err(format!("edge {i} drives an input: {e:?}"));
+            }
+            if self.kinds[e.src as usize] == NodeKind::Output {
+                return Err(format!("edge {i} leaves an output: {e:?}"));
+            }
+            if e.segments == 0 {
+                return Err(format!("edge {i} has zero segments"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Netlist {
+        Netlist {
+            name: "tiny".into(),
+            kinds: vec![
+                NodeKind::Input,
+                NodeKind::Lut,
+                NodeKind::Bram,
+                NodeKind::Output,
+            ],
+            edges: vec![
+                Edge { src: 0, dst: 1, segments: 2 },
+                Edge { src: 1, dst: 2, segments: 1 },
+                Edge { src: 2, dst: 3, segments: 3 },
+            ],
+        }
+    }
+
+    #[test]
+    fn counts() {
+        let c = tiny().counts();
+        assert_eq!(
+            c,
+            Counts {
+                inputs: 1,
+                outputs: 1,
+                luts: 1,
+                brams: 1,
+                dsps: 0,
+                routed_segments: 6
+            }
+        );
+    }
+
+    #[test]
+    fn fanin_index_groups_by_dst() {
+        let n = tiny();
+        let (off, idx) = n.fanin_index();
+        assert_eq!(off.len(), 5);
+        // node 1 has exactly one in-edge, edge 0
+        assert_eq!(&idx[off[1] as usize..off[2] as usize], &[0]);
+        assert_eq!(&idx[off[3] as usize..off[4] as usize], &[2]);
+        assert_eq!(off[1] - off[0], 0); // inputs have no fan-in
+    }
+
+    #[test]
+    fn validate_catches_violations() {
+        let mut n = tiny();
+        assert!(n.validate().is_ok());
+        n.edges.push(Edge { src: 3, dst: 1, segments: 1 });
+        assert!(n.validate().is_err()); // leaves an output
+        n.edges.pop();
+        n.edges.push(Edge { src: 1, dst: 0, segments: 1 });
+        assert!(n.validate().is_err()); // drives an input
+        n.edges.pop();
+        n.edges.push(Edge { src: 1, dst: 1, segments: 1 });
+        assert!(n.validate().is_err()); // self loop
+        n.edges.pop();
+        n.edges.push(Edge { src: 0, dst: 9, segments: 1 });
+        assert!(n.validate().is_err()); // out of range
+    }
+
+    #[test]
+    fn node_kind_codes_round_trip() {
+        for k in [
+            NodeKind::Input,
+            NodeKind::Output,
+            NodeKind::Lut,
+            NodeKind::Bram,
+            NodeKind::Dsp,
+        ] {
+            assert_eq!(NodeKind::from_code(k.code()), Some(k));
+        }
+        assert_eq!(NodeKind::from_code(9), None);
+    }
+}

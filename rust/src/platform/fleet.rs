@@ -1,0 +1,151 @@
+//! Heterogeneous fleet: several benchmark groups sharing one datacenter
+//! workload (paper Fig. 7: "all of them are processing the input data
+//! gathered from one or different users").
+//!
+//! Each group is an independent [`Platform`] (own design, own CC, own
+//! voltage LUT) fed a share of the common trace; the fleet report
+//! aggregates power and QoS across groups. This models the realistic
+//! deployment where Tabla and DianNao instances coexist under one
+//! operator and one DVFS policy choice.
+
+use super::{build_platform, Platform, PlatformConfig, Policy, SimReport};
+
+/// One group of identical FPGA instances serving one benchmark.
+pub struct FleetGroup {
+    pub benchmark: String,
+    /// Fraction of the fleet-level workload routed to this group.
+    pub share: f64,
+    pub platform: Platform,
+}
+
+/// Aggregate outcome across groups.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    pub per_group: Vec<(String, SimReport)>,
+    pub avg_power_w: f64,
+    pub nominal_power_w: f64,
+    pub power_gain: f64,
+    pub violation_rate: f64,
+}
+
+/// A multi-tenant fleet under a single policy.
+pub struct Fleet {
+    pub groups: Vec<FleetGroup>,
+}
+
+impl Fleet {
+    /// Build one group per (benchmark, workload share). Shares must sum
+    /// to ~1; each group gets the same platform config and policy.
+    pub fn new(
+        groups: &[(&str, f64)],
+        cfg: PlatformConfig,
+        policy: Policy,
+    ) -> Result<Self, String> {
+        if groups.is_empty() {
+            return Err("fleet needs at least one group".into());
+        }
+        let total: f64 = groups.iter().map(|(_, s)| s).sum();
+        if (total - 1.0).abs() > 1e-6 {
+            return Err(format!("group shares sum to {total}, expected 1"));
+        }
+        let mut out = Vec::with_capacity(groups.len());
+        for (name, share) in groups {
+            if *share <= 0.0 {
+                return Err(format!("{name}: share must be positive"));
+            }
+            out.push(FleetGroup {
+                benchmark: name.to_string(),
+                share: *share,
+                platform: build_platform(name, cfg.clone(), policy)?,
+            });
+        }
+        Ok(Fleet { groups: out })
+    }
+
+    /// Run the common trace. Each group sees the *same normalized load*
+    /// (its capacity is provisioned for its share), so DVFS decisions are
+    /// per-group while the workload pattern is shared.
+    pub fn run(&mut self, loads: &[f64]) -> FleetReport {
+        let mut per_group = Vec::with_capacity(self.groups.len());
+        for g in &mut self.groups {
+            per_group.push((g.benchmark.clone(), g.platform.run(loads)));
+        }
+        let avg_power_w: f64 = per_group.iter().map(|(_, r)| r.avg_power_w).sum();
+        let nominal_power_w: f64 = per_group.iter().map(|(_, r)| r.nominal_power_w).sum();
+        // Steady-state gain: nominal over steady power, aggregated.
+        let steady: f64 = per_group
+            .iter()
+            .map(|(_, r)| r.nominal_power_w / r.power_gain.max(1e-12))
+            .sum();
+        let violation_rate = per_group
+            .iter()
+            .map(|(_, r)| r.violation_rate)
+            .fold(0.0, f64::max);
+        FleetReport {
+            avg_power_w,
+            nominal_power_w,
+            power_gain: nominal_power_w / steady.max(1e-12),
+            violation_rate,
+            per_group,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::vscale::Mode;
+    use crate::workload::{bursty, BurstyConfig};
+
+    fn trace() -> Vec<f64> {
+        bursty(&BurstyConfig { steps: 300, ..Default::default() }).loads
+    }
+
+    #[test]
+    fn heterogeneous_fleet_aggregates_gains() {
+        let mut fleet = Fleet::new(
+            &[("tabla", 0.4), ("diannao", 0.35), ("stripes", 0.25)],
+            PlatformConfig::default(),
+            Policy::Dvfs(Mode::Proposed),
+        )
+        .unwrap();
+        let r = fleet.run(&trace());
+        assert_eq!(r.per_group.len(), 3);
+        assert!(r.power_gain > 2.5, "fleet gain {}", r.power_gain);
+        // Aggregate gain sits between the best and worst group gains.
+        let gains: Vec<f64> = r.per_group.iter().map(|(_, x)| x.power_gain).collect();
+        let lo = gains.iter().copied().fold(f64::INFINITY, f64::min);
+        let hi = gains.iter().copied().fold(0.0, f64::max);
+        assert!(r.power_gain >= lo - 1e-9 && r.power_gain <= hi + 1e-9);
+        // The fleet is dominated by its largest board (stripes).
+        assert!(r.nominal_power_w > 50.0, "{}", r.nominal_power_w);
+    }
+
+    #[test]
+    fn fleet_validates_shares() {
+        let cfg = PlatformConfig::default();
+        assert!(Fleet::new(&[], cfg.clone(), Policy::NominalStatic).is_err());
+        assert!(Fleet::new(&[("tabla", 0.5)], cfg.clone(), Policy::NominalStatic).is_err());
+        assert!(
+            Fleet::new(&[("tabla", 1.5), ("diannao", -0.5)], cfg.clone(), Policy::NominalStatic)
+                .is_err()
+        );
+        assert!(Fleet::new(&[("nope", 1.0)], cfg, Policy::NominalStatic).is_err());
+    }
+
+    #[test]
+    fn single_group_fleet_matches_platform() {
+        let t = trace();
+        let mut fleet = Fleet::new(
+            &[("tabla", 1.0)],
+            PlatformConfig::default(),
+            Policy::Dvfs(Mode::Proposed),
+        )
+        .unwrap();
+        let fr = fleet.run(&t);
+        let mut p = build_platform("tabla", PlatformConfig::default(), Policy::Dvfs(Mode::Proposed))
+            .unwrap();
+        let pr = p.run(&t);
+        assert!((fr.power_gain - pr.power_gain).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,536 @@
+//! Multi-FPGA platform simulator (paper Figs. 7 & 9; DESIGN.md S9).
+//!
+//! Time is divided into steps of length τ. Each step the Central
+//! Controller (CC) on the lead FPGA:
+//!   1. reads the workload counter (actual load of the finished step),
+//!   2. updates the predictor and predicts the next step's bin,
+//!   3. selects the platform frequency for that bin (+t% margin),
+//!   4. looks up the pre-computed optimal (Vcore, Vbram) for the policy,
+//!   5. programs the *shadow* PLL and the DVS rails so the swap at the
+//!      step edge costs nothing (dual-PLL scheme, Eq. 4/5).
+//!
+//! All n FPGA instances process a share of the input stream at the common
+//! frequency; delivered throughput is capacity-limited and shortfalls
+//! carry over as bounded backlog (QoS accounting).
+
+pub mod fleet;
+pub mod pll;
+
+use crate::markov::{MarkovPredictor, Predictor};
+use crate::power::DesignPower;
+use crate::vscale::{Mode, Optimizer, VoltageLut};
+use pll::{DualPll, SinglePll};
+
+/// Platform-level power management policy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Policy {
+    /// The paper's DVFS framework under the given voltage mode, driven by
+    /// the Markov predictor.
+    Dvfs(Mode),
+    /// DVFS with a perfect (oracle) predictor — the upper bound.
+    DvfsOracle(Mode),
+    /// Conventional power gating: `ceil(n·load)` boards at nominal V/f.
+    PowerGating,
+    /// No management: all boards at nominal V/f (the gain baseline).
+    NominalStatic,
+}
+
+impl Policy {
+    pub fn name(&self) -> String {
+        match self {
+            Policy::Dvfs(m) => m.name().to_string(),
+            Policy::DvfsOracle(m) => format!("oracle-{}", m.name()),
+            Policy::PowerGating => "power-gating".to_string(),
+            Policy::NominalStatic => "nominal".to_string(),
+        }
+    }
+}
+
+/// Simulator configuration (defaults follow the paper's evaluation).
+#[derive(Clone, Debug)]
+pub struct PlatformConfig {
+    pub n_fpgas: usize,
+    /// Step length τ in seconds (paper: "at least in order of seconds").
+    pub tau_s: f64,
+    /// Markov bins M.
+    pub m_bins: usize,
+    /// Throughput margin t (must exceed 1/m to absorb one-bin misses).
+    pub margin_t: f64,
+    /// Pure-training steps I before predictions are trusted.
+    pub warmup_steps: usize,
+    /// Dual-PLL shadow reprogramming (paper's recommendation) vs single.
+    pub dual_pll: bool,
+    /// PLL lock time (µs, ≤ 100).
+    pub pll_lock_us: f64,
+    /// Residual power fraction of a gated board.
+    pub pg_residual: f64,
+    /// Bounded backlog, in units of one step's nominal capacity.
+    pub max_backlog_steps: f64,
+    /// Optional latency restriction (paper §IV: "if an application has
+    /// specific latency restrictions, it should be considered in the
+    /// voltage and frequency scaling"): the clock may never be stretched
+    /// beyond this factor, i.e. freq_ratio >= 1 / latency_cap_sw.
+    pub latency_cap_sw: Option<f64>,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        PlatformConfig {
+            n_fpgas: 4,
+            tau_s: 1.0,
+            m_bins: 10,
+            margin_t: 0.05,
+            warmup_steps: 20,
+            dual_pll: true,
+            pll_lock_us: 100.0,
+            pg_residual: 0.02,
+            max_backlog_steps: 1.0,
+            latency_cap_sw: None,
+        }
+    }
+}
+
+/// Per-step record (the rows behind Figs. 10–12).
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub step: usize,
+    pub load: f64,
+    pub predicted_load: f64,
+    pub freq_ratio: f64,
+    pub vcore: f64,
+    pub vbram: f64,
+    /// Total platform power this step (W), PLLs included.
+    pub power_w: f64,
+    pub delivered: f64,
+    pub backlog: f64,
+    pub qos_violation: bool,
+    pub mispredicted: bool,
+}
+
+/// Aggregate simulation outcome.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub policy: String,
+    pub records: Vec<StepRecord>,
+    pub avg_power_w: f64,
+    pub nominal_power_w: f64,
+    /// Paper's headline metric: nominal power / policy power.
+    pub power_gain: f64,
+    pub energy_j: f64,
+    pub pll_energy_j: f64,
+    pub qos_violations: usize,
+    pub violation_rate: f64,
+    pub mispredictions: usize,
+    pub stalled_us: f64,
+}
+
+/// The platform: n instances of one benchmark design + the CC.
+pub struct Platform {
+    pub cfg: PlatformConfig,
+    pub design: DesignPower,
+    optimizer: Optimizer,
+    lut: VoltageLut,
+    policy: Policy,
+    predictor: MarkovPredictor,
+    plls: PllBank,
+    /// Normalized backlog carried between steps.
+    backlog: f64,
+    /// Current step's frequency ratio (set at the end of the previous
+    /// step; the platform starts at nominal frequency).
+    freq_ratio: f64,
+    vcore: f64,
+    vbram: f64,
+    step_idx: usize,
+}
+
+enum PllBank {
+    Dual(Vec<DualPll>),
+    Single(Vec<SinglePll>),
+}
+
+impl Platform {
+    pub fn new(
+        cfg: PlatformConfig,
+        design: DesignPower,
+        optimizer: Optimizer,
+        policy: Policy,
+    ) -> Self {
+        assert!(cfg.n_fpgas >= 1);
+        assert!(
+            cfg.margin_t > 1.0 / cfg.m_bins as f64 - 1.0 + 1e-12 || cfg.m_bins >= 1,
+            "margin/bins misconfigured"
+        );
+        let mode = match policy {
+            Policy::Dvfs(m) | Policy::DvfsOracle(m) => m,
+            _ => Mode::FreqOnly,
+        };
+        let lut = match cfg.latency_cap_sw {
+            Some(cap) => VoltageLut::build_with_latency_cap(
+                &optimizer, cfg.m_bins, cfg.margin_t, mode, cap,
+            ),
+            None => VoltageLut::build(&optimizer, cfg.m_bins, cfg.margin_t, mode),
+        };
+        let f_nom = design.spec.freq_mhz;
+        let plls = if cfg.dual_pll {
+            PllBank::Dual(
+                (0..cfg.n_fpgas)
+                    .map(|_| DualPll::new(f_nom, cfg.pll_lock_us))
+                    .collect(),
+            )
+        } else {
+            PllBank::Single(
+                (0..cfg.n_fpgas)
+                    .map(|_| SinglePll::new(f_nom, cfg.pll_lock_us))
+                    .collect(),
+            )
+        };
+        let predictor = MarkovPredictor::new(cfg.m_bins, cfg.warmup_steps);
+        let (vcore, vbram) = (design.chars.logic.v_nom, design.chars.bram.v_nom);
+        Platform {
+            cfg,
+            design,
+            optimizer,
+            lut,
+            policy,
+            predictor,
+            plls,
+            backlog: 0.0,
+            freq_ratio: 1.0,
+            vcore,
+            vbram,
+            step_idx: 0,
+        }
+    }
+
+    /// The optimizer backing this platform's LUT.
+    pub fn optimizer_ref(&self) -> &Optimizer {
+        &self.optimizer
+    }
+
+    /// Nominal platform power (all boards, nominal V/f, PLLs on).
+    pub fn nominal_power_w(&self) -> f64 {
+        self.cfg.n_fpgas as f64
+            * (self.design.nominal().total_w() + self.design.params.pll_w)
+    }
+
+    /// Advance one step. `load` is the platform-normalized incoming
+    /// workload of this step; `next_load_oracle` feeds the oracle policy.
+    pub fn step(&mut self, load: f64, next_load_oracle: Option<f64>) -> StepRecord {
+        let cfg = &self.cfg;
+        let n = cfg.n_fpgas as f64;
+        let p_pll_each = self.design.params.pll_w;
+
+        // ---- serve this step at the frequency chosen last step ----------
+        let mut stalled_frac = 0.0;
+        let locking: f64 = match &mut self.plls {
+            PllBank::Dual(b) => b.iter_mut().map(|p| p.tick_us(cfg.tau_s * 1e6)).sum(),
+            PllBank::Single(b) => {
+                let stall: f64 = b.iter_mut().map(|p| p.tick_us(cfg.tau_s * 1e6)).sum();
+                stalled_frac = stall / (n * cfg.tau_s * 1e6);
+                stall
+            }
+        };
+        let capacity = self.freq_ratio * (1.0 - stalled_frac);
+        let demand = load + self.backlog;
+        let delivered = demand.min(capacity);
+        self.backlog = (demand - delivered).min(cfg.max_backlog_steps);
+        let qos_violation = demand - delivered > 1e-9;
+
+        // ---- power accounting -------------------------------------------
+        let f_mhz = self.design.spec.freq_mhz * self.freq_ratio;
+        let (board_w, active_boards) = match self.policy {
+            Policy::PowerGating => {
+                let active = (load.clamp(0.0, 1.0) * n).ceil().min(n).max(1.0);
+                (self.design.nominal().total_w(), active)
+            }
+            Policy::NominalStatic => (self.design.nominal().total_w(), n),
+            _ => (
+                self.design.breakdown(self.vcore, self.vbram, f_mhz).total_w(),
+                n,
+            ),
+        };
+        let gated = n - active_boards;
+        // Static policies never retune: one PLL suffices. DVFS policies pay
+        // for the shadow PLL when configured (Eq. 4/5 trade-off).
+        let pll_count = match self.policy {
+            Policy::NominalStatic | Policy::PowerGating => 1.0,
+            _ if cfg.dual_pll => 2.0,
+            _ => 1.0,
+        };
+        let pll_w = pll_count * p_pll_each * n;
+        let power_w = board_w * active_boards
+            + self.design.nominal().total_w() * cfg.pg_residual * gated
+            + pll_w;
+
+        // ---- CC: observe, predict, program next step ---------------------
+        self.predictor.observe(load);
+        let mispredicted = self
+            .predictor
+            .last_misprediction(load)
+            .map(|d| d != 0)
+            .unwrap_or(false);
+        let predicted = match self.policy {
+            Policy::DvfsOracle(_) => next_load_oracle.unwrap_or(load),
+            _ => self.predictor.predict(),
+        };
+
+        let (next_fr, next_vc, next_vb) = match self.policy {
+            Policy::Dvfs(_) | Policy::DvfsOracle(_) => {
+                let e = self.lut.entry_for_load(predicted);
+                (e.freq_ratio, e.point.vcore, e.point.vbram)
+            }
+            Policy::PowerGating | Policy::NominalStatic => (
+                1.0,
+                self.design.chars.logic.v_nom,
+                self.design.chars.bram.v_nom,
+            ),
+        };
+        // Backlog pressure: size the next step for predicted + carried
+        // work (proportionate backpressure, not a jump to nominal).
+        let (next_fr, next_vc, next_vb) = if self.backlog > 1e-9
+            && matches!(self.policy, Policy::Dvfs(_) | Policy::DvfsOracle(_))
+        {
+            let e = self.lut.entry_for_load((predicted + self.backlog).min(1.0));
+            (e.freq_ratio, e.point.vcore, e.point.vbram)
+        } else {
+            (next_fr, next_vc, next_vb)
+        };
+
+        let f_next = self.design.spec.freq_mhz * next_fr;
+        match &mut self.plls {
+            PllBank::Dual(b) => b.iter_mut().for_each(|p| p.program(f_next)),
+            PllBank::Single(b) => b.iter_mut().for_each(|p| p.program(f_next)),
+        }
+
+        let rec = StepRecord {
+            step: self.step_idx,
+            load,
+            predicted_load: predicted,
+            freq_ratio: self.freq_ratio,
+            vcore: self.vcore,
+            vbram: self.vbram,
+            power_w,
+            delivered,
+            backlog: self.backlog,
+            qos_violation,
+            mispredicted,
+        };
+        self.freq_ratio = next_fr;
+        self.vcore = next_vc;
+        self.vbram = next_vb;
+        self.step_idx += 1;
+        let _ = locking;
+        rec
+    }
+
+    /// Run a whole trace and aggregate.
+    pub fn run(&mut self, loads: &[f64]) -> SimReport {
+        let mut records = Vec::with_capacity(loads.len());
+        let mut stalled_us = 0.0;
+        for (i, &load) in loads.iter().enumerate() {
+            let oracle = loads.get(i + 1).copied();
+            let before = match &self.plls {
+                PllBank::Single(b) => b.iter().map(|p| p.total_stall_us()).sum::<f64>(),
+                _ => 0.0,
+            };
+            records.push(self.step(load, oracle));
+            let after = match &self.plls {
+                PllBank::Single(b) => b.iter().map(|p| p.total_stall_us()).sum::<f64>(),
+                _ => 0.0,
+            };
+            stalled_us += after - before;
+        }
+        let nominal = self.nominal_power_w();
+        let avg_power_w = if records.is_empty() {
+            0.0
+        } else {
+            records.iter().map(|r| r.power_w).sum::<f64>() / records.len() as f64
+        };
+        // Skip the warmup steps (training at max frequency) for the gain,
+        // matching the paper's steady-state comparison.
+        let steady: Vec<&StepRecord> =
+            records.iter().skip(self.cfg.warmup_steps.min(records.len())).collect();
+        let steady_avg = if steady.is_empty() {
+            avg_power_w
+        } else {
+            steady.iter().map(|r| r.power_w).sum::<f64>() / steady.len() as f64
+        };
+        let qos_violations = records.iter().filter(|r| r.qos_violation).count();
+        let pll_count = match self.policy {
+            Policy::NominalStatic | Policy::PowerGating => 1.0,
+            _ if self.cfg.dual_pll => 2.0,
+            _ => 1.0,
+        };
+        SimReport {
+            policy: self.policy.name(),
+            avg_power_w,
+            nominal_power_w: nominal,
+            power_gain: nominal / steady_avg.max(1e-12),
+            energy_j: avg_power_w * self.cfg.tau_s * records.len() as f64,
+            pll_energy_j: pll_count
+                * self.design.params.pll_w
+                * self.cfg.n_fpgas as f64
+                * self.cfg.tau_s
+                * records.len() as f64,
+            qos_violations,
+            violation_rate: qos_violations as f64 / records.len().max(1) as f64,
+            mispredictions: records.iter().filter(|r| r.mispredicted).count(),
+            stalled_us,
+            records,
+        }
+    }
+}
+
+/// Convenience: build design + optimizer + platform for a benchmark.
+pub fn build_platform(
+    benchmark: &str,
+    cfg: PlatformConfig,
+    policy: Policy,
+) -> Result<Platform, String> {
+    use crate::arch::{BenchmarkSpec, DeviceFamily};
+    use crate::chars::CharLibrary;
+    use crate::netlist::gen::{generate, GenConfig};
+    use crate::power::PowerParams;
+    use crate::sta::{analyze, DelayParams};
+
+    let spec = BenchmarkSpec::by_name(benchmark)
+        .ok_or_else(|| format!("unknown benchmark {benchmark}"))?;
+    let chars = CharLibrary::stratix_iv_22nm();
+    let design = DesignPower::from_spec(
+        spec,
+        &DeviceFamily::stratix_iv(),
+        chars.clone(),
+        PowerParams::default(),
+    )?;
+    let net = generate(spec, &GenConfig { scale: 0.05, seed: 2019, luts_per_lab: 10 });
+    let rep = analyze(&net, &DelayParams::default(), 8)?;
+    let optimizer = Optimizer::new(chars.grid(), design.rail_tables(&rep.cp))
+        .with_paths(&chars, rep.top_paths);
+    Ok(Platform::new(cfg, design, optimizer, policy))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{bursty, BurstyConfig};
+
+    fn sim(policy: Policy, loads: &[f64]) -> SimReport {
+        let mut p = build_platform("tabla", PlatformConfig::default(), policy).unwrap();
+        p.run(loads)
+    }
+
+    fn test_trace() -> Vec<f64> {
+        bursty(&BurstyConfig { steps: 400, ..Default::default() }).loads
+    }
+
+    #[test]
+    fn nominal_policy_gain_is_one() {
+        let r = sim(Policy::NominalStatic, &test_trace());
+        assert!((r.power_gain - 1.0).abs() < 1e-6, "gain {}", r.power_gain);
+        assert_eq!(r.qos_violations, 0);
+    }
+
+    #[test]
+    fn proposed_beats_singles_beats_nominal() {
+        let t = test_trace();
+        let prop = sim(Policy::Dvfs(Mode::Proposed), &t);
+        let core = sim(Policy::Dvfs(Mode::CoreOnly), &t);
+        let bram = sim(Policy::Dvfs(Mode::BramOnly), &t);
+        assert!(prop.power_gain > core.power_gain, "{} vs {}", prop.power_gain, core.power_gain);
+        assert!(prop.power_gain > bram.power_gain);
+        assert!(core.power_gain > 1.2 && bram.power_gain > 1.2);
+    }
+
+    #[test]
+    fn qos_holds_under_margin() {
+        // With the 5% margin and 10 bins, violations should be rare.
+        let t = test_trace();
+        let r = sim(Policy::Dvfs(Mode::Proposed), &t);
+        assert!(
+            r.violation_rate < 0.10,
+            "violation rate {:.3} too high",
+            r.violation_rate
+        );
+        // And the backlog never exceeds the bound.
+        assert!(r.records.iter().all(|x| x.backlog <= 1.0 + 1e-9));
+    }
+
+    #[test]
+    fn oracle_is_at_least_as_good_as_predicted() {
+        let t = test_trace();
+        let o = sim(Policy::DvfsOracle(Mode::Proposed), &t);
+        let p = sim(Policy::Dvfs(Mode::Proposed), &t);
+        // Oracle avoids margin + misprediction overhead.
+        assert!(o.power_gain > 0.95 * p.power_gain);
+        assert!(o.violation_rate <= p.violation_rate + 0.05);
+    }
+
+    #[test]
+    fn power_gating_tracks_load_linearly() {
+        let loads = vec![0.5; 200];
+        let r = sim(Policy::PowerGating, &loads);
+        // 2 of 4 boards active (+ residual + PLLs): gain just under 2x.
+        assert!((1.5..2.1).contains(&r.power_gain), "gain {}", r.power_gain);
+    }
+
+    #[test]
+    fn single_pll_stalls_dual_does_not() {
+        let t = bursty(&BurstyConfig { steps: 300, ..Default::default() }).loads;
+        let mk = |dual| {
+            let cfg = PlatformConfig { dual_pll: dual, ..Default::default() };
+            let mut p = build_platform("tabla", cfg, Policy::Dvfs(Mode::Proposed)).unwrap();
+            p.run(&t)
+        };
+        let dual = mk(true);
+        let single = mk(false);
+        assert_eq!(dual.stalled_us, 0.0);
+        assert!(single.stalled_us > 0.0, "single PLL must stall on retune");
+        // The shadow PLL buys zero stall at a small continuous power cost
+        // (Eq. 4/5); it must not cost more than ~10% of the gain here.
+        assert!(dual.power_gain > 0.90 * single.power_gain);
+    }
+
+    #[test]
+    fn frequency_follows_workload() {
+        let loads: Vec<f64> = (0..100).map(|i| if i < 50 { 0.2 } else { 0.9 }).collect();
+        let mut p = build_platform(
+            "tabla",
+            PlatformConfig { warmup_steps: 5, ..Default::default() },
+            Policy::Dvfs(Mode::Proposed),
+        )
+        .unwrap();
+        let r = p.run(&loads);
+        let early: f64 = r.records[20..45].iter().map(|x| x.freq_ratio).sum::<f64>() / 25.0;
+        let late: f64 = r.records[70..95].iter().map(|x| x.freq_ratio).sum::<f64>() / 25.0;
+        assert!(early < 0.5, "low-load frequency ratio {early}");
+        assert!(late > 0.8, "high-load frequency ratio {late}");
+    }
+
+    #[test]
+    fn voltages_follow_frequency() {
+        let t = test_trace();
+        let r = sim(Policy::Dvfs(Mode::Proposed), &t);
+        // Steps at low frequency must not use higher voltage than steps at
+        // high frequency (spot-check the extremes).
+        let lo = r
+            .records
+            .iter()
+            .filter(|x| x.freq_ratio < 0.3)
+            .map(|x| x.vcore)
+            .fold(0.0, f64::max);
+        let hi = r
+            .records
+            .iter()
+            .filter(|x| x.freq_ratio > 0.9)
+            .map(|x| x.vcore)
+            .fold(0.0, f64::max);
+        if lo > 0.0 && hi > 0.0 {
+            assert!(lo <= hi + 1e-9, "vcore lo {lo} vs hi {hi}");
+        }
+    }
+
+    #[test]
+    fn build_platform_rejects_unknown() {
+        assert!(build_platform("nope", PlatformConfig::default(), Policy::NominalStatic).is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! PLL models (paper §IV.B, §V "PLL Overhead").
+//!
+//! Reprogramming a PLL through its Reconfiguration Port de-asserts the
+//! Lock signal for up to 100 µs. With a single PLL the fabric must stall
+//! until lock; with two PLLs the shadow is programmed during the previous
+//! step and a glitchless mux swaps clocks at the step edge (Fig. 9c), so
+//! retunes cost no stall time — at the price of a second PLL's power
+//! (Eq. 4/5 decide when that trade is worth it; for τ ≳ 2 ms it always is).
+
+/// Dual-PLL bank: `program` targets the shadow; the swap happens at the
+/// next `tick_us` (step edge) if the shadow has locked.
+#[derive(Clone, Debug)]
+pub struct DualPll {
+    active_mhz: f64,
+    shadow_mhz: f64,
+    shadow_lock_remaining_us: f64,
+    lock_us: f64,
+    retunes: usize,
+}
+
+impl DualPll {
+    pub fn new(f_mhz: f64, lock_us: f64) -> Self {
+        DualPll {
+            active_mhz: f_mhz,
+            shadow_mhz: f_mhz,
+            shadow_lock_remaining_us: 0.0,
+            lock_us,
+            retunes: 0,
+        }
+    }
+
+    pub fn freq_mhz(&self) -> f64 {
+        self.active_mhz
+    }
+
+    pub fn retunes(&self) -> usize {
+        self.retunes
+    }
+
+    /// Program the shadow PLL for the next step.
+    pub fn program(&mut self, f_mhz: f64) {
+        if (f_mhz - self.shadow_mhz).abs() > 1e-9 {
+            self.shadow_mhz = f_mhz;
+            self.shadow_lock_remaining_us = self.lock_us;
+            self.retunes += 1;
+        }
+    }
+
+    /// Advance one step of `dt_us`. Returns stall time (always 0 for the
+    /// dual scheme as long as τ ≫ lock time, asserted here).
+    pub fn tick_us(&mut self, dt_us: f64) -> f64 {
+        debug_assert!(dt_us >= self.lock_us, "step shorter than PLL lock time");
+        // Shadow locks during the step, swap at the edge.
+        self.shadow_lock_remaining_us = (self.shadow_lock_remaining_us - dt_us).max(0.0);
+        if self.shadow_lock_remaining_us <= 0.0 {
+            self.active_mhz = self.shadow_mhz;
+        }
+        0.0
+    }
+}
+
+/// Single-PLL: reprogramming stalls the fabric for the lock time at the
+/// start of the next step (Eq. 4's overhead).
+#[derive(Clone, Debug)]
+pub struct SinglePll {
+    freq_mhz: f64,
+    pending_mhz: Option<f64>,
+    lock_us: f64,
+    total_stall_us: f64,
+    retunes: usize,
+}
+
+impl SinglePll {
+    pub fn new(f_mhz: f64, lock_us: f64) -> Self {
+        SinglePll {
+            freq_mhz: f_mhz,
+            pending_mhz: None,
+            lock_us,
+            total_stall_us: 0.0,
+            retunes: 0,
+        }
+    }
+
+    pub fn freq_mhz(&self) -> f64 {
+        self.freq_mhz
+    }
+
+    pub fn total_stall_us(&self) -> f64 {
+        self.total_stall_us
+    }
+
+    pub fn retunes(&self) -> usize {
+        self.retunes
+    }
+
+    pub fn program(&mut self, f_mhz: f64) {
+        if (f_mhz - self.freq_mhz).abs() > 1e-9 {
+            self.pending_mhz = Some(f_mhz);
+        }
+    }
+
+    /// Advance one step; returns the stall time consumed by locking.
+    pub fn tick_us(&mut self, dt_us: f64) -> f64 {
+        if let Some(f) = self.pending_mhz.take() {
+            self.freq_mhz = f;
+            self.retunes += 1;
+            let stall = self.lock_us.min(dt_us);
+            self.total_stall_us += stall;
+            stall
+        } else {
+            0.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dual_pll_swaps_without_stall() {
+        let mut p = DualPll::new(100.0, 100.0);
+        p.program(50.0);
+        assert_eq!(p.freq_mhz(), 100.0, "swap waits for the step edge");
+        let stall = p.tick_us(1_000_000.0);
+        assert_eq!(stall, 0.0);
+        assert_eq!(p.freq_mhz(), 50.0);
+        assert_eq!(p.retunes(), 1);
+    }
+
+    #[test]
+    fn dual_pll_no_retune_for_same_freq() {
+        let mut p = DualPll::new(100.0, 100.0);
+        p.program(100.0);
+        p.tick_us(1_000_000.0);
+        assert_eq!(p.retunes(), 0);
+    }
+
+    #[test]
+    fn single_pll_accumulates_stall() {
+        let mut p = SinglePll::new(100.0, 100.0);
+        p.program(80.0);
+        let s1 = p.tick_us(1_000_000.0);
+        assert_eq!(s1, 100.0);
+        assert_eq!(p.freq_mhz(), 80.0);
+        p.program(60.0);
+        p.tick_us(1_000_000.0);
+        assert_eq!(p.total_stall_us(), 200.0);
+        assert_eq!(p.retunes(), 2);
+        // No pending change, no stall.
+        assert_eq!(p.tick_us(1_000_000.0), 0.0);
+    }
+}

@@ -1,0 +1,444 @@
+//! Device-level power model — the VPR-power/COFFE substitute (DESIGN.md S5).
+//!
+//! Aggregates per-resource dynamic and static power at arbitrary rail
+//! voltages and clock frequency:
+//!
+//! * dynamic: `count · activity · E_toggle(class) · dyn_scale(v) · f`
+//! * static:  `count · P_leak(class) · static_scale(v) · temp_factor`,
+//!   for **all** device resources — the used design plus the idle fabric
+//!   the oversized (I/O-bound) device mapping strands, which is exactly
+//!   the leakage the paper's Vcore/Vbram scaling attacks.
+//!
+//! The model also derives the operating-point parameters the optimizer and
+//! the AOT'd Voltage Selector consume: `beta` (BRAM share of total power,
+//! Eq. 3), `gamma_l/gamma_m` (dynamic fraction per rail) and the rail-level
+//! delay/power tables (`RailTables`) sampled on the DC-DC grid.
+
+use crate::arch::{BenchmarkSpec, Device, DeviceFamily};
+use crate::chars::{CharLibrary, ResourceClass};
+use crate::sta::PathComposition;
+
+/// Absolute calibration: per-unit power at nominal voltage, 25 °C, and
+/// `f_ref_mhz`. Tuned so a fully-utilized large device draws ~20 W (paper
+/// §V: "the fully utilized FPGA power consumption is around 20W").
+#[derive(Clone, Copy, Debug)]
+pub struct PowerParams {
+    pub f_ref_mhz: f64,
+    /// Dynamic energy proxy: W at f_ref per unit at activity 1.0.
+    pub lut_dyn_w: f64,
+    pub route_seg_dyn_w: f64,
+    pub bram_dyn_w: f64,
+    pub dsp_dyn_w: f64,
+    /// Static leakage per unit at nominal voltage and 25 °C.
+    pub lut_static_w: f64,
+    pub route_mux_static_w: f64,
+    pub bram_static_w: f64,
+    pub dsp_static_w: f64,
+    /// M144K blocks count as this many M9K-equivalents.
+    pub m144k_factor: f64,
+    /// Per-PLL power. The paper's Eq. 4/5 worked example uses 0.1 W
+    /// against a 20 W fully-utilized device; boards here span 0.8-20 W,
+    /// so the default is a typical 20 mW PLL to keep the overhead ratio
+    /// faithful (benches/pll_overhead.rs re-runs Eq. 4/5 with the paper's
+    /// own constants).
+    pub pll_w: f64,
+}
+
+impl Default for PowerParams {
+    fn default() -> Self {
+        PowerParams {
+            // Fitted jointly against Table II of the paper (see
+            // DESIGN.md §6 and EXPERIMENTS.md: least-squares over the five
+            // benchmarks' prop/core-only/bram-only gains with the stripes
+            // device anchored at ~20 W).
+            f_ref_mhz: 100.0,
+            lut_dyn_w: 6.845e-4,
+            route_seg_dyn_w: 2.875e-4,
+            bram_dyn_w: 4.553e-2,
+            dsp_dyn_w: 3.0e-3,
+            lut_static_w: 4.911e-7,
+            route_mux_static_w: 9.822e-8,
+            bram_static_w: 4.558e-5,
+            dsp_static_w: 0.5e-3,
+            m144k_factor: 8.0,
+            pll_w: 0.01,
+        }
+    }
+}
+
+/// Power split by rail and kind (watts).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PowerBreakdown {
+    pub core_dyn_w: f64,
+    pub core_static_w: f64,
+    pub bram_dyn_w: f64,
+    pub bram_static_w: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total_w(&self) -> f64 {
+        self.core_dyn_w + self.core_static_w + self.bram_dyn_w + self.bram_static_w
+    }
+
+    /// Eq. (3)'s `beta`: BRAM-rail share of total power.
+    pub fn beta(&self) -> f64 {
+        let t = self.total_w();
+        if t <= 0.0 {
+            0.0
+        } else {
+            (self.bram_dyn_w + self.bram_static_w) / t
+        }
+    }
+
+    /// Dynamic fraction of the core rail.
+    pub fn gamma_l(&self) -> f64 {
+        let t = self.core_dyn_w + self.core_static_w;
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.core_dyn_w / t
+        }
+    }
+
+    /// Dynamic fraction of the BRAM rail.
+    pub fn gamma_m(&self) -> f64 {
+        let t = self.bram_dyn_w + self.bram_static_w;
+        if t <= 0.0 {
+            0.0
+        } else {
+            self.bram_dyn_w / t
+        }
+    }
+}
+
+/// Operating-point parameters for the Eq. (1)-(3) models.
+#[derive(Clone, Copy, Debug)]
+pub struct OperatingParams {
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma_l: f64,
+    pub gamma_m: f64,
+}
+
+/// Rail-level tables on the DC-DC grid (index 0 = nominal), the input
+/// format of both the native optimizer and the AOT Voltage Selector.
+#[derive(Clone, Debug)]
+pub struct RailTables {
+    /// Core-rail delay scale, CP-composition-weighted (logic/routing/DSP).
+    pub dl: Vec<f64>,
+    /// BRAM delay scale.
+    pub dm: Vec<f64>,
+    pub pl_dyn: Vec<f64>,
+    pub pl_st: Vec<f64>,
+    pub pm_dyn: Vec<f64>,
+    pub pm_st: Vec<f64>,
+    pub op: OperatingParams,
+}
+
+/// Resolved design-on-device power model for one benchmark.
+#[derive(Clone, Debug)]
+pub struct DesignPower {
+    pub spec: &'static BenchmarkSpec,
+    pub device: Device,
+    pub chars: CharLibrary,
+    pub params: PowerParams,
+    used_luts: f64,
+    used_route_segs: f64,
+    used_brams: f64,
+    used_dsps: f64,
+    device_luts: f64,
+    device_route_muxes: f64,
+    device_brams: f64,
+    device_dsps: f64,
+}
+
+impl DesignPower {
+    /// Map the benchmark onto the VTR-style minimum custom device (the
+    /// paper's flow). Use [`DesignPower::from_spec_on_device`] to pin a
+    /// specific family device instead.
+    pub fn from_spec(
+        spec: &'static BenchmarkSpec,
+        family: &DeviceFamily,
+        chars: CharLibrary,
+        params: PowerParams,
+    ) -> Result<Self, String> {
+        let device = family.vtr_min_device(&spec.utilization());
+        Self::from_spec_on_device(spec, family, device, chars, params)
+    }
+
+    /// Same, on an explicitly chosen device.
+    pub fn from_spec_on_device(
+        spec: &'static BenchmarkSpec,
+        family: &DeviceFamily,
+        device: Device,
+        chars: CharLibrary,
+        params: PowerParams,
+    ) -> Result<Self, String> {
+        let u = spec.utilization();
+        if device.labs < u.labs || device.m9ks < u.m9ks || device.m144ks < u.m144ks {
+            return Err(format!("{} does not fit device {}", spec.name, device.name));
+        }
+        let used_luts = (spec.labs * family.luts_per_lab) as f64;
+        Ok(DesignPower {
+            spec,
+            chars,
+            params,
+            used_luts,
+            // Average routed segments per LUT fan-in net (~3.2 matches the
+            // synthetic generator's expectation).
+            used_route_segs: used_luts * 3.2,
+            used_brams: spec.m9ks as f64 + spec.m144ks as f64 * params.m144k_factor,
+            used_dsps: spec.dsps as f64,
+            device_luts: device.luts(family) as f64,
+            device_route_muxes: device.route_muxes() as f64,
+            device_brams: device.m9ks as f64 + device.m144ks as f64 * params.m144k_factor,
+            device_dsps: device.dsps as f64,
+            device,
+        })
+    }
+
+    /// Power at the given rail voltages and clock (used resources toggle;
+    /// the whole device leaks).
+    pub fn breakdown(&self, vcore: f64, vbram: f64, f_mhz: f64) -> PowerBreakdown {
+        let c = &self.chars;
+        let p = &self.params;
+        let act = self.spec.activity;
+        let fr = f_mhz / p.f_ref_mhz;
+        let tleak = c.temp_leak_factor();
+
+        let dyn_w = |class: ResourceClass, units: f64, unit_w: f64, v: f64| {
+            units * act * unit_w * c.dyn_scale(class, v) * fr
+        };
+        let st_w = |class: ResourceClass, units: f64, unit_w: f64, v: f64| {
+            units * unit_w * c.static_scale(class, v) * tleak
+        };
+
+        PowerBreakdown {
+            core_dyn_w: dyn_w(ResourceClass::Logic, self.used_luts, p.lut_dyn_w, vcore)
+                + dyn_w(ResourceClass::Routing, self.used_route_segs, p.route_seg_dyn_w, vcore)
+                + dyn_w(ResourceClass::Dsp, self.used_dsps, p.dsp_dyn_w, vcore),
+            core_static_w: st_w(ResourceClass::Logic, self.device_luts, p.lut_static_w, vcore)
+                + st_w(
+                    ResourceClass::Routing,
+                    self.device_route_muxes,
+                    p.route_mux_static_w,
+                    vcore,
+                )
+                + st_w(ResourceClass::Dsp, self.device_dsps, p.dsp_static_w, vcore),
+            bram_dyn_w: dyn_w(ResourceClass::Bram, self.used_brams, p.bram_dyn_w, vbram),
+            bram_static_w: st_w(ResourceClass::Bram, self.device_brams, p.bram_static_w, vbram),
+        }
+    }
+
+    /// Nominal-voltage power at the benchmark's Table I frequency.
+    pub fn nominal(&self) -> PowerBreakdown {
+        self.breakdown(
+            self.chars.logic.v_nom,
+            self.chars.bram.v_nom,
+            self.spec.freq_mhz,
+        )
+    }
+
+    /// Eq. (1)-(3) operating-point parameters from a critical-path
+    /// composition (STA) plus this power model.
+    pub fn operating_params(&self, cp: &PathComposition) -> OperatingParams {
+        let nom = self.nominal();
+        OperatingParams {
+            alpha: cp.alpha(),
+            beta: nom.beta(),
+            gamma_l: nom.gamma_l(),
+            gamma_m: nom.gamma_m(),
+        }
+    }
+
+    /// Rail-level tables on the DC-DC grid for this design.
+    ///
+    /// `dl[i]` weights each core-rail class by its share of the CP's core
+    /// delay; `pl_*[i]` weight by the class's share of the rail's power.
+    pub fn rail_tables(&self, cp: &PathComposition) -> RailTables {
+        let c = &self.chars;
+        let p = &self.params;
+        let grid = c.grid();
+        let core = cp.core_ns().max(1e-12);
+        let (wl, wr, wd) = (
+            cp.logic_ns / core,
+            cp.routing_ns / core,
+            cp.dsp_ns / core,
+        );
+
+        let dl: Vec<f64> = grid
+            .vcore
+            .iter()
+            .map(|&v| {
+                wl * c.delay_scale(ResourceClass::Logic, v)
+                    + wr * c.delay_scale(ResourceClass::Routing, v)
+                    + wd * c.delay_scale(ResourceClass::Dsp, v)
+            })
+            .collect();
+        let dm: Vec<f64> = grid
+            .vbram
+            .iter()
+            .map(|&v| c.delay_scale(ResourceClass::Bram, v))
+            .collect();
+
+        // Core-rail power weights (dynamic and static separately).
+        let act = self.spec.activity;
+        let dyn_parts = [
+            (ResourceClass::Logic, self.used_luts * act * p.lut_dyn_w),
+            (ResourceClass::Routing, self.used_route_segs * act * p.route_seg_dyn_w),
+            (ResourceClass::Dsp, self.used_dsps * act * p.dsp_dyn_w),
+        ];
+        let st_parts = [
+            (ResourceClass::Logic, self.device_luts * p.lut_static_w),
+            (ResourceClass::Routing, self.device_route_muxes * p.route_mux_static_w),
+            (ResourceClass::Dsp, self.device_dsps * p.dsp_static_w),
+        ];
+        let weighted = |parts: &[(ResourceClass, f64)], f: &dyn Fn(ResourceClass, f64) -> f64, v: f64| {
+            let total: f64 = parts.iter().map(|(_, w)| w).sum();
+            parts.iter().map(|&(cl, w)| w / total.max(1e-18) * f(cl, v)).sum::<f64>()
+        };
+        let dscale = |cl: ResourceClass, v: f64| c.dyn_scale(cl, v);
+        let sscale = |cl: ResourceClass, v: f64| c.static_scale(cl, v);
+
+        let pl_dyn: Vec<f64> =
+            grid.vcore.iter().map(|&v| weighted(&dyn_parts, &dscale, v)).collect();
+        let pl_st: Vec<f64> =
+            grid.vcore.iter().map(|&v| weighted(&st_parts, &sscale, v)).collect();
+        let pm_dyn: Vec<f64> = grid
+            .vbram
+            .iter()
+            .map(|&v| c.dyn_scale(ResourceClass::Bram, v))
+            .collect();
+        let pm_st: Vec<f64> = grid
+            .vbram
+            .iter()
+            .map(|&v| c.static_scale(ResourceClass::Bram, v))
+            .collect();
+
+        RailTables {
+            dl,
+            dm,
+            pl_dyn,
+            pl_st,
+            pm_dyn,
+            pm_st,
+            op: self.operating_params(cp),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{DeviceFamily, TABLE1};
+    use crate::netlist::gen::{generate, GenConfig};
+    use crate::sta::{analyze, DelayParams};
+
+    fn dp(name: &str) -> DesignPower {
+        DesignPower::from_spec(
+            BenchmarkSpec::by_name(name).unwrap(),
+            &DeviceFamily::stratix_iv(),
+            CharLibrary::stratix_iv_22nm(),
+            PowerParams::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn total_power_is_realistic() {
+        // Large I/O-bound designs should draw single-to-low-double-digit
+        // watts (paper: fully utilized FPGA ~ 20 W).
+        for spec in TABLE1 {
+            let d = dp(spec.name);
+            let w = d.nominal().total_w();
+            assert!(
+                (0.3..30.0).contains(&w),
+                "{}: nominal power {w:.2} W out of band",
+                spec.name
+            );
+        }
+        // Stripes maps to the largest device: it must be the hungriest.
+        let stripes = dp("stripes").nominal().total_w();
+        let tabla = dp("tabla").nominal().total_w();
+        assert!(stripes > 4.0 * tabla, "stripes {stripes:.2} vs tabla {tabla:.2}");
+    }
+
+    #[test]
+    fn beta_ordering_matches_paper() {
+        // Paper Table II: bram-only scaling is strong on Tabla/DnnWeaver
+        // (high BRAM power share) and weak on DianNao/Stripes/Proteus.
+        let beta = |n: &str| dp(n).nominal().beta();
+        for strong in ["tabla", "dnnweaver"] {
+            for weak in ["diannao", "stripes", "proteus"] {
+                assert!(
+                    beta(strong) > beta(weak),
+                    "beta({strong})={:.3} should exceed beta({weak})={:.3}",
+                    beta(strong),
+                    beta(weak)
+                );
+            }
+        }
+        // The strong ones sit near or above the paper's "~25% of device
+        // power" observation [28]; Table II calibration puts Tabla higher.
+        assert!((0.25..0.70).contains(&beta("tabla")), "{}", beta("tabla"));
+    }
+
+    #[test]
+    fn dynamic_scales_linearly_with_frequency() {
+        let d = dp("tabla");
+        let a = d.breakdown(0.8, 0.95, 100.0);
+        let b = d.breakdown(0.8, 0.95, 50.0);
+        assert!((a.core_dyn_w / b.core_dyn_w - 2.0).abs() < 1e-9);
+        assert!((a.core_static_w - b.core_static_w).abs() < 1e-12);
+    }
+
+    #[test]
+    fn static_drops_with_voltage() {
+        let d = dp("diannao");
+        let hi = d.breakdown(0.8, 0.95, 83.0);
+        let lo = d.breakdown(0.65, 0.8, 83.0);
+        // Core leakage slope is gentle (Table II calibration); BRAM's is
+        // steep (the paper's >75%-by-0.80V claim).
+        assert!(lo.core_static_w < 0.80 * hi.core_static_w);
+        assert!(lo.bram_static_w < 0.35 * hi.bram_static_w);
+        assert!(lo.total_w() < hi.total_w());
+    }
+
+    #[test]
+    fn rail_tables_are_consistent() {
+        let d = dp("tabla");
+        let net = generate(d.spec, &GenConfig { scale: 0.05, seed: 2019, luts_per_lab: 10 });
+        let r = analyze(&net, &DelayParams::default(), 8).unwrap();
+        let t = d.rail_tables(&r.cp);
+        assert_eq!(t.dl.len(), 13);
+        assert_eq!(t.dm.len(), 19);
+        // Normalized at nominal (index 0).
+        for series in [&t.dl, &t.dm, &t.pl_dyn, &t.pl_st, &t.pm_dyn, &t.pm_st] {
+            assert!((series[0] - 1.0).abs() < 1e-9);
+        }
+        // Delay tables rise, power tables fall as voltage descends.
+        assert!(t.dl.windows(2).all(|w| w[1] >= w[0] - 1e-9));
+        assert!(t.dm.windows(2).all(|w| w[1] >= w[0] - 1e-9));
+        assert!(t.pl_dyn.windows(2).all(|w| w[1] <= w[0] + 1e-9));
+        assert!(t.pm_st.windows(2).all(|w| w[1] <= w[0] + 1e-9));
+        // Operating params in range.
+        assert!((0.0..1.0).contains(&t.op.beta));
+        assert!((0.0..=1.0).contains(&t.op.gamma_l));
+        assert!(t.op.alpha > 0.05);
+    }
+
+    #[test]
+    fn eq5_two_pll_condition_holds() {
+        // Paper §V: P_design * t_lock > P_PLL * tau fails for tau >= 2 ms
+        // at 20 W / 0.1 W / 10 us — i.e. two PLLs win for practical tau.
+        let p_design: f64 = 20.0;
+        let p_pll: f64 = 0.1;
+        let t_lock: f64 = 10e-6;
+        let tau: f64 = 2e-3;
+        let one_pll = p_design * t_lock + p_pll * (tau + t_lock);
+        let two_pll = 2.0 * p_pll * tau;
+        assert!((one_pll - two_pll).abs() / two_pll < 0.55);
+        let tau = 1.0;
+        assert!(p_design * t_lock + p_pll * (tau + t_lock) < 2.0 * p_pll * tau);
+    }
+}

@@ -1,0 +1,84 @@
+//! Text tables and CSV emission for experiments and benches.
+
+/// Render an aligned text table. `rows` include the header as row 0.
+pub fn table(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows.iter().map(Vec::len).max().unwrap();
+    let mut width = vec![0usize; cols];
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            width[i] = width[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    for (ri, row) in rows.iter().enumerate() {
+        for (i, cell) in row.iter().enumerate() {
+            if i > 0 {
+                out.push_str("  ");
+            }
+            out.push_str(&format!("{cell:<w$}", w = width[i]));
+        }
+        out.push('\n');
+        if ri == 0 {
+            for (i, w) in width.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&"-".repeat(*w));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Render rows as CSV (no quoting needed for our numeric content).
+pub fn csv(rows: &[Vec<String>]) -> String {
+    rows.iter()
+        .map(|r| r.join(","))
+        .collect::<Vec<_>>()
+        .join("\n")
+        + "\n"
+}
+
+/// Write results under `results/<name>` (directory created on demand).
+pub fn write_results(name: &str, content: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+pub fn row<const N: usize>(cells: [&str; N]) -> Vec<String> {
+    cells.iter().map(|s| s.to_string()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = table(&[
+            row(["name", "gain"]),
+            row(["tabla", "4.1x"]),
+            row(["dnnweaver-long", "4.4x"]),
+        ]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[1].starts_with("----"));
+        // Columns align: "gain" starts at the same offset everywhere.
+        let off = lines[0].find("gain").unwrap();
+        assert_eq!(lines[2].find("4.1x").unwrap(), off);
+    }
+
+    #[test]
+    fn csv_rows() {
+        let c = csv(&[row(["a", "b"]), row(["1", "2"])]);
+        assert_eq!(c, "a,b\n1,2\n");
+    }
+}

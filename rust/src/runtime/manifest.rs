@@ -1,0 +1,256 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! rust runtime, parsed with the in-repo JSON module.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one argument or result.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(v: &Json) -> Result<Self> {
+        let shape = v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = v
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// Golden-data pointers for DNN artifacts.
+#[derive(Clone, Debug)]
+pub struct GoldenMeta {
+    pub params_bin: String,
+    pub golden_bin: String,
+    pub y_first8: Vec<f64>,
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: String,
+    pub args: Vec<TensorSpec>,
+    pub results: Vec<TensorSpec>,
+    pub kind: String,
+    pub golden: Option<GoldenMeta>,
+    /// Raw numeric metadata (nv, nm, batch, v_step, ...).
+    meta_nums: BTreeMap<String, f64>,
+}
+
+impl ArtifactMeta {
+    pub fn meta_f64(&self, key: &str) -> Result<f64> {
+        self.meta_nums
+            .get(key)
+            .copied()
+            .ok_or_else(|| anyhow!("{}: missing meta {key}", self.name))
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        let v = self.meta_f64(key)?;
+        if v < 0.0 || v.fract() != 0.0 {
+            bail!("{}: meta {key} = {v} is not a usize", self.name);
+        }
+        Ok(v as usize)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub version: usize,
+    pub jax_version: String,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest: missing version"))?;
+        if version != 1 {
+            bail!("manifest: unsupported version {version}");
+        }
+        let jax_version = root
+            .get("jax")
+            .and_then(Json::as_str)
+            .unwrap_or("unknown")
+            .to_string();
+        let mut artifacts = BTreeMap::new();
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest: missing artifacts"))?;
+        for (name, v) in arts {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                v.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}: missing {key}"))?
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let meta = v.get("meta").ok_or_else(|| anyhow!("{name}: missing meta"))?;
+            let mut meta_nums = BTreeMap::new();
+            if let Some(obj) = meta.as_obj() {
+                for (k, mv) in obj {
+                    if let Some(x) = mv.as_f64() {
+                        meta_nums.insert(k.clone(), x);
+                    }
+                }
+            }
+            let golden = meta.get("golden").map(|g| -> Result<GoldenMeta> {
+                Ok(GoldenMeta {
+                    params_bin: g
+                        .get("params_bin")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: golden.params_bin"))?
+                        .to_string(),
+                    golden_bin: g
+                        .get("golden_bin")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: golden.golden_bin"))?
+                        .to_string(),
+                    y_first8: g
+                        .get("y_first8")
+                        .and_then(Json::as_arr)
+                        .map(|a| a.iter().filter_map(Json::as_f64).collect())
+                        .unwrap_or_default(),
+                })
+            });
+            let golden = match golden {
+                Some(Ok(g)) => Some(g),
+                Some(Err(e)) => return Err(e),
+                None => None,
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    path: v
+                        .get("path")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: missing path"))?
+                        .to_string(),
+                    args: parse_specs("args")?,
+                    results: parse_specs("results")?,
+                    kind: meta
+                        .get("kind")
+                        .and_then(Json::as_str)
+                        .unwrap_or("unknown")
+                        .to_string(),
+                    golden,
+                    meta_nums,
+                },
+            );
+        }
+        Ok(Manifest { version, jax_version, artifacts })
+    }
+
+    /// Names of DNN variants present (sorted).
+    pub fn dnn_variants(&self) -> Vec<String> {
+        self.artifacts
+            .keys()
+            .filter_map(|k| k.strip_prefix("dnn_").map(str::to_string))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "jax": "0.8.2",
+      "artifacts": {
+        "voltage_opt_prop": {
+          "path": "voltage_opt_prop.hlo.txt",
+          "args": [
+            {"shape": [13], "dtype": "f32"},
+            {"shape": [64], "dtype": "f32"}
+          ],
+          "results": [
+            {"shape": [64], "dtype": "i32"},
+            {"shape": [64], "dtype": "f32"}
+          ],
+          "meta": {"kind": "voltage_opt", "nv": 13, "nm": 19, "batch": 64,
+                   "v_step": 0.025, "vcore_nom": 0.8, "vbram_nom": 0.95}
+        },
+        "dnn_tabla": {
+          "path": "dnn_tabla.hlo.txt",
+          "args": [{"shape": [16, 128], "dtype": "f32"}],
+          "results": [{"shape": [16, 64], "dtype": "f32"}],
+          "meta": {"kind": "dnn", "batch": 16,
+                   "golden": {"params_bin": "p.bin", "golden_bin": "g.bin",
+                              "y_first8": [0.1, -0.2]}}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        let v = &m.artifacts["voltage_opt_prop"];
+        assert_eq!(v.args.len(), 2);
+        assert_eq!(v.args[0].shape, vec![13]);
+        assert_eq!(v.args[0].elements(), 13);
+        assert_eq!(v.meta_usize("batch").unwrap(), 64);
+        assert!((v.meta_f64("v_step").unwrap() - 0.025).abs() < 1e-12);
+        assert!(v.golden.is_none());
+        let d = &m.artifacts["dnn_tabla"];
+        assert_eq!(d.kind, "dnn");
+        let g = d.golden.as_ref().unwrap();
+        assert_eq!(g.params_bin, "p.bin");
+        assert_eq!(g.y_first8.len(), 2);
+        assert_eq!(m.dnn_variants(), vec!["tabla".to_string()]);
+    }
+
+    #[test]
+    fn rejects_bad_version_and_missing_fields() {
+        assert!(Manifest::parse(r#"{"version": 2, "artifacts": {}}"#).is_err());
+        assert!(Manifest::parse(r#"{"artifacts": {}}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+        assert!(Manifest::parse(
+            r#"{"version":1,"artifacts":{"x":{"args":[],"results":[],"meta":{}}}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn meta_usize_validation() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let v = &m.artifacts["voltage_opt_prop"];
+        assert!(v.meta_usize("v_step").is_err()); // fractional
+        assert!(v.meta_usize("missing").is_err());
+    }
+}

@@ -1,0 +1,410 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts and execute them
+//! on the request path (DESIGN.md S10). Python never runs here.
+//!
+//! Flow (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO *text* is the interchange format —
+//! jax ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactMeta, Manifest, TensorSpec};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::power::RailTables;
+use crate::vscale::Mode;
+
+/// A typed host tensor (f32 or i32), row-major.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            Tensor::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match self {
+            Tensor::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// One compiled artifact bound to the PJRT client.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A device-resident tensor (pre-uploaded argument).
+pub struct DeviceTensor {
+    buf: xla::PjRtBuffer,
+}
+
+impl Executable {
+    /// Execute with host tensors; validates shapes/dtypes against the
+    /// manifest and unpacks the result tuple.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.meta.args.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.meta.name,
+                self.meta.args.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (t, spec)) in inputs.iter().zip(&self.meta.args).enumerate() {
+            if t.len() != spec.elements() {
+                bail!(
+                    "{} arg {i}: expected {} elements ({:?}), got {}",
+                    self.meta.name,
+                    spec.elements(),
+                    spec.shape,
+                    t.len()
+                );
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (t, spec.dtype.as_str()) {
+                (Tensor::F32(v), "f32") => xla::Literal::vec1(v).reshape(&dims)?,
+                (Tensor::I32(v), "i32") => xla::Literal::vec1(v).reshape(&dims)?,
+                (t, d) => bail!("{} arg {i}: dtype mismatch {t:?} vs {d}", self.meta.name),
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        self.unpack(result)
+    }
+
+    /// Execute with pre-uploaded device buffers (zero host->device copies
+    /// on the hot path; see EXPERIMENTS.md §Perf-L3).
+    pub fn run_device(&self, inputs: &[&DeviceTensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.meta.args.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.meta.name,
+                self.meta.args.len(),
+                inputs.len()
+            );
+        }
+        let bufs: Vec<&xla::PjRtBuffer> = inputs.iter().map(|t| &t.buf).collect();
+        let result = self.exe.execute_b::<&xla::PjRtBuffer>(&bufs)?[0][0]
+            .to_literal_sync()?;
+        self.unpack(result)
+    }
+
+    fn unpack(&self, result: xla::Literal) -> Result<Vec<Tensor>> {
+        // Artifacts are lowered with return_tuple=True.
+        let parts = result.to_tuple()?;
+        if parts.len() != self.meta.results.len() {
+            bail!(
+                "{}: expected {} results, got {}",
+                self.meta.name,
+                self.meta.results.len(),
+                parts.len()
+            );
+        }
+        parts
+            .into_iter()
+            .zip(&self.meta.results)
+            .map(|(lit, spec)| {
+                Ok(match spec.dtype.as_str() {
+                    "f32" => Tensor::F32(lit.to_vec::<f32>()?),
+                    "i32" => Tensor::I32(lit.to_vec::<i32>()?),
+                    other => bail!("unsupported result dtype {other}"),
+                })
+            })
+            .collect()
+    }
+}
+
+/// The engine: one PJRT CPU client + a compile cache over the manifest.
+pub struct Engine {
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Engine {
+    /// Open an artifacts directory produced by `make artifacts`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { dir, manifest, client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&meta.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let executable = std::sync::Arc::new(Executable { meta, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+
+    /// Upload an f32 tensor to the device once (for loop-invariant args).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<DeviceTensor> {
+        Ok(DeviceTensor { buf: self.client.buffer_from_host_buffer(data, dims, None)? })
+    }
+
+    /// Read a side binary (params/golden) as f32 little-endian.
+    pub fn read_f32_bin(&self, rel: &str) -> Result<Vec<f32>> {
+        let bytes = std::fs::read(self.dir.join(rel))
+            .with_context(|| format!("reading {rel}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{rel}: length {} not a multiple of 4", bytes.len());
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// High-level client for the AOT'd Voltage Selector artifacts: pads
+/// operating-point queries to the artifact batch and converts grid
+/// indices back to voltages.
+pub struct VoltageSelectorClient<'a> {
+    engine: &'a Engine,
+}
+
+/// One query row: Eq. (1)-(3) parameters for an operating point.
+#[derive(Clone, Copy, Debug)]
+pub struct OpQuery {
+    pub alpha: f32,
+    pub beta: f32,
+    pub gamma_l: f32,
+    pub gamma_m: f32,
+    pub sw: f32,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpChoice {
+    pub icore: usize,
+    pub ibram: usize,
+    pub vcore: f64,
+    pub vbram: f64,
+    pub power_norm: f64,
+}
+
+impl<'a> VoltageSelectorClient<'a> {
+    pub fn new(engine: &'a Engine) -> Self {
+        VoltageSelectorClient { engine }
+    }
+
+    /// Run the `mode` variant over the given rail tables and queries.
+    pub fn select(
+        &self,
+        mode: Mode,
+        tables: &RailTables,
+        queries: &[OpQuery],
+    ) -> Result<Vec<OpChoice>> {
+        let art = mode
+            .artifact()
+            .ok_or_else(|| anyhow!("mode {mode:?} has no artifact"))?;
+        let exe = self.engine.load(art)?;
+        let meta = &exe.meta;
+        let (nv, nm, batch) = (meta.meta_usize("nv")?, meta.meta_usize("nm")?, meta.meta_usize("batch")?);
+        if tables.dl.len() != nv || tables.dm.len() != nm {
+            bail!(
+                "rail tables ({}, {}) do not match artifact grid ({nv}, {nm})",
+                tables.dl.len(),
+                tables.dm.len()
+            );
+        }
+        if queries.is_empty() {
+            return Ok(vec![]);
+        }
+        let f32v = |xs: &[f64]| Tensor::F32(xs.iter().map(|&x| x as f32).collect());
+        let v_step = meta.meta_f64("v_step")?;
+        let vcore_nom = meta.meta_f64("vcore_nom")?;
+        let vbram_nom = meta.meta_f64("vbram_nom")?;
+
+        let mut out = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(batch) {
+            // Pad the batch with the last query (results discarded).
+            let pad = |f: fn(&OpQuery) -> f32| {
+                let mut v: Vec<f32> = chunk.iter().map(f).collect();
+                v.resize(batch, f(chunk.last().unwrap()));
+                Tensor::F32(v)
+            };
+            let results = exe.run(&[
+                f32v(&tables.dl),
+                f32v(&tables.dm),
+                f32v(&tables.pl_dyn),
+                f32v(&tables.pl_st),
+                f32v(&tables.pm_dyn),
+                f32v(&tables.pm_st),
+                pad(|q| q.alpha),
+                pad(|q| q.beta),
+                pad(|q| q.gamma_l),
+                pad(|q| q.gamma_m),
+                pad(|q| q.sw),
+            ])?;
+            let icore = results[0].as_i32().ok_or_else(|| anyhow!("icore dtype"))?;
+            let ibram = results[1].as_i32().ok_or_else(|| anyhow!("ibram dtype"))?;
+            let power = results[2].as_f32().ok_or_else(|| anyhow!("power dtype"))?;
+            for k in 0..chunk.len() {
+                out.push(OpChoice {
+                    icore: icore[k] as usize,
+                    ibram: ibram[k] as usize,
+                    vcore: vcore_nom - v_step * icore[k] as f64,
+                    vbram: vbram_nom - v_step * ibram[k] as f64,
+                    power_norm: power[k] as f64,
+                });
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// High-level client for a served DNN variant: loads its parameters from
+/// the side binary once and runs inference batches.
+pub struct DnnClient {
+    pub variant: String,
+    exe: std::sync::Arc<Executable>,
+    client: xla::PjRtClient,
+    /// Parameters uploaded once, device-resident for every request batch.
+    param_bufs: Vec<DeviceTensor>,
+    x_dims: Vec<usize>,
+    pub batch: usize,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+impl DnnClient {
+    pub fn new(engine: &Engine, variant: &str) -> Result<Self> {
+        let name = format!("dnn_{variant}");
+        let exe = engine.load(&name)?;
+        let meta = exe.meta.clone();
+        let batch = meta.meta_usize("batch")?;
+        let in_dim = meta.args[0].shape[1];
+        let out_dim = meta.results[0].shape[1];
+
+        // Slice the flat params blob into per-arg tensors (args[1..]).
+        let params_bin = meta
+            .golden
+            .as_ref()
+            .ok_or_else(|| anyhow!("{name}: no params metadata"))?
+            .params_bin
+            .clone();
+        let flat = engine.read_f32_bin(&params_bin)?;
+        let mut param_bufs = Vec::new();
+        let mut off = 0usize;
+        for spec in &meta.args[1..] {
+            let n = spec.elements();
+            if off + n > flat.len() {
+                bail!("{name}: params blob too short");
+            }
+            // Upload once; stays device-resident for the client's lifetime.
+            param_bufs.push(engine.upload_f32(&flat[off..off + n], &spec.shape)?);
+            off += n;
+        }
+        if off != flat.len() {
+            bail!("{name}: params blob has {} trailing floats", flat.len() - off);
+        }
+        Ok(DnnClient {
+            variant: variant.to_string(),
+            exe,
+            client: engine.client.clone(),
+            param_bufs,
+            x_dims: meta.args[0].shape.clone(),
+            batch,
+            in_dim,
+            out_dim,
+        })
+    }
+
+    /// Run one inference batch (x is batch×in_dim, row-major). Only `x`
+    /// crosses the host boundary; parameters are device-resident.
+    pub fn infer(&self, x: &[f32]) -> Result<Vec<f32>> {
+        if x.len() != self.batch * self.in_dim {
+            bail!(
+                "dnn_{}: expected {}x{} input, got {} floats",
+                self.variant,
+                self.batch,
+                self.in_dim,
+                x.len()
+            );
+        }
+        let xbuf = DeviceTensor {
+            buf: self.client.buffer_from_host_buffer(x, &self.x_dims, None)?,
+        };
+        let mut inputs: Vec<&DeviceTensor> = Vec::with_capacity(1 + self.param_bufs.len());
+        inputs.push(&xbuf);
+        inputs.extend(self.param_bufs.iter());
+        let out = self.exe.run_device(&inputs)?;
+        Ok(out[0].as_f32().ok_or_else(|| anyhow!("output dtype"))?.to_vec())
+    }
+
+    /// Verify numerics against the python-side golden x/y.
+    pub fn verify_golden(&self, engine: &Engine) -> Result<f32> {
+        let g = self
+            .exe
+            .meta
+            .golden
+            .as_ref()
+            .ok_or_else(|| anyhow!("no golden metadata"))?;
+        let blob = engine.read_f32_bin(&g.golden_bin)?;
+        let nx = self.batch * self.in_dim;
+        let ny = self.batch * self.out_dim;
+        if blob.len() != nx + ny {
+            bail!("golden blob length {} != {}", blob.len(), nx + ny);
+        }
+        let y = self.infer(&blob[..nx])?;
+        let mut max_err = 0.0f32;
+        for (a, b) in y.iter().zip(&blob[nx..]) {
+            let err = (a - b).abs() / (1.0 + b.abs());
+            max_err = max_err.max(err);
+        }
+        Ok(max_err)
+    }
+}

@@ -1,0 +1,417 @@
+//! Static timing analysis over synthetic netlists — the VTR timing-analyzer
+//! substitute (DESIGN.md S4).
+//!
+//! A single topological pass computes arrival times with per-class,
+//! voltage-dependent delays from the characterization library; backtracking
+//! yields the critical path and its per-class delay decomposition — the
+//! `alpha` parameter of Eq. (1) and the per-class weights the rail-level
+//! delay tables are built from.
+//!
+//! Because scaling `Vcore`/`Vbram` can promote an originally non-critical
+//! path (the paper's §II criticism of Zhao et al.), `analyze` also returns
+//! the top-K endpoint path compositions; the optimizer checks feasibility
+//! against *all* of them, not just the nominal critical path.
+
+use crate::chars::{CharLibrary, ResourceClass};
+use crate::netlist::{Netlist, NodeKind};
+
+/// Absolute delay calibration at nominal voltages (ns). Tuned together
+/// with `arch::benchmarks::TABLE1::cp_logic_depth` so synthetic STA lands
+/// near the paper's Table I Fmax (see `table1_fmax_within_tolerance`).
+#[derive(Clone, Copy, Debug)]
+pub struct DelayParams {
+    pub lut_ns: f64,
+    pub route_seg_ns: f64,
+    pub bram_ns: f64,
+    pub dsp_ns: f64,
+}
+
+impl Default for DelayParams {
+    fn default() -> Self {
+        DelayParams { lut_ns: 0.40, route_seg_ns: 0.20, bram_ns: 2.0, dsp_ns: 2.5 }
+    }
+}
+
+/// Per-class delay scale multipliers (1.0 = nominal voltage).
+#[derive(Clone, Copy, Debug)]
+pub struct DelayScales {
+    pub logic: f64,
+    pub routing: f64,
+    pub bram: f64,
+    pub dsp: f64,
+}
+
+impl DelayScales {
+    pub const NOMINAL: DelayScales =
+        DelayScales { logic: 1.0, routing: 1.0, bram: 1.0, dsp: 1.0 };
+
+    /// Scales at the given rail voltages.
+    pub fn at(chars: &CharLibrary, vcore: f64, vbram: f64) -> Self {
+        DelayScales {
+            logic: chars.delay_scale(ResourceClass::Logic, vcore),
+            routing: chars.delay_scale(ResourceClass::Routing, vcore),
+            bram: chars.delay_scale(ResourceClass::Bram, vbram),
+            dsp: chars.delay_scale(ResourceClass::Dsp, vcore),
+        }
+    }
+}
+
+/// Per-class delay decomposition of one register-to-register path (ns,
+/// at nominal voltage).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PathComposition {
+    pub logic_ns: f64,
+    pub routing_ns: f64,
+    pub bram_ns: f64,
+    pub dsp_ns: f64,
+}
+
+impl PathComposition {
+    pub fn total_ns(&self) -> f64 {
+        self.logic_ns + self.routing_ns + self.bram_ns + self.dsp_ns
+    }
+
+    /// Delay on the core rail (logic + routing + DSP).
+    pub fn core_ns(&self) -> f64 {
+        self.logic_ns + self.routing_ns + self.dsp_ns
+    }
+
+    /// Eq. (1)'s `alpha`: BRAM share of the path relative to core delay.
+    pub fn alpha(&self) -> f64 {
+        if self.core_ns() <= 0.0 {
+            0.0
+        } else {
+            self.bram_ns / self.core_ns()
+        }
+    }
+
+    /// Path delay under per-class scales.
+    pub fn delay_at(&self, s: &DelayScales) -> f64 {
+        self.logic_ns * s.logic
+            + self.routing_ns * s.routing
+            + self.bram_ns * s.bram
+            + self.dsp_ns * s.dsp
+    }
+}
+
+/// STA result at nominal voltage.
+#[derive(Clone, Debug)]
+pub struct TimingReport {
+    pub cp: PathComposition,
+    pub cp_nodes: Vec<u32>,
+    pub fmax_mhz: f64,
+    /// Distinct near-critical path compositions (cp first), for the
+    /// optimizer's multi-path feasibility check.
+    pub top_paths: Vec<PathComposition>,
+}
+
+fn node_class(kind: NodeKind) -> Option<ResourceClass> {
+    match kind {
+        NodeKind::Lut => Some(ResourceClass::Logic),
+        NodeKind::Bram => Some(ResourceClass::Bram),
+        NodeKind::Dsp => Some(ResourceClass::Dsp),
+        NodeKind::Input | NodeKind::Output => None,
+    }
+}
+
+fn node_delay(kind: NodeKind, d: &DelayParams, s: &DelayScales) -> f64 {
+    match kind {
+        NodeKind::Lut => d.lut_ns * s.logic,
+        NodeKind::Bram => d.bram_ns * s.bram,
+        NodeKind::Dsp => d.dsp_ns * s.dsp,
+        NodeKind::Input | NodeKind::Output => 0.0,
+    }
+}
+
+/// Arrival-time pass. Returns (arrival, pred_edge) or an error if the
+/// netlist has a cycle.
+fn arrivals(
+    net: &Netlist,
+    d: &DelayParams,
+    s: &DelayScales,
+) -> Result<(Vec<f64>, Vec<i64>), String> {
+    let n = net.kinds.len();
+    // Fan-out CSR.
+    let mut deg = vec![0u32; n + 1];
+    for e in &net.edges {
+        deg[e.src as usize + 1] += 1;
+    }
+    for i in 0..n {
+        deg[i + 1] += deg[i];
+    }
+    let mut pos = deg.clone();
+    let mut out_edges = vec![0u32; net.edges.len()];
+    let mut indeg = vec![0u32; n];
+    for (ei, e) in net.edges.iter().enumerate() {
+        out_edges[pos[e.src as usize] as usize] = ei as u32;
+        pos[e.src as usize] += 1;
+        indeg[e.dst as usize] += 1;
+    }
+
+    let mut arrival = vec![0.0f64; n];
+    let mut pred = vec![-1i64; n];
+    let mut queue: Vec<u32> = (0..n as u32).filter(|&i| indeg[i as usize] == 0).collect();
+    let mut head = 0;
+    let mut seen = queue.len();
+    while head < queue.len() {
+        let u = queue[head] as usize;
+        head += 1;
+        let leave = arrival[u] + node_delay(net.kinds[u], d, s);
+        for &ei in &out_edges[deg[u] as usize..deg[u + 1] as usize] {
+            let e = &net.edges[ei as usize];
+            let t = leave + e.segments as f64 * d.route_seg_ns * s.routing;
+            let v = e.dst as usize;
+            if t > arrival[v] {
+                arrival[v] = t;
+                pred[v] = ei as i64;
+            }
+            indeg[v] -= 1;
+            if indeg[v] == 0 {
+                queue.push(e.dst);
+                seen += 1;
+            }
+        }
+    }
+    if seen != n {
+        return Err(format!("netlist {} contains a combinational cycle", net.name));
+    }
+    Ok((arrival, pred))
+}
+
+fn backtrack(
+    net: &Netlist,
+    d: &DelayParams,
+    pred: &[i64],
+    endpoint: u32,
+) -> (PathComposition, Vec<u32>) {
+    let mut comp = PathComposition::default();
+    let mut nodes = vec![endpoint];
+    let mut cur = endpoint as usize;
+    while pred[cur] >= 0 {
+        let e = &net.edges[pred[cur] as usize];
+        comp.routing_ns += e.segments as f64 * d.route_seg_ns;
+        let src = e.src as usize;
+        match node_class(net.kinds[src]) {
+            Some(ResourceClass::Logic) => comp.logic_ns += d.lut_ns,
+            Some(ResourceClass::Bram) => comp.bram_ns += d.bram_ns,
+            Some(ResourceClass::Dsp) => comp.dsp_ns += d.dsp_ns,
+            _ => {}
+        }
+        nodes.push(e.src);
+        cur = src;
+    }
+    nodes.reverse();
+    (comp, nodes)
+}
+
+/// Full STA at nominal voltage; `top_k` bounds the near-critical path set.
+pub fn analyze(net: &Netlist, d: &DelayParams, top_k: usize) -> Result<TimingReport, String> {
+    let (arrival, pred) = arrivals(net, d, &DelayScales::NOMINAL)?;
+
+    // Rank endpoints (output nodes) by arrival.
+    let mut endpoints: Vec<u32> = (0..net.kinds.len() as u32)
+        .filter(|&i| net.kinds[i as usize] == NodeKind::Output)
+        .collect();
+    if endpoints.is_empty() {
+        return Err("netlist has no outputs".into());
+    }
+    endpoints.sort_by(|&a, &b| {
+        arrival[b as usize].partial_cmp(&arrival[a as usize]).unwrap()
+    });
+
+    let (cp, cp_nodes) = backtrack(net, d, &pred, endpoints[0]);
+    let mut top_paths = vec![cp];
+    for &ep in endpoints.iter().skip(1).take(top_k.saturating_sub(1) * 4) {
+        if top_paths.len() >= top_k {
+            break;
+        }
+        let (comp, _) = backtrack(net, d, &pred, ep);
+        let dup = top_paths.iter().any(|p| {
+            (p.logic_ns - comp.logic_ns).abs() < 1e-9
+                && (p.routing_ns - comp.routing_ns).abs() < 1e-9
+                && (p.bram_ns - comp.bram_ns).abs() < 1e-9
+                && (p.dsp_ns - comp.dsp_ns).abs() < 1e-9
+        });
+        if !dup {
+            top_paths.push(comp);
+        }
+    }
+
+    let total = cp.total_ns();
+    Ok(TimingReport {
+        cp,
+        cp_nodes,
+        fmax_mhz: 1_000.0 / total,
+        top_paths,
+    })
+}
+
+/// Critical-path delay (ns) with the full netlist re-analyzed at the given
+/// rail voltages — ground truth for validating the analytic rail model.
+pub fn cp_delay_at(
+    net: &Netlist,
+    d: &DelayParams,
+    chars: &CharLibrary,
+    vcore: f64,
+    vbram: f64,
+) -> Result<f64, String> {
+    let s = DelayScales::at(chars, vcore, vbram);
+    if !(s.logic.is_finite() && s.routing.is_finite() && s.bram.is_finite() && s.dsp.is_finite())
+    {
+        return Ok(f64::INFINITY);
+    }
+    let (arrival, _) = arrivals(net, d, &s)?;
+    Ok(arrival
+        .iter()
+        .zip(&net.kinds)
+        .filter(|(_, k)| **k == NodeKind::Output)
+        .map(|(a, _)| *a)
+        .fold(0.0, f64::max))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::TABLE1;
+    use crate::netlist::gen::{generate, GenConfig};
+    use crate::netlist::{Edge, Netlist, NodeKind};
+
+    fn chain() -> Netlist {
+        // in -> lut -> bram -> lut -> out, all 2-segment edges.
+        Netlist {
+            name: "chain".into(),
+            kinds: vec![
+                NodeKind::Input,
+                NodeKind::Lut,
+                NodeKind::Bram,
+                NodeKind::Lut,
+                NodeKind::Output,
+            ],
+            edges: vec![
+                Edge { src: 0, dst: 1, segments: 2 },
+                Edge { src: 1, dst: 2, segments: 2 },
+                Edge { src: 2, dst: 3, segments: 2 },
+                Edge { src: 3, dst: 4, segments: 2 },
+            ],
+        }
+    }
+
+    #[test]
+    fn chain_cp_is_exact() {
+        let d = DelayParams::default();
+        let r = analyze(&chain(), &d, 4).unwrap();
+        // 2 LUTs + 1 BRAM + 8 segments.
+        let want = 2.0 * d.lut_ns + d.bram_ns + 8.0 * d.route_seg_ns;
+        assert!((r.cp.total_ns() - want).abs() < 1e-9, "{}", r.cp.total_ns());
+        assert_eq!(r.cp_nodes, vec![0, 1, 2, 3, 4]);
+        assert!((r.cp.alpha() - d.bram_ns / (2.0 * d.lut_ns + 8.0 * d.route_seg_ns)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cycle_is_rejected() {
+        let mut n = chain();
+        n.edges.push(Edge { src: 3, dst: 1, segments: 1 });
+        assert!(analyze(&n, &DelayParams::default(), 4).is_err());
+    }
+
+    #[test]
+    fn table1_fmax_within_tolerance() {
+        // The synthetic netlists must land near the paper's Table I Fmax.
+        let d = DelayParams::default();
+        for spec in TABLE1 {
+            let net = generate(spec, &GenConfig { scale: 0.05, seed: 2019, luts_per_lab: 10 });
+            let r = analyze(&net, &d, 8).unwrap();
+            let err = (r.fmax_mhz - spec.freq_mhz).abs() / spec.freq_mhz;
+            assert!(
+                err < 0.20,
+                "{}: fmax {:.1} MHz vs Table I {:.1} MHz ({:.0}% off)",
+                spec.name,
+                r.fmax_mhz,
+                spec.freq_mhz,
+                err * 100.0
+            );
+        }
+    }
+
+    #[test]
+    fn table1_alpha_is_plausible_and_similar() {
+        // Paper §VI.B: "BRAM delay contributes to a similar portion of
+        // critical path delay in all of our accelerators".
+        let d = DelayParams::default();
+        let mut alphas = Vec::new();
+        for spec in TABLE1 {
+            let net = generate(spec, &GenConfig { scale: 0.05, seed: 2019, luts_per_lab: 10 });
+            let r = analyze(&net, &d, 8).unwrap();
+            assert!(spec.cp_has_bram, "{}", spec.name);
+            assert!(
+                r.cp.bram_ns > 0.0,
+                "{}: BRAM must be on the critical path",
+                spec.name
+            );
+            alphas.push(r.cp.alpha());
+        }
+        for &a in &alphas {
+            assert!((0.05..0.6).contains(&a), "alpha out of range: {alphas:?}");
+        }
+    }
+
+    #[test]
+    fn voltage_scaling_increases_cp() {
+        let chars = CharLibrary::stratix_iv_22nm();
+        let d = DelayParams::default();
+        let net = generate(
+            TABLE1.iter().find(|s| s.name == "tabla").unwrap(),
+            &GenConfig { scale: 0.05, seed: 2019, luts_per_lab: 10 },
+        );
+        let nom = cp_delay_at(&net, &d, &chars, 0.80, 0.95).unwrap();
+        let r = analyze(&net, &d, 4).unwrap();
+        assert!((nom - r.cp.total_ns()).abs() < 1e-6);
+        let mut prev = nom;
+        for (vc, vb) in [(0.75, 0.9), (0.7, 0.85), (0.65, 0.8), (0.6, 0.75)] {
+            let dly = cp_delay_at(&net, &d, &chars, vc, vb).unwrap();
+            assert!(dly >= prev - 1e-9, "cp not monotone at ({vc},{vb})");
+            prev = dly;
+        }
+        assert!(cp_delay_at(&net, &d, &chars, 0.45, 0.95).unwrap().is_infinite());
+    }
+
+    #[test]
+    fn analytic_rail_model_tracks_full_sta() {
+        // The multi-path analytic model (max over top-K compositions) must
+        // stay close to ground-truth STA under moderate scaling.
+        let chars = CharLibrary::stratix_iv_22nm();
+        let d = DelayParams::default();
+        for spec in TABLE1 {
+            let net = generate(spec, &GenConfig { scale: 0.05, seed: 2019, luts_per_lab: 10 });
+            let r = analyze(&net, &d, 8).unwrap();
+            for (vc, vb) in [(0.75, 0.90), (0.70, 0.85), (0.65, 0.80)] {
+                let truth = cp_delay_at(&net, &d, &chars, vc, vb).unwrap();
+                let s = DelayScales::at(&chars, vc, vb);
+                let model = r
+                    .top_paths
+                    .iter()
+                    .map(|p| p.delay_at(&s))
+                    .fold(0.0, f64::max);
+                let err = (truth - model).abs() / truth;
+                assert!(
+                    err < 0.10,
+                    "{} at ({vc},{vb}): model {model:.2} vs STA {truth:.2} ({:.1}% off)",
+                    spec.name,
+                    err * 100.0
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn top_paths_are_deduped_and_bounded() {
+        let d = DelayParams::default();
+        let net = generate(
+            TABLE1.iter().find(|s| s.name == "dnnweaver").unwrap(),
+            &GenConfig { scale: 0.05, seed: 2019, luts_per_lab: 10 },
+        );
+        let r = analyze(&net, &d, 5).unwrap();
+        assert!(!r.top_paths.is_empty() && r.top_paths.len() <= 5);
+        assert_eq!(r.top_paths[0], r.cp);
+    }
+}

@@ -1,0 +1,8 @@
+//! Foundation utilities built in-repo (the environment vendors only the
+//! `xla` crate closure — no `rand`, `serde`, `proptest`, ... — so these are
+//! first-class substrates, see DESIGN.md §6/S12/S16/S17).
+
+pub mod json;
+pub mod prng;
+pub mod prop;
+pub mod stats;

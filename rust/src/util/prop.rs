@@ -1,0 +1,90 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! `check` runs a property over `n` seeded-random cases; on failure it
+//! reports the failing seed so the case can be replayed deterministically:
+//!
+//! ```text
+//! use wavescale::util::prop;
+//! prop::check("sort is idempotent", 100, |rng| {
+//!     let mut v: Vec<u64> = (0..rng.index(1, 50)).map(|_| rng.next_u64()).collect();
+//!     v.sort_unstable();
+//!     let w = {
+//!         let mut w = v.clone();
+//!         w.sort_unstable();
+//!         w
+//!     };
+//!     prop::assert_that(v == w, "double sort differs")
+//! });
+//! ```
+
+use crate::util::prng::Rng;
+
+/// Result of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Convenience assertion for property bodies.
+pub fn assert_that(cond: bool, msg: impl Into<String>) -> CaseResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert two f64s agree to a tolerance.
+pub fn assert_close(a: f64, b: f64, tol: f64, label: &str) -> CaseResult {
+    if (a - b).abs() <= tol + tol * a.abs().max(b.abs()) {
+        Ok(())
+    } else {
+        Err(format!("{label}: {a} != {b} (tol {tol})"))
+    }
+}
+
+/// Run `property` over `n` cases derived from a base seed (env
+/// `WAVESCALE_PROP_SEED` overrides for replay). Panics with the failing
+/// seed + message on the first failure.
+pub fn check(name: &str, n: usize, mut property: impl FnMut(&mut Rng) -> CaseResult) {
+    let base = std::env::var("WAVESCALE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0x5EED_2019);
+    for case in 0..n {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed on case {case}/{n} \
+                 (replay with WAVESCALE_PROP_SEED={base}, case seed {seed}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always ok", 25, |_| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |rng| {
+            assert_that(rng.f64() < 0.5, "value too large")
+        });
+    }
+
+    #[test]
+    fn assert_close_tolerance() {
+        assert!(assert_close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
+        assert!(assert_close(1.0, 1.1, 1e-3, "x").is_err());
+    }
+}

@@ -1,0 +1,248 @@
+//! Statistics helpers: moments, percentiles, linear regression, and the
+//! self-similarity estimators (Hurst exponent, index of dispersion) used to
+//! validate the BURSE-substitute workload generator (DESIGN.md S8).
+
+/// Arithmetic mean; 0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance; 0 for fewer than 2 samples.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile in [0, 100] by linear interpolation on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p), "percentile {p} out of range");
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s: Vec<f64> = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (rank - lo as f64) * (s[hi] - s[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Least-squares fit `y = a + b x`; returns (a, b).
+pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2, "need at least 2 points");
+    let mx = mean(x);
+    let my = mean(y);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for (xi, yi) in x.iter().zip(y) {
+        sxy += (xi - mx) * (yi - my);
+        sxx += (xi - mx).powi(2);
+    }
+    let b = if sxx == 0.0 { 0.0 } else { sxy / sxx };
+    (my - b * mx, b)
+}
+
+/// Hurst exponent via rescaled-range (R/S) analysis.
+///
+/// Splits the series into chunks of growing size, computes E[R/S] per size,
+/// and fits log(R/S) ~ H log(n). H in (0.5, 1] indicates long-range
+/// dependence; the paper's workload uses H = 0.76.
+pub fn hurst_rs(xs: &[f64]) -> f64 {
+    assert!(xs.len() >= 64, "R/S needs >= 64 samples, got {}", xs.len());
+    let mut log_n = Vec::new();
+    let mut log_rs = Vec::new();
+    let mut n = 8usize;
+    while n <= xs.len() / 4 {
+        let mut rs_vals = Vec::new();
+        for chunk in xs.chunks_exact(n) {
+            let m = mean(chunk);
+            let mut cum = 0.0;
+            let mut lo = f64::INFINITY;
+            let mut hi = f64::NEG_INFINITY;
+            for &x in chunk {
+                cum += x - m;
+                lo = lo.min(cum);
+                hi = hi.max(cum);
+            }
+            let r = hi - lo;
+            let s = std_dev(chunk);
+            if s > 1e-12 {
+                rs_vals.push(r / s);
+            }
+        }
+        if !rs_vals.is_empty() {
+            log_n.push((n as f64).ln());
+            log_rs.push(mean(&rs_vals).ln());
+        }
+        n *= 2;
+    }
+    let (_, h) = linear_fit(&log_n, &log_rs);
+    h
+}
+
+/// Hurst exponent via the variance-time plot: Var(X^(m)) ~ m^(2H-2) for the
+/// m-aggregated series.
+pub fn hurst_variance_time(xs: &[f64]) -> f64 {
+    assert!(xs.len() >= 64, "variance-time needs >= 64 samples");
+    let mut log_m = Vec::new();
+    let mut log_v = Vec::new();
+    let mut m = 1usize;
+    while m <= xs.len() / 8 {
+        let agg: Vec<f64> = xs.chunks_exact(m).map(mean).collect();
+        let v = variance(&agg);
+        if v > 1e-15 && agg.len() >= 4 {
+            log_m.push((m as f64).ln());
+            log_v.push(v.ln());
+        }
+        m *= 2;
+    }
+    let (_, slope) = linear_fit(&log_m, &log_v);
+    1.0 + slope / 2.0
+}
+
+/// Index of dispersion for counts at the given aggregation window:
+/// IDC(w) = Var(N_w) / E[N_w] where N_w sums `w` consecutive counts.
+/// Poisson gives 1; the paper's workload has IDC = 500.
+pub fn idc(counts: &[f64], window: usize) -> f64 {
+    assert!(window >= 1);
+    let sums: Vec<f64> = counts.chunks_exact(window).map(|c| c.iter().sum()).collect();
+    assert!(sums.len() >= 2, "IDC window too large for trace");
+    let m = mean(&sums);
+    if m <= 0.0 {
+        return 0.0;
+    }
+    variance(&sums) / m
+}
+
+/// Lag-k autocorrelation.
+pub fn autocorr(xs: &[f64], k: usize) -> f64 {
+    assert!(k < xs.len());
+    let m = mean(xs);
+    let v = variance(xs);
+    if v <= 1e-15 {
+        return 0.0;
+    }
+    let n = xs.len() - k;
+    let mut s = 0.0;
+    for i in 0..n {
+        s += (xs[i] - m) * (xs[i + k] - m);
+    }
+    s / (n as f64 * v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn mean_and_variance_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert_eq!(median(&xs), 2.5);
+        assert!((percentile(&xs, 25.0) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_fit_exact_line() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 5.0, 7.0];
+        let (a, b) = linear_fit(&x, &y);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hurst_of_iid_noise_is_half() {
+        let mut r = Rng::new(1);
+        let xs: Vec<f64> = (0..8192).map(|_| r.normal()).collect();
+        let h = hurst_rs(&xs);
+        assert!((h - 0.55).abs() < 0.12, "R/S Hurst of white noise: {h}");
+        let hv = hurst_variance_time(&xs);
+        assert!((hv - 0.5).abs() < 0.1, "VT Hurst of white noise: {hv}");
+    }
+
+    #[test]
+    fn hurst_of_trend_is_high() {
+        // A strongly persistent series (random walk increments smoothed).
+        let mut r = Rng::new(2);
+        let mut xs = vec![0.0f64; 8192];
+        let mut level = 0.0;
+        for x in xs.iter_mut() {
+            level = 0.995 * level + r.normal() * 0.1;
+            *x = level;
+        }
+        let h = hurst_variance_time(&xs);
+        assert!(h > 0.8, "persistent series Hurst: {h}");
+    }
+
+    #[test]
+    fn idc_of_poisson_is_one() {
+        let mut r = Rng::new(3);
+        let counts: Vec<f64> = (0..50_000).map(|_| r.poisson(10.0) as f64).collect();
+        let d = idc(&counts, 1);
+        assert!((d - 1.0).abs() < 0.05, "Poisson IDC: {d}");
+    }
+
+    #[test]
+    fn idc_detects_burstiness() {
+        // ON/OFF bursts => IDC >> 1 at moderate windows.
+        let mut r = Rng::new(4);
+        let mut counts = Vec::with_capacity(32_768);
+        let mut on = true;
+        while counts.len() < 32_768 {
+            let dur = r.pareto(1.4, 16.0).min(4000.0) as usize;
+            for _ in 0..dur.min(32_768 - counts.len()) {
+                counts.push(if on { r.poisson(100.0) as f64 } else { 0.0 });
+            }
+            on = !on;
+        }
+        let d = idc(&counts, 64);
+        assert!(d > 50.0, "bursty IDC: {d}");
+    }
+
+    #[test]
+    fn autocorr_bounds() {
+        let mut r = Rng::new(5);
+        let xs: Vec<f64> = (0..4096).map(|_| r.normal()).collect();
+        assert!((autocorr(&xs, 0) - 1.0).abs() < 1e-9);
+        assert!(autocorr(&xs, 1).abs() < 0.06);
+    }
+}

@@ -1,0 +1,435 @@
+//! The paper's core contribution: power-aware timing analysis that picks
+//! the minimum-power `(Vcore, Vbram)` pair meeting a workload-stretched
+//! timing constraint (DESIGN.md S6).
+//!
+//! Native (rust) implementation of the same Eq. (1)-(3) grid search the
+//! AOT'd Pallas Voltage Selector performs — used for baselines, LUT
+//! construction at "design synthesis" time, and as the cross-check oracle
+//! for the PJRT artifact. On top of the single-composition model it
+//! supports a multi-path feasibility refinement: voltage scaling can
+//! promote an originally non-critical path (paper §II), so feasibility is
+//! checked against all top-K STA path compositions.
+
+use crate::chars::{CharLibrary, ResourceClass, VoltageGrid};
+use crate::power::RailTables;
+use crate::sta::PathComposition;
+
+/// Which rail(s) a policy may scale. Mirrors the artifact variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Mode {
+    /// The proposed technique: both rails jointly.
+    Proposed,
+    /// Scale `Vcore` only (Zhao et al. / Levine et al. style).
+    CoreOnly,
+    /// Scale `Vbram` only (Salami et al. style).
+    BramOnly,
+    /// Scale frequency only, both voltages nominal.
+    FreqOnly,
+}
+
+impl Mode {
+    pub const ALL: [Mode; 4] = [Mode::Proposed, Mode::CoreOnly, Mode::BramOnly, Mode::FreqOnly];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Mode::Proposed => "prop",
+            Mode::CoreOnly => "core-only",
+            Mode::BramOnly => "bram-only",
+            Mode::FreqOnly => "freq-only",
+        }
+    }
+
+    /// The AOT artifact that implements this mode (FreqOnly needs none).
+    pub fn artifact(self) -> Option<&'static str> {
+        match self {
+            Mode::Proposed => Some("voltage_opt_prop"),
+            Mode::CoreOnly => Some("voltage_opt_core_only"),
+            Mode::BramOnly => Some("voltage_opt_bram_only"),
+            Mode::FreqOnly => None,
+        }
+    }
+}
+
+/// A chosen operating point on the DC-DC grid.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct VoltagePoint {
+    pub icore: usize,
+    pub ibram: usize,
+    pub vcore: f64,
+    pub vbram: f64,
+    /// Total power, normalized to nominal-voltage nominal-frequency = 1.
+    pub power_norm: f64,
+}
+
+/// Grid optimizer over rail-level tables (single-composition Eq. (1)-(3)),
+/// optionally refined by multi-path feasibility.
+#[derive(Clone, Debug)]
+pub struct Optimizer {
+    pub grid: VoltageGrid,
+    pub tables: RailTables,
+    /// Optional near-critical path set for the multi-path check; delays in
+    /// ns at nominal voltage, plus the per-class scale tables to evaluate
+    /// them (sampled from the characterization library).
+    paths: Option<MultiPath>,
+}
+
+#[derive(Clone, Debug)]
+struct MultiPath {
+    paths: Vec<PathComposition>,
+    cp_total_ns: f64,
+    dlogic: Vec<f64>,
+    drout: Vec<f64>,
+    ddsp: Vec<f64>,
+    dbram: Vec<f64>,
+}
+
+impl Optimizer {
+    pub fn new(grid: VoltageGrid, tables: RailTables) -> Self {
+        Optimizer { grid, tables, paths: None }
+    }
+
+    /// Enable the multi-path feasibility refinement.
+    pub fn with_paths(mut self, chars: &CharLibrary, paths: Vec<PathComposition>) -> Self {
+        let cp_total_ns = paths
+            .iter()
+            .map(PathComposition::total_ns)
+            .fold(0.0, f64::max);
+        let sample = |cl: ResourceClass, levels: &[f64]| -> Vec<f64> {
+            levels.iter().map(|&v| chars.delay_scale(cl, v)).collect()
+        };
+        self.paths = Some(MultiPath {
+            cp_total_ns,
+            dlogic: sample(ResourceClass::Logic, &self.grid.vcore),
+            drout: sample(ResourceClass::Routing, &self.grid.vcore),
+            ddsp: sample(ResourceClass::Dsp, &self.grid.vcore),
+            dbram: sample(ResourceClass::Bram, &self.grid.vbram),
+            paths,
+        });
+        self
+    }
+
+    /// Eq. (2): does grid point (i, j) meet timing at slack factor `sw`?
+    pub fn feasible(&self, i: usize, j: usize, sw: f64) -> bool {
+        let t = &self.tables;
+        let single =
+            t.dl[i] + t.op.alpha * t.dm[j] <= (1.0 + t.op.alpha) * sw + 1e-12;
+        if !single {
+            return false;
+        }
+        match &self.paths {
+            None => true,
+            Some(mp) => {
+                let budget = mp.cp_total_ns * sw + 1e-12;
+                mp.paths.iter().all(|p| {
+                    p.logic_ns * mp.dlogic[i]
+                        + p.routing_ns * mp.drout[i]
+                        + p.dsp_ns * mp.ddsp[i]
+                        + p.bram_ns * mp.dbram[j]
+                        <= budget
+                })
+            }
+        }
+    }
+
+    /// Eq. (3): normalized total power at grid point (i, j), clock scaled
+    /// to `f = f_nom / sw`.
+    pub fn power(&self, i: usize, j: usize, sw: f64) -> f64 {
+        let t = &self.tables;
+        let fr = 1.0 / sw;
+        let p_core = t.op.gamma_l * t.pl_dyn[i] * fr + (1.0 - t.op.gamma_l) * t.pl_st[i];
+        let p_bram = t.op.gamma_m * t.pm_dyn[j] * fr + (1.0 - t.op.gamma_m) * t.pm_st[j];
+        (1.0 - t.op.beta) * p_core + t.op.beta * p_bram
+    }
+
+    /// Exhaustive minimum-power search on the grid (the paper's "accurate
+    /// timing *and power* analysis under multiple voltage scaling").
+    /// `sw < 1` is clamped to 1 (a platform never runs above nominal).
+    pub fn optimize(&self, sw: f64, mode: Mode) -> VoltagePoint {
+        let sw = sw.max(1.0);
+        let (ni, nj) = (self.grid.vcore.len(), self.grid.vbram.len());
+        let (irange, jrange): (std::ops::Range<usize>, std::ops::Range<usize>) = match mode {
+            Mode::Proposed => (0..ni, 0..nj),
+            Mode::CoreOnly => (0..ni, 0..1),
+            Mode::BramOnly => (0..1, 0..nj),
+            Mode::FreqOnly => (0..1, 0..1),
+        };
+        let mut best = (0usize, 0usize, f64::INFINITY);
+        for i in irange {
+            for j in jrange.clone() {
+                if !self.feasible(i, j, sw) {
+                    continue;
+                }
+                let p = self.power(i, j, sw);
+                if p < best.2 {
+                    best = (i, j, p);
+                }
+            }
+        }
+        debug_assert!(
+            best.2.is_finite(),
+            "nominal grid point must always be feasible for sw >= 1"
+        );
+        VoltagePoint {
+            icore: best.0,
+            ibram: best.1,
+            vcore: self.grid.vcore[best.0],
+            vbram: self.grid.vbram[best.1],
+            power_norm: best.2,
+        }
+    }
+
+    /// Power-gating baseline: `ceil(n·load)` of `n` boards at nominal V/f,
+    /// the rest gated to `residual` of nominal power. Normalized per-board.
+    pub fn power_gating(load: f64, n: usize, residual: f64) -> f64 {
+        let load = load.clamp(0.0, 1.0);
+        let active = (load * n as f64).ceil().min(n as f64);
+        (active + (n as f64 - active) * residual) / n as f64
+    }
+
+    /// Paper's Fig. 4 "PG" idealization (node count scales linearly).
+    pub fn power_gating_ideal(load: f64) -> f64 {
+        load.clamp(0.0, 1.0).max(1e-3)
+    }
+}
+
+/// "Design synthesis"-time lookup table: per workload bin, the optimal
+/// voltage pair and frequency ratio (paper §V: "the optimal operating
+/// voltage(s) of each frequency is calculated during the design synthesis
+/// stage and stored in the memory").
+#[derive(Clone, Debug)]
+pub struct VoltageLut {
+    pub mode: Mode,
+    /// Throughput margin t (paper §IV.A, default 5%).
+    pub margin_t: f64,
+    /// entries[b] serves workloads in bin b of m equal-width bins; the
+    /// frequency is sized for the bin's *upper* edge times (1 + t).
+    pub entries: Vec<LutEntry>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct LutEntry {
+    /// f / f_nom this bin runs at.
+    pub freq_ratio: f64,
+    pub point: VoltagePoint,
+}
+
+impl VoltageLut {
+    pub fn build(opt: &Optimizer, m_bins: usize, margin_t: f64, mode: Mode) -> Self {
+        Self::build_with_latency_cap(opt, m_bins, margin_t, mode, f64::INFINITY)
+    }
+
+    /// Build with a latency restriction (paper §IV): the clock period may
+    /// be stretched at most `latency_cap_sw` times nominal, regardless of
+    /// how low the workload bin is.
+    pub fn build_with_latency_cap(
+        opt: &Optimizer,
+        m_bins: usize,
+        margin_t: f64,
+        mode: Mode,
+        latency_cap_sw: f64,
+    ) -> Self {
+        assert!(m_bins >= 1);
+        assert!(latency_cap_sw >= 1.0, "latency cap must allow nominal speed");
+        let entries = (0..m_bins)
+            .map(|b| {
+                let upper = (b + 1) as f64 / m_bins as f64;
+                let freq_ratio = (upper * (1.0 + margin_t))
+                    .max(1.0 / latency_cap_sw)
+                    .min(1.0);
+                let sw = 1.0 / freq_ratio;
+                LutEntry { freq_ratio, point: opt.optimize(sw, mode) }
+            })
+            .collect();
+        VoltageLut { mode, margin_t, entries }
+    }
+
+    pub fn m_bins(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Bin index for a normalized load in [0, 1].
+    pub fn bin_of(&self, load: f64) -> usize {
+        let m = self.entries.len();
+        ((load.clamp(0.0, 1.0) * m as f64).ceil() as usize).clamp(1, m) - 1
+    }
+
+    pub fn entry_for_load(&self, load: f64) -> &LutEntry {
+        &self.entries[self.bin_of(load)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{BenchmarkSpec, DeviceFamily};
+    use crate::chars::CharLibrary;
+    use crate::netlist::gen::{generate, GenConfig};
+    use crate::power::{DesignPower, PowerParams};
+    use crate::sta::{analyze, DelayParams};
+    use crate::util::prop;
+
+    fn optimizer(name: &str) -> Optimizer {
+        let chars = CharLibrary::stratix_iv_22nm();
+        let spec = BenchmarkSpec::by_name(name).unwrap();
+        let dp = DesignPower::from_spec(
+            spec,
+            &DeviceFamily::stratix_iv(),
+            chars.clone(),
+            PowerParams::default(),
+        )
+        .unwrap();
+        let net = generate(spec, &GenConfig { scale: 0.05, seed: 2019, luts_per_lab: 10 });
+        let rep = analyze(&net, &DelayParams::default(), 8).unwrap();
+        Optimizer::new(chars.grid(), dp.rail_tables(&rep.cp))
+            .with_paths(&chars, rep.top_paths.clone())
+    }
+
+    #[test]
+    fn sw1_stays_at_nominal_power_or_better() {
+        let o = optimizer("tabla");
+        let p = o.optimize(1.0, Mode::Proposed);
+        assert!(p.power_norm <= 1.0 + 1e-9);
+        // At sw = 1 there is no slack: frequencies match nominal, so the
+        // chosen point must still meet timing with zero stretch.
+        assert!(o.feasible(p.icore, p.ibram, 1.0));
+    }
+
+    #[test]
+    fn chosen_point_is_always_feasible_and_optimal() {
+        let o = optimizer("dnnweaver");
+        prop::check("optimizer picks feasible grid minimum", 60, |rng| {
+            let sw = rng.range(1.0, 8.0);
+            let mode = *rng.choose(&Mode::ALL);
+            let pt = o.optimize(sw, mode);
+            prop::assert_that(o.feasible(pt.icore, pt.ibram, sw), "infeasible pick")?;
+            // No feasible grid point may beat it (restricted to the mode).
+            for i in 0..o.grid.vcore.len() {
+                for j in 0..o.grid.vbram.len() {
+                    let allowed = match mode {
+                        Mode::Proposed => true,
+                        Mode::CoreOnly => j == 0,
+                        Mode::BramOnly => i == 0,
+                        Mode::FreqOnly => i == 0 && j == 0,
+                    };
+                    if allowed && o.feasible(i, j, sw) {
+                        prop::assert_that(
+                            o.power(i, j, sw) >= pt.power_norm - 1e-12,
+                            format!("({i},{j}) beats optimizer at sw={sw}"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn power_monotone_in_slack() {
+        let o = optimizer("diannao");
+        for mode in Mode::ALL {
+            let mut prev = f64::INFINITY;
+            for step in 1..20 {
+                let sw = 1.0 + step as f64 * 0.35;
+                let p = o.optimize(sw, mode).power_norm;
+                assert!(p <= prev + 1e-12, "{mode:?} not monotone at sw={sw}");
+                prev = p;
+            }
+        }
+    }
+
+    #[test]
+    fn proposed_dominates_single_rail() {
+        let o = optimizer("proteus");
+        for step in 0..25 {
+            let sw = 1.0 + step as f64 * 0.3;
+            let p = o.optimize(sw, Mode::Proposed).power_norm;
+            let c = o.optimize(sw, Mode::CoreOnly).power_norm;
+            let b = o.optimize(sw, Mode::BramOnly).power_norm;
+            let f = o.optimize(sw, Mode::FreqOnly).power_norm;
+            assert!(p <= c + 1e-12 && p <= b + 1e-12, "sw={sw}");
+            assert!(c <= f + 1e-12 && b <= f + 1e-12, "voltage scaling beats freq-only");
+        }
+    }
+
+    #[test]
+    fn crash_voltage_bounds_the_gain() {
+        // Paper §III: at very low workloads the crash voltage prevents
+        // further reduction and power gating wins.
+        let o = optimizer("tabla");
+        let deep = o.optimize(50.0, Mode::Proposed);
+        let deeper = o.optimize(500.0, Mode::Proposed);
+        // Voltages bottom out at the crash floor.
+        assert!(deep.vcore >= 0.5 - 1e-9 && deep.vbram >= 0.5 - 1e-9);
+        assert!(deeper.vcore >= 0.5 - 1e-9 && deeper.vbram >= 0.5 - 1e-9);
+        assert!(deeper.power_norm <= deep.power_norm + 1e-12);
+        // The static floor keeps power strictly positive...
+        assert!(deeper.power_norm > 0.005, "{}", deeper.power_norm);
+        // ...so ideal power gating wins at very low workloads (§III).
+        assert!(deeper.power_norm > Optimizer::power_gating_ideal(1.0 / 500.0));
+    }
+
+    #[test]
+    fn power_gating_models() {
+        assert!((Optimizer::power_gating(0.5, 10, 0.0) - 0.5).abs() < 1e-12);
+        // ceil: 0.41 load on 10 boards keeps 5 on.
+        assert!((Optimizer::power_gating(0.41, 10, 0.0) - 0.5).abs() < 1e-12);
+        // residual leakage of gated boards.
+        assert!((Optimizer::power_gating(0.5, 10, 0.1) - 0.55).abs() < 1e-12);
+        assert_eq!(Optimizer::power_gating(2.0, 4, 0.0), 1.0);
+    }
+
+    #[test]
+    fn lut_bins_and_lookup() {
+        let o = optimizer("tabla");
+        let lut = VoltageLut::build(&o, 10, 0.05, Mode::Proposed);
+        assert_eq!(lut.m_bins(), 10);
+        assert_eq!(lut.bin_of(0.0), 0);
+        assert_eq!(lut.bin_of(0.05), 0);
+        assert_eq!(lut.bin_of(0.11), 1);
+        assert_eq!(lut.bin_of(1.0), 9);
+        // Higher bins -> higher frequency -> >= power.
+        for w in lut.entries.windows(2) {
+            assert!(w[0].freq_ratio <= w[1].freq_ratio + 1e-12);
+            assert!(w[0].point.power_norm <= w[1].point.power_norm + 1e-9);
+        }
+        // Top bin runs at nominal frequency.
+        assert!((lut.entries[9].freq_ratio - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multi_path_can_bind() {
+        // A second path heavy on BRAM must restrict Vbram even when the
+        // nominal CP is logic-heavy.
+        let chars = CharLibrary::stratix_iv_22nm();
+        let spec = BenchmarkSpec::by_name("tabla").unwrap();
+        let dp = DesignPower::from_spec(
+            spec,
+            &DeviceFamily::stratix_iv(),
+            chars.clone(),
+            PowerParams::default(),
+        )
+        .unwrap();
+        let net = generate(spec, &GenConfig { scale: 0.05, seed: 2019, luts_per_lab: 10 });
+        let rep = analyze(&net, &DelayParams::default(), 8).unwrap();
+        let tables = dp.rail_tables(&rep.cp);
+
+        let single = Optimizer::new(chars.grid(), tables.clone());
+        // Synthetic second path: nearly all BRAM, just under the CP.
+        let bram_heavy = PathComposition {
+            logic_ns: 0.4,
+            routing_ns: 0.4,
+            bram_ns: rep.cp.total_ns() - 1.0,
+            dsp_ns: 0.0,
+        };
+        let multi = Optimizer::new(chars.grid(), tables)
+            .with_paths(&chars, vec![rep.cp, bram_heavy]);
+        let sw = 2.0;
+        let a = single.optimize(sw, Mode::Proposed);
+        let b = multi.optimize(sw, Mode::Proposed);
+        assert!(
+            b.vbram >= a.vbram,
+            "multi-path must be at least as conservative on Vbram: {a:?} vs {b:?}"
+        );
+        assert!(b.power_norm >= a.power_norm - 1e-12);
+    }
+}

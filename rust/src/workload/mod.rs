@@ -1,0 +1,286 @@
+//! Workload trace generation — the BURSE [47] substitute (DESIGN.md S8).
+//!
+//! The paper's evaluation drives the platform with a *bursty, self-similar*
+//! synthetic workload: 40% average load, arrival rate λ=1000, Hurst
+//! exponent H = 0.76, index of dispersion IDC = 500. We reproduce those
+//! statistics with the classical ON/OFF construction: aggregating many
+//! sources whose ON/OFF durations are Pareto(a) heavy-tailed yields
+//! asymptotically self-similar traffic with H = (3 − a) / 2 (Willinger et
+//! al.), and the heavy tails push IDC into the hundreds. `util::stats`
+//! provides the estimators (`hurst_rs`, `hurst_variance_time`, `idc`) that
+//! validate every generated trace (see tests and `benches/fig10*`).
+//!
+//! Also here: Poisson, periodic(diurnal), square-wave and CSV replay
+//! sources, all normalized to "load relative to expected peak" in [0, 1].
+
+use crate::util::prng::Rng;
+use crate::util::stats;
+
+/// A workload trace: per-time-step load, normalized to expected peak.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub loads: Vec<f64>,
+    pub label: String,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.loads.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.loads.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        stats::mean(&self.loads)
+    }
+
+    /// Measured self-similarity/burstiness statistics of the trace
+    /// (counts are reconstructed at `lambda` arrivals per step at load 1).
+    pub fn measured_stats(&self, lambda: f64) -> TraceStats {
+        let counts: Vec<f64> = self.loads.iter().map(|l| l * lambda).collect();
+        TraceStats {
+            mean_load: self.mean(),
+            hurst_rs: stats::hurst_rs(&self.loads),
+            hurst_vt: stats::hurst_variance_time(&self.loads),
+            idc: stats::idc(&counts, 16),
+        }
+    }
+
+    /// Serialize as a one-column CSV (header + load per line).
+    pub fn to_csv(&self) -> String {
+        let mut s = String::with_capacity(self.loads.len() * 10 + 16);
+        s.push_str("load\n");
+        for l in &self.loads {
+            s.push_str(&format!("{l:.6}\n"));
+        }
+        s
+    }
+
+    /// Parse the CSV format written by [`Trace::to_csv`].
+    pub fn from_csv(text: &str, label: &str) -> Result<Trace, String> {
+        let mut loads = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || (i == 0 && line == "load") {
+                continue;
+            }
+            let v: f64 = line
+                .parse()
+                .map_err(|_| format!("line {}: bad load {line:?}", i + 1))?;
+            if !(0.0..=1.5).contains(&v) {
+                return Err(format!("line {}: load {v} out of range", i + 1));
+            }
+            loads.push(v.min(1.0));
+        }
+        if loads.is_empty() {
+            return Err("empty trace".into());
+        }
+        Ok(Trace { loads, label: label.to_string() })
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct TraceStats {
+    pub mean_load: f64,
+    pub hurst_rs: f64,
+    pub hurst_vt: f64,
+    pub idc: f64,
+}
+
+/// Parameters of the bursty self-similar generator (paper §VI.B values as
+/// defaults: 40% average load, H = 0.76 → Pareto shape a = 3 − 2H = 1.48).
+#[derive(Clone, Copy, Debug)]
+pub struct BurstyConfig {
+    pub steps: usize,
+    pub mean_load: f64,
+    pub hurst: f64,
+    /// Number of superposed ON/OFF sources.
+    pub sources: usize,
+    /// Mean ON duration in steps (OFF scales to hit `mean_load`).
+    pub mean_on: f64,
+    pub seed: u64,
+}
+
+impl Default for BurstyConfig {
+    fn default() -> Self {
+        BurstyConfig {
+            steps: 1_000,
+            mean_load: 0.40,
+            hurst: 0.76,
+            sources: 32,
+            mean_on: 40.0,
+            seed: 2019,
+        }
+    }
+}
+
+/// Superposed Pareto-ON/OFF self-similar generator.
+pub fn bursty(cfg: &BurstyConfig) -> Trace {
+    assert!(cfg.steps >= 1 && cfg.sources >= 1);
+    assert!((0.5..1.0).contains(&cfg.hurst), "hurst must be in (0.5, 1)");
+    assert!((0.0..=1.0).contains(&cfg.mean_load));
+    let a = 3.0 - 2.0 * cfg.hurst; // Pareto shape, 1 < a < 2
+    // Pareto(a, xm) mean = a*xm/(a-1); solve xm for the target mean ON.
+    let xm_on = cfg.mean_on * (a - 1.0) / a;
+    // OFF duration sized so each source is ON with p = mean_load.
+    let duty = cfg.mean_load.clamp(0.02, 0.98);
+    let mean_off = cfg.mean_on * (1.0 - duty) / duty;
+    let xm_off = mean_off * (a - 1.0) / a;
+
+    let mut rng = Rng::new(cfg.seed);
+    let mut acc = vec![0.0f64; cfg.steps];
+    for s in 0..cfg.sources {
+        let mut r = rng.fork(s as u64 + 1);
+        let mut t = 0usize;
+        // Random initial phase: start ON with probability = duty.
+        let mut on = r.bool(duty);
+        // Cap durations to keep a single source from freezing the trace.
+        let cap = (cfg.steps as f64 / 2.0).max(8.0);
+        while t < cfg.steps {
+            let dur = if on {
+                r.pareto(a, xm_on).min(cap)
+            } else {
+                r.pareto(a, xm_off).min(cap)
+            }
+            .round()
+            .max(1.0) as usize;
+            if on {
+                let end = (t + dur).min(cfg.steps);
+                for x in &mut acc[t..end] {
+                    *x += 1.0;
+                }
+            }
+            t += dur;
+            on = !on;
+        }
+    }
+    // Normalize: "expected peak" is all sources ON.
+    let peak = cfg.sources as f64;
+    let loads: Vec<f64> = acc.iter().map(|&x| (x / peak).min(1.0)).collect();
+    Trace {
+        loads,
+        label: format!(
+            "bursty(mean={:.2},H={:.2},src={})",
+            cfg.mean_load, cfg.hurst, cfg.sources
+        ),
+    }
+}
+
+/// Poisson arrivals at a stationary mean load (IDC ≈ 1 — the *non*-bursty
+/// control case).
+pub fn poisson(steps: usize, mean_load: f64, lambda: f64, seed: u64) -> Trace {
+    let mut rng = Rng::new(seed);
+    let loads = (0..steps)
+        .map(|_| (rng.poisson(mean_load * lambda) as f64 / lambda).min(1.0))
+        .collect();
+    Trace { loads, label: format!("poisson(mean={mean_load:.2})") }
+}
+
+/// Diurnal pattern: sinusoid with the given period plus Gaussian jitter.
+pub fn periodic(steps: usize, period: usize, lo: f64, hi: f64, jitter: f64, seed: u64) -> Trace {
+    assert!(period >= 2 && hi >= lo);
+    let mut rng = Rng::new(seed);
+    let loads = (0..steps)
+        .map(|t| {
+            let phase = (t % period) as f64 / period as f64 * std::f64::consts::TAU;
+            let base = lo + (hi - lo) * 0.5 * (1.0 - phase.cos());
+            (base + rng.normal() * jitter).clamp(0.0, 1.0)
+        })
+        .collect();
+    Trace { loads, label: format!("periodic(p={period})") }
+}
+
+/// Square wave alternating between two load levels (worst case for
+/// smoothing predictors, best case for Markov bins).
+pub fn square(steps: usize, period: usize, lo: f64, hi: f64) -> Trace {
+    assert!(period >= 2);
+    let loads = (0..steps)
+        .map(|t| if (t / (period / 2)) % 2 == 0 { lo } else { hi })
+        .map(|l| l.clamp(0.0, 1.0))
+        .collect();
+    Trace { loads, label: format!("square(p={period})") }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bursty_hits_target_mean() {
+        let t = bursty(&BurstyConfig { steps: 20_000, ..Default::default() });
+        assert!((t.mean() - 0.40).abs() < 0.06, "mean {}", t.mean());
+        assert!(t.loads.iter().all(|&l| (0.0..=1.0).contains(&l)));
+    }
+
+    #[test]
+    fn bursty_is_self_similar_near_h076() {
+        // The headline property: H ≈ 0.76 (paper §VI.B). Estimators are
+        // noisy, so accept a band around the target.
+        let t = bursty(&BurstyConfig { steps: 32_768, ..Default::default() });
+        let s = t.measured_stats(1_000.0);
+        assert!(
+            (0.62..0.95).contains(&s.hurst_rs),
+            "R/S Hurst {:.3} not in band",
+            s.hurst_rs
+        );
+        assert!(
+            (0.62..0.98).contains(&s.hurst_vt),
+            "VT Hurst {:.3} not in band",
+            s.hurst_vt
+        );
+    }
+
+    #[test]
+    fn bursty_idc_is_large() {
+        // IDC = 500 in the paper at λ = 1000; heavy-tailed ON/OFF should
+        // put the measured IDC well into the hundreds.
+        let t = bursty(&BurstyConfig { steps: 32_768, ..Default::default() });
+        let s = t.measured_stats(1_000.0);
+        assert!(s.idc > 100.0, "IDC {:.0} too small", s.idc);
+    }
+
+    #[test]
+    fn poisson_is_not_bursty() {
+        let t = poisson(20_000, 0.4, 1_000.0, 1);
+        let s = t.measured_stats(1_000.0);
+        assert!((t.mean() - 0.4).abs() < 0.02);
+        assert!(s.idc < 30.0, "Poisson IDC {:.1} should be small", s.idc);
+        assert!(s.hurst_vt < 0.65, "Poisson Hurst {:.2}", s.hurst_vt);
+    }
+
+    #[test]
+    fn bursty_deterministic_per_seed() {
+        let a = bursty(&BurstyConfig::default());
+        let b = bursty(&BurstyConfig::default());
+        assert_eq!(a.loads, b.loads);
+        let c = bursty(&BurstyConfig { seed: 1, ..Default::default() });
+        assert_ne!(a.loads, c.loads);
+    }
+
+    #[test]
+    fn periodic_and_square_shapes() {
+        let p = periodic(240, 24, 0.1, 0.9, 0.0, 0);
+        assert!((p.loads[0] - 0.1).abs() < 1e-9);
+        assert!((p.loads[12] - 0.9).abs() < 1e-9);
+        let s = square(100, 10, 0.2, 0.8);
+        assert_eq!(s.loads[0], 0.2);
+        assert_eq!(s.loads[5], 0.8);
+        assert_eq!(s.loads[10], 0.2);
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let t = bursty(&BurstyConfig { steps: 200, ..Default::default() });
+        let csv = t.to_csv();
+        let u = Trace::from_csv(&csv, "replayed").unwrap();
+        assert_eq!(t.len(), u.len());
+        for (a, b) in t.loads.iter().zip(&u.loads) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        assert!(Trace::from_csv("load\nnope\n", "x").is_err());
+        assert!(Trace::from_csv("load\n7.5\n", "x").is_err());
+        assert!(Trace::from_csv("", "x").is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Integration: the serving coordinator with real PJRT workers.
+//! Self-skips when artifacts/ is missing.
+
+use std::time::Duration;
+
+use wavescale::coordinator::{Coordinator, QueueFull, ServingConfig};
+use wavescale::platform::{build_platform, PlatformConfig, Policy};
+use wavescale::util::prng::Rng;
+use wavescale::vscale::Mode;
+
+fn start(cfg: ServingConfig) -> Option<Coordinator> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    let platform = build_platform(
+        &cfg.variant.clone(),
+        PlatformConfig::default(),
+        Policy::Dvfs(cfg.mode),
+    )
+    .unwrap();
+    Some(
+        Coordinator::start(
+            cfg,
+            "artifacts".into(),
+            platform.design.clone(),
+            platform.optimizer_ref().clone(),
+        )
+        .expect("coordinator"),
+    )
+}
+
+#[test]
+fn serves_all_submitted_requests() {
+    let Some(coord) = start(ServingConfig {
+        n_instances: 2,
+        epoch: Duration::from_millis(100),
+        cycles_per_batch: 1.0e4,
+        ..Default::default()
+    }) else {
+        return;
+    };
+    let mut rng = Rng::new(1);
+    let n = 512;
+    for _ in 0..n {
+        coord.submit(rng.normal_vec_f32(coord.in_dim)).unwrap();
+    }
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while coord.stats().completed < n && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let (stats, records) = coord.shutdown().unwrap();
+    assert_eq!(stats.completed, n, "all requests must complete");
+    assert_eq!(stats.rejected, 0);
+    assert!(stats.p50_latency_s > 0.0);
+    assert!(!records.is_empty(), "CC must have recorded epochs");
+}
+
+#[test]
+fn backpressure_rejects_when_full() {
+    let Some(coord) = start(ServingConfig {
+        n_instances: 1,
+        queue_capacity: 32,
+        epoch: Duration::from_millis(100),
+        // Very slow simulated FPGA so the queue fills.
+        cycles_per_batch: 5.0e7,
+        ..Default::default()
+    }) else {
+        return;
+    };
+    let mut rng = Rng::new(2);
+    let mut saw_full = false;
+    for _ in 0..256 {
+        if coord.submit(rng.normal_vec_f32(coord.in_dim)) == Err(QueueFull) {
+            saw_full = true;
+            break;
+        }
+    }
+    assert!(saw_full, "bounded queue must reject under overload");
+    let (stats, _) = coord.shutdown().unwrap();
+    assert!(stats.rejected > 0);
+}
+
+#[test]
+fn dvfs_epochs_track_offered_load() {
+    let Some(coord) = start(ServingConfig {
+        n_instances: 2,
+        epoch: Duration::from_millis(80),
+        cycles_per_batch: 1.0e4,
+        warmup_epochs: 1,
+        ..Default::default()
+    }) else {
+        return;
+    };
+    let mut rng = Rng::new(3);
+    // Busy first phase, idle second phase.
+    for _ in 0..600 {
+        let _ = coord.submit(rng.normal_vec_f32(coord.in_dim));
+        std::thread::sleep(Duration::from_micros(300));
+    }
+    std::thread::sleep(Duration::from_millis(400));
+    let (_stats, records) = coord.shutdown().unwrap();
+    assert!(records.len() >= 4, "need epochs: {}", records.len());
+    // The last (idle) epochs should run at a lower frequency than the peak.
+    let peak = records.iter().map(|r| r.freq_ratio).fold(0.0, f64::max);
+    let tail = records.last().unwrap().freq_ratio;
+    assert!(tail <= peak, "tail {tail} vs peak {peak}");
+    // Voltages are always within the physical grid.
+    for r in &records {
+        assert!((0.5..=0.8 + 1e-9).contains(&r.vcore), "{r:?}");
+        assert!((0.5..=0.95 + 1e-9).contains(&r.vbram), "{r:?}");
+        assert!(r.power_w > 0.0);
+    }
+}

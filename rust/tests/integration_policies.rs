@@ -1,0 +1,123 @@
+//! Integration: optimizer/LUT behaviour against the full design stack,
+//! plus failure-injection on the configuration layer.
+
+use wavescale::arch::{BenchmarkSpec, DeviceFamily, TABLE1};
+use wavescale::chars::CharLibrary;
+use wavescale::config::{policy_by_name, SimConfig};
+use wavescale::netlist::blif::{parse_blif, write_blif};
+use wavescale::netlist::gen::{generate, GenConfig};
+use wavescale::power::{DesignPower, PowerParams};
+use wavescale::sta::{analyze, DelayParams};
+use wavescale::util::json::Json;
+use wavescale::vscale::{Mode, Optimizer, VoltageLut};
+
+fn optimizer_for(name: &str) -> Optimizer {
+    let chars = CharLibrary::stratix_iv_22nm();
+    let spec = BenchmarkSpec::by_name(name).unwrap();
+    let dp = DesignPower::from_spec(
+        spec,
+        &DeviceFamily::stratix_iv(),
+        chars.clone(),
+        PowerParams::default(),
+    )
+    .unwrap();
+    let net = generate(spec, &GenConfig { scale: 0.05, seed: 2019, luts_per_lab: 10 });
+    let rep = analyze(&net, &DelayParams::default(), 8).unwrap();
+    Optimizer::new(chars.grid(), dp.rail_tables(&rep.cp)).with_paths(&chars, rep.top_paths)
+}
+
+#[test]
+fn luts_are_monotone_for_all_benchmarks_and_modes() {
+    for spec in TABLE1 {
+        let opt = optimizer_for(spec.name);
+        for mode in [Mode::Proposed, Mode::CoreOnly, Mode::BramOnly] {
+            let lut = VoltageLut::build(&opt, 10, 0.05, mode);
+            for w in lut.entries.windows(2) {
+                assert!(
+                    w[0].point.power_norm <= w[1].point.power_norm + 1e-9,
+                    "{} {mode:?}: non-monotone LUT",
+                    spec.name
+                );
+                assert!(w[0].point.vcore <= w[1].point.vcore + 1e-9);
+            }
+        }
+    }
+}
+
+#[test]
+fn deeper_grids_never_hurt() {
+    // A policy that can scale both rails must never do worse than the
+    // same policy restricted to one rail, across the whole LUT.
+    for spec in TABLE1 {
+        let opt = optimizer_for(spec.name);
+        let prop = VoltageLut::build(&opt, 10, 0.05, Mode::Proposed);
+        let core = VoltageLut::build(&opt, 10, 0.05, Mode::CoreOnly);
+        let bram = VoltageLut::build(&opt, 10, 0.05, Mode::BramOnly);
+        for b in 0..10 {
+            let p = prop.entries[b].point.power_norm;
+            assert!(p <= core.entries[b].point.power_norm + 1e-9, "{} bin {b}", spec.name);
+            assert!(p <= bram.entries[b].point.power_norm + 1e-9, "{} bin {b}", spec.name);
+        }
+    }
+}
+
+#[test]
+fn netlist_blif_round_trip_preserves_timing() {
+    for spec in &TABLE1[..3] {
+        let net = generate(spec, &GenConfig { scale: 0.03, seed: 5, luts_per_lab: 10 });
+        let text = write_blif(&net);
+        let back = parse_blif(&text).unwrap();
+        let d = DelayParams::default();
+        let a = analyze(&net, &d, 4).unwrap();
+        let b = analyze(&back, &d, 4).unwrap();
+        assert!(
+            (a.cp.total_ns() - b.cp.total_ns()).abs() < 1e-9,
+            "{}: {} vs {}",
+            spec.name,
+            a.cp.total_ns(),
+            b.cp.total_ns()
+        );
+    }
+}
+
+#[test]
+fn config_file_round_trip_drives_simulation() {
+    let mut cfg = SimConfig::default();
+    cfg.benchmark = "proteus".into();
+    cfg.policy = policy_by_name("oracle-prop").unwrap();
+    cfg.workload.steps = 120;
+    let text = cfg.to_json().to_string_pretty();
+    let parsed = Json::parse(&text).unwrap();
+    let mut cfg2 = SimConfig::default();
+    cfg2.apply_json(&parsed).unwrap();
+    assert_eq!(cfg2.benchmark, "proteus");
+    assert_eq!(cfg2.workload.steps, 120);
+
+    let trace = wavescale::workload::bursty(&cfg2.workload);
+    let mut platform =
+        wavescale::platform::build_platform(&cfg2.benchmark, cfg2.platform.clone(), cfg2.policy)
+            .unwrap();
+    let r = platform.run(&trace.loads);
+    assert!(r.power_gain > 1.0);
+}
+
+#[test]
+fn config_rejects_malformed_json() {
+    let mut cfg = SimConfig::default();
+    assert!(Json::parse("{nope").is_err());
+    let bad = Json::parse(r#"{"policy": "warp-drive"}"#).unwrap();
+    assert!(cfg.apply_json(&bad).is_err());
+    let bad = Json::parse(r#"{"workload": {"hurst": 2.0}}"#).unwrap();
+    assert!(cfg.apply_json(&bad).is_err());
+}
+
+#[test]
+fn rail_tables_match_artifact_grid_dimensions() {
+    // The rust grid must stay in lockstep with the python AOT constants
+    // (model.NV = 13, model.NM = 19).
+    for spec in TABLE1 {
+        let opt = optimizer_for(spec.name);
+        assert_eq!(opt.tables.dl.len(), 13, "{}", spec.name);
+        assert_eq!(opt.tables.dm.len(), 19, "{}", spec.name);
+    }
+}

@@ -1,0 +1,145 @@
+//! Integration: the PJRT runtime against real `make artifacts` output.
+//! Every test self-skips when artifacts/ is missing (e.g. `cargo test`
+//! before the python build) — `make test` always builds them first.
+
+use wavescale::arch::{BenchmarkSpec, DeviceFamily, TABLE1};
+use wavescale::chars::CharLibrary;
+use wavescale::netlist::gen::{generate, GenConfig};
+use wavescale::power::{DesignPower, PowerParams};
+use wavescale::runtime::{DnnClient, Engine, OpQuery, Tensor, VoltageSelectorClient};
+use wavescale::sta::{analyze, DelayParams};
+use wavescale::util::prng::Rng;
+use wavescale::vscale::{Mode, Optimizer};
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Engine::open("artifacts").expect("engine"))
+}
+
+#[test]
+fn manifest_lists_all_artifacts() {
+    let Some(engine) = engine() else { return };
+    let m = &engine.manifest;
+    for mode in ["prop", "core_only", "bram_only"] {
+        assert!(m.artifacts.contains_key(&format!("voltage_opt_{mode}")));
+    }
+    assert_eq!(m.dnn_variants().len(), 5);
+    for spec in TABLE1 {
+        assert!(m.artifacts.contains_key(&format!("dnn_{}", spec.name)), "{}", spec.name);
+    }
+}
+
+#[test]
+fn all_dnn_variants_pass_golden() {
+    let Some(engine) = engine() else { return };
+    for variant in engine.manifest.dnn_variants() {
+        let dnn = DnnClient::new(&engine, &variant).expect("client");
+        let err = dnn.verify_golden(&engine).expect("golden");
+        assert!(err < 1e-3, "dnn_{variant}: max rel err {err}");
+    }
+}
+
+#[test]
+fn dnn_inference_is_deterministic_and_shape_checked() {
+    let Some(engine) = engine() else { return };
+    let dnn = DnnClient::new(&engine, "tabla").unwrap();
+    let mut rng = Rng::new(3);
+    let x = rng.normal_vec_f32(dnn.batch * dnn.in_dim);
+    let a = dnn.infer(&x).unwrap();
+    let b = dnn.infer(&x).unwrap();
+    assert_eq!(a, b, "PJRT inference must be deterministic");
+    assert_eq!(a.len(), dnn.batch * dnn.out_dim);
+    assert!(dnn.infer(&x[1..]).is_err(), "wrong input length must fail");
+}
+
+#[test]
+fn voltage_selector_matches_native_optimizer_exhaustively() {
+    // The AOT'd Pallas kernel and the rust grid search must agree on every
+    // benchmark, mode, and a sweep of workload levels: same grid indices.
+    let Some(engine) = engine() else { return };
+    let chars = CharLibrary::stratix_iv_22nm();
+    let vs = VoltageSelectorClient::new(&engine);
+    for spec in TABLE1 {
+        let dp = DesignPower::from_spec(
+            BenchmarkSpec::by_name(spec.name).unwrap(),
+            &DeviceFamily::stratix_iv(),
+            chars.clone(),
+            PowerParams::default(),
+        )
+        .unwrap();
+        let net = generate(spec, &GenConfig { scale: 0.03, seed: 2019, luts_per_lab: 10 });
+        let rep = analyze(&net, &DelayParams::default(), 8).unwrap();
+        let tables = dp.rail_tables(&rep.cp);
+        // Native optimizer WITHOUT multi-path (the artifact is single-path).
+        let opt = Optimizer::new(chars.grid(), tables.clone());
+        for mode in [Mode::Proposed, Mode::CoreOnly, Mode::BramOnly] {
+            let sws: Vec<f64> = (0..16).map(|i| 1.0 + i as f64 * 0.45).collect();
+            let queries: Vec<OpQuery> = sws
+                .iter()
+                .map(|&sw| OpQuery {
+                    alpha: tables.op.alpha as f32,
+                    beta: tables.op.beta as f32,
+                    gamma_l: tables.op.gamma_l as f32,
+                    gamma_m: tables.op.gamma_m as f32,
+                    sw: sw as f32,
+                })
+                .collect();
+            let got = vs.select(mode, &tables, &queries).expect("select");
+            for (choice, &sw) in got.iter().zip(&sws) {
+                let want = opt.optimize(sw, mode);
+                assert_eq!(
+                    (choice.icore, choice.ibram),
+                    (want.icore, want.ibram),
+                    "{} {mode:?} sw={sw}: pjrt {choice:?} vs native {want:?}",
+                    spec.name
+                );
+                assert!(
+                    (choice.power_norm - want.power_norm).abs() < 1e-4,
+                    "{} {mode:?} sw={sw}: power {} vs {}",
+                    spec.name,
+                    choice.power_norm,
+                    want.power_norm
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn executable_validates_inputs() {
+    let Some(engine) = engine() else { return };
+    let exe = engine.load("voltage_opt_prop").unwrap();
+    // Wrong arity.
+    assert!(exe.run(&[]).is_err());
+    // Wrong element count.
+    let bad: Vec<Tensor> = (0..11).map(|_| Tensor::F32(vec![0.0; 3])).collect();
+    assert!(exe.run(&bad).is_err());
+    // Wrong dtype.
+    let mut args: Vec<Tensor> = Vec::new();
+    for spec in &exe.meta.args {
+        args.push(Tensor::I32(vec![0; spec.elements()]));
+    }
+    assert!(exe.run(&args).is_err());
+}
+
+#[test]
+fn unknown_artifact_is_an_error() {
+    let Some(engine) = engine() else { return };
+    assert!(engine.load("nonexistent").is_err());
+    assert!(DnnClient::new(&engine, "nonexistent").is_err());
+}
+
+#[test]
+fn compile_cache_reuses_executables() {
+    let Some(engine) = engine() else { return };
+    let t0 = std::time::Instant::now();
+    let _a = engine.load("dnn_tabla").unwrap();
+    let cold = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let _b = engine.load("dnn_tabla").unwrap();
+    let warm = t0.elapsed();
+    assert!(warm < cold / 10, "cache hit {warm:?} vs cold {cold:?}");
+}

@@ -1,0 +1,224 @@
+//! Property tests over the coordinator-side invariants (routing, batching,
+//! state) and the analytic core, using the in-repo prop harness
+//! (DESIGN.md S16). Each property runs across seeded-random cases.
+
+use wavescale::arch::{BenchmarkSpec, DeviceFamily, TABLE1};
+use wavescale::chars::{CharLibrary, ResourceClass};
+use wavescale::markov::{MarkovPredictor, Predictor};
+use wavescale::netlist::gen::{generate, GenConfig};
+use wavescale::platform::{build_platform, PlatformConfig, Policy};
+use wavescale::power::{DesignPower, PowerParams};
+use wavescale::sta::{analyze, cp_delay_at, DelayParams, DelayScales};
+use wavescale::util::json::Json;
+use wavescale::util::prop::{assert_that, check};
+use wavescale::vscale::{Mode, Optimizer};
+use wavescale::workload::{bursty, BurstyConfig, Trace};
+
+fn random_optimizer(rng: &mut wavescale::util::prng::Rng) -> Optimizer {
+    let chars = CharLibrary::stratix_iv_22nm();
+    let spec = rng.choose(TABLE1);
+    let dp = DesignPower::from_spec(
+        BenchmarkSpec::by_name(spec.name).unwrap(),
+        &DeviceFamily::stratix_iv(),
+        chars.clone(),
+        PowerParams::default(),
+    )
+    .unwrap();
+    let net = generate(spec, &GenConfig { scale: 0.02, seed: rng.next_u64(), luts_per_lab: 10 });
+    let rep = analyze(&net, &DelayParams::default(), 8).unwrap();
+    Optimizer::new(chars.grid(), dp.rail_tables(&rep.cp)).with_paths(&chars, rep.top_paths)
+}
+
+#[test]
+fn prop_optimizer_result_is_feasible_and_minimal() {
+    check("optimizer feasible+minimal", 40, |rng| {
+        let opt = random_optimizer(rng);
+        let sw = rng.range(1.0, 6.0);
+        let mode = *rng.choose(&[Mode::Proposed, Mode::CoreOnly, Mode::BramOnly]);
+        let pt = opt.optimize(sw, mode);
+        assert_that(opt.feasible(pt.icore, pt.ibram, sw), "chosen point infeasible")?;
+        for i in 0..opt.grid.vcore.len() {
+            for j in 0..opt.grid.vbram.len() {
+                let allowed = match mode {
+                    Mode::Proposed => true,
+                    Mode::CoreOnly => j == 0,
+                    Mode::BramOnly => i == 0,
+                    Mode::FreqOnly => i == 0 && j == 0,
+                };
+                if allowed && opt.feasible(i, j, sw) {
+                    assert_that(
+                        opt.power(i, j, sw) >= pt.power_norm - 1e-12,
+                        format!("({i},{j}) beats optimum at sw={sw:.2}"),
+                    )?;
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sta_monotone_under_voltage_scaling() {
+    check("STA monotone in voltage", 25, |rng| {
+        let chars = CharLibrary::stratix_iv_22nm();
+        let spec = rng.choose(TABLE1);
+        let net =
+            generate(spec, &GenConfig { scale: 0.02, seed: rng.next_u64(), luts_per_lab: 10 });
+        let d = DelayParams::default();
+        let v1 = rng.range(0.55, 0.80);
+        let v2 = rng.range(0.55, v1);
+        let b1 = rng.range(0.70, 0.95);
+        let b2 = rng.range(0.70, b1);
+        let hi = cp_delay_at(&net, &d, &chars, v1, b1).map_err(|e| e.to_string())?;
+        let lo = cp_delay_at(&net, &d, &chars, v2, b2).map_err(|e| e.to_string())?;
+        assert_that(lo >= hi - 1e-9, format!("({v2:.3},{b2:.3}) faster than ({v1:.3},{b1:.3})"))
+    });
+}
+
+#[test]
+fn prop_multipath_model_upper_bounds_single_path() {
+    check("multi-path >= single-path delay model", 25, |rng| {
+        let chars = CharLibrary::stratix_iv_22nm();
+        let spec = rng.choose(TABLE1);
+        let net =
+            generate(spec, &GenConfig { scale: 0.02, seed: rng.next_u64(), luts_per_lab: 10 });
+        let rep = analyze(&net, &DelayParams::default(), 8).map_err(|e| e.to_string())?;
+        let s = DelayScales::at(&chars, rng.range(0.55, 0.8), rng.range(0.7, 0.95));
+        let single = rep.cp.delay_at(&s);
+        let multi = rep.top_paths.iter().map(|p| p.delay_at(&s)).fold(0.0, f64::max);
+        assert_that(multi >= single - 1e-9, "cp must be among top paths")
+    });
+}
+
+#[test]
+fn prop_markov_rows_always_stochastic() {
+    check("markov transition rows sum to 1", 30, |rng| {
+        let m = rng.index(2, 12);
+        let mut p = MarkovPredictor::new(m, rng.index(0, 10));
+        for _ in 0..rng.index(10, 400) {
+            p.observe(rng.f64());
+        }
+        for (i, row) in p.transition_matrix().iter().enumerate() {
+            let s: f64 = row.iter().sum();
+            assert_that((s - 1.0).abs() < 1e-9, format!("row {i} sums to {s}"))?;
+            assert_that(row.iter().all(|&x| (0.0..=1.0).contains(&x)), "probability range")?;
+        }
+        let pred = p.predict();
+        assert_that((0.0..=1.0).contains(&pred), format!("prediction {pred} out of range"))
+    });
+}
+
+#[test]
+fn prop_platform_conserves_work_and_bounds_state() {
+    // Routing/batching/state invariant: delivered work never exceeds
+    // capacity, backlog stays within its bound, and no step loses work
+    // (delivered + backlog' = load + backlog up to the drop bound).
+    check("platform work conservation", 12, |rng| {
+        let steps = rng.index(50, 200);
+        let trace = bursty(&BurstyConfig {
+            steps,
+            mean_load: rng.range(0.2, 0.8),
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+        let policy = *rng.choose(&[
+            Policy::Dvfs(Mode::Proposed),
+            Policy::Dvfs(Mode::CoreOnly),
+            Policy::PowerGating,
+        ]);
+        let mut platform =
+            build_platform("tabla", PlatformConfig::default(), policy).map_err(|e| e)?;
+        let report = platform.run(&trace.loads);
+        let mut backlog = 0.0f64;
+        for (rec, &load) in report.records.iter().zip(&trace.loads) {
+            assert_that(
+                rec.delivered <= rec.freq_ratio + 1e-9,
+                format!("step {}: delivered {} > capacity {}", rec.step, rec.delivered, rec.freq_ratio),
+            )?;
+            assert_that(rec.backlog <= 1.0 + 1e-9, "backlog bound exceeded")?;
+            let expect = (load + backlog - rec.delivered).min(1.0);
+            assert_that(
+                (rec.backlog - expect).abs() < 1e-6,
+                format!("step {}: backlog {} != {}", rec.step, rec.backlog, expect),
+            )?;
+            backlog = rec.backlog;
+            assert_that(rec.power_w.is_finite() && rec.power_w > 0.0, "power sane")?;
+            assert_that((0.45..=0.80 + 1e-9).contains(&rec.vcore), "vcore in range")?;
+            assert_that((0.45..=0.95 + 1e-9).contains(&rec.vbram), "vbram in range")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_voltage_grid_snap_inverts_levels() {
+    check("grid snap inverts levels", 50, |rng| {
+        let grid = CharLibrary::stratix_iv_22nm().grid();
+        let i = rng.index(0, grid.vcore.len());
+        let j = rng.index(0, grid.vbram.len());
+        assert_that(grid.snap_core(grid.vcore[i]) == i, "snap_core")?;
+        assert_that(grid.snap_bram(grid.vbram[j]) == j, "snap_bram")
+    });
+}
+
+#[test]
+fn prop_json_round_trips_arbitrary_values() {
+    check("json round trip", 60, |rng| {
+        fn gen(rng: &mut wavescale::util::prng::Rng, depth: usize) -> Json {
+            match if depth == 0 { rng.index(0, 4) } else { rng.index(0, 6) } {
+                0 => Json::Null,
+                1 => Json::Bool(rng.bool(0.5)),
+                2 => Json::Num((rng.normal() * 1e3).round() / 16.0),
+                3 => {
+                    let n = rng.index(0, 12);
+                    Json::Str((0..n).map(|_| char::from(rng.index(32, 127) as u8)).collect())
+                }
+                4 => Json::Arr((0..rng.index(0, 5)).map(|_| gen(rng, depth - 1)).collect()),
+                _ => Json::Obj(
+                    (0..rng.index(0, 5))
+                        .map(|k| (format!("k{k}"), gen(rng, depth - 1)))
+                        .collect(),
+                ),
+            }
+        }
+        let v = gen(rng, 3);
+        let pretty = Json::parse(&v.to_string_pretty()).map_err(|e| e.to_string())?;
+        let compact = Json::parse(&v.to_string_compact()).map_err(|e| e.to_string())?;
+        assert_that(pretty == v && compact == v, "round trip mismatch")
+    });
+}
+
+#[test]
+fn prop_trace_csv_round_trips() {
+    check("workload csv round trip", 20, |rng| {
+        let t = bursty(&BurstyConfig {
+            steps: rng.index(10, 300),
+            mean_load: rng.range(0.1, 0.9),
+            seed: rng.next_u64(),
+            ..Default::default()
+        });
+        let u = Trace::from_csv(&t.to_csv(), "x").map_err(|e| e)?;
+        assert_that(t.len() == u.len(), "length")?;
+        for (a, b) in t.loads.iter().zip(&u.loads) {
+            assert_that((a - b).abs() < 1e-5, "value drift")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_char_library_shapes_hold_under_param_jitter() {
+    // The qualitative §III shapes must be robust to small calibration
+    // jitter (a guard against brittle constants).
+    check("char shapes robust", 20, |rng| {
+        let mut lib = CharLibrary::stratix_iv_22nm();
+        lib.logic.vth *= rng.range(0.95, 1.05);
+        lib.bram.leak_s *= rng.range(0.9, 1.1);
+        lib.routing.flat_frac = (lib.routing.flat_frac * rng.range(0.9, 1.1)).min(0.9);
+        let mem_static = lib.static_scale(ResourceClass::Bram, 0.80);
+        assert_that(mem_static < 0.35, format!("bram static {mem_static}"))?;
+        let logic = lib.delay_scale(ResourceClass::Logic, 0.60);
+        let rout = lib.delay_scale(ResourceClass::Routing, 0.60);
+        assert_that(logic > rout, "logic must stay more sensitive than routing")
+    });
+}
