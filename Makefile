@@ -1,0 +1,45 @@
+# wavescale build orchestration.
+#
+#   make artifacts   AOT-compile the JAX/Pallas layers into artifacts/
+#                    (requires python3 + jax; the rust stack runs without
+#                    them on the native fallback backend)
+#   make build       release build of the rust workspace
+#   make test        tier-1 verify: build + tests (artifacts built first
+#                    when python/jax are available, so PJRT paths run too)
+#   make bench       regenerate every paper figure/table CSV into results/
+#   make doc         rustdoc with warnings surfaced
+
+ARTIFACTS_DIR := artifacts
+PY            := python3
+
+.PHONY: artifacts build test bench doc clean
+
+artifacts:
+	cd python && $(PY) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
+
+build:
+	cargo build --release
+
+test:
+	@if $(PY) -c "import jax" 2>/dev/null; then \
+		$(MAKE) artifacts; \
+	else \
+		echo "(python/jax unavailable — skipping make artifacts; tests use the native backend)"; \
+	fi
+	cargo build --release
+	cargo test -q
+
+bench: build
+	@for b in fig1_delay fig2_dynamic_power fig3_static_power fig4_workload \
+	          fig5_alpha fig6_beta fig8_markov fig10_tabla_trace \
+	          fig11_voltage_trace fig12_accelerators table1_utilization \
+	          table2_summary pll_overhead; do \
+		cargo bench --bench $$b || exit 1; \
+	done
+
+doc:
+	cargo doc --no-deps
+
+clean:
+	cargo clean
+	rm -rf $(ARTIFACTS_DIR) results

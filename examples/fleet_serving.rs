@@ -1,0 +1,96 @@
+//! Live multi-tenant fleet serving: a ≥2-group mixed-tenant scenario
+//! through the sharded coordinator.
+//!
+//!     cargo run --release --example fleet_serving
+//!     WAVESCALE_SCENARIO=flash-crowd cargo run --release --example fleet_serving
+//!
+//! One `FleetServing` coordinator serves several benchmark groups (Tabla +
+//! DianNao + Stripes for the default mixed-tenant scenario) concurrently:
+//! per-instance bounded shard queues with least-loaded dispatch and work
+//! stealing, one DVFS domain (Markov predictor + voltage LUT) per group,
+//! and a shared fleet-level metrics/report surface. Inference runs through
+//! PJRT when `make artifacts` output is present and falls back to the
+//! deterministic native backend otherwise, so this example runs anywhere.
+//!
+//! The run drives one scenario step per DVFS epoch and finishes with the
+//! fleet report: per-group throughput, latency, power gain, and QoS
+//! violation rate.
+
+use std::time::{Duration, Instant};
+
+use wavescale::coordinator::{
+    drive_scenario, fleet_report_rows, FleetServing, FleetServingConfig, GroupConfig,
+};
+use wavescale::report::table;
+use wavescale::workload::Scenario;
+
+fn main() -> anyhow::Result<()> {
+    let scenario_name =
+        std::env::var("WAVESCALE_SCENARIO").unwrap_or_else(|_| "mixed-tenant".into());
+    let artifacts = std::path::PathBuf::from(
+        std::env::var("WAVESCALE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    let epochs = 16usize;
+    let epoch = Duration::from_millis(150);
+    let peak_rps = 4_000.0;
+    let n_instances = 2usize;
+
+    // One scenario step per DVFS epoch.
+    let scenario = Scenario::by_name(&scenario_name, epochs, 7)
+        .map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(scenario.tenants.len() >= 2, "need a multi-tenant scenario");
+
+    let cfg = FleetServingConfig {
+        groups: scenario
+            .tenants
+            .iter()
+            .map(|t| GroupConfig {
+                benchmark: t.benchmark.clone(),
+                share: t.share,
+                n_instances,
+            })
+            .collect(),
+        epoch,
+        ..Default::default()
+    };
+    let fleet = FleetServing::start(cfg, artifacts)?;
+    println!(
+        "scenario {scenario_name}: {} | {} groups x {n_instances} instances, {epochs} epochs @ {} ms",
+        scenario.description,
+        scenario.tenants.len(),
+        epoch.as_millis()
+    );
+
+    // ---- drive the scenario (shared driver, one step per epoch) ------
+    let t0 = Instant::now();
+    let submitted = drive_scenario(&fleet, &scenario, peak_rps, 42);
+    let wall = t0.elapsed();
+    let report = fleet.shutdown()?;
+
+    // ---- fleet report -------------------------------------------------
+    println!("\n== fleet report ({:.1} s wall, {submitted} submitted) ==", wall.as_secs_f64());
+    print!("{}", table(&fleet_report_rows(&report.stats)));
+    let s = &report.stats;
+    println!(
+        "energy {:.2} J vs nominal {:.2} J over {} epochs",
+        s.energy_j, s.nominal_energy_j, s.epochs
+    );
+
+    println!("\nper-group CC traces (first 4 epochs):");
+    for (g, recs) in report.stats.per_group.iter().zip(&report.epoch_records) {
+        for r in recs.iter().take(4) {
+            println!(
+                "  {:<10} epoch {:>2}: load {:.2} predicted {:.2} f/fnom {:.2} Vcore {:.3} Vbram {:.3} {:.2} W",
+                g.name, r.epoch, r.load, r.predicted, r.freq_ratio, r.vcore, r.vbram, r.power_w
+            );
+        }
+    }
+
+    anyhow::ensure!(s.completed > 0, "no requests served");
+    anyhow::ensure!(
+        report.stats.per_group.len() >= 2,
+        "fleet must serve at least two groups"
+    );
+    println!("\nfleet_serving OK");
+    Ok(())
+}

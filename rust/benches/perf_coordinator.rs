@@ -1,5 +1,11 @@
 //! Perf: serving coordinator — submit/dispatch overhead and end-to-end
-//! throughput with real PJRT inference. Requires `make artifacts`.
+//! throughput, across instance counts (sharded-queue scaling check).
+//!
+//! Uses the PJRT backend when `make artifacts` output exists and the
+//! deterministic native backend otherwise, so it runs in any environment.
+//! The interesting number is submit() cost: with per-instance shard queues
+//! it must stay flat (or improve) as n_instances grows, where the old
+//! single global mutex queue degraded under contention.
 
 mod common;
 
@@ -11,12 +17,7 @@ use wavescale::platform::{build_platform, PlatformConfig, Policy};
 use wavescale::util::prng::Rng;
 use wavescale::vscale::Mode;
 
-fn main() {
-    section("perf: serving coordinator");
-    if !common::artifacts_available() {
-        println!("(artifacts/ missing — run `make artifacts` first)");
-        return;
-    }
+fn run_at(n_instances: usize, payloads: &[Vec<f32>]) -> (f64, f64, u64, u64) {
     let platform = build_platform(
         "tabla",
         PlatformConfig::default(),
@@ -24,11 +25,12 @@ fn main() {
     )
     .unwrap();
     let cfg = ServingConfig {
-        n_instances: 2,
+        n_instances,
         epoch: Duration::from_millis(100),
         // Small service time so the bench measures the coordinator, not
         // the simulated FPGA occupancy.
         cycles_per_batch: 1.0e4,
+        queue_capacity: 16_384,
         ..Default::default()
     };
     let coord = Coordinator::start(
@@ -39,19 +41,15 @@ fn main() {
     )
     .expect("coordinator");
 
-    let mut rng = Rng::new(3);
-    let payloads: Vec<Vec<f32>> = (0..4096).map(|_| rng.normal_vec_f32(coord.in_dim)).collect();
-
     // Submit-side overhead.
     let t0 = Instant::now();
     let mut sent = 0u64;
-    for p in &payloads {
+    for p in payloads {
         if coord.submit(p.clone()).is_ok() {
             sent += 1;
         }
     }
     let submit_us = t0.elapsed().as_secs_f64() * 1e6 / payloads.len() as f64;
-    println!("submit(): {submit_us:.2} us/request ({sent} accepted)");
 
     // Drain and measure end-to-end throughput.
     let t0 = Instant::now();
@@ -61,14 +59,38 @@ fn main() {
         }
         std::thread::sleep(Duration::from_millis(10));
     }
-    let wall = t0.elapsed().as_secs_f64();
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
     let (stats, records) = coord.shutdown().expect("shutdown");
     println!(
-        "drained {} requests in {wall:.2} s -> {:.0} req/s | p50 {:.1} ms p99 {:.1} ms",
+        "n_instances={n_instances:>2} [{}]: submit {submit_us:.2} us/req | drained {} in {wall:.2} s \
+         -> {:.0} req/s | p50 {:.1} ms p99 {:.1} ms | stolen {} | CC epochs {}",
+        stats.backend,
         stats.completed,
         stats.completed as f64 / wall,
         stats.p50_latency_s * 1e3,
-        stats.p99_latency_s * 1e3
+        stats.p99_latency_s * 1e3,
+        stats.stolen_batches,
+        records.len()
     );
-    println!("CC epochs recorded: {}", records.len());
+    (submit_us, stats.completed as f64 / wall, stats.completed, stats.stolen_batches)
+}
+
+fn main() {
+    section("perf: serving coordinator (sharded submit path)");
+    if !common::artifacts_available() {
+        println!("(artifacts/ missing — using the native inference backend)");
+    }
+
+    let mut rng = Rng::new(3);
+    // Payload dim is fixed per variant (PJRT artifacts share the same
+    // geometry as the native fallback).
+    let in_dim = wavescale::coordinator::variant_dims("tabla").0;
+    let payloads: Vec<Vec<f32>> = (0..4096).map(|_| rng.normal_vec_f32(in_dim)).collect();
+
+    let (submit2, _tput2, _, _) = run_at(2, &payloads);
+    let (submit8, _tput8, _, _) = run_at(8, &payloads);
+    println!(
+        "submit-path scaling 2 -> 8 instances: {submit2:.2} -> {submit8:.2} us/req ({})",
+        if submit8 <= submit2 * 1.10 { "flat or better — sharding holds" } else { "regressed" }
+    );
 }

@@ -1,0 +1,84 @@
+//! Perf: multi-tenant fleet serving — two benchmark groups live on one
+//! sharded coordinator, mixed-tenant offered load, fleet report at the
+//! end. Runs with the PJRT backend when artifacts exist, native otherwise.
+
+mod common;
+
+use std::time::{Duration, Instant};
+
+use wavescale::bench_support::section;
+use wavescale::coordinator::{FleetServing, FleetServingConfig, GroupConfig};
+use wavescale::util::prng::Rng;
+
+fn main() {
+    section("perf: fleet serving (2-group mixed tenant)");
+    if !common::artifacts_available() {
+        println!("(artifacts/ missing — using the native inference backend)");
+    }
+
+    let cfg = FleetServingConfig {
+        groups: vec![
+            GroupConfig { benchmark: "tabla".into(), share: 0.5, n_instances: 2 },
+            GroupConfig { benchmark: "diannao".into(), share: 0.5, n_instances: 2 },
+        ],
+        epoch: Duration::from_millis(100),
+        cycles_per_batch: 1.0e4,
+        queue_capacity: 16_384,
+        ..Default::default()
+    };
+    let fleet = FleetServing::start(cfg, "artifacts".into()).expect("fleet");
+
+    let mut rng = Rng::new(11);
+    let per_group = 2_048usize;
+    let payloads: Vec<(usize, Vec<f32>)> = (0..2 * per_group)
+        .map(|i| {
+            let gi = i % 2;
+            (gi, rng.normal_vec_f32(fleet.in_dim(gi)))
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let mut sent = 0u64;
+    for (gi, p) in &payloads {
+        if fleet.submit(*gi, p.clone()).is_ok() {
+            sent += 1;
+        }
+    }
+    let submit_us = t0.elapsed().as_secs_f64() * 1e6 / payloads.len() as f64;
+    println!("submit(): {submit_us:.2} us/request across 2 groups ({sent} accepted)");
+
+    let t0 = Instant::now();
+    while fleet.stats().completed < sent {
+        if t0.elapsed() > Duration::from_secs(30) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let wall = t0.elapsed().as_secs_f64().max(1e-9);
+    let registry_snapshot = fleet.registry().snapshot();
+    let report = fleet.shutdown().expect("shutdown");
+    println!(
+        "drained {} requests in {wall:.2} s -> {:.0} req/s fleet-wide",
+        report.stats.completed,
+        report.stats.completed as f64 / wall
+    );
+    for g in &report.stats.per_group {
+        println!(
+            "  {:<10} [{}] done {} | stolen {} | p50 {:.1} ms p99 {:.1} ms | gain {:.2}x | violations {:.1}%",
+            g.name,
+            g.backend,
+            g.completed,
+            g.stolen_batches,
+            g.p50_latency_s * 1e3,
+            g.p99_latency_s * 1e3,
+            g.power_gain,
+            g.violation_rate * 100.0
+        );
+    }
+    println!(
+        "fleet gain {:.2}x | worst violation rate {:.1}% | {} epochs | registry: {registry_snapshot:?}",
+        report.stats.power_gain,
+        report.stats.violation_rate * 100.0,
+        report.stats.epochs
+    );
+}

@@ -7,12 +7,17 @@ use super::Utilization;
 /// One Table I row + generator hints.
 #[derive(Clone, Copy, Debug)]
 pub struct BenchmarkSpec {
+    /// Benchmark name (Table I).
     pub name: &'static str,
-    /// Table I resource counts.
+    /// Table I LAB count.
     pub labs: usize,
+    /// Table I DSP count.
     pub dsps: usize,
+    /// Table I M9K count.
     pub m9ks: usize,
+    /// Table I M144K count.
     pub m144ks: usize,
+    /// Table I I/O pin count.
     pub io_pins: usize,
     /// Table I post-P&R frequency (MHz) — the generator's timing target.
     pub freq_mhz: f64,
@@ -29,6 +34,7 @@ pub struct BenchmarkSpec {
 }
 
 impl BenchmarkSpec {
+    /// The spec's resource demand as an [`Utilization`] row.
     pub fn utilization(&self) -> Utilization {
         Utilization {
             labs: self.labs,
@@ -39,6 +45,7 @@ impl BenchmarkSpec {
         }
     }
 
+    /// Look up a Table I row by benchmark name.
     pub fn by_name(name: &str) -> Option<&'static BenchmarkSpec> {
         TABLE1.iter().find(|s| s.name == name)
     }

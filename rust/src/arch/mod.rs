@@ -16,21 +16,29 @@ pub use benchmarks::{BenchmarkSpec, TABLE1};
 /// a LAB holds [`DeviceFamily::luts_per_lab`] 6-input LUTs.
 #[derive(Clone, Debug)]
 pub struct Device {
+    /// Device name (family part number or synthetic id).
     pub name: &'static str,
+    /// Logic array blocks.
     pub labs: usize,
+    /// M9K block RAMs.
     pub m9ks: usize,
+    /// M144K block RAMs.
     pub m144ks: usize,
+    /// DSP hard macros.
     pub dsps: usize,
+    /// I/O pads (each holds [`DeviceFamily::io_per_pad`] pins).
     pub io_pads: usize,
     /// Relative routing capacity (switch+connection mux count per LAB).
     pub route_muxes_per_lab: usize,
 }
 
 impl Device {
+    /// Total LUT capacity of the device.
     pub fn luts(&self, family: &DeviceFamily) -> usize {
         self.labs * family.luts_per_lab
     }
 
+    /// Total routing mux count (leaks on the core rail).
     pub fn route_muxes(&self) -> usize {
         self.labs * self.route_muxes_per_lab
     }
@@ -39,17 +47,24 @@ impl Device {
 /// Post-P&R resource demand of a design (Table I row).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Utilization {
+    /// Logic array blocks used.
     pub labs: usize,
+    /// DSP macros used.
     pub dsps: usize,
+    /// M9K BRAMs used.
     pub m9ks: usize,
+    /// M144K BRAMs used.
     pub m144ks: usize,
     /// I/O *pins* (the paper reports pins; pads hold `io_per_pad` pins).
     pub io_pins: usize,
 }
 
+/// A family of devices sharing conventions (LUTs/LAB, pins/pad).
 #[derive(Clone, Debug)]
 pub struct DeviceFamily {
+    /// Family name.
     pub name: &'static str,
+    /// 6-input LUTs per LAB.
     pub luts_per_lab: usize,
     /// Pins per I/O pad (paper's VTR amendment: 2 -> 4).
     pub io_per_pad: usize,

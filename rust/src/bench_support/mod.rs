@@ -7,17 +7,25 @@
 
 use std::time::{Duration, Instant};
 
+/// Timing summary of one benchmarked closure.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Timed iterations performed.
     pub iters: usize,
+    /// Median per-iteration time.
     pub median: Duration,
+    /// Mean per-iteration time.
     pub mean: Duration,
+    /// 95th-percentile per-iteration time.
     pub p95: Duration,
+    /// Iterations per second over the whole run.
     pub throughput_hz: f64,
 }
 
 impl BenchResult {
+    /// One-line aligned report of the result.
     pub fn report(&self) -> String {
         format!(
             "{:<40} {:>10} iters  median {:>12?}  mean {:>12?}  p95 {:>12?}  ({:.1}/s)",

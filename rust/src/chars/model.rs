@@ -16,6 +16,7 @@ pub enum ResourceClass {
 }
 
 impl ResourceClass {
+    /// All four classes, in the paper's figure order.
     pub const ALL: [ResourceClass; 4] = [
         ResourceClass::Logic,
         ResourceClass::Routing,
@@ -23,6 +24,7 @@ impl ResourceClass {
         ResourceClass::Dsp,
     ];
 
+    /// Lower-case class name (matches the paper's figure legends).
     pub fn name(self) -> &'static str {
         match self {
             ResourceClass::Logic => "logic",
@@ -78,12 +80,16 @@ impl ClassParams {
 /// Index 0 is the nominal voltage; ascending index = descending voltage.
 #[derive(Clone, Debug)]
 pub struct VoltageGrid {
+    /// Core-rail levels, nominal first, descending.
     pub vcore: Vec<f64>,
+    /// BRAM-rail levels, nominal first, descending.
     pub vbram: Vec<f64>,
+    /// Converter step size (V).
     pub step: f64,
 }
 
 impl VoltageGrid {
+    /// Build both rails' level lists from nominal down to `v_floor`.
     pub fn new(vcore_nom: f64, vbram_nom: f64, v_floor: f64, step: f64) -> Self {
         let levels = |nom: f64| {
             let n = ((nom - v_floor) / step).round() as usize + 1;
@@ -97,6 +103,7 @@ impl VoltageGrid {
         snap(&self.vcore, v)
     }
 
+    /// Snap an arbitrary voltage to the nearest BRAM-rail grid index.
     pub fn snap_bram(&self, v: f64) -> usize {
         snap(&self.vbram, v)
     }
@@ -119,9 +126,13 @@ fn snap(levels: &[f64], v: f64) -> usize {
 /// sampled tables the optimizer and the AOT'd Voltage Selector consume.
 #[derive(Clone, Debug)]
 pub struct CharLibrary {
+    /// Logic (LUT/LAB) class parameters.
     pub logic: ClassParams,
+    /// Routing (switch/connection mux) class parameters.
     pub routing: ClassParams,
+    /// BRAM class parameters (own rail).
     pub bram: ClassParams,
+    /// DSP hard-macro class parameters.
     pub dsp: ClassParams,
     /// Junction temperature in °C (leakage scales exponentially with it;
     /// datacenter FPGA boards run hot — paper §I cites [16]).
@@ -130,9 +141,13 @@ pub struct CharLibrary {
     pub temp_s: f64,
 }
 
+/// Nominal core-rail voltage (V).
 pub const VCORE_NOM: f64 = 0.80;
+/// Nominal BRAM-rail voltage (V).
 pub const VBRAM_NOM: f64 = 0.95;
+/// Functional crash floor for every class (V).
 pub const V_CRASH: f64 = 0.50;
+/// DC-DC converter resolution (V).
 pub const V_STEP: f64 = 0.025;
 
 impl CharLibrary {
@@ -187,6 +202,7 @@ impl CharLibrary {
         }
     }
 
+    /// The behavioural parameters of a class.
     pub fn params(&self, class: ResourceClass) -> &ClassParams {
         match class {
             ResourceClass::Logic => &self.logic,
@@ -235,10 +251,12 @@ impl CharLibrary {
             .collect()
     }
 
+    /// Sample the dynamic-power scale table over the class's rail grid.
     pub fn dyn_table(&self, class: ResourceClass) -> Vec<f64> {
         self.rail_levels(class).iter().map(|&v| self.dyn_scale(class, v)).collect()
     }
 
+    /// Sample the static-power scale table over the class's rail grid.
     pub fn static_table(&self, class: ResourceClass) -> Vec<f64> {
         self.rail_levels(class)
             .iter()
@@ -257,6 +275,7 @@ impl CharLibrary {
 
     // ------------------------ serialization ------------------------
 
+    /// Serialize every class's parameters (plus temperature) to JSON.
     pub fn to_json(&self) -> Json {
         let class = |p: &ClassParams| {
             Json::obj(vec![
@@ -280,6 +299,7 @@ impl CharLibrary {
         ])
     }
 
+    /// Inverse of [`CharLibrary::to_json`].
     pub fn from_json(v: &Json) -> Result<Self, String> {
         let class = |name: &str| -> Result<ClassParams, String> {
             let o = v.get(name).ok_or_else(|| format!("missing class {name}"))?;

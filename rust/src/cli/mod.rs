@@ -8,9 +8,13 @@
 
 use std::collections::BTreeMap;
 
+/// Parsed command line: subcommand, `--flag value` pairs, `--switch`es
+/// and positionals.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// First non-flag token (empty when none was given).
     pub subcommand: String,
+    /// Non-flag tokens after the subcommand.
     pub positional: Vec<String>,
     flags: BTreeMap<String, String>,
     switches: Vec<String>,
@@ -45,26 +49,31 @@ impl Args {
         Ok(out)
     }
 
+    /// Value of `--name value`, if present.
     pub fn flag(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(String::as_str)
     }
 
+    /// Flag value with a default.
     pub fn flag_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.flag(name).unwrap_or(default)
     }
 
+    /// Flag parsed as f64 (`Ok(None)` when absent, `Err` on a bad number).
     pub fn flag_f64(&self, name: &str) -> Result<Option<f64>, String> {
         self.flag(name)
             .map(|v| v.parse::<f64>().map_err(|_| format!("--{name} must be a number")))
             .transpose()
     }
 
+    /// Flag parsed as usize (`Ok(None)` when absent, `Err` on a bad int).
     pub fn flag_usize(&self, name: &str) -> Result<Option<usize>, String> {
         self.flag(name)
             .map(|v| v.parse::<usize>().map_err(|_| format!("--{name} must be an integer")))
             .transpose()
     }
 
+    /// True when `--name` was given as a bare switch (or `--name true`).
     pub fn switch(&self, name: &str) -> bool {
         self.switches.iter().any(|s| s == name) || self.flag(name) == Some("true")
     }

@@ -9,9 +9,13 @@ use crate::workload::BurstyConfig;
 /// Top-level experiment configuration for `wavescale simulate`.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
+    /// Benchmark name (Table I).
     pub benchmark: String,
+    /// Power-management policy to simulate.
     pub policy: Policy,
+    /// Platform/simulator knobs.
     pub platform: PlatformConfig,
+    /// Workload generator knobs.
     pub workload: BurstyConfig,
 }
 
@@ -26,6 +30,7 @@ impl Default for SimConfig {
     }
 }
 
+/// Resolve a CLI mode name (`prop`, `core-only`, ...) to a [`Mode`].
 pub fn mode_by_name(name: &str) -> Result<Mode, String> {
     Ok(match name {
         "prop" | "proposed" => Mode::Proposed,
@@ -36,6 +41,8 @@ pub fn mode_by_name(name: &str) -> Result<Mode, String> {
     })
 }
 
+/// Resolve a CLI policy name (`prop`, `pg`, `oracle-prop`, ...) to a
+/// [`Policy`].
 pub fn policy_by_name(name: &str) -> Result<Policy, String> {
     Ok(match name {
         "power-gating" | "pg" => Policy::PowerGating,
@@ -111,6 +118,7 @@ impl SimConfig {
         self.validate()
     }
 
+    /// Check cross-field invariants (bins, margin, hurst, benchmark name).
     pub fn validate(&self) -> Result<(), String> {
         if self.platform.n_fpgas == 0 {
             return Err("n_fpgas must be >= 1".into());
@@ -130,6 +138,7 @@ impl SimConfig {
         Ok(())
     }
 
+    /// Serialize to the JSON shape [`SimConfig::apply_json`] accepts.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("benchmark", Json::Str(self.benchmark.clone())),

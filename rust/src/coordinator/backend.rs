@@ -1,0 +1,245 @@
+//! Inference backends for the serving workers (DESIGN.md S11.4).
+//!
+//! Each worker executes request batches through an [`InferenceBackend`]:
+//!
+//! * [`InferenceBackend::Pjrt`] — the AOT-compiled JAX/Pallas artifact via
+//!   the PJRT client (`runtime::DnnClient`), real numerics;
+//! * [`InferenceBackend::Native`] — a deterministic pure-Rust MLP with the
+//!   same batch/in/out geometry as the artifact. Used automatically when
+//!   `artifacts/` or the PJRT runtime is unavailable so the whole serving
+//!   stack (shards, stealing, DVFS epochs, fleet reports) stays exercisable
+//!   in any environment.
+//!
+//! The fallback is per-worker and logged once in the group stats
+//! (`backend` field); numbers produced by the native backend are *not*
+//! golden-checked model outputs, only a stand-in compute load.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::runtime::{DnnClient, Engine};
+use crate::util::prng::Rng;
+
+/// (in_dim, out_dim) per benchmark variant; mirrors the python layer's
+/// `DNN_VARIANTS` first/last dims (python/compile/model.py).
+pub fn variant_dims(variant: &str) -> (usize, usize) {
+    match variant {
+        "tabla" => (128, 64),
+        "dnnweaver" => (256, 64),
+        "diannao" => (512, 64),
+        "stripes" => (1024, 64),
+        "proteus" => (512, 64),
+        _ => (128, 64),
+    }
+}
+
+/// Requests per inference dispatch, matching the artifact batch
+/// (python/compile/model.py `DNN_BATCH`).
+pub const NATIVE_BATCH: usize = 16;
+
+const NATIVE_HIDDEN: usize = 64;
+
+fn variant_seed(variant: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in variant.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Deterministic pure-Rust MLP: `y = relu(x W1 + b1) W2 + b2`, He-style
+/// seeded weights. Geometry matches the served artifact so payload sizes
+/// and batch formation behave identically to the PJRT path.
+pub struct NativeDnn {
+    /// Benchmark variant this model stands in for.
+    pub variant: String,
+    /// Requests per inference dispatch.
+    pub batch: usize,
+    /// Input feature width.
+    pub in_dim: usize,
+    /// Output width (logits).
+    pub out_dim: usize,
+    w1: Vec<f32>,
+    b1: Vec<f32>,
+    w2: Vec<f32>,
+    b2: Vec<f32>,
+}
+
+impl NativeDnn {
+    /// Build the fallback model for a variant (deterministic per variant).
+    pub fn new(variant: &str) -> Self {
+        let (in_dim, out_dim) = variant_dims(variant);
+        let mut rng = Rng::new(variant_seed(variant));
+        let scale1 = (2.0 / in_dim as f64).sqrt();
+        let scale2 = (2.0 / NATIVE_HIDDEN as f64).sqrt();
+        let w1 = (0..in_dim * NATIVE_HIDDEN)
+            .map(|_| (rng.normal() * scale1) as f32)
+            .collect();
+        let w2 = (0..NATIVE_HIDDEN * out_dim)
+            .map(|_| (rng.normal() * scale2) as f32)
+            .collect();
+        NativeDnn {
+            variant: variant.to_string(),
+            batch: NATIVE_BATCH,
+            in_dim,
+            out_dim,
+            w1,
+            b1: vec![0.0; NATIVE_HIDDEN],
+            w2,
+            b2: vec![0.0; out_dim],
+        }
+    }
+
+    /// Run one batch (`x` is `batch × in_dim`, row-major).
+    pub fn infer(&self, x: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(
+            x.len() == self.batch * self.in_dim,
+            "native dnn_{}: expected {}x{} input, got {} floats",
+            self.variant,
+            self.batch,
+            self.in_dim,
+            x.len()
+        );
+        let mut h = vec![0.0f32; self.batch * NATIVE_HIDDEN];
+        for r in 0..self.batch {
+            let xr = &x[r * self.in_dim..(r + 1) * self.in_dim];
+            let hr = &mut h[r * NATIVE_HIDDEN..(r + 1) * NATIVE_HIDDEN];
+            for (k, &xv) in xr.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &self.w1[k * NATIVE_HIDDEN..(k + 1) * NATIVE_HIDDEN];
+                for (j, hv) in hr.iter_mut().enumerate() {
+                    *hv += xv * wrow[j];
+                }
+            }
+            for (j, hv) in hr.iter_mut().enumerate() {
+                *hv = (*hv + self.b1[j]).max(0.0);
+            }
+        }
+        let mut y = vec![0.0f32; self.batch * self.out_dim];
+        for r in 0..self.batch {
+            let hr = &h[r * NATIVE_HIDDEN..(r + 1) * NATIVE_HIDDEN];
+            let yr = &mut y[r * self.out_dim..(r + 1) * self.out_dim];
+            for (k, &hv) in hr.iter().enumerate() {
+                if hv == 0.0 {
+                    continue;
+                }
+                let wrow = &self.w2[k * self.out_dim..(k + 1) * self.out_dim];
+                for (j, yv) in yr.iter_mut().enumerate() {
+                    *yv += hv * wrow[j];
+                }
+            }
+            for (j, yv) in yr.iter_mut().enumerate() {
+                *yv += self.b2[j];
+            }
+        }
+        Ok(y)
+    }
+}
+
+/// A worker's inference engine: real PJRT artifact or native fallback.
+pub enum InferenceBackend {
+    /// AOT artifact executed through the PJRT client.
+    Pjrt(DnnClient),
+    /// Pure-Rust stand-in model (no artifacts / no PJRT required).
+    Native(NativeDnn),
+}
+
+impl InferenceBackend {
+    /// Open the best available backend for `variant`: PJRT when the
+    /// artifacts directory and runtime work, native otherwise.
+    pub fn open(artifacts_dir: &Path, variant: &str) -> InferenceBackend {
+        match Engine::open(artifacts_dir)
+            .and_then(|engine| DnnClient::new(&engine, variant))
+        {
+            Ok(client) => InferenceBackend::Pjrt(client),
+            Err(_) => InferenceBackend::Native(NativeDnn::new(variant)),
+        }
+    }
+
+    /// Short backend tag for stats/reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            InferenceBackend::Pjrt(_) => "pjrt",
+            InferenceBackend::Native(_) => "native",
+        }
+    }
+
+    /// Requests per inference dispatch.
+    pub fn batch(&self) -> usize {
+        match self {
+            InferenceBackend::Pjrt(c) => c.batch,
+            InferenceBackend::Native(n) => n.batch,
+        }
+    }
+
+    /// Input feature width.
+    pub fn in_dim(&self) -> usize {
+        match self {
+            InferenceBackend::Pjrt(c) => c.in_dim,
+            InferenceBackend::Native(n) => n.in_dim,
+        }
+    }
+
+    /// Output width.
+    pub fn out_dim(&self) -> usize {
+        match self {
+            InferenceBackend::Pjrt(c) => c.out_dim,
+            InferenceBackend::Native(n) => n.out_dim,
+        }
+    }
+
+    /// Run one batch (`x` is `batch × in_dim`, row-major).
+    pub fn infer(&self, x: &[f32]) -> Result<Vec<f32>> {
+        match self {
+            InferenceBackend::Pjrt(c) => c.infer(x),
+            InferenceBackend::Native(n) => n.infer(x),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_backend_is_deterministic_per_variant() {
+        let a = NativeDnn::new("tabla");
+        let b = NativeDnn::new("tabla");
+        let x: Vec<f32> = (0..a.batch * a.in_dim).map(|i| (i % 7) as f32 * 0.1).collect();
+        assert_eq!(a.infer(&x).unwrap(), b.infer(&x).unwrap());
+        let c = NativeDnn::new("diannao");
+        assert_eq!(c.in_dim, 512);
+        assert_ne!(a.w1, c.w1[..a.w1.len().min(c.w1.len())].to_vec());
+    }
+
+    #[test]
+    fn native_backend_validates_shape() {
+        let m = NativeDnn::new("tabla");
+        assert!(m.infer(&[0.0; 3]).is_err());
+        let y = m.infer(&vec![0.5; m.batch * m.in_dim]).unwrap();
+        assert_eq!(y.len(), m.batch * m.out_dim);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn open_falls_back_to_native_without_artifacts() {
+        let b = InferenceBackend::open(Path::new("/nonexistent-artifacts"), "tabla");
+        assert_eq!(b.name(), "native");
+        assert_eq!(b.batch(), NATIVE_BATCH);
+        assert_eq!(b.in_dim(), 128);
+        assert_eq!(b.out_dim(), 64);
+    }
+
+    #[test]
+    fn variant_dims_cover_table1() {
+        for v in ["tabla", "dnnweaver", "diannao", "stripes", "proteus"] {
+            let (i, o) = variant_dims(v);
+            assert!(i >= 64 && o == 64, "{v}");
+        }
+        assert_eq!(variant_dims("unknown"), (128, 64));
+    }
+}

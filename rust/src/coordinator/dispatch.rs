@@ -1,0 +1,116 @@
+//! Shard selection on the submit path (DESIGN.md S11.3).
+//!
+//! With per-instance shard queues the submitter must pick a shard per
+//! request. Two policies:
+//!
+//! * [`DispatchPolicy::RoundRobin`] — one atomic increment, perfectly fair
+//!   under uniform service times;
+//! * [`DispatchPolicy::LeastLoaded`] — scan the relaxed depth mirrors and
+//!   pick the shallowest shard (join-the-shortest-queue), which adapts to
+//!   stragglers at the cost of an O(shards) read-only scan.
+//!
+//! Both are lock-free; work stealing on the worker side covers whatever
+//! imbalance the policy leaves behind.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use super::shard::ShardQueue;
+
+/// How the submit path spreads requests over a group's shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchPolicy {
+    /// Rotate through shards with an atomic cursor.
+    RoundRobin,
+    /// Join the shortest queue using the shards' lock-free depths.
+    LeastLoaded,
+}
+
+impl DispatchPolicy {
+    /// Human-readable policy name (CLI / reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            DispatchPolicy::RoundRobin => "round-robin",
+            DispatchPolicy::LeastLoaded => "least-loaded",
+        }
+    }
+}
+
+/// Stateful shard picker shared by all submitters of one group.
+#[derive(Debug)]
+pub struct Dispatcher {
+    policy: DispatchPolicy,
+    cursor: AtomicUsize,
+}
+
+impl Dispatcher {
+    /// Build a dispatcher for the given policy.
+    pub fn new(policy: DispatchPolicy) -> Self {
+        Dispatcher { policy, cursor: AtomicUsize::new(0) }
+    }
+
+    /// The configured policy.
+    pub fn policy(&self) -> DispatchPolicy {
+        self.policy
+    }
+
+    /// Choose a shard index for the next request.
+    pub fn pick(&self, shards: &[Arc<ShardQueue>]) -> usize {
+        debug_assert!(!shards.is_empty());
+        match self.policy {
+            DispatchPolicy::RoundRobin => {
+                self.cursor.fetch_add(1, Ordering::Relaxed) % shards.len()
+            }
+            DispatchPolicy::LeastLoaded => {
+                let mut best = 0usize;
+                let mut best_depth = usize::MAX;
+                for (i, s) in shards.iter().enumerate() {
+                    let d = s.len();
+                    if d < best_depth {
+                        best_depth = d;
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Request;
+    use std::time::Instant;
+
+    fn shards(n: usize) -> Vec<Arc<ShardQueue>> {
+        (0..n).map(|_| Arc::new(ShardQueue::new(64))).collect()
+    }
+
+    fn req(id: u64) -> Request {
+        Request { id, payload: vec![], submitted: Instant::now() }
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let s = shards(3);
+        let d = Dispatcher::new(DispatchPolicy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|_| d.pick(&s)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(d.policy().name(), "round-robin");
+    }
+
+    #[test]
+    fn least_loaded_picks_shallowest() {
+        let s = shards(3);
+        for i in 0..4 {
+            s[0].try_push(req(i)).unwrap();
+        }
+        s[1].try_push(req(9)).unwrap();
+        let d = Dispatcher::new(DispatchPolicy::LeastLoaded);
+        assert_eq!(d.pick(&s), 2, "empty shard must win");
+        s[2].try_push(req(10)).unwrap();
+        s[2].try_push(req(11)).unwrap();
+        assert_eq!(d.pick(&s), 1, "now shard 1 is shallowest");
+    }
+}

@@ -1,0 +1,900 @@
+//! Multi-tenant sharded serving (DESIGN.md S11.5).
+//!
+//! Lifts `platform::fleet`'s *offline* group concept into the live request
+//! path: one [`FleetServing`] coordinator serves several benchmark groups
+//! (e.g. Tabla + DianNao) concurrently. Each group owns
+//!
+//! * its worker instances and their bounded [`ShardQueue`]s,
+//! * a [`Dispatcher`] (least-loaded or round-robin) plus work stealing,
+//! * its own Markov predictor, voltage LUT and published DVFS operating
+//!   point (an independent DVFS domain),
+//!
+//! while a single Central Controller thread walks every group each epoch
+//! (paper Fig. 9's CC, generalized to heterogeneous tenants) and a shared
+//! fleet-level [`Registry`](crate::metrics::Registry) + [`FleetServingStats`]
+//! aggregate power and QoS across groups — the live counterpart of
+//! `platform::fleet::FleetReport`.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::backend::InferenceBackend;
+use super::dispatch::{DispatchPolicy, Dispatcher};
+use super::shard::ShardQueue;
+use super::{Completion, EpochRecord, QueueFull, Request};
+use crate::markov::{MarkovPredictor, Predictor};
+use crate::metrics::{Counter, Gauge, Histogram, Registry};
+use crate::platform::{build_platform, PlatformConfig, Policy};
+use crate::power::DesignPower;
+use crate::runtime::{Engine, OpQuery, VoltageSelectorClient};
+use crate::vscale::{Mode, Optimizer, VoltageLut};
+
+/// Normalized nominal service clock (Hz); only the ratio to the published
+/// frequency matters for the simulated occupancy.
+pub(crate) const F_NOM_HZ: f64 = 1.0e8;
+
+/// One tenant group of a live fleet.
+#[derive(Clone, Debug)]
+pub struct GroupConfig {
+    /// Benchmark / artifact variant served by this group.
+    pub benchmark: String,
+    /// Fraction of fleet traffic this group is provisioned for.
+    pub share: f64,
+    /// Worker instances (== shards) in this group.
+    pub n_instances: usize,
+}
+
+/// Configuration of a multi-tenant serving fleet.
+#[derive(Clone, Debug)]
+pub struct FleetServingConfig {
+    /// Tenant groups; shares must sum to ~1.
+    pub groups: Vec<GroupConfig>,
+    /// DVFS epoch length (the simulator's τ, compressed for serving runs).
+    pub epoch: Duration,
+    /// Total queued requests a group may hold, split across its shards.
+    pub queue_capacity: usize,
+    /// Max wait for the first request of a batch before going idle-check.
+    pub batch_timeout: Duration,
+    /// Cycles one batch occupies an instance (service time = cycles / f).
+    pub cycles_per_batch: f64,
+    /// Voltage mode for every group's CC decisions.
+    pub mode: Mode,
+    /// Query the AOT'd Pallas Voltage Selector through PJRT when it is
+    /// available (falls back to the native optimizer point otherwise).
+    pub selector_via_pjrt: bool,
+    /// Markov bins per group predictor.
+    pub m_bins: usize,
+    /// Throughput margin t for the voltage LUTs.
+    pub margin_t: f64,
+    /// Pure-training epochs before predictions are trusted.
+    pub warmup_epochs: usize,
+    /// Shard selection policy on the submit path.
+    pub dispatch: DispatchPolicy,
+    /// Allow idle workers to steal from sibling shards.
+    pub steal: bool,
+}
+
+impl Default for FleetServingConfig {
+    fn default() -> Self {
+        FleetServingConfig {
+            groups: vec![GroupConfig {
+                benchmark: "tabla".into(),
+                share: 1.0,
+                n_instances: 2,
+            }],
+            epoch: Duration::from_millis(200),
+            queue_capacity: 4096,
+            batch_timeout: Duration::from_millis(5),
+            cycles_per_batch: 2.0e5,
+            mode: Mode::Proposed,
+            selector_via_pjrt: true,
+            m_bins: 10,
+            margin_t: 0.05,
+            warmup_epochs: 2,
+            dispatch: DispatchPolicy::LeastLoaded,
+            steal: true,
+        }
+    }
+}
+
+/// Shared state of one live group.
+pub(super) struct GroupShared {
+    pub(super) name: String,
+    pub(super) share: f64,
+    pub(super) n_instances: usize,
+    pub(super) shards: Vec<Arc<ShardQueue>>,
+    pub(super) dispatcher: Dispatcher,
+    pub(super) backend_name: &'static str,
+    pub(super) in_dim: usize,
+    pub(super) out_dim: usize,
+    pub(super) batch: usize,
+    freq_ratio: AtomicU64,
+    vcore_mv: AtomicU64,
+    vbram_mv: AtomicU64,
+    arrivals_this_epoch: AtomicU64,
+    pub(super) completed: Counter,
+    pub(super) rejected: Counter,
+    pub(super) failed: Counter,
+    pub(super) stolen_batches: Counter,
+    pub(super) violations: Counter,
+    pub(super) epochs: Counter,
+    pub(super) latency_us: Histogram,
+    pub(super) energy_j: Gauge,
+    pub(super) nominal_energy_j: Gauge,
+}
+
+impl GroupShared {
+    fn freq_ratio(&self) -> f64 {
+        f64::from_bits(self.freq_ratio.load(Ordering::Relaxed))
+    }
+}
+
+/// Pull a batch for worker `wid`: first from its home shard (waiting up to
+/// `wait` for the first request), then — when idle and `steal` is on —
+/// from the deepest sibling shard. Returns the batch and whether it was
+/// stolen.
+pub(super) fn claim_batch(
+    shards: &[Arc<ShardQueue>],
+    wid: usize,
+    max: usize,
+    wait: Duration,
+    steal: bool,
+) -> (Vec<Request>, bool) {
+    let batch = shards[wid].pop_wait(max, wait);
+    if !batch.is_empty() || !steal || shards.len() < 2 {
+        return (batch, false);
+    }
+    // Steal roughly half of the deepest sibling's backlog.
+    let mut victim = None;
+    let mut depth = 0usize;
+    for (i, s) in shards.iter().enumerate() {
+        if i != wid && s.len() > depth {
+            depth = s.len();
+            victim = Some(i);
+        }
+    }
+    match victim {
+        Some(v) => {
+            let take = depth.div_ceil(2).clamp(1, max);
+            let stolen = shards[v].steal_upto(take);
+            let got = !stolen.is_empty();
+            (stolen, got)
+        }
+        None => (Vec::new(), false),
+    }
+}
+
+/// Per-group serving statistics (live or final).
+#[derive(Clone, Debug)]
+pub struct GroupServingStats {
+    /// Group / benchmark name.
+    pub name: String,
+    /// Provisioned traffic share.
+    pub share: f64,
+    /// Worker instances in the group.
+    pub n_instances: usize,
+    /// Inference backend the group's workers use (`pjrt` or `native`).
+    pub backend: &'static str,
+    /// Requests served to completion.
+    pub completed: u64,
+    /// Requests refused by backpressure.
+    pub rejected: u64,
+    /// Requests dropped because the inference backend errored.
+    pub failed: u64,
+    /// Batches obtained by work stealing.
+    pub stolen_batches: u64,
+    /// Mean end-to-end latency (s).
+    pub mean_latency_s: f64,
+    /// Median end-to-end latency (s).
+    pub p50_latency_s: f64,
+    /// 99th-percentile end-to-end latency (s).
+    pub p99_latency_s: f64,
+    /// Energy integrated at the CC's operating points (J).
+    pub energy_j: f64,
+    /// Energy the group would have drawn at nominal V/f (J).
+    pub nominal_energy_j: f64,
+    /// Paper's headline metric: nominal energy / actual energy.
+    pub power_gain: f64,
+    /// Fraction of epochs whose demand exceeded served capacity.
+    pub violation_rate: f64,
+    /// DVFS epochs elapsed.
+    pub epochs: u64,
+    /// Currently published f / f_nom.
+    pub freq_ratio_now: f64,
+    /// Currently published core-rail voltage (V).
+    pub vcore_now: f64,
+    /// Currently published BRAM-rail voltage (V).
+    pub vbram_now: f64,
+    /// Requests currently queued across the group's shards.
+    pub queue_depth: usize,
+}
+
+/// Fleet-level aggregate over all groups.
+#[derive(Clone, Debug)]
+pub struct FleetServingStats {
+    /// Per-group breakdown.
+    pub per_group: Vec<GroupServingStats>,
+    /// Total completed requests.
+    pub completed: u64,
+    /// Total rejected requests.
+    pub rejected: u64,
+    /// Total backend-failed requests.
+    pub failed: u64,
+    /// Total stolen batches.
+    pub stolen_batches: u64,
+    /// Total integrated energy (J).
+    pub energy_j: f64,
+    /// Total nominal-baseline energy (J).
+    pub nominal_energy_j: f64,
+    /// Fleet power gain (nominal energy / actual energy).
+    pub power_gain: f64,
+    /// Worst per-group violation rate (QoS is per-tenant).
+    pub violation_rate: f64,
+    /// DVFS epochs elapsed (max over groups).
+    pub epochs: u64,
+}
+
+/// Final outcome of a fleet serving run.
+#[derive(Clone, Debug)]
+pub struct FleetServingReport {
+    /// Aggregate + per-group statistics at shutdown.
+    pub stats: FleetServingStats,
+    /// Per-group CC epoch traces (index-aligned with `stats.per_group`).
+    pub epoch_records: Vec<Vec<EpochRecord>>,
+}
+
+/// The live multi-tenant coordinator.
+pub struct FleetServing {
+    /// Configuration the fleet was started with.
+    pub cfg: FleetServingConfig,
+    groups: Vec<Arc<GroupShared>>,
+    registry: Arc<Registry>,
+    shutdown: Arc<AtomicBool>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    controller: Option<std::thread::JoinHandle<Vec<Vec<EpochRecord>>>>,
+    rejected_total: Arc<Counter>,
+    next_id: AtomicU64,
+}
+
+impl FleetServing {
+    /// Start a fleet, building each group's power model and optimizer from
+    /// its benchmark name (`platform::build_platform`).
+    pub fn start(cfg: FleetServingConfig, artifacts_dir: std::path::PathBuf) -> Result<Self> {
+        let mut built = Vec::with_capacity(cfg.groups.len());
+        for g in &cfg.groups {
+            let platform = build_platform(
+                &g.benchmark,
+                PlatformConfig::default(),
+                Policy::Dvfs(cfg.mode),
+            )
+            .map_err(anyhow::Error::msg)?;
+            built.push((platform.design.clone(), platform.optimizer_ref().clone()));
+        }
+        Self::start_with(cfg, artifacts_dir, built)
+    }
+
+    /// Start a fleet with pre-built `(design, optimizer)` pairs, one per
+    /// group (index-aligned with `cfg.groups`).
+    pub fn start_with(
+        cfg: FleetServingConfig,
+        artifacts_dir: std::path::PathBuf,
+        built: Vec<(DesignPower, Optimizer)>,
+    ) -> Result<Self> {
+        anyhow::ensure!(!cfg.groups.is_empty(), "fleet needs at least one group");
+        anyhow::ensure!(
+            built.len() == cfg.groups.len(),
+            "got {} design/optimizer pairs for {} groups",
+            built.len(),
+            cfg.groups.len()
+        );
+        let share_sum: f64 = cfg.groups.iter().map(|g| g.share).sum();
+        anyhow::ensure!(
+            (share_sum - 1.0).abs() < 1e-6,
+            "group shares sum to {share_sum}, expected 1"
+        );
+        for g in &cfg.groups {
+            anyhow::ensure!(g.share > 0.0, "{}: share must be positive", g.benchmark);
+            anyhow::ensure!(g.n_instances >= 1, "{}: need >= 1 instance", g.benchmark);
+        }
+
+        let registry = Arc::new(Registry::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        // ---- per-group shared state -----------------------------------
+        let mut groups: Vec<Arc<GroupShared>> = Vec::with_capacity(cfg.groups.len());
+        for g in &cfg.groups {
+            // Probe once for dims + backend availability; workers re-open
+            // their own backend (PJRT clients are not shared across
+            // threads).
+            let probe = InferenceBackend::open(&artifacts_dir, &g.benchmark);
+            let per_shard = cfg.queue_capacity.div_ceil(g.n_instances);
+            groups.push(Arc::new(GroupShared {
+                name: g.benchmark.clone(),
+                share: g.share,
+                n_instances: g.n_instances,
+                shards: (0..g.n_instances)
+                    .map(|_| Arc::new(ShardQueue::new(per_shard)))
+                    .collect(),
+                dispatcher: Dispatcher::new(cfg.dispatch),
+                backend_name: probe.name(),
+                in_dim: probe.in_dim(),
+                out_dim: probe.out_dim(),
+                batch: probe.batch(),
+                freq_ratio: AtomicU64::new(1.0f64.to_bits()),
+                vcore_mv: AtomicU64::new(800),
+                vbram_mv: AtomicU64::new(950),
+                arrivals_this_epoch: AtomicU64::new(0),
+                completed: Counter::default(),
+                rejected: Counter::default(),
+                failed: Counter::default(),
+                stolen_batches: Counter::default(),
+                violations: Counter::default(),
+                epochs: Counter::default(),
+                latency_us: Histogram::latency_us(),
+                energy_j: Gauge::default(),
+                nominal_energy_j: Gauge::default(),
+            }));
+        }
+
+        // ---- workers ---------------------------------------------------
+        let mut workers = Vec::new();
+        for (gi, gshared) in groups.iter().enumerate() {
+            for wid in 0..cfg.groups[gi].n_instances {
+                let g = gshared.clone();
+                let dir = artifacts_dir.clone();
+                let stop = shutdown.clone();
+                let fleet_completed = registry.counter("fleet.completed");
+                let cycles = cfg.cycles_per_batch;
+                let batch_timeout = cfg.batch_timeout;
+                let steal = cfg.steal;
+                workers.push(std::thread::spawn(move || {
+                    let backend = InferenceBackend::open(&dir, &g.name);
+                    let batch_cap = backend.batch();
+                    let in_dim = backend.in_dim();
+                    loop {
+                        let (mut reqs, stolen) =
+                            claim_batch(&g.shards, wid, batch_cap, batch_timeout, steal);
+                        if stolen {
+                            g.stolen_batches.inc();
+                        }
+                        if reqs.is_empty() {
+                            if stop.load(Ordering::Relaxed)
+                                && g.shards.iter().all(|s| s.is_empty())
+                            {
+                                return;
+                            }
+                            continue;
+                        }
+                        // Top up a partial batch without waiting.
+                        if reqs.len() < batch_cap {
+                            reqs.extend(g.shards[wid].pop_upto(batch_cap - reqs.len()));
+                        }
+
+                        // ---- real inference (PJRT or native) -----------
+                        let mut x = vec![0.0f32; batch_cap * in_dim];
+                        for (i, r) in reqs.iter().enumerate() {
+                            x[i * in_dim..(i + 1) * in_dim].copy_from_slice(&r.payload);
+                        }
+                        // A failing backend must not kill the worker: a dead
+                        // worker leaves its shard undrained and shutdown()
+                        // would wait on it forever. Count and move on.
+                        let y = match backend.infer(&x) {
+                            Ok(y) => y,
+                            Err(_) => {
+                                g.failed.add(reqs.len() as u64);
+                                continue;
+                            }
+                        };
+
+                        // ---- simulated FPGA occupancy ------------------
+                        let fr = g.freq_ratio().max(0.05);
+                        let service = cycles / (F_NOM_HZ * fr);
+                        std::thread::sleep(Duration::from_secs_f64(service));
+
+                        let now = Instant::now();
+                        for (i, r) in reqs.iter().enumerate() {
+                            let lat = now.duration_since(r.submitted);
+                            g.latency_us.observe(lat.as_secs_f64() * 1e6);
+                            g.completed.inc();
+                            fleet_completed.inc();
+                            let _ = Completion {
+                                id: r.id,
+                                worker: wid,
+                                latency: lat,
+                                y0: y[i * backend.out_dim()],
+                            };
+                        }
+                    }
+                }));
+            }
+        }
+
+        // ---- central controller (one thread for the whole fleet) -------
+        let controller = {
+            let groups = groups.clone();
+            let cfg2 = cfg.clone();
+            let dir = artifacts_dir.clone();
+            let stop = shutdown.clone();
+            std::thread::spawn(move || -> Vec<Vec<EpochRecord>> {
+                let engine = if cfg2.selector_via_pjrt {
+                    Engine::open(&dir).ok()
+                } else {
+                    None
+                };
+                struct GroupCc {
+                    design: DesignPower,
+                    optimizer: Optimizer,
+                    lut: VoltageLut,
+                    predictor: MarkovPredictor,
+                    backlog: f64,
+                    cap: f64,
+                    // Operating point that served the epoch now ending
+                    // (published at the END of the previous iteration).
+                    served_fr: f64,
+                    served_vcore: f64,
+                    served_vbram: f64,
+                }
+                let mut ccs: Vec<GroupCc> = built
+                    .into_iter()
+                    .zip(&groups)
+                    .map(|((design, optimizer), g)| {
+                        let lut = VoltageLut::build(
+                            &optimizer,
+                            cfg2.m_bins,
+                            cfg2.margin_t,
+                            cfg2.mode,
+                        );
+                        let cap = g.n_instances as f64
+                            * (F_NOM_HZ / cfg2.cycles_per_batch)
+                            * g.batch as f64
+                            * cfg2.epoch.as_secs_f64();
+                        let served_vcore = design.chars.logic.v_nom;
+                        let served_vbram = design.chars.bram.v_nom;
+                        GroupCc {
+                            design,
+                            optimizer,
+                            lut,
+                            predictor: MarkovPredictor::new(cfg2.m_bins, cfg2.warmup_epochs),
+                            backlog: 0.0,
+                            cap,
+                            served_fr: 1.0,
+                            served_vcore,
+                            served_vbram,
+                        }
+                    })
+                    .collect();
+                let mut records: Vec<Vec<EpochRecord>> =
+                    vec![Vec::new(); groups.len()];
+                let mut epoch = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(cfg2.epoch);
+                    for (gi, g) in groups.iter().enumerate() {
+                        let cc = &mut ccs[gi];
+                        let arrivals =
+                            g.arrivals_this_epoch.swap(0, Ordering::Relaxed) as f64;
+                        let load = (arrivals / cc.cap).min(1.0);
+                        cc.predictor.observe(load);
+                        let predicted = cc.predictor.predict();
+
+                        let entry = cc.lut.entry_for_load(predicted);
+                        let mut choice = entry.point;
+                        // Refine through the AOT'd Voltage Selector when
+                        // available; keep the native point on any error.
+                        if let Some(engine) = &engine {
+                            let vs = VoltageSelectorClient::new(engine);
+                            let q = OpQuery {
+                                alpha: cc.optimizer.tables.op.alpha as f32,
+                                beta: cc.optimizer.tables.op.beta as f32,
+                                gamma_l: cc.optimizer.tables.op.gamma_l as f32,
+                                gamma_m: cc.optimizer.tables.op.gamma_m as f32,
+                                sw: (1.0 / entry.freq_ratio) as f32,
+                            };
+                            if let Ok(choices) =
+                                vs.select(cfg2.mode, &cc.optimizer.tables, &[q])
+                            {
+                                if let Some(c) = choices.first() {
+                                    choice.vcore = c.vcore;
+                                    choice.vbram = c.vbram;
+                                    choice.power_norm = c.power_norm;
+                                }
+                            }
+                        }
+
+                        // ---- per-tenant QoS accounting ------------------
+                        // Demand is judged against the operating point that
+                        // actually served this epoch, not the one about to
+                        // be published.
+                        let demand = load + cc.backlog;
+                        let delivered = demand.min(cc.served_fr);
+                        cc.backlog = (demand - delivered).min(1.0);
+                        if demand - delivered > 1e-9 {
+                            g.violations.inc();
+                        }
+
+                        // ---- energy integration + trace row -------------
+                        // Charged at the point that served the epoch; the
+                        // freshly chosen point is charged next epoch.
+                        let f_mhz = cc.design.spec.freq_mhz * cc.served_fr;
+                        let p = cc
+                            .design
+                            .breakdown(cc.served_vcore, cc.served_vbram, f_mhz)
+                            .total_w()
+                            * g.n_instances as f64;
+                        let p_nom =
+                            cc.design.nominal().total_w() * g.n_instances as f64;
+                        g.energy_j.add(p * cfg2.epoch.as_secs_f64());
+                        g.nominal_energy_j.add(p_nom * cfg2.epoch.as_secs_f64());
+                        g.epochs.inc();
+                        records[gi].push(EpochRecord {
+                            epoch,
+                            load,
+                            predicted,
+                            freq_ratio: cc.served_fr,
+                            vcore: cc.served_vcore,
+                            vbram: cc.served_vbram,
+                            power_w: p,
+                        });
+
+                        // ---- publish the next operating point -----------
+                        g.freq_ratio
+                            .store(entry.freq_ratio.to_bits(), Ordering::Relaxed);
+                        g.vcore_mv
+                            .store((choice.vcore * 1000.0) as u64, Ordering::Relaxed);
+                        g.vbram_mv
+                            .store((choice.vbram * 1000.0) as u64, Ordering::Relaxed);
+                        cc.served_fr = entry.freq_ratio;
+                        cc.served_vcore = choice.vcore;
+                        cc.served_vbram = choice.vbram;
+                    }
+                    epoch += 1;
+                }
+                records
+            })
+        };
+
+        let rejected_total = registry.counter("fleet.rejected");
+        Ok(FleetServing {
+            cfg,
+            groups,
+            registry,
+            shutdown,
+            workers,
+            controller: Some(controller),
+            rejected_total,
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Number of tenant groups.
+    pub fn n_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Benchmark names of the groups, in index order.
+    pub fn group_names(&self) -> Vec<String> {
+        self.groups.iter().map(|g| g.name.clone()).collect()
+    }
+
+    /// Index of the group serving `benchmark`, if any.
+    pub fn group_index(&self, benchmark: &str) -> Option<usize> {
+        self.groups.iter().position(|g| g.name == benchmark)
+    }
+
+    /// Input feature width of a group's model.
+    pub fn in_dim(&self, group: usize) -> usize {
+        self.groups[group].in_dim
+    }
+
+    /// Artifact batch size of a group's model.
+    pub fn batch(&self, group: usize) -> usize {
+        self.groups[group].batch
+    }
+
+    /// Requests currently queued across a group's shards.
+    pub fn queue_len(&self, group: usize) -> usize {
+        self.groups[group].shards.iter().map(|s| s.len()).sum()
+    }
+
+    /// The shared fleet-level metrics registry.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Submit one request to a group; `Err(QueueFull)` signals that every
+    /// shard of the group is at capacity (backpressure).
+    pub fn submit(&self, group: usize, payload: Vec<f32>) -> std::result::Result<u64, QueueFull> {
+        let g = &self.groups[group];
+        assert_eq!(
+            payload.len(),
+            g.in_dim,
+            "payload must be {} floats for group {}",
+            g.in_dim,
+            g.name
+        );
+        // The CC's workload counter sees *offered* demand (paper Fig. 9's
+        // arrival counter), so rejected requests still push the predictor
+        // toward higher frequency — essential under flash-crowd overload,
+        // where admitted traffic alone is capped by the current drain rate.
+        g.arrivals_this_epoch.fetch_add(1, Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let mut req = Request { id, payload, submitted: Instant::now() };
+        let first = g.dispatcher.pick(&g.shards);
+        match g.shards[first].try_push(req) {
+            Ok(()) => {}
+            Err(back) => {
+                req = back;
+                let n = g.shards.len();
+                let mut placed = false;
+                for step in 1..n {
+                    let idx = (first + step) % n;
+                    match g.shards[idx].try_push(req) {
+                        Ok(()) => {
+                            placed = true;
+                            break;
+                        }
+                        Err(back) => req = back,
+                    }
+                }
+                if !placed {
+                    g.rejected.inc();
+                    self.rejected_total.inc();
+                    return Err(QueueFull);
+                }
+            }
+        }
+        Ok(id)
+    }
+
+    /// Submit by benchmark name (convenience over [`FleetServing::submit`]).
+    pub fn submit_to(
+        &self,
+        benchmark: &str,
+        payload: Vec<f32>,
+    ) -> std::result::Result<u64, QueueFull> {
+        let gi = self
+            .group_index(benchmark)
+            .unwrap_or_else(|| panic!("no group serves {benchmark}"));
+        self.submit(gi, payload)
+    }
+
+    fn group_stats(&self, g: &GroupShared) -> GroupServingStats {
+        let energy = g.energy_j.get();
+        let nominal = g.nominal_energy_j.get();
+        let epochs = g.epochs.get();
+        GroupServingStats {
+            name: g.name.clone(),
+            share: g.share,
+            n_instances: g.n_instances,
+            backend: g.backend_name,
+            completed: g.completed.get(),
+            rejected: g.rejected.get(),
+            failed: g.failed.get(),
+            stolen_batches: g.stolen_batches.get(),
+            mean_latency_s: g.latency_us.mean() / 1e6,
+            p50_latency_s: g.latency_us.quantile(0.5) / 1e6,
+            p99_latency_s: g.latency_us.quantile(0.99) / 1e6,
+            energy_j: energy,
+            nominal_energy_j: nominal,
+            power_gain: if energy > 0.0 { nominal / energy } else { 1.0 },
+            violation_rate: g.violations.get() as f64 / epochs.max(1) as f64,
+            epochs,
+            freq_ratio_now: g.freq_ratio(),
+            vcore_now: g.vcore_mv.load(Ordering::Relaxed) as f64 / 1000.0,
+            vbram_now: g.vbram_mv.load(Ordering::Relaxed) as f64 / 1000.0,
+            queue_depth: g.shards.iter().map(|s| s.len()).sum(),
+        }
+    }
+
+    /// Aggregate fleet + per-group statistics (live snapshot).
+    pub fn stats(&self) -> FleetServingStats {
+        let per_group: Vec<GroupServingStats> =
+            self.groups.iter().map(|g| self.group_stats(g)).collect();
+        let energy: f64 = per_group.iter().map(|g| g.energy_j).sum();
+        let nominal: f64 = per_group.iter().map(|g| g.nominal_energy_j).sum();
+        FleetServingStats {
+            completed: per_group.iter().map(|g| g.completed).sum(),
+            rejected: per_group.iter().map(|g| g.rejected).sum(),
+            failed: per_group.iter().map(|g| g.failed).sum(),
+            stolen_batches: per_group.iter().map(|g| g.stolen_batches).sum(),
+            energy_j: energy,
+            nominal_energy_j: nominal,
+            power_gain: if energy > 0.0 { nominal / energy } else { 1.0 },
+            violation_rate: per_group
+                .iter()
+                .map(|g| g.violation_rate)
+                .fold(0.0, f64::max),
+            epochs: per_group.iter().map(|g| g.epochs).max().unwrap_or(0),
+            per_group,
+        }
+    }
+
+    /// Stop accepting work, drain every shard, join workers and the CC,
+    /// and return the final report with per-group epoch traces.
+    pub fn shutdown(mut self) -> Result<FleetServingReport> {
+        self.shutdown.store(true, Ordering::Relaxed);
+        for g in &self.groups {
+            for s in &g.shards {
+                s.wake_all();
+            }
+        }
+        for w in self.workers.drain(..) {
+            w.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+        }
+        let epoch_records = self
+            .controller
+            .take()
+            .unwrap()
+            .join()
+            .map_err(|_| anyhow::anyhow!("controller panicked"))?;
+        Ok(FleetServingReport { stats: self.stats(), epoch_records })
+    }
+}
+
+/// Drive a scenario against a running fleet: one scenario step per fleet
+/// epoch, offered load per group = `trace · share · peak_rps`, spread
+/// over 16 bursts per epoch, plus one epoch of drain time at the end.
+/// Returns the number of accepted submissions. Shared by the
+/// `serve-fleet` CLI subcommand and `examples/fleet_serving.rs`.
+pub fn drive_scenario(
+    fleet: &FleetServing,
+    scenario: &crate::workload::Scenario,
+    peak_rps: f64,
+    seed: u64,
+) -> u64 {
+    let epoch = fleet.cfg.epoch;
+    let mut rng = crate::util::prng::Rng::new(seed);
+    let mut accepted = 0u64;
+    for step in 0..scenario.steps() {
+        let epoch_start = Instant::now();
+        let targets: Vec<usize> = scenario
+            .tenants
+            .iter()
+            .map(|t| {
+                (t.trace.loads[step] * t.share * peak_rps * epoch.as_secs_f64()).round()
+                    as usize
+            })
+            .collect();
+        let bursts = 16usize;
+        let gap = epoch / bursts as u32;
+        for b in 0..bursts {
+            for (gi, &target) in targets.iter().enumerate() {
+                let from = (b * target) / bursts;
+                let upto = ((b + 1) * target) / bursts;
+                for _ in from..upto {
+                    if fleet.submit(gi, rng.normal_vec_f32(fleet.in_dim(gi))).is_ok() {
+                        accepted += 1;
+                    }
+                }
+            }
+            std::thread::sleep(gap);
+        }
+        if epoch_start.elapsed() < epoch {
+            std::thread::sleep(epoch - epoch_start.elapsed());
+        }
+    }
+    std::thread::sleep(epoch); // drain window
+    accepted
+}
+
+/// Render a fleet report as aligned-table rows (header, one row per
+/// group, fleet totals last) for `report::table`.
+pub fn fleet_report_rows(stats: &FleetServingStats) -> Vec<Vec<String>> {
+    let mut rows = vec![crate::report::row([
+        "group", "share", "backend", "done", "rejected", "failed", "stolen", "p50_ms",
+        "p99_ms", "gain", "violations%",
+    ])];
+    for g in &stats.per_group {
+        rows.push(vec![
+            g.name.clone(),
+            format!("{:.2}", g.share),
+            g.backend.to_string(),
+            g.completed.to_string(),
+            g.rejected.to_string(),
+            g.failed.to_string(),
+            g.stolen_batches.to_string(),
+            format!("{:.1}", g.p50_latency_s * 1e3),
+            format!("{:.1}", g.p99_latency_s * 1e3),
+            format!("{:.2}x", g.power_gain),
+            format!("{:.1}", g.violation_rate * 100.0),
+        ]);
+    }
+    rows.push(vec![
+        "fleet".into(),
+        "1.00".into(),
+        "-".into(),
+        stats.completed.to_string(),
+        stats.rejected.to_string(),
+        stats.failed.to_string(),
+        stats.stolen_batches.to_string(),
+        "-".into(),
+        "-".into(),
+        format!("{:.2}x", stats.power_gain),
+        format!("{:.1}", stats.violation_rate * 100.0),
+    ]);
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reqs(n: usize) -> Vec<Request> {
+        (0..n)
+            .map(|i| Request {
+                id: i as u64,
+                payload: vec![0.0; 2],
+                submitted: Instant::now(),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn claim_batch_steals_from_deepest_sibling_when_idle() {
+        let shards: Vec<Arc<ShardQueue>> =
+            (0..3).map(|_| Arc::new(ShardQueue::new(64))).collect();
+        for r in reqs(8) {
+            shards[0].try_push(r).unwrap();
+        }
+        for r in reqs(2) {
+            shards[1].try_push(r).unwrap();
+        }
+        // Worker 2 is idle; it must steal ~half of shard 0's backlog.
+        let (batch, stolen) =
+            claim_batch(&shards, 2, 16, Duration::from_millis(1), true);
+        assert!(stolen, "idle worker must steal");
+        assert_eq!(batch.len(), 4);
+        assert_eq!(shards[0].len(), 4);
+        assert_eq!(shards[1].len(), 2, "shallower sibling untouched");
+    }
+
+    #[test]
+    fn claim_batch_prefers_home_shard_and_respects_steal_flag() {
+        let shards: Vec<Arc<ShardQueue>> =
+            (0..2).map(|_| Arc::new(ShardQueue::new(64))).collect();
+        for r in reqs(3) {
+            shards[1].try_push(r).unwrap();
+        }
+        shards[0]
+            .try_push(Request { id: 99, payload: vec![], submitted: Instant::now() })
+            .unwrap();
+        let (batch, stolen) =
+            claim_batch(&shards, 0, 16, Duration::from_millis(1), true);
+        assert!(!stolen, "home work comes first");
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 99);
+
+        // With stealing disabled the idle worker stays empty-handed.
+        let (batch, stolen) =
+            claim_batch(&shards, 0, 16, Duration::from_millis(1), false);
+        assert!(!stolen);
+        assert!(batch.is_empty());
+        assert_eq!(shards[1].len(), 3);
+    }
+
+    #[test]
+    fn start_validates_group_shares() {
+        let cfg = FleetServingConfig {
+            groups: vec![GroupConfig {
+                benchmark: "tabla".into(),
+                share: 0.5,
+                n_instances: 1,
+            }],
+            ..Default::default()
+        };
+        assert!(FleetServing::start(cfg, "artifacts".into()).is_err());
+        let cfg = FleetServingConfig { groups: vec![], ..Default::default() };
+        assert!(FleetServing::start(cfg, "artifacts".into()).is_err());
+        let cfg = FleetServingConfig {
+            groups: vec![GroupConfig {
+                benchmark: "not-a-benchmark".into(),
+                share: 1.0,
+                n_instances: 1,
+            }],
+            ..Default::default()
+        };
+        assert!(FleetServing::start(cfg, "artifacts".into()).is_err());
+    }
+}

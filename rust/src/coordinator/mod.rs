@@ -2,45 +2,65 @@
 //! (DESIGN.md S11).
 //!
 //! Layer-3 topology (Fig. 9 adapted to a serving framework):
-//!   * a bounded central request queue with backpressure,
+//!   * per-instance bounded **shard queues** with lock-free depth mirrors,
+//!     least-loaded/round-robin dispatch and work stealing on idle workers
+//!     (DESIGN.md S11.2–S11.3) — the old single global `Mutex<VecDeque>`
+//!     queue is gone,
 //!   * one worker thread per simulated FPGA instance, each executing the
-//!     benchmark's AOT-compiled DNN artifact through its own PJRT client
-//!     (batch formation: up to the artifact batch, bounded wait),
-//!   * a Central Controller (CC) epoch loop: per DVFS epoch it reads the
-//!     arrival counter, updates the Markov predictor, picks the frequency
-//!     bin, queries the Voltage Selector (the AOT'd Pallas artifact via
-//!     PJRT — or the native optimizer as fallback), and publishes the
-//!     (freq_ratio, Vcore, Vbram) the workers honour next epoch.
+//!     benchmark's AOT-compiled DNN artifact through its own PJRT client —
+//!     or the deterministic native backend when PJRT/artifacts are absent
+//!     (DESIGN.md S11.4),
+//!   * a Central Controller (CC) epoch loop per fleet: for every tenant
+//!     group and DVFS epoch it reads the arrival counter, updates that
+//!     group's Markov predictor, picks the frequency bin, queries the
+//!     Voltage Selector (the AOT'd Pallas artifact via PJRT — or the
+//!     native optimizer as fallback), and publishes the
+//!     (freq_ratio, Vcore, Vbram) the group's workers honour next epoch.
+//!
+//! Multi-tenant serving lives in [`fleet::FleetServing`]: several
+//! benchmark groups (Tabla + DianNao + ...) share one coordinator, each
+//! with its own predictor, voltage LUT and DVFS domain, reported through a
+//! shared fleet-level metrics surface (DESIGN.md S11.5). [`Coordinator`]
+//! is the single-tenant facade over a one-group fleet, kept for the
+//! simple serve path and the perf benches.
 //!
 //! The FPGA's *service rate* is simulated: a batch occupies its instance
 //! for `cycles / (f_nom · freq_ratio)`; the numeric inference itself is
-//! real PJRT execution. Energy is integrated from the power model at the
+//! real execution. Energy is integrated from the power model at the
 //! operating point of each epoch. Rust threads + channels only — no
 //! external runtime (DESIGN.md §6).
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+pub mod backend;
+pub mod dispatch;
+pub mod fleet;
+pub mod shard;
+
+pub use backend::{variant_dims, InferenceBackend, NativeDnn};
+pub use dispatch::{DispatchPolicy, Dispatcher};
+pub use fleet::{
+    drive_scenario, fleet_report_rows, FleetServing, FleetServingConfig, FleetServingReport,
+    FleetServingStats, GroupConfig, GroupServingStats,
+};
+pub use shard::ShardQueue;
+
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::markov::{MarkovPredictor, Predictor};
-use crate::metrics::{Counter, Gauge, Histogram};
 use crate::power::DesignPower;
-use crate::runtime::{DnnClient, Engine, OpQuery, VoltageSelectorClient};
-use crate::vscale::{Mode, Optimizer, VoltageLut};
+use crate::vscale::{Mode, Optimizer};
 
-/// Coordinator configuration.
+/// Single-tenant coordinator configuration.
 #[derive(Clone, Debug)]
 pub struct ServingConfig {
     /// Benchmark / artifact variant (tabla, dnnweaver, ...).
     pub variant: String,
-    /// Number of simulated FPGA instances (worker threads).
+    /// Number of simulated FPGA instances (worker threads == shards).
     pub n_instances: usize,
     /// DVFS epoch length (the simulator's τ, compressed for serving runs).
     pub epoch: Duration,
-    /// Max requests queued before submit() applies backpressure.
+    /// Max requests queued before submit() applies backpressure (split
+    /// evenly across the per-instance shards).
     pub queue_capacity: usize,
     /// Max wait to fill a batch before dispatching a partial one.
     pub batch_timeout: Duration,
@@ -51,10 +71,16 @@ pub struct ServingConfig {
     /// Use the AOT'd Pallas Voltage Selector through PJRT (true) or the
     /// native optimizer (false).
     pub selector_via_pjrt: bool,
-    /// Nominal service capacity used to normalize the arrival counter.
+    /// Markov bins for the workload predictor.
     pub m_bins: usize,
+    /// Throughput margin t for the voltage LUT.
     pub margin_t: f64,
+    /// Pure-training epochs before predictions are trusted.
     pub warmup_epochs: usize,
+    /// Shard selection policy on the submit path.
+    pub dispatch: DispatchPolicy,
+    /// Allow idle workers to steal from sibling shards.
+    pub steal: bool,
 }
 
 impl Default for ServingConfig {
@@ -71,371 +97,188 @@ impl Default for ServingConfig {
             m_bins: 10,
             margin_t: 0.05,
             warmup_epochs: 2,
+            dispatch: DispatchPolicy::LeastLoaded,
+            steal: true,
         }
     }
 }
 
 /// One inference request.
+#[derive(Debug)]
 pub struct Request {
+    /// Monotonic id assigned at submit time.
     pub id: u64,
+    /// Input features (`in_dim` floats).
     pub payload: Vec<f32>,
+    /// Submit timestamp (end-to-end latency reference).
     pub submitted: Instant,
 }
 
 /// Completed request record.
 #[derive(Clone, Debug)]
 pub struct Completion {
+    /// Request id.
     pub id: u64,
+    /// Worker instance that served the request.
     pub worker: usize,
+    /// End-to-end latency.
     pub latency: Duration,
     /// First output logit (proof of real compute).
     pub y0: f32,
 }
 
-/// Error returned when the queue is full (backpressure).
+/// Error returned when every shard is full (backpressure).
 #[derive(Debug, PartialEq, Eq)]
 pub struct QueueFull;
 
-struct Shared {
-    queue: Mutex<VecDeque<Request>>,
-    notify: Condvar,
-    shutdown: AtomicBool,
-    /// Current freq ratio (f64 bits) published by the CC.
-    freq_ratio: AtomicU64,
-    vcore_mv: AtomicU64,
-    vbram_mv: AtomicU64,
-    arrivals_this_epoch: AtomicU64,
-    pub completed: Counter,
-    pub rejected: Counter,
-    pub latency_us: Histogram,
-    pub energy_j: Gauge,
-    pub nominal_energy_j: Gauge,
-}
-
-impl Shared {
-    fn freq_ratio(&self) -> f64 {
-        f64::from_bits(self.freq_ratio.load(Ordering::Relaxed))
-    }
-}
-
-/// Aggregate serving statistics.
+/// Aggregate serving statistics of a single-tenant coordinator.
 #[derive(Clone, Debug)]
 pub struct ServingStats {
+    /// Requests served to completion.
     pub completed: u64,
+    /// Requests refused by backpressure.
     pub rejected: u64,
+    /// Requests dropped because the inference backend errored.
+    pub failed: u64,
+    /// Batches obtained by work stealing.
+    pub stolen_batches: u64,
+    /// Inference backend in use (`pjrt` or `native`).
+    pub backend: &'static str,
+    /// Mean end-to-end latency (s).
     pub mean_latency_s: f64,
+    /// Median end-to-end latency (s).
     pub p50_latency_s: f64,
+    /// 99th-percentile end-to-end latency (s).
     pub p99_latency_s: f64,
+    /// Energy integrated at the CC's operating points (J).
     pub energy_j: f64,
+    /// Energy a nominal-V/f platform would have drawn (J).
     pub nominal_energy_j: f64,
+    /// Paper's headline metric: nominal energy / actual energy.
     pub power_gain: f64,
+    /// Fraction of epochs whose demand exceeded served capacity.
+    pub violation_rate: f64,
+    /// DVFS epochs elapsed.
     pub epochs: usize,
+    /// Currently published f / f_nom.
     pub freq_ratio_now: f64,
+    /// Currently published core-rail voltage (V).
     pub vcore_now: f64,
+    /// Currently published BRAM-rail voltage (V).
     pub vbram_now: f64,
 }
 
 /// Per-epoch CC trace row.
 #[derive(Clone, Copy, Debug)]
 pub struct EpochRecord {
+    /// Epoch index.
     pub epoch: usize,
+    /// Normalized load observed over the epoch.
     pub load: f64,
+    /// Load the predictor forecast for the next epoch.
     pub predicted: f64,
+    /// f / f_nom that served this epoch.
     pub freq_ratio: f64,
+    /// Core-rail voltage that served this epoch (V).
     pub vcore: f64,
+    /// BRAM-rail voltage that served this epoch (V).
     pub vbram: f64,
+    /// Group power at the serving operating point (W).
     pub power_w: f64,
 }
 
+/// Single-tenant serving coordinator: a one-group [`FleetServing`].
 pub struct Coordinator {
+    /// Configuration the coordinator was started with.
     pub cfg: ServingConfig,
-    shared: Arc<Shared>,
-    workers: Vec<std::thread::JoinHandle<Result<()>>>,
-    controller: Option<std::thread::JoinHandle<Vec<EpochRecord>>>,
-    next_id: AtomicU64,
+    inner: FleetServing,
+    /// Input feature width of the served model.
     pub in_dim: usize,
+    /// Requests per inference dispatch.
     pub batch: usize,
 }
 
 impl Coordinator {
-    /// Start workers + CC. `artifacts_dir` must contain `make artifacts`
-    /// output; `design`/`optimizer` come from the platform build.
+    /// Start workers + CC. `artifacts_dir` should contain `make artifacts`
+    /// output (the native backend is used when it does not);
+    /// `design`/`optimizer` come from the platform build.
     pub fn start(
         cfg: ServingConfig,
         artifacts_dir: std::path::PathBuf,
         design: DesignPower,
         optimizer: Optimizer,
     ) -> Result<Self> {
-        // Probe the artifact shape once (cheap engine, then dropped).
-        let probe = Engine::open(&artifacts_dir)?;
-        let client = DnnClient::new(&probe, &cfg.variant)?;
-        let (in_dim, batch) = (client.in_dim, client.batch);
-        drop(client);
-        drop(probe);
-
-        let shared = Arc::new(Shared {
-            queue: Mutex::new(VecDeque::new()),
-            notify: Condvar::new(),
-            shutdown: AtomicBool::new(false),
-            freq_ratio: AtomicU64::new(1.0f64.to_bits()),
-            vcore_mv: AtomicU64::new(800),
-            vbram_mv: AtomicU64::new(950),
-            arrivals_this_epoch: AtomicU64::new(0),
-            completed: Counter::default(),
-            rejected: Counter::default(),
-            latency_us: Histogram::latency_us(),
-            energy_j: Gauge::default(),
-            nominal_energy_j: Gauge::default(),
-        });
-
-        // ---- workers --------------------------------------------------
-        let mut workers = Vec::with_capacity(cfg.n_instances);
-        for wid in 0..cfg.n_instances {
-            let shared = shared.clone();
-            let cfg2 = cfg.clone();
-            let dir = artifacts_dir.clone();
-            workers.push(std::thread::spawn(move || -> Result<()> {
-                // Each instance owns its PJRT client (threads don't share
-                // the engine, so no Sync bound is needed).
-                let engine = Engine::open(&dir)?;
-                let dnn = DnnClient::new(&engine, &cfg2.variant)?;
-                let f_nom_hz = 1.0e6 * 100.0; // normalized; ratio matters
-                loop {
-                    // ---- batch formation ---------------------------------
-                    let mut batch_reqs: Vec<Request> = Vec::with_capacity(dnn.batch);
-                    {
-                        let mut q = shared.queue.lock().unwrap();
-                        loop {
-                            while let Some(r) = q.pop_front() {
-                                batch_reqs.push(r);
-                                if batch_reqs.len() == dnn.batch {
-                                    break;
-                                }
-                            }
-                            if batch_reqs.len() == dnn.batch
-                                || (!batch_reqs.is_empty())
-                                || shared.shutdown.load(Ordering::Relaxed)
-                            {
-                                break;
-                            }
-                            let (qq, _timeout) = shared
-                                .notify
-                                .wait_timeout(q, cfg2.batch_timeout)
-                                .unwrap();
-                            q = qq;
-                            if shared.shutdown.load(Ordering::Relaxed) && q.is_empty() {
-                                break;
-                            }
-                        }
-                    }
-                    if batch_reqs.is_empty() {
-                        if shared.shutdown.load(Ordering::Relaxed) {
-                            return Ok(());
-                        }
-                        // Wait a little for work.
-                        std::thread::sleep(cfg2.batch_timeout);
-                        continue;
-                    }
-                    // Partial batches wait briefly for stragglers.
-                    if batch_reqs.len() < dnn.batch {
-                        let deadline = Instant::now() + cfg2.batch_timeout;
-                        while batch_reqs.len() < dnn.batch && Instant::now() < deadline {
-                            let mut q = shared.queue.lock().unwrap();
-                            while let Some(r) = q.pop_front() {
-                                batch_reqs.push(r);
-                                if batch_reqs.len() == dnn.batch {
-                                    break;
-                                }
-                            }
-                            drop(q);
-                            if batch_reqs.len() < dnn.batch {
-                                std::thread::sleep(Duration::from_micros(200));
-                            }
-                        }
-                    }
-
-                    // ---- real inference ----------------------------------
-                    let mut x = vec![0.0f32; dnn.batch * dnn.in_dim];
-                    for (i, r) in batch_reqs.iter().enumerate() {
-                        x[i * dnn.in_dim..(i + 1) * dnn.in_dim]
-                            .copy_from_slice(&r.payload);
-                    }
-                    let y = dnn.infer(&x)?;
-
-                    // ---- simulated FPGA occupancy ------------------------
-                    let fr = shared.freq_ratio().max(0.05);
-                    let service = cfg2.cycles_per_batch / (f_nom_hz * fr);
-                    std::thread::sleep(Duration::from_secs_f64(service));
-
-                    let now = Instant::now();
-                    for (i, r) in batch_reqs.iter().enumerate() {
-                        let lat = now.duration_since(r.submitted);
-                        shared.latency_us.observe(lat.as_secs_f64() * 1e6);
-                        shared.completed.inc();
-                        let _ = Completion {
-                            id: r.id,
-                            worker: wid,
-                            latency: lat,
-                            y0: y[i * dnn.out_dim],
-                        };
-                    }
-                }
-            }));
-        }
-
-        // ---- central controller ----------------------------------------
-        let controller = {
-            let shared = shared.clone();
-            let cfg2 = cfg.clone();
-            let dir = artifacts_dir.clone();
-            let design = design.clone();
-            let optimizer = optimizer.clone();
-            std::thread::spawn(move || -> Vec<EpochRecord> {
-                let engine = if cfg2.selector_via_pjrt {
-                    Engine::open(&dir).ok()
-                } else {
-                    None
-                };
-                let lut = VoltageLut::build(&optimizer, cfg2.m_bins, cfg2.margin_t, cfg2.mode);
-                let mut predictor = MarkovPredictor::new(cfg2.m_bins, cfg2.warmup_epochs);
-                // Nominal epoch capacity: all instances at f_nom.
-                let f_nom_hz = 1.0e6 * 100.0;
-                let cap = cfg2.n_instances as f64
-                    * (f_nom_hz / cfg2.cycles_per_batch)
-                    * 16.0 // artifact batch
-                    * cfg2.epoch.as_secs_f64();
-                let mut records = Vec::new();
-                let mut epoch = 0usize;
-                while !shared.shutdown.load(Ordering::Relaxed) {
-                    std::thread::sleep(cfg2.epoch);
-                    let arrivals =
-                        shared.arrivals_this_epoch.swap(0, Ordering::Relaxed) as f64;
-                    let load = (arrivals / cap).min(1.0);
-                    predictor.observe(load);
-                    let predicted = predictor.predict();
-
-                    let entry = lut.entry_for_load(predicted);
-                    let mut choice = entry.point;
-                    // Ask the AOT'd Voltage Selector when enabled; fall
-                    // back to the native point on any error.
-                    if let Some(engine) = &engine {
-                        let vs = VoltageSelectorClient::new(engine);
-                        let sw = 1.0 / entry.freq_ratio;
-                        let q = OpQuery {
-                            alpha: optimizer.tables.op.alpha as f32,
-                            beta: optimizer.tables.op.beta as f32,
-                            gamma_l: optimizer.tables.op.gamma_l as f32,
-                            gamma_m: optimizer.tables.op.gamma_m as f32,
-                            sw: sw as f32,
-                        };
-                        if let Ok(choices) = vs.select(cfg2.mode, &optimizer.tables, &[q]) {
-                            if let Some(c) = choices.first() {
-                                choice.vcore = c.vcore;
-                                choice.vbram = c.vbram;
-                                choice.power_norm = c.power_norm;
-                            }
-                        }
-                    }
-
-                    shared
-                        .freq_ratio
-                        .store(entry.freq_ratio.to_bits(), Ordering::Relaxed);
-                    shared
-                        .vcore_mv
-                        .store((choice.vcore * 1000.0) as u64, Ordering::Relaxed);
-                    shared
-                        .vbram_mv
-                        .store((choice.vbram * 1000.0) as u64, Ordering::Relaxed);
-
-                    // Energy integration at this epoch's operating point.
-                    let f_mhz = design.spec.freq_mhz * entry.freq_ratio;
-                    let p = design.breakdown(choice.vcore, choice.vbram, f_mhz).total_w()
-                        * cfg2.n_instances as f64;
-                    let p_nom = design.nominal().total_w() * cfg2.n_instances as f64;
-                    shared.energy_j.add(p * cfg2.epoch.as_secs_f64());
-                    shared
-                        .nominal_energy_j
-                        .add(p_nom * cfg2.epoch.as_secs_f64());
-                    records.push(EpochRecord {
-                        epoch,
-                        load,
-                        predicted,
-                        freq_ratio: entry.freq_ratio,
-                        vcore: choice.vcore,
-                        vbram: choice.vbram,
-                        power_w: p,
-                    });
-                    epoch += 1;
-                }
-                records
-            })
+        let fleet_cfg = FleetServingConfig {
+            groups: vec![GroupConfig {
+                benchmark: cfg.variant.clone(),
+                share: 1.0,
+                n_instances: cfg.n_instances,
+            }],
+            epoch: cfg.epoch,
+            queue_capacity: cfg.queue_capacity,
+            batch_timeout: cfg.batch_timeout,
+            cycles_per_batch: cfg.cycles_per_batch,
+            mode: cfg.mode,
+            selector_via_pjrt: cfg.selector_via_pjrt,
+            m_bins: cfg.m_bins,
+            margin_t: cfg.margin_t,
+            warmup_epochs: cfg.warmup_epochs,
+            dispatch: cfg.dispatch,
+            steal: cfg.steal,
         };
-
-        Ok(Coordinator {
-            cfg,
-            shared,
-            workers,
-            controller: Some(controller),
-            next_id: AtomicU64::new(0),
-            in_dim,
-            batch,
-        })
+        let inner = FleetServing::start_with(fleet_cfg, artifacts_dir, vec![(design, optimizer)])?;
+        let in_dim = inner.in_dim(0);
+        let batch = inner.batch(0);
+        Ok(Coordinator { cfg, inner, in_dim, batch })
     }
 
     /// Submit one request; `Err(QueueFull)` signals backpressure.
     pub fn submit(&self, payload: Vec<f32>) -> std::result::Result<u64, QueueFull> {
         assert_eq!(payload.len(), self.in_dim, "payload must be in_dim floats");
-        let mut q = self.shared.queue.lock().unwrap();
-        if q.len() >= self.cfg.queue_capacity {
-            self.shared.rejected.inc();
-            return Err(QueueFull);
-        }
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        q.push_back(Request { id, payload, submitted: Instant::now() });
-        drop(q);
-        self.shared.arrivals_this_epoch.fetch_add(1, Ordering::Relaxed);
-        self.shared.notify.notify_one();
-        Ok(id)
+        self.inner.submit(0, payload)
     }
 
+    /// Requests currently queued across all shards.
     pub fn queue_len(&self) -> usize {
-        self.shared.queue.lock().unwrap().len()
+        self.inner.queue_len(0)
     }
 
-    pub fn stats(&self) -> ServingStats {
-        let s = &self.shared;
-        let energy = s.energy_j.get();
-        let nominal = s.nominal_energy_j.get();
+    /// The underlying one-group fleet (shard metrics, registry, ...).
+    pub fn fleet(&self) -> &FleetServing {
+        &self.inner
+    }
+
+    fn map_stats(g: &GroupServingStats) -> ServingStats {
         ServingStats {
-            completed: s.completed.get(),
-            rejected: s.rejected.get(),
-            mean_latency_s: s.latency_us.mean() / 1e6,
-            p50_latency_s: s.latency_us.quantile(0.5) / 1e6,
-            p99_latency_s: s.latency_us.quantile(0.99) / 1e6,
-            energy_j: energy,
-            nominal_energy_j: nominal,
-            power_gain: if energy > 0.0 { nominal / energy } else { 1.0 },
-            epochs: 0,
-            freq_ratio_now: s.freq_ratio(),
-            vcore_now: s.vcore_mv.load(Ordering::Relaxed) as f64 / 1000.0,
-            vbram_now: s.vbram_mv.load(Ordering::Relaxed) as f64 / 1000.0,
+            completed: g.completed,
+            rejected: g.rejected,
+            failed: g.failed,
+            stolen_batches: g.stolen_batches,
+            backend: g.backend,
+            mean_latency_s: g.mean_latency_s,
+            p50_latency_s: g.p50_latency_s,
+            p99_latency_s: g.p99_latency_s,
+            energy_j: g.energy_j,
+            nominal_energy_j: g.nominal_energy_j,
+            power_gain: g.power_gain,
+            violation_rate: g.violation_rate,
+            epochs: g.epochs as usize,
+            freq_ratio_now: g.freq_ratio_now,
+            vcore_now: g.vcore_now,
+            vbram_now: g.vbram_now,
         }
+    }
+
+    /// Live statistics snapshot.
+    pub fn stats(&self) -> ServingStats {
+        Self::map_stats(&self.inner.stats().per_group[0])
     }
 
     /// Stop accepting work, drain, join workers, and return the CC trace.
-    pub fn shutdown(mut self) -> Result<(ServingStats, Vec<EpochRecord>)> {
-        self.shared.shutdown.store(true, Ordering::Relaxed);
-        self.shared.notify.notify_all();
-        for w in self.workers.drain(..) {
-            w.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
-        }
-        let records = self
-            .controller
-            .take()
-            .unwrap()
-            .join()
-            .map_err(|_| anyhow::anyhow!("controller panicked"))?;
-        let mut stats = self.stats();
+    pub fn shutdown(self) -> Result<(ServingStats, Vec<EpochRecord>)> {
+        let report = self.inner.shutdown()?;
+        let mut stats = Self::map_stats(&report.stats.per_group[0]);
+        let records = report.epoch_records.into_iter().next().unwrap_or_default();
         stats.epochs = records.len();
         Ok((stats, records))
     }

@@ -1,0 +1,176 @@
+//! Bounded per-instance shard queues (DESIGN.md S11.2).
+//!
+//! The serving path used to funnel every request through one global
+//! `Mutex<VecDeque>`; under many instances the single lock and condvar
+//! become the scaling bottleneck. A [`ShardQueue`] is owned by exactly one
+//! worker (its *home* shard) and bounded individually, so submit-side
+//! backpressure and wakeups touch one shard lock instead of a global one.
+//! Idle workers may *steal* from sibling shards (see
+//! [`claim_batch`](super::fleet)) which keeps tail latency flat when the
+//! dispatcher's load estimate lags reality.
+//!
+//! A relaxed atomic `depth` mirrors the queue length so dispatchers can
+//! pick the least-loaded shard without taking any lock.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use super::Request;
+
+/// A bounded MPSC-style request queue owned by one worker instance.
+#[derive(Debug)]
+pub struct ShardQueue {
+    q: Mutex<VecDeque<Request>>,
+    notify: Condvar,
+    depth: AtomicUsize,
+    capacity: usize,
+}
+
+impl ShardQueue {
+    /// Create a shard bounded to `capacity` queued requests (min 1).
+    pub fn new(capacity: usize) -> Self {
+        ShardQueue {
+            q: Mutex::new(VecDeque::new()),
+            notify: Condvar::new(),
+            depth: AtomicUsize::new(0),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Maximum number of queued requests before pushes are refused.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Lock-free depth estimate (exact between lock releases).
+    pub fn len(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+
+    /// True when the shard currently holds no requests.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Enqueue a request; on a full shard the request is handed back so
+    /// the dispatcher can retry elsewhere or reject (backpressure).
+    pub fn try_push(&self, r: Request) -> Result<(), Request> {
+        let mut q = self.q.lock().unwrap();
+        if q.len() >= self.capacity {
+            return Err(r);
+        }
+        q.push_back(r);
+        self.depth.store(q.len(), Ordering::Relaxed);
+        drop(q);
+        self.notify.notify_one();
+        Ok(())
+    }
+
+    /// Dequeue up to `max` requests without blocking.
+    pub fn pop_upto(&self, max: usize) -> Vec<Request> {
+        let mut q = self.q.lock().unwrap();
+        let n = q.len().min(max);
+        let out: Vec<Request> = q.drain(..n).collect();
+        self.depth.store(q.len(), Ordering::Relaxed);
+        out
+    }
+
+    /// Dequeue up to `max` requests, waiting up to `wait` for the first
+    /// one to arrive. Returns early (possibly empty) when woken.
+    pub fn pop_wait(&self, max: usize, wait: Duration) -> Vec<Request> {
+        let mut q = self.q.lock().unwrap();
+        if q.is_empty() {
+            let (qq, _timeout) = self.notify.wait_timeout(q, wait).unwrap();
+            q = qq;
+        }
+        let n = q.len().min(max);
+        let out: Vec<Request> = q.drain(..n).collect();
+        self.depth.store(q.len(), Ordering::Relaxed);
+        out
+    }
+
+    /// Take up to `max` requests from the *back* of the queue (work
+    /// stealing; the home worker keeps FIFO order at the front).
+    pub fn steal_upto(&self, max: usize) -> Vec<Request> {
+        let mut q = self.q.lock().unwrap();
+        let n = q.len().min(max);
+        let keep = q.len() - n;
+        let out: Vec<Request> = q.split_off(keep).into_iter().collect();
+        self.depth.store(q.len(), Ordering::Relaxed);
+        out
+    }
+
+    /// Wake every waiter (used on shutdown).
+    pub fn wake_all(&self) {
+        self.notify.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    fn req(id: u64) -> Request {
+        Request { id, payload: vec![0.0; 4], submitted: Instant::now() }
+    }
+
+    #[test]
+    fn bounded_push_applies_backpressure() {
+        let s = ShardQueue::new(2);
+        assert!(s.try_push(req(0)).is_ok());
+        assert!(s.try_push(req(1)).is_ok());
+        let back = s.try_push(req(2));
+        assert!(back.is_err(), "third push must be refused");
+        assert_eq!(back.unwrap_err().id, 2, "refused request is handed back");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.capacity(), 2);
+    }
+
+    #[test]
+    fn pop_preserves_fifo_and_depth() {
+        let s = ShardQueue::new(16);
+        for i in 0..5 {
+            s.try_push(req(i)).unwrap();
+        }
+        assert_eq!(s.len(), 5);
+        let a = s.pop_upto(3);
+        assert_eq!(a.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(s.len(), 2);
+        let b = s.pop_upto(10);
+        assert_eq!(b.len(), 2);
+        assert!(s.is_empty());
+        assert!(s.pop_upto(4).is_empty());
+    }
+
+    #[test]
+    fn steal_takes_from_the_back() {
+        let s = ShardQueue::new(16);
+        for i in 0..6 {
+            s.try_push(req(i)).unwrap();
+        }
+        let stolen = s.steal_upto(2);
+        assert_eq!(stolen.iter().map(|r| r.id).collect::<Vec<_>>(), vec![4, 5]);
+        // Home worker still sees FIFO order at the front.
+        let own = s.pop_upto(10);
+        assert_eq!(own.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn pop_wait_times_out_empty_and_wakes_on_push() {
+        let s = std::sync::Arc::new(ShardQueue::new(8));
+        let t0 = Instant::now();
+        assert!(s.pop_wait(4, Duration::from_millis(20)).is_empty());
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || s2.pop_wait(4, Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(30));
+        s.try_push(req(9)).unwrap();
+        let got = h.join().unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 9);
+    }
+}

@@ -10,6 +10,8 @@
 //! that executes the AOT-compiled JAX/Pallas artifacts through PJRT.
 //! Python (layers 1–2) runs only at build time (`make artifacts`).
 
+#![warn(missing_docs)]
+
 pub mod arch;
 pub mod bench_support;
 pub mod cli;

@@ -41,6 +41,10 @@ SUBCOMMANDS:
              [--epochs N] [--epoch-ms N] [--rps N]
   artifacts  --artifacts <dir>      compile + golden-check all artifacts
   fleet      --groups tabla:0.4,diannao:0.6 [--policy prop] [--steps N]
+  scenario   --name <diurnal|flash-crowd|mixed-tenant|overnight>
+             [--steps N] [--seed N] [--policy prop]  (offline fleet sim)
+  serve-fleet --scenario <name> [--instances N] [--epochs N]
+             [--epoch-ms N] [--rps N] [--artifacts dir]  (live coordinator)
   experiment <fig1|fig2|fig3|fig4|fig5|fig6|fig8|table1|fig10|fig11|fig12|table2|pll>
              re-run a paper experiment (same code as `cargo bench`)
 ";
@@ -71,6 +75,8 @@ fn run(argv: &[String]) -> Result<(), String> {
         "serve" => serve(&args),
         "artifacts" => artifacts_cmd(&args),
         "fleet" => fleet_cmd(&args),
+        "scenario" => scenario_cmd(&args),
+        "serve-fleet" => serve_fleet_cmd(&args),
         "experiment" => experiment_cmd(&args),
         other => Err(format!("unknown subcommand {other}\n{USAGE}")),
     }
@@ -452,6 +458,96 @@ fn fleet_cmd(args: &Args) -> Result<(), String> {
         format!("{:.1}", r.violation_rate * 100.0),
     ]);
     print!("{}", table(&rows));
+    Ok(())
+}
+
+fn scenario_cmd(args: &Args) -> Result<(), String> {
+    args.check_known(&["name", "steps", "seed", "policy"])?;
+    let name = args.flag_or("name", "mixed-tenant");
+    let steps = args.flag_usize("steps")?.unwrap_or(600);
+    let seed = args.flag_usize("seed")?.unwrap_or(2019) as u64;
+    let policy = policy_by_name(args.flag_or("policy", "prop"))?;
+    let scenario = wavescale::workload::Scenario::by_name(name, steps, seed)?;
+    println!("scenario {name}: {} ({} steps)", scenario.description, scenario.steps());
+
+    let mut fleet = wavescale::platform::fleet::Fleet::from_scenario(
+        &scenario,
+        Default::default(),
+        policy,
+    )?;
+    let r = fleet.run_scenario(&scenario)?;
+    let mut rows = vec![wavescale::report::row([
+        "group", "share", "mean_load", "nominal_W", "avg_W", "gain", "violations%",
+    ])];
+    for (tenant, (gname, rep)) in scenario.tenants.iter().zip(&r.per_group) {
+        rows.push(vec![
+            gname.clone(),
+            format!("{:.2}", tenant.share),
+            format!("{:.3}", tenant.trace.mean()),
+            format!("{:.2}", rep.nominal_power_w),
+            format!("{:.2}", rep.avg_power_w),
+            format!("{:.2}x", rep.power_gain),
+            format!("{:.1}", rep.violation_rate * 100.0),
+        ]);
+    }
+    rows.push(vec![
+        "fleet".into(),
+        "1.00".into(),
+        "-".into(),
+        format!("{:.2}", r.nominal_power_w),
+        format!("{:.2}", r.avg_power_w),
+        format!("{:.2}x", r.power_gain),
+        format!("{:.1}", r.violation_rate * 100.0),
+    ]);
+    print!("{}", table(&rows));
+    Ok(())
+}
+
+fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
+    args.check_known(&[
+        "scenario", "instances", "epochs", "epoch-ms", "rps", "mode", "artifacts", "seed",
+    ])?;
+    let name = args.flag_or("scenario", "mixed-tenant");
+    let n_instances = args.flag_usize("instances")?.unwrap_or(2);
+    let epochs = args.flag_usize("epochs")?.unwrap_or(12);
+    let epoch_ms = args.flag_usize("epoch-ms")?.unwrap_or(150);
+    let rps = args.flag_f64("rps")?.unwrap_or(3000.0);
+    let mode = wavescale::config::mode_by_name(args.flag_or("mode", "prop"))?;
+    let dir = args.flag_or("artifacts", "artifacts");
+    let seed = args.flag_usize("seed")?.unwrap_or(7) as u64;
+
+    let scenario = wavescale::workload::Scenario::by_name(name, epochs, seed)?;
+    let cfg = wavescale::coordinator::FleetServingConfig {
+        groups: scenario
+            .tenants
+            .iter()
+            .map(|t| wavescale::coordinator::GroupConfig {
+                benchmark: t.benchmark.clone(),
+                share: t.share,
+                n_instances,
+            })
+            .collect(),
+        epoch: std::time::Duration::from_millis(epoch_ms as u64),
+        mode,
+        ..Default::default()
+    };
+    let fleet = wavescale::coordinator::FleetServing::start(cfg, dir.into())
+        .map_err(|e| e.to_string())?;
+    println!(
+        "serving scenario {name}: {} groups x {n_instances} instances, {epochs} epochs",
+        scenario.tenants.len()
+    );
+
+    let accepted = wavescale::coordinator::drive_scenario(&fleet, &scenario, rps, seed);
+    let report = fleet.shutdown().map_err(|e| e.to_string())?;
+
+    println!("accepted {accepted} submissions");
+    print!("{}", table(&wavescale::coordinator::fleet_report_rows(&report.stats)));
+    let s = &report.stats;
+    println!(
+        "energy {:.2} J vs nominal {:.2} J over {} epochs",
+        s.energy_j, s.nominal_energy_j, s.epochs
+    );
     Ok(())
 }
 

@@ -19,6 +19,7 @@ pub trait Predictor {
     fn observe(&mut self, load: f64);
     /// Predict the next step's load.
     fn predict(&self) -> f64;
+    /// Short predictor name for reports/benches.
     fn name(&self) -> &'static str;
 }
 
@@ -41,6 +42,8 @@ pub struct MarkovPredictor {
 }
 
 impl MarkovPredictor {
+    /// Create an untrained chain over `m` bins with `warmup` pure-training
+    /// steps (during which predictions pin to the top bin).
     pub fn new(m: usize, warmup: usize) -> Self {
         assert!(m >= 2, "need at least 2 bins");
         MarkovPredictor {
@@ -80,10 +83,12 @@ impl MarkovPredictor {
         Ok(p)
     }
 
+    /// Number of workload bins M.
     pub fn m_bins(&self) -> usize {
         self.m
     }
 
+    /// Bin index of a normalized load in [0, 1].
     pub fn bin_of(&self, load: f64) -> usize {
         ((load.clamp(0.0, 1.0) * self.m as f64).ceil() as usize).clamp(1, self.m) - 1
     }
@@ -111,10 +116,12 @@ impl MarkovPredictor {
         self.last_prediction.map(|p| self.bin_of(observed) as i64 - p as i64)
     }
 
+    /// True while the chain is still in its pure-training phase.
     pub fn in_warmup(&self) -> bool {
         self.steps_seen < self.warmup
     }
 
+    /// Most likely next bin from the current state (top bin in warmup).
     pub fn predicted_bin(&self) -> usize {
         if self.in_warmup() {
             // Training phase: platform runs at maximum frequency.
@@ -177,6 +184,7 @@ pub struct PeriodicPredictor {
 }
 
 impl PeriodicPredictor {
+    /// Create a predictor for a known `period` (steps per cycle).
     pub fn new(period: usize) -> Self {
         assert!(period >= 1);
         PeriodicPredictor { period, phase: 0, sums: vec![0.0; period], counts: vec![0; period] }
@@ -210,6 +218,7 @@ pub struct EwmaPredictor {
 }
 
 impl EwmaPredictor {
+    /// Create an EWMA with smoothing factor `alpha` in [0, 1].
     pub fn new(alpha: f64) -> Self {
         assert!((0.0..=1.0).contains(&alpha));
         EwmaPredictor { alpha, value: None }

@@ -1,21 +1,28 @@
-//! Lightweight metrics: counters, gauges, and log-linear latency
-//! histograms (DESIGN.md S14). Lock-free on the hot path.
+//! Lightweight metrics: counters, gauges, log-linear latency histograms,
+//! and a shared named [`Registry`] (DESIGN.md S14). Lock-free on the hot
+//! path; the registry takes a lock only to *resolve* a name — callers hold
+//! the returned `Arc` and update it lock-free afterwards.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Monotonic counter.
 #[derive(Debug, Default)]
 pub struct Counter(AtomicU64);
 
 impl Counter {
+    /// Add one.
     pub fn inc(&self) {
         self.0.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Add `n`.
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -26,10 +33,12 @@ impl Counter {
 pub struct Gauge(AtomicU64);
 
 impl Gauge {
+    /// Overwrite the value.
     pub fn set(&self, v: f64) {
         self.0.store(v.to_bits(), Ordering::Relaxed);
     }
 
+    /// Current value.
     pub fn get(&self) -> f64 {
         f64::from_bits(self.0.load(Ordering::Relaxed))
     }
@@ -78,8 +87,8 @@ impl Histogram {
         }
     }
 
+    /// The serving default: 1 µs .. 10^8 µs (100 s), 20 buckets/decade.
     pub fn latency_us() -> Self {
-        // 1 µs .. 10^8 µs (100 s)
         Histogram::new(1.0, 8, 20)
     }
 
@@ -96,6 +105,7 @@ impl Histogram {
         }
     }
 
+    /// Record one observation.
     pub fn observe(&self, v: f64) {
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_micro
@@ -110,10 +120,12 @@ impl Histogram {
         }
     }
 
+    /// Number of observations recorded.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Arithmetic mean of all observations (0 when empty).
     pub fn mean(&self) -> f64 {
         let c = self.count();
         if c == 0 {
@@ -140,6 +152,52 @@ impl Histogram {
             }
         }
         f64::INFINITY
+    }
+}
+
+/// A named metrics surface shared across the fleet: groups and workers
+/// resolve counters/gauges once by name and update them lock-free.
+/// Snapshots flatten everything into `(name, value)` rows for reports.
+#[derive(Debug, Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, Arc<Gauge>>>,
+}
+
+impl Registry {
+    /// Create an empty registry.
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Resolve (creating on first use) the counter named `name`.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.counters.lock().unwrap();
+        m.entry(name.to_string())
+            .or_insert_with(|| Arc::new(Counter::default()))
+            .clone()
+    }
+
+    /// Resolve (creating on first use) the gauge named `name`.
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().unwrap();
+        m.entry(name.to_string())
+            .or_insert_with(|| Arc::new(Gauge::default()))
+            .clone()
+    }
+
+    /// Flatten all metrics into sorted `(name, value)` rows (counters as
+    /// f64; gauges as stored).
+    pub fn snapshot(&self) -> Vec<(String, f64)> {
+        let mut out: Vec<(String, f64)> = Vec::new();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            out.push((k.clone(), c.get() as f64));
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            out.push((k.clone(), g.get()));
+        }
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
     }
 }
 
@@ -187,8 +245,26 @@ mod tests {
     }
 
     #[test]
+    fn registry_resolves_and_snapshots() {
+        let r = Registry::new();
+        let a = r.counter("fleet.completed");
+        let b = r.counter("fleet.completed");
+        a.inc();
+        b.add(2);
+        assert_eq!(r.counter("fleet.completed").get(), 3, "same instance by name");
+        r.gauge("fleet.energy_j").set(1.5);
+        let snap = r.snapshot();
+        assert_eq!(
+            snap,
+            vec![
+                ("fleet.completed".to_string(), 3.0),
+                ("fleet.energy_j".to_string(), 1.5),
+            ]
+        );
+    }
+
+    #[test]
     fn concurrent_updates() {
-        use std::sync::Arc;
         let c = Arc::new(Counter::default());
         let h = Arc::new(Histogram::latency_us());
         let mut threads = Vec::new();

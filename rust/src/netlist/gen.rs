@@ -9,8 +9,11 @@ use crate::util::prng::Rng;
 /// since the critical-path construction is scale-independent).
 #[derive(Clone, Copy, Debug)]
 pub struct GenConfig {
+    /// Uniform shrink factor on resource counts (1.0 = Table I).
     pub scale: f64,
+    /// PRNG seed; identical seeds reproduce the netlist exactly.
     pub seed: u64,
+    /// LUTs per LAB (device family convention, 10 for Stratix IV).
     pub luts_per_lab: usize,
 }
 

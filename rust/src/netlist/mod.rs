@@ -20,14 +20,20 @@ pub use gen::{generate, GenConfig};
 /// registers), matching the level of detail the paper's framework needs.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum NodeKind {
+    /// Primary input (zero delay).
     Input,
+    /// Primary output / timing endpoint (zero delay).
     Output,
+    /// LUT stage (LAB register folded in).
     Lut,
+    /// Block-RAM access (Vbram rail).
     Bram,
+    /// DSP hard macro (Vcore rail).
     Dsp,
 }
 
 impl NodeKind {
+    /// Stable on-disk code of the kind.
     pub fn code(self) -> u8 {
         match self {
             NodeKind::Input => 0,
@@ -38,6 +44,7 @@ impl NodeKind {
         }
     }
 
+    /// Inverse of [`NodeKind::code`].
     pub fn from_code(c: u8) -> Option<NodeKind> {
         Some(match c {
             0 => NodeKind::Input,
@@ -49,6 +56,7 @@ impl NodeKind {
         })
     }
 
+    /// Lower-case kind name (BLIF subckt names).
     pub fn name(self) -> &'static str {
         match self {
             NodeKind::Input => "input",
@@ -63,35 +71,49 @@ impl NodeKind {
 /// A directed connection routed through `segments` wire segments.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Edge {
+    /// Source node id.
     pub src: u32,
+    /// Destination node id.
     pub dst: u32,
+    /// Routed wire segments on the connection (each adds delay).
     pub segments: u8,
 }
 
 /// Flat netlist representation sized for 10^5..10^6-node designs.
 #[derive(Clone, Debug)]
 pub struct Netlist {
+    /// Design name (benchmark it was generated from).
     pub name: String,
+    /// Node kinds, indexed by node id.
     pub kinds: Vec<NodeKind>,
+    /// Directed connections.
     pub edges: Vec<Edge>,
 }
 
 /// Resource counts of a netlist (compare with `arch::Utilization`).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct Counts {
+    /// Primary inputs.
     pub inputs: usize,
+    /// Primary outputs.
     pub outputs: usize,
+    /// LUT stages.
     pub luts: usize,
+    /// BRAM blocks.
     pub brams: usize,
+    /// DSP macros.
     pub dsps: usize,
+    /// Total routed wire segments across all edges.
     pub routed_segments: usize,
 }
 
 impl Netlist {
+    /// Total node count.
     pub fn node_count(&self) -> usize {
         self.kinds.len()
     }
 
+    /// Tally resource counts.
     pub fn counts(&self) -> Counts {
         let mut c = Counts::default();
         for &k in &self.kinds {

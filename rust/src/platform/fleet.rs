@@ -3,33 +3,44 @@
 //! gathered from one or different users").
 //!
 //! Each group is an independent [`Platform`] (own design, own CC, own
-//! voltage LUT) fed a share of the common trace; the fleet report
-//! aggregates power and QoS across groups. This models the realistic
-//! deployment where Tabla and DianNao instances coexist under one
-//! operator and one DVFS policy choice.
+//! voltage LUT) fed a share of the common trace — or its own per-tenant
+//! trace via [`Fleet::run_scenario`] / [`Fleet::run_per_group`]; the fleet
+//! report aggregates power and QoS across groups. This models the
+//! realistic deployment where Tabla and DianNao instances coexist under
+//! one operator and one DVFS policy choice. The *live* counterpart of
+//! this offline model is `coordinator::FleetServing`.
 
 use super::{build_platform, Platform, PlatformConfig, Policy, SimReport};
+use crate::workload::Scenario;
 
 /// One group of identical FPGA instances serving one benchmark.
 pub struct FleetGroup {
+    /// Benchmark (Table I name) the group serves.
     pub benchmark: String,
     /// Fraction of the fleet-level workload routed to this group.
     pub share: f64,
+    /// The group's independent platform (design, CC, LUT).
     pub platform: Platform,
 }
 
 /// Aggregate outcome across groups.
 #[derive(Clone, Debug)]
 pub struct FleetReport {
+    /// Per-group `(benchmark, report)` rows, in group order.
     pub per_group: Vec<(String, SimReport)>,
+    /// Sum of per-group average powers (W).
     pub avg_power_w: f64,
+    /// Sum of per-group nominal powers (W).
     pub nominal_power_w: f64,
+    /// Fleet-level steady-state power gain (nominal / steady power).
     pub power_gain: f64,
+    /// Worst per-group QoS violation rate (QoS is per-tenant).
     pub violation_rate: f64,
 }
 
 /// A multi-tenant fleet under a single policy.
 pub struct Fleet {
+    /// The fleet's groups, in construction order.
     pub groups: Vec<FleetGroup>,
 }
 
@@ -62,6 +73,19 @@ impl Fleet {
         Ok(Fleet { groups: out })
     }
 
+    /// Build a fleet matching a scenario's group layout.
+    pub fn from_scenario(
+        scenario: &Scenario,
+        cfg: PlatformConfig,
+        policy: Policy,
+    ) -> Result<Self, String> {
+        scenario.validate()?;
+        let groups: Vec<(String, f64)> = scenario.groups();
+        let refs: Vec<(&str, f64)> =
+            groups.iter().map(|(n, s)| (n.as_str(), *s)).collect();
+        Fleet::new(&refs, cfg, policy)
+    }
+
     /// Run the common trace. Each group sees the *same normalized load*
     /// (its capacity is provisioned for its share), so DVFS decisions are
     /// per-group while the workload pattern is shared.
@@ -70,6 +94,54 @@ impl Fleet {
         for g in &mut self.groups {
             per_group.push((g.benchmark.clone(), g.platform.run(loads)));
         }
+        Self::aggregate(per_group)
+    }
+
+    /// Run one trace per group (index-aligned) — heterogeneous tenant
+    /// loads, the general case behind [`Fleet::run_scenario`].
+    pub fn run_per_group(&mut self, traces: &[&[f64]]) -> Result<FleetReport, String> {
+        if traces.len() != self.groups.len() {
+            return Err(format!(
+                "{} traces for {} groups",
+                traces.len(),
+                self.groups.len()
+            ));
+        }
+        let mut per_group = Vec::with_capacity(self.groups.len());
+        for (g, t) in self.groups.iter_mut().zip(traces) {
+            if t.is_empty() {
+                return Err(format!("{}: empty trace", g.benchmark));
+            }
+            per_group.push((g.benchmark.clone(), g.platform.run(t)));
+        }
+        Ok(Self::aggregate(per_group))
+    }
+
+    /// Run a scenario's per-tenant traces through the matching groups.
+    /// The fleet must have been built with the scenario's group layout
+    /// (see [`Fleet::from_scenario`]).
+    pub fn run_scenario(&mut self, scenario: &Scenario) -> Result<FleetReport, String> {
+        if scenario.tenants.len() != self.groups.len()
+            || scenario
+                .tenants
+                .iter()
+                .zip(&self.groups)
+                .any(|(t, g)| t.benchmark != g.benchmark)
+        {
+            return Err(format!(
+                "scenario {} groups do not match this fleet",
+                scenario.name
+            ));
+        }
+        let traces: Vec<&[f64]> = scenario
+            .tenants
+            .iter()
+            .map(|t| t.trace.loads.as_slice())
+            .collect();
+        self.run_per_group(&traces)
+    }
+
+    fn aggregate(per_group: Vec<(String, SimReport)>) -> FleetReport {
         let avg_power_w: f64 = per_group.iter().map(|(_, r)| r.avg_power_w).sum();
         let nominal_power_w: f64 = per_group.iter().map(|(_, r)| r.nominal_power_w).sum();
         // Steady-state gain: nominal over steady power, aggregated.
@@ -131,6 +203,33 @@ mod tests {
                 .is_err()
         );
         assert!(Fleet::new(&[("nope", 1.0)], cfg, Policy::NominalStatic).is_err());
+    }
+
+    #[test]
+    fn scenario_runs_per_group_traces_and_aggregates_qos() {
+        let s = Scenario::mixed_tenant(300, 2019);
+        let mut fleet =
+            Fleet::from_scenario(&s, PlatformConfig::default(), Policy::Dvfs(Mode::Proposed))
+                .unwrap();
+        let r = fleet.run_scenario(&s).unwrap();
+        assert_eq!(r.per_group.len(), s.tenants.len());
+        for ((name, rep), t) in r.per_group.iter().zip(&s.tenants) {
+            assert_eq!(name, &t.benchmark);
+            assert_eq!(rep.records.len(), t.trace.len());
+            assert!(rep.power_gain > 1.0, "{name}: gain {}", rep.power_gain);
+        }
+        // Fleet violation rate is the worst per-group rate.
+        let worst = r
+            .per_group
+            .iter()
+            .map(|(_, rep)| rep.violation_rate)
+            .fold(0.0, f64::max);
+        assert!((r.violation_rate - worst).abs() < 1e-12);
+
+        // Mismatched layouts are rejected.
+        let other = Scenario::diurnal(300, 1);
+        assert!(fleet.run_scenario(&other).is_err());
+        assert!(fleet.run_per_group(&[&[0.5][..]]).is_err());
     }
 
     #[test]

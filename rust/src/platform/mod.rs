@@ -36,6 +36,7 @@ pub enum Policy {
 }
 
 impl Policy {
+    /// CLI/report name of the policy.
     pub fn name(&self) -> String {
         match self {
             Policy::Dvfs(m) => m.name().to_string(),
@@ -49,6 +50,7 @@ impl Policy {
 /// Simulator configuration (defaults follow the paper's evaluation).
 #[derive(Clone, Debug)]
 pub struct PlatformConfig {
+    /// FPGA instances in the platform.
     pub n_fpgas: usize,
     /// Step length τ in seconds (paper: "at least in order of seconds").
     pub tau_s: f64,
@@ -93,40 +95,62 @@ impl Default for PlatformConfig {
 /// Per-step record (the rows behind Figs. 10–12).
 #[derive(Clone, Copy, Debug)]
 pub struct StepRecord {
+    /// Step index.
     pub step: usize,
+    /// Normalized load offered this step.
     pub load: f64,
+    /// Load the predictor forecast for this step.
     pub predicted_load: f64,
+    /// f / f_nom the platform ran at this step.
     pub freq_ratio: f64,
+    /// Core-rail voltage this step (V).
     pub vcore: f64,
+    /// BRAM-rail voltage this step (V).
     pub vbram: f64,
     /// Total platform power this step (W), PLLs included.
     pub power_w: f64,
+    /// Work actually served (capacity-limited), normalized.
     pub delivered: f64,
+    /// Unserved work carried to the next step, normalized.
     pub backlog: f64,
+    /// True when demand exceeded capacity this step.
     pub qos_violation: bool,
+    /// True when the predictor missed the observed bin.
     pub mispredicted: bool,
 }
 
 /// Aggregate simulation outcome.
 #[derive(Clone, Debug)]
 pub struct SimReport {
+    /// Name of the simulated policy.
     pub policy: String,
+    /// Per-step trace rows.
     pub records: Vec<StepRecord>,
+    /// Average platform power over the run (W).
     pub avg_power_w: f64,
+    /// All-nominal platform power (W), the gain baseline.
     pub nominal_power_w: f64,
     /// Paper's headline metric: nominal power / policy power.
     pub power_gain: f64,
+    /// Total energy over the run (J).
     pub energy_j: f64,
+    /// Energy spent by the PLLs alone (J).
     pub pll_energy_j: f64,
+    /// Steps whose demand exceeded capacity.
     pub qos_violations: usize,
+    /// `qos_violations / steps`.
     pub violation_rate: f64,
+    /// Steps whose predicted bin missed the observed bin.
     pub mispredictions: usize,
+    /// Fabric stall time from PLL relocking (µs; single-PLL only).
     pub stalled_us: f64,
 }
 
 /// The platform: n instances of one benchmark design + the CC.
 pub struct Platform {
+    /// Simulator configuration.
     pub cfg: PlatformConfig,
+    /// Power model of the design on its device.
     pub design: DesignPower,
     optimizer: Optimizer,
     lut: VoltageLut,
@@ -149,6 +173,8 @@ enum PllBank {
 }
 
 impl Platform {
+    /// Assemble a platform from its parts (see [`build_platform`] for the
+    /// by-name convenience).
     pub fn new(
         cfg: PlatformConfig,
         design: DesignPower,

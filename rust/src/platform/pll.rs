@@ -19,6 +19,7 @@ pub struct DualPll {
 }
 
 impl DualPll {
+    /// Both PLLs locked at `f_mhz`; relock takes `lock_us`.
     pub fn new(f_mhz: f64, lock_us: f64) -> Self {
         DualPll {
             active_mhz: f_mhz,
@@ -29,10 +30,12 @@ impl DualPll {
         }
     }
 
+    /// Frequency of the active (fabric-driving) PLL.
     pub fn freq_mhz(&self) -> f64 {
         self.active_mhz
     }
 
+    /// Number of frequency changes so far.
     pub fn retunes(&self) -> usize {
         self.retunes
     }
@@ -71,6 +74,7 @@ pub struct SinglePll {
 }
 
 impl SinglePll {
+    /// PLL locked at `f_mhz`; relock stalls the fabric for `lock_us`.
     pub fn new(f_mhz: f64, lock_us: f64) -> Self {
         SinglePll {
             freq_mhz: f_mhz,
@@ -81,18 +85,22 @@ impl SinglePll {
         }
     }
 
+    /// Current output frequency.
     pub fn freq_mhz(&self) -> f64 {
         self.freq_mhz
     }
 
+    /// Accumulated fabric stall from relocking (µs).
     pub fn total_stall_us(&self) -> f64 {
         self.total_stall_us
     }
 
+    /// Number of frequency changes so far.
     pub fn retunes(&self) -> usize {
         self.retunes
     }
 
+    /// Request a frequency change at the next step edge.
     pub fn program(&mut self, f_mhz: f64) {
         if (f_mhz - self.freq_mhz).abs() > 1e-9 {
             self.pending_mhz = Some(f_mhz);

@@ -23,16 +23,23 @@ use crate::sta::PathComposition;
 /// §V: "the fully utilized FPGA power consumption is around 20W").
 #[derive(Clone, Copy, Debug)]
 pub struct PowerParams {
+    /// Reference clock (MHz) the dynamic constants are quoted at.
     pub f_ref_mhz: f64,
     /// Dynamic energy proxy: W at f_ref per unit at activity 1.0.
     pub lut_dyn_w: f64,
+    /// Dynamic W at f_ref per routed wire segment.
     pub route_seg_dyn_w: f64,
+    /// Dynamic W at f_ref per BRAM block.
     pub bram_dyn_w: f64,
+    /// Dynamic W at f_ref per DSP macro.
     pub dsp_dyn_w: f64,
     /// Static leakage per unit at nominal voltage and 25 °C.
     pub lut_static_w: f64,
+    /// Static W per routing mux.
     pub route_mux_static_w: f64,
+    /// Static W per BRAM block.
     pub bram_static_w: f64,
+    /// Static W per DSP macro.
     pub dsp_static_w: f64,
     /// M144K blocks count as this many M9K-equivalents.
     pub m144k_factor: f64,
@@ -69,13 +76,18 @@ impl Default for PowerParams {
 /// Power split by rail and kind (watts).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct PowerBreakdown {
+    /// Core-rail dynamic power (W).
     pub core_dyn_w: f64,
+    /// Core-rail static power (W).
     pub core_static_w: f64,
+    /// BRAM-rail dynamic power (W).
     pub bram_dyn_w: f64,
+    /// BRAM-rail static power (W).
     pub bram_static_w: f64,
 }
 
 impl PowerBreakdown {
+    /// Sum of all four components (W).
     pub fn total_w(&self) -> f64 {
         self.core_dyn_w + self.core_static_w + self.bram_dyn_w + self.bram_static_w
     }
@@ -114,9 +126,13 @@ impl PowerBreakdown {
 /// Operating-point parameters for the Eq. (1)-(3) models.
 #[derive(Clone, Copy, Debug)]
 pub struct OperatingParams {
+    /// Eq. (1): BRAM share of the critical path relative to core delay.
     pub alpha: f64,
+    /// Eq. (3): BRAM-rail share of total power.
     pub beta: f64,
+    /// Dynamic fraction of the core rail.
     pub gamma_l: f64,
+    /// Dynamic fraction of the BRAM rail.
     pub gamma_m: f64,
 }
 
@@ -128,19 +144,28 @@ pub struct RailTables {
     pub dl: Vec<f64>,
     /// BRAM delay scale.
     pub dm: Vec<f64>,
+    /// Core-rail dynamic power scale per grid level.
     pub pl_dyn: Vec<f64>,
+    /// Core-rail static power scale per grid level.
     pub pl_st: Vec<f64>,
+    /// BRAM-rail dynamic power scale per grid level.
     pub pm_dyn: Vec<f64>,
+    /// BRAM-rail static power scale per grid level.
     pub pm_st: Vec<f64>,
+    /// Operating-point parameters of the design behind these tables.
     pub op: OperatingParams,
 }
 
 /// Resolved design-on-device power model for one benchmark.
 #[derive(Clone, Debug)]
 pub struct DesignPower {
+    /// Benchmark the model was built for.
     pub spec: &'static BenchmarkSpec,
+    /// Device the benchmark is mapped onto.
     pub device: Device,
+    /// Characterization library behind the voltage scales.
     pub chars: CharLibrary,
+    /// Absolute calibration constants.
     pub params: PowerParams,
     used_luts: f64,
     used_route_segs: f64,

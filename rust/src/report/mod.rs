@@ -52,6 +52,7 @@ pub fn write_results(name: &str, content: &str) -> std::io::Result<std::path::Pa
     Ok(path)
 }
 
+/// Build a table/CSV row from string literals.
 pub fn row<const N: usize>(cells: [&str; N]) -> Vec<String> {
     cells.iter().map(|s| s.to_string()).collect()
 }

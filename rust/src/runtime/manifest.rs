@@ -11,11 +11,14 @@ use crate::util::json::Json;
 /// Shape + dtype of one argument or result.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct TensorSpec {
+    /// Row-major dimensions.
     pub shape: Vec<usize>,
+    /// Element dtype tag (`f32` or `i32`).
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Total element count (product of dims).
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -40,25 +43,35 @@ impl TensorSpec {
 /// Golden-data pointers for DNN artifacts.
 #[derive(Clone, Debug)]
 pub struct GoldenMeta {
+    /// Relative path of the flat f32 parameter blob.
     pub params_bin: String,
+    /// Relative path of the golden x/y blob.
     pub golden_bin: String,
+    /// First 8 golden outputs (quick sanity values).
     pub y_first8: Vec<f64>,
 }
 
 /// One artifact entry.
 #[derive(Clone, Debug)]
 pub struct ArtifactMeta {
+    /// Artifact name (manifest key).
     pub name: String,
+    /// Relative path of the HLO text file.
     pub path: String,
+    /// Argument specs, in call order.
     pub args: Vec<TensorSpec>,
+    /// Result specs, in tuple order.
     pub results: Vec<TensorSpec>,
+    /// Artifact kind (`voltage_opt`, `dnn`, ...).
     pub kind: String,
+    /// Golden-data pointers (DNN artifacts only).
     pub golden: Option<GoldenMeta>,
     /// Raw numeric metadata (nv, nm, batch, v_step, ...).
     meta_nums: BTreeMap<String, f64>,
 }
 
 impl ArtifactMeta {
+    /// Numeric metadata value by key.
     pub fn meta_f64(&self, key: &str) -> Result<f64> {
         self.meta_nums
             .get(key)
@@ -66,6 +79,7 @@ impl ArtifactMeta {
             .ok_or_else(|| anyhow!("{}: missing meta {key}", self.name))
     }
 
+    /// Numeric metadata value that must be a non-negative integer.
     pub fn meta_usize(&self, key: &str) -> Result<usize> {
         let v = self.meta_f64(key)?;
         if v < 0.0 || v.fract() != 0.0 {
@@ -78,18 +92,23 @@ impl ArtifactMeta {
 /// The parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Manifest schema version (1).
     pub version: usize,
+    /// jax version that produced the artifacts.
     pub jax_version: String,
+    /// Artifacts by name.
     pub artifacts: BTreeMap<String, ArtifactMeta>,
 }
 
 impl Manifest {
+    /// Read and parse `manifest.json` from disk.
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading {}", path.display()))?;
         Self::parse(&text)
     }
 
+    /// Parse manifest JSON text.
     pub fn parse(text: &str) -> Result<Self> {
         let root = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
         let version = root

@@ -23,11 +23,14 @@ use crate::vscale::Mode;
 /// A typed host tensor (f32 or i32), row-major.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Tensor {
+    /// 32-bit float elements.
     F32(Vec<f32>),
+    /// 32-bit signed integer elements.
     I32(Vec<i32>),
 }
 
 impl Tensor {
+    /// Element count.
     pub fn len(&self) -> usize {
         match self {
             Tensor::F32(v) => v.len(),
@@ -35,10 +38,12 @@ impl Tensor {
         }
     }
 
+    /// True when the tensor holds no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// The elements as f32s, if that is the dtype.
     pub fn as_f32(&self) -> Option<&[f32]> {
         match self {
             Tensor::F32(v) => Some(v),
@@ -46,6 +51,7 @@ impl Tensor {
         }
     }
 
+    /// The elements as i32s, if that is the dtype.
     pub fn as_i32(&self) -> Option<&[i32]> {
         match self {
             Tensor::I32(v) => Some(v),
@@ -56,6 +62,7 @@ impl Tensor {
 
 /// One compiled artifact bound to the PJRT client.
 pub struct Executable {
+    /// Manifest entry of the artifact (shapes, dtypes, metadata).
     pub meta: ArtifactMeta,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -145,7 +152,9 @@ impl Executable {
 
 /// The engine: one PJRT CPU client + a compile cache over the manifest.
 pub struct Engine {
+    /// Artifacts directory the engine was opened on.
     pub dir: PathBuf,
+    /// Parsed `manifest.json`.
     pub manifest: Manifest,
     client: xla::PjRtClient,
     cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
@@ -161,6 +170,7 @@ impl Engine {
         Ok(Engine { dir, manifest, client, cache: Mutex::new(HashMap::new()) })
     }
 
+    /// PJRT platform the client runs on (e.g. `cpu`).
     pub fn platform_name(&self) -> String {
         self.client.platform_name()
     }
@@ -219,23 +229,35 @@ pub struct VoltageSelectorClient<'a> {
 /// One query row: Eq. (1)-(3) parameters for an operating point.
 #[derive(Clone, Copy, Debug)]
 pub struct OpQuery {
+    /// Eq. (1): BRAM share of the path relative to core delay.
     pub alpha: f32,
+    /// Eq. (3): BRAM-rail share of total power.
     pub beta: f32,
+    /// Dynamic fraction of the core rail.
     pub gamma_l: f32,
+    /// Dynamic fraction of the BRAM rail.
     pub gamma_m: f32,
+    /// Allowed clock-period stretch factor (≥ 1).
     pub sw: f32,
 }
 
+/// The artifact's answer for one [`OpQuery`].
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct OpChoice {
+    /// Core-rail grid index (0 = nominal).
     pub icore: usize,
+    /// BRAM-rail grid index (0 = nominal).
     pub ibram: usize,
+    /// Core-rail voltage (V).
     pub vcore: f64,
+    /// BRAM-rail voltage (V).
     pub vbram: f64,
+    /// Total power, normalized to nominal = 1.
     pub power_norm: f64,
 }
 
 impl<'a> VoltageSelectorClient<'a> {
+    /// Bind the client to an engine.
     pub fn new(engine: &'a Engine) -> Self {
         VoltageSelectorClient { engine }
     }
@@ -309,18 +331,23 @@ impl<'a> VoltageSelectorClient<'a> {
 /// High-level client for a served DNN variant: loads its parameters from
 /// the side binary once and runs inference batches.
 pub struct DnnClient {
+    /// Benchmark variant the client serves.
     pub variant: String,
     exe: std::sync::Arc<Executable>,
     client: xla::PjRtClient,
     /// Parameters uploaded once, device-resident for every request batch.
     param_bufs: Vec<DeviceTensor>,
     x_dims: Vec<usize>,
+    /// Requests per inference dispatch (artifact batch).
     pub batch: usize,
+    /// Input feature width.
     pub in_dim: usize,
+    /// Output width (logits).
     pub out_dim: usize,
 }
 
 impl DnnClient {
+    /// Load the `dnn_<variant>` artifact and upload its parameters.
     pub fn new(engine: &Engine, variant: &str) -> Result<Self> {
         let name = format!("dnn_{variant}");
         let exe = engine.load(&name)?;

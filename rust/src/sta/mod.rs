@@ -20,9 +20,13 @@ use crate::netlist::{Netlist, NodeKind};
 /// near the paper's Table I Fmax (see `table1_fmax_within_tolerance`).
 #[derive(Clone, Copy, Debug)]
 pub struct DelayParams {
+    /// LUT stage delay (ns).
     pub lut_ns: f64,
+    /// Delay per routed wire segment (ns).
     pub route_seg_ns: f64,
+    /// BRAM access delay (ns).
     pub bram_ns: f64,
+    /// DSP macro delay (ns).
     pub dsp_ns: f64,
 }
 
@@ -35,13 +39,18 @@ impl Default for DelayParams {
 /// Per-class delay scale multipliers (1.0 = nominal voltage).
 #[derive(Clone, Copy, Debug)]
 pub struct DelayScales {
+    /// Logic delay multiplier.
     pub logic: f64,
+    /// Routing delay multiplier.
     pub routing: f64,
+    /// BRAM delay multiplier.
     pub bram: f64,
+    /// DSP delay multiplier.
     pub dsp: f64,
 }
 
 impl DelayScales {
+    /// All classes at nominal voltage (1.0 everywhere).
     pub const NOMINAL: DelayScales =
         DelayScales { logic: 1.0, routing: 1.0, bram: 1.0, dsp: 1.0 };
 
@@ -60,13 +69,18 @@ impl DelayScales {
 /// at nominal voltage).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct PathComposition {
+    /// LUT delay on the path (ns).
     pub logic_ns: f64,
+    /// Routing delay on the path (ns).
     pub routing_ns: f64,
+    /// BRAM delay on the path (ns).
     pub bram_ns: f64,
+    /// DSP delay on the path (ns).
     pub dsp_ns: f64,
 }
 
 impl PathComposition {
+    /// Total path delay at nominal voltage (ns).
     pub fn total_ns(&self) -> f64 {
         self.logic_ns + self.routing_ns + self.bram_ns + self.dsp_ns
     }
@@ -97,8 +111,11 @@ impl PathComposition {
 /// STA result at nominal voltage.
 #[derive(Clone, Debug)]
 pub struct TimingReport {
+    /// Critical-path delay decomposition.
     pub cp: PathComposition,
+    /// Node ids along the critical path, source to endpoint.
     pub cp_nodes: Vec<u32>,
+    /// Maximum frequency (MHz) = 1000 / cp delay.
     pub fmax_mhz: f64,
     /// Distinct near-critical path compositions (cp first), for the
     /// optimizer's multi-path feasibility check.

@@ -7,20 +7,29 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
     /// Insertion-ordered object.
     Obj(Vec<(String, Json)>),
 }
 
+/// Parse failure with its byte offset.
 #[derive(Debug)]
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset of the failure in the input.
     pub offset: usize,
 }
 
@@ -35,6 +44,7 @@ impl std::error::Error for JsonError {}
 impl Json {
     // ---------- accessors ----------
 
+    /// Object member by key (None for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(kvs) => kvs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -51,6 +61,7 @@ impl Json {
         Some(cur)
     }
 
+    /// The value as a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -58,6 +69,7 @@ impl Json {
         }
     }
 
+    /// The value as a non-negative integer.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().and_then(|x| {
             if x >= 0.0 && x.fract() == 0.0 {
@@ -68,6 +80,7 @@ impl Json {
         })
     }
 
+    /// The value as a string slice.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -75,6 +88,7 @@ impl Json {
         }
     }
 
+    /// The value as a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -82,6 +96,7 @@ impl Json {
         }
     }
 
+    /// The value as an array slice.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -89,6 +104,7 @@ impl Json {
         }
     }
 
+    /// The value as ordered object members.
     pub fn as_obj(&self) -> Option<&[(String, Json)]> {
         match self {
             Json::Obj(o) => Some(o),
@@ -104,16 +120,19 @@ impl Json {
 
     // ---------- constructors ----------
 
+    /// Build an object from `(key, value)` pairs.
     pub fn obj(kvs: Vec<(&str, Json)>) -> Json {
         Json::Obj(kvs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
+    /// Build a numeric array.
     pub fn num_arr(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
     }
 
     // ---------- parsing ----------
 
+    /// Parse a complete JSON document.
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let bytes = text.as_bytes();
         let mut p = Parser { b: bytes, i: 0 };
@@ -128,12 +147,14 @@ impl Json {
 
     // ---------- serialization ----------
 
+    /// Serialize with two-space indentation.
     pub fn to_string_pretty(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, Some(0));
         out
     }
 
+    /// Serialize on one line.
     pub fn to_string_compact(&self) -> String {
         let mut out = String::new();
         self.write(&mut out, None);

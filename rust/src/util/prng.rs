@@ -38,6 +38,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// Next raw 64-bit output of the generator.
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;
         let result = s[0]
@@ -87,6 +88,7 @@ impl Rng {
         lo + self.below((hi - lo) as u64) as usize
     }
 
+    /// Bernoulli draw with success probability `p`.
     pub fn bool(&mut self, p: f64) -> bool {
         self.f64() < p
     }
@@ -105,6 +107,7 @@ impl Rng {
         r * c
     }
 
+    /// Normal draw with the given mean and standard deviation.
     pub fn normal_with(&mut self, mean: f64, std: f64) -> f64 {
         mean + std * self.normal()
     }
@@ -144,6 +147,7 @@ impl Rng {
         }
     }
 
+    /// Fisher–Yates in-place shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
             let j = self.below(i as u64 + 1) as usize;
@@ -151,6 +155,7 @@ impl Rng {
         }
     }
 
+    /// Uniformly pick one element of a non-empty slice.
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.index(0, xs.len())]
     }

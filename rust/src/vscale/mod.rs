@@ -28,8 +28,10 @@ pub enum Mode {
 }
 
 impl Mode {
+    /// Every mode, proposed first.
     pub const ALL: [Mode; 4] = [Mode::Proposed, Mode::CoreOnly, Mode::BramOnly, Mode::FreqOnly];
 
+    /// CLI/report name of the mode.
     pub fn name(self) -> &'static str {
         match self {
             Mode::Proposed => "prop",
@@ -53,9 +55,13 @@ impl Mode {
 /// A chosen operating point on the DC-DC grid.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct VoltagePoint {
+    /// Core-rail grid index (0 = nominal).
     pub icore: usize,
+    /// BRAM-rail grid index (0 = nominal).
     pub ibram: usize,
+    /// Core-rail voltage (V).
     pub vcore: f64,
+    /// BRAM-rail voltage (V).
     pub vbram: f64,
     /// Total power, normalized to nominal-voltage nominal-frequency = 1.
     pub power_norm: f64,
@@ -65,7 +71,9 @@ pub struct VoltagePoint {
 /// optionally refined by multi-path feasibility.
 #[derive(Clone, Debug)]
 pub struct Optimizer {
+    /// The DC-DC grid both rails can reach.
     pub grid: VoltageGrid,
+    /// Rail-level delay/power tables of the design.
     pub tables: RailTables,
     /// Optional near-critical path set for the multi-path check; delays in
     /// ns at nominal voltage, plus the per-class scale tables to evaluate
@@ -84,6 +92,7 @@ struct MultiPath {
 }
 
 impl Optimizer {
+    /// Build a single-composition optimizer over the given tables.
     pub fn new(grid: VoltageGrid, tables: RailTables) -> Self {
         Optimizer { grid, tables, paths: None }
     }
@@ -198,6 +207,7 @@ impl Optimizer {
 /// stage and stored in the memory").
 #[derive(Clone, Debug)]
 pub struct VoltageLut {
+    /// Voltage mode the LUT was optimized for.
     pub mode: Mode,
     /// Throughput margin t (paper §IV.A, default 5%).
     pub margin_t: f64,
@@ -206,14 +216,17 @@ pub struct VoltageLut {
     pub entries: Vec<LutEntry>,
 }
 
+/// One LUT row: a workload bin's frequency and optimal voltage pair.
 #[derive(Clone, Copy, Debug)]
 pub struct LutEntry {
     /// f / f_nom this bin runs at.
     pub freq_ratio: f64,
+    /// Minimum-power feasible voltage pair at that frequency.
     pub point: VoltagePoint,
 }
 
 impl VoltageLut {
+    /// Build the per-bin LUT (no latency restriction).
     pub fn build(opt: &Optimizer, m_bins: usize, margin_t: f64, mode: Mode) -> Self {
         Self::build_with_latency_cap(opt, m_bins, margin_t, mode, f64::INFINITY)
     }
@@ -243,6 +256,7 @@ impl VoltageLut {
         VoltageLut { mode, margin_t, entries }
     }
 
+    /// Number of workload bins M.
     pub fn m_bins(&self) -> usize {
         self.entries.len()
     }
@@ -253,6 +267,7 @@ impl VoltageLut {
         ((load.clamp(0.0, 1.0) * m as f64).ceil() as usize).clamp(1, m) - 1
     }
 
+    /// The LUT row serving a normalized load.
     pub fn entry_for_load(&self, load: f64) -> &LutEntry {
         &self.entries[self.bin_of(load)]
     }

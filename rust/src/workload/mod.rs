@@ -11,7 +11,13 @@
 //! validate every generated trace (see tests and `benches/fig10*`).
 //!
 //! Also here: Poisson, periodic(diurnal), square-wave and CSV replay
-//! sources, all normalized to "load relative to expected peak" in [0, 1].
+//! sources, all normalized to "load relative to expected peak" in [0, 1],
+//! and the named multi-tenant [`scenarios`] suite that drives both the
+//! simulator and the live coordinator.
+
+pub mod scenarios;
+
+pub use scenarios::{Scenario, TenantTrace};
 
 use crate::util::prng::Rng;
 use crate::util::stats;
@@ -19,19 +25,24 @@ use crate::util::stats;
 /// A workload trace: per-time-step load, normalized to expected peak.
 #[derive(Clone, Debug)]
 pub struct Trace {
+    /// Normalized load per step, each in [0, 1].
     pub loads: Vec<f64>,
+    /// Human-readable description of the generator and its parameters.
     pub label: String,
 }
 
 impl Trace {
+    /// Number of steps in the trace.
     pub fn len(&self) -> usize {
         self.loads.len()
     }
 
+    /// True when the trace has no steps.
     pub fn is_empty(&self) -> bool {
         self.loads.is_empty()
     }
 
+    /// Mean load over the trace.
     pub fn mean(&self) -> f64 {
         stats::mean(&self.loads)
     }
@@ -81,11 +92,16 @@ impl Trace {
     }
 }
 
+/// Measured burstiness/self-similarity statistics of a trace.
 #[derive(Clone, Copy, Debug)]
 pub struct TraceStats {
+    /// Mean normalized load.
     pub mean_load: f64,
+    /// Hurst exponent, rescaled-range estimator.
     pub hurst_rs: f64,
+    /// Hurst exponent, variance-time estimator.
     pub hurst_vt: f64,
+    /// Index of dispersion for counts (Poisson ≈ 1; paper uses 500).
     pub idc: f64,
 }
 
@@ -93,13 +109,17 @@ pub struct TraceStats {
 /// defaults: 40% average load, H = 0.76 → Pareto shape a = 3 − 2H = 1.48).
 #[derive(Clone, Copy, Debug)]
 pub struct BurstyConfig {
+    /// Trace length in steps.
     pub steps: usize,
+    /// Target mean normalized load.
     pub mean_load: f64,
+    /// Target Hurst exponent in (0.5, 1).
     pub hurst: f64,
     /// Number of superposed ON/OFF sources.
     pub sources: usize,
     /// Mean ON duration in steps (OFF scales to hit `mean_load`).
     pub mean_on: f64,
+    /// PRNG seed; identical seeds reproduce the trace exactly.
     pub seed: u64,
 }
 

@@ -1,0 +1,275 @@
+//! Named end-to-end serving scenarios (DESIGN.md S8.2).
+//!
+//! A [`Scenario`] bundles per-tenant workload traces with the fleet group
+//! layout (benchmark + traffic share), so the *same* named scenario can
+//! drive both the offline simulator (`platform::fleet::Fleet::run_scenario`)
+//! and the live sharded coordinator (`coordinator::FleetServing`, see
+//! `examples/fleet_serving.rs` and the `scenario` / `serve-fleet` CLI
+//! subcommands).
+//!
+//! The built-in suite covers the operating regimes the paper's framework
+//! targets (§VI): a diurnal datacenter day, a flash-crowd spike, a mixed
+//! multi-tenant bursty day, and a low-utilization overnight valley, plus
+//! CSV replay for real traces.
+
+use super::{bursty, periodic, poisson, BurstyConfig, Trace};
+
+/// One tenant's slice of a scenario: which benchmark group serves it, its
+/// provisioned share of the fleet, and its offered-load trace.
+#[derive(Clone, Debug)]
+pub struct TenantTrace {
+    /// Benchmark group that serves this tenant (Table I name).
+    pub benchmark: String,
+    /// Fraction of fleet capacity provisioned for this tenant.
+    pub share: f64,
+    /// Normalized offered load per step/epoch.
+    pub trace: Trace,
+}
+
+/// A named multi-tenant workload scenario.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Scenario name (see [`Scenario::NAMES`]).
+    pub name: String,
+    /// One-line description for reports.
+    pub description: String,
+    /// Per-tenant traces; shares sum to 1.
+    pub tenants: Vec<TenantTrace>,
+}
+
+impl Scenario {
+    /// Names accepted by [`Scenario::by_name`].
+    pub const NAMES: [&'static str; 4] =
+        ["diurnal", "flash-crowd", "mixed-tenant", "overnight"];
+
+    /// Build a named scenario.
+    pub fn by_name(name: &str, steps: usize, seed: u64) -> Result<Scenario, String> {
+        Ok(match name {
+            "diurnal" => Scenario::diurnal(steps, seed),
+            "flash-crowd" => Scenario::flash_crowd(steps, seed),
+            "mixed-tenant" => Scenario::mixed_tenant(steps, seed),
+            "overnight" => Scenario::overnight(steps, seed),
+            other => {
+                return Err(format!(
+                    "unknown scenario {other} (known: {})",
+                    Scenario::NAMES.join(", ")
+                ))
+            }
+        })
+    }
+
+    /// Two groups with anti-phased day/night sinusoids: user-facing Tabla
+    /// peaks when batch-style DianNao is in its valley and vice versa —
+    /// the complementary-tenant packing datacenters aim for.
+    pub fn diurnal(steps: usize, seed: u64) -> Scenario {
+        let period = if steps >= 192 { 96 } else { (steps / 2).max(2) };
+        let day = periodic(steps, period, 0.10, 0.85, 0.02, seed);
+        let mut night = periodic(steps, period, 0.15, 0.80, 0.02, seed ^ 0x5ca1e);
+        night.loads.rotate_left((period / 2).min(night.loads.len()));
+        night.label = format!("periodic(p={period},shifted)");
+        Scenario {
+            name: "diurnal".into(),
+            description: "anti-phased day/night sinusoids across two tenants".into(),
+            tenants: vec![
+                TenantTrace { benchmark: "tabla".into(), share: 0.5, trace: day },
+                TenantTrace { benchmark: "diannao".into(), share: 0.5, trace: night },
+            ],
+        }
+    }
+
+    /// A quiet Poisson baseline torn open by a flash crowd on the
+    /// user-facing tenant: a near-peak plateau over ~15% of the run with
+    /// sharp ramps. The background tenant stays steady.
+    pub fn flash_crowd(steps: usize, seed: u64) -> Scenario {
+        let mut front = poisson(steps, 0.22, 1_000.0, seed);
+        let spike_start = steps * 2 / 5;
+        let spike_len = (steps * 3 / 20).max(1);
+        let ramp = (spike_len / 6).max(1);
+        for t in spike_start..(spike_start + spike_len).min(steps) {
+            let into = t - spike_start;
+            let left = spike_start + spike_len - 1 - t;
+            let edge = into.min(left);
+            let level = if edge < ramp {
+                0.3 + 0.65 * (edge + 1) as f64 / ramp as f64
+            } else {
+                0.95
+            };
+            let cur = front.loads[t];
+            front.loads[t] = cur.max(level.min(1.0));
+        }
+        front.label = "poisson+flash-crowd".into();
+        let back = poisson(steps, 0.30, 1_000.0, seed ^ 0xbeef);
+        Scenario {
+            name: "flash-crowd".into(),
+            description: "near-peak spike on the user-facing tenant over a quiet baseline"
+                .into(),
+            tenants: vec![
+                TenantTrace { benchmark: "tabla".into(), share: 0.6, trace: front },
+                TenantTrace { benchmark: "dnnweaver".into(), share: 0.4, trace: back },
+            ],
+        }
+    }
+
+    /// Three tenants with different burstiness and mean loads sharing the
+    /// fleet — the paper's Fig. 7 "different users" deployment.
+    pub fn mixed_tenant(steps: usize, seed: u64) -> Scenario {
+        let a = bursty(&BurstyConfig { steps, mean_load: 0.40, seed, ..Default::default() });
+        let b = bursty(&BurstyConfig {
+            steps,
+            mean_load: 0.55,
+            seed: seed.wrapping_add(1),
+            ..Default::default()
+        });
+        let period = if steps >= 192 { 96 } else { (steps / 2).max(2) };
+        let c = periodic(steps, period, 0.15, 0.75, 0.03, seed.wrapping_add(2));
+        Scenario {
+            name: "mixed-tenant".into(),
+            description: "three tenants with distinct burstiness/mean sharing one fleet"
+                .into(),
+            tenants: vec![
+                TenantTrace { benchmark: "tabla".into(), share: 0.40, trace: a },
+                TenantTrace { benchmark: "diannao".into(), share: 0.35, trace: b },
+                TenantTrace { benchmark: "stripes".into(), share: 0.25, trace: c },
+            ],
+        }
+    }
+
+    /// Deep overnight valley: every tenant idles near 10% load — the
+    /// regime where voltage scaling's advantage over power gating is
+    /// smallest and the crash-voltage floor binds (paper §III).
+    pub fn overnight(steps: usize, seed: u64) -> Scenario {
+        let a = bursty(&BurstyConfig { steps, mean_load: 0.08, seed, ..Default::default() });
+        let b = bursty(&BurstyConfig {
+            steps,
+            mean_load: 0.12,
+            seed: seed.wrapping_add(7),
+            ..Default::default()
+        });
+        Scenario {
+            name: "overnight".into(),
+            description: "low-utilization overnight valley across both tenants".into(),
+            tenants: vec![
+                TenantTrace { benchmark: "tabla".into(), share: 0.5, trace: a },
+                TenantTrace { benchmark: "dnnweaver".into(), share: 0.5, trace: b },
+            ],
+        }
+    }
+
+    /// Build a replay scenario from `(benchmark, share, csv_text)` rows —
+    /// each CSV in the [`Trace::to_csv`] format.
+    pub fn replay(name: &str, specs: &[(&str, f64, &str)]) -> Result<Scenario, String> {
+        let mut tenants = Vec::with_capacity(specs.len());
+        for (benchmark, share, csv) in specs {
+            tenants.push(TenantTrace {
+                benchmark: benchmark.to_string(),
+                share: *share,
+                trace: Trace::from_csv(csv, &format!("{benchmark}-replay"))?,
+            });
+        }
+        let s = Scenario {
+            name: name.to_string(),
+            description: "CSV replay".into(),
+            tenants,
+        };
+        s.validate()?;
+        Ok(s)
+    }
+
+    /// Steps every tenant has a load for (min across tenants).
+    pub fn steps(&self) -> usize {
+        self.tenants.iter().map(|t| t.trace.len()).min().unwrap_or(0)
+    }
+
+    /// `(benchmark, share)` rows, the layout `platform::fleet::Fleet` and
+    /// `coordinator::FleetServing` are built from.
+    pub fn groups(&self) -> Vec<(String, f64)> {
+        self.tenants
+            .iter()
+            .map(|t| (t.benchmark.clone(), t.share))
+            .collect()
+    }
+
+    /// Check structural invariants: at least one tenant, positive shares
+    /// summing to ~1, and non-empty traces.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tenants.is_empty() {
+            return Err(format!("scenario {}: no tenants", self.name));
+        }
+        let sum: f64 = self.tenants.iter().map(|t| t.share).sum();
+        if (sum - 1.0).abs() > 1e-6 {
+            return Err(format!("scenario {}: shares sum to {sum}, expected 1", self.name));
+        }
+        for t in &self.tenants {
+            if t.share <= 0.0 {
+                return Err(format!("scenario {}: {} share must be positive", self.name, t.benchmark));
+            }
+            if t.trace.is_empty() {
+                return Err(format!("scenario {}: {} trace is empty", self.name, t.benchmark));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_named_scenarios_validate() {
+        for name in Scenario::NAMES {
+            let s = Scenario::by_name(name, 400, 2019).unwrap();
+            s.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(s.steps(), 400, "{name}");
+            assert!(s.tenants.len() >= 2, "{name} must be multi-tenant");
+            for t in &s.tenants {
+                assert!(t.trace.loads.iter().all(|&l| (0.0..=1.0).contains(&l)));
+            }
+        }
+        assert!(Scenario::by_name("nope", 100, 0).is_err());
+    }
+
+    #[test]
+    fn diurnal_tenants_are_anti_phased() {
+        let s = Scenario::diurnal(384, 1);
+        let a = &s.tenants[0].trace.loads;
+        let b = &s.tenants[1].trace.loads;
+        // When tabla peaks, diannao should be near its valley.
+        let peak_a = (0..a.len()).max_by(|&i, &j| a[i].partial_cmp(&a[j]).unwrap()).unwrap();
+        assert!(a[peak_a] > 0.7, "tabla peak {}", a[peak_a]);
+        assert!(b[peak_a] < 0.45, "diannao at tabla's peak: {}", b[peak_a]);
+    }
+
+    #[test]
+    fn flash_crowd_has_a_spike_and_a_quiet_baseline() {
+        let s = Scenario::flash_crowd(400, 3);
+        let front = &s.tenants[0].trace.loads;
+        let spike_max = front.iter().copied().fold(0.0, f64::max);
+        assert!(spike_max >= 0.95, "spike must near-saturate: {spike_max}");
+        // Before the spike the load is low.
+        let pre: f64 = front[..100].iter().sum::<f64>() / 100.0;
+        assert!(pre < 0.4, "pre-spike mean {pre}");
+        // The spike plateau sits where it was constructed.
+        assert!(front[400 * 2 / 5 + 10] > 0.9);
+    }
+
+    #[test]
+    fn overnight_is_low_utilization() {
+        let s = Scenario::overnight(2_000, 5);
+        for t in &s.tenants {
+            assert!(t.trace.mean() < 0.2, "{}: mean {}", t.benchmark, t.trace.mean());
+        }
+    }
+
+    #[test]
+    fn replay_round_trips_and_validates() {
+        let t = bursty(&BurstyConfig { steps: 64, ..Default::default() });
+        let csv = t.to_csv();
+        let s = Scenario::replay("replayed", &[("tabla", 0.5, &csv), ("diannao", 0.5, &csv)])
+            .unwrap();
+        assert_eq!(s.steps(), 64);
+        assert_eq!(s.groups()[0].0, "tabla");
+        assert!(Scenario::replay("bad", &[("tabla", 0.5, &csv)]).is_err());
+        assert!(Scenario::replay("bad", &[("tabla", 1.0, "load\nnope\n")]).is_err());
+    }
+}

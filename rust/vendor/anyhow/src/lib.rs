@@ -1,0 +1,286 @@
+//! Minimal, offline-vendored subset of the `anyhow` API.
+//!
+//! The build environment has no network access to crates.io, so this crate
+//! provides exactly the surface the workspace uses: [`Error`], [`Result`],
+//! the [`anyhow!`] / [`bail!`] / [`ensure!`] macros, and the [`Context`]
+//! extension trait. Semantics follow the real crate where it matters:
+//!
+//! * `Error` is a boxed dynamic error that does **not** itself implement
+//!   `std::error::Error` (so the blanket `From<E: std::error::Error>`
+//!   conversion used by `?` cannot conflict with `From<Error>`);
+//! * `Context` wraps the source error and prints a `Caused by:` chain in
+//!   `{:?}` (Debug) formatting, mirroring anyhow's report format.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` — the crate's ubiquitous alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A boxed dynamic error with an optional chain of context messages.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Wrap any displayable message as an error value.
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Create from a concrete `std::error::Error` value.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(error) }
+    }
+
+    /// Attach a context message; the prior error becomes the source.
+    pub fn context<C>(self, context: C) -> Error
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        Error {
+            inner: Box::new(ContextError { context: context.to_string(), source: self.inner }),
+        }
+    }
+
+    /// Iterate the chain of sources starting at this error.
+    pub fn chain(&self) -> Chain<'_> {
+        Chain { next: Some(self.inner.as_ref()) }
+    }
+
+    /// The outermost (most recently attached) message.
+    pub fn root_message(&self) -> String {
+        self.inner.to_string()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(s) = source {
+            write!(f, "\n    {s}")?;
+            source = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Iterator over an error's source chain (see [`Error::chain`]).
+pub struct Chain<'a> {
+    next: Option<&'a (dyn StdError + 'static)>,
+}
+
+impl<'a> Iterator for Chain<'a> {
+    type Item = &'a (dyn StdError + 'static);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let cur = self.next.take()?;
+        self.next = cur.source();
+        Some(cur)
+    }
+}
+
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+struct ContextError {
+    context: String,
+    source: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl fmt::Display for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.context)
+    }
+}
+
+impl fmt::Debug for ContextError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.context, self.source)
+    }
+}
+
+impl StdError for ContextError {
+    fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        Some(self.source.as_ref())
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to results
+/// and options, mirroring anyhow's.
+pub trait Context<T> {
+    /// Attach a fixed context message to the error case.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Attach a lazily-built context message to the error case.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (like `format!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_chains_and_debug_prints_causes() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "loading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "loading manifest");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("gone"), "{dbg}");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(flag, "flag must hold");
+            if !flag {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(f(false).unwrap_err().to_string(), "flag must hold");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(1u32).context("missing").unwrap(), 1);
+    }
+}

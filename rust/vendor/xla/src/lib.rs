@@ -1,0 +1,277 @@
+//! Offline stub of the `xla` (PJRT) binding surface.
+//!
+//! The real crate links `xla_extension` and executes AOT-compiled HLO on a
+//! PJRT CPU client. This build environment has neither the shared library
+//! nor network access, so this stub provides the exact API surface the
+//! `wavescale::runtime` module compiles against while reporting
+//! `unavailable` at runtime: [`PjRtClient::cpu`] returns an error, which
+//! the serving coordinator detects and uses to fall back to its native
+//! (pure-Rust) inference backend.
+//!
+//! Swapping in the real binding is a Cargo.toml change only — no source
+//! edits — because every type and method signature here mirrors the
+//! binding the runtime was written against.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Error type mirroring the binding's; all stub operations produce it.
+#[derive(Debug, Clone)]
+pub struct XlaError {
+    message: String,
+}
+
+impl XlaError {
+    /// Build an error with the given message.
+    pub fn new(message: impl Into<String>) -> Self {
+        XlaError { message: message.into() }
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.message)
+    }
+}
+
+impl StdError for XlaError {}
+
+/// Result alias used throughout the stub.
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError::new(format!(
+        "{what}: PJRT runtime unavailable (offline xla stub); the serving \
+         stack falls back to the native backend"
+    ))
+}
+
+/// Typed storage behind a [`Literal`]. Public only because the sealed
+/// [`NativeType`] conversion methods must name it; not for direct use.
+#[doc(hidden)]
+#[derive(Clone)]
+pub enum Storage {
+    /// 32-bit float elements.
+    F32(Vec<f32>),
+    /// 32-bit signed integer elements.
+    I32(Vec<i32>),
+}
+
+impl Storage {
+    fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+        }
+    }
+}
+
+/// Element types the runtime moves across the host boundary.
+pub trait NativeType: Copy + 'static {
+    /// Short dtype tag used in error messages.
+    const DTYPE: &'static str;
+
+    /// Pack a slice into typed storage.
+    #[doc(hidden)]
+    fn store(values: &[Self]) -> Storage;
+
+    /// Unpack typed storage; `None` on dtype mismatch.
+    #[doc(hidden)]
+    fn load(storage: &Storage) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const DTYPE: &'static str = "f32";
+
+    fn store(values: &[Self]) -> Storage {
+        Storage::F32(values.to_vec())
+    }
+
+    fn load(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const DTYPE: &'static str = "i32";
+
+    fn store(values: &[Self]) -> Storage {
+        Storage::I32(values.to_vec())
+    }
+
+    fn load(storage: &Storage) -> Option<Vec<Self>> {
+        match storage {
+            Storage::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host-side literal (typed tensor), constructible but not executable.
+pub struct Literal {
+    data: Storage,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice of f32 or i32 values.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        Literal { data: T::store(values), dims: vec![values.len() as i64] }
+    }
+
+    /// Reinterpret the literal with new dimensions (element count checked).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        let have = self.data.len();
+        if n < 0 || n as usize != have {
+            return Err(XlaError::new(format!(
+                "reshape: {have} elements into shape {dims:?}"
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Decompose a tuple literal; the stub never produces tuples.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple"))
+    }
+
+    /// Copy the literal out as a typed vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::load(&self.data).ok_or_else(|| {
+            XlaError::new(format!("to_vec: literal is not {}", T::DTYPE))
+        })
+    }
+
+    /// Dimensions of the literal.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module proto (stub: path-carrying placeholder).
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file. The stub fails unless the file exists, to
+    /// keep the error surface close to the real binding's.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if !std::path::Path::new(path).exists() {
+            return Err(XlaError::new(format!("{path}: no such file")));
+        }
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+
+    /// Source path of the module.
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+}
+
+/// An XLA computation handle (stub placeholder).
+pub struct XlaComputation {
+    _path: String,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed module proto.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _path: proto.path.clone() }
+    }
+}
+
+/// A compiled, device-loaded executable (stub: never constructible).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with host literals. Unreachable in the stub.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+
+    /// Execute with device-resident buffers. Unreachable in the stub.
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// A device-resident buffer (stub: never constructible).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    /// Fetch the buffer back to the host. Unreachable in the stub.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// The PJRT client handle.
+#[derive(Clone)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Open the CPU client. Always fails in the stub — callers treat this
+    /// as "PJRT unavailable" and fall back to native execution.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    /// Platform name of the client.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation. Unreachable in the stub.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+
+    /// Upload a host buffer to the device. Unreachable in the stub.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(unavailable("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("unavailable"));
+    }
+
+    #[test]
+    fn literal_round_trips_host_data() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 3]).is_err());
+        let i = Literal::vec1(&[1i32, 2]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn hlo_text_requires_existing_file() {
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo").is_err());
+    }
+}
