@@ -12,7 +12,7 @@
 ARTIFACTS_DIR := artifacts
 PY            := python3
 
-.PHONY: artifacts build test bench doc clean
+.PHONY: artifacts build test bench doc scenario-smoke clean
 
 artifacts:
 	cd python && $(PY) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
@@ -33,9 +33,18 @@ bench: build
 	@for b in fig1_delay fig2_dynamic_power fig3_static_power fig4_workload \
 	          fig5_alpha fig6_beta fig8_markov fig10_tabla_trace \
 	          fig11_voltage_trace fig12_accelerators table1_utilization \
-	          table2_summary pll_overhead; do \
+	          table2_summary pll_overhead hybrid_capacity; do \
 		cargo bench --bench $$b || exit 1; \
 	done
+
+# Shortened end-to-end smoke of the elastic capacity manager: an
+# overnight trough through both the offline scenario sim (with the
+# dvfs/pg/hybrid side-by-side) and the live serve-fleet coordinator.
+# CI runs this so the serving path is exercised beyond unit tests.
+scenario-smoke: build
+	cargo run --release -- scenario --name overnight --steps 120
+	cargo run --release -- serve-fleet --scenario overnight --epochs 6 \
+	    --epoch-ms 60 --rps 800 --instances 2
 
 doc:
 	cargo doc --no-deps

@@ -89,10 +89,10 @@ fn main() -> anyhow::Result<()> {
             }
             std::thread::sleep(gap);
         }
-        // Keep epochs aligned even if submission ran long.
-        if epoch_start.elapsed() < epoch {
-            std::thread::sleep(epoch - epoch_start.elapsed());
-        }
+        // Keep epochs aligned even if submission ran long (sample the
+        // elapsed time once; a re-sample can exceed `epoch` and underflow).
+        let elapsed = epoch_start.elapsed();
+        std::thread::sleep(epoch.saturating_sub(elapsed));
     }
     // Drain.
     std::thread::sleep(Duration::from_millis(500));

@@ -80,8 +80,9 @@ fn main() -> anyhow::Result<()> {
     for (g, recs) in report.stats.per_group.iter().zip(&report.epoch_records) {
         for r in recs.iter().take(4) {
             println!(
-                "  {:<10} epoch {:>2}: load {:.2} predicted {:.2} f/fnom {:.2} Vcore {:.3} Vbram {:.3} {:.2} W",
-                g.name, r.epoch, r.load, r.predicted, r.freq_ratio, r.vcore, r.vbram, r.power_w
+                "  {:<10} epoch {:>2}: load {:.2} predicted {:.2} f/fnom {:.2} Vcore {:.3} Vbram {:.3} active {}/{} {:.2} W",
+                g.name, r.epoch, r.load, r.predicted, r.freq_ratio, r.vcore, r.vbram,
+                r.active, g.n_instances, r.power_w
             );
         }
     }

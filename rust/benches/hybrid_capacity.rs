@@ -1,0 +1,63 @@
+//! Elastic capacity manager: DVFS-only vs PG-only vs hybrid fleet energy
+//! on every named scenario — the fleet-level extension of the paper's
+//! Fig. 4 (voltage scaling vs power gating vs their combination below the
+//! crash-voltage floor, DESIGN.md S6.1).
+
+mod common;
+
+use wavescale::platform::fleet::Fleet;
+use wavescale::platform::PlatformConfig;
+use wavescale::report::{row, table};
+use wavescale::vscale::Mode;
+use wavescale::workload::Scenario;
+
+fn main() {
+    println!("=== hybrid capacity: DVFS-only vs PG-only vs hybrid (fleet epoch energy) ===");
+    let mut rows = vec![row([
+        "scenario", "dvfs_J", "pg_J", "hybrid_J", "hybrid_vs_dvfs", "hybrid_vs_pg",
+    ])];
+    let mut hybrid_always_wins = true;
+    let mut strict_overnight = false;
+    for s in Scenario::all(600, 2019) {
+        let reports =
+            Fleet::compare_capacity_policies(&s, PlatformConfig::default(), Mode::Proposed)
+                .expect("scenario fleets build");
+        let (dvfs, pg, hybrid) = (
+            reports[0].1.energy_j(),
+            reports[1].1.energy_j(),
+            reports[2].1.energy_j(),
+        );
+        hybrid_always_wins &= hybrid <= dvfs * 1.01 && hybrid <= pg * 1.01;
+        if s.name == "overnight" && hybrid < dvfs * 0.995 {
+            strict_overnight = true;
+        }
+        rows.push(vec![
+            s.name.clone(),
+            format!("{dvfs:.1}"),
+            format!("{pg:.1}"),
+            format!("{hybrid:.1}"),
+            format!("{:.3}", hybrid / dvfs),
+            format!("{:.3}", hybrid / pg),
+        ]);
+    }
+    print!("{}", table(&rows));
+    common::emit_csv("hybrid_capacity.csv", &rows);
+
+    println!("\nshape checks (paper §III taken fleet-level):");
+    println!(
+        "  hybrid <= min(dvfs-only, pg-only) within 1% on every scenario: {}",
+        ok(hybrid_always_wins)
+    );
+    println!(
+        "  hybrid strictly beats dvfs-only in the overnight trough: {}",
+        ok(strict_overnight)
+    );
+}
+
+fn ok(b: bool) -> &'static str {
+    if b {
+        "OK"
+    } else {
+        "MISMATCH"
+    }
+}

@@ -41,15 +41,18 @@ pub fn mode_by_name(name: &str) -> Result<Mode, String> {
     })
 }
 
-/// Resolve a CLI policy name (`prop`, `pg`, `oracle-prop`, ...) to a
-/// [`Policy`].
+/// Resolve a CLI policy name (`prop`, `pg`, `oracle-prop`, `hybrid`,
+/// `hybrid-core-only`, ...) to a [`Policy`].
 pub fn policy_by_name(name: &str) -> Result<Policy, String> {
     Ok(match name {
         "power-gating" | "pg" => Policy::PowerGating,
         "nominal" => Policy::NominalStatic,
+        "hybrid" => Policy::Hybrid(Mode::Proposed),
         other => {
             if let Some(m) = other.strip_prefix("oracle-") {
                 Policy::DvfsOracle(mode_by_name(m)?)
+            } else if let Some(m) = other.strip_prefix("hybrid-") {
+                Policy::Hybrid(mode_by_name(m)?)
             } else {
                 Policy::Dvfs(mode_by_name(other)?)
             }
@@ -196,7 +199,10 @@ mod tests {
 
     #[test]
     fn policy_names_round_trip() {
-        for name in ["prop", "core-only", "bram-only", "freq-only", "pg", "nominal", "oracle-prop"] {
+        for name in [
+            "prop", "core-only", "bram-only", "freq-only", "pg", "nominal", "oracle-prop",
+            "hybrid", "hybrid-prop", "hybrid-core-only",
+        ] {
             let p = policy_by_name(name).unwrap();
             // Round-trip through the canonical name.
             policy_by_name(&p.name()).unwrap();

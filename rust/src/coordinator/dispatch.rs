@@ -54,24 +54,47 @@ impl Dispatcher {
         self.policy
     }
 
-    /// Choose a shard index for the next request.
+    /// Choose a shard index for the next request. Gated shards (elastic
+    /// capacity manager, DESIGN.md S6.1) are skipped — their worker is
+    /// parked, so routing to them would strand the request until the next
+    /// CC drain. Falls back to shard 0 if every shard reads gated (the CC
+    /// never gates all instances, but the flags are read racily).
     pub fn pick(&self, shards: &[Arc<ShardQueue>]) -> usize {
         debug_assert!(!shards.is_empty());
         match self.policy {
             DispatchPolicy::RoundRobin => {
-                self.cursor.fetch_add(1, Ordering::Relaxed) % shards.len()
+                // Rotate over the *active* shards only: advancing past a
+                // gated run would funnel every pick that lands in it onto
+                // the next active shard, skewing its queue depth.
+                let active = shards.iter().filter(|s| !s.is_gated()).count();
+                if active == 0 {
+                    return 0;
+                }
+                let k = self.cursor.fetch_add(1, Ordering::Relaxed) % active;
+                shards
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| !s.is_gated())
+                    .nth(k)
+                    .map(|(i, _)| i)
+                    // Gating flags moved between count and scan: any
+                    // active shard is fine.
+                    .unwrap_or(0)
             }
             DispatchPolicy::LeastLoaded => {
-                let mut best = 0usize;
+                let mut best = None;
                 let mut best_depth = usize::MAX;
                 for (i, s) in shards.iter().enumerate() {
+                    if s.is_gated() {
+                        continue;
+                    }
                     let d = s.len();
                     if d < best_depth {
                         best_depth = d;
-                        best = i;
+                        best = Some(i);
                     }
                 }
-                best
+                best.unwrap_or(0)
             }
         }
     }
@@ -98,6 +121,27 @@ mod tests {
         let picks: Vec<usize> = (0..6).map(|_| d.pick(&s)).collect();
         assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
         assert_eq!(d.policy().name(), "round-robin");
+    }
+
+    #[test]
+    fn both_policies_skip_gated_shards() {
+        let s = shards(3);
+        s[1].set_gated(true);
+        let rr = Dispatcher::new(DispatchPolicy::RoundRobin);
+        let picks: Vec<usize> = (0..4).map(|_| rr.pick(&s)).collect();
+        assert!(!picks.contains(&1), "round-robin must skip the gated shard: {picks:?}");
+
+        // Least-loaded: the gated shard is empty (cheapest) but skipped.
+        s[0].try_push(req(0)).unwrap();
+        s[2].try_push(req(1)).unwrap();
+        s[2].try_push(req(2)).unwrap();
+        let ll = Dispatcher::new(DispatchPolicy::LeastLoaded);
+        assert_eq!(ll.pick(&s), 0);
+        // All gated: fall back to shard 0 rather than failing.
+        s[0].set_gated(true);
+        s[2].set_gated(true);
+        assert_eq!(ll.pick(&s), 0);
+        assert_eq!(rr.pick(&s), 0);
     }
 
     #[test]

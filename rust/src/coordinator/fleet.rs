@@ -14,6 +14,17 @@
 //! fleet-level [`Registry`](crate::metrics::Registry) + [`FleetServingStats`]
 //! aggregate power and QoS across groups — the live counterpart of
 //! `platform::fleet::FleetReport`.
+//!
+//! Each group's CC decision is **elastic** (DESIGN.md S6.1): instead of
+//! DVFS over a fixed instance count, the per-group
+//! [`ElasticLut`](crate::vscale::ElasticLut) picks the minimum-power
+//! (n_active, Vcore, Vbram, f) combination for the predicted bin. Gated
+//! instances draw `pg_residual` of nominal power; their shards are
+//! flagged so dispatch and stealing skip them, their workers park on the
+//! shard condvar, and the CC drains any requests still queued on a gated
+//! shard into the active shards every epoch — admitted work is never
+//! dropped. `capacity_policy` selects the two baselines (`DvfsOnly`,
+//! `GatingOnly`) for side-by-side runs.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -24,13 +35,13 @@ use anyhow::Result;
 use super::backend::InferenceBackend;
 use super::dispatch::{DispatchPolicy, Dispatcher};
 use super::shard::ShardQueue;
-use super::{Completion, EpochRecord, QueueFull, Request};
+use super::{Completion, EpochRecord, Request, SubmitError};
 use crate::markov::{MarkovPredictor, Predictor};
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::platform::{build_platform, PlatformConfig, Policy};
 use crate::power::DesignPower;
 use crate::runtime::{Engine, OpQuery, VoltageSelectorClient};
-use crate::vscale::{Mode, Optimizer, VoltageLut};
+use crate::vscale::{CapacityPolicy, ElasticConfig, ElasticLut, Mode, Optimizer};
 
 /// Normalized nominal service clock (Hz); only the ratio to the published
 /// frequency matters for the simulated occupancy.
@@ -75,6 +86,12 @@ pub struct FleetServingConfig {
     pub dispatch: DispatchPolicy,
     /// Allow idle workers to steal from sibling shards.
     pub steal: bool,
+    /// How each group's CC trades instance gating against DVFS per epoch
+    /// (DESIGN.md S6.1): `Hybrid` is the elastic capacity manager,
+    /// `DvfsOnly` / `GatingOnly` are the baselines.
+    pub capacity_policy: CapacityPolicy,
+    /// Residual power fraction (of nominal) drawn by a gated instance.
+    pub pg_residual: f64,
 }
 
 impl Default for FleetServingConfig {
@@ -96,6 +113,8 @@ impl Default for FleetServingConfig {
             warmup_epochs: 2,
             dispatch: DispatchPolicy::LeastLoaded,
             steal: true,
+            capacity_policy: CapacityPolicy::Hybrid,
+            pg_residual: 0.02,
         }
     }
 }
@@ -114,7 +133,14 @@ pub(super) struct GroupShared {
     freq_ratio: AtomicU64,
     vcore_mv: AtomicU64,
     vbram_mv: AtomicU64,
+    active_now: AtomicU64,
     arrivals_this_epoch: AtomicU64,
+    /// Requests successfully placed on some shard. Shutdown-drain
+    /// invariant: workers may exit only once
+    /// `admitted == completed + failed` — queue emptiness alone is racy
+    /// because the CC's gated-shard drain holds requests outside any
+    /// queue while re-dispatching them.
+    pub(super) admitted: Counter,
     pub(super) completed: Counter,
     pub(super) rejected: Counter,
     pub(super) failed: Counter,
@@ -132,10 +158,17 @@ impl GroupShared {
     }
 }
 
+/// Round a rail voltage to integer millivolts for the published gauges.
+/// Truncation would report e.g. 0.7 V (stored as 0.6999…) as 699 mV.
+pub(crate) fn volts_to_mv(v: f64) -> u64 {
+    (v * 1000.0).round() as u64
+}
+
 /// Pull a batch for worker `wid`: first from its home shard (waiting up to
 /// `wait` for the first request), then — when idle and `steal` is on —
-/// from the deepest sibling shard. Returns the batch and whether it was
-/// stolen.
+/// from the deepest sibling shard. Gated siblings are skipped (their
+/// backlog belongs to the CC's drain/re-dispatch pass). Returns the batch
+/// and whether it was stolen.
 pub(super) fn claim_batch(
     shards: &[Arc<ShardQueue>],
     wid: usize,
@@ -151,7 +184,7 @@ pub(super) fn claim_batch(
     let mut victim = None;
     let mut depth = 0usize;
     for (i, s) in shards.iter().enumerate() {
-        if i != wid && s.len() > depth {
+        if i != wid && !s.is_gated() && s.len() > depth {
             depth = s.len();
             victim = Some(i);
         }
@@ -208,6 +241,8 @@ pub struct GroupServingStats {
     pub vcore_now: f64,
     /// Currently published BRAM-rail voltage (V).
     pub vbram_now: f64,
+    /// Instances currently active (not gated by the elastic manager).
+    pub active_now: usize,
     /// Requests currently queued across the group's shards.
     pub queue_depth: usize,
 }
@@ -326,7 +361,9 @@ impl FleetServing {
                 freq_ratio: AtomicU64::new(1.0f64.to_bits()),
                 vcore_mv: AtomicU64::new(800),
                 vbram_mv: AtomicU64::new(950),
+                active_now: AtomicU64::new(g.n_instances as u64),
                 arrivals_this_epoch: AtomicU64::new(0),
+                admitted: Counter::default(),
                 completed: Counter::default(),
                 rejected: Counter::default(),
                 failed: Counter::default(),
@@ -355,14 +392,35 @@ impl FleetServing {
                     let batch_cap = backend.batch();
                     let in_dim = backend.in_dim();
                     loop {
+                        // Gated instance: park on the shard condvar until
+                        // the CC scales back up or shutdown starts. The
+                        // timeout bounds a racily-missed wakeup.
+                        if g.shards[wid].is_gated() && !stop.load(Ordering::Relaxed) {
+                            g.shards[wid].park_while_gated(Duration::from_millis(25));
+                            continue;
+                        }
                         let (mut reqs, stolen) =
                             claim_batch(&g.shards, wid, batch_cap, batch_timeout, steal);
                         if stolen {
                             g.stolen_batches.inc();
                         }
                         if reqs.is_empty() {
-                            if stop.load(Ordering::Relaxed)
-                                && g.shards.iter().all(|s| s.is_empty())
+                            // Exit only once every admitted request has
+                            // been served or failed. After `stop` no new
+                            // requests are admitted (shutdown consumes
+                            // the fleet), so `admitted` is frozen and
+                            // this equality is race-free — unlike a
+                            // queue-emptiness check, it also covers
+                            // requests the CC's gated-shard drain is
+                            // holding outside any queue. The Acquire on
+                            // the stop flag pairs with shutdown()'s
+                            // Release store so every admitted.inc()
+                            // sequenced before shutdown is visible here;
+                            // stale (low) completed/failed reads only
+                            // delay exit by a loop iteration.
+                            if stop.load(Ordering::Acquire)
+                                && g.admitted.get()
+                                    == g.completed.get() + g.failed.get()
                             {
                                 return;
                             }
@@ -427,7 +485,7 @@ impl FleetServing {
                 struct GroupCc {
                     design: DesignPower,
                     optimizer: Optimizer,
-                    lut: VoltageLut,
+                    elastic: ElasticLut,
                     predictor: MarkovPredictor,
                     backlog: f64,
                     cap: f64,
@@ -436,16 +494,23 @@ impl FleetServing {
                     served_fr: f64,
                     served_vcore: f64,
                     served_vbram: f64,
+                    served_active: usize,
                 }
                 let mut ccs: Vec<GroupCc> = built
                     .into_iter()
                     .zip(&groups)
                     .map(|((design, optimizer), g)| {
-                        let lut = VoltageLut::build(
+                        let elastic = ElasticLut::build(
                             &optimizer,
-                            cfg2.m_bins,
-                            cfg2.margin_t,
-                            cfg2.mode,
+                            &ElasticConfig {
+                                m_bins: cfg2.m_bins,
+                                margin_t: cfg2.margin_t,
+                                mode: cfg2.mode,
+                                n_instances: g.n_instances,
+                                residual: cfg2.pg_residual,
+                                policy: cfg2.capacity_policy,
+                                latency_cap_sw: f64::INFINITY,
+                            },
                         );
                         let cap = g.n_instances as f64
                             * (F_NOM_HZ / cfg2.cycles_per_batch)
@@ -456,13 +521,14 @@ impl FleetServing {
                         GroupCc {
                             design,
                             optimizer,
-                            lut,
+                            elastic,
                             predictor: MarkovPredictor::new(cfg2.m_bins, cfg2.warmup_epochs),
                             backlog: 0.0,
                             cap,
                             served_fr: 1.0,
                             served_vcore,
                             served_vbram,
+                            served_active: g.n_instances,
                         }
                     })
                     .collect();
@@ -479,36 +545,45 @@ impl FleetServing {
                         cc.predictor.observe(load);
                         let predicted = cc.predictor.predict();
 
-                        let entry = cc.lut.entry_for_load(predicted);
+                        // Elastic decision: minimum-power (n_active, V, f)
+                        // for the predicted bin (DESIGN.md S6.1).
+                        let entry = *cc.elastic.entry_for_load(predicted);
                         let mut choice = entry.point;
                         // Refine through the AOT'd Voltage Selector when
                         // available; keep the native point on any error.
-                        if let Some(engine) = &engine {
-                            let vs = VoltageSelectorClient::new(engine);
-                            let q = OpQuery {
-                                alpha: cc.optimizer.tables.op.alpha as f32,
-                                beta: cc.optimizer.tables.op.beta as f32,
-                                gamma_l: cc.optimizer.tables.op.gamma_l as f32,
-                                gamma_m: cc.optimizer.tables.op.gamma_m as f32,
-                                sw: (1.0 / entry.freq_ratio) as f32,
-                            };
-                            if let Ok(choices) =
-                                vs.select(cfg2.mode, &cc.optimizer.tables, &[q])
-                            {
-                                if let Some(c) = choices.first() {
-                                    choice.vcore = c.vcore;
-                                    choice.vbram = c.vbram;
-                                    choice.power_norm = c.power_norm;
+                        // PG-only pins active instances at nominal V/f, so
+                        // its point is never refined.
+                        if cfg2.capacity_policy != CapacityPolicy::GatingOnly {
+                            if let Some(engine) = &engine {
+                                let vs = VoltageSelectorClient::new(engine);
+                                let q = OpQuery {
+                                    alpha: cc.optimizer.tables.op.alpha as f32,
+                                    beta: cc.optimizer.tables.op.beta as f32,
+                                    gamma_l: cc.optimizer.tables.op.gamma_l as f32,
+                                    gamma_m: cc.optimizer.tables.op.gamma_m as f32,
+                                    sw: (1.0 / entry.freq_ratio) as f32,
+                                };
+                                if let Ok(choices) =
+                                    vs.select(cfg2.mode, &cc.optimizer.tables, &[q])
+                                {
+                                    if let Some(c) = choices.first() {
+                                        choice.vcore = c.vcore;
+                                        choice.vbram = c.vbram;
+                                        choice.power_norm = c.power_norm;
+                                    }
                                 }
                             }
                         }
 
                         // ---- per-tenant QoS accounting ------------------
-                        // Demand is judged against the operating point that
-                        // actually served this epoch, not the one about to
-                        // be published.
+                        // Demand is judged against the capacity that
+                        // actually served this epoch — active instances ×
+                        // their frequency — not the one about to be
+                        // published.
+                        let served_cap = cc.served_fr * cc.served_active as f64
+                            / g.n_instances as f64;
                         let demand = load + cc.backlog;
-                        let delivered = demand.min(cc.served_fr);
+                        let delivered = demand.min(served_cap);
                         cc.backlog = (demand - delivered).min(1.0);
                         if demand - delivered > 1e-9 {
                             g.violations.inc();
@@ -517,14 +592,19 @@ impl FleetServing {
                         // ---- energy integration + trace row -------------
                         // Charged at the point that served the epoch; the
                         // freshly chosen point is charged next epoch.
+                        // Active instances at the scaled point, gated ones
+                        // at the residual of nominal.
                         let f_mhz = cc.design.spec.freq_mhz * cc.served_fr;
-                        let p = cc
+                        let p_board = cc
                             .design
                             .breakdown(cc.served_vcore, cc.served_vbram, f_mhz)
-                            .total_w()
-                            * g.n_instances as f64;
-                        let p_nom =
-                            cc.design.nominal().total_w() * g.n_instances as f64;
+                            .total_w();
+                        let board_nom = cc.design.nominal().total_w();
+                        let gated =
+                            (g.n_instances - cc.served_active) as f64;
+                        let p = p_board * cc.served_active as f64
+                            + board_nom * cfg2.pg_residual * gated;
+                        let p_nom = board_nom * g.n_instances as f64;
                         g.energy_j.add(p * cfg2.epoch.as_secs_f64());
                         g.nominal_energy_j.add(p_nom * cfg2.epoch.as_secs_f64());
                         g.epochs.inc();
@@ -536,18 +616,54 @@ impl FleetServing {
                             vcore: cc.served_vcore,
                             vbram: cc.served_vbram,
                             power_w: p,
+                            active: cc.served_active,
                         });
 
                         // ---- publish the next operating point -----------
                         g.freq_ratio
                             .store(entry.freq_ratio.to_bits(), Ordering::Relaxed);
                         g.vcore_mv
-                            .store((choice.vcore * 1000.0) as u64, Ordering::Relaxed);
+                            .store(volts_to_mv(choice.vcore), Ordering::Relaxed);
                         g.vbram_mv
-                            .store((choice.vbram * 1000.0) as u64, Ordering::Relaxed);
+                            .store(volts_to_mv(choice.vbram), Ordering::Relaxed);
+                        g.active_now
+                            .store(entry.n_active as u64, Ordering::Relaxed);
+
+                        // ---- gate / ungate + drain ----------------------
+                        // Shards [n_active..) are gated; anything still
+                        // queued on them is re-dispatched into the active
+                        // shards so admitted requests are never dropped.
+                        for (i, s) in g.shards.iter().enumerate() {
+                            s.set_gated(i >= entry.n_active);
+                        }
+                        let mut cursor = 0usize;
+                        for gated_shard in g.shards.iter().skip(entry.n_active) {
+                            for mut r in gated_shard.drain_all() {
+                                let mut placed = false;
+                                for _ in 0..entry.n_active {
+                                    let t = cursor % entry.n_active;
+                                    cursor += 1;
+                                    match g.shards[t].try_push(r) {
+                                        Ok(()) => {
+                                            placed = true;
+                                            break;
+                                        }
+                                        Err(back) => r = back,
+                                    }
+                                }
+                                if !placed {
+                                    // Every active shard is full: return
+                                    // the request to its original shard
+                                    // (bound-free) and retry next epoch —
+                                    // never drop admitted work.
+                                    gated_shard.push_unbounded(r);
+                                }
+                            }
+                        }
                         cc.served_fr = entry.freq_ratio;
                         cc.served_vcore = choice.vcore;
                         cc.served_vbram = choice.vbram;
+                        cc.served_active = entry.n_active;
                     }
                     epoch += 1;
                 }
@@ -584,16 +700,28 @@ impl FleetServing {
     }
 
     /// Input feature width of a group's model.
+    ///
+    /// # Panics
+    /// Like slice indexing, panics when `group >= n_groups()`; resolve
+    /// indices with [`FleetServing::group_index`] first. The *request*
+    /// path ([`FleetServing::submit`]) never panics — it returns
+    /// [`SubmitError::UnknownGroup`] instead.
     pub fn in_dim(&self, group: usize) -> usize {
         self.groups[group].in_dim
     }
 
     /// Artifact batch size of a group's model.
+    ///
+    /// # Panics
+    /// Panics when `group >= n_groups()` (see [`FleetServing::in_dim`]).
     pub fn batch(&self, group: usize) -> usize {
         self.groups[group].batch
     }
 
     /// Requests currently queued across a group's shards.
+    ///
+    /// # Panics
+    /// Panics when `group >= n_groups()` (see [`FleetServing::in_dim`]).
     pub fn queue_len(&self, group: usize) -> usize {
         self.groups[group].shards.iter().map(|s| s.len()).sum()
     }
@@ -603,17 +731,22 @@ impl FleetServing {
         &self.registry
     }
 
-    /// Submit one request to a group; `Err(QueueFull)` signals that every
-    /// shard of the group is at capacity (backpressure).
-    pub fn submit(&self, group: usize, payload: Vec<f32>) -> std::result::Result<u64, QueueFull> {
-        let g = &self.groups[group];
-        assert_eq!(
-            payload.len(),
-            g.in_dim,
-            "payload must be {} floats for group {}",
-            g.in_dim,
-            g.name
-        );
+    /// Submit one request to a group. Errors are typed backpressure-style
+    /// signals, never aborts: `UnknownGroup` for an out-of-range index,
+    /// `BadPayload` for a wrong-width payload, `QueueFull` when every
+    /// active shard of the group is at capacity.
+    pub fn submit(
+        &self,
+        group: usize,
+        payload: Vec<f32>,
+    ) -> std::result::Result<u64, SubmitError> {
+        let g = self
+            .groups
+            .get(group)
+            .ok_or_else(|| SubmitError::UnknownGroup(format!("group index {group}")))?;
+        if payload.len() != g.in_dim {
+            return Err(SubmitError::BadPayload { expected: g.in_dim, got: payload.len() });
+        }
         // The CC's workload counter sees *offered* demand (paper Fig. 9's
         // arrival counter), so rejected requests still push the predictor
         // toward higher frequency — essential under flash-crowd overload,
@@ -630,6 +763,11 @@ impl FleetServing {
                 let mut placed = false;
                 for step in 1..n {
                     let idx = (first + step) % n;
+                    // Gated shards' workers are parked; routing there
+                    // would strand the request until the next CC drain.
+                    if g.shards[idx].is_gated() {
+                        continue;
+                    }
                     match g.shards[idx].try_push(req) {
                         Ok(()) => {
                             placed = true;
@@ -641,22 +779,24 @@ impl FleetServing {
                 if !placed {
                     g.rejected.inc();
                     self.rejected_total.inc();
-                    return Err(QueueFull);
+                    return Err(SubmitError::QueueFull);
                 }
             }
         }
+        g.admitted.inc();
         Ok(id)
     }
 
-    /// Submit by benchmark name (convenience over [`FleetServing::submit`]).
+    /// Submit by benchmark name (convenience over [`FleetServing::submit`]);
+    /// an unknown name returns `Err(SubmitError::UnknownGroup)`.
     pub fn submit_to(
         &self,
         benchmark: &str,
         payload: Vec<f32>,
-    ) -> std::result::Result<u64, QueueFull> {
+    ) -> std::result::Result<u64, SubmitError> {
         let gi = self
             .group_index(benchmark)
-            .unwrap_or_else(|| panic!("no group serves {benchmark}"));
+            .ok_or_else(|| SubmitError::UnknownGroup(benchmark.to_string()))?;
         self.submit(gi, payload)
     }
 
@@ -684,6 +824,7 @@ impl FleetServing {
             freq_ratio_now: g.freq_ratio(),
             vcore_now: g.vcore_mv.load(Ordering::Relaxed) as f64 / 1000.0,
             vbram_now: g.vbram_mv.load(Ordering::Relaxed) as f64 / 1000.0,
+            active_now: g.active_now.load(Ordering::Relaxed) as usize,
             queue_depth: g.shards.iter().map(|s| s.len()).sum(),
         }
     }
@@ -712,23 +853,29 @@ impl FleetServing {
     }
 
     /// Stop accepting work, drain every shard, join workers and the CC,
-    /// and return the final report with per-group epoch traces.
+    /// and return the final report with per-group epoch traces. Gated
+    /// instances are ungated first so their workers wake and help drain.
     pub fn shutdown(mut self) -> Result<FleetServingReport> {
-        self.shutdown.store(true, Ordering::Relaxed);
+        // Release pairs with the workers' Acquire load: every
+        // `admitted.inc()` sequenced before this call is visible to a
+        // worker that observes the flag, so the admitted == completed +
+        // failed drain invariant cannot read a stale admitted count.
+        self.shutdown.store(true, Ordering::Release);
         for g in &self.groups {
             for s in &g.shards {
+                s.set_gated(false);
                 s.wake_all();
             }
         }
         for w in self.workers.drain(..) {
             w.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
         }
-        let epoch_records = self
-            .controller
-            .take()
-            .unwrap()
-            .join()
-            .map_err(|_| anyhow::anyhow!("controller panicked"))?;
+        let epoch_records = match self.controller.take() {
+            Some(controller) => controller
+                .join()
+                .map_err(|_| anyhow::anyhow!("controller panicked"))?,
+            None => Vec::new(),
+        };
         Ok(FleetServingReport { stats: self.stats(), epoch_records })
     }
 }
@@ -771,9 +918,12 @@ pub fn drive_scenario(
             }
             std::thread::sleep(gap);
         }
-        if epoch_start.elapsed() < epoch {
-            std::thread::sleep(epoch - epoch_start.elapsed());
-        }
+        // Keep epochs aligned even if submission ran long. The elapsed
+        // time is sampled once: a second sample taken after the
+        // comparison can exceed `epoch` and make `epoch - elapsed`
+        // underflow-panic.
+        let elapsed = epoch_start.elapsed();
+        std::thread::sleep(epoch.saturating_sub(elapsed));
     }
     std::thread::sleep(epoch); // drain window
     accepted
@@ -783,14 +933,15 @@ pub fn drive_scenario(
 /// group, fleet totals last) for `report::table`.
 pub fn fleet_report_rows(stats: &FleetServingStats) -> Vec<Vec<String>> {
     let mut rows = vec![crate::report::row([
-        "group", "share", "backend", "done", "rejected", "failed", "stolen", "p50_ms",
-        "p99_ms", "gain", "violations%",
+        "group", "share", "backend", "active", "done", "rejected", "failed", "stolen",
+        "p50_ms", "p99_ms", "gain", "violations%",
     ])];
     for g in &stats.per_group {
         rows.push(vec![
             g.name.clone(),
             format!("{:.2}", g.share),
             g.backend.to_string(),
+            format!("{}/{}", g.active_now, g.n_instances),
             g.completed.to_string(),
             g.rejected.to_string(),
             g.failed.to_string(),
@@ -804,6 +955,7 @@ pub fn fleet_report_rows(stats: &FleetServingStats) -> Vec<Vec<String>> {
     rows.push(vec![
         "fleet".into(),
         "1.00".into(),
+        "-".into(),
         "-".into(),
         stats.completed.to_string(),
         stats.rejected.to_string(),
@@ -872,6 +1024,103 @@ mod tests {
         assert!(!stolen);
         assert!(batch.is_empty());
         assert_eq!(shards[1].len(), 3);
+    }
+
+    #[test]
+    fn claim_batch_never_steals_from_a_gated_sibling() {
+        let shards: Vec<Arc<ShardQueue>> =
+            (0..3).map(|_| Arc::new(ShardQueue::new(64))).collect();
+        for r in reqs(8) {
+            shards[1].try_push(r).unwrap();
+        }
+        shards[1].set_gated(true);
+        for r in reqs(2) {
+            shards[2].try_push(r).unwrap();
+        }
+        // Worker 0 is idle; the deepest shard is gated, so it must steal
+        // from the shallower active sibling instead.
+        let (batch, stolen) =
+            claim_batch(&shards, 0, 16, Duration::from_millis(1), true);
+        assert!(stolen);
+        assert_eq!(batch.len(), 1, "steals half of the active sibling's 2");
+        assert_eq!(shards[1].len(), 8, "gated backlog is left for the CC drain");
+    }
+
+    #[test]
+    fn voltage_gauges_round_to_millivolts() {
+        // 0.7f64 is stored as 0.69999999999999996: truncation used to
+        // publish 699 mV for a 700 mV operating point.
+        assert_eq!(volts_to_mv(0.7), 700);
+        assert_eq!(volts_to_mv(0.8999999999), 900);
+        assert_eq!(volts_to_mv(0.95), 950);
+        assert_eq!(volts_to_mv(0.5), 500);
+        assert_eq!(volts_to_mv(0.6493), 649);
+    }
+
+    #[test]
+    fn published_gauges_pin_to_the_lut_entry() {
+        // With no load, no warmup and no PJRT refinement, the CC must
+        // publish exactly the bin-0 elastic LUT entry — voltages rounded
+        // to millivolts, not truncated.
+        let cfg = FleetServingConfig {
+            groups: vec![GroupConfig {
+                benchmark: "tabla".into(),
+                share: 1.0,
+                n_instances: 2,
+            }],
+            epoch: Duration::from_millis(30),
+            warmup_epochs: 0,
+            selector_via_pjrt: false,
+            ..Default::default()
+        };
+        let platform = build_platform(
+            "tabla",
+            PlatformConfig::default(),
+            Policy::Dvfs(cfg.mode),
+        )
+        .unwrap();
+        let lut = ElasticLut::build(
+            platform.optimizer_ref(),
+            &ElasticConfig {
+                m_bins: cfg.m_bins,
+                margin_t: cfg.margin_t,
+                mode: cfg.mode,
+                n_instances: 2,
+                residual: cfg.pg_residual,
+                policy: cfg.capacity_policy,
+                latency_cap_sw: f64::INFINITY,
+            },
+        );
+        let want = lut.entries[0];
+
+        let fleet = FleetServing::start(cfg, "artifacts".into()).unwrap();
+        // Wait for the CC to have decided a few idle epochs (epoch 0's
+        // prediction comes from an untrained chain; by epoch 2 the
+        // repeated zero-load observations pin it to bin 0). Polling with
+        // a generous deadline instead of a fixed sleep keeps the test
+        // stable on oversubscribed CI runners.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while fleet.stats().per_group[0].epochs < 3 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(15));
+        }
+        let stats = fleet.stats();
+        let g = &stats.per_group[0];
+        let mv = |v: f64| volts_to_mv(v) as f64 / 1000.0;
+        assert!(
+            (g.vcore_now - mv(want.point.vcore)).abs() < 1e-9,
+            "vcore gauge {} vs LUT {}",
+            g.vcore_now,
+            want.point.vcore
+        );
+        assert!(
+            (g.vbram_now - mv(want.point.vbram)).abs() < 1e-9,
+            "vbram gauge {} vs LUT {}",
+            g.vbram_now,
+            want.point.vbram
+        );
+        assert!((g.freq_ratio_now - want.freq_ratio).abs() < 1e-12);
+        assert_eq!(g.active_now, want.n_active);
+        fleet.shutdown().unwrap();
     }
 
     #[test]

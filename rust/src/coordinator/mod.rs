@@ -29,6 +29,19 @@
 //! real execution. Energy is integrated from the power model at the
 //! operating point of each epoch. Rust threads + channels only — no
 //! external runtime (DESIGN.md §6).
+//!
+//! The CC runs the **elastic capacity manager** (DESIGN.md S6.1) by
+//! default: each epoch it picks the minimum-power (active instances,
+//! Vcore, Vbram, f) combination from the per-group
+//! [`ElasticLut`](crate::vscale::ElasticLut); gated instances' shards are
+//! skipped by dispatch and stealing, their workers park on the shard
+//! condvar, and their queued requests are drained into active shards.
+//!
+//! This module is the user-facing serving API: it must return typed
+//! errors under bad input or load, never abort the process, so panicking
+//! constructs are denied lint-level for all non-test code below.
+
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::panic))]
 
 pub mod backend;
 pub mod dispatch;
@@ -48,7 +61,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::power::DesignPower;
-use crate::vscale::{Mode, Optimizer};
+use crate::vscale::{CapacityPolicy, Mode, Optimizer};
 
 /// Single-tenant coordinator configuration.
 #[derive(Clone, Debug)]
@@ -81,6 +94,11 @@ pub struct ServingConfig {
     pub dispatch: DispatchPolicy,
     /// Allow idle workers to steal from sibling shards.
     pub steal: bool,
+    /// How the CC trades instance gating against DVFS each epoch
+    /// (DESIGN.md S6.1); `Hybrid` is the elastic capacity manager.
+    pub capacity_policy: CapacityPolicy,
+    /// Residual power fraction (of nominal) drawn by a gated instance.
+    pub pg_residual: f64,
 }
 
 impl Default for ServingConfig {
@@ -99,6 +117,8 @@ impl Default for ServingConfig {
             warmup_epochs: 2,
             dispatch: DispatchPolicy::LeastLoaded,
             steal: true,
+            capacity_policy: CapacityPolicy::Hybrid,
+            pg_residual: 0.02,
         }
     }
 }
@@ -127,9 +147,38 @@ pub struct Completion {
     pub y0: f32,
 }
 
-/// Error returned when every shard is full (backpressure).
-#[derive(Debug, PartialEq, Eq)]
-pub struct QueueFull;
+/// Typed error of the submit path. The serving API applies
+/// backpressure-style errors instead of aborting the process: an unknown
+/// tenant or a malformed payload is the *caller's* bug and must surface
+/// as an `Err` they can handle, never as a panic inside the coordinator.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// No group serves the requested benchmark name / group index.
+    UnknownGroup(String),
+    /// The payload length does not match the group's model input width.
+    BadPayload {
+        /// Input feature width the group's model expects.
+        expected: usize,
+        /// Float count the caller actually supplied.
+        got: usize,
+    },
+    /// Every active shard of the group is at capacity (backpressure).
+    QueueFull,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::UnknownGroup(who) => write!(f, "no group serves {who}"),
+            SubmitError::BadPayload { expected, got } => {
+                write!(f, "payload must be {expected} floats, got {got}")
+            }
+            SubmitError::QueueFull => write!(f, "every active shard is at capacity"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Aggregate serving statistics of a single-tenant coordinator.
 #[derive(Clone, Debug)]
@@ -166,6 +215,8 @@ pub struct ServingStats {
     pub vcore_now: f64,
     /// Currently published BRAM-rail voltage (V).
     pub vbram_now: f64,
+    /// Instances currently active (not gated by the elastic manager).
+    pub active_now: usize,
 }
 
 /// Per-epoch CC trace row.
@@ -185,6 +236,8 @@ pub struct EpochRecord {
     pub vbram: f64,
     /// Group power at the serving operating point (W).
     pub power_w: f64,
+    /// Instances that served this epoch (the rest were gated).
+    pub active: usize,
 }
 
 /// Single-tenant serving coordinator: a one-group [`FleetServing`].
@@ -225,6 +278,8 @@ impl Coordinator {
             warmup_epochs: cfg.warmup_epochs,
             dispatch: cfg.dispatch,
             steal: cfg.steal,
+            capacity_policy: cfg.capacity_policy,
+            pg_residual: cfg.pg_residual,
         };
         let inner = FleetServing::start_with(fleet_cfg, artifacts_dir, vec![(design, optimizer)])?;
         let in_dim = inner.in_dim(0);
@@ -232,9 +287,10 @@ impl Coordinator {
         Ok(Coordinator { cfg, inner, in_dim, batch })
     }
 
-    /// Submit one request; `Err(QueueFull)` signals backpressure.
-    pub fn submit(&self, payload: Vec<f32>) -> std::result::Result<u64, QueueFull> {
-        assert_eq!(payload.len(), self.in_dim, "payload must be in_dim floats");
+    /// Submit one request; `Err(SubmitError::QueueFull)` signals
+    /// backpressure, `Err(SubmitError::BadPayload { .. })` a payload
+    /// whose length is not `in_dim`.
+    pub fn submit(&self, payload: Vec<f32>) -> std::result::Result<u64, SubmitError> {
         self.inner.submit(0, payload)
     }
 
@@ -266,6 +322,7 @@ impl Coordinator {
             freq_ratio_now: g.freq_ratio_now,
             vcore_now: g.vcore_now,
             vbram_now: g.vbram_now,
+            active_now: g.active_now,
         }
     }
 

@@ -11,10 +11,16 @@
 //!
 //! A relaxed atomic `depth` mirrors the queue length so dispatchers can
 //! pick the least-loaded shard without taking any lock.
+//!
+//! For the elastic capacity manager (DESIGN.md S6.1) a shard can be
+//! **gated**: dispatchers and stealing skip it, its worker parks on the
+//! shard condvar ([`ShardQueue::park_while_gated`]) until scale-up or
+//! shutdown wakes it, and the Central Controller drains whatever was
+//! queued into the still-active shards each epoch.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard};
 use std::time::Duration;
 
 use super::Request;
@@ -26,6 +32,7 @@ pub struct ShardQueue {
     notify: Condvar,
     depth: AtomicUsize,
     capacity: usize,
+    gated: AtomicBool,
 }
 
 impl ShardQueue {
@@ -36,6 +43,17 @@ impl ShardQueue {
             notify: Condvar::new(),
             depth: AtomicUsize::new(0),
             capacity: capacity.max(1),
+            gated: AtomicBool::new(false),
+        }
+    }
+
+    /// Take the queue lock, recovering from poisoning: a `VecDeque` of
+    /// requests has no invariant a panicking peer could have broken, and
+    /// losing queued requests to a poisoned lock would drop admitted work.
+    fn locked(&self) -> MutexGuard<'_, VecDeque<Request>> {
+        match self.q.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
         }
     }
 
@@ -54,10 +72,42 @@ impl ShardQueue {
         self.len() == 0
     }
 
+    /// True when the elastic capacity manager has gated this shard's
+    /// instance (dispatch and stealing skip it; its worker is parked).
+    pub fn is_gated(&self) -> bool {
+        self.gated.load(Ordering::SeqCst)
+    }
+
+    /// Gate or ungate the shard. Ungating wakes the parked worker; the
+    /// queue lock is held across the notify so a worker that just read
+    /// the gated flag cannot miss the wakeup.
+    pub fn set_gated(&self, gated: bool) {
+        self.gated.store(gated, Ordering::SeqCst);
+        if !gated {
+            let guard = self.locked();
+            self.notify.notify_all();
+            drop(guard);
+        }
+    }
+
+    /// Park the calling worker on the shard condvar while the shard is
+    /// gated; returns when ungated, woken (shutdown), or after `timeout`
+    /// so the caller can re-check its stop flag.
+    pub fn park_while_gated(&self, timeout: Duration) {
+        let guard = self.locked();
+        if !self.is_gated() {
+            return;
+        }
+        match self.notify.wait_timeout(guard, timeout) {
+            Ok(_) => {}
+            Err(poisoned) => drop(poisoned.into_inner()),
+        }
+    }
+
     /// Enqueue a request; on a full shard the request is handed back so
     /// the dispatcher can retry elsewhere or reject (backpressure).
     pub fn try_push(&self, r: Request) -> Result<(), Request> {
-        let mut q = self.q.lock().unwrap();
+        let mut q = self.locked();
         if q.len() >= self.capacity {
             return Err(r);
         }
@@ -68,9 +118,21 @@ impl ShardQueue {
         Ok(())
     }
 
+    /// Enqueue ignoring the capacity bound. Only the Central Controller's
+    /// drain/re-dispatch path uses this: a request that was *already
+    /// admitted* must never be dropped, even if every shard it could move
+    /// to filled up concurrently.
+    pub fn push_unbounded(&self, r: Request) {
+        let mut q = self.locked();
+        q.push_back(r);
+        self.depth.store(q.len(), Ordering::Relaxed);
+        drop(q);
+        self.notify.notify_one();
+    }
+
     /// Dequeue up to `max` requests without blocking.
     pub fn pop_upto(&self, max: usize) -> Vec<Request> {
-        let mut q = self.q.lock().unwrap();
+        let mut q = self.locked();
         let n = q.len().min(max);
         let out: Vec<Request> = q.drain(..n).collect();
         self.depth.store(q.len(), Ordering::Relaxed);
@@ -80,10 +142,12 @@ impl ShardQueue {
     /// Dequeue up to `max` requests, waiting up to `wait` for the first
     /// one to arrive. Returns early (possibly empty) when woken.
     pub fn pop_wait(&self, max: usize, wait: Duration) -> Vec<Request> {
-        let mut q = self.q.lock().unwrap();
+        let mut q = self.locked();
         if q.is_empty() {
-            let (qq, _timeout) = self.notify.wait_timeout(q, wait).unwrap();
-            q = qq;
+            q = match self.notify.wait_timeout(q, wait) {
+                Ok((qq, _timeout)) => qq,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
         }
         let n = q.len().min(max);
         let out: Vec<Request> = q.drain(..n).collect();
@@ -94,11 +158,19 @@ impl ShardQueue {
     /// Take up to `max` requests from the *back* of the queue (work
     /// stealing; the home worker keeps FIFO order at the front).
     pub fn steal_upto(&self, max: usize) -> Vec<Request> {
-        let mut q = self.q.lock().unwrap();
+        let mut q = self.locked();
         let n = q.len().min(max);
         let keep = q.len() - n;
         let out: Vec<Request> = q.split_off(keep).into_iter().collect();
         self.depth.store(q.len(), Ordering::Relaxed);
+        out
+    }
+
+    /// Drain the whole queue in FIFO order (the CC's gated-shard drain).
+    pub fn drain_all(&self) -> Vec<Request> {
+        let mut q = self.locked();
+        let out: Vec<Request> = q.drain(..).collect();
+        self.depth.store(0, Ordering::Relaxed);
         out
     }
 
@@ -127,6 +199,9 @@ mod tests {
         assert_eq!(back.unwrap_err().id, 2, "refused request is handed back");
         assert_eq!(s.len(), 2);
         assert_eq!(s.capacity(), 2);
+        // The drain path may exceed the bound so admitted work survives.
+        s.push_unbounded(req(3));
+        assert_eq!(s.len(), 3);
     }
 
     #[test]
@@ -172,5 +247,44 @@ mod tests {
         let got = h.join().unwrap();
         assert_eq!(got.len(), 1);
         assert_eq!(got[0].id, 9);
+    }
+
+    #[test]
+    fn gating_flag_parks_and_ungating_wakes() {
+        let s = std::sync::Arc::new(ShardQueue::new(8));
+        assert!(!s.is_gated());
+        s.set_gated(true);
+        assert!(s.is_gated());
+        // A gated park with no wakeup returns after the timeout.
+        let t0 = Instant::now();
+        s.park_while_gated(Duration::from_millis(20));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        // Ungating wakes a parked worker well before its timeout.
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            s2.park_while_gated(Duration::from_secs(5));
+            t0.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        s.set_gated(false);
+        let waited = h.join().unwrap();
+        assert!(waited < Duration::from_secs(4), "ungate must wake the parked worker");
+        // An ungated park returns immediately.
+        let t0 = Instant::now();
+        s.park_while_gated(Duration::from_secs(5));
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn drain_all_empties_in_fifo_order() {
+        let s = ShardQueue::new(8);
+        for i in 0..5 {
+            s.try_push(req(i)).unwrap();
+        }
+        let drained = s.drain_all();
+        assert_eq!(drained.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
+        assert!(s.is_empty());
+        assert!(s.drain_all().is_empty());
     }
 }

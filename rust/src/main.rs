@@ -33,7 +33,8 @@ SUBCOMMANDS:
   characterize                      dump delay/power-vs-voltage tables
   sta        --benchmark <name>     netlist + timing report (Table I row)
   lut        --benchmark <name> --mode <prop|core-only|bram-only>
-  simulate   --benchmark <name> --policy <prop|core-only|bram-only|pg|nominal|oracle-prop>
+  simulate   --benchmark <name>
+             --policy <prop|core-only|bram-only|pg|nominal|oracle-prop|hybrid>
              [--steps N] [--mean-load X] [--n-fpgas N] [--seed N]
              [--config file.json] [--csv out.csv]
   predict    [--steps N] [--bins M] [--kind bursty|periodic|poisson|square]
@@ -42,10 +43,12 @@ SUBCOMMANDS:
   artifacts  --artifacts <dir>      compile + golden-check all artifacts
   fleet      --groups tabla:0.4,diannao:0.6 [--policy prop] [--steps N]
   scenario   --name <diurnal|flash-crowd|mixed-tenant|overnight>
-             [--steps N] [--seed N] [--policy prop]  (offline fleet sim)
+             [--steps N] [--seed N] [--policy prop]  (offline fleet sim;
+             also reports dvfs-only vs pg-only vs hybrid side by side)
   serve-fleet --scenario <name> [--instances N] [--epochs N]
-             [--epoch-ms N] [--rps N] [--artifacts dir]  (live coordinator)
-  experiment <fig1|fig2|fig3|fig4|fig5|fig6|fig8|table1|fig10|fig11|fig12|table2|pll>
+             [--epoch-ms N] [--rps N] [--artifacts dir]
+             [--capacity dvfs|pg|hybrid]  (live elastic coordinator)
+  experiment <fig1|fig2|fig3|fig4|fig5|fig6|fig8|table1|fig10|fig11|fig12|table2|pll|hybrid>
              re-run a paper experiment (same code as `cargo bench`)
 ";
 
@@ -231,8 +234,8 @@ fn simulate(args: &Args) -> Result<(), String> {
     );
     if let Some(csv_path) = args.flag("csv") {
         let mut rows = vec![wavescale::report::row([
-            "step", "load", "predicted", "freq_ratio", "vcore", "vbram", "power_w",
-            "qos_violation",
+            "step", "load", "predicted", "freq_ratio", "vcore", "vbram", "active",
+            "power_w", "qos_violation",
         ])];
         for r in &report.records {
             rows.push(vec![
@@ -242,6 +245,7 @@ fn simulate(args: &Args) -> Result<(), String> {
                 format!("{:.4}", r.freq_ratio),
                 format!("{:.3}", r.vcore),
                 format!("{:.3}", r.vbram),
+                format!("{:.0}", r.active_boards),
                 format!("{:.4}", r.power_w),
                 (r.qos_violation as u8).to_string(),
             ]);
@@ -500,12 +504,52 @@ fn scenario_cmd(args: &Args) -> Result<(), String> {
         format!("{:.1}", r.violation_rate * 100.0),
     ]);
     print!("{}", table(&rows));
+
+    // Elastic capacity manager: the same scenario under the three
+    // capacity policies, side by side (DESIGN.md S6.1).
+    let mode = match policy {
+        Policy::Dvfs(m) | Policy::DvfsOracle(m) | Policy::Hybrid(m) => m,
+        _ => Mode::Proposed,
+    };
+    print_capacity_comparison(&scenario, Default::default(), mode)?;
+    Ok(())
+}
+
+/// Print the DVFS-only / PG-only / hybrid side-by-side for a scenario
+/// (shared by the `scenario` and `serve-fleet` subcommands). `cfg` must
+/// mirror the run being compared against (instance count, residual, ...).
+fn print_capacity_comparison(
+    scenario: &wavescale::workload::Scenario,
+    cfg: wavescale::platform::PlatformConfig,
+    mode: Mode,
+) -> Result<(), String> {
+    let n_fpgas = cfg.n_fpgas;
+    let reports =
+        wavescale::platform::fleet::Fleet::compare_capacity_policies(scenario, cfg, mode)?;
+    let mut rows = vec![wavescale::report::row([
+        "capacity_policy", "avg_W", "energy_J", "gain", "violations%",
+    ])];
+    for (name, r) in &reports {
+        rows.push(vec![
+            name.clone(),
+            format!("{:.2}", r.avg_power_w),
+            format!("{:.1}", r.energy_j()),
+            format!("{:.2}x", r.power_gain),
+            format!("{:.1}", r.violation_rate * 100.0),
+        ]);
+    }
+    println!(
+        "\ncapacity policies on {} (offline sim, same traces, {} instances/group):",
+        scenario.name, n_fpgas
+    );
+    print!("{}", table(&rows));
     Ok(())
 }
 
 fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "scenario", "instances", "epochs", "epoch-ms", "rps", "mode", "artifacts", "seed",
+        "capacity",
     ])?;
     let name = args.flag_or("scenario", "mixed-tenant");
     let n_instances = args.flag_usize("instances")?.unwrap_or(2);
@@ -513,6 +557,7 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
     let epoch_ms = args.flag_usize("epoch-ms")?.unwrap_or(150);
     let rps = args.flag_f64("rps")?.unwrap_or(3000.0);
     let mode = wavescale::config::mode_by_name(args.flag_or("mode", "prop"))?;
+    let capacity = wavescale::vscale::CapacityPolicy::by_name(args.flag_or("capacity", "hybrid"))?;
     let dir = args.flag_or("artifacts", "artifacts");
     let seed = args.flag_usize("seed")?.unwrap_or(7) as u64;
 
@@ -529,13 +574,16 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
             .collect(),
         epoch: std::time::Duration::from_millis(epoch_ms as u64),
         mode,
+        capacity_policy: capacity,
         ..Default::default()
     };
     let fleet = wavescale::coordinator::FleetServing::start(cfg, dir.into())
         .map_err(|e| e.to_string())?;
     println!(
-        "serving scenario {name}: {} groups x {n_instances} instances, {epochs} epochs",
-        scenario.tenants.len()
+        "serving scenario {name}: {} groups x {n_instances} instances, {epochs} epochs, \
+         capacity policy {}",
+        scenario.tenants.len(),
+        capacity.name()
     );
 
     let accepted = wavescale::coordinator::drive_scenario(&fleet, &scenario, rps, seed);
@@ -548,6 +596,14 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
         "energy {:.2} J vs nominal {:.2} J over {} epochs",
         s.energy_j, s.nominal_energy_j, s.epochs
     );
+    // Offline side-by-side of the three capacity policies on the same
+    // scenario and the same per-group instance count as the live run,
+    // so every serve-fleet run shows what the hybrid buys.
+    let offline_cfg = wavescale::platform::PlatformConfig {
+        n_fpgas: n_instances,
+        ..Default::default()
+    };
+    print_capacity_comparison(&scenario, offline_cfg, mode)?;
     Ok(())
 }
 
@@ -570,6 +626,7 @@ fn experiment_cmd(args: &Args) -> Result<(), String> {
         "fig12" => "fig12_accelerators",
         "table2" => "table2_summary",
         "pll" => "pll_overhead",
+        "hybrid" => "hybrid_capacity",
         other => return Err(format!("unknown experiment {other}")),
     };
     // The experiments live as bench binaries so `cargo bench` regenerates

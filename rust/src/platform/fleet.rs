@@ -11,6 +11,7 @@
 //! this offline model is `coordinator::FleetServing`.
 
 use super::{build_platform, Platform, PlatformConfig, Policy, SimReport};
+use crate::vscale::Mode;
 use crate::workload::Scenario;
 
 /// One group of identical FPGA instances serving one benchmark.
@@ -36,6 +37,13 @@ pub struct FleetReport {
     pub power_gain: f64,
     /// Worst per-group QoS violation rate (QoS is per-tenant).
     pub violation_rate: f64,
+}
+
+impl FleetReport {
+    /// Total fleet energy over the run (J): sum of per-group energies.
+    pub fn energy_j(&self) -> f64 {
+        self.per_group.iter().map(|(_, r)| r.energy_j).sum()
+    }
 }
 
 /// A multi-tenant fleet under a single policy.
@@ -141,6 +149,25 @@ impl Fleet {
         self.run_per_group(&traces)
     }
 
+    /// Run `scenario` under the three capacity policies — DVFS-only
+    /// (`Policy::Dvfs(mode)`), PG-only (`Policy::PowerGating`) and the
+    /// elastic hybrid (`Policy::Hybrid(mode)`) — on identical fleets and
+    /// return `(policy name, report)` rows in that order. This is the
+    /// offline side-by-side the `scenario` / `serve-fleet` CLI
+    /// subcommands and the `hybrid_capacity` bench report.
+    pub fn compare_capacity_policies(
+        scenario: &Scenario,
+        cfg: PlatformConfig,
+        mode: Mode,
+    ) -> Result<Vec<(String, FleetReport)>, String> {
+        let mut out = Vec::with_capacity(3);
+        for policy in [Policy::Dvfs(mode), Policy::PowerGating, Policy::Hybrid(mode)] {
+            let mut fleet = Fleet::from_scenario(scenario, cfg.clone(), policy)?;
+            out.push((policy.name(), fleet.run_scenario(scenario)?));
+        }
+        Ok(out)
+    }
+
     fn aggregate(per_group: Vec<(String, SimReport)>) -> FleetReport {
         let avg_power_w: f64 = per_group.iter().map(|(_, r)| r.avg_power_w).sum();
         let nominal_power_w: f64 = per_group.iter().map(|(_, r)| r.nominal_power_w).sum();
@@ -230,6 +257,41 @@ mod tests {
         let other = Scenario::diurnal(300, 1);
         assert!(fleet.run_scenario(&other).is_err());
         assert!(fleet.run_per_group(&[&[0.5][..]]).is_err());
+    }
+
+    #[test]
+    fn hybrid_energy_never_worse_on_any_named_scenario() {
+        // Acceptance gate for the elastic capacity manager: on every
+        // named scenario the hybrid's epoch energy is within 1% of the
+        // better baseline, and in the overnight trough (crash-voltage
+        // floor territory) it strictly beats DVFS-only.
+        for s in Scenario::all(240, 2019) {
+            let rows = Fleet::compare_capacity_policies(
+                &s,
+                PlatformConfig::default(),
+                Mode::Proposed,
+            )
+            .unwrap();
+            assert_eq!(rows.len(), 3);
+            let (dvfs, pg, hybrid) =
+                (rows[0].1.energy_j(), rows[1].1.energy_j(), rows[2].1.energy_j());
+            assert!(
+                hybrid <= dvfs * 1.01,
+                "{}: hybrid {hybrid} J vs dvfs {dvfs} J",
+                s.name
+            );
+            assert!(
+                hybrid <= pg * 1.01,
+                "{}: hybrid {hybrid} J vs pg {pg} J",
+                s.name
+            );
+            if s.name == "overnight" {
+                assert!(
+                    hybrid < dvfs * 0.995,
+                    "overnight: hybrid {hybrid} J must strictly beat dvfs {dvfs} J"
+                );
+            }
+        }
     }
 
     #[test]

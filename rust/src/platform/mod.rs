@@ -18,7 +18,7 @@ pub mod pll;
 
 use crate::markov::{MarkovPredictor, Predictor};
 use crate::power::DesignPower;
-use crate::vscale::{Mode, Optimizer, VoltageLut};
+use crate::vscale::{CapacityPolicy, ElasticConfig, ElasticLut, Mode, Optimizer, VoltageLut};
 use pll::{DualPll, SinglePll};
 
 /// Platform-level power management policy.
@@ -33,6 +33,11 @@ pub enum Policy {
     PowerGating,
     /// No management: all boards at nominal V/f (the gain baseline).
     NominalStatic,
+    /// Elastic capacity: the Markov-predicted bin picks the joint
+    /// minimum-power (active count, Vcore, Vbram, f) from the
+    /// [`ElasticLut`]; gated boards draw `pg_residual` of nominal
+    /// (DESIGN.md S6.1).
+    Hybrid(Mode),
 }
 
 impl Policy {
@@ -43,6 +48,7 @@ impl Policy {
             Policy::DvfsOracle(m) => format!("oracle-{}", m.name()),
             Policy::PowerGating => "power-gating".to_string(),
             Policy::NominalStatic => "nominal".to_string(),
+            Policy::Hybrid(m) => format!("hybrid-{}", m.name()),
         }
     }
 }
@@ -117,6 +123,9 @@ pub struct StepRecord {
     pub qos_violation: bool,
     /// True when the predictor missed the observed bin.
     pub mispredicted: bool,
+    /// Boards active (not gated) this step; `n_fpgas` for pure-DVFS and
+    /// nominal policies.
+    pub active_boards: f64,
 }
 
 /// Aggregate simulation outcome.
@@ -154,6 +163,8 @@ pub struct Platform {
     pub design: DesignPower,
     optimizer: Optimizer,
     lut: VoltageLut,
+    /// Joint gating+DVFS table (built only for [`Policy::Hybrid`]).
+    elastic: Option<ElasticLut>,
     policy: Policy,
     predictor: MarkovPredictor,
     plls: PllBank,
@@ -164,6 +175,8 @@ pub struct Platform {
     freq_ratio: f64,
     vcore: f64,
     vbram: f64,
+    /// Boards active this step (only [`Policy::Hybrid`] gates below n).
+    active: usize,
     step_idx: usize,
 }
 
@@ -187,7 +200,7 @@ impl Platform {
             "margin/bins misconfigured"
         );
         let mode = match policy {
-            Policy::Dvfs(m) | Policy::DvfsOracle(m) => m,
+            Policy::Dvfs(m) | Policy::DvfsOracle(m) | Policy::Hybrid(m) => m,
             _ => Mode::FreqOnly,
         };
         let lut = match cfg.latency_cap_sw {
@@ -195,6 +208,21 @@ impl Platform {
                 &optimizer, cfg.m_bins, cfg.margin_t, mode, cap,
             ),
             None => VoltageLut::build(&optimizer, cfg.m_bins, cfg.margin_t, mode),
+        };
+        let elastic = match policy {
+            Policy::Hybrid(m) => Some(ElasticLut::build(
+                &optimizer,
+                &ElasticConfig {
+                    m_bins: cfg.m_bins,
+                    margin_t: cfg.margin_t,
+                    mode: m,
+                    n_instances: cfg.n_fpgas,
+                    residual: cfg.pg_residual,
+                    policy: CapacityPolicy::Hybrid,
+                    latency_cap_sw: cfg.latency_cap_sw.unwrap_or(f64::INFINITY),
+                },
+            )),
+            _ => None,
         };
         let f_nom = design.spec.freq_mhz;
         let plls = if cfg.dual_pll {
@@ -212,11 +240,13 @@ impl Platform {
         };
         let predictor = MarkovPredictor::new(cfg.m_bins, cfg.warmup_steps);
         let (vcore, vbram) = (design.chars.logic.v_nom, design.chars.bram.v_nom);
+        let active = cfg.n_fpgas;
         Platform {
             cfg,
             design,
             optimizer,
             lut,
+            elastic,
             policy,
             predictor,
             plls,
@@ -224,6 +254,7 @@ impl Platform {
             freq_ratio: 1.0,
             vcore,
             vbram,
+            active,
             step_idx: 0,
         }
     }
@@ -256,7 +287,13 @@ impl Platform {
                 stall
             }
         };
-        let capacity = self.freq_ratio * (1.0 - stalled_frac);
+        // Hybrid serves with only its active boards; everyone else's
+        // capacity is the whole platform at the current frequency.
+        let active_frac = match self.policy {
+            Policy::Hybrid(_) => self.active as f64 / n,
+            _ => 1.0,
+        };
+        let capacity = self.freq_ratio * active_frac * (1.0 - stalled_frac);
         let demand = load + self.backlog;
         let delivered = demand.min(capacity);
         self.backlog = (demand - delivered).min(cfg.max_backlog_steps);
@@ -270,6 +307,10 @@ impl Platform {
                 (self.design.nominal().total_w(), active)
             }
             Policy::NominalStatic => (self.design.nominal().total_w(), n),
+            Policy::Hybrid(_) => (
+                self.design.breakdown(self.vcore, self.vbram, f_mhz).total_w(),
+                self.active as f64,
+            ),
             _ => (
                 self.design.breakdown(self.vcore, self.vbram, f_mhz).total_w(),
                 n,
@@ -300,26 +341,28 @@ impl Platform {
             _ => self.predictor.predict(),
         };
 
-        let (next_fr, next_vc, next_vb) = match self.policy {
-            Policy::Dvfs(_) | Policy::DvfsOracle(_) => {
-                let e = self.lut.entry_for_load(predicted);
-                (e.freq_ratio, e.point.vcore, e.point.vbram)
+        // Backlog pressure: size the next step for predicted + carried
+        // work (proportionate backpressure, not a jump to nominal).
+        let eff_load = if self.backlog > 1e-9 {
+            (predicted + self.backlog).min(1.0)
+        } else {
+            predicted
+        };
+        let (next_fr, next_vc, next_vb, next_active) = match (self.policy, &self.elastic) {
+            (Policy::Hybrid(_), Some(el)) => {
+                let e = el.entry_for_load(eff_load);
+                (e.freq_ratio, e.point.vcore, e.point.vbram, e.n_active)
             }
-            Policy::PowerGating | Policy::NominalStatic => (
+            (Policy::Dvfs(_) | Policy::DvfsOracle(_), _) => {
+                let e = self.lut.entry_for_load(eff_load);
+                (e.freq_ratio, e.point.vcore, e.point.vbram, cfg.n_fpgas)
+            }
+            _ => (
                 1.0,
                 self.design.chars.logic.v_nom,
                 self.design.chars.bram.v_nom,
+                cfg.n_fpgas,
             ),
-        };
-        // Backlog pressure: size the next step for predicted + carried
-        // work (proportionate backpressure, not a jump to nominal).
-        let (next_fr, next_vc, next_vb) = if self.backlog > 1e-9
-            && matches!(self.policy, Policy::Dvfs(_) | Policy::DvfsOracle(_))
-        {
-            let e = self.lut.entry_for_load((predicted + self.backlog).min(1.0));
-            (e.freq_ratio, e.point.vcore, e.point.vbram)
-        } else {
-            (next_fr, next_vc, next_vb)
         };
 
         let f_next = self.design.spec.freq_mhz * next_fr;
@@ -340,10 +383,12 @@ impl Platform {
             backlog: self.backlog,
             qos_violation,
             mispredicted,
+            active_boards,
         };
         self.freq_ratio = next_fr;
         self.vcore = next_vc;
         self.vbram = next_vb;
+        self.active = next_active;
         self.step_idx += 1;
         let _ = locking;
         rec
@@ -558,5 +603,53 @@ mod tests {
     #[test]
     fn build_platform_rejects_unknown() {
         assert!(build_platform("nope", PlatformConfig::default(), Policy::NominalStatic).is_err());
+    }
+
+    #[test]
+    fn hybrid_beats_both_baselines_in_a_deep_trough() {
+        // Constant 8% load: below the crash-voltage floor's reach, where
+        // the paper's §III says gating must take over.
+        let loads = vec![0.08; 260];
+        let h = sim(Policy::Hybrid(Mode::Proposed), &loads);
+        let d = sim(Policy::Dvfs(Mode::Proposed), &loads);
+        let p = sim(Policy::PowerGating, &loads);
+        assert!(
+            h.energy_j <= d.energy_j * 1.01,
+            "hybrid {} vs dvfs {}",
+            h.energy_j,
+            d.energy_j
+        );
+        assert!(
+            h.energy_j <= p.energy_j * 1.01,
+            "hybrid {} vs pg {}",
+            h.energy_j,
+            p.energy_j
+        );
+        assert!(
+            h.energy_j < d.energy_j * 0.995,
+            "hybrid must strictly beat DVFS-only in the trough: {} vs {}",
+            h.energy_j,
+            d.energy_j
+        );
+        // Gating is actually happening once warmup training ends.
+        assert!(h.records.iter().skip(25).any(|r| r.active_boards < 4.0));
+        // Elastic capacity still meets QoS (margin absorbs the bin edge).
+        assert!(h.violation_rate < 0.10, "violation rate {}", h.violation_rate);
+    }
+
+    #[test]
+    fn hybrid_keeps_every_board_active_at_high_load() {
+        let loads = vec![0.9; 120];
+        let mut pl = build_platform(
+            "tabla",
+            PlatformConfig { warmup_steps: 5, ..Default::default() },
+            Policy::Hybrid(Mode::Proposed),
+        )
+        .unwrap();
+        let r = pl.run(&loads);
+        for rec in r.records.iter().skip(10) {
+            assert!(rec.active_boards >= 4.0 - 1e-9, "{rec:?}");
+        }
+        assert_eq!(r.policy, "hybrid-prop");
     }
 }

@@ -1,0 +1,385 @@
+//! Elastic capacity: joint power-gating + DVFS optimization (DESIGN.md
+//! S6.1).
+//!
+//! The paper's §III observation is that voltage/frequency scaling bottoms
+//! out at the crash-voltage floor, below which power gating wins — and
+//! `crash_voltage_bounds_the_gain` (mod.rs tests) proves our optimizer
+//! does hit that floor. The [`ElasticLut`] therefore searches the *joint*
+//! space each workload bin: how many instances stay active (the rest
+//! gated to a `residual` power fraction) **and** which `(Vcore, Vbram, f)`
+//! point the active instances run at. Concentrating a low fleet load onto
+//! fewer instances raises their per-instance utilization back into the
+//! regime where voltage scaling is effective, while the gated remainder
+//! pay only leakage — the joint sleep/scale policy argued for in
+//! arXiv:2311.11015 and the FPGA datacenter survey arXiv:2309.12884.
+//!
+//! [`CapacityPolicy`] restricts the search so the same machinery yields
+//! the two baselines: `DvfsOnly` (all instances active; identical to
+//! [`VoltageLut`](super::VoltageLut)) and `GatingOnly` (active instances
+//! pinned at nominal V/f; identical to
+//! [`Optimizer::power_gating`](super::Optimizer::power_gating)). By
+//! construction the hybrid entry is never worse than either baseline for
+//! the same bin: the full-active candidate *is* the DVFS-only choice, and
+//! for the gating-only active count the optimizer can only lower power
+//! relative to nominal V/f.
+
+use super::{Mode, Optimizer, VoltagePoint};
+
+/// Which capacity dimensions the elastic manager may move.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CapacityPolicy {
+    /// All instances stay active; only V/f scale (the PR-1 behaviour).
+    DvfsOnly,
+    /// Active instances pinned at nominal V/f; only the count scales
+    /// (conventional power gating).
+    GatingOnly,
+    /// Joint search over active count and V/f (the elastic manager).
+    Hybrid,
+}
+
+impl CapacityPolicy {
+    /// Every policy, hybrid last (report order: baselines first).
+    pub const ALL: [CapacityPolicy; 3] =
+        [CapacityPolicy::DvfsOnly, CapacityPolicy::GatingOnly, CapacityPolicy::Hybrid];
+
+    /// CLI/report name of the policy.
+    pub fn name(self) -> &'static str {
+        match self {
+            CapacityPolicy::DvfsOnly => "dvfs-only",
+            CapacityPolicy::GatingOnly => "pg-only",
+            CapacityPolicy::Hybrid => "hybrid",
+        }
+    }
+
+    /// Resolve a CLI name (`dvfs`, `pg`, `hybrid`, ...).
+    pub fn by_name(name: &str) -> Result<CapacityPolicy, String> {
+        Ok(match name {
+            "dvfs" | "dvfs-only" => CapacityPolicy::DvfsOnly,
+            "pg" | "pg-only" | "gating" => CapacityPolicy::GatingOnly,
+            "hybrid" => CapacityPolicy::Hybrid,
+            other => return Err(format!("unknown capacity policy {other}")),
+        })
+    }
+}
+
+/// Parameters of an elastic LUT build.
+#[derive(Clone, Copy, Debug)]
+pub struct ElasticConfig {
+    /// Workload bins M (equal width over [0, 1] fleet load).
+    pub m_bins: usize,
+    /// Throughput margin t (capacity sized for bin upper edge × (1 + t)).
+    pub margin_t: f64,
+    /// Voltage mode of the active instances' grid search.
+    pub mode: Mode,
+    /// Instances in the group/platform the LUT manages.
+    pub n_instances: usize,
+    /// Residual power fraction (of nominal) drawn by a gated instance.
+    pub residual: f64,
+    /// Which capacity dimensions the search may move.
+    pub policy: CapacityPolicy,
+    /// Latency restriction: active instances' clock period may stretch at
+    /// most this factor (`f64::INFINITY` disables the cap).
+    pub latency_cap_sw: f64,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            m_bins: 10,
+            margin_t: 0.05,
+            mode: Mode::Proposed,
+            n_instances: 4,
+            residual: 0.02,
+            policy: CapacityPolicy::Hybrid,
+            latency_cap_sw: f64::INFINITY,
+        }
+    }
+}
+
+/// One elastic operating configuration: how many instances serve, at what
+/// frequency and voltages, and what the whole fleet then draws.
+#[derive(Clone, Copy, Debug)]
+pub struct ElasticChoice {
+    /// Instances left active (the other `n - n_active` are gated).
+    pub n_active: usize,
+    /// f / f_nom of the active instances.
+    pub freq_ratio: f64,
+    /// Minimum-power feasible voltage pair of the active instances.
+    pub point: VoltagePoint,
+    /// Fleet power normalized per instance at nominal V/f: active
+    /// instances at `point.power_norm`, gated instances at `residual`.
+    pub fleet_power_norm: f64,
+}
+
+/// Per-bin elastic LUT: the design-synthesis-time table the Central
+/// Controller reads each epoch (the elastic generalization of
+/// [`VoltageLut`](super::VoltageLut)).
+#[derive(Clone, Debug)]
+pub struct ElasticLut {
+    /// Build parameters the table was computed for.
+    pub cfg: ElasticConfig,
+    /// `entries[b]` serves workloads in bin b of `cfg.m_bins` equal-width
+    /// bins; capacity is sized for the bin's *upper* edge × (1 + t).
+    pub entries: Vec<ElasticChoice>,
+}
+
+impl ElasticLut {
+    /// Build the per-bin table. The search cost is
+    /// `m_bins × n_instances` grid optimizations — still design-synthesis
+    /// time, never on the serving path.
+    pub fn build(opt: &Optimizer, cfg: &ElasticConfig) -> ElasticLut {
+        assert!(cfg.m_bins >= 1, "need at least one workload bin");
+        assert!(cfg.n_instances >= 1, "need at least one instance");
+        assert!(
+            (0.0..=1.0).contains(&cfg.residual),
+            "gated residual must be a fraction of nominal power"
+        );
+        assert!(cfg.latency_cap_sw >= 1.0, "latency cap must allow nominal speed");
+        let entries = (0..cfg.m_bins)
+            .map(|b| {
+                let upper = (b + 1) as f64 / cfg.m_bins as f64;
+                let target = (upper * (1.0 + cfg.margin_t)).min(1.0);
+                Self::optimize(opt, cfg, target)
+            })
+            .collect();
+        ElasticLut { cfg: *cfg, entries }
+    }
+
+    /// Minimum-power configuration whose fleet capacity
+    /// `(n_active / n) · freq_ratio` covers `target` (normalized fleet
+    /// load, capacity-margin already applied by the caller).
+    pub fn optimize(opt: &Optimizer, cfg: &ElasticConfig, target: f64) -> ElasticChoice {
+        let n = cfg.n_instances;
+        let target = target.clamp(1e-3, 1.0);
+        let fr_floor = (1.0 / cfg.latency_cap_sw).min(1.0);
+        let fr_of = |n_active: usize| -> Option<f64> {
+            let fr = target * n as f64 / n_active as f64;
+            if fr > 1.0 + 1e-9 {
+                return None; // too few instances to cover the load
+            }
+            Some(fr.max(fr_floor).min(1.0))
+        };
+        let candidate = |n_active: usize, fr: f64, point: VoltagePoint| -> ElasticChoice {
+            let gated = (n - n_active) as f64;
+            let fleet_power_norm =
+                (n_active as f64 * point.power_norm + gated * cfg.residual) / n as f64;
+            ElasticChoice { n_active, freq_ratio: fr, point, fleet_power_norm }
+        };
+        match cfg.policy {
+            CapacityPolicy::DvfsOnly => {
+                let fr = fr_of(n).unwrap_or(1.0);
+                candidate(n, fr, opt.optimize(1.0 / fr, cfg.mode))
+            }
+            CapacityPolicy::GatingOnly => {
+                // ceil(target · n) instances at nominal V/f, rest gated —
+                // Optimizer::power_gating as a live policy.
+                let n_active = ((target * n as f64).ceil() as usize).clamp(1, n);
+                let nominal = VoltagePoint {
+                    icore: 0,
+                    ibram: 0,
+                    vcore: opt.grid.vcore[0],
+                    vbram: opt.grid.vbram[0],
+                    power_norm: opt.power(0, 0, 1.0),
+                };
+                candidate(n_active, 1.0, nominal)
+            }
+            CapacityPolicy::Hybrid => {
+                // Descending scan prefers more active instances on ties,
+                // so gating only happens when it strictly saves power and
+                // the full-active candidate (== DVFS-only) is the default.
+                let mut best: Option<ElasticChoice> = None;
+                for n_active in (1..=n).rev() {
+                    let Some(fr) = fr_of(n_active) else { continue };
+                    let c = candidate(n_active, fr, opt.optimize(1.0 / fr, cfg.mode));
+                    if best
+                        .as_ref()
+                        .map(|b| c.fleet_power_norm < b.fleet_power_norm - 1e-12)
+                        .unwrap_or(true)
+                    {
+                        best = Some(c);
+                    }
+                }
+                // n_active = n is always feasible (target <= 1).
+                best.unwrap_or_else(|| {
+                    candidate(n, 1.0, opt.optimize(1.0, cfg.mode))
+                })
+            }
+        }
+    }
+
+    /// Number of workload bins M.
+    pub fn m_bins(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Bin index for a normalized fleet load in [0, 1] — shares the
+    /// crate-private `bin_index` helper with
+    /// [`VoltageLut::bin_of`](super::VoltageLut::bin_of) so live elastic
+    /// decisions and the offline baselines use identical bin boundaries.
+    pub fn bin_of(&self, load: f64) -> usize {
+        super::bin_index(self.entries.len(), load)
+    }
+
+    /// The elastic configuration serving a normalized fleet load.
+    pub fn entry_for_load(&self, load: f64) -> &ElasticChoice {
+        &self.entries[self.bin_of(load)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{BenchmarkSpec, DeviceFamily};
+    use crate::chars::CharLibrary;
+    use crate::netlist::gen::{generate, GenConfig};
+    use crate::power::{DesignPower, PowerParams};
+    use crate::sta::{analyze, DelayParams};
+
+    fn optimizer(name: &str) -> Optimizer {
+        let chars = CharLibrary::stratix_iv_22nm();
+        let spec = BenchmarkSpec::by_name(name).unwrap();
+        let dp = DesignPower::from_spec(
+            spec,
+            &DeviceFamily::stratix_iv(),
+            chars.clone(),
+            PowerParams::default(),
+        )
+        .unwrap();
+        let net = generate(spec, &GenConfig { scale: 0.05, seed: 2019, luts_per_lab: 10 });
+        let rep = analyze(&net, &DelayParams::default(), 8).unwrap();
+        Optimizer::new(chars.grid(), dp.rail_tables(&rep.cp))
+            .with_paths(&chars, rep.top_paths.clone())
+    }
+
+    fn luts(opt: &Optimizer) -> (ElasticLut, ElasticLut, ElasticLut) {
+        let base = ElasticConfig { n_instances: 4, ..Default::default() };
+        let mk = |policy| ElasticLut::build(opt, &ElasticConfig { policy, ..base });
+        (
+            mk(CapacityPolicy::DvfsOnly),
+            mk(CapacityPolicy::GatingOnly),
+            mk(CapacityPolicy::Hybrid),
+        )
+    }
+
+    #[test]
+    fn hybrid_never_worse_than_either_baseline_per_bin() {
+        let opt = optimizer("tabla");
+        let (dvfs, pg, hybrid) = luts(&opt);
+        for b in 0..hybrid.m_bins() {
+            let h = hybrid.entries[b].fleet_power_norm;
+            assert!(
+                h <= dvfs.entries[b].fleet_power_norm + 1e-12,
+                "bin {b}: hybrid {h} vs dvfs {}",
+                dvfs.entries[b].fleet_power_norm
+            );
+            assert!(
+                h <= pg.entries[b].fleet_power_norm + 1e-12,
+                "bin {b}: hybrid {h} vs pg {}",
+                pg.entries[b].fleet_power_norm
+            );
+        }
+    }
+
+    #[test]
+    fn hybrid_gates_below_the_crash_floor_and_matches_dvfs_at_peak() {
+        let opt = optimizer("tabla");
+        let (dvfs, _, hybrid) = luts(&opt);
+        // Lowest bin: the crash-voltage floor binds DVFS (§III), so the
+        // hybrid must gate instances and strictly beat DVFS-only.
+        let low = &hybrid.entries[0];
+        assert!(low.n_active < 4, "low bin must gate: {low:?}");
+        assert!(
+            low.fleet_power_norm < dvfs.entries[0].fleet_power_norm - 1e-9,
+            "hybrid {low:?} vs dvfs {:?}",
+            dvfs.entries[0]
+        );
+        // Top bin needs every instance: identical to DVFS-only.
+        let top = hybrid.entries.last().unwrap();
+        assert_eq!(top.n_active, 4);
+        assert!((top.freq_ratio - dvfs.entries.last().unwrap().freq_ratio).abs() < 1e-12);
+        assert!(
+            (top.fleet_power_norm - dvfs.entries.last().unwrap().fleet_power_norm).abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn every_entry_covers_its_bin_capacity() {
+        let opt = optimizer("dnnweaver");
+        let (dvfs, pg, hybrid) = luts(&opt);
+        for lut in [&dvfs, &pg, &hybrid] {
+            let m = lut.m_bins() as f64;
+            for (b, e) in lut.entries.iter().enumerate() {
+                let target = (((b + 1) as f64 / m) * (1.0 + lut.cfg.margin_t)).min(1.0);
+                let cap = e.n_active as f64 / lut.cfg.n_instances as f64 * e.freq_ratio;
+                assert!(
+                    cap >= target - 1e-9,
+                    "{:?} bin {b}: capacity {cap} < target {target}",
+                    lut.cfg.policy
+                );
+                assert!(e.n_active >= 1 && e.n_active <= lut.cfg.n_instances);
+            }
+        }
+    }
+
+    #[test]
+    fn gating_only_matches_the_offline_power_gating_formula() {
+        let opt = optimizer("tabla");
+        let cfg = ElasticConfig {
+            n_instances: 10,
+            policy: CapacityPolicy::GatingOnly,
+            ..Default::default()
+        };
+        let lut = ElasticLut::build(&opt, &cfg);
+        for (b, e) in lut.entries.iter().enumerate() {
+            let target = (((b + 1) as f64 / 10.0) * (1.0 + cfg.margin_t)).min(1.0);
+            let want = Optimizer::power_gating(target, 10, cfg.residual);
+            assert!(
+                (e.fleet_power_norm - want).abs() < 1e-12,
+                "bin {b}: {} vs {want}",
+                e.fleet_power_norm
+            );
+            assert!((e.point.power_norm - 1.0).abs() < 1e-12, "PG runs at nominal");
+            assert!((e.freq_ratio - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn latency_cap_floors_the_active_frequency() {
+        let opt = optimizer("tabla");
+        let cfg = ElasticConfig {
+            n_instances: 4,
+            latency_cap_sw: 2.0,
+            ..Default::default()
+        };
+        let lut = ElasticLut::build(&opt, &cfg);
+        for e in &lut.entries {
+            assert!(e.freq_ratio >= 0.5 - 1e-12, "{e:?} violates the 2x stretch cap");
+        }
+    }
+
+    #[test]
+    fn bin_lookup_mirrors_voltage_lut() {
+        let opt = optimizer("tabla");
+        let lut = ElasticLut::build(&opt, &ElasticConfig::default());
+        assert_eq!(lut.m_bins(), 10);
+        assert_eq!(lut.bin_of(0.0), 0);
+        assert_eq!(lut.bin_of(0.05), 0);
+        assert_eq!(lut.bin_of(0.11), 1);
+        assert_eq!(lut.bin_of(1.0), 9);
+        // Monotone cost: a higher bin's feasible set is a subset of a
+        // lower bin's (at pointwise higher frequency), so its minimum
+        // power can never be cheaper.
+        for w in lut.entries.windows(2) {
+            assert!(w[0].fleet_power_norm <= w[1].fleet_power_norm + 1e-9);
+        }
+    }
+
+    #[test]
+    fn capacity_policy_names_round_trip() {
+        for p in CapacityPolicy::ALL {
+            assert_eq!(CapacityPolicy::by_name(p.name()).unwrap(), p);
+        }
+        assert!(CapacityPolicy::by_name("nope").is_err());
+    }
+}

@@ -10,6 +10,10 @@
 //! promote an originally non-critical path (paper §II), so feasibility is
 //! checked against all top-K STA path compositions.
 
+pub mod elastic;
+
+pub use elastic::{CapacityPolicy, ElasticChoice, ElasticConfig, ElasticLut};
+
 use crate::chars::{CharLibrary, ResourceClass, VoltageGrid};
 use crate::power::RailTables;
 use crate::sta::PathComposition;
@@ -201,6 +205,14 @@ impl Optimizer {
     }
 }
 
+/// Bin index for a normalized load in [0, 1] over `m` equal-width bins
+/// (upper-edge inclusive). The single source of truth for workload
+/// binning: `VoltageLut::bin_of` and `ElasticLut::bin_of` must agree
+/// for the hybrid-vs-baseline comparisons to be apples-to-apples.
+pub(crate) fn bin_index(m: usize, load: f64) -> usize {
+    ((load.clamp(0.0, 1.0) * m as f64).ceil() as usize).clamp(1, m) - 1
+}
+
 /// "Design synthesis"-time lookup table: per workload bin, the optimal
 /// voltage pair and frequency ratio (paper §V: "the optimal operating
 /// voltage(s) of each frequency is calculated during the design synthesis
@@ -263,8 +275,7 @@ impl VoltageLut {
 
     /// Bin index for a normalized load in [0, 1].
     pub fn bin_of(&self, load: f64) -> usize {
-        let m = self.entries.len();
-        ((load.clamp(0.0, 1.0) * m as f64).ceil() as usize).clamp(1, m) - 1
+        bin_index(self.entries.len(), load)
     }
 
     /// The LUT row serving a normalized load.

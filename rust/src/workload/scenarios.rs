@@ -58,6 +58,16 @@ impl Scenario {
         })
     }
 
+    /// Every named scenario at the given size, in [`Scenario::NAMES`]
+    /// order — the iteration surface behind the capacity-policy
+    /// comparison tests and the `hybrid_capacity` bench.
+    pub fn all(steps: usize, seed: u64) -> Vec<Scenario> {
+        Scenario::NAMES
+            .iter()
+            .filter_map(|name| Scenario::by_name(name, steps, seed).ok())
+            .collect()
+    }
+
     /// Two groups with anti-phased day/night sinusoids: user-facing Tabla
     /// peaks when batch-style DianNao is in its valley and vice versa —
     /// the complementary-tenant packing datacenters aim for.
@@ -227,6 +237,16 @@ mod tests {
             }
         }
         assert!(Scenario::by_name("nope", 100, 0).is_err());
+    }
+
+    #[test]
+    fn all_returns_every_named_scenario_in_order() {
+        let all = Scenario::all(64, 7);
+        assert_eq!(all.len(), Scenario::NAMES.len());
+        for (s, name) in all.iter().zip(Scenario::NAMES) {
+            assert_eq!(s.name, name);
+            assert_eq!(s.steps(), 64);
+        }
     }
 
     #[test]

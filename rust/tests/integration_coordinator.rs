@@ -3,7 +3,7 @@
 
 use std::time::Duration;
 
-use wavescale::coordinator::{Coordinator, QueueFull, ServingConfig};
+use wavescale::coordinator::{Coordinator, ServingConfig, SubmitError};
 use wavescale::platform::{build_platform, PlatformConfig, Policy};
 use wavescale::util::prng::Rng;
 use wavescale::vscale::Mode;
@@ -71,7 +71,7 @@ fn backpressure_rejects_when_full() {
     let mut rng = Rng::new(2);
     let mut saw_full = false;
     for _ in 0..256 {
-        if coord.submit(rng.normal_vec_f32(coord.in_dim)) == Err(QueueFull) {
+        if coord.submit(rng.normal_vec_f32(coord.in_dim)) == Err(SubmitError::QueueFull) {
             saw_full = true;
             break;
         }

@@ -1,17 +1,20 @@
 //! Integration: live multi-tenant fleet serving end-to-end — shard
-//! dispatch, per-shard backpressure, drain-on-shutdown, and the fleet
-//! report's per-group QoS aggregation. These tests never self-skip: when
+//! dispatch, per-shard backpressure, elastic gating (drain/re-dispatch),
+//! drain-on-shutdown, the typed submit errors, and the fleet report's
+//! per-group QoS aggregation. These tests never self-skip: when
 //! `artifacts/` (or the PJRT runtime) is absent the coordinator falls
 //! back to the deterministic native backend.
 
 use std::time::Duration;
 
 use wavescale::coordinator::{
-    FleetServing, FleetServingConfig, GroupConfig, QueueFull, ServingConfig,
+    drive_scenario, DispatchPolicy, FleetServing, FleetServingConfig, GroupConfig,
+    ServingConfig, SubmitError,
 };
 use wavescale::platform::{build_platform, PlatformConfig, Policy};
 use wavescale::util::prng::Rng;
-use wavescale::vscale::Mode;
+use wavescale::vscale::{CapacityPolicy, Mode};
+use wavescale::workload::Scenario;
 
 fn two_group_cfg() -> FleetServingConfig {
     FleetServingConfig {
@@ -89,7 +92,7 @@ fn per_shard_backpressure_rejects_under_overload() {
     let mut rng = Rng::new(2);
     let mut saw_full = false;
     for _ in 0..256 {
-        if fleet.submit(0, rng.normal_vec_f32(fleet.in_dim(0))) == Err(QueueFull) {
+        if fleet.submit(0, rng.normal_vec_f32(fleet.in_dim(0))) == Err(SubmitError::QueueFull) {
             saw_full = true;
             break;
         }
@@ -101,6 +104,109 @@ fn per_shard_backpressure_rejects_under_overload() {
     assert!(fleet.queue_len(0) <= 8, "queue {}", fleet.queue_len(0));
     let report = fleet.shutdown().unwrap();
     assert!(report.stats.per_group[0].rejected > 0);
+}
+
+#[test]
+fn submit_errors_are_typed_not_panics() {
+    let fleet = FleetServing::start(two_group_cfg(), "artifacts".into()).unwrap();
+    let in_dim = fleet.in_dim(0);
+
+    // Unknown benchmark name: Err, not the former panic.
+    assert_eq!(
+        fleet.submit_to("nonexistent", vec![0.0; in_dim]),
+        Err(SubmitError::UnknownGroup("nonexistent".into()))
+    );
+    // Out-of-range group index: Err, not an index panic.
+    assert!(matches!(
+        fleet.submit(99, vec![0.0; in_dim]),
+        Err(SubmitError::UnknownGroup(_))
+    ));
+    // Wrong-width payload: Err, not the former assert_eq abort.
+    assert_eq!(
+        fleet.submit(0, vec![0.0; 3]),
+        Err(SubmitError::BadPayload { expected: in_dim, got: 3 })
+    );
+    // Errors render for callers' logs.
+    assert!(SubmitError::QueueFull.to_string().contains("capacity"));
+
+    // The happy path still works by name and by index.
+    assert!(fleet.submit_to("tabla", vec![0.0; in_dim]).is_ok());
+    assert!(fleet.submit(1, vec![0.0; fleet.in_dim(1)]).is_ok());
+    let report = fleet.shutdown().unwrap();
+    assert_eq!(report.stats.completed, 2);
+    assert_eq!(report.stats.rejected, 0, "typed errors must not count as backpressure");
+}
+
+#[test]
+fn drive_scenario_survives_overlong_epochs() {
+    // With a 1 ms fleet epoch the submission loop inevitably overruns the
+    // epoch budget; the driver used to panic on `epoch - elapsed`
+    // Duration underflow.
+    let scenario = Scenario::by_name("overnight", 3, 11).unwrap();
+    let cfg = FleetServingConfig {
+        groups: scenario
+            .tenants
+            .iter()
+            .map(|t| GroupConfig {
+                benchmark: t.benchmark.clone(),
+                share: t.share,
+                n_instances: 1,
+            })
+            .collect(),
+        epoch: Duration::from_millis(1),
+        cycles_per_batch: 1.0e4,
+        warmup_epochs: 0,
+        ..Default::default()
+    };
+    let fleet = FleetServing::start(cfg, "artifacts".into()).unwrap();
+    let accepted = drive_scenario(&fleet, &scenario, 2_000.0, 3);
+    let report = fleet.shutdown().unwrap();
+    assert_eq!(report.stats.completed, accepted, "drained exactly what was accepted");
+}
+
+#[test]
+fn gated_shard_requests_are_redispatched_never_dropped() {
+    // Elastic manager end-to-end: at ~6% offered load on 4 instances the
+    // CC gates most of them; requests already queued on a gated shard
+    // (round-robin spread them everywhere) must be drained into active
+    // shards and completed, never dropped.
+    let cfg = FleetServingConfig {
+        groups: vec![GroupConfig {
+            benchmark: "tabla".into(),
+            share: 1.0,
+            n_instances: 4,
+        }],
+        epoch: Duration::from_millis(40),
+        cycles_per_batch: 2.0e5,
+        warmup_epochs: 0,
+        dispatch: DispatchPolicy::RoundRobin,
+        capacity_policy: CapacityPolicy::Hybrid,
+        ..Default::default()
+    };
+    let fleet = FleetServing::start(cfg, "artifacts".into()).unwrap();
+    let mut rng = Rng::new(4);
+    let mut accepted = 0u64;
+    for _ in 0..300 {
+        if fleet.submit(0, rng.normal_vec_f32(fleet.in_dim(0))).is_ok() {
+            accepted += 1;
+        }
+        std::thread::sleep(Duration::from_micros(500));
+    }
+    // Wait until the CC has taken several gating decisions (poll, not a
+    // fixed sleep — a starved CC thread on a loaded CI runner would
+    // otherwise record no epochs at all).
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    while fleet.stats().per_group[0].epochs < 5 && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let report = fleet.shutdown().unwrap();
+    let g = &report.stats.per_group[0];
+    assert_eq!(g.completed, accepted, "gated shards must drain, not drop");
+    assert!(
+        report.epoch_records[0].iter().any(|r| r.active < 4),
+        "a ~6% load must gate instances: {:?}",
+        report.epoch_records[0]
+    );
 }
 
 #[test]
