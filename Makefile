@@ -7,12 +7,17 @@
 #   make test        tier-1 verify: build + tests (artifacts built first
 #                    when python/jax are available, so PJRT paths run too)
 #   make bench       regenerate every paper figure/table CSV into results/
+#   make golden      regenerate the virtual-time golden traces
+#                    (rust/testdata/golden/); commit the result — CI fails
+#                    when tracked goldens drift from a fresh replay
+#   make bench-coordinator  virtual-time scenario sweep -> results/
+#                    BENCH_coordinator.{json,csv} perf baseline
 #   make doc         rustdoc with warnings surfaced
 
 ARTIFACTS_DIR := artifacts
 PY            := python3
 
-.PHONY: artifacts build test bench doc scenario-smoke clean
+.PHONY: artifacts build test bench golden bench-coordinator doc scenario-smoke clean
 
 artifacts:
 	cd python && $(PY) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
@@ -36,6 +41,20 @@ bench: build
 	          table2_summary pll_overhead hybrid_capacity; do \
 		cargo bench --bench $$b || exit 1; \
 	done
+
+# Regenerate the deterministic golden traces (byte-identical per seed under
+# the VirtualClock). Run after an intentional coordinator/scenario change
+# and commit rust/testdata/golden/; the sim_golden test (and CI's git-diff
+# guard) fails when a tracked golden drifts from a fresh replay.
+golden: build
+	WAVESCALE_UPDATE_GOLDEN=1 cargo test --release --test sim_golden
+
+# Emit the coordinator perf baseline (virtual-time sweep of all scenarios
+# x capacity policies) into results/BENCH_coordinator.{json,csv}.
+# WAVESCALE_VIRTUAL_ONLY=1 skips the bench's wall-clock serving section —
+# only the deterministic virtual sweep feeds the baseline.
+bench-coordinator: build
+	WAVESCALE_VIRTUAL_ONLY=1 cargo bench --bench perf_fleet_serving
 
 # Shortened end-to-end smoke of the elastic capacity manager: an
 # overnight trough through both the offline scenario sim (with the

@@ -3,6 +3,12 @@
 //!
 //!     cargo run --release --example fleet_serving
 //!     WAVESCALE_SCENARIO=flash-crowd cargo run --release --example fleet_serving
+//!     WAVESCALE_VIRTUAL=1 cargo run --release --example fleet_serving
+//!
+//! With `WAVESCALE_VIRTUAL=1` the fleet runs on the deterministic
+//! [`VirtualClock`](wavescale::clock::VirtualClock): the same 16-epoch
+//! scenario replays in milliseconds of wall time and reruns are
+//! bit-identical (DESIGN.md S18).
 //!
 //! One `FleetServing` coordinator serves several benchmark groups (Tabla +
 //! DianNao + Stripes for the default mixed-tenant scenario) concurrently:
@@ -16,8 +22,10 @@
 //! fleet report: per-group throughput, latency, power gain, and QoS
 //! violation rate.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use wavescale::clock::{self, ActorScope, Clock, VirtualClock};
 use wavescale::coordinator::{
     drive_scenario, fleet_report_rows, FleetServing, FleetServingConfig, GroupConfig,
 };
@@ -27,9 +35,20 @@ use wavescale::workload::Scenario;
 fn main() -> anyhow::Result<()> {
     let scenario_name =
         std::env::var("WAVESCALE_SCENARIO").unwrap_or_else(|_| "mixed-tenant".into());
-    let artifacts = std::path::PathBuf::from(
-        std::env::var("WAVESCALE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
-    );
+    let virtual_time = std::env::var("WAVESCALE_VIRTUAL").as_deref() == Ok("1");
+    // Virtual-time replays are bit-identical per seed only if they cannot
+    // depend on installed artifacts: force the native backend like simtest.
+    let artifacts = std::path::PathBuf::from(if virtual_time {
+        "sim-no-artifacts".to_string()
+    } else {
+        std::env::var("WAVESCALE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+    });
+    let clock: Arc<dyn Clock> = if virtual_time {
+        Arc::new(VirtualClock::new())
+    } else {
+        clock::wall()
+    };
+    let _driver = virtual_time.then(|| ActorScope::enter(&clock, "example-driver"));
     let epochs = 16usize;
     let epoch = Duration::from_millis(150);
     let peak_rps = 4_000.0;
@@ -51,14 +70,17 @@ fn main() -> anyhow::Result<()> {
             })
             .collect(),
         epoch,
+        selector_via_pjrt: !virtual_time,
+        clock: clock.clone(),
         ..Default::default()
     };
     let fleet = FleetServing::start(cfg, artifacts)?;
     println!(
-        "scenario {scenario_name}: {} | {} groups x {n_instances} instances, {epochs} epochs @ {} ms",
+        "scenario {scenario_name}: {} | {} groups x {n_instances} instances, {epochs} epochs @ {} ms{}",
         scenario.description,
         scenario.tenants.len(),
-        epoch.as_millis()
+        epoch.as_millis(),
+        if virtual_time { " (virtual time)" } else { "" }
     );
 
     // ---- drive the scenario (shared driver, one step per epoch) ------

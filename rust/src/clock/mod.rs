@@ -1,0 +1,655 @@
+//! Time source abstraction for the live coordinator (DESIGN.md S18).
+//!
+//! The serving path used to be hard-wired to wall-clock time
+//! (`std::thread::sleep` / `Instant::now()` inside workers, the Central
+//! Controller epoch loop and the scenario driver), so a 24 h diurnal trace
+//! replayed in real time and integration tests resorted to 10-second
+//! deadlines and sleeps. Everything time-shaped now goes through a
+//! [`Clock`]:
+//!
+//! * [`WallClock`] — real time; `sleep` is `std::thread::sleep`, waits are
+//!   plain condvar waits. The default for `serve-fleet` and the single
+//!   process-wide epoch means [`Tick`]s from different `WallClock` values
+//!   are comparable.
+//! * [`VirtualClock`] — deterministic discrete-event simulation time. Every
+//!   thread that touches the clock is a registered *actor*; exactly one
+//!   actor runs at a time and virtual time advances only when the running
+//!   actor parks (sleeps or waits on a [`WaitSlot`]). The next actor is the
+//!   lowest-id Ready actor, else the parked actor with the earliest
+//!   `(deadline, id)`. With all stochastic inputs seeded, an entire
+//!   multi-thread serving run — submissions, dispatch, stealing, gating,
+//!   CC epochs — is a deterministic function of the seed: a thousand-epoch
+//!   scenario replays in milliseconds and two runs produce byte-identical
+//!   traces (`simtest`, DESIGN.md S18).
+//!
+//! Blocking-wait integration uses a *generation counter* instead of an
+//! atomically-released mutex: the waiter samples [`WaitSlot::generation`],
+//! re-checks its condition, then calls [`Clock::wait_slot`] with the
+//! sampled generation — if a notify landed in between, the wait returns
+//! immediately, so no wakeup can be lost and the queue lock is never held
+//! across a park.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread::ThreadId;
+use std::time::{Duration, Instant};
+
+/// A point in time, in nanoseconds since the clock's epoch (process start
+/// for [`WallClock`], simulation start for [`VirtualClock`]).
+pub type Tick = u64;
+
+/// Identifier of a registered [`VirtualClock`] actor (0 under wall time,
+/// where actors are a no-op concept).
+pub type ActorId = u64;
+
+/// Convert a `Duration` to [`Tick`] nanoseconds (saturating).
+pub fn ticks(d: Duration) -> Tick {
+    u64::try_from(d.as_nanos()).unwrap_or(Tick::MAX)
+}
+
+/// Convert [`Tick`] nanoseconds back to a `Duration`.
+pub fn to_duration(t: Tick) -> Duration {
+    Duration::from_nanos(t)
+}
+
+/// The shared wall-clock epoch: all [`WallClock`] values measure from the
+/// same process-wide instant so their ticks are mutually comparable.
+fn wall_epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// A notifiable event source for condvar-style waits routed through a
+/// [`Clock`] (one per [`ShardQueue`](crate::coordinator::ShardQueue)).
+///
+/// The `generation` counter increments on every notify; waiters pass the
+/// generation they observed *before* re-checking their condition, so a
+/// notify that races the check makes the wait return immediately.
+#[derive(Debug)]
+pub struct WaitSlot {
+    /// Slot id inside a [`VirtualClock`] (0 under wall time).
+    id: u64,
+    gen: AtomicU64,
+    mu: Mutex<()>,
+    cv: Condvar,
+}
+
+impl WaitSlot {
+    fn with_id(id: u64) -> Self {
+        WaitSlot { id, gen: AtomicU64::new(0), mu: Mutex::new(()), cv: Condvar::new() }
+    }
+
+    /// Current notify generation; sample before checking the condition the
+    /// wait protects, then pass to [`Clock::wait_slot`].
+    pub fn generation(&self) -> u64 {
+        self.gen.load(Ordering::SeqCst)
+    }
+
+    /// Take the slot's (contentless) mutex, recovering from poisoning.
+    fn locked(&self) -> MutexGuard<'_, ()> {
+        match self.mu.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+}
+
+/// The time source every time-shaped coordinator operation goes through.
+///
+/// Actor registration is a three-step protocol so ids are deterministic:
+/// the *spawning* thread calls [`Clock::register_actor`] (in program
+/// order), hands the id into the new thread, which binds itself with
+/// [`Clock::attach_actor`] and unbinds with [`Clock::detach_actor`] on
+/// exit (use [`ActorScope`] for RAII). Under [`WallClock`] all of this is
+/// a no-op.
+pub trait Clock: Send + Sync + std::fmt::Debug {
+    /// Nanoseconds since the clock's epoch.
+    fn now(&self) -> Tick;
+
+    /// Block the calling actor for `d` (virtual: parks and lets time
+    /// advance; wall: `std::thread::sleep`).
+    fn sleep(&self, d: Duration);
+
+    /// Create a wait slot bound to this clock.
+    fn new_slot(&self) -> Arc<WaitSlot>;
+
+    /// Block until `slot` is notified past `observed_gen` or `timeout`
+    /// elapses. Returns immediately when the generation already moved —
+    /// sample [`WaitSlot::generation`] *before* checking the condition the
+    /// wait protects (see the module docs on lost wakeups).
+    fn wait_slot(&self, slot: &WaitSlot, observed_gen: u64, timeout: Duration);
+
+    /// Wake every waiter on `slot` (increments the generation).
+    fn notify_slot(&self, slot: &WaitSlot);
+
+    /// Allocate an actor id on the *spawning* thread (deterministic,
+    /// program-order ids). No-op (returns 0) under wall time.
+    fn register_actor(&self, _name: &str) -> ActorId {
+        0
+    }
+
+    /// Bind the calling thread to a registered actor; under virtual time
+    /// this blocks until the scheduler first runs the actor.
+    fn attach_actor(&self, _id: ActorId) {}
+
+    /// Unbind and remove the actor (call from its own thread on exit).
+    fn detach_actor(&self, _id: ActorId) {}
+
+    /// Temporarily remove the calling actor from scheduling so it can
+    /// block on something outside the clock (e.g. `JoinHandle::join`).
+    fn suspend_current(&self) {}
+
+    /// Re-enter scheduling after [`Clock::suspend_current`]; blocks until
+    /// the scheduler runs this actor again.
+    fn resume_current(&self) {}
+
+    /// Whether the calling thread is a registered actor (always true under
+    /// wall time, where registration is a no-op).
+    fn current_is_actor(&self) -> bool {
+        true
+    }
+
+    /// True for deterministic simulation time.
+    fn is_virtual(&self) -> bool {
+        false
+    }
+}
+
+/// A shared handle to the process-wide wall clock.
+pub fn wall() -> Arc<dyn Clock> {
+    Arc::new(WallClock)
+}
+
+/// Real time: `now` counts from a process-wide epoch, `sleep` is
+/// `std::thread::sleep`, slot waits are plain condvar waits. Actor
+/// registration is a no-op.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WallClock;
+
+impl Clock for WallClock {
+    fn now(&self) -> Tick {
+        ticks(wall_epoch().elapsed())
+    }
+
+    fn sleep(&self, d: Duration) {
+        std::thread::sleep(d);
+    }
+
+    fn new_slot(&self) -> Arc<WaitSlot> {
+        Arc::new(WaitSlot::with_id(0))
+    }
+
+    fn wait_slot(&self, slot: &WaitSlot, observed_gen: u64, timeout: Duration) {
+        // Cap so `Instant + timeout` cannot overflow on absurd timeouts.
+        let timeout = timeout.min(Duration::from_secs(365 * 24 * 3600));
+        let deadline = Instant::now() + timeout;
+        let mut guard = slot.locked();
+        while slot.generation() == observed_gen {
+            let now = Instant::now();
+            if now >= deadline {
+                return;
+            }
+            guard = match slot.cv.wait_timeout(guard, deadline - now) {
+                Ok((g, _)) => g,
+                Err(poisoned) => poisoned.into_inner().0,
+            };
+        }
+    }
+
+    fn notify_slot(&self, slot: &WaitSlot) {
+        slot.gen.fetch_add(1, Ordering::SeqCst);
+        // Serialize with a waiter between its generation check and its
+        // condvar wait: taking the slot mutex here means the notify cannot
+        // fall into that window unseen.
+        let guard = slot.locked();
+        slot.cv.notify_all();
+        drop(guard);
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum ActorState {
+    /// Runnable; waiting to be picked by the scheduler.
+    Ready,
+    /// The single currently-running actor.
+    Running,
+    /// Blocked until `deadline` or a notify on `slot`.
+    Parked { deadline: Tick, slot: Option<u64> },
+    /// Out of the scheduling set (blocked outside the clock, e.g. join).
+    Suspended,
+}
+
+#[derive(Debug)]
+struct Actor {
+    name: String,
+    state: ActorState,
+}
+
+#[derive(Debug)]
+struct Sched {
+    now: Tick,
+    next_actor: ActorId,
+    next_slot: u64,
+    running: Option<ActorId>,
+    /// BTreeMap so scheduling scans are in deterministic id order.
+    actors: BTreeMap<ActorId, Actor>,
+    threads: HashMap<ThreadId, ActorId>,
+}
+
+/// Deterministic discrete-event simulation time.
+///
+/// Exactly one registered actor runs at a time; the rest block inside the
+/// clock. When the running actor parks, the scheduler picks the lowest-id
+/// Ready actor, else advances `now` to the earliest parked
+/// `(deadline, id)` and runs that actor. Notifies flip parked waiters to
+/// Ready without advancing time. Because every scheduling decision is a
+/// pure function of (actor ids, deadlines, notify order), a run whose
+/// stochastic inputs are seeded is bit-for-bit reproducible.
+#[derive(Debug)]
+pub struct VirtualClock {
+    sched: Mutex<Sched>,
+    cv: Condvar,
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl VirtualClock {
+    /// A fresh simulation clock at tick 0 with no actors.
+    pub fn new() -> Self {
+        VirtualClock {
+            sched: Mutex::new(Sched {
+                now: 0,
+                next_actor: 1,
+                next_slot: 1,
+                running: None,
+                actors: BTreeMap::new(),
+                threads: HashMap::new(),
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn locked(&self) -> MutexGuard<'_, Sched> {
+        match self.sched.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Pick the next actor to run (requires `running == None`). Ready
+    /// actors win in id order; otherwise time advances to the earliest
+    /// parked `(deadline, id)`. Panics when every actor is parked without
+    /// a finite deadline — a genuine deadlock in the simulated system.
+    fn schedule(sched: &mut Sched) {
+        if sched.running.is_some() {
+            return;
+        }
+        let ready = sched
+            .actors
+            .iter()
+            .find(|(_, a)| a.state == ActorState::Ready)
+            .map(|(&id, _)| id);
+        if let Some(id) = ready {
+            if let Some(a) = sched.actors.get_mut(&id) {
+                a.state = ActorState::Running;
+            }
+            sched.running = Some(id);
+            return;
+        }
+        let mut best: Option<(Tick, ActorId)> = None;
+        for (&id, a) in &sched.actors {
+            if let ActorState::Parked { deadline, .. } = a.state {
+                let better = match best {
+                    None => true,
+                    Some(b) => (deadline, id) < b,
+                };
+                if better {
+                    best = Some((deadline, id));
+                }
+            }
+        }
+        if let Some((deadline, id)) = best {
+            assert!(
+                deadline != Tick::MAX,
+                "virtual clock deadlock: every actor is parked without a finite deadline: {:?}",
+                sched.actors.values().map(|a| a.name.clone()).collect::<Vec<_>>()
+            );
+            if deadline > sched.now {
+                sched.now = deadline;
+            }
+            if let Some(a) = sched.actors.get_mut(&id) {
+                a.state = ActorState::Running;
+            }
+            sched.running = Some(id);
+        }
+        // All suspended (or none left): the next resume/attach reschedules.
+    }
+
+    fn current(sched: &Sched) -> Option<ActorId> {
+        sched.threads.get(&std::thread::current().id()).copied()
+    }
+
+    fn current_or_panic(sched: &Sched, op: &str) -> ActorId {
+        match Self::current(sched) {
+            Some(id) => id,
+            None => panic!(
+                "VirtualClock::{op} from a thread that is not a registered actor; \
+                 enter the clock first (clock::ActorScope::enter)"
+            ),
+        }
+    }
+
+    /// Park the current actor with the given state, hand the CPU to the
+    /// scheduler, and block until this actor is Running again.
+    fn park_and_wait(&self, mut guard: MutexGuard<'_, Sched>, id: ActorId, state: ActorState) {
+        if let Some(a) = guard.actors.get_mut(&id) {
+            a.state = state;
+        }
+        if guard.running == Some(id) {
+            guard.running = None;
+        }
+        Self::schedule(&mut guard);
+        self.cv.notify_all();
+        self.block_until_running(guard, id);
+    }
+
+    fn block_until_running(&self, mut guard: MutexGuard<'_, Sched>, id: ActorId) {
+        loop {
+            if guard.actors.get(&id).map(|a| a.state) == Some(ActorState::Running) {
+                return;
+            }
+            guard = match self.cv.wait(guard) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> Tick {
+        self.locked().now
+    }
+
+    fn sleep(&self, d: Duration) {
+        let guard = self.locked();
+        let id = Self::current_or_panic(&guard, "sleep");
+        let deadline = guard.now.saturating_add(ticks(d));
+        self.park_and_wait(guard, id, ActorState::Parked { deadline, slot: None });
+    }
+
+    fn new_slot(&self) -> Arc<WaitSlot> {
+        let mut guard = self.locked();
+        let id = guard.next_slot;
+        guard.next_slot += 1;
+        Arc::new(WaitSlot::with_id(id))
+    }
+
+    fn wait_slot(&self, slot: &WaitSlot, observed_gen: u64, timeout: Duration) {
+        let guard = self.locked();
+        // Generation moves only under the scheduler lock (notify_slot), so
+        // this check cannot race a notify.
+        if slot.generation() != observed_gen {
+            return;
+        }
+        let id = Self::current_or_panic(&guard, "wait_slot");
+        let deadline = guard.now.saturating_add(ticks(timeout));
+        self.park_and_wait(guard, id, ActorState::Parked { deadline, slot: Some(slot.id) });
+    }
+
+    fn notify_slot(&self, slot: &WaitSlot) {
+        let mut guard = self.locked();
+        slot.gen.fetch_add(1, Ordering::SeqCst);
+        for a in guard.actors.values_mut() {
+            if let ActorState::Parked { slot: Some(sid), .. } = a.state {
+                if sid == slot.id {
+                    a.state = ActorState::Ready;
+                }
+            }
+        }
+        // The notifier normally keeps running; schedule only when no actor
+        // holds the CPU (a notify from a suspended/unregistered thread).
+        if guard.running.is_none() {
+            Self::schedule(&mut guard);
+            self.cv.notify_all();
+        }
+    }
+
+    fn register_actor(&self, name: &str) -> ActorId {
+        let mut guard = self.locked();
+        let id = guard.next_actor;
+        guard.next_actor += 1;
+        guard.actors.insert(id, Actor { name: name.to_string(), state: ActorState::Ready });
+        id
+    }
+
+    fn attach_actor(&self, id: ActorId) {
+        let mut guard = self.locked();
+        guard.threads.insert(std::thread::current().id(), id);
+        if guard.running.is_none() {
+            Self::schedule(&mut guard);
+            self.cv.notify_all();
+        }
+        self.block_until_running(guard, id);
+    }
+
+    fn detach_actor(&self, id: ActorId) {
+        let mut guard = self.locked();
+        guard.actors.remove(&id);
+        guard.threads.retain(|_, v| *v != id);
+        if guard.running == Some(id) {
+            guard.running = None;
+            Self::schedule(&mut guard);
+            self.cv.notify_all();
+        }
+    }
+
+    fn suspend_current(&self) {
+        let mut guard = self.locked();
+        let Some(id) = Self::current(&guard) else { return };
+        if let Some(a) = guard.actors.get_mut(&id) {
+            a.state = ActorState::Suspended;
+        }
+        if guard.running == Some(id) {
+            guard.running = None;
+        }
+        Self::schedule(&mut guard);
+        self.cv.notify_all();
+        // Deliberately do not block: the caller is about to wait on
+        // something outside the clock (thread joins) while the remaining
+        // actors drain.
+    }
+
+    fn resume_current(&self) {
+        let guard = self.locked();
+        let Some(id) = Self::current(&guard) else { return };
+        self.park_and_wait(guard, id, ActorState::Ready);
+    }
+
+    fn current_is_actor(&self) -> bool {
+        Self::current(&self.locked()).is_some()
+    }
+
+    fn is_virtual(&self) -> bool {
+        true
+    }
+}
+
+/// RAII actor registration: detaches (and removes) the actor on drop so a
+/// worker that returns early never wedges the scheduler.
+pub struct ActorScope {
+    clock: Arc<dyn Clock>,
+    id: ActorId,
+}
+
+impl ActorScope {
+    /// Register the calling thread as a new actor and enter scheduling.
+    /// Call once on the driving thread before starting a fleet under
+    /// [`VirtualClock`]; a no-op scope under [`WallClock`].
+    pub fn enter(clock: &Arc<dyn Clock>, name: &str) -> ActorScope {
+        let id = clock.register_actor(name);
+        ActorScope::attach(clock, id)
+    }
+
+    /// Bind the calling thread to an actor pre-registered (in
+    /// deterministic order) by the spawning thread.
+    pub fn attach(clock: &Arc<dyn Clock>, id: ActorId) -> ActorScope {
+        clock.attach_actor(id);
+        ActorScope { clock: clock.clone(), id }
+    }
+
+    /// The bound actor id.
+    pub fn id(&self) -> ActorId {
+        self.id
+    }
+}
+
+impl Drop for ActorScope {
+    fn drop(&mut self) {
+        self.clock.detach_actor(self.id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_now_is_monotonic_and_shared() {
+        let a = WallClock;
+        let b = WallClock;
+        let t0 = a.now();
+        std::thread::sleep(Duration::from_millis(2));
+        let t1 = b.now();
+        assert!(t1 > t0, "epoch must be shared across instances");
+    }
+
+    #[test]
+    fn wall_wait_slot_times_out_and_wakes_on_notify() {
+        let c = WallClock;
+        let slot = c.new_slot();
+        // Stale generation: returns immediately.
+        let t0 = Instant::now();
+        c.wait_slot(&slot, slot.generation().wrapping_sub(1), Duration::from_secs(5));
+        assert!(t0.elapsed() < Duration::from_millis(200));
+        // Timeout path.
+        let t0 = Instant::now();
+        c.wait_slot(&slot, slot.generation(), Duration::from_millis(20));
+        assert!(t0.elapsed() >= Duration::from_millis(15));
+        // Notify path.
+        let slot2 = slot.clone();
+        let gen = slot.generation();
+        let h = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            WallClock.wait_slot(&slot2, gen, Duration::from_secs(10));
+            t0.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        c.notify_slot(&slot);
+        assert!(h.join().unwrap() < Duration::from_secs(5));
+    }
+
+    #[test]
+    fn virtual_sleep_advances_time_deterministically() {
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        let _me = ActorScope::enter(&clock, "main");
+        assert_eq!(clock.now(), 0);
+        clock.sleep(Duration::from_millis(30));
+        assert_eq!(clock.now(), ticks(Duration::from_millis(30)));
+        clock.sleep(Duration::from_micros(1500));
+        assert_eq!(clock.now(), ticks(Duration::from_micros(31_500)));
+    }
+
+    #[test]
+    fn virtual_two_actors_interleave_by_deadline() {
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        let _me = ActorScope::enter(&clock, "main");
+        let id = clock.register_actor("child");
+        let c2 = clock.clone();
+        let child = std::thread::spawn(move || {
+            let _scope = ActorScope::attach(&c2, id);
+            let mut ticks_seen = Vec::new();
+            for _ in 0..3 {
+                c2.sleep(Duration::from_millis(10));
+                ticks_seen.push(c2.now());
+            }
+            ticks_seen
+        });
+        // Main sleeps past all three child wakeups; the child must have
+        // observed exactly 10/20/30 ms.
+        clock.sleep(Duration::from_millis(100));
+        clock.suspend_current();
+        let seen = child.join().unwrap();
+        clock.resume_current();
+        let ms = |m: u64| ticks(Duration::from_millis(m));
+        assert_eq!(seen, vec![ms(10), ms(20), ms(30)]);
+        assert_eq!(clock.now(), ms(100));
+    }
+
+    #[test]
+    fn virtual_notify_wakes_slot_waiter_before_deadline() {
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        let _me = ActorScope::enter(&clock, "main");
+        let slot = clock.new_slot();
+        let id = clock.register_actor("waiter");
+        let c2 = clock.clone();
+        let s2 = slot.clone();
+        let h = std::thread::spawn(move || {
+            let _scope = ActorScope::attach(&c2, id);
+            let gen = s2.generation();
+            c2.wait_slot(&s2, gen, Duration::from_secs(60));
+            c2.now()
+        });
+        clock.sleep(Duration::from_millis(25));
+        clock.notify_slot(&slot);
+        clock.suspend_current();
+        let woke_at = h.join().unwrap();
+        clock.resume_current();
+        assert_eq!(woke_at, ticks(Duration::from_millis(25)), "notify, not timeout, must wake");
+    }
+
+    #[test]
+    fn virtual_stale_generation_returns_without_parking() {
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        let _me = ActorScope::enter(&clock, "main");
+        let slot = clock.new_slot();
+        let gen = slot.generation();
+        clock.notify_slot(&slot);
+        // The notify above advanced the generation, so this must not park
+        // (parking alone would deadlock: no other actor exists).
+        clock.wait_slot(&slot, gen, Duration::from_secs(60));
+        assert_eq!(clock.now(), 0);
+    }
+
+    #[test]
+    fn virtual_ready_ties_resolve_by_actor_id() {
+        // Two actors parked to the same deadline run in id order.
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        let _me = ActorScope::enter(&clock, "main");
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for tag in ["a", "b"] {
+            let id = clock.register_actor(tag);
+            let c2 = clock.clone();
+            let ord = order.clone();
+            let tag = tag.to_string();
+            handles.push(std::thread::spawn(move || {
+                let _scope = ActorScope::attach(&c2, id);
+                c2.sleep(Duration::from_millis(5));
+                ord.lock().unwrap().push(tag);
+            }));
+        }
+        clock.sleep(Duration::from_millis(50));
+        clock.suspend_current();
+        for h in handles {
+            h.join().unwrap();
+        }
+        clock.resume_current();
+        assert_eq!(*order.lock().unwrap(), vec!["a".to_string(), "b".to_string()]);
+    }
+}

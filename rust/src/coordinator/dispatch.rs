@@ -104,14 +104,15 @@ impl Dispatcher {
 mod tests {
     use super::*;
     use crate::coordinator::Request;
-    use std::time::Instant;
 
     fn shards(n: usize) -> Vec<Arc<ShardQueue>> {
         (0..n).map(|_| Arc::new(ShardQueue::new(64))).collect()
     }
 
     fn req(id: u64) -> Request {
-        Request { id, payload: vec![], submitted: Instant::now() }
+        // Timestamps flow through the injected clock (DESIGN.md S18); unit
+        // tests pin them to tick 0 so latency math never reads wall time.
+        Request { id, payload: vec![], submitted: 0 }
     }
 
     #[test]

@@ -25,12 +25,23 @@
 //! shard into the active shards every epoch — admitted work is never
 //! dropped. `capacity_policy` selects the two baselines (`DvfsOnly`,
 //! `GatingOnly`) for side-by-side runs.
+//!
+//! All sleeping, waiting and timestamping goes through the configured
+//! [`Clock`](crate::clock::Clock) (DESIGN.md S18). Workers and the CC are
+//! registered clock *actors* in deterministic order (workers first, then
+//! the CC), so a fleet on a
+//! [`VirtualClock`](crate::clock::VirtualClock) is a deterministic
+//! discrete-event simulation: [`drive_scenario`] replays epochs in
+//! virtual time and two runs with the same seed produce byte-identical
+//! [`EpochRecord`] traces (`simtest`).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use anyhow::Result;
+
+use crate::clock::{self, ActorScope, Clock};
 
 use super::backend::InferenceBackend;
 use super::dispatch::{DispatchPolicy, Dispatcher};
@@ -92,6 +103,12 @@ pub struct FleetServingConfig {
     pub capacity_policy: CapacityPolicy,
     /// Residual power fraction (of nominal) drawn by a gated instance.
     pub pg_residual: f64,
+    /// Time source for every wait/sleep/timestamp (DESIGN.md S18):
+    /// `clock::wall()` for live serving, a
+    /// [`VirtualClock`](crate::clock::VirtualClock) for deterministic
+    /// simulation. Under a virtual clock the starting thread must already
+    /// be a registered actor ([`ActorScope::enter`]).
+    pub clock: Arc<dyn Clock>,
 }
 
 impl Default for FleetServingConfig {
@@ -115,6 +132,7 @@ impl Default for FleetServingConfig {
             steal: true,
             capacity_policy: CapacityPolicy::Hybrid,
             pg_residual: 0.02,
+            clock: clock::wall(),
         }
     }
 }
@@ -211,6 +229,9 @@ pub struct GroupServingStats {
     pub n_instances: usize,
     /// Inference backend the group's workers use (`pjrt` or `native`).
     pub backend: &'static str,
+    /// Requests accepted onto some shard (the drain invariant:
+    /// `admitted == completed + failed` at shutdown).
+    pub admitted: u64,
     /// Requests served to completion.
     pub completed: u64,
     /// Requests refused by backpressure.
@@ -334,6 +355,14 @@ impl FleetServing {
             anyhow::ensure!(g.share > 0.0, "{}: share must be positive", g.benchmark);
             anyhow::ensure!(g.n_instances >= 1, "{}: need >= 1 instance", g.benchmark);
         }
+        // Deterministic virtual-time scheduling needs every participating
+        // thread registered; catching a forgotten driver here beats a
+        // silent free-running simulation.
+        anyhow::ensure!(
+            cfg.clock.current_is_actor(),
+            "VirtualClock: register the starting thread as an actor first \
+             (clock::ActorScope::enter) so the simulation stays deterministic"
+        );
 
         let registry = Arc::new(Registry::new());
         let shutdown = Arc::new(AtomicBool::new(false));
@@ -351,7 +380,7 @@ impl FleetServing {
                 share: g.share,
                 n_instances: g.n_instances,
                 shards: (0..g.n_instances)
-                    .map(|_| Arc::new(ShardQueue::new(per_shard)))
+                    .map(|_| Arc::new(ShardQueue::with_clock(per_shard, cfg.clock.clone())))
                     .collect(),
                 dispatcher: Dispatcher::new(cfg.dispatch),
                 backend_name: probe.name(),
@@ -377,6 +406,11 @@ impl FleetServing {
         }
 
         // ---- workers ---------------------------------------------------
+        // Clock actors are registered *here*, on the starting thread, so
+        // their ids — and with them every virtual-time scheduling decision
+        // — are assigned in deterministic program order (workers in
+        // group/instance order, then the CC), not in racy thread-startup
+        // order.
         let mut workers = Vec::new();
         for (gi, gshared) in groups.iter().enumerate() {
             for wid in 0..cfg.groups[gi].n_instances {
@@ -387,7 +421,10 @@ impl FleetServing {
                 let cycles = cfg.cycles_per_batch;
                 let batch_timeout = cfg.batch_timeout;
                 let steal = cfg.steal;
+                let clock = cfg.clock.clone();
+                let actor = clock.register_actor(&format!("{}:w{wid}", g.name));
                 workers.push(std::thread::spawn(move || {
+                    let _actor = ActorScope::attach(&clock, actor);
                     let backend = InferenceBackend::open(&dir, &g.name);
                     let batch_cap = backend.batch();
                     let in_dim = backend.in_dim();
@@ -450,18 +487,18 @@ impl FleetServing {
                         // ---- simulated FPGA occupancy ------------------
                         let fr = g.freq_ratio().max(0.05);
                         let service = cycles / (F_NOM_HZ * fr);
-                        std::thread::sleep(Duration::from_secs_f64(service));
+                        clock.sleep(Duration::from_secs_f64(service));
 
-                        let now = Instant::now();
+                        let now = clock.now();
                         for (i, r) in reqs.iter().enumerate() {
-                            let lat = now.duration_since(r.submitted);
-                            g.latency_us.observe(lat.as_secs_f64() * 1e6);
+                            let lat_ticks = now.saturating_sub(r.submitted);
+                            g.latency_us.observe(lat_ticks as f64 / 1e3);
                             g.completed.inc();
                             fleet_completed.inc();
                             let _ = Completion {
                                 id: r.id,
                                 worker: wid,
-                                latency: lat,
+                                latency: clock::to_duration(lat_ticks),
                                 y0: y[i * backend.out_dim()],
                             };
                         }
@@ -476,7 +513,9 @@ impl FleetServing {
             let cfg2 = cfg.clone();
             let dir = artifacts_dir.clone();
             let stop = shutdown.clone();
+            let cc_actor = cfg.clock.register_actor("cc");
             std::thread::spawn(move || -> Vec<Vec<EpochRecord>> {
+                let _actor = ActorScope::attach(&cfg2.clock, cc_actor);
                 let engine = if cfg2.selector_via_pjrt {
                     Engine::open(&dir).ok()
                 } else {
@@ -536,7 +575,7 @@ impl FleetServing {
                     vec![Vec::new(); groups.len()];
                 let mut epoch = 0usize;
                 while !stop.load(Ordering::Relaxed) {
-                    std::thread::sleep(cfg2.epoch);
+                    cfg2.clock.sleep(cfg2.epoch);
                     for (gi, g) in groups.iter().enumerate() {
                         let cc = &mut ccs[gi];
                         let arrivals =
@@ -731,6 +770,12 @@ impl FleetServing {
         &self.registry
     }
 
+    /// The fleet's time source (wall or virtual); [`drive_scenario`] paces
+    /// epochs on it so scenario replay follows the fleet's notion of time.
+    pub fn clock(&self) -> &Arc<dyn Clock> {
+        &self.cfg.clock
+    }
+
     /// Submit one request to a group. Errors are typed backpressure-style
     /// signals, never aborts: `UnknownGroup` for an out-of-range index,
     /// `BadPayload` for a wrong-width payload, `QueueFull` when every
@@ -753,7 +798,7 @@ impl FleetServing {
         // where admitted traffic alone is capped by the current drain rate.
         g.arrivals_this_epoch.fetch_add(1, Ordering::Relaxed);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let mut req = Request { id, payload, submitted: Instant::now() };
+        let mut req = Request { id, payload, submitted: self.cfg.clock.now() };
         let first = g.dispatcher.pick(&g.shards);
         match g.shards[first].try_push(req) {
             Ok(()) => {}
@@ -809,6 +854,7 @@ impl FleetServing {
             share: g.share,
             n_instances: g.n_instances,
             backend: g.backend_name,
+            admitted: g.admitted.get(),
             completed: g.completed.get(),
             rejected: g.rejected.get(),
             failed: g.failed.get(),
@@ -867,13 +913,21 @@ impl FleetServing {
                 s.wake_all();
             }
         }
+        // Under VirtualClock the joining thread must leave the scheduling
+        // set while workers and the CC drain — a Running-but-blocked
+        // joiner would stop virtual time for everyone. resume() must run
+        // on every path, so joins collect errors instead of early-return.
+        self.cfg.clock.suspend_current();
+        let mut worker_panicked = false;
         for w in self.workers.drain(..) {
-            w.join().map_err(|_| anyhow::anyhow!("worker panicked"))?;
+            worker_panicked |= w.join().is_err();
         }
-        let epoch_records = match self.controller.take() {
-            Some(controller) => controller
-                .join()
-                .map_err(|_| anyhow::anyhow!("controller panicked"))?,
+        let controller = self.controller.take().map(|c| c.join());
+        self.cfg.clock.resume_current();
+        anyhow::ensure!(!worker_panicked, "worker panicked");
+        let epoch_records = match controller {
+            Some(Ok(records)) => records,
+            Some(Err(_)) => anyhow::bail!("controller panicked"),
             None => Vec::new(),
         };
         Ok(FleetServingReport { stats: self.stats(), epoch_records })
@@ -884,7 +938,15 @@ impl FleetServing {
 /// epoch, offered load per group = `trace · share · peak_rps`, spread
 /// over 16 bursts per epoch, plus one epoch of drain time at the end.
 /// Returns the number of accepted submissions. Shared by the
-/// `serve-fleet` CLI subcommand and `examples/fleet_serving.rs`.
+/// `serve-fleet` CLI subcommand, `examples/fleet_serving.rs` and the
+/// `simtest` virtual-time harness.
+///
+/// Pacing follows the *fleet's* clock, so under a
+/// [`VirtualClock`](crate::clock::VirtualClock) the whole replay runs in
+/// simulation time. Every stochastic input derives from `seed` — payload
+/// streams are forked per tenant so one tenant's draws do not depend on
+/// its neighbours' model dims or submission order — which makes two runs
+/// with the same seed bit-identical.
 pub fn drive_scenario(
     fleet: &FleetServing,
     scenario: &crate::workload::Scenario,
@@ -892,10 +954,14 @@ pub fn drive_scenario(
     seed: u64,
 ) -> u64 {
     let epoch = fleet.cfg.epoch;
-    let mut rng = crate::util::prng::Rng::new(seed);
+    let clock = fleet.clock().clone();
+    let mut root = crate::util::prng::Rng::new(seed);
+    let mut payload_rngs: Vec<crate::util::prng::Rng> = (0..scenario.tenants.len())
+        .map(|i| root.fork(i as u64 + 1))
+        .collect();
     let mut accepted = 0u64;
     for step in 0..scenario.steps() {
-        let epoch_start = Instant::now();
+        let epoch_start = clock.now();
         let targets: Vec<usize> = scenario
             .tenants
             .iter()
@@ -911,21 +977,26 @@ pub fn drive_scenario(
                 let from = (b * target) / bursts;
                 let upto = ((b + 1) * target) / bursts;
                 for _ in from..upto {
-                    if fleet.submit(gi, rng.normal_vec_f32(fleet.in_dim(gi))).is_ok() {
+                    let payload = payload_rngs[gi].normal_vec_f32(fleet.in_dim(gi));
+                    if fleet.submit(gi, payload).is_ok() {
                         accepted += 1;
                     }
                 }
             }
-            std::thread::sleep(gap);
+            clock.sleep(gap);
         }
-        // Keep epochs aligned even if submission ran long. The elapsed
-        // time is sampled once: a second sample taken after the
-        // comparison can exceed `epoch` and make `epoch - elapsed`
-        // underflow-panic.
-        let elapsed = epoch_start.elapsed();
-        std::thread::sleep(epoch.saturating_sub(elapsed));
+        // Keep epochs aligned even if submission ran long on a wall
+        // clock; the saturating remainder avoids a Duration-underflow
+        // panic. Under virtual time submissions are free, so this sleeps
+        // the exact remainder and epochs stay perfectly phase-aligned
+        // with the CC.
+        let elapsed = clock.now().saturating_sub(epoch_start);
+        let remainder = clock::ticks(epoch).saturating_sub(elapsed);
+        if remainder > 0 {
+            clock.sleep(clock::to_duration(remainder));
+        }
     }
-    std::thread::sleep(epoch); // drain window
+    clock.sleep(epoch); // drain window
     accepted
 }
 
@@ -972,14 +1043,13 @@ pub fn fleet_report_rows(stats: &FleetServingStats) -> Vec<Vec<String>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::clock::VirtualClock;
 
     fn reqs(n: usize) -> Vec<Request> {
+        // Timestamps route through the injected clock; unit tests pin them
+        // to tick 0 so no helper ever reads wall time mid-test.
         (0..n)
-            .map(|i| Request {
-                id: i as u64,
-                payload: vec![0.0; 2],
-                submitted: Instant::now(),
-            })
+            .map(|i| Request { id: i as u64, payload: vec![0.0; 2], submitted: 0 })
             .collect()
     }
 
@@ -1010,7 +1080,7 @@ mod tests {
             shards[1].try_push(r).unwrap();
         }
         shards[0]
-            .try_push(Request { id: 99, payload: vec![], submitted: Instant::now() })
+            .try_push(Request { id: 99, payload: vec![], submitted: 0 })
             .unwrap();
         let (batch, stolen) =
             claim_batch(&shards, 0, 16, Duration::from_millis(1), true);
@@ -1061,7 +1131,13 @@ mod tests {
     fn published_gauges_pin_to_the_lut_entry() {
         // With no load, no warmup and no PJRT refinement, the CC must
         // publish exactly the bin-0 elastic LUT entry — voltages rounded
-        // to millivolts, not truncated.
+        // to millivolts, not truncated. Runs under VirtualClock: the old
+        // version polled wall time with a 10 s deadline loop; here the CC
+        // fires at virtual ticks 30/60/90 ms and sleeping 100 virtual ms
+        // yields *exactly* three epochs, deterministically, in
+        // microseconds of wall time.
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        let _driver = ActorScope::enter(&clock, "test-driver");
         let cfg = FleetServingConfig {
             groups: vec![GroupConfig {
                 benchmark: "tabla".into(),
@@ -1071,6 +1147,7 @@ mod tests {
             epoch: Duration::from_millis(30),
             warmup_epochs: 0,
             selector_via_pjrt: false,
+            clock: clock.clone(),
             ..Default::default()
         };
         let platform = build_platform(
@@ -1093,17 +1170,10 @@ mod tests {
         );
         let want = lut.entries[0];
 
-        let fleet = FleetServing::start(cfg, "artifacts".into()).unwrap();
-        // Wait for the CC to have decided a few idle epochs (epoch 0's
-        // prediction comes from an untrained chain; by epoch 2 the
-        // repeated zero-load observations pin it to bin 0). Polling with
-        // a generous deadline instead of a fixed sleep keeps the test
-        // stable on oversubscribed CI runners.
-        let deadline = Instant::now() + Duration::from_secs(10);
-        while fleet.stats().per_group[0].epochs < 3 && Instant::now() < deadline {
-            std::thread::sleep(Duration::from_millis(15));
-        }
+        let fleet = FleetServing::start(cfg, "sim-no-artifacts".into()).unwrap();
+        clock.sleep(Duration::from_millis(100));
         let stats = fleet.stats();
+        assert_eq!(stats.per_group[0].epochs, 3, "CC epochs at 30/60/90 virtual ms");
         let g = &stats.per_group[0];
         let mv = |v: f64| volts_to_mv(v) as f64 / 1000.0;
         assert!(

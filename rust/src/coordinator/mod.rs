@@ -37,6 +37,15 @@
 //! skipped by dispatch and stealing, their workers park on the shard
 //! condvar, and their queued requests are drained into active shards.
 //!
+//! Every time-shaped operation — worker waits, the CC epoch loop, service
+//! occupancy, request timestamps — goes through the injected
+//! [`Clock`](crate::clock::Clock) (DESIGN.md S18). The default
+//! `WallClock` preserves the live behavior; a
+//! [`VirtualClock`](crate::clock::VirtualClock) turns the whole
+//! coordinator into a deterministic discrete-event simulation
+//! (`simtest`): thousand-epoch scenarios replay in milliseconds and two
+//! runs with the same seed produce byte-identical epoch traces.
+//!
 //! This module is the user-facing serving API: it must return typed
 //! errors under bad input or load, never abort the process, so panicking
 //! constructs are denied lint-level for all non-test code below.
@@ -56,10 +65,12 @@ pub use fleet::{
 };
 pub use shard::ShardQueue;
 
-use std::time::{Duration, Instant};
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
+use crate::clock::{self, Clock, Tick};
 use crate::power::DesignPower;
 use crate::vscale::{CapacityPolicy, Mode, Optimizer};
 
@@ -99,6 +110,10 @@ pub struct ServingConfig {
     pub capacity_policy: CapacityPolicy,
     /// Residual power fraction (of nominal) drawn by a gated instance.
     pub pg_residual: f64,
+    /// Time source for every wait/sleep/timestamp (DESIGN.md S18):
+    /// `clock::wall()` for live serving, a `VirtualClock` for
+    /// deterministic simulation.
+    pub clock: Arc<dyn Clock>,
 }
 
 impl Default for ServingConfig {
@@ -119,6 +134,7 @@ impl Default for ServingConfig {
             steal: true,
             capacity_policy: CapacityPolicy::Hybrid,
             pg_residual: 0.02,
+            clock: clock::wall(),
         }
     }
 }
@@ -130,8 +146,10 @@ pub struct Request {
     pub id: u64,
     /// Input features (`in_dim` floats).
     pub payload: Vec<f32>,
-    /// Submit timestamp (end-to-end latency reference).
-    pub submitted: Instant,
+    /// Submit timestamp on the fleet's clock (end-to-end latency
+    /// reference; a virtual tick under `VirtualClock`, so latency
+    /// accounting stays exact in simulated runs).
+    pub submitted: Tick,
 }
 
 /// Completed request record.
@@ -280,6 +298,7 @@ impl Coordinator {
             steal: cfg.steal,
             capacity_policy: cfg.capacity_policy,
             pg_residual: cfg.pg_residual,
+            clock: cfg.clock.clone(),
         };
         let inner = FleetServing::start_with(fleet_cfg, artifacts_dir, vec![(design, optimizer)])?;
         let in_dim = inner.in_dim(0);

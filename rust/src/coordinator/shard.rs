@@ -14,14 +14,24 @@
 //!
 //! For the elastic capacity manager (DESIGN.md S6.1) a shard can be
 //! **gated**: dispatchers and stealing skip it, its worker parks on the
-//! shard condvar ([`ShardQueue::park_while_gated`]) until scale-up or
+//! shard's wait slot ([`ShardQueue::park_while_gated`]) until scale-up or
 //! shutdown wakes it, and the Central Controller drains whatever was
 //! queued into the still-active shards each epoch.
+//!
+//! Every blocking wait goes through the shard's injected
+//! [`Clock`](crate::clock::Clock) (DESIGN.md S18): under `WallClock` the
+//! behavior is the classic timed condvar wait; under `VirtualClock` the
+//! worker parks in simulation time, so a whole serving run is
+//! deterministic. Lost wakeups are prevented by the slot's generation
+//! counter — the waiter samples it *before* re-checking the queue, and a
+//! notify that lands in between makes the wait return immediately.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
+
+use crate::clock::{self, Clock, WaitSlot};
 
 use super::Request;
 
@@ -29,18 +39,28 @@ use super::Request;
 #[derive(Debug)]
 pub struct ShardQueue {
     q: Mutex<VecDeque<Request>>,
-    notify: Condvar,
+    clock: Arc<dyn Clock>,
+    slot: Arc<WaitSlot>,
     depth: AtomicUsize,
     capacity: usize,
     gated: AtomicBool,
 }
 
 impl ShardQueue {
-    /// Create a shard bounded to `capacity` queued requests (min 1).
+    /// Create a wall-clock shard bounded to `capacity` queued requests
+    /// (min 1).
     pub fn new(capacity: usize) -> Self {
+        Self::with_clock(capacity, clock::wall())
+    }
+
+    /// Create a shard whose blocking waits go through `clock` (the fleet
+    /// passes its own clock so `VirtualClock` runs are deterministic).
+    pub fn with_clock(capacity: usize, clock: Arc<dyn Clock>) -> Self {
+        let slot = clock.new_slot();
         ShardQueue {
             q: Mutex::new(VecDeque::new()),
-            notify: Condvar::new(),
+            clock,
+            slot,
             depth: AtomicUsize::new(0),
             capacity: capacity.max(1),
             gated: AtomicBool::new(false),
@@ -79,42 +99,40 @@ impl ShardQueue {
     }
 
     /// Gate or ungate the shard. Ungating wakes the parked worker; the
-    /// queue lock is held across the notify so a worker that just read
-    /// the gated flag cannot miss the wakeup.
+    /// slot's generation counter makes the wakeup race-free — a worker
+    /// that read the gated flag just before this call sees a moved
+    /// generation and returns from its wait immediately.
     pub fn set_gated(&self, gated: bool) {
         self.gated.store(gated, Ordering::SeqCst);
         if !gated {
-            let guard = self.locked();
-            self.notify.notify_all();
-            drop(guard);
+            self.clock.notify_slot(&self.slot);
         }
     }
 
-    /// Park the calling worker on the shard condvar while the shard is
-    /// gated; returns when ungated, woken (shutdown), or after `timeout`
-    /// so the caller can re-check its stop flag.
+    /// Park the calling worker while the shard is gated; returns when
+    /// ungated, woken (shutdown), or after `timeout` so the caller can
+    /// re-check its stop flag.
     pub fn park_while_gated(&self, timeout: Duration) {
-        let guard = self.locked();
+        // Sample the generation before the flag check (lost-wakeup guard).
+        let observed = self.slot.generation();
         if !self.is_gated() {
             return;
         }
-        match self.notify.wait_timeout(guard, timeout) {
-            Ok(_) => {}
-            Err(poisoned) => drop(poisoned.into_inner()),
-        }
+        self.clock.wait_slot(&self.slot, observed, timeout);
     }
 
     /// Enqueue a request; on a full shard the request is handed back so
     /// the dispatcher can retry elsewhere or reject (backpressure).
     pub fn try_push(&self, r: Request) -> Result<(), Request> {
-        let mut q = self.locked();
-        if q.len() >= self.capacity {
-            return Err(r);
+        {
+            let mut q = self.locked();
+            if q.len() >= self.capacity {
+                return Err(r);
+            }
+            q.push_back(r);
+            self.depth.store(q.len(), Ordering::Relaxed);
         }
-        q.push_back(r);
-        self.depth.store(q.len(), Ordering::Relaxed);
-        drop(q);
-        self.notify.notify_one();
+        self.clock.notify_slot(&self.slot);
         Ok(())
     }
 
@@ -123,11 +141,12 @@ impl ShardQueue {
     /// admitted* must never be dropped, even if every shard it could move
     /// to filled up concurrently.
     pub fn push_unbounded(&self, r: Request) {
-        let mut q = self.locked();
-        q.push_back(r);
-        self.depth.store(q.len(), Ordering::Relaxed);
-        drop(q);
-        self.notify.notify_one();
+        {
+            let mut q = self.locked();
+            q.push_back(r);
+            self.depth.store(q.len(), Ordering::Relaxed);
+        }
+        self.clock.notify_slot(&self.slot);
     }
 
     /// Dequeue up to `max` requests without blocking.
@@ -140,19 +159,28 @@ impl ShardQueue {
     }
 
     /// Dequeue up to `max` requests, waiting up to `wait` for the first
-    /// one to arrive. Returns early (possibly empty) when woken.
+    /// one to arrive. Returns empty only once `wait` has fully elapsed on
+    /// the shard's clock with nothing queued.
     pub fn pop_wait(&self, max: usize, wait: Duration) -> Vec<Request> {
-        let mut q = self.locked();
-        if q.is_empty() {
-            q = match self.notify.wait_timeout(q, wait) {
-                Ok((qq, _timeout)) => qq,
-                Err(poisoned) => poisoned.into_inner().0,
-            };
+        let deadline = self.clock.now().saturating_add(clock::ticks(wait));
+        loop {
+            let observed = self.slot.generation();
+            {
+                let mut q = self.locked();
+                if !q.is_empty() {
+                    let n = q.len().min(max);
+                    let out: Vec<Request> = q.drain(..n).collect();
+                    self.depth.store(q.len(), Ordering::Relaxed);
+                    return out;
+                }
+            }
+            let now = self.clock.now();
+            if now >= deadline {
+                return Vec::new();
+            }
+            self.clock
+                .wait_slot(&self.slot, observed, clock::to_duration(deadline - now));
         }
-        let n = q.len().min(max);
-        let out: Vec<Request> = q.drain(..n).collect();
-        self.depth.store(q.len(), Ordering::Relaxed);
-        out
     }
 
     /// Take up to `max` requests from the *back* of the queue (work
@@ -176,17 +204,17 @@ impl ShardQueue {
 
     /// Wake every waiter (used on shutdown).
     pub fn wake_all(&self) {
-        self.notify.notify_all();
+        self.clock.notify_slot(&self.slot);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::time::Instant;
+    use crate::clock::{ActorScope, VirtualClock};
 
     fn req(id: u64) -> Request {
-        Request { id, payload: vec![0.0; 4], submitted: Instant::now() }
+        Request { id, payload: vec![0.0; 4], submitted: 0 }
     }
 
     #[test]
@@ -234,46 +262,82 @@ mod tests {
     }
 
     #[test]
-    fn pop_wait_times_out_empty_and_wakes_on_push() {
-        let s = std::sync::Arc::new(ShardQueue::new(8));
-        let t0 = Instant::now();
-        assert!(s.pop_wait(4, Duration::from_millis(20)).is_empty());
-        assert!(t0.elapsed() >= Duration::from_millis(15));
-
-        let s2 = s.clone();
-        let h = std::thread::spawn(move || s2.pop_wait(4, Duration::from_secs(5)));
-        std::thread::sleep(Duration::from_millis(30));
-        s.try_push(req(9)).unwrap();
-        let got = h.join().unwrap();
+    fn pop_wait_returns_queued_work_without_waiting() {
+        let s = ShardQueue::new(8);
+        s.try_push(req(7)).unwrap();
+        // Zero timeout: queued work is still returned immediately.
+        let got = s.pop_wait(4, Duration::ZERO);
         assert_eq!(got.len(), 1);
-        assert_eq!(got[0].id, 9);
+        assert_eq!(got[0].id, 7);
+        assert!(s.pop_wait(4, Duration::from_millis(5)).is_empty());
     }
 
     #[test]
-    fn gating_flag_parks_and_ungating_wakes() {
-        let s = std::sync::Arc::new(ShardQueue::new(8));
+    fn pop_wait_virtual_time_wakes_on_push_deterministically() {
+        // No real sleeps: the consumer parks in virtual time, the producer
+        // pushes 30 virtual ms later, and the wakeup tick is exact.
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        let _me = ActorScope::enter(&clock, "producer");
+        let s = Arc::new(ShardQueue::with_clock(8, clock.clone()));
+        let actor = clock.register_actor("consumer");
+        let (s2, c2) = (s.clone(), clock.clone());
+        let h = std::thread::spawn(move || {
+            let _scope = ActorScope::attach(&c2, actor);
+            let got = s2.pop_wait(4, Duration::from_secs(5));
+            (got, c2.now())
+        });
+        clock.sleep(Duration::from_millis(30));
+        s.try_push(req(9)).unwrap();
+        clock.suspend_current();
+        let (got, woke_at) = h.join().unwrap();
+        clock.resume_current();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 9);
+        assert_eq!(
+            woke_at,
+            crate::clock::ticks(Duration::from_millis(30)),
+            "push, not the 5 s timeout, must wake the consumer"
+        );
+    }
+
+    #[test]
+    fn pop_wait_virtual_time_times_out_at_exact_deadline() {
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        let _me = ActorScope::enter(&clock, "consumer");
+        let s = ShardQueue::with_clock(8, clock.clone());
+        assert!(s.pop_wait(4, Duration::from_millis(20)).is_empty());
+        assert_eq!(clock.now(), crate::clock::ticks(Duration::from_millis(20)));
+    }
+
+    #[test]
+    fn gating_flag_parks_and_ungating_wakes_virtual_time() {
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        let _me = ActorScope::enter(&clock, "cc");
+        let s = Arc::new(ShardQueue::with_clock(8, clock.clone()));
         assert!(!s.is_gated());
         s.set_gated(true);
         assert!(s.is_gated());
-        // A gated park with no wakeup returns after the timeout.
-        let t0 = Instant::now();
+        // A gated park with no wakeup returns at exactly its timeout.
         s.park_while_gated(Duration::from_millis(20));
-        assert!(t0.elapsed() >= Duration::from_millis(15));
-        // Ungating wakes a parked worker well before its timeout.
-        let s2 = s.clone();
+        assert_eq!(clock.now(), crate::clock::ticks(Duration::from_millis(20)));
+        // Ungating wakes a parked worker long before its timeout.
+        let actor = clock.register_actor("worker");
+        let (s2, c2) = (s.clone(), clock.clone());
         let h = std::thread::spawn(move || {
-            let t0 = Instant::now();
-            s2.park_while_gated(Duration::from_secs(5));
-            t0.elapsed()
+            let _scope = ActorScope::attach(&c2, actor);
+            s2.park_while_gated(Duration::from_secs(60));
+            c2.now()
         });
-        std::thread::sleep(Duration::from_millis(30));
+        clock.sleep(Duration::from_millis(30));
         s.set_gated(false);
-        let waited = h.join().unwrap();
-        assert!(waited < Duration::from_secs(4), "ungate must wake the parked worker");
-        // An ungated park returns immediately.
-        let t0 = Instant::now();
-        s.park_while_gated(Duration::from_secs(5));
-        assert!(t0.elapsed() < Duration::from_millis(100));
+        clock.suspend_current();
+        let woke_at = h.join().unwrap();
+        clock.resume_current();
+        assert_eq!(woke_at, crate::clock::ticks(Duration::from_millis(50)));
+        // An ungated park returns immediately, no time passes.
+        let before = clock.now();
+        s.park_while_gated(Duration::from_secs(60));
+        assert_eq!(clock.now(), before);
     }
 
     #[test]

@@ -15,8 +15,10 @@
 pub mod arch;
 pub mod bench_support;
 pub mod cli;
+pub mod clock;
 pub mod config;
 pub mod coordinator;
+pub mod simtest;
 pub mod metrics;
 pub mod report;
 pub mod chars;

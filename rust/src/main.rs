@@ -47,7 +47,10 @@ SUBCOMMANDS:
              also reports dvfs-only vs pg-only vs hybrid side by side)
   serve-fleet --scenario <name> [--instances N] [--epochs N]
              [--epoch-ms N] [--rps N] [--artifacts dir]
-             [--capacity dvfs|pg|hybrid]  (live elastic coordinator)
+             [--capacity dvfs|pg|hybrid] [--virtual-time] [--seed N]
+             (live elastic coordinator; --virtual-time replays the
+             scenario deterministically in simulated time — thousands of
+             epochs per wall-second, bit-identical per seed)
   experiment <fig1|fig2|fig3|fig4|fig5|fig6|fig8|table1|fig10|fig11|fig12|table2|pll|hybrid>
              re-run a paper experiment (same code as `cargo bench`)
 ";
@@ -549,7 +552,7 @@ fn print_capacity_comparison(
 fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "scenario", "instances", "epochs", "epoch-ms", "rps", "mode", "artifacts", "seed",
-        "capacity",
+        "capacity", "virtual-time",
     ])?;
     let name = args.flag_or("scenario", "mixed-tenant");
     let n_instances = args.flag_usize("instances")?.unwrap_or(2);
@@ -558,8 +561,31 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
     let rps = args.flag_f64("rps")?.unwrap_or(3000.0);
     let mode = wavescale::config::mode_by_name(args.flag_or("mode", "prop"))?;
     let capacity = wavescale::vscale::CapacityPolicy::by_name(args.flag_or("capacity", "hybrid"))?;
-    let dir = args.flag_or("artifacts", "artifacts");
     let seed = args.flag_usize("seed")?.unwrap_or(7) as u64;
+    let virtual_time = args.switch("virtual-time");
+    // Bit-identical-per-seed replay must not depend on which artifacts are
+    // installed, so virtual time always serves through the deterministic
+    // native backend (a directory that never exists), like `simtest`.
+    let dir = if virtual_time {
+        if args.flag("artifacts").is_some() {
+            println!("(--virtual-time ignores --artifacts: deterministic native backend)");
+        }
+        "sim-no-artifacts"
+    } else {
+        args.flag_or("artifacts", "artifacts")
+    };
+
+    // Under --virtual-time the whole fleet runs on a deterministic
+    // discrete-event clock: the replay is bit-identical per --seed and a
+    // long scenario takes milliseconds instead of epochs x epoch-ms of
+    // wall time (DESIGN.md S18).
+    let clock: std::sync::Arc<dyn wavescale::clock::Clock> = if virtual_time {
+        std::sync::Arc::new(wavescale::clock::VirtualClock::new())
+    } else {
+        wavescale::clock::wall()
+    };
+    let _driver = virtual_time
+        .then(|| wavescale::clock::ActorScope::enter(&clock, "serve-fleet"));
 
     let scenario = wavescale::workload::Scenario::by_name(name, epochs, seed)?;
     let cfg = wavescale::coordinator::FleetServingConfig {
@@ -575,21 +601,35 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
         epoch: std::time::Duration::from_millis(epoch_ms as u64),
         mode,
         capacity_policy: capacity,
+        // The PJRT selector round-trip is skipped in virtual time so the
+        // trace cannot depend on which artifacts are installed.
+        selector_via_pjrt: !virtual_time,
+        clock: clock.clone(),
         ..Default::default()
     };
     let fleet = wavescale::coordinator::FleetServing::start(cfg, dir.into())
         .map_err(|e| e.to_string())?;
     println!(
         "serving scenario {name}: {} groups x {n_instances} instances, {epochs} epochs, \
-         capacity policy {}",
+         capacity policy {}{}",
         scenario.tenants.len(),
-        capacity.name()
+        capacity.name(),
+        if virtual_time { ", virtual time" } else { "" }
     );
 
+    let wall_start = std::time::Instant::now();
     let accepted = wavescale::coordinator::drive_scenario(&fleet, &scenario, rps, seed);
     let report = fleet.shutdown().map_err(|e| e.to_string())?;
 
     println!("accepted {accepted} submissions");
+    if virtual_time {
+        println!(
+            "replayed {:.1} s of virtual time in {:.0} ms wall (seed {seed}; reruns are \
+             bit-identical)",
+            (epochs + 1) as f64 * epoch_ms as f64 / 1e3,
+            wall_start.elapsed().as_secs_f64() * 1e3
+        );
+    }
     print!("{}", table(&wavescale::coordinator::fleet_report_rows(&report.stats)));
     let s = &report.stats;
     println!(

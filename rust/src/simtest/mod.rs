@@ -1,0 +1,325 @@
+//! Virtual-time serving simulation + golden-trace harness (DESIGN.md S18).
+//!
+//! `simtest` replays a named workload scenario against the *live*
+//! coordinator ([`FleetServing`]) on a
+//! [`VirtualClock`](crate::clock::VirtualClock): workers, the Central
+//! Controller and the scenario driver all run as real threads, but time is
+//! deterministic discrete-event simulation time, so
+//!
+//! * a thousand-epoch scenario replays in milliseconds of wall time, and
+//! * two runs with the same [`SimSpec`] produce **byte-identical** JSON
+//!   epoch traces.
+//!
+//! On top of [`run`] sits the golden-trace harness: [`check_golden`]
+//! replays a spec, serializes the per-group [`EpochRecord`] trace with
+//! [`trace_json`], and compares it against the committed file under
+//! `rust/testdata/golden/`. A missing file is *recorded* (first-run
+//! bootstrap) and must be committed; a mismatch fails with a pointer to
+//! `make golden`, which regenerates the whole suite
+//! (`WAVESCALE_UPDATE_GOLDEN=1`).
+//!
+//! Determinism notes: simulations force the native inference backend (a
+//! nonexistent artifacts dir) and the native voltage selector, so traces
+//! do not depend on whether `make artifacts` ran; every stochastic input
+//! derives from the spec seed (trace generation, per-tenant payload
+//! streams); and the virtual scheduler breaks ties by actor id. The
+//! built `(design, optimizer)` pairs are memoized per benchmark, so
+//! property suites can start hundreds of fleets without re-running
+//! netlist generation + STA each time.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::clock::{ActorScope, Clock, VirtualClock};
+use crate::coordinator::{
+    drive_scenario, EpochRecord, FleetServing, FleetServingConfig, FleetServingReport,
+    GroupConfig,
+};
+use crate::platform::{build_platform, PlatformConfig, Policy};
+use crate::power::DesignPower;
+use crate::util::json::Json;
+use crate::vscale::{CapacityPolicy, Mode, Optimizer};
+use crate::workload::Scenario;
+
+/// An artifacts directory that never exists: simulations always use the
+/// deterministic native backend so traces are environment-independent.
+const NO_ARTIFACTS: &str = "sim-no-artifacts";
+
+/// Everything that parameterizes one deterministic serving simulation.
+#[derive(Clone, Debug)]
+pub struct SimSpec {
+    /// Named scenario ([`Scenario::NAMES`]).
+    pub scenario: String,
+    /// Scenario steps == fleet DVFS epochs driven.
+    pub epochs: usize,
+    /// Seed for trace generation and payload streams.
+    pub seed: u64,
+    /// Peak offered load (requests/s across the fleet at trace load 1.0).
+    pub peak_rps: f64,
+    /// Worker instances per tenant group.
+    pub n_instances: usize,
+    /// Virtual DVFS epoch length.
+    pub epoch: Duration,
+    /// Worker batch wait (kept a divisor of `epoch` so idle parks stay
+    /// cheap in the discrete-event scheduler).
+    pub batch_timeout: Duration,
+    /// Cycles one batch occupies an instance.
+    pub cycles_per_batch: f64,
+    /// Total queued requests a group may hold.
+    pub queue_capacity: usize,
+    /// Capacity policy under test (hybrid / dvfs-only / pg-only).
+    pub policy: CapacityPolicy,
+    /// Pure-training epochs before predictions are trusted.
+    pub warmup_epochs: usize,
+}
+
+impl Default for SimSpec {
+    fn default() -> Self {
+        SimSpec {
+            scenario: "overnight".into(),
+            epochs: 24,
+            seed: 2019,
+            peak_rps: 2_000.0,
+            n_instances: 2,
+            epoch: Duration::from_millis(50),
+            batch_timeout: Duration::from_millis(10),
+            cycles_per_batch: 2.0e5,
+            queue_capacity: 4096,
+            policy: CapacityPolicy::Hybrid,
+            warmup_epochs: 2,
+        }
+    }
+}
+
+impl SimSpec {
+    /// The canonical golden-trace spec for a named scenario: 48 epochs,
+    /// seed 2019, hybrid capacity. Golden files are keyed on
+    /// `{scenario}_{policy}` so keep these parameters stable.
+    pub fn golden(scenario: &str) -> SimSpec {
+        SimSpec { scenario: scenario.into(), epochs: 48, ..SimSpec::default() }
+    }
+
+    /// File stem of the golden trace for this spec.
+    pub fn golden_stem(&self) -> String {
+        format!("{}_{}", self.scenario, self.policy.name())
+    }
+}
+
+/// Result of one simulated replay.
+#[derive(Debug)]
+pub struct SimOutcome {
+    /// Final stats + per-group epoch traces.
+    pub report: FleetServingReport,
+    /// Submissions the driver got accepted.
+    pub accepted: u64,
+    /// Wall time the whole replay took (virtual runs: milliseconds).
+    pub wall: Duration,
+}
+
+/// Memoized `(design, optimizer)` per benchmark: netlist generation + STA
+/// are deterministic but expensive, and property suites start hundreds of
+/// fleets.
+fn built_for(benchmark: &str) -> Result<(DesignPower, Optimizer)> {
+    static CACHE: OnceLock<Mutex<HashMap<String, (DesignPower, Optimizer)>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut map = match cache.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    if let Some(b) = map.get(benchmark) {
+        return Ok(b.clone());
+    }
+    let platform = build_platform(benchmark, PlatformConfig::default(), Policy::Dvfs(Mode::Proposed))
+        .map_err(anyhow::Error::msg)?;
+    let built = (platform.design.clone(), platform.optimizer_ref().clone());
+    map.insert(benchmark.to_string(), built.clone());
+    Ok(built)
+}
+
+/// Replay `spec` on a fresh [`VirtualClock`] and return the outcome.
+pub fn run(spec: &SimSpec) -> Result<SimOutcome> {
+    let scenario =
+        Scenario::by_name(&spec.scenario, spec.epochs, spec.seed).map_err(anyhow::Error::msg)?;
+    run_scenario(spec, &scenario)
+}
+
+/// Replay an already-built scenario under `spec`'s fleet parameters.
+pub fn run_scenario(spec: &SimSpec, scenario: &Scenario) -> Result<SimOutcome> {
+    let t0 = Instant::now();
+    let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+    let _driver = ActorScope::enter(&clock, "sim-driver");
+    let cfg = FleetServingConfig {
+        groups: scenario
+            .tenants
+            .iter()
+            .map(|t| GroupConfig {
+                benchmark: t.benchmark.clone(),
+                share: t.share,
+                n_instances: spec.n_instances,
+            })
+            .collect(),
+        epoch: spec.epoch,
+        queue_capacity: spec.queue_capacity,
+        batch_timeout: spec.batch_timeout,
+        cycles_per_batch: spec.cycles_per_batch,
+        selector_via_pjrt: false,
+        warmup_epochs: spec.warmup_epochs,
+        capacity_policy: spec.policy,
+        clock: clock.clone(),
+        ..Default::default()
+    };
+    let mut built = Vec::with_capacity(cfg.groups.len());
+    for g in &cfg.groups {
+        built.push(built_for(&g.benchmark)?);
+    }
+    let fleet = FleetServing::start_with(cfg, PathBuf::from(NO_ARTIFACTS), built)?;
+    let accepted = drive_scenario(&fleet, scenario, spec.peak_rps, spec.seed);
+    let report = fleet.shutdown()?;
+    Ok(SimOutcome { report, accepted, wall: t0.elapsed() })
+}
+
+fn record_json(r: &EpochRecord) -> Json {
+    Json::obj(vec![
+        ("epoch", Json::Num(r.epoch as f64)),
+        ("load", Json::Num(r.load)),
+        ("predicted", Json::Num(r.predicted)),
+        ("freq_ratio", Json::Num(r.freq_ratio)),
+        ("vcore", Json::Num(r.vcore)),
+        ("vbram", Json::Num(r.vbram)),
+        ("power_w", Json::Num(r.power_w)),
+        ("active", Json::Num(r.active as f64)),
+    ])
+}
+
+/// Serialize a replay's per-group epoch traces (plus the spec that
+/// produced them) into the canonical golden-trace JSON document. Two runs
+/// of the same spec serialize to byte-identical strings.
+pub fn trace_json(spec: &SimSpec, scenario: &Scenario, report: &FleetServingReport) -> Json {
+    let groups: Vec<Json> = scenario
+        .tenants
+        .iter()
+        .zip(&report.epoch_records)
+        .map(|(t, records)| {
+            Json::obj(vec![
+                ("benchmark", Json::Str(t.benchmark.clone())),
+                ("share", Json::Num(t.share)),
+                ("records", Json::Arr(records.iter().map(record_json).collect())),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("scenario", Json::Str(spec.scenario.clone())),
+        ("policy", Json::Str(spec.policy.name().to_string())),
+        ("seed", Json::Num(spec.seed as f64)),
+        ("epochs", Json::Num(spec.epochs as f64)),
+        ("peak_rps", Json::Num(spec.peak_rps)),
+        ("n_instances", Json::Num(spec.n_instances as f64)),
+        ("epoch_ms", Json::Num(spec.epoch.as_secs_f64() * 1e3)),
+        ("groups", Json::Arr(groups)),
+    ])
+}
+
+/// What [`check_golden`] did.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GoldenStatus {
+    /// The replay matched the committed golden byte-for-byte.
+    Matched,
+    /// No golden existed; this run recorded one (commit it).
+    Recorded,
+    /// `WAVESCALE_UPDATE_GOLDEN=1`: the golden was rewritten.
+    Updated,
+}
+
+/// Replay `spec` and compare its trace against `dir/{scenario}_{policy}.json`.
+///
+/// * file matches → `Ok(Matched)`;
+/// * file missing → record it and return `Ok(Recorded)` (bootstrap —
+///   commit the new file);
+/// * file differs → `Err` pointing at `make golden`, unless
+///   `WAVESCALE_UPDATE_GOLDEN=1` is set, which rewrites it (`Updated`).
+pub fn check_golden(dir: &Path, spec: &SimSpec) -> Result<GoldenStatus> {
+    let scenario =
+        Scenario::by_name(&spec.scenario, spec.epochs, spec.seed).map_err(anyhow::Error::msg)?;
+    let outcome = run_scenario(spec, &scenario)?;
+    let mut text = trace_json(spec, &scenario, &outcome.report).to_string_pretty();
+    text.push('\n');
+    let path = dir.join(format!("{}.json", spec.golden_stem()));
+    let update = std::env::var("WAVESCALE_UPDATE_GOLDEN").as_deref() == Ok("1");
+    match std::fs::read_to_string(&path) {
+        Ok(existing) if existing == text => Ok(GoldenStatus::Matched),
+        Ok(existing) => {
+            if update {
+                std::fs::write(&path, &text)?;
+                return Ok(GoldenStatus::Updated);
+            }
+            let line = first_diff_line(&existing, &text);
+            anyhow::bail!(
+                "golden trace drift for {} (first differing line {line}); \
+                 if the change is intentional run `make golden` and commit {}",
+                spec.golden_stem(),
+                path.display()
+            )
+        }
+        Err(_) => {
+            std::fs::create_dir_all(dir)?;
+            std::fs::write(&path, &text)?;
+            Ok(GoldenStatus::Recorded)
+        }
+    }
+}
+
+fn first_diff_line(a: &str, b: &str) -> usize {
+    for (i, (la, lb)) in a.lines().zip(b.lines()).enumerate() {
+        if la != lb {
+            return i + 1;
+        }
+    }
+    a.lines().count().min(b.lines().count()) + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_stem_is_filename_safe() {
+        let spec = SimSpec { policy: CapacityPolicy::GatingOnly, ..SimSpec::golden("diurnal") };
+        assert_eq!(spec.golden_stem(), "diurnal_pg-only");
+        assert_eq!(SimSpec::golden("overnight").golden_stem(), "overnight_hybrid");
+        assert_eq!(SimSpec::golden("overnight").epochs, 48);
+    }
+
+    #[test]
+    fn tiny_sim_conserves_and_is_deterministic() {
+        // Smoke-sized: the full suites live in tests/sim_golden.rs and
+        // tests/sim_properties.rs.
+        let spec = SimSpec {
+            epochs: 3,
+            peak_rps: 400.0,
+            epoch: Duration::from_millis(20),
+            batch_timeout: Duration::from_millis(5),
+            warmup_epochs: 0,
+            ..SimSpec::default()
+        };
+        let a = run(&spec).unwrap();
+        let b = run(&spec).unwrap();
+        let scenario = Scenario::by_name(&spec.scenario, spec.epochs, spec.seed).unwrap();
+        assert_eq!(
+            trace_json(&spec, &scenario, &a.report).to_string_pretty(),
+            trace_json(&spec, &scenario, &b.report).to_string_pretty(),
+            "same seed must replay byte-identically"
+        );
+        assert_eq!(a.accepted, b.accepted);
+        for g in &a.report.stats.per_group {
+            assert_eq!(g.admitted, g.completed + g.failed, "{}: drain invariant", g.name);
+        }
+        assert_eq!(
+            a.report.stats.per_group.iter().map(|g| g.admitted).sum::<u64>(),
+            a.accepted
+        );
+    }
+}

@@ -69,17 +69,66 @@ impl Trace {
         s
     }
 
-    /// Parse the CSV format written by [`Trace::to_csv`].
+    /// Serialize as a two-column `step,load` CSV (the timestamped replay
+    /// format; [`Trace::from_csv`] validates that steps are strictly
+    /// increasing).
+    pub fn to_csv_with_steps(&self) -> String {
+        let mut s = String::with_capacity(self.loads.len() * 14 + 16);
+        s.push_str("step,load\n");
+        for (t, l) in self.loads.iter().enumerate() {
+            s.push_str(&format!("{t},{l:.6}\n"));
+        }
+        s
+    }
+
+    /// Parse the CSV formats written by [`Trace::to_csv`] (one `load`
+    /// column) and [`Trace::to_csv_with_steps`] (`step,load`). Timestamped
+    /// rows must be strictly increasing, and a file must not mix the two
+    /// row formats — a row that lost its timestamp, or duplicated /
+    /// out-of-order timestamps, are recording bugs, and replaying them
+    /// would silently shift or reorder the workload.
     pub fn from_csv(text: &str, label: &str) -> Result<Trace, String> {
         let mut loads = Vec::new();
+        let mut last_step: Option<i64> = None;
+        let mut has_steps: Option<bool> = None;
         for (i, line) in text.lines().enumerate() {
             let line = line.trim();
-            if line.is_empty() || (i == 0 && line == "load") {
+            if line.is_empty() || (i == 0 && matches!(line, "load" | "step,load" | "t,load")) {
                 continue;
             }
-            let v: f64 = line
+            let stepped = line.contains(',');
+            match has_steps {
+                None => has_steps = Some(stepped),
+                Some(h) if h != stepped => {
+                    return Err(format!(
+                        "line {}: mixed timestamped and plain rows",
+                        i + 1
+                    ));
+                }
+                Some(_) => {}
+            }
+            let load_txt = match line.split_once(',') {
+                None => line,
+                Some((step_txt, load_txt)) => {
+                    let step: i64 = step_txt
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("line {}: bad step {:?}", i + 1, step_txt.trim()))?;
+                    if let Some(prev) = last_step {
+                        if step <= prev {
+                            return Err(format!(
+                                "line {}: non-monotonic step {step} after {prev}",
+                                i + 1
+                            ));
+                        }
+                    }
+                    last_step = Some(step);
+                    load_txt.trim()
+                }
+            };
+            let v: f64 = load_txt
                 .parse()
-                .map_err(|_| format!("line {}: bad load {line:?}", i + 1))?;
+                .map_err(|_| format!("line {}: bad load {load_txt:?}", i + 1))?;
             if !(0.0..=1.5).contains(&v) {
                 return Err(format!("line {}: load {v} out of range", i + 1));
             }
@@ -302,5 +351,36 @@ mod tests {
         assert!(Trace::from_csv("load\nnope\n", "x").is_err());
         assert!(Trace::from_csv("load\n7.5\n", "x").is_err());
         assert!(Trace::from_csv("", "x").is_err());
+    }
+
+    #[test]
+    fn timestamped_csv_round_trips_and_validates_monotonicity() {
+        let t = bursty(&BurstyConfig { steps: 150, ..Default::default() });
+        let csv = t.to_csv_with_steps();
+        assert!(csv.starts_with("step,load\n"));
+        let u = Trace::from_csv(&csv, "replayed").unwrap();
+        assert_eq!(t.len(), u.len());
+        for (a, b) in t.loads.iter().zip(&u.loads) {
+            assert!((a - b).abs() < 1e-5);
+        }
+        // Non-monotonic, duplicated, and malformed timestamps all refuse.
+        let err = Trace::from_csv("step,load\n0,0.5\n2,0.4\n1,0.3\n", "x").unwrap_err();
+        assert!(err.contains("non-monotonic"), "{err}");
+        let err = Trace::from_csv("step,load\n5,0.5\n5,0.4\n", "x").unwrap_err();
+        assert!(err.contains("non-monotonic"), "{err}");
+        assert!(Trace::from_csv("step,load\nx,0.5\n", "x").is_err());
+        assert!(Trace::from_csv("step,load\n0,oops\n", "x").is_err());
+        // Header-only is still an empty trace.
+        assert!(Trace::from_csv("step,load\n", "x").is_err());
+        // A row that lost its timestamp must not bypass the monotonicity
+        // check (it would silently shift every later load by one epoch) —
+        // and the converse mix is refused too.
+        let err = Trace::from_csv("step,load\n1,0.5\n0.7\n2,0.4\n", "x").unwrap_err();
+        assert!(err.contains("mixed"), "{err}");
+        let err = Trace::from_csv("load\n0.5\n2,0.4\n", "x").unwrap_err();
+        assert!(err.contains("mixed"), "{err}");
+        // Gaps are fine as long as order is strict.
+        let u = Trace::from_csv("step,load\n10,0.1\n20,0.2\n35,0.3\n", "x").unwrap();
+        assert_eq!(u.loads, vec![0.1, 0.2, 0.3]);
     }
 }

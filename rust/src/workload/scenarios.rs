@@ -292,4 +292,52 @@ mod tests {
         assert!(Scenario::replay("bad", &[("tabla", 0.5, &csv)]).is_err());
         assert!(Scenario::replay("bad", &[("tabla", 1.0, "load\nnope\n")]).is_err());
     }
+
+    #[test]
+    fn replay_rejects_malformed_empty_and_non_monotonic_tenants() {
+        let good = bursty(&BurstyConfig { steps: 32, ..Default::default() }).to_csv();
+        // One malformed tenant poisons the whole replay scenario.
+        let err = Scenario::replay(
+            "bad",
+            &[("tabla", 0.5, &good), ("diannao", 0.5, "load\n0.2\nnot-a-load\n")],
+        )
+        .unwrap_err();
+        assert!(err.contains("bad load"), "{err}");
+        // Empty CSV file.
+        let err = Scenario::replay("bad", &[("tabla", 1.0, "")]).unwrap_err();
+        assert!(err.contains("empty"), "{err}");
+        // Header-only CSV is still empty.
+        assert!(Scenario::replay("bad", &[("tabla", 1.0, "step,load\n")]).is_err());
+        // Non-monotonic timestamps in a timestamped trace.
+        let err = Scenario::replay(
+            "bad",
+            &[("tabla", 1.0, "step,load\n0,0.4\n3,0.5\n2,0.6\n")],
+        )
+        .unwrap_err();
+        assert!(err.contains("non-monotonic"), "{err}");
+        // Out-of-range load value.
+        assert!(Scenario::replay("bad", &[("tabla", 1.0, "load\n7.5\n")]).is_err());
+    }
+
+    #[test]
+    fn replay_reproduces_the_generator_bin_sequence() {
+        // generate → write CSV (both formats) → replay → the Markov
+        // predictor sees the identical bin sequence, so a replayed trace
+        // drives the CC exactly like the generated original.
+        let t = bursty(&BurstyConfig { steps: 256, seed: 77, ..Default::default() });
+        let p = crate::markov::MarkovPredictor::new(10, 0);
+        for csv in [t.to_csv(), t.to_csv_with_steps()] {
+            let s = Scenario::replay(
+                "replayed",
+                &[("tabla", 0.5, csv.as_str()), ("diannao", 0.5, csv.as_str())],
+            )
+            .unwrap();
+            for tenant in &s.tenants {
+                let bins_orig: Vec<usize> = t.loads.iter().map(|&l| p.bin_of(l)).collect();
+                let bins_replay: Vec<usize> =
+                    tenant.trace.loads.iter().map(|&l| p.bin_of(l)).collect();
+                assert_eq!(bins_orig, bins_replay, "{}", tenant.benchmark);
+            }
+        }
+    }
 }

@@ -1,0 +1,131 @@
+//! Golden-trace tests: every named scenario replays on the virtual clock
+//! and its per-epoch CC trace must match the committed JSON under
+//! `testdata/golden/` byte-for-byte (DESIGN.md S18).
+//!
+//! Bootstrap: a missing golden is recorded and reported — commit it (CI
+//! fails on drift of tracked goldens via `git diff` after `make golden`).
+//! Intentional behavior changes regenerate the suite with `make golden`
+//! (`WAVESCALE_UPDATE_GOLDEN=1`).
+//!
+//! Everything runs inside ONE `#[test]` on purpose: the acceptance
+//! criterion times the overnight × 3-policy replay against a wall-clock
+//! budget, and sibling tests running in parallel threads (cargo's
+//! default) would contend for CPU and flake the timing on small CI
+//! runners.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use wavescale::simtest::{self, GoldenStatus, SimSpec};
+use wavescale::vscale::CapacityPolicy;
+use wavescale::workload::Scenario;
+
+const GOLDEN_DIR: &str = "testdata/golden";
+
+fn check(spec: &SimSpec) {
+    match simtest::check_golden(Path::new(GOLDEN_DIR), spec) {
+        Ok(GoldenStatus::Matched) => {}
+        Ok(GoldenStatus::Recorded) => eprintln!(
+            "recorded new golden trace {GOLDEN_DIR}/{}.json — commit it",
+            spec.golden_stem()
+        ),
+        Ok(GoldenStatus::Updated) => eprintln!(
+            "updated golden trace {GOLDEN_DIR}/{}.json (WAVESCALE_UPDATE_GOLDEN=1)",
+            spec.golden_stem()
+        ),
+        Err(e) => panic!("{e}"),
+    }
+}
+
+#[test]
+fn golden_traces_and_determinism() {
+    // Warm the memoized platform builds so the timed section measures the
+    // virtual-time replay, not one-off netlist generation + STA.
+    for name in Scenario::NAMES {
+        let warm = SimSpec { epochs: 1, ..SimSpec::golden(name) };
+        simtest::run(&warm).expect("warmup run");
+    }
+
+    // Acceptance: the full overnight scenario under all three capacity
+    // policies replays in under a second of wall time (relaxed for
+    // unoptimized test builds).
+    let t0 = Instant::now();
+    for policy in CapacityPolicy::ALL {
+        check(&SimSpec { policy, ..SimSpec::golden("overnight") });
+    }
+    let wall = t0.elapsed();
+    let budget = if cfg!(debug_assertions) {
+        Duration::from_secs(3)
+    } else {
+        Duration::from_secs(1)
+    };
+    assert!(
+        wall < budget,
+        "overnight x 3 policies took {wall:?} (budget {budget:?}) — virtual time must \
+         replay scenarios in milliseconds"
+    );
+
+    // Golden coverage for the remaining named scenarios (hybrid capacity).
+    for name in Scenario::NAMES {
+        if name != "overnight" {
+            check(&SimSpec::golden(name));
+        }
+    }
+
+    same_seed_replays_byte_identically_and_seeds_matter();
+    virtual_runs_are_independent_of_installed_artifacts();
+}
+
+fn same_seed_replays_byte_identically_and_seeds_matter() {
+    let spec = SimSpec {
+        epochs: 12,
+        peak_rps: 1_500.0,
+        epoch: Duration::from_millis(25),
+        batch_timeout: Duration::from_millis(5),
+        ..SimSpec::golden("flash-crowd")
+    };
+    let scenario = Scenario::by_name(&spec.scenario, spec.epochs, spec.seed).unwrap();
+    let a = simtest::run(&spec).unwrap();
+    let b = simtest::run(&spec).unwrap();
+    let ja = simtest::trace_json(&spec, &scenario, &a.report).to_string_pretty();
+    let jb = simtest::trace_json(&spec, &scenario, &b.report).to_string_pretty();
+    assert_eq!(ja, jb, "same seed must replay byte-identically");
+    assert_eq!(a.accepted, b.accepted);
+    // Full stats determinism, not just the trace: latency quantiles and
+    // integrated energy are bitwise equal too.
+    for (ga, gb) in a.report.stats.per_group.iter().zip(&b.report.stats.per_group) {
+        assert_eq!(ga.completed, gb.completed);
+        assert_eq!(ga.rejected, gb.rejected);
+        assert!(ga.energy_j.to_bits() == gb.energy_j.to_bits(), "{}", ga.name);
+        assert!(
+            ga.p99_latency_s.to_bits() == gb.p99_latency_s.to_bits(),
+            "{}: p99 {} vs {}",
+            ga.name,
+            ga.p99_latency_s,
+            gb.p99_latency_s
+        );
+    }
+
+    // A different seed must actually change the run — guards against any
+    // stochastic source silently ignoring the seed plumbing.
+    let other = SimSpec { seed: spec.seed + 1, ..spec.clone() };
+    let scenario_other = Scenario::by_name(&other.scenario, other.epochs, other.seed).unwrap();
+    let c = simtest::run(&other).unwrap();
+    let jc = simtest::trace_json(&other, &scenario_other, &c.report).to_string_pretty();
+    assert_ne!(ja, jc, "seed must steer the replay");
+}
+
+fn virtual_runs_are_independent_of_installed_artifacts() {
+    // The golden harness forces the native backend; assert that is really
+    // what a replay reports, whatever this checkout has under artifacts/.
+    let spec = SimSpec {
+        epochs: 4,
+        epoch: Duration::from_millis(20),
+        batch_timeout: Duration::from_millis(5),
+        ..SimSpec::golden("diurnal")
+    };
+    let out = simtest::run(&spec).unwrap();
+    for g in &out.report.stats.per_group {
+        assert_eq!(g.backend, "native", "{}: golden traces must not depend on PJRT", g.name);
+    }
+}

@@ -1,0 +1,202 @@
+//! Property tests over the virtual-time serving simulation and the shard
+//! queue (DESIGN.md S16/S18), using the in-repo `util::prop` harness.
+//!
+//! The fleet-level properties run the *live* coordinator — real worker
+//! and CC threads — on a `VirtualClock`, so hundreds of randomized
+//! scenarios replay in seconds and each failure reports a replayable
+//! seed (`WAVESCALE_PROP_SEED`):
+//!
+//! 1. every shard-queue op sequence matches a model queue (FIFO order,
+//!    capacity bound, depth mirror);
+//! 2. `admitted == completed + failed` at shutdown and the gated-shard
+//!    drain never drops a request, for arbitrary scenarios/policies;
+//! 3. the same seed replays byte-identically;
+//! 4. live hybrid capacity energy is never worse than the better of the
+//!    dvfs-only / pg-only baselines (within 1%).
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use wavescale::coordinator::{Request, ShardQueue};
+use wavescale::simtest::{self, SimSpec};
+use wavescale::util::prng::Rng;
+use wavescale::util::prop::{assert_that, check};
+use wavescale::vscale::CapacityPolicy;
+use wavescale::workload::Scenario;
+
+fn req(id: u64) -> Request {
+    Request { id, payload: vec![], submitted: 0 }
+}
+
+#[test]
+fn prop_shard_queue_matches_model_under_arbitrary_interleavings() {
+    check("shard queue vs model", 200, |rng| {
+        let cap = rng.index(1, 17);
+        let q = ShardQueue::new(cap);
+        let mut model: VecDeque<u64> = VecDeque::new();
+        let mut next_id = 0u64;
+        let mut unbounded_used = false;
+        for _ in 0..rng.index(1, 120) {
+            match rng.index(0, 8) {
+                // Bounded push: admitted iff the model has room.
+                0 | 1 | 2 => {
+                    let id = next_id;
+                    next_id += 1;
+                    match q.try_push(req(id)) {
+                        Ok(()) => {
+                            assert_that(model.len() < cap, "push accepted past capacity")?;
+                            model.push_back(id);
+                        }
+                        Err(back) => {
+                            assert_that(model.len() >= cap, "push refused below capacity")?;
+                            assert_that(back.id == id, "refused request handed back intact")?;
+                        }
+                    }
+                }
+                // CC drain/re-dispatch path may exceed the bound.
+                3 => {
+                    let id = next_id;
+                    next_id += 1;
+                    q.push_unbounded(req(id));
+                    model.push_back(id);
+                    unbounded_used = true;
+                }
+                // Home-worker pops keep FIFO order at the front
+                // (pop_wait with a zero deadline never blocks).
+                4 => {
+                    let k = rng.index(0, 6);
+                    let got: Vec<u64> = if rng.bool(0.5) {
+                        q.pop_upto(k).iter().map(|r| r.id).collect()
+                    } else {
+                        q.pop_wait(k, Duration::ZERO).iter().map(|r| r.id).collect()
+                    };
+                    let take = k.min(model.len());
+                    let want: Vec<u64> = model.drain(..take).collect();
+                    assert_that(got == want, format!("pop {got:?} != {want:?}"))?;
+                }
+                // Stealing takes from the back, preserving order.
+                5 => {
+                    let k = rng.index(0, 6);
+                    let got: Vec<u64> = q.steal_upto(k).iter().map(|r| r.id).collect();
+                    let take = k.min(model.len());
+                    let want: Vec<u64> = model.split_off(model.len() - take).into();
+                    assert_that(got == want, format!("steal {got:?} != {want:?}"))?;
+                }
+                6 => {
+                    let gated = rng.bool(0.5);
+                    q.set_gated(gated);
+                    assert_that(q.is_gated() == gated, "gated flag")?;
+                }
+                _ => {
+                    let got: Vec<u64> = q.drain_all().iter().map(|r| r.id).collect();
+                    let want: Vec<u64> = model.drain(..).collect();
+                    assert_that(got == want, format!("drain {got:?} != {want:?}"))?;
+                }
+            }
+            // The lock-free depth mirror equals the true depth between ops,
+            // and the bound holds unless the unbounded path was used.
+            assert_that(
+                q.len() == model.len(),
+                format!("depth mirror {} != model {}", q.len(), model.len()),
+            )?;
+            assert_that(
+                unbounded_used || q.len() <= cap,
+                format!("depth {} exceeds capacity {cap}", q.len()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// A randomized small scenario spec; every parameter that could matter is
+/// drawn from the case rng so failures replay exactly.
+fn random_spec(rng: &mut Rng) -> SimSpec {
+    let epoch_ms = rng.index(10, 31) as u64;
+    SimSpec {
+        scenario: (*rng.choose(&Scenario::NAMES)).to_string(),
+        epochs: rng.index(3, 6),
+        seed: rng.next_u64(),
+        peak_rps: rng.range(200.0, 2_500.0),
+        n_instances: rng.index(1, 3),
+        epoch: Duration::from_millis(epoch_ms),
+        batch_timeout: Duration::from_millis(rng.index(2, 9) as u64),
+        cycles_per_batch: *rng.choose(&[1.0e4, 1.0e5, 2.0e5]),
+        queue_capacity: rng.index(64, 2049),
+        policy: *rng.choose(&CapacityPolicy::ALL),
+        warmup_epochs: rng.index(0, 3),
+    }
+}
+
+#[test]
+fn prop_admitted_equals_completed_plus_failed_and_nothing_is_dropped() {
+    check("fleet conserves admitted requests", 100, |rng| {
+        let spec = random_spec(rng);
+        let out = simtest::run(&spec).map_err(|e| format!("{spec:?}: {e}"))?;
+        let mut admitted_total = 0u64;
+        for g in &out.report.stats.per_group {
+            // The PR-2 shutdown-drain invariant, now property-checked
+            // across arbitrary scenarios, policies and gating churn.
+            assert_that(
+                g.admitted == g.completed + g.failed,
+                format!(
+                    "{spec:?} {}: admitted {} != completed {} + failed {}",
+                    g.name, g.admitted, g.completed, g.failed
+                ),
+            )?;
+            // The native backend cannot fail, so the gated-shard drain
+            // must deliver every admitted request to completion.
+            assert_that(g.failed == 0, format!("{}: native backend failed", g.name))?;
+            admitted_total += g.admitted;
+        }
+        assert_that(
+            admitted_total == out.accepted,
+            format!("{spec:?}: accepted {} != admitted {admitted_total}", out.accepted),
+        )
+    });
+}
+
+#[test]
+fn prop_same_seed_replays_byte_identically() {
+    check("virtual replay deterministic", 100, |rng| {
+        let mut spec = random_spec(rng);
+        // Keep the doubled runs cheap; determinism is size-independent.
+        spec.epochs = rng.index(3, 5);
+        spec.n_instances = rng.index(1, 3);
+        let scenario = Scenario::by_name(&spec.scenario, spec.epochs, spec.seed)?;
+        let a = simtest::run(&spec).map_err(|e| format!("{spec:?}: {e}"))?;
+        let b = simtest::run(&spec).map_err(|e| format!("{spec:?}: {e}"))?;
+        let ja = simtest::trace_json(&spec, &scenario, &a.report).to_string_compact();
+        let jb = simtest::trace_json(&spec, &scenario, &b.report).to_string_compact();
+        assert_that(ja == jb, format!("{spec:?}: traces diverged"))?;
+        assert_that(a.accepted == b.accepted, "accepted count diverged")?;
+        assert_that(
+            a.report.stats.energy_j.to_bits() == b.report.stats.energy_j.to_bits(),
+            "energy diverged",
+        )
+    });
+}
+
+#[test]
+fn prop_live_hybrid_energy_never_worse_than_baselines() {
+    // Fewer cases — each runs the fleet three times — but still a broad
+    // sweep; the named-scenario acceptance test in the offline simulator
+    // (integration_policies) covers the long-horizon version.
+    check("live hybrid <= min(dvfs, pg) + 1%", 40, |rng| {
+        let mut spec = random_spec(rng);
+        spec.epochs = rng.index(4, 7);
+        let energy = |policy: CapacityPolicy| -> Result<f64, String> {
+            let s = SimSpec { policy, ..spec.clone() };
+            simtest::run(&s)
+                .map(|o| o.report.stats.energy_j)
+                .map_err(|e| format!("{s:?}: {e}"))
+        };
+        let hybrid = energy(CapacityPolicy::Hybrid)?;
+        let dvfs = energy(CapacityPolicy::DvfsOnly)?;
+        let pg = energy(CapacityPolicy::GatingOnly)?;
+        let best = dvfs.min(pg);
+        assert_that(
+            hybrid <= best * 1.01 + 1e-9,
+            format!("{spec:?}: hybrid {hybrid} J > min(dvfs {dvfs}, pg {pg}) J + 1%"),
+        )
+    });
+}
