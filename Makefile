@@ -12,12 +12,15 @@
 #                    when tracked goldens drift from a fresh replay
 #   make bench-coordinator  virtual-time scenario sweep -> results/
 #                    BENCH_coordinator.{json,csv} perf baseline
+#   make bench-predictor  predictor ensemble/guardband sweep (offline +
+#                    virtual-time, seed-pinned) -> results/
+#                    BENCH_predictor.{json,csv} baseline
 #   make doc         rustdoc with warnings surfaced
 
 ARTIFACTS_DIR := artifacts
 PY            := python3
 
-.PHONY: artifacts build test bench golden bench-coordinator doc scenario-smoke clean
+.PHONY: artifacts build test bench golden bench-coordinator bench-predictor doc scenario-smoke clean
 
 artifacts:
 	cd python && $(PY) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
@@ -38,7 +41,7 @@ bench: build
 	@for b in fig1_delay fig2_dynamic_power fig3_static_power fig4_workload \
 	          fig5_alpha fig6_beta fig8_markov fig10_tabla_trace \
 	          fig11_voltage_trace fig12_accelerators table1_utilization \
-	          table2_summary pll_overhead hybrid_capacity; do \
+	          table2_summary pll_overhead hybrid_capacity perf_predictor; do \
 		cargo bench --bench $$b || exit 1; \
 	done
 
@@ -55,6 +58,12 @@ golden: build
 # only the deterministic virtual sweep feeds the baseline.
 bench-coordinator: build
 	WAVESCALE_VIRTUAL_ONLY=1 cargo bench --bench perf_fleet_serving
+
+# Emit the predictor-ensemble/guardband baseline (offline 240-step
+# scenarios + virtual-time golden-parameter sweep; every number is
+# seed-pinned and deterministic) into results/BENCH_predictor.{json,csv}.
+bench-predictor: build
+	cargo bench --bench perf_predictor
 
 # Shortened end-to-end smoke of the elastic capacity manager: an
 # overnight trough through both the offline scenario sim (with the

@@ -1,0 +1,141 @@
+//! Perf/quality baseline for the prediction subsystem (Fig. 8 extended):
+//! every named scenario × every predictor configuration, both offline
+//! (long-horizon `Fleet::compare_predictors`) and live on the
+//! `VirtualClock` (golden-trace parameters, seed-pinned, deterministic),
+//! emitting `results/BENCH_predictor.{json,csv}` — the predictor baseline
+//! future PRs diff against.
+
+mod common;
+
+use wavescale::bench_support::section;
+use wavescale::markov::PredictorKind;
+use wavescale::platform::{fleet::Fleet, PlatformConfig};
+use wavescale::report::{row, table};
+use wavescale::simtest::{self, SimSpec};
+use wavescale::util::json::Json;
+use wavescale::vscale::Mode;
+use wavescale::workload::Scenario;
+
+const QOS_TARGET: f64 = 0.01;
+
+fn main() {
+    let mut runs = Vec::new();
+    let mut rows = vec![row([
+        "path", "scenario", "predictor", "energy_j", "gain", "violations%", "wall_ms",
+    ])];
+    offline_compare(&mut rows, &mut runs);
+    virtual_time_sweep(&mut rows, &mut runs);
+    common::emit_csv("BENCH_predictor.csv", &rows);
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_predictor".into())),
+        ("qos_target", Json::Num(QOS_TARGET)),
+        ("mode", Json::Str(if cfg!(debug_assertions) { "debug" } else { "release" }.into())),
+        ("runs", Json::Arr(runs)),
+    ]);
+    match wavescale::report::write_results("BENCH_predictor.json", &doc.to_string_pretty()) {
+        Ok(p) => println!("[json] {} (predictor baseline)", p.display()),
+        Err(e) => eprintln!("[json] failed to write BENCH_predictor.json: {e}"),
+    }
+}
+
+/// Offline simulator: 240-step named scenarios under hybrid capacity,
+/// static-margin Markov vs every predictor with the adaptive guardband.
+fn offline_compare(rows: &mut Vec<Vec<String>>, runs: &mut Vec<Json>) {
+    section("predictors offline: static markov vs adaptive guardband (hybrid, 240 steps)");
+    for s in Scenario::all(240, 2019) {
+        let reports = Fleet::compare_predictors(
+            &s,
+            PlatformConfig::default(),
+            Mode::Proposed,
+            QOS_TARGET,
+        )
+        .expect("compare_predictors");
+        for (label, r) in &reports {
+            println!(
+                "  {:<12} {:<22} energy {:8.1} J | gain {:.2}x | violations {:.2}%",
+                s.name,
+                label,
+                r.energy_j(),
+                r.power_gain,
+                r.violation_rate * 100.0
+            );
+            rows.push(vec![
+                "offline".into(),
+                s.name.clone(),
+                label.clone(),
+                format!("{:.3}", r.energy_j()),
+                format!("{:.3}", r.power_gain),
+                format!("{:.2}", r.violation_rate * 100.0),
+                "-".into(),
+            ]);
+            runs.push(Json::obj(vec![
+                ("path", Json::Str("offline".into())),
+                ("scenario", Json::Str(s.name.clone())),
+                ("predictor", Json::Str(label.clone())),
+                ("energy_j", Json::Num(r.energy_j())),
+                ("power_gain", Json::Num(r.power_gain)),
+                ("violation_rate", Json::Num(r.violation_rate)),
+            ]));
+        }
+    }
+}
+
+/// Live coordinator on the `VirtualClock`: golden-trace parameters
+/// (48 epochs, seed 2019, hybrid capacity), static Markov baseline plus
+/// every predictor kind with the guardband — bit-identical per seed.
+fn virtual_time_sweep(rows: &mut Vec<Vec<String>>, runs: &mut Vec<Json>) {
+    section("predictors live: virtual-time sweep (4 scenarios, golden params)");
+    // Warm the memoized platform builds so timed rows measure replays.
+    for name in Scenario::NAMES {
+        let warm = SimSpec { epochs: 1, ..SimSpec::golden(name) };
+        simtest::run(&warm).expect("warmup replay");
+    }
+    for name in Scenario::NAMES {
+        let mut specs = vec![("markov-static".to_string(), SimSpec::golden(name))];
+        for kind in PredictorKind::ALL {
+            specs.push((
+                format!("{}+guardband", kind.name()),
+                SimSpec {
+                    predictor: kind,
+                    qos_target: Some(QOS_TARGET),
+                    ..SimSpec::golden(name)
+                },
+            ));
+        }
+        for (label, spec) in specs {
+            let out = simtest::run(&spec).expect("virtual replay");
+            let s = &out.report.stats;
+            let wall_ms = out.wall.as_secs_f64() * 1e3;
+            println!(
+                "  {name:<12} {label:<22} energy {:8.3} J | gain {:.2}x | \
+                 violations {:.1}% | {wall_ms:6.1} ms wall",
+                s.energy_j,
+                s.power_gain,
+                s.violation_rate * 100.0
+            );
+            rows.push(vec![
+                "virtual".into(),
+                name.to_string(),
+                label.clone(),
+                format!("{:.3}", s.energy_j),
+                format!("{:.3}", s.power_gain),
+                format!("{:.2}", s.violation_rate * 100.0),
+                format!("{wall_ms:.2}"),
+            ]);
+            runs.push(Json::obj(vec![
+                ("path", Json::Str("virtual".into())),
+                ("scenario", Json::Str(name.to_string())),
+                ("predictor", Json::Str(label)),
+                ("epochs", Json::Num(spec.epochs as f64)),
+                ("seed", Json::Num(spec.seed as f64)),
+                ("accepted", Json::Num(out.accepted as f64)),
+                ("completed", Json::Num(s.completed as f64)),
+                ("energy_j", Json::Num(s.energy_j)),
+                ("power_gain", Json::Num(s.power_gain)),
+                ("violation_rate", Json::Num(s.violation_rate)),
+                ("wall_ms", Json::Num(wall_ms)),
+            ]));
+        }
+    }
+    print!("{}", table(rows));
+}

@@ -96,6 +96,17 @@ impl SimConfig {
             if let Some(x) = f("pg_residual") {
                 self.platform.pg_residual = x;
             }
+            if let Some(x) = p.get("predictor").and_then(Json::as_str) {
+                self.platform.predictor = crate::markov::PredictorKind::by_name(x)?;
+            }
+            if let Some(x) = u("predictor_period") {
+                self.platform.predictor_period = x;
+            }
+            // `qos_target: null` (or a negative number) disables the
+            // adaptive guardband; a fraction in (0, 1) enables it.
+            if let Some(q) = p.get("qos_target") {
+                self.platform.qos_target = q.as_f64().filter(|x| *x >= 0.0);
+            }
         }
         if let Some(w) = v.get("workload") {
             let f = |k: &str| w.get(k).and_then(Json::as_f64);
@@ -132,6 +143,14 @@ impl SimConfig {
         if !(0.0..1.0).contains(&self.platform.margin_t) {
             return Err("margin_t must be in [0, 1)".into());
         }
+        if let Some(q) = self.platform.qos_target {
+            if !(0.0..1.0).contains(&q) {
+                return Err("qos_target must be a violation-rate fraction in [0, 1)".into());
+            }
+        }
+        if self.platform.predictor_period == 0 {
+            return Err("predictor_period must be >= 1".into());
+        }
         if !(0.5..1.0).contains(&self.workload.hurst) {
             return Err("hurst must be in (0.5, 1)".into());
         }
@@ -157,6 +176,18 @@ impl SimConfig {
                     ("dual_pll", Json::Bool(self.platform.dual_pll)),
                     ("pll_lock_us", Json::Num(self.platform.pll_lock_us)),
                     ("pg_residual", Json::Num(self.platform.pg_residual)),
+                    (
+                        "predictor",
+                        Json::Str(self.platform.predictor.name().to_string()),
+                    ),
+                    (
+                        "predictor_period",
+                        Json::Num(self.platform.predictor_period as f64),
+                    ),
+                    (
+                        "qos_target",
+                        self.platform.qos_target.map(Json::Num).unwrap_or(Json::Null),
+                    ),
                 ]),
             ),
             (
@@ -189,12 +220,22 @@ mod tests {
         c.benchmark = "stripes".into();
         c.platform.n_fpgas = 8;
         c.workload.mean_load = 0.3;
+        c.platform.predictor = crate::markov::PredictorKind::Ensemble;
+        c.platform.qos_target = Some(0.02);
         let j = c.to_json();
         let mut d = SimConfig::default();
         d.apply_json(&j).unwrap();
         assert_eq!(d.benchmark, "stripes");
         assert_eq!(d.platform.n_fpgas, 8);
         assert!((d.workload.mean_load - 0.3).abs() < 1e-12);
+        assert_eq!(d.platform.predictor, crate::markov::PredictorKind::Ensemble);
+        assert_eq!(d.platform.qos_target, Some(0.02));
+        // The default (qos_target absent/null) round-trips to None.
+        let c = SimConfig::default();
+        let mut d = SimConfig::default();
+        d.platform.qos_target = Some(0.5);
+        d.apply_json(&c.to_json()).unwrap();
+        assert_eq!(d.platform.qos_target, None, "null disables the guardband");
     }
 
     #[test]
@@ -220,6 +261,12 @@ mod tests {
         assert!(c.validate().is_err());
         let mut c = SimConfig::default();
         c.workload.hurst = 1.2;
+        assert!(c.validate().is_err());
+        let mut c = SimConfig::default();
+        c.platform.qos_target = Some(1.5);
+        assert!(c.validate().is_err(), "qos_target must be a fraction");
+        let mut c = SimConfig::default();
+        c.platform.predictor_period = 0;
         assert!(c.validate().is_err());
     }
 }

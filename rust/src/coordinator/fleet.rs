@@ -47,8 +47,10 @@ use super::backend::InferenceBackend;
 use super::dispatch::{DispatchPolicy, Dispatcher};
 use super::shard::ShardQueue;
 use super::{Completion, EpochRecord, Request, SubmitError};
-use crate::markov::{MarkovPredictor, Predictor};
+use crate::markov::guardband::{ladder_with, level_for};
+use crate::markov::{Guardband, GuardbandConfig, Predictor, PredictorKind};
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
+use crate::workload::bin_of_load;
 use crate::platform::{build_platform, PlatformConfig, Policy};
 use crate::power::DesignPower;
 use crate::runtime::{Engine, OpQuery, VoltageSelectorClient};
@@ -103,6 +105,17 @@ pub struct FleetServingConfig {
     pub capacity_policy: CapacityPolicy,
     /// Residual power fraction (of nominal) drawn by a gated instance.
     pub pg_residual: f64,
+    /// Workload predictor driving every group's CC (DESIGN.md S7):
+    /// `Ensemble` runs all predictors shadow-mode per group and switches
+    /// the active one with hysteresis.
+    pub predictor: PredictorKind,
+    /// Epochs per cycle assumed by the periodic predictor member.
+    pub predictor_period: usize,
+    /// `Some(target)` enables the adaptive QoS-feedback guardband
+    /// (DESIGN.md S7.1): the margin shrinks while the observed per-tenant
+    /// violation rate stays under `target` and boosts immediately on an
+    /// under-prediction. `None` keeps the static `margin_t`.
+    pub qos_target: Option<f64>,
     /// Time source for every wait/sleep/timestamp (DESIGN.md S18):
     /// `clock::wall()` for live serving, a
     /// [`VirtualClock`](crate::clock::VirtualClock) for deterministic
@@ -132,6 +145,9 @@ impl Default for FleetServingConfig {
             steal: true,
             capacity_policy: CapacityPolicy::Hybrid,
             pg_residual: 0.02,
+            predictor: PredictorKind::Markov,
+            predictor_period: 96,
+            qos_target: None,
             clock: clock::wall(),
         }
     }
@@ -152,6 +168,11 @@ pub(super) struct GroupShared {
     vcore_mv: AtomicU64,
     vbram_mv: AtomicU64,
     active_now: AtomicU64,
+    /// Currently applied throughput margin (f64 bits).
+    margin_now: AtomicU64,
+    /// Index of the active prediction source in
+    /// [`crate::markov::PREDICTOR_NAMES`].
+    predictor_now: AtomicU64,
     arrivals_this_epoch: AtomicU64,
     /// Requests successfully placed on some shard. Shutdown-drain
     /// invariant: workers may exit only once
@@ -264,6 +285,12 @@ pub struct GroupServingStats {
     pub vbram_now: f64,
     /// Instances currently active (not gated by the elastic manager).
     pub active_now: usize,
+    /// Throughput margin the CC currently applies (static `margin_t` or
+    /// the adaptive guardband's ladder level).
+    pub margin_now: f64,
+    /// Prediction source currently active (the ensemble reports its
+    /// member).
+    pub predictor_now: &'static str,
     /// Requests currently queued across the group's shards.
     pub queue_depth: usize,
 }
@@ -391,6 +418,10 @@ impl FleetServing {
                 vcore_mv: AtomicU64::new(800),
                 vbram_mv: AtomicU64::new(950),
                 active_now: AtomicU64::new(g.n_instances as u64),
+                margin_now: AtomicU64::new(cfg.margin_t.to_bits()),
+                predictor_now: AtomicU64::new(PredictorKind::index_of_name(
+                    cfg.predictor.name(),
+                ) as u64),
                 arrivals_this_epoch: AtomicU64::new(0),
                 admitted: Counter::default(),
                 completed: Counter::default(),
@@ -513,6 +544,7 @@ impl FleetServing {
             let cfg2 = cfg.clone();
             let dir = artifacts_dir.clone();
             let stop = shutdown.clone();
+            let registry2 = registry.clone();
             let cc_actor = cfg.clock.register_actor("cc");
             std::thread::spawn(move || -> Vec<Vec<EpochRecord>> {
                 let _actor = ActorScope::attach(&cfg2.clock, cc_actor);
@@ -524,50 +556,94 @@ impl FleetServing {
                 struct GroupCc {
                     design: DesignPower,
                     optimizer: Optimizer,
-                    elastic: ElasticLut,
-                    predictor: MarkovPredictor,
+                    /// Margin levels the elastic LUTs were built for
+                    /// (index-aligned with `elastics`): the single static
+                    /// `margin_t`, or the full ladder under the adaptive
+                    /// guardband.
+                    margins: Vec<f64>,
+                    elastics: Vec<ElasticLut>,
+                    predictor: Box<dyn Predictor>,
+                    guardband: Option<Guardband>,
+                    /// Forecast made last epoch for the epoch now ending.
+                    last_predicted: Option<f64>,
                     backlog: f64,
                     cap: f64,
+                    margin_gauge: std::sync::Arc<Gauge>,
+                    predictor_gauge: std::sync::Arc<Gauge>,
                     // Operating point that served the epoch now ending
                     // (published at the END of the previous iteration).
                     served_fr: f64,
                     served_vcore: f64,
                     served_vbram: f64,
                     served_active: usize,
+                    served_margin: f64,
+                    served_predictor: &'static str,
                 }
                 let mut ccs: Vec<GroupCc> = built
                     .into_iter()
                     .zip(&groups)
                     .map(|((design, optimizer), g)| {
-                        let elastic = ElasticLut::build(
-                            &optimizer,
-                            &ElasticConfig {
-                                m_bins: cfg2.m_bins,
-                                margin_t: cfg2.margin_t,
-                                mode: cfg2.mode,
-                                n_instances: g.n_instances,
-                                residual: cfg2.pg_residual,
-                                policy: cfg2.capacity_policy,
-                                latency_cap_sw: f64::INFINITY,
-                            },
-                        );
+                        // Static margin: one LUT level (the original
+                        // behavior). Adaptive: the whole margin ladder —
+                        // plus margin_t when it is not a ladder level, so
+                        // the pareto cap is exactly representable — is
+                        // pre-built so the per-epoch decision stays a
+                        // table lookup (paper §V).
+                        let margins: Vec<f64> = match cfg2.qos_target {
+                            None => vec![cfg2.margin_t],
+                            Some(_) => ladder_with(cfg2.margin_t),
+                        };
+                        let elastics: Vec<ElasticLut> = margins
+                            .iter()
+                            .map(|&t| {
+                                ElasticLut::build(
+                                    &optimizer,
+                                    &ElasticConfig {
+                                        m_bins: cfg2.m_bins,
+                                        margin_t: t,
+                                        mode: cfg2.mode,
+                                        n_instances: g.n_instances,
+                                        residual: cfg2.pg_residual,
+                                        policy: cfg2.capacity_policy,
+                                        latency_cap_sw: f64::INFINITY,
+                                    },
+                                )
+                            })
+                            .collect();
                         let cap = g.n_instances as f64
                             * (F_NOM_HZ / cfg2.cycles_per_batch)
                             * g.batch as f64
                             * cfg2.epoch.as_secs_f64();
                         let served_vcore = design.chars.logic.v_nom;
                         let served_vbram = design.chars.bram.v_nom;
+                        let predictor = cfg2.predictor.build(
+                            cfg2.m_bins,
+                            cfg2.warmup_epochs,
+                            cfg2.predictor_period,
+                        );
+                        let served_predictor = predictor.active_name();
                         GroupCc {
                             design,
                             optimizer,
-                            elastic,
-                            predictor: MarkovPredictor::new(cfg2.m_bins, cfg2.warmup_epochs),
+                            margins,
+                            elastics,
+                            predictor,
+                            guardband: cfg2.qos_target.map(|target| {
+                                Guardband::new(GuardbandConfig::new(cfg2.margin_t, target))
+                            }),
+                            last_predicted: None,
                             backlog: 0.0,
                             cap,
+                            margin_gauge: registry2
+                                .gauge(&format!("{}.margin_now", g.name)),
+                            predictor_gauge: registry2
+                                .gauge(&format!("{}.predictor_now", g.name)),
                             served_fr: 1.0,
                             served_vcore,
                             served_vbram,
                             served_active: g.n_instances,
+                            served_margin: cfg2.margin_t,
+                            served_predictor,
                         }
                     })
                     .collect();
@@ -581,12 +657,55 @@ impl FleetServing {
                         let arrivals =
                             g.arrivals_this_epoch.swap(0, Ordering::Relaxed) as f64;
                         let load = (arrivals / cc.cap).min(1.0);
+
+                        // ---- per-tenant QoS accounting ------------------
+                        // Demand is judged against the capacity that
+                        // actually served this epoch — active instances ×
+                        // their frequency — not the one about to be
+                        // published.
+                        let served_cap = cc.served_fr * cc.served_active as f64
+                            / g.n_instances as f64;
+                        let demand = load + cc.backlog;
+                        let delivered = demand.min(served_cap);
+                        cc.backlog = (demand - delivered).min(1.0);
+                        let violated = demand - delivered > 1e-9;
+                        if violated {
+                            g.violations.inc();
+                        }
+
+                        // ---- predict + adaptive guardband ---------------
+                        // Under-prediction is judged at bin granularity
+                        // against the forecast made last epoch.
+                        let under_predicted = cc
+                            .last_predicted
+                            .map(|p| {
+                                bin_of_load(cfg2.m_bins, p)
+                                    < bin_of_load(cfg2.m_bins, load)
+                            })
+                            .unwrap_or(false);
                         cc.predictor.observe(load);
+                        if let Some(gb) = &mut cc.guardband {
+                            // The paper's "adjustment to the workload":
+                            // an under-prediction or violation boosts the
+                            // margin — and via the LUT ladder the
+                            // frequency published below, within the LUT's
+                            // slack — while clean epochs decay it.
+                            gb.observe(violated, under_predicted);
+                        }
                         let predicted = cc.predictor.predict();
+                        cc.last_predicted = Some(predicted);
+                        let margin_now = cc
+                            .guardband
+                            .as_ref()
+                            .map(|gb| gb.margin())
+                            .unwrap_or(cfg2.margin_t);
+                        let level = level_for(&cc.margins, margin_now);
+                        let margin_applied = cc.margins[level];
 
                         // Elastic decision: minimum-power (n_active, V, f)
-                        // for the predicted bin (DESIGN.md S6.1).
-                        let entry = *cc.elastic.entry_for_load(predicted);
+                        // for the predicted bin at the applied margin
+                        // level (DESIGN.md S6.1 + S7.1).
+                        let entry = *cc.elastics[level].entry_for_load(predicted);
                         let mut choice = entry.point;
                         // Refine through the AOT'd Voltage Selector when
                         // available; keep the native point on any error.
@@ -612,20 +731,6 @@ impl FleetServing {
                                     }
                                 }
                             }
-                        }
-
-                        // ---- per-tenant QoS accounting ------------------
-                        // Demand is judged against the capacity that
-                        // actually served this epoch — active instances ×
-                        // their frequency — not the one about to be
-                        // published.
-                        let served_cap = cc.served_fr * cc.served_active as f64
-                            / g.n_instances as f64;
-                        let demand = load + cc.backlog;
-                        let delivered = demand.min(served_cap);
-                        cc.backlog = (demand - delivered).min(1.0);
-                        if demand - delivered > 1e-9 {
-                            g.violations.inc();
                         }
 
                         // ---- energy integration + trace row -------------
@@ -656,6 +761,8 @@ impl FleetServing {
                             vbram: cc.served_vbram,
                             power_w: p,
                             active: cc.served_active,
+                            predictor: cc.served_predictor,
+                            margin: cc.served_margin,
                         });
 
                         // ---- publish the next operating point -----------
@@ -667,6 +774,16 @@ impl FleetServing {
                             .store(volts_to_mv(choice.vbram), Ordering::Relaxed);
                         g.active_now
                             .store(entry.n_active as u64, Ordering::Relaxed);
+                        let active_predictor = cc.predictor.active_name();
+                        g.margin_now
+                            .store(margin_applied.to_bits(), Ordering::Relaxed);
+                        g.predictor_now.store(
+                            PredictorKind::index_of_name(active_predictor) as u64,
+                            Ordering::Relaxed,
+                        );
+                        cc.margin_gauge.set(margin_applied);
+                        cc.predictor_gauge
+                            .set(PredictorKind::index_of_name(active_predictor) as f64);
 
                         // ---- gate / ungate + drain ----------------------
                         // Shards [n_active..) are gated; anything still
@@ -703,6 +820,8 @@ impl FleetServing {
                         cc.served_vcore = choice.vcore;
                         cc.served_vbram = choice.vbram;
                         cc.served_active = entry.n_active;
+                        cc.served_margin = margin_applied;
+                        cc.served_predictor = active_predictor;
                     }
                     epoch += 1;
                 }
@@ -871,6 +990,14 @@ impl FleetServing {
             vcore_now: g.vcore_mv.load(Ordering::Relaxed) as f64 / 1000.0,
             vbram_now: g.vbram_mv.load(Ordering::Relaxed) as f64 / 1000.0,
             active_now: g.active_now.load(Ordering::Relaxed) as usize,
+            margin_now: f64::from_bits(g.margin_now.load(Ordering::Relaxed)),
+            predictor_now: {
+                let idx = g.predictor_now.load(Ordering::Relaxed) as usize;
+                crate::markov::PREDICTOR_NAMES
+                    .get(idx)
+                    .copied()
+                    .unwrap_or("markov")
+            },
             queue_depth: g.shards.iter().map(|s| s.len()).sum(),
         }
     }
@@ -1004,8 +1131,8 @@ pub fn drive_scenario(
 /// group, fleet totals last) for `report::table`.
 pub fn fleet_report_rows(stats: &FleetServingStats) -> Vec<Vec<String>> {
     let mut rows = vec![crate::report::row([
-        "group", "share", "backend", "active", "done", "rejected", "failed", "stolen",
-        "p50_ms", "p99_ms", "gain", "violations%",
+        "group", "share", "backend", "active", "pred", "margin", "done", "rejected",
+        "failed", "stolen", "p50_ms", "p99_ms", "gain", "violations%",
     ])];
     for g in &stats.per_group {
         rows.push(vec![
@@ -1013,6 +1140,8 @@ pub fn fleet_report_rows(stats: &FleetServingStats) -> Vec<Vec<String>> {
             format!("{:.2}", g.share),
             g.backend.to_string(),
             format!("{}/{}", g.active_now, g.n_instances),
+            g.predictor_now.to_string(),
+            format!("{:.2}", g.margin_now),
             g.completed.to_string(),
             g.rejected.to_string(),
             g.failed.to_string(),
@@ -1026,6 +1155,8 @@ pub fn fleet_report_rows(stats: &FleetServingStats) -> Vec<Vec<String>> {
     rows.push(vec![
         "fleet".into(),
         "1.00".into(),
+        "-".into(),
+        "-".into(),
         "-".into(),
         "-".into(),
         stats.completed.to_string(),
@@ -1190,6 +1321,18 @@ mod tests {
         );
         assert!((g.freq_ratio_now - want.freq_ratio).abs() < 1e-12);
         assert_eq!(g.active_now, want.n_active);
+        // Static configuration: the new prediction surface reports the
+        // fixed margin and the Markov predictor, in stats and gauges.
+        assert!((g.margin_now - 0.05).abs() < 1e-12, "margin {}", g.margin_now);
+        assert_eq!(g.predictor_now, "markov");
+        assert!(
+            (fleet.registry().gauge("tabla.margin_now").get() - 0.05).abs() < 1e-12,
+            "margin gauge must be published"
+        );
+        assert_eq!(
+            fleet.registry().gauge("tabla.predictor_now").get(),
+            crate::markov::PredictorKind::index_of_name("markov") as f64
+        );
         fleet.shutdown().unwrap();
     }
 

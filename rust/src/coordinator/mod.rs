@@ -71,6 +71,7 @@ use std::time::Duration;
 use anyhow::Result;
 
 use crate::clock::{self, Clock, Tick};
+use crate::markov::PredictorKind;
 use crate::power::DesignPower;
 use crate::vscale::{CapacityPolicy, Mode, Optimizer};
 
@@ -110,6 +111,13 @@ pub struct ServingConfig {
     pub capacity_policy: CapacityPolicy,
     /// Residual power fraction (of nominal) drawn by a gated instance.
     pub pg_residual: f64,
+    /// Workload predictor driving the CC (DESIGN.md S7).
+    pub predictor: PredictorKind,
+    /// Epochs per cycle assumed by the periodic predictor member.
+    pub predictor_period: usize,
+    /// `Some(target)` enables the adaptive QoS-feedback guardband
+    /// (DESIGN.md S7.1); `None` keeps the static `margin_t`.
+    pub qos_target: Option<f64>,
     /// Time source for every wait/sleep/timestamp (DESIGN.md S18):
     /// `clock::wall()` for live serving, a `VirtualClock` for
     /// deterministic simulation.
@@ -134,6 +142,9 @@ impl Default for ServingConfig {
             steal: true,
             capacity_policy: CapacityPolicy::Hybrid,
             pg_residual: 0.02,
+            predictor: PredictorKind::Markov,
+            predictor_period: 96,
+            qos_target: None,
             clock: clock::wall(),
         }
     }
@@ -235,6 +246,12 @@ pub struct ServingStats {
     pub vbram_now: f64,
     /// Instances currently active (not gated by the elastic manager).
     pub active_now: usize,
+    /// Throughput margin currently applied by the CC (static `margin_t`
+    /// or the adaptive guardband's ladder level).
+    pub margin_now: f64,
+    /// Prediction source currently active (the ensemble reports its
+    /// member).
+    pub predictor_now: &'static str,
 }
 
 /// Per-epoch CC trace row.
@@ -256,6 +273,12 @@ pub struct EpochRecord {
     pub power_w: f64,
     /// Instances that served this epoch (the rest were gated).
     pub active: usize,
+    /// Prediction source behind the decision that served this epoch (the
+    /// ensemble reports its active member).
+    pub predictor: &'static str,
+    /// Throughput margin (LUT ladder level) behind the decision that
+    /// served this epoch.
+    pub margin: f64,
 }
 
 /// Single-tenant serving coordinator: a one-group [`FleetServing`].
@@ -298,6 +321,9 @@ impl Coordinator {
             steal: cfg.steal,
             capacity_policy: cfg.capacity_policy,
             pg_residual: cfg.pg_residual,
+            predictor: cfg.predictor,
+            predictor_period: cfg.predictor_period,
+            qos_target: cfg.qos_target,
             clock: cfg.clock.clone(),
         };
         let inner = FleetServing::start_with(fleet_cfg, artifacts_dir, vec![(design, optimizer)])?;
@@ -342,6 +368,8 @@ impl Coordinator {
             vcore_now: g.vcore_now,
             vbram_now: g.vbram_now,
             active_now: g.active_now,
+            margin_now: g.margin_now,
+            predictor_now: g.predictor_now,
         }
     }
 

@@ -13,7 +13,7 @@ use wavescale::arch::{BenchmarkSpec, DeviceFamily, TABLE1};
 use wavescale::chars::{CharLibrary, ResourceClass};
 use wavescale::cli::Args;
 use wavescale::config::{policy_by_name, SimConfig};
-use wavescale::markov::{MarkovPredictor, Predictor};
+use wavescale::markov::Predictor;
 use wavescale::netlist::gen::{generate, GenConfig};
 use wavescale::platform::{build_platform, Policy};
 use wavescale::power::{DesignPower, PowerParams};
@@ -36,8 +36,12 @@ SUBCOMMANDS:
   simulate   --benchmark <name>
              --policy <prop|core-only|bram-only|pg|nominal|oracle-prop|hybrid>
              [--steps N] [--mean-load X] [--n-fpgas N] [--seed N]
+             [--predictor ensemble|markov|periodic|ewma|last-value]
+             [--qos-target X]  (enables the adaptive guardband at a
+             violation-rate target; default keeps the static t% margin)
              [--config file.json] [--csv out.csv]
   predict    [--steps N] [--bins M] [--kind bursty|periodic|poisson|square]
+             [--predictor name]  (default: side-by-side of all predictors)
   serve      --artifacts <dir> [--variant name] [--instances N]
              [--epochs N] [--epoch-ms N] [--rps N]
   artifacts  --artifacts <dir>      compile + golden-check all artifacts
@@ -48,10 +52,11 @@ SUBCOMMANDS:
   serve-fleet --scenario <name> [--instances N] [--epochs N]
              [--epoch-ms N] [--rps N] [--artifacts dir]
              [--capacity dvfs|pg|hybrid] [--virtual-time] [--seed N]
+             [--predictor ensemble|markov|...] [--qos-target X]
              (live elastic coordinator; --virtual-time replays the
              scenario deterministically in simulated time — thousands of
              epochs per wall-second, bit-identical per seed)
-  experiment <fig1|fig2|fig3|fig4|fig5|fig6|fig8|table1|fig10|fig11|fig12|table2|pll|hybrid>
+  experiment <fig1|fig2|fig3|fig4|fig5|fig6|fig8|table1|fig10|fig11|fig12|table2|pll|hybrid|predictor>
              re-run a paper experiment (same code as `cargo bench`)
 ";
 
@@ -183,7 +188,7 @@ fn lut_cmd(args: &Args) -> Result<(), String> {
 fn simulate(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "benchmark", "policy", "steps", "mean-load", "n-fpgas", "seed", "config", "csv",
-        "trace",
+        "trace", "predictor", "qos-target",
     ])?;
     let mut cfg = SimConfig::default();
     if let Some(path) = args.flag("config") {
@@ -208,6 +213,12 @@ fn simulate(args: &Args) -> Result<(), String> {
     }
     if let Some(s) = args.flag_usize("seed")? {
         cfg.workload.seed = s as u64;
+    }
+    if let Some(p) = args.flag("predictor") {
+        cfg.platform.predictor = wavescale::markov::PredictorKind::by_name(p)?;
+    }
+    if let Some(q) = args.flag_f64("qos-target")? {
+        cfg.platform.qos_target = Some(q);
     }
     cfg.validate()?;
 
@@ -237,14 +248,16 @@ fn simulate(args: &Args) -> Result<(), String> {
     );
     if let Some(csv_path) = args.flag("csv") {
         let mut rows = vec![wavescale::report::row([
-            "step", "load", "predicted", "freq_ratio", "vcore", "vbram", "active",
-            "power_w", "qos_violation",
+            "step", "load", "predicted", "predictor", "margin", "freq_ratio", "vcore",
+            "vbram", "active", "power_w", "qos_violation",
         ])];
         for r in &report.records {
             rows.push(vec![
                 r.step.to_string(),
                 format!("{:.4}", r.load),
                 format!("{:.4}", r.predicted_load),
+                r.predictor.to_string(),
+                format!("{:.3}", r.margin),
                 format!("{:.4}", r.freq_ratio),
                 format!("{:.3}", r.vcore),
                 format!("{:.3}", r.vbram),
@@ -261,41 +274,60 @@ fn simulate(args: &Args) -> Result<(), String> {
 }
 
 fn predict(args: &Args) -> Result<(), String> {
-    args.check_known(&["steps", "bins", "kind", "seed"])?;
+    args.check_known(&["steps", "bins", "kind", "seed", "predictor"])?;
     let steps = args.flag_usize("steps")?.unwrap_or(2000);
     let bins = args.flag_usize("bins")?.unwrap_or(10);
     let seed = args.flag_usize("seed")?.unwrap_or(7) as u64;
     let kind = args.flag_or("kind", "bursty");
-    let trace = match kind {
-        "bursty" => workload::bursty(&workload::BurstyConfig { steps, seed, ..Default::default() }),
-        "poisson" => workload::poisson(steps, 0.4, 1000.0, seed),
-        "periodic" => workload::periodic(steps, 96, 0.15, 0.85, 0.03, seed),
-        "square" => workload::square(steps, 50, 0.2, 0.8),
+    // The cyclic generators' period doubles as the periodic predictor's
+    // training cycle — a mismatched period would misreport it as poor on
+    // exactly the workloads it should win.
+    let (trace, period) = match kind {
+        "bursty" => (
+            workload::bursty(&workload::BurstyConfig { steps, seed, ..Default::default() }),
+            96,
+        ),
+        "poisson" => (workload::poisson(steps, 0.4, 1000.0, seed), 96),
+        "periodic" => (workload::periodic(steps, 96, 0.15, 0.85, 0.03, seed), 96),
+        "square" => (workload::square(steps, 50, 0.2, 0.8), 50),
         other => return Err(format!("unknown workload kind {other}")),
     };
-    let mut p = MarkovPredictor::new(bins, 20);
-    let mut covered = 0usize;
-    let mut exact = 0usize;
-    let mut total = 0usize;
-    for (i, &load) in trace.loads.iter().enumerate() {
-        if i > 20 {
-            total += 1;
-            let pred = p.predict();
-            if p.bin_of(pred) == p.bin_of(load) {
-                exact += 1;
-            }
-            if pred * 1.05 >= load {
-                covered += 1;
-            }
-        }
-        p.observe(load);
-    }
+    let kinds: Vec<wavescale::markov::PredictorKind> = match args.flag("predictor") {
+        Some(name) => vec![wavescale::markov::PredictorKind::by_name(name)?],
+        None => wavescale::markov::PredictorKind::ALL.to_vec(),
+    };
     println!("workload {} ({} steps, mean {:.3})", trace.label, trace.len(), trace.mean());
-    println!(
-        "  markov({bins} bins): exact-bin {:.1}%, coverage(with 5% margin) {:.1}%",
-        100.0 * exact as f64 / total as f64,
-        100.0 * covered as f64 / total as f64
-    );
+    let mut rows = vec![wavescale::report::row([
+        "predictor", "exact-bin%", "coverage%", "under%", "active-at-end",
+    ])];
+    for k in kinds {
+        let mut p = k.build(bins, 20, period);
+        let (mut covered, mut exact, mut under, mut total) = (0usize, 0usize, 0usize, 0usize);
+        for (i, &load) in trace.loads.iter().enumerate() {
+            if i > 20 {
+                total += 1;
+                let pred = p.predict();
+                if workload::bin_of_load(bins, pred) == workload::bin_of_load(bins, load) {
+                    exact += 1;
+                }
+                if workload::bin_of_load(bins, pred) < workload::bin_of_load(bins, load) {
+                    under += 1;
+                }
+                if pred * 1.05 >= load {
+                    covered += 1;
+                }
+            }
+            p.observe(load);
+        }
+        rows.push(vec![
+            k.name().to_string(),
+            format!("{:.1}", 100.0 * exact as f64 / total.max(1) as f64),
+            format!("{:.1}", 100.0 * covered as f64 / total.max(1) as f64),
+            format!("{:.1}", 100.0 * under as f64 / total.max(1) as f64),
+            p.active_name().to_string(),
+        ]);
+    }
+    print!("{}", table(&rows));
     Ok(())
 }
 
@@ -552,7 +584,7 @@ fn print_capacity_comparison(
 fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "scenario", "instances", "epochs", "epoch-ms", "rps", "mode", "artifacts", "seed",
-        "capacity", "virtual-time",
+        "capacity", "virtual-time", "predictor", "qos-target",
     ])?;
     let name = args.flag_or("scenario", "mixed-tenant");
     let n_instances = args.flag_usize("instances")?.unwrap_or(2);
@@ -561,6 +593,14 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
     let rps = args.flag_f64("rps")?.unwrap_or(3000.0);
     let mode = wavescale::config::mode_by_name(args.flag_or("mode", "prop"))?;
     let capacity = wavescale::vscale::CapacityPolicy::by_name(args.flag_or("capacity", "hybrid"))?;
+    let predictor =
+        wavescale::markov::PredictorKind::by_name(args.flag_or("predictor", "markov"))?;
+    let qos_target = args.flag_f64("qos-target")?;
+    if let Some(q) = qos_target {
+        if !(0.0..1.0).contains(&q) {
+            return Err("--qos-target must be a violation-rate fraction in [0, 1)".into());
+        }
+    }
     let seed = args.flag_usize("seed")?.unwrap_or(7) as u64;
     let virtual_time = args.switch("virtual-time");
     // Bit-identical-per-seed replay must not depend on which artifacts are
@@ -601,6 +641,9 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
         epoch: std::time::Duration::from_millis(epoch_ms as u64),
         mode,
         capacity_policy: capacity,
+        predictor,
+        predictor_period: wavescale::workload::Scenario::day_period(epochs),
+        qos_target,
         // The PJRT selector round-trip is skipped in virtual time so the
         // trace cannot depend on which artifacts are installed.
         selector_via_pjrt: !virtual_time,
@@ -611,9 +654,14 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
         .map_err(|e| e.to_string())?;
     println!(
         "serving scenario {name}: {} groups x {n_instances} instances, {epochs} epochs, \
-         capacity policy {}{}",
+         capacity policy {}, predictor {}{}{}",
         scenario.tenants.len(),
         capacity.name(),
+        predictor.name(),
+        match qos_target {
+            Some(q) => format!(" (adaptive guardband, QoS target {:.1}%)", q * 100.0),
+            None => String::new(),
+        },
         if virtual_time { ", virtual time" } else { "" }
     );
 
@@ -667,6 +715,7 @@ fn experiment_cmd(args: &Args) -> Result<(), String> {
         "table2" => "table2_summary",
         "pll" => "pll_overhead",
         "hybrid" => "hybrid_capacity",
+        "predictor" => "perf_predictor",
         other => return Err(format!("unknown experiment {other}")),
     };
     // The experiments live as bench binaries so `cargo bench` regenerates

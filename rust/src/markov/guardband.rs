@@ -1,0 +1,315 @@
+//! Adaptive QoS-feedback guardband (DESIGN.md S7.1): replaces the static
+//! t% throughput margin with a closed loop on the observed per-tenant
+//! violation rate — the paper's "adjustment to the workload" (§IV.A).
+//!
+//! Control law per epoch:
+//! * **decay** — once a *full* rolling window shows the violation rate at
+//!   or under the QoS target, clean epochs multiplicatively shrink the
+//!   margin toward `margin_min`; while the window is short or the rate
+//!   exceeds the target, the floor is the static margin, so the adaptive
+//!   path never undercuts the baseline until the workload has earned it;
+//! * **boost** — an under-prediction or a capacity violation immediately
+//!   raises the margin back up (additive step, clamped at `margin_max`),
+//!   and with it — via the margin LUT ladder, within the LUT's own slack
+//!   — the frequency published for the next epoch.
+//!
+//! `margin_max` defaults to the static margin: the controller's default
+//! contract is *pareto-no-worse* than the fixed t% baseline — equal
+//! margin whenever QoS is at any risk, smaller margin (= less energy)
+//! only in provably quiet regimes. Deployments chasing a tighter QoS
+//! target than the static margin delivers can raise `margin_max` (the
+//! LUT ladder is pre-built up to 40%) and buy violations down with
+//! energy.
+
+use std::collections::VecDeque;
+
+/// The margin levels the platform pre-computes LUTs for (design-synthesis
+/// time, like every other LUT in the paper). Adaptive margins quantize
+/// *up* to the next ladder level, so the applied guardband is never
+/// smaller than requested. Sorted ascending; contains the default static
+/// margin (0.05) so a guardband pinned at its cap reproduces the static
+/// baseline exactly.
+pub const MARGIN_LADDER: [f64; 10] =
+    [0.0, 0.01, 0.02, 0.03, 0.05, 0.08, 0.12, 0.20, 0.30, 0.40];
+
+/// Index of the smallest level in `margins` (sorted ascending) that is
+/// `>= margin` — last level when the request exceeds them all. Platforms
+/// call this against their *own* level list, which is [`MARGIN_LADDER`]
+/// plus the configured static margin when that is not already a ladder
+/// level (so a non-ladder `margin_t` stays exactly representable and the
+/// pareto-no-worse cap holds for any configuration).
+pub fn level_for(margins: &[f64], margin: f64) -> usize {
+    margins
+        .iter()
+        .position(|&m| m >= margin - 1e-12)
+        .unwrap_or(margins.len().saturating_sub(1))
+}
+
+/// [`level_for`] over the default [`MARGIN_LADDER`].
+pub fn ladder_level(margin: f64) -> usize {
+    level_for(&MARGIN_LADDER, margin)
+}
+
+/// The margin levels a platform should pre-build LUTs for: the default
+/// ladder, with `static_margin` spliced in when it is not already a
+/// level. Sorted ascending.
+pub fn ladder_with(static_margin: f64) -> Vec<f64> {
+    let mut margins = MARGIN_LADDER.to_vec();
+    if !margins.iter().any(|&m| (m - static_margin).abs() < 1e-12) {
+        margins.push(static_margin);
+        margins.sort_by(f64::total_cmp);
+    }
+    margins
+}
+
+/// Tuning of the [`Guardband`] control loop.
+#[derive(Clone, Copy, Debug)]
+pub struct GuardbandConfig {
+    /// Target per-tenant violation rate (fraction of epochs).
+    pub qos_target: f64,
+    /// Lowest margin the controller may reach with a clean full window.
+    pub margin_min: f64,
+    /// Hard upper bound on the margin. Defaults to the static margin
+    /// (pareto-no-worse contract); raise it to trade energy for QoS.
+    pub margin_max: f64,
+    /// Additive margin boost per under-prediction / violation epoch.
+    pub boost: f64,
+    /// Multiplicative decay per clean epoch (towards the active floor).
+    pub decay: f64,
+    /// Rolling window (epochs) the violation rate is measured over; the
+    /// margin may not decay below the static margin until the window has
+    /// filled once.
+    pub window: usize,
+    /// Floor used while QoS is unproven (short window) or at risk (rate
+    /// above target) — the static margin, so the adaptive path never
+    /// does worse than the baseline when it matters.
+    pub static_margin: f64,
+}
+
+impl GuardbandConfig {
+    /// Defaults around a static margin `t` and a violation-rate target.
+    pub fn new(static_margin: f64, qos_target: f64) -> Self {
+        GuardbandConfig {
+            qos_target,
+            margin_min: 0.0,
+            margin_max: static_margin,
+            boost: static_margin.max(0.01),
+            decay: 0.97,
+            window: 32,
+            static_margin,
+        }
+    }
+}
+
+/// Online margin controller fed one `(violated, under_predicted)`
+/// observation per epoch.
+#[derive(Clone, Debug)]
+pub struct Guardband {
+    cfg: GuardbandConfig,
+    margin: f64,
+    window: VecDeque<bool>,
+    violations_in_window: usize,
+    boosts: usize,
+}
+
+impl Guardband {
+    /// Start at the static margin: the controller must *earn* a smaller
+    /// guardband with a full clean violation window.
+    pub fn new(cfg: GuardbandConfig) -> Self {
+        let margin = cfg.static_margin.clamp(cfg.margin_min, cfg.margin_max);
+        Guardband { cfg, margin, window: VecDeque::new(), violations_in_window: 0, boosts: 0 }
+    }
+
+    /// The continuous margin the controller currently requests.
+    pub fn margin(&self) -> f64 {
+        self.margin
+    }
+
+    /// The ladder level actually applied for the current margin.
+    pub fn applied_margin(&self) -> f64 {
+        MARGIN_LADDER[ladder_level(self.margin)]
+    }
+
+    /// Rolling violation rate over the configured window (0 when empty).
+    pub fn violation_rate(&self) -> f64 {
+        if self.window.is_empty() {
+            return 0.0;
+        }
+        self.violations_in_window as f64 / self.window.len() as f64
+    }
+
+    /// Times the boost path has fired.
+    pub fn boost_count(&self) -> usize {
+        self.boosts
+    }
+
+    /// Feed one epoch's outcome and update the margin.
+    pub fn observe(&mut self, violated: bool, under_predicted: bool) {
+        self.window.push_back(violated);
+        if violated {
+            self.violations_in_window += 1;
+        }
+        while self.window.len() > self.cfg.window {
+            if self.window.pop_front() == Some(true) {
+                self.violations_in_window -= 1;
+            }
+        }
+        if under_predicted || violated {
+            // Immediate correction (paper §IV.A): the next epoch's
+            // published frequency rises with the margin, within the LUT's
+            // slack (clamped at margin_max / nominal frequency).
+            self.margin = (self.margin + self.cfg.boost).min(self.cfg.margin_max);
+            self.boosts += 1;
+        } else {
+            let proven = self.window.len() >= self.cfg.window
+                && self.violation_rate() <= self.cfg.qos_target;
+            let floor = if proven { self.cfg.margin_min } else { self.cfg.static_margin };
+            self.margin = (self.margin * self.cfg.decay)
+                .max(floor)
+                .min(self.cfg.margin_max);
+            // Multiplicative decay never reaches the floor exactly; snap
+            // once the gap is immaterial so "fully decayed" is a stable
+            // state (and ladder level 0 is actually reachable).
+            if self.margin - floor < 1e-3 {
+                self.margin = floor;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gb() -> Guardband {
+        Guardband::new(GuardbandConfig::new(0.05, 0.01))
+    }
+
+    #[test]
+    fn ladder_quantizes_up_and_contains_static_margin() {
+        assert_eq!(MARGIN_LADDER[ladder_level(0.0)], 0.0);
+        assert_eq!(MARGIN_LADDER[ladder_level(0.05)], 0.05, "static margin is a level");
+        assert_eq!(MARGIN_LADDER[ladder_level(0.051)], 0.08, "quantize up, never down");
+        assert_eq!(MARGIN_LADDER[ladder_level(0.019)], 0.02);
+        assert_eq!(MARGIN_LADDER[ladder_level(9.9)], 0.40, "clamped at the top level");
+        for w in MARGIN_LADDER.windows(2) {
+            assert!(w[0] < w[1], "ladder must be sorted ascending");
+        }
+    }
+
+    #[test]
+    fn holds_static_margin_until_a_full_clean_window_then_decays() {
+        let mut g = gb();
+        assert!((g.margin() - 0.05).abs() < 1e-12);
+        // Short window: even violation-free epochs may not undercut the
+        // static baseline yet.
+        for i in 0..31 {
+            g.observe(false, false);
+            assert!(
+                (g.margin() - 0.05).abs() < 1e-12,
+                "epoch {i}: margin {} moved before the window filled",
+                g.margin()
+            );
+        }
+        // Full clean window: decay toward margin_min, snapping to 0.
+        for _ in 0..300 {
+            g.observe(false, false);
+        }
+        assert_eq!(g.margin(), 0.0, "clean full window decays to min");
+        assert_eq!(g.applied_margin(), 0.0);
+        assert_eq!(g.boost_count(), 0);
+    }
+
+    #[test]
+    fn under_prediction_restores_the_margin_immediately() {
+        let mut g = gb();
+        for _ in 0..100 {
+            g.observe(false, false);
+        }
+        let before = g.margin();
+        assert!(before < 0.02, "decayed first: {before}");
+        g.observe(false, true);
+        assert!(
+            (g.margin() - 0.05).abs() < 1e-12,
+            "an under-prediction must boost straight back to the cap: {}",
+            g.margin()
+        );
+        assert_eq!(g.boost_count(), 1);
+        // A violation (even without a bin-level under-prediction) boosts
+        // too, from a decayed level.
+        let mut g = gb();
+        for _ in 0..100 {
+            g.observe(false, false);
+        }
+        g.observe(true, false);
+        assert!((g.margin() - 0.05).abs() < 1e-12);
+    }
+
+    #[test]
+    fn margin_never_exceeds_the_static_cap_by_default() {
+        // The pareto-no-worse contract: whatever happens, the default
+        // guardband never spends more margin (= energy) than the static
+        // baseline.
+        let mut g = gb();
+        for _ in 0..50 {
+            g.observe(true, true);
+        }
+        assert!((g.margin() - 0.05).abs() < 1e-12, "capped at static: {}", g.margin());
+    }
+
+    #[test]
+    fn raised_margin_max_buys_headroom_above_static() {
+        let cfg = GuardbandConfig { margin_max: 0.40, ..GuardbandConfig::new(0.05, 0.01) };
+        let mut g = Guardband::new(cfg);
+        for _ in 0..50 {
+            g.observe(true, true);
+        }
+        assert!((g.margin() - 0.40).abs() < 1e-12, "climbs to the raised cap");
+        assert_eq!(g.applied_margin(), 0.40);
+    }
+
+    #[test]
+    fn decay_floors_at_static_margin_while_qos_is_at_risk() {
+        let mut g = gb();
+        // A violation up front: the window holds it for 32 observations,
+        // so clean epochs may not undercut the static margin yet.
+        g.observe(true, true);
+        for _ in 0..30 {
+            g.observe(false, false);
+        }
+        assert!(g.violation_rate() > 0.01);
+        assert!((g.margin() - 0.05).abs() < 1e-9, "floored at static: {}", g.margin());
+        // Once the violation leaves the window the floor drops to min.
+        for _ in 0..60 {
+            g.observe(false, false);
+        }
+        assert!(g.violation_rate() <= 0.01);
+        assert!(g.margin() < 0.05, "decays once QoS is proven: {}", g.margin());
+    }
+
+    #[test]
+    fn non_ladder_static_margins_get_their_own_level() {
+        // A configured margin_t of e.g. 6% is not a default ladder level;
+        // quantizing it up to 8% would overspend the static baseline and
+        // break the pareto contract. ladder_with splices it in.
+        let margins = ladder_with(0.06);
+        assert_eq!(margins.len(), MARGIN_LADDER.len() + 1);
+        assert_eq!(margins[level_for(&margins, 0.06)], 0.06, "exact cap level");
+        assert_eq!(margins[level_for(&margins, 0.055)], 0.06, "quantize up to the cap");
+        // Ladder-level margins splice nothing.
+        assert_eq!(ladder_with(0.05).len(), MARGIN_LADDER.len());
+        // level_for on a single-level list always yields that level.
+        assert_eq!(level_for(&[0.07], 0.0), 0);
+        assert_eq!(level_for(&[0.07], 0.2), 0);
+    }
+
+    #[test]
+    fn rolling_window_is_bounded() {
+        let mut g = gb();
+        for i in 0..1000 {
+            g.observe(i % 3 == 0, false);
+        }
+        let r = g.violation_rate();
+        assert!((0.2..=0.5).contains(&r), "rate over the last 32 only: {r}");
+    }
+}

@@ -11,16 +11,111 @@
 //!
 //! `EwmaPredictor` and `LastValuePredictor` are baselines for the
 //! prediction-accuracy bench (Fig. 8).
+//!
+//! On top of the single predictors sit the adaptive pieces (DESIGN.md
+//! S7/S7.1): [`Ensemble`] runs every predictor shadow-mode and switches
+//! the active one per workload with hysteresis, and [`Guardband`] closes
+//! the loop from the observed violation rate back onto the throughput
+//! margin — the paper's "adjustment to the workload".
+
+pub mod ensemble;
+pub mod guardband;
+
+pub use ensemble::{Ensemble, EnsembleConfig};
+pub use guardband::{ladder_level, Guardband, GuardbandConfig, MARGIN_LADDER};
+
+use crate::workload::bin_of_load;
 
 /// Common interface: observe the load of the finished time step, then
 /// predict the next step's load (both normalized to peak, in [0, 1]).
-pub trait Predictor {
+/// `Send` so boxed predictors can live inside CC threads.
+pub trait Predictor: Send {
     /// Record the actual load of the just-finished step.
     fn observe(&mut self, load: f64);
     /// Predict the next step's load.
     fn predict(&self) -> f64;
     /// Short predictor name for reports/benches.
     fn name(&self) -> &'static str;
+    /// Name of the prediction source actually in use — for single
+    /// predictors this is [`Predictor::name`]; the [`Ensemble`] reports
+    /// its currently-active member.
+    fn active_name(&self) -> &'static str {
+        self.name()
+    }
+}
+
+/// Selectable predictor implementations (`--predictor` on the CLI).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PredictorKind {
+    /// The adaptive shadow-mode ensemble (DESIGN.md S7).
+    Ensemble,
+    /// The paper's M-bin discrete-time Markov chain.
+    Markov,
+    /// Per-phase running average over a known period.
+    Periodic,
+    /// Exponentially-weighted moving average baseline.
+    Ewma,
+    /// Naive last-value baseline.
+    LastValue,
+}
+
+/// Report names of every [`PredictorKind`] plus the ensemble's member
+/// names, in [`PredictorKind::ALL`] order — the index table behind the
+/// live `predictor_now` gauge.
+pub const PREDICTOR_NAMES: [&str; 5] = ["ensemble", "markov", "periodic", "ewma", "last-value"];
+
+impl PredictorKind {
+    /// Every kind, ensemble first.
+    pub const ALL: [PredictorKind; 5] = [
+        PredictorKind::Ensemble,
+        PredictorKind::Markov,
+        PredictorKind::Periodic,
+        PredictorKind::Ewma,
+        PredictorKind::LastValue,
+    ];
+
+    /// CLI/report name of the kind.
+    pub fn name(self) -> &'static str {
+        PREDICTOR_NAMES[self as usize]
+    }
+
+    /// Resolve a CLI name (`ensemble`, `markov`, `ewma`, ...).
+    pub fn by_name(name: &str) -> Result<PredictorKind, String> {
+        Ok(match name {
+            "ensemble" => PredictorKind::Ensemble,
+            "markov" => PredictorKind::Markov,
+            "periodic" => PredictorKind::Periodic,
+            "ewma" => PredictorKind::Ewma,
+            "last-value" | "last" => PredictorKind::LastValue,
+            other => {
+                return Err(format!(
+                    "unknown predictor {other} (known: {})",
+                    PREDICTOR_NAMES.join(", ")
+                ))
+            }
+        })
+    }
+
+    /// Index of a predictor *name* in [`PREDICTOR_NAMES`] (0 when the
+    /// name is unknown — names come from [`Predictor::active_name`], so
+    /// an unknown one would be a new member not yet registered here).
+    pub fn index_of_name(name: &str) -> usize {
+        PREDICTOR_NAMES.iter().position(|&n| n == name).unwrap_or(0)
+    }
+
+    /// Build the predictor: `m_bins` workload bins, `warmup` pure-training
+    /// steps, `period` steps/cycle for the periodic member.
+    pub fn build(self, m_bins: usize, warmup: usize, period: usize) -> Box<dyn Predictor> {
+        match self {
+            PredictorKind::Ensemble => {
+                Box::new(Ensemble::new(m_bins, warmup, period, EnsembleConfig::default()))
+            }
+            PredictorKind::Markov => Box::new(MarkovPredictor::new(m_bins, warmup)),
+            PredictorKind::Periodic => Box::new(PeriodicPredictor::new(period.max(1))),
+            PredictorKind::Ewma => Box::new(EwmaPredictor::new(0.3)),
+            PredictorKind::LastValue => Box::new(LastValuePredictor::default()),
+        }
+    }
 }
 
 /// Discrete-time Markov chain over M bins with online count learning.
@@ -88,15 +183,18 @@ impl MarkovPredictor {
         self.m
     }
 
-    /// Bin index of a normalized load in [0, 1].
+    /// Bin index of a normalized load in [0, 1] — delegates to the shared
+    /// [`workload::bin_of_load`](crate::workload::bin_of_load) so the
+    /// Markov state space, the voltage/elastic LUT keys and the workload
+    /// bins can never drift apart.
     pub fn bin_of(&self, load: f64) -> usize {
-        ((load.clamp(0.0, 1.0) * self.m as f64).ceil() as usize).clamp(1, self.m) - 1
+        bin_of_load(self.m, load)
     }
 
     /// Upper edge of a bin — the load the platform must be able to serve
     /// when it predicts this bin.
     pub fn bin_upper(&self, bin: usize) -> f64 {
-        (bin + 1) as f64 / self.m as f64
+        crate::workload::bin_upper(self.m, bin)
     }
 
     /// Row-normalized transition probabilities.
@@ -122,14 +220,18 @@ impl MarkovPredictor {
     }
 
     /// Most likely next bin from the current state (top bin in warmup).
+    /// Ties break toward the *current* state, so a cold row — e.g. right
+    /// after a surge snapped the chain into a state it has never left —
+    /// predicts persistence instead of collapsing to bin 0 (which would
+    /// publish minimum frequency at the worst possible moment).
     pub fn predicted_bin(&self) -> usize {
         if self.in_warmup() {
             // Training phase: platform runs at maximum frequency.
             return self.m - 1;
         }
         let row = &self.counts[self.state];
-        let mut best = 0;
-        let mut best_c = -1.0;
+        let mut best = self.state;
+        let mut best_c = row[self.state];
         for (j, &c) in row.iter().enumerate() {
             if c > best_c {
                 best_c = c;
@@ -354,6 +456,25 @@ mod tests {
         // A burst to bin 3 is an under-estimate of +3.
         assert_eq!(p.last_misprediction(0.9), Some(3));
         assert_eq!(p.last_misprediction(0.1), Some(0));
+    }
+
+    #[test]
+    fn cold_state_predicts_persistence_not_bin_zero() {
+        // Regression: a surge snaps the chain into a state whose row is
+        // still the uniform Laplace prior; the argmax used to tie-break
+        // to bin 0 and publish minimum frequency right after the surge.
+        let mut p = MarkovPredictor::new(10, 0);
+        for _ in 0..50 {
+            p.observe(0.15); // lock onto bin 1
+        }
+        p.observe(0.55); // jump into the never-visited bin 5
+        assert_eq!(
+            p.predicted_bin(),
+            5,
+            "a cold row must predict persistence: {:?}",
+            p.transition_matrix()[5]
+        );
+        assert!(p.predict() >= 0.55, "the published capacity covers the surge");
     }
 
     #[test]

@@ -92,16 +92,21 @@ impl Histogram {
         Histogram::new(1.0, 8, 20)
     }
 
-    fn bucket_of(&self, v: f64) -> Option<usize> {
+    /// Bucket index for a value plus whether the value overran the range
+    /// and was clamped. Under-range values land in bucket 0; over-range
+    /// values clamp into the *last* bucket instead of falling out of the
+    /// distribution — dropping them made every quantile at or above the
+    /// overflow fraction report `inf` while the mean stayed finite.
+    fn bucket_of(&self, v: f64) -> (usize, bool) {
         if v < self.min_value {
-            return Some(0);
+            return (0, false);
         }
         let decades = (v / self.min_value).log10();
         let idx = (decades * self.buckets_per_decade as f64) as usize;
         if idx >= self.buckets.len() {
-            None
+            (self.buckets.len() - 1, true)
         } else {
-            Some(idx)
+            (idx, false)
         }
     }
 
@@ -110,14 +115,19 @@ impl Histogram {
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_micro
             .fetch_add((v * 1e6).max(0.0) as u64, Ordering::Relaxed);
-        match self.bucket_of(v) {
-            Some(i) => {
-                self.buckets[i].fetch_add(1, Ordering::Relaxed);
-            }
-            None => {
-                self.overflow.fetch_add(1, Ordering::Relaxed);
-            }
+        let (i, clamped) = self.bucket_of(v);
+        self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        if clamped {
+            // Still counted in the last bucket; this is observability for
+            // "the range is too small", not a separate population.
+            self.overflow.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// Observations that overran the bucket range and were clamped into
+    /// the last bucket.
+    pub fn overflow_count(&self) -> u64 {
+        self.overflow.load(Ordering::Relaxed)
     }
 
     /// Number of observations recorded.
@@ -136,13 +146,19 @@ impl Histogram {
     }
 
     /// Approximate quantile from bucket boundaries (upper edge).
+    ///
+    /// The target rank is clamped to ≥ 1 observation: `q = 0` means "the
+    /// smallest observation's bucket", not "the first bucket of the
+    /// histogram" — with `ceil(0·n) = 0` the old code matched before any
+    /// count was seen and reported bucket 0's upper bound even when the
+    /// first populated bucket was far higher.
     pub fn quantile(&self, q: f64) -> f64 {
         assert!((0.0..=1.0).contains(&q));
         let total = self.count();
         if total == 0 {
             return 0.0;
         }
-        let target = (q * total as f64).ceil() as u64;
+        let target = ((q * total as f64).ceil() as u64).max(1);
         let mut seen = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
             seen += b.load(Ordering::Relaxed);
@@ -151,7 +167,10 @@ impl Histogram {
                     * 10f64.powf((i + 1) as f64 / self.buckets_per_decade as f64);
             }
         }
-        f64::INFINITY
+        // Unreachable now that every observation lands in some bucket
+        // (over-range values clamp into the last one); kept as a defined
+        // fallback rather than a panic.
+        self.min_value * 10f64.powf(self.buckets.len() as f64 / self.buckets_per_decade as f64)
     }
 }
 
@@ -238,10 +257,38 @@ mod tests {
     fn histogram_overflow_and_underflow() {
         let h = Histogram::new(1.0, 2, 10); // 1..100
         h.observe(0.01); // underflow -> bucket 0
-        h.observe(1e9); // overflow
+        h.observe(1e9); // over-range -> clamped into the last bucket
         assert_eq!(h.count(), 2);
         assert!(h.quantile(0.25) <= 2.0);
-        assert_eq!(h.quantile(1.0), f64::INFINITY);
+        // The clamped sample stays in the distribution: p100 is the last
+        // bucket's upper bound (100 here), not the old `inf` which made
+        // every p99 report useless once a single sample overran 100 s.
+        assert_eq!(h.quantile(1.0), 100.0);
+        assert_eq!(h.overflow_count(), 1, "clamping is still observable");
+    }
+
+    #[test]
+    fn quantile_q0_is_the_first_populated_bucket() {
+        // Regression: target = ceil(0·n) = 0 matched before any count was
+        // seen, so q=0 reported bucket 0's upper bound even when every
+        // observation sat far higher.
+        let h = Histogram::latency_us();
+        h.observe(5_000.0);
+        h.observe(9_000.0);
+        let q0 = h.quantile(0.0);
+        assert!(q0 >= 5_000.0, "q0 {q0} must be the smallest observation's bucket");
+        assert!(q0 <= 9_000.0);
+        assert!(h.quantile(1.0) >= 9_000.0);
+    }
+
+    #[test]
+    fn quantiles_of_a_single_sample_histogram_agree() {
+        let h = Histogram::latency_us();
+        h.observe(123.0);
+        let (q0, q50, q100) = (h.quantile(0.0), h.quantile(0.5), h.quantile(1.0));
+        assert_eq!(q0, q50, "all quantiles of one sample share its bucket");
+        assert_eq!(q50, q100);
+        assert!((100.0..200.0).contains(&q50), "bucket upper bound near 123: {q50}");
     }
 
     #[test]

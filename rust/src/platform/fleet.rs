@@ -11,6 +11,7 @@
 //! this offline model is `coordinator::FleetServing`.
 
 use super::{build_platform, Platform, PlatformConfig, Policy, SimReport};
+use crate::markov::PredictorKind;
 use crate::vscale::Mode;
 use crate::workload::Scenario;
 
@@ -168,6 +169,44 @@ impl Fleet {
         Ok(out)
     }
 
+    /// Run `scenario` under hybrid capacity once per predictor
+    /// configuration — the static-margin Markov baseline first, then
+    /// every [`PredictorKind`] with the adaptive guardband at
+    /// `qos_target` — on identical fleets, returning `(label, report)`
+    /// rows. This is the offline side of the Fig. 8 predictor comparison
+    /// (`perf_predictor` bench, `predict` CLI) and the acceptance gate
+    /// for the adaptive ensemble.
+    pub fn compare_predictors(
+        scenario: &Scenario,
+        cfg: PlatformConfig,
+        mode: Mode,
+        qos_target: f64,
+    ) -> Result<Vec<(String, FleetReport)>, String> {
+        let mut out = Vec::with_capacity(1 + PredictorKind::ALL.len());
+        let baseline = PlatformConfig {
+            predictor: PredictorKind::Markov,
+            qos_target: None,
+            ..cfg.clone()
+        };
+        let mut fleet =
+            Fleet::from_scenario(scenario, baseline, Policy::Hybrid(mode))?;
+        out.push(("markov-static".to_string(), fleet.run_scenario(scenario)?));
+        for kind in PredictorKind::ALL {
+            let adaptive = PlatformConfig {
+                predictor: kind,
+                qos_target: Some(qos_target),
+                ..cfg.clone()
+            };
+            let mut fleet =
+                Fleet::from_scenario(scenario, adaptive, Policy::Hybrid(mode))?;
+            out.push((
+                format!("{}+guardband", kind.name()),
+                fleet.run_scenario(scenario)?,
+            ));
+        }
+        Ok(out)
+    }
+
     fn aggregate(per_group: Vec<(String, SimReport)>) -> FleetReport {
         let avg_power_w: f64 = per_group.iter().map(|(_, r)| r.avg_power_w).sum();
         let nominal_power_w: f64 = per_group.iter().map(|(_, r)| r.nominal_power_w).sum();
@@ -291,6 +330,43 @@ mod tests {
                     "overnight: hybrid {hybrid} J must strictly beat dvfs {dvfs} J"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn adaptive_ensemble_never_worse_than_static_markov_on_named_scenarios() {
+        // Acceptance gate for the predictor ensemble + guardband
+        // (ISSUE 4): on every named scenario under hybrid capacity the
+        // adaptive ensemble's energy is within 1% of the static-margin
+        // Markov baseline while its violation rate stays within 0.5pp.
+        for s in Scenario::all(240, 2019) {
+            let rows = Fleet::compare_predictors(
+                &s,
+                PlatformConfig::default(),
+                Mode::Proposed,
+                0.01,
+            )
+            .unwrap();
+            assert_eq!(rows[0].0, "markov-static");
+            let (base_e, base_v) = (rows[0].1.energy_j(), rows[0].1.violation_rate);
+            let ens = rows
+                .iter()
+                .find(|(name, _)| name == "ensemble+guardband")
+                .expect("ensemble row");
+            assert!(
+                ens.1.energy_j() <= base_e * 1.01,
+                "{}: ensemble {} J vs static markov {} J",
+                s.name,
+                ens.1.energy_j(),
+                base_e
+            );
+            assert!(
+                ens.1.violation_rate <= base_v + 0.005,
+                "{}: ensemble violations {} vs static markov {}",
+                s.name,
+                ens.1.violation_rate,
+                base_v
+            );
         }
     }
 

@@ -25,13 +25,19 @@ pub fn std_dev(xs: &[f64]) -> f64 {
 }
 
 /// Percentile in [0, 100] by linear interpolation on a sorted copy.
+///
+/// NaN samples are a caller bug (they carry no rank): debug builds flag
+/// them with a `debug_assert`, release builds filter them out and rank
+/// the remaining samples — the old `sort_by(partial_cmp().unwrap())`
+/// aborted the whole process on the first NaN instead.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!((0.0..=100.0).contains(&p), "percentile {p} out of range");
-    if xs.is_empty() {
+    let mut s: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    debug_assert_eq!(s.len(), xs.len(), "NaN samples passed to percentile");
+    if s.is_empty() {
         return 0.0;
     }
-    let mut s: Vec<f64> = xs.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(f64::total_cmp);
     let rank = p / 100.0 * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -182,6 +188,28 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 4.0);
         assert_eq!(median(&xs), 2.5);
         assert!((percentile(&xs, 25.0) - 1.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_never_aborts_on_nan_samples() {
+        // Regression: sort_by(partial_cmp().unwrap()) panicked on the
+        // first NaN. NaNs are a caller bug, so debug builds flag them
+        // (debug_assert) while release builds filter and keep ranking.
+        let xs = vec![1.0, f64::NAN, 3.0, 2.0];
+        if cfg!(debug_assertions) {
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                percentile(&xs, 50.0)
+            }));
+            assert!(r.is_err(), "debug builds must flag NaN samples loudly");
+        } else {
+            // Filtered ranking: the NaN is dropped, median of {1,2,3} = 2.
+            assert_eq!(percentile(&xs, 50.0), 2.0);
+            assert_eq!(percentile(&xs, 100.0), 3.0);
+            // All-NaN input degrades to the empty-slice default.
+            assert_eq!(percentile(&[f64::NAN, f64::NAN], 50.0), 0.0);
+        }
+        // NaN-free inputs are byte-for-byte unaffected by the fix.
+        assert_eq!(percentile(&[2.0, 1.0, 3.0], 50.0), 2.0);
     }
 
     #[test]

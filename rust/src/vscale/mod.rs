@@ -206,11 +206,13 @@ impl Optimizer {
 }
 
 /// Bin index for a normalized load in [0, 1] over `m` equal-width bins
-/// (upper-edge inclusive). The single source of truth for workload
-/// binning: `VoltageLut::bin_of` and `ElasticLut::bin_of` must agree
-/// for the hybrid-vs-baseline comparisons to be apples-to-apples.
+/// (upper-edge inclusive). Delegates to the crate-wide
+/// [`workload::bin_of_load`](crate::workload::bin_of_load) — the single
+/// source of truth for workload binning — so `VoltageLut::bin_of`,
+/// `ElasticLut::bin_of` and the Markov state space can never drift apart
+/// (the hybrid-vs-baseline comparisons depend on identical boundaries).
 pub(crate) fn bin_index(m: usize, load: f64) -> usize {
-    ((load.clamp(0.0, 1.0) * m as f64).ceil() as usize).clamp(1, m) - 1
+    crate::workload::bin_of_load(m, load)
 }
 
 /// "Design synthesis"-time lookup table: per workload bin, the optimal

@@ -22,6 +22,26 @@ pub use scenarios::{Scenario, TenantTrace};
 use crate::util::prng::Rng;
 use crate::util::stats;
 
+/// Bin index of a normalized load over `m` equal-width bins — THE
+/// load→bin mapping, shared by the Markov state space
+/// (`markov::MarkovPredictor::bin_of`), the voltage LUT key
+/// (`vscale::VoltageLut::bin_of`) and the elastic LUT key
+/// (`vscale::ElasticLut::bin_of`). Bins are upper-edge inclusive:
+/// bin b covers `(b/m, (b+1)/m]`, except bin 0 which also takes load 0.
+/// Out-of-range loads clamp into `[0, 1]` first, so every input maps to
+/// a valid bin (no panic, no dropped sample).
+pub fn bin_of_load(m: usize, load: f64) -> usize {
+    ((load.clamp(0.0, 1.0) * m as f64).ceil() as usize).clamp(1, m) - 1
+}
+
+/// Upper edge of bin `b` of `m` — the load a platform must be able to
+/// serve when it predicts that bin. Inverse of [`bin_of_load`] in the
+/// sense that `bin_of_load(m, bin_upper(m, b)) == b` exactly, so bin
+/// indices round-trip stably through load space at every boundary.
+pub fn bin_upper(m: usize, bin: usize) -> f64 {
+    (bin + 1) as f64 / m as f64
+}
+
 /// A workload trace: per-time-step load, normalized to expected peak.
 #[derive(Clone, Debug)]
 pub struct Trace {
@@ -275,6 +295,49 @@ pub fn square(steps: usize, period: usize, lo: f64, hi: f64) -> Trace {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bin_mapping_is_stable_at_exact_boundaries() {
+        // Satellite audit of the load→bin mapping: load 0.0, 1.0 and every
+        // interior bin edge must map deterministically and round-trip
+        // through bin_upper, for the bin counts the LUTs actually use.
+        for m in [2usize, 4, 10, 16] {
+            assert_eq!(bin_of_load(m, 0.0), 0, "m={m}: zero load is bin 0");
+            assert_eq!(bin_of_load(m, 1.0), m - 1, "m={m}: full load is the top bin");
+            // Out-of-range inputs clamp instead of panicking/overflowing.
+            assert_eq!(bin_of_load(m, -0.5), 0);
+            assert_eq!(bin_of_load(m, 7.3), m - 1);
+            assert_eq!(bin_of_load(m, f64::NAN), 0, "NaN clamps to 0 (defined, not UB)");
+            for b in 0..m {
+                let upper = bin_upper(m, b);
+                // Upper-edge inclusive: the edge belongs to its own bin...
+                assert_eq!(bin_of_load(m, upper), b, "m={m} b={b}: edge round-trip");
+                // ...and the next representable load above it to the next.
+                if b + 1 < m {
+                    assert_eq!(
+                        bin_of_load(m, upper + 1e-12),
+                        b + 1,
+                        "m={m} b={b}: just past the edge"
+                    );
+                }
+                // Just below the edge stays in the bin.
+                assert_eq!(bin_of_load(m, upper - 1e-12), b, "m={m} b={b}: just under");
+            }
+        }
+        assert_eq!(bin_upper(10, 9), 1.0);
+    }
+
+    #[test]
+    fn bin_mapping_agrees_with_markov_state_space() {
+        // The Markov chain's state space delegates here; a drift between
+        // the two would desynchronize predictions from LUT keys.
+        let p = crate::markov::MarkovPredictor::new(10, 0);
+        for i in 0..=1000 {
+            let load = i as f64 / 1000.0;
+            assert_eq!(p.bin_of(load), bin_of_load(10, load), "load {load}");
+        }
+        assert_eq!(p.bin_upper(3), bin_upper(10, 3));
+    }
 
     #[test]
     fn bursty_hits_target_mean() {

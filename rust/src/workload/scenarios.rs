@@ -58,6 +58,20 @@ impl Scenario {
         })
     }
 
+    /// Steps per "day" the named generators use for a run of `steps`
+    /// epochs: a 96-step day for long runs, half the run (min 2) for
+    /// short ones. The single source for this choice — the periodic
+    /// predictor member must train on the same cycle, so `simtest` and
+    /// the `serve-fleet` CLI derive their `predictor_period` from here
+    /// instead of re-deriving the formula.
+    pub fn day_period(steps: usize) -> usize {
+        if steps >= 192 {
+            96
+        } else {
+            (steps / 2).max(2)
+        }
+    }
+
     /// Every named scenario at the given size, in [`Scenario::NAMES`]
     /// order — the iteration surface behind the capacity-policy
     /// comparison tests and the `hybrid_capacity` bench.
@@ -72,7 +86,7 @@ impl Scenario {
     /// peaks when batch-style DianNao is in its valley and vice versa —
     /// the complementary-tenant packing datacenters aim for.
     pub fn diurnal(steps: usize, seed: u64) -> Scenario {
-        let period = if steps >= 192 { 96 } else { (steps / 2).max(2) };
+        let period = Scenario::day_period(steps);
         let day = periodic(steps, period, 0.10, 0.85, 0.02, seed);
         let mut night = periodic(steps, period, 0.15, 0.80, 0.02, seed ^ 0x5ca1e);
         night.loads.rotate_left((period / 2).min(night.loads.len()));
@@ -130,7 +144,7 @@ impl Scenario {
             seed: seed.wrapping_add(1),
             ..Default::default()
         });
-        let period = if steps >= 192 { 96 } else { (steps / 2).max(2) };
+        let period = Scenario::day_period(steps);
         let c = periodic(steps, period, 0.15, 0.75, 0.03, seed.wrapping_add(2));
         Scenario {
             name: "mixed-tenant".into(),

@@ -72,6 +72,14 @@ fn golden_traces_and_determinism() {
         }
     }
 
+    // The adaptive path (predictor ensemble + QoS-feedback guardband) on
+    // every named scenario — the ISSUE-4 acceptance configuration. Keyed
+    // `{scenario}_{policy}_ensemble-adaptive`, so these never collide
+    // with the static baselines above.
+    for name in Scenario::NAMES {
+        check(&SimSpec::golden_adaptive(name));
+    }
+
     same_seed_replays_byte_identically_and_seeds_matter();
     virtual_runs_are_independent_of_installed_artifacts();
 }

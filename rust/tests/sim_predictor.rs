@@ -1,0 +1,98 @@
+//! Acceptance tests for the adaptive predictor ensemble + QoS-feedback
+//! guardband on the *live* virtual-time serving path (ISSUE 4).
+//!
+//! The headline criterion: on all four named scenarios under hybrid
+//! capacity (golden-trace parameters), the adaptive ensemble's energy is
+//! within 1% of the static-margin Markov baseline while its violation
+//! rate stays within 0.5pp — and the adaptive replay is bitwise
+//! deterministic run-to-run, like every other simtest spec.
+
+use wavescale::simtest::{self, SimSpec};
+use wavescale::workload::Scenario;
+
+#[test]
+fn adaptive_ensemble_acceptance_on_all_named_scenarios() {
+    for name in Scenario::NAMES {
+        let base = simtest::run(&SimSpec::golden(name)).expect("static baseline replay");
+        let adaptive =
+            simtest::run(&SimSpec::golden_adaptive(name)).expect("adaptive replay");
+        let (be, bv) = (base.report.stats.energy_j, base.report.stats.violation_rate);
+        let (ae, av) =
+            (adaptive.report.stats.energy_j, adaptive.report.stats.violation_rate);
+        assert!(
+            ae <= be * 1.01,
+            "{name}: adaptive ensemble {ae} J vs static markov {be} J (>1% worse)"
+        );
+        assert!(
+            av <= bv + 0.005,
+            "{name}: adaptive violations {av} vs static {bv} (+>0.5pp)"
+        );
+        // The new columns are populated on every epoch record.
+        for records in &adaptive.report.epoch_records {
+            assert!(!records.is_empty());
+            for r in records {
+                assert!(!r.predictor.is_empty());
+                assert!((0.0..=0.40 + 1e-12).contains(&r.margin), "{name}: {r:?}");
+            }
+        }
+        // Live stats surface the adaptive state.
+        for g in &adaptive.report.stats.per_group {
+            assert!((0.0..=0.40 + 1e-12).contains(&g.margin_now), "{}", g.name);
+            assert!(!g.predictor_now.is_empty());
+        }
+    }
+}
+
+#[test]
+fn adaptive_replay_is_bitwise_deterministic() {
+    let spec = SimSpec {
+        epochs: 12,
+        ..SimSpec::golden_adaptive("mixed-tenant")
+    };
+    let scenario = Scenario::by_name(&spec.scenario, spec.epochs, spec.seed).unwrap();
+    let a = simtest::run(&spec).unwrap();
+    let b = simtest::run(&spec).unwrap();
+    assert_eq!(
+        simtest::trace_json(&spec, &scenario, &a.report).to_string_pretty(),
+        simtest::trace_json(&spec, &scenario, &b.report).to_string_pretty(),
+        "adaptive path must stay byte-identical per seed"
+    );
+    assert_eq!(a.accepted, b.accepted);
+    assert!(
+        a.report.stats.energy_j.to_bits() == b.report.stats.energy_j.to_bits(),
+        "energy must be bitwise deterministic"
+    );
+}
+
+#[test]
+fn guardband_reacts_on_the_live_path() {
+    // A long, loose-target overnight run: the rolling violation window
+    // fills and proves the (generous) QoS target, so the margin must
+    // decay below the static 5% — while never exceeding the static cap
+    // (the default pareto-no-worse contract).
+    let spec = SimSpec {
+        epochs: 96,
+        qos_target: Some(0.25),
+        ..SimSpec::golden_adaptive("overnight")
+    };
+    let out = simtest::run(&spec).unwrap();
+    let margins: Vec<f64> = out
+        .report
+        .epoch_records
+        .iter()
+        .flat_map(|rs| rs.iter().map(|r| r.margin))
+        .collect();
+    assert!(!margins.is_empty());
+    // Starts at the static margin...
+    assert!((margins[0] - 0.05).abs() < 1e-12, "first epoch margin {}", margins[0]);
+    // ...decays below it once the window proves the target...
+    assert!(
+        margins.iter().any(|&m| m < 0.05 - 1e-12),
+        "decay must undercut the static margin: {margins:?}"
+    );
+    // ...and never exceeds the default cap.
+    assert!(
+        margins.iter().all(|&m| m <= 0.05 + 1e-12),
+        "default guardband must never spend more margin than static: {margins:?}"
+    );
+}
