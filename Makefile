@@ -15,12 +15,14 @@
 #   make bench-predictor  predictor ensemble/guardband sweep (offline +
 #                    virtual-time, seed-pinned) -> results/
 #                    BENCH_predictor.{json,csv} baseline
+#   make fmt         rustfmt the whole workspace (CI runs the --check
+#                    twin alongside clippy)
 #   make doc         rustdoc with warnings surfaced
 
 ARTIFACTS_DIR := artifacts
 PY            := python3
 
-.PHONY: artifacts build test bench golden bench-coordinator bench-predictor doc scenario-smoke clean
+.PHONY: artifacts build test bench golden bench-coordinator bench-predictor doc fmt fmt-check scenario-smoke clean
 
 artifacts:
 	cd python && $(PY) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
@@ -65,14 +67,25 @@ bench-coordinator: build
 bench-predictor: build
 	cargo bench --bench perf_predictor
 
+# Format the workspace / verify it is formatted (fmt-check is the CI
+# twin, run alongside clippy).
+fmt:
+	cargo fmt --all
+
+fmt-check:
+	cargo fmt --all -- --check
+
 # Shortened end-to-end smoke of the elastic capacity manager: an
 # overnight trough through both the offline scenario sim (with the
-# dvfs/pg/hybrid side-by-side) and the live serve-fleet coordinator.
+# dvfs/pg/hybrid side-by-side) and the live serve-fleet coordinator,
+# plus the control-plane suite proving the offline and live paths make
+# identical decisions (DESIGN.md S19).
 # CI runs this so the serving path is exercised beyond unit tests.
 scenario-smoke: build
 	cargo run --release -- scenario --name overnight --steps 120
 	cargo run --release -- serve-fleet --scenario overnight --epochs 6 \
 	    --epoch-ms 60 --rps 800 --instances 2
+	cargo test --release --test control_equivalence
 
 doc:
 	cargo doc --no-deps

@@ -104,7 +104,7 @@ fn main() -> anyhow::Result<()> {
             println!(
                 "  {:<10} epoch {:>2}: load {:.2} predicted {:.2} f/fnom {:.2} Vcore {:.3} Vbram {:.3} active {}/{} {:.2} W",
                 g.name, r.epoch, r.load, r.predicted, r.freq_ratio, r.vcore, r.vbram,
-                r.active, g.n_instances, r.power_w
+                r.n_active, g.n_instances, r.power_w
             );
         }
     }

@@ -5,6 +5,11 @@
 //! Flags are greedy: `--name value` binds the next token unless it starts
 //! with `--`, so positionals must precede trailing switches (or use
 //! `--flag=value`).
+//!
+//! [`ControlFlags`] parses + validates the control-plane flags every
+//! simulation-shaped subcommand shares (`--predictor`, `--qos-target`,
+//! `--policy`, `--seed`) so their semantics and error messages cannot
+//! drift between subcommands.
 
 use std::collections::BTreeMap;
 
@@ -94,6 +99,72 @@ impl Args {
     }
 }
 
+/// The control-plane flags the simulation-shaped subcommands share —
+/// `--predictor`, `--qos-target`, `--policy`, `--seed` — parsed and
+/// validated in ONE place. `simulate`, `serve-fleet`, `fleet`,
+/// `scenario` and `predict` used to hand-roll each of these into their
+/// configs separately; now they all call [`ControlFlags::parse`] and
+/// apply only the fields they support (unsupported flags are still
+/// rejected by each subcommand's [`Args::check_known`] list).
+#[derive(Clone, Debug, Default)]
+pub struct ControlFlags {
+    /// `--predictor <name>`, resolved through
+    /// [`PredictorKind::by_name`](crate::markov::PredictorKind::by_name).
+    pub predictor: Option<crate::markov::PredictorKind>,
+    /// `--qos-target <fraction>`, validated to [0, 1) (a violation-rate
+    /// target; presence enables the adaptive guardband).
+    pub qos_target: Option<f64>,
+    /// `--policy <name>`, resolved through
+    /// [`policy_by_name`](crate::config::policy_by_name).
+    pub policy: Option<crate::platform::Policy>,
+    /// `--seed <n>`.
+    pub seed: Option<u64>,
+}
+
+impl ControlFlags {
+    /// Parse + validate the shared flags from an already-parsed command
+    /// line. Absent flags stay `None`; present-but-invalid values error
+    /// with the same messages regardless of which subcommand got them.
+    pub fn parse(args: &Args) -> Result<ControlFlags, String> {
+        let predictor = args
+            .flag("predictor")
+            .map(crate::markov::PredictorKind::by_name)
+            .transpose()?;
+        let qos_target = args.flag_f64("qos-target")?;
+        if let Some(q) = qos_target {
+            if !(0.0..1.0).contains(&q) {
+                return Err(
+                    "--qos-target must be a violation-rate fraction in [0, 1)".into()
+                );
+            }
+        }
+        let policy = args
+            .flag("policy")
+            .map(crate::config::policy_by_name)
+            .transpose()?;
+        let seed = args.flag_usize("seed")?.map(|s| s as u64);
+        Ok(ControlFlags { predictor, qos_target, policy, seed })
+    }
+
+    /// The predictor flag, or `default` when absent.
+    pub fn predictor_or(
+        &self,
+        default: crate::markov::PredictorKind,
+    ) -> crate::markov::PredictorKind {
+        self.predictor.unwrap_or(default)
+    }
+
+    /// The policy flag, or `default` when absent.
+    pub fn policy_or(&self, default: crate::platform::Policy) -> crate::platform::Policy {
+        self.policy.unwrap_or(default)
+    }
+
+    /// The seed flag, or `default` when absent.
+    pub fn seed_or(&self, default: u64) -> u64 {
+        self.seed.unwrap_or(default)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -139,5 +210,53 @@ mod tests {
         let a = parse("--help");
         assert_eq!(a.subcommand, "");
         assert!(a.switch("help"));
+    }
+
+    #[test]
+    fn control_flags_parse_and_default() {
+        use crate::markov::PredictorKind;
+        use crate::platform::Policy;
+        use crate::vscale::Mode;
+
+        let f = ControlFlags::parse(&parse(
+            "simulate --predictor ensemble --qos-target 0.01 --policy hybrid --seed 9",
+        ))
+        .unwrap();
+        assert_eq!(f.predictor, Some(PredictorKind::Ensemble));
+        assert_eq!(f.qos_target, Some(0.01));
+        assert_eq!(f.policy, Some(Policy::Hybrid(Mode::Proposed)));
+        assert_eq!(f.seed, Some(9));
+
+        // Absent flags stay None and the *_or helpers fill defaults.
+        let f = ControlFlags::parse(&parse("simulate")).unwrap();
+        assert_eq!(f.predictor, None);
+        assert_eq!(f.qos_target, None);
+        assert_eq!(f.policy_or(Policy::Dvfs(Mode::Proposed)), Policy::Dvfs(Mode::Proposed));
+        assert_eq!(f.predictor_or(PredictorKind::Markov), PredictorKind::Markov);
+        assert_eq!(f.seed_or(2019), 2019);
+    }
+
+    #[test]
+    fn control_flags_reject_bad_values() {
+        // Every bad value errors identically no matter which subcommand
+        // passed it (the point of the shared builder).
+        let bad = [
+            "x --predictor nope",
+            "x --qos-target 1.5",
+            "x --qos-target -0.1",
+            "x --qos-target abc",
+            "x --policy bogus",
+            "x --seed notanumber",
+        ];
+        for argv in bad {
+            assert!(
+                ControlFlags::parse(&parse(argv)).is_err(),
+                "{argv:?} must be rejected"
+            );
+        }
+        // An unknown flag is the subcommand's check_known job, not ours.
+        let a = parse("x --frobnicate 3 --seed 1");
+        assert!(ControlFlags::parse(&a).is_ok());
+        assert!(a.check_known(&["seed"]).is_err(), "unknown flag still rejected");
     }
 }

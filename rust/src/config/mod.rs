@@ -107,6 +107,9 @@ impl SimConfig {
             if let Some(q) = p.get("qos_target") {
                 self.platform.qos_target = q.as_f64().filter(|x| *x >= 0.0);
             }
+            if let Some(x) = p.get("capacity_policy").and_then(Json::as_str) {
+                self.platform.capacity_policy = crate::vscale::CapacityPolicy::by_name(x)?;
+            }
         }
         if let Some(w) = v.get("workload") {
             let f = |k: &str| w.get(k).and_then(Json::as_f64);
@@ -188,6 +191,10 @@ impl SimConfig {
                         "qos_target",
                         self.platform.qos_target.map(Json::Num).unwrap_or(Json::Null),
                     ),
+                    (
+                        "capacity_policy",
+                        Json::Str(self.platform.capacity_policy.name().to_string()),
+                    ),
                 ]),
             ),
             (
@@ -222,6 +229,7 @@ mod tests {
         c.workload.mean_load = 0.3;
         c.platform.predictor = crate::markov::PredictorKind::Ensemble;
         c.platform.qos_target = Some(0.02);
+        c.platform.capacity_policy = crate::vscale::CapacityPolicy::GatingOnly;
         let j = c.to_json();
         let mut d = SimConfig::default();
         d.apply_json(&j).unwrap();
@@ -230,6 +238,7 @@ mod tests {
         assert!((d.workload.mean_load - 0.3).abs() < 1e-12);
         assert_eq!(d.platform.predictor, crate::markov::PredictorKind::Ensemble);
         assert_eq!(d.platform.qos_target, Some(0.02));
+        assert_eq!(d.platform.capacity_policy, crate::vscale::CapacityPolicy::GatingOnly);
         // The default (qos_target absent/null) round-trips to None.
         let c = SimConfig::default();
         let mut d = SimConfig::default();

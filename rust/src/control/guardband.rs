@@ -18,8 +18,8 @@
 //! margin whenever QoS is at any risk, smaller margin (= less energy)
 //! only in provably quiet regimes. Deployments chasing a tighter QoS
 //! target than the static margin delivers can raise `margin_max` (the
-//! LUT ladder is pre-built up to 40%) and buy violations down with
-//! energy.
+//! controller pre-builds one LUT per ladder level up to the cap; the
+//! default ladder extends to 40%) and buy violations down with energy.
 
 use std::collections::VecDeque;
 
@@ -59,6 +59,25 @@ pub fn ladder_with(static_margin: f64) -> Vec<f64> {
         margins.push(static_margin);
         margins.sort_by(f64::total_cmp);
     }
+    margins
+}
+
+/// The margin levels to pre-build LUTs for under a specific guardband
+/// configuration — THE level list the controller and
+/// [`Guardband::applied_margin`] share, so the applied quantization can
+/// never disagree with the built tables. [`ladder_with`] splices in the
+/// static margin, `margin_max` is spliced the same way (a raised
+/// non-ladder cap must be exactly representable, or the quantize-up
+/// contract would silently quantize *down* at the cap), and levels
+/// above the cap are dropped: the guardband clamps at `margin_max`, so
+/// they could never be selected and building them is pure waste.
+pub fn levels(cfg: &GuardbandConfig) -> Vec<f64> {
+    let mut margins = ladder_with(cfg.static_margin);
+    if !margins.iter().any(|&m| (m - cfg.margin_max).abs() < 1e-12) {
+        margins.push(cfg.margin_max);
+        margins.sort_by(f64::total_cmp);
+    }
+    margins.retain(|&m| m <= cfg.margin_max + 1e-12);
     margins
 }
 
@@ -125,9 +144,14 @@ impl Guardband {
         self.margin
     }
 
-    /// The ladder level actually applied for the current margin.
+    /// The ladder level actually applied for the current margin —
+    /// quantized against [`levels`]`(cfg)`, the exact level list the
+    /// controller builds LUTs for, so a non-ladder static margin or
+    /// raised `margin_max` reports its own exact cap level instead of
+    /// over- (or under-) quantizing to a neighbouring default level.
     pub fn applied_margin(&self) -> f64 {
-        MARGIN_LADDER[ladder_level(self.margin)]
+        let margins = levels(&self.cfg);
+        margins[level_for(&margins, self.margin)]
     }
 
     /// Rolling violation rate over the configured window (0 when empty).
@@ -301,6 +325,30 @@ mod tests {
         // level_for on a single-level list always yields that level.
         assert_eq!(level_for(&[0.07], 0.0), 0);
         assert_eq!(level_for(&[0.07], 0.2), 0);
+    }
+
+    #[test]
+    fn levels_splice_a_raised_non_ladder_cap_and_truncate_above_it() {
+        // A raised margin_max that is not a default ladder level (0.07)
+        // must become its own exact top level — otherwise a guardband
+        // pinned at its cap would be silently quantized DOWN to 0.05 in
+        // exactly the QoS-risk regime — and nothing above the cap is
+        // built (unreachable by the clamp).
+        let cfg = GuardbandConfig { margin_max: 0.07, ..GuardbandConfig::new(0.05, 0.01) };
+        let margins = levels(&cfg);
+        assert_eq!(margins.last().copied(), Some(0.07), "cap is the top level");
+        assert_eq!(margins[level_for(&margins, 0.07)], 0.07, "cap quantizes to itself");
+        assert!(margins.iter().all(|&m| m <= 0.07 + 1e-12));
+        // applied_margin agrees with the same list at the cap.
+        let mut g = Guardband::new(cfg);
+        for _ in 0..10 {
+            g.observe(true, true);
+        }
+        assert!((g.margin() - 0.07).abs() < 1e-12);
+        assert_eq!(g.applied_margin(), 0.07);
+        // Default config: the reachable prefix of the ladder.
+        let d = levels(&GuardbandConfig::new(0.05, 0.01));
+        assert_eq!(d, MARGIN_LADDER[..=ladder_level(0.05)].to_vec());
     }
 
     #[test]

@@ -1,0 +1,714 @@
+//! Per-group control plane (DESIGN.md S19): the paper's CC decision loop
+//! — predict the workload, consult the pre-characterized
+//! delay/power-voltage library, publish the efficient
+//! `(V_core, V_bram, f, n_active)` operating point — as ONE reusable
+//! engine shared by every plant that needs it.
+//!
+//! Before this module existed the loop was implemented twice: once in
+//! `platform::Platform::step` (the offline simulator) and once in the
+//! live Central Controller epoch thread (`coordinator::fleet`). Every
+//! policy change paid the "threaded through both paths" tax and the two
+//! copies could silently drift. Now both layers are pure *plants*:
+//!
+//! * `platform::Platform` keeps only physics — PLL lock, capacity,
+//!   backlog carry-over, power accounting — and delegates each step's
+//!   decision to its [`GroupController`];
+//! * the live CC keeps only serving mechanics — arrival counters, shard
+//!   gating/drain, gauges, energy integration — and delegates each
+//!   epoch's decision to one [`GroupController`] per tenant group.
+//!
+//! A plant feeds the controller one [`Observation`] per step/epoch (the
+//! observed load, whether capacity was violated, the carried backlog)
+//! and gets back a [`Decision`] (forecast, applied margin ladder level,
+//! and the `(f, V_core, V_bram, n_active)` operating point to publish
+//! for the next step). The controller owns the predictor
+//! ([`PredictorKind`]-built, possibly the shadow-mode ensemble), the
+//! adaptive [`Guardband`], the margin ladder, and one pre-built LUT per
+//! ladder level — so per-step decisions stay table lookups (paper §V)
+//! and the decision logic exists in exactly one place.
+//!
+//! Equivalence is enforced by construction *and* by test: the controller
+//! is deterministic and pure (no clock, no RNG, no I/O), it logs every
+//! [`DecisionRecord`] it produces, and `tests/control_equivalence.rs`
+//! replays the live fleet's observed load sequence through the offline
+//! platform and asserts the two paths' decision logs are identical.
+
+pub mod guardband;
+
+pub use guardband::{
+    ladder_level, ladder_with, level_for, Guardband, GuardbandConfig, MARGIN_LADDER,
+};
+
+use crate::markov::{Predictor, PredictorKind};
+use crate::vscale::{
+    CapacityPolicy, ElasticConfig, ElasticLut, Mode, Optimizer, VoltageLut,
+};
+use crate::workload::bin_of_load;
+
+/// What the plant observed over the step/epoch that just finished — the
+/// controller's only input. Everything in here is plant physics; nothing
+/// is predictor or margin state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Observation {
+    /// Normalized load offered over the finished step/epoch, in [0, 1].
+    pub load: f64,
+    /// True when demand (load + carried backlog) exceeded the capacity
+    /// that actually served the step/epoch.
+    pub qos_violation: bool,
+    /// Unserved work carried into the next step/epoch, normalized to one
+    /// step's nominal capacity (the controller sizes the next operating
+    /// point for `predicted + backlog` — proportionate backpressure).
+    pub backlog: f64,
+}
+
+/// One control decision: the forecast behind it, the margin ladder level
+/// applied, and the operating point the plant should publish for the
+/// next step/epoch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Decision {
+    /// Load forecast for the next step/epoch.
+    pub predicted: f64,
+    /// Throughput margin actually applied (the ladder level's value).
+    pub margin: f64,
+    /// Index of the applied level in [`GroupController::margins`].
+    pub level: usize,
+    /// f / f_nom to publish.
+    pub freq_ratio: f64,
+    /// Core-rail voltage to publish (V).
+    pub vcore: f64,
+    /// BRAM-rail voltage to publish (V).
+    pub vbram: f64,
+    /// Instances to keep active (the rest are gated).
+    pub n_active: usize,
+    /// Name of the prediction source that produced `predicted` (the
+    /// ensemble reports its active member, never "ensemble").
+    pub predictor: &'static str,
+    /// True when the forecast made last step missed the observed bin.
+    pub mispredicted: bool,
+    /// True when the forecast made last step under-estimated the
+    /// observed bin (the QoS-dangerous direction).
+    pub under_predicted: bool,
+}
+
+impl Decision {
+    /// The trace-row projection of this decision (what both the offline
+    /// `StepRecord` and the live `EpochRecord` embed).
+    pub fn record(&self) -> DecisionRecord {
+        DecisionRecord {
+            predicted: self.predicted,
+            freq_ratio: self.freq_ratio,
+            vcore: self.vcore,
+            vbram: self.vbram,
+            n_active: self.n_active,
+            predictor: self.predictor,
+            margin: self.margin,
+        }
+    }
+}
+
+/// The decision columns shared by the offline `platform::StepRecord` and
+/// the live `coordinator::EpochRecord` — one struct so the two trace
+/// formats cannot drift apart. Field alignment (decision-made-this-step
+/// vs decision-that-served-this-step) is documented on the embedding
+/// record; the controller's own log ([`GroupController::decisions`])
+/// always holds the decision *made* at each step, which is what the
+/// cross-path equivalence test compares.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DecisionRecord {
+    /// Load forecast.
+    pub predicted: f64,
+    /// f / f_nom.
+    pub freq_ratio: f64,
+    /// Core-rail voltage (V).
+    pub vcore: f64,
+    /// BRAM-rail voltage (V).
+    pub vbram: f64,
+    /// Active (non-gated) instances.
+    pub n_active: usize,
+    /// Prediction source (the ensemble reports its active member).
+    pub predictor: &'static str,
+    /// Throughput margin applied.
+    pub margin: f64,
+}
+
+/// Controller knobs shared by both plants (the offline simulator's τ-step
+/// CC and the live per-epoch CC read the same fields from their configs).
+#[derive(Clone, Copy, Debug)]
+pub struct ControlConfig {
+    /// Workload bins M (Markov state space == LUT key space).
+    pub m_bins: usize,
+    /// Static throughput margin t (the guardband's starting point, floor
+    /// while QoS is at risk, and default cap).
+    pub margin_t: f64,
+    /// Pure-training steps/epochs before predictions are trusted.
+    pub warmup: usize,
+    /// Which workload predictor drives the decisions (DESIGN.md S7).
+    pub predictor: PredictorKind,
+    /// Steps per cycle assumed by the periodic predictor member.
+    pub predictor_period: usize,
+    /// `Some(target)` enables the adaptive QoS-feedback guardband
+    /// (DESIGN.md S7.1); `None` keeps the static `margin_t`.
+    pub qos_target: Option<f64>,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            m_bins: 10,
+            margin_t: 0.05,
+            warmup: 20,
+            predictor: PredictorKind::Markov,
+            predictor_period: 96,
+            qos_target: None,
+        }
+    }
+}
+
+/// Which pre-built lookup tables the controller consults — the only
+/// plant-specific part of the control plane.
+#[derive(Clone, Copy, Debug)]
+pub enum LutSpec {
+    /// Pure DVFS: one [`VoltageLut`] per margin level, every instance
+    /// stays active (the paper's baseline framework).
+    Dvfs {
+        /// Voltage mode of the grid search.
+        mode: Mode,
+        /// Instances in the group/platform (always all active).
+        n_instances: usize,
+        /// Clock-stretch cap (`f64::INFINITY` disables it).
+        latency_cap_sw: f64,
+    },
+    /// Joint gating + DVFS: one [`ElasticLut`] per margin level
+    /// (DESIGN.md S6.1); `policy` restricts the search to reproduce the
+    /// dvfs-only / pg-only baselines with identical machinery.
+    Elastic {
+        /// Voltage mode of the active instances' grid search.
+        mode: Mode,
+        /// Instances the elastic search may gate.
+        n_instances: usize,
+        /// Residual power fraction of a gated instance.
+        residual: f64,
+        /// Which capacity dimensions the search may move.
+        policy: CapacityPolicy,
+        /// Clock-stretch cap (`f64::INFINITY` disables it).
+        latency_cap_sw: f64,
+    },
+    /// No scaling: publish the fixed nominal point every step (the
+    /// offline `nominal` / `power-gating` plants, whose gating lives in
+    /// the plant's power accounting, not in the decision).
+    Fixed {
+        /// Nominal core-rail voltage (V).
+        vcore: f64,
+        /// Nominal BRAM-rail voltage (V).
+        vbram: f64,
+        /// Instance count reported in every decision.
+        n_instances: usize,
+    },
+}
+
+/// Per-margin-level LUT bank (built once at "design synthesis" time).
+enum LutBank {
+    Voltage { luts: Vec<VoltageLut>, n_instances: usize },
+    Elastic(Vec<ElasticLut>),
+    Fixed { vcore: f64, vbram: f64, n_instances: usize },
+}
+
+/// The unified per-group control plane: owns the predictor, the adaptive
+/// guardband, the margin ladder and one LUT per ladder level; consumes
+/// one [`Observation`] per step/epoch and returns the [`Decision`] the
+/// plant publishes. Deterministic and pure — no clock, no RNG — so the
+/// same observation sequence always yields the same decision sequence
+/// (property-tested below and cross-path-tested in
+/// `tests/control_equivalence.rs`).
+pub struct GroupController {
+    cfg: ControlConfig,
+    /// Margin levels LUTs were built for: `[margin_t]` under the static
+    /// policy, the full ladder (plus `margin_t` when it is not already a
+    /// level) under the adaptive guardband. Sorted ascending,
+    /// index-aligned with the LUT bank.
+    margins: Vec<f64>,
+    bank: LutBank,
+    predictor: Box<dyn Predictor>,
+    guardband: Option<Guardband>,
+    /// The forecast made last step for this step — misprediction and
+    /// under-prediction are judged at bin granularity against it.
+    last_predicted: Option<f64>,
+    /// Every decision made so far, in order (the cross-path equivalence
+    /// witness; the live CC takes it into its final report). Unbounded
+    /// by design, like the per-epoch trace the CC has always kept —
+    /// ~64 B per step/epoch; a deployment that outgrows that precedent
+    /// needs to bound both together, not just this log.
+    log: Vec<DecisionRecord>,
+}
+
+impl GroupController {
+    /// Build the controller: margin ladder, one LUT per level (from
+    /// `opt`), predictor and (with `cfg.qos_target`) the guardband.
+    /// Static margin → one LUT level, bit-identical to the pre-refactor
+    /// plants; adaptive → the whole ladder is pre-built so per-step
+    /// decisions stay table lookups (paper §V).
+    pub fn new(cfg: ControlConfig, opt: &Optimizer, spec: LutSpec) -> Self {
+        let guardband_cfg = cfg
+            .qos_target
+            .map(|target| GuardbandConfig::new(cfg.margin_t, target));
+        // Build LUTs for exactly the levels the guardband can request
+        // (guardband::levels: the ladder with static margin and cap
+        // spliced in, truncated at the cap — levels above it could
+        // never be selected and would be pure construction waste).
+        let margins: Vec<f64> = match &guardband_cfg {
+            None => vec![cfg.margin_t],
+            Some(gb) => guardband::levels(gb),
+        };
+        let bank = match spec {
+            LutSpec::Dvfs { mode, n_instances, latency_cap_sw } => LutBank::Voltage {
+                luts: margins
+                    .iter()
+                    .map(|&t| {
+                        VoltageLut::build_with_latency_cap(
+                            opt,
+                            cfg.m_bins,
+                            t,
+                            mode,
+                            latency_cap_sw,
+                        )
+                    })
+                    .collect(),
+                n_instances,
+            },
+            LutSpec::Elastic { mode, n_instances, residual, policy, latency_cap_sw } => {
+                LutBank::Elastic(
+                    margins
+                        .iter()
+                        .map(|&t| {
+                            ElasticLut::build(
+                                opt,
+                                &ElasticConfig {
+                                    m_bins: cfg.m_bins,
+                                    margin_t: t,
+                                    mode,
+                                    n_instances,
+                                    residual,
+                                    policy,
+                                    latency_cap_sw,
+                                },
+                            )
+                        })
+                        .collect(),
+                )
+            }
+            LutSpec::Fixed { vcore, vbram, n_instances } => {
+                LutBank::Fixed { vcore, vbram, n_instances }
+            }
+        };
+        let predictor =
+            cfg.predictor
+                .build(cfg.m_bins, cfg.warmup, cfg.predictor_period);
+        let guardband = guardband_cfg.map(Guardband::new);
+        GroupController {
+            cfg,
+            margins,
+            bank,
+            predictor,
+            guardband,
+            last_predicted: None,
+            log: Vec::new(),
+        }
+    }
+
+    /// The controller's configuration.
+    pub fn cfg(&self) -> &ControlConfig {
+        &self.cfg
+    }
+
+    /// The margin levels the LUT bank was built for (sorted ascending).
+    pub fn margins(&self) -> &[f64] {
+        &self.margins
+    }
+
+    /// The continuous margin the guardband currently requests (the
+    /// static `margin_t` when the guardband is disabled).
+    pub fn margin_now(&self) -> f64 {
+        self.guardband
+            .as_ref()
+            .map(|g| g.margin())
+            .unwrap_or(self.cfg.margin_t)
+    }
+
+    /// Name of the prediction source currently active (the ensemble
+    /// reports its member, never "ensemble").
+    pub fn predictor_now(&self) -> &'static str {
+        self.predictor.active_name()
+    }
+
+    /// Every decision made so far, in order.
+    pub fn decisions(&self) -> &[DecisionRecord] {
+        &self.log
+    }
+
+    /// Take ownership of the decision log (the live CC moves it into the
+    /// final fleet report at shutdown).
+    pub fn take_decisions(&mut self) -> Vec<DecisionRecord> {
+        std::mem::take(&mut self.log)
+    }
+
+    /// Feed one step/epoch's observation and return the decision for the
+    /// next one (see [`GroupController::decide_with_oracle`]).
+    pub fn decide(&mut self, obs: &Observation) -> Decision {
+        self.decide_with_oracle(obs, None)
+    }
+
+    /// The paper's CC loop, in order:
+    ///
+    /// 1. judge last step's forecast against the observed bin
+    ///    (misprediction / under-prediction, shared
+    ///    [`bin_of_load`] mapping);
+    /// 2. train the predictor on the observed load;
+    /// 3. feed the guardband the `(violated, under_predicted)` outcome —
+    ///    boost on either, decay on clean steps (DESIGN.md S7.1);
+    /// 4. forecast the next step (`oracle` overrides the predictor for
+    ///    the offline oracle policy);
+    /// 5. quantize the guardband's margin *up* to its ladder level and
+    ///    look up the level's LUT at `predicted + backlog`
+    ///    (proportionate backpressure — carried work is capacity-planned,
+    ///    not ignored).
+    pub fn decide_with_oracle(&mut self, obs: &Observation, oracle: Option<f64>) -> Decision {
+        let load_bin = bin_of_load(self.cfg.m_bins, obs.load);
+        let (mispredicted, under_predicted) = match self.last_predicted {
+            Some(p) => {
+                let pb = bin_of_load(self.cfg.m_bins, p);
+                (pb != load_bin, pb < load_bin)
+            }
+            None => (false, false),
+        };
+        self.predictor.observe(obs.load);
+        if let Some(gb) = &mut self.guardband {
+            gb.observe(obs.qos_violation, under_predicted);
+        }
+        let predicted = oracle.unwrap_or_else(|| self.predictor.predict());
+        let margin_now = self.margin_now();
+        let level = level_for(&self.margins, margin_now);
+        let margin = self.margins[level];
+
+        // Backlog pressure: size the next step for predicted + carried
+        // work (proportionate backpressure, not a jump to nominal).
+        let eff_load = if obs.backlog > 1e-9 {
+            (predicted + obs.backlog).min(1.0)
+        } else {
+            predicted
+        };
+        let (freq_ratio, vcore, vbram, n_active) = match &self.bank {
+            LutBank::Voltage { luts, n_instances } => {
+                let e = luts[level].entry_for_load(eff_load);
+                (e.freq_ratio, e.point.vcore, e.point.vbram, *n_instances)
+            }
+            LutBank::Elastic(els) => {
+                let e = els[level].entry_for_load(eff_load);
+                (e.freq_ratio, e.point.vcore, e.point.vbram, e.n_active)
+            }
+            LutBank::Fixed { vcore, vbram, n_instances } => {
+                (1.0, *vcore, *vbram, *n_instances)
+            }
+        };
+        self.last_predicted = Some(predicted);
+        let d = Decision {
+            predicted,
+            margin,
+            level,
+            freq_ratio,
+            vcore,
+            vbram,
+            n_active,
+            predictor: self.predictor.active_name(),
+            mispredicted,
+            under_predicted,
+        };
+        self.log.push(d.record());
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::{BenchmarkSpec, DeviceFamily};
+    use crate::chars::CharLibrary;
+    use crate::netlist::gen::{generate, GenConfig};
+    use crate::power::{DesignPower, PowerParams};
+    use crate::sta::{analyze, DelayParams};
+    use crate::util::prng::Rng;
+
+    fn optimizer() -> Optimizer {
+        let chars = CharLibrary::stratix_iv_22nm();
+        let spec = BenchmarkSpec::by_name("tabla").unwrap();
+        let dp = DesignPower::from_spec(
+            spec,
+            &DeviceFamily::stratix_iv(),
+            chars.clone(),
+            PowerParams::default(),
+        )
+        .unwrap();
+        let net = generate(spec, &GenConfig { scale: 0.05, seed: 2019, luts_per_lab: 10 });
+        let rep = analyze(&net, &DelayParams::default(), 8).unwrap();
+        Optimizer::new(chars.grid(), dp.rail_tables(&rep.cp))
+            .with_paths(&chars, rep.top_paths.clone())
+    }
+
+    fn elastic_spec() -> LutSpec {
+        LutSpec::Elastic {
+            mode: Mode::Proposed,
+            n_instances: 4,
+            residual: 0.02,
+            policy: CapacityPolicy::Hybrid,
+            latency_cap_sw: f64::INFINITY,
+        }
+    }
+
+    fn adaptive_cfg() -> ControlConfig {
+        ControlConfig { warmup: 4, qos_target: Some(0.01), ..ControlConfig::default() }
+    }
+
+    /// A plant-shaped observation stream: loads drive a tiny capacity
+    /// model so violations/backlog are self-consistent, like a real
+    /// plant would feed the controller.
+    fn drive(ctl: &mut GroupController, loads: &[f64]) -> Vec<DecisionRecord> {
+        let mut backlog = 0.0f64;
+        let mut capacity = 1.0f64;
+        let mut out = Vec::with_capacity(loads.len());
+        for &load in loads {
+            let demand = load + backlog;
+            let delivered = demand.min(capacity);
+            backlog = (demand - delivered).min(1.0);
+            let d = ctl.decide(&Observation {
+                load,
+                qos_violation: demand - delivered > 1e-9,
+                backlog,
+            });
+            capacity = d.freq_ratio * (d.n_active as f64 / 4.0);
+            out.push(d.record());
+        }
+        out
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_pure() {
+        // Same observation sequence -> same decision sequence, across
+        // independently built controllers (no hidden clock/RNG state),
+        // over randomized load traces and both the static and adaptive
+        // configurations. The controller's own log must equal the
+        // returned sequence (the cross-path witness is trustworthy).
+        let opt = optimizer();
+        let mut rng = Rng::new(7);
+        for case in 0..8 {
+            let loads: Vec<f64> = (0..120).map(|_| rng.f64()).collect();
+            let cfg = if case % 2 == 0 {
+                ControlConfig { warmup: 4, ..ControlConfig::default() }
+            } else {
+                adaptive_cfg()
+            };
+            let mut a = GroupController::new(cfg, &opt, elastic_spec());
+            let mut b = GroupController::new(cfg, &opt, elastic_spec());
+            let da = drive(&mut a, &loads);
+            let db = drive(&mut b, &loads);
+            assert_eq!(da, db, "case {case}: controllers diverged");
+            assert_eq!(a.decisions(), da.as_slice(), "log must equal returned decisions");
+            assert_eq!(a.take_decisions(), db, "take_decisions drains the same log");
+            assert!(a.decisions().is_empty());
+        }
+    }
+
+    #[test]
+    fn static_config_builds_one_margin_level() {
+        let opt = optimizer();
+        let ctl = GroupController::new(ControlConfig::default(), &opt, elastic_spec());
+        assert_eq!(ctl.margins(), &[0.05]);
+        assert!((ctl.margin_now() - 0.05).abs() < 1e-12);
+        assert_eq!(ctl.predictor_now(), "markov");
+    }
+
+    #[test]
+    fn adaptive_config_builds_the_reachable_ladder_prefix() {
+        // The default guardband is capped at the static margin, so only
+        // ladder levels up to that cap get LUTs — levels above it could
+        // never be selected and would be pure construction waste.
+        let opt = optimizer();
+        let ctl = GroupController::new(adaptive_cfg(), &opt, elastic_spec());
+        assert_eq!(ctl.margins(), &MARGIN_LADDER[..=ladder_level(0.05)]);
+        assert_eq!(ctl.margins().last().copied(), Some(0.05), "cap is a level");
+        // A non-ladder static margin is spliced in as its own exact
+        // level (the pareto cap stays representable).
+        let cfg = ControlConfig { margin_t: 0.06, ..adaptive_cfg() };
+        let ctl = GroupController::new(cfg, &opt, elastic_spec());
+        assert_eq!(ctl.margins().last().copied(), Some(0.06));
+        assert_eq!(
+            ctl.margins().len(),
+            ladder_level(0.05) + 2,
+            "levels <= 0.05 plus the spliced 0.06 cap"
+        );
+    }
+
+    #[test]
+    fn warmup_pins_to_max_then_tracks_the_load() {
+        let opt = optimizer();
+        let mut ctl = GroupController::new(
+            ControlConfig { warmup: 3, ..ControlConfig::default() },
+            &opt,
+            elastic_spec(),
+        );
+        let obs = Observation { load: 0.2, qos_violation: false, backlog: 0.0 };
+        // The plant observes before it predicts, so with warmup = 3 the
+        // first two decisions still fall inside the training phase.
+        for _ in 0..2 {
+            let d = ctl.decide(&obs);
+            assert_eq!(d.predicted, 1.0, "training phase runs at maximum");
+        }
+        for _ in 0..10 {
+            ctl.decide(&obs);
+        }
+        let d = ctl.decide(&obs);
+        assert!(d.predicted < 0.5, "post-warmup tracks the low load: {d:?}");
+        assert!(d.freq_ratio < 1.0 || d.n_active < 4, "operating point follows");
+    }
+
+    #[test]
+    fn oracle_overrides_the_predictor() {
+        let opt = optimizer();
+        let mut ctl = GroupController::new(
+            ControlConfig { warmup: 0, ..ControlConfig::default() },
+            &opt,
+            elastic_spec(),
+        );
+        let obs = Observation { load: 0.1, qos_violation: false, backlog: 0.0 };
+        let d = ctl.decide_with_oracle(&obs, Some(0.93));
+        assert_eq!(d.predicted, 0.93);
+        assert!((d.freq_ratio - 1.0).abs() < 1e-9, "top bin needs full frequency");
+        // The oracle forecast is also the baseline the next observation
+        // is judged against.
+        let d = ctl.decide(&Observation { load: 0.12, qos_violation: false, backlog: 0.0 });
+        assert!(d.mispredicted, "0.93 forecast vs 0.12 observed must mispredict");
+        assert!(!d.under_predicted, "over-prediction, not under");
+    }
+
+    #[test]
+    fn backlog_backpressure_raises_the_lookup_bin() {
+        let opt = optimizer();
+        let mk = || {
+            GroupController::new(
+                ControlConfig { warmup: 0, ..ControlConfig::default() },
+                &opt,
+                elastic_spec(),
+            )
+        };
+        // Same trained state, same load; only the carried backlog differs.
+        let train = |ctl: &mut GroupController| {
+            for _ in 0..30 {
+                ctl.decide(&Observation { load: 0.25, qos_violation: false, backlog: 0.0 });
+            }
+        };
+        let (mut clean, mut carrying) = (mk(), mk());
+        train(&mut clean);
+        train(&mut carrying);
+        let d0 = clean.decide(&Observation { load: 0.25, qos_violation: false, backlog: 0.0 });
+        let d1 = carrying.decide(&Observation {
+            load: 0.25,
+            qos_violation: true,
+            backlog: 0.5,
+        });
+        assert!(
+            d1.freq_ratio * d1.n_active as f64 > d0.freq_ratio * d0.n_active as f64,
+            "carried work must be capacity-planned: {d0:?} vs {d1:?}"
+        );
+    }
+
+    #[test]
+    fn guardband_boost_raises_the_next_operating_point() {
+        let opt = optimizer();
+        let mut ctl = GroupController::new(
+            ControlConfig { warmup: 2, ..adaptive_cfg() },
+            &opt,
+            elastic_spec(),
+        );
+        // Long quiet run: the margin decays below the static 5%.
+        for _ in 0..120 {
+            ctl.decide(&Observation { load: 0.22, qos_violation: false, backlog: 0.0 });
+        }
+        assert!(ctl.margin_now() < 0.05, "decayed: {}", ctl.margin_now());
+        let before = ctl
+            .decide(&Observation { load: 0.22, qos_violation: false, backlog: 0.0 });
+        // A three-bin surge: the under-prediction boosts the margin and
+        // the published capacity covers the observed bin.
+        let after = ctl.decide(&Observation { load: 0.62, qos_violation: true, backlog: 0.1 });
+        assert!(after.under_predicted);
+        assert!(after.margin >= before.margin, "{} -> {}", before.margin, after.margin);
+        assert!(
+            after.freq_ratio * (after.n_active as f64 / 4.0)
+                > before.freq_ratio * (before.n_active as f64 / 4.0),
+            "boost must raise published capacity: {before:?} vs {after:?}"
+        );
+        // Default guardband never exceeds the static cap.
+        assert!(after.margin <= 0.05 + 1e-12);
+    }
+
+    #[test]
+    fn fixed_bank_always_publishes_nominal() {
+        let opt = optimizer();
+        let mut ctl = GroupController::new(
+            ControlConfig { warmup: 0, ..ControlConfig::default() },
+            &opt,
+            LutSpec::Fixed { vcore: 0.8, vbram: 0.95, n_instances: 4 },
+        );
+        for load in [0.05, 0.5, 0.95] {
+            let d = ctl.decide(&Observation { load, qos_violation: false, backlog: 0.0 });
+            assert_eq!((d.freq_ratio, d.vcore, d.vbram, d.n_active), (1.0, 0.8, 0.95, 4));
+            assert!(d.predicted <= 1.0, "predictor still runs for the record columns");
+        }
+    }
+
+    #[test]
+    fn dvfs_bank_keeps_every_instance_active() {
+        let opt = optimizer();
+        let mut ctl = GroupController::new(
+            ControlConfig { warmup: 0, ..ControlConfig::default() },
+            &opt,
+            LutSpec::Dvfs { mode: Mode::Proposed, n_instances: 6, latency_cap_sw: f64::INFINITY },
+        );
+        for _ in 0..20 {
+            let d = ctl.decide(&Observation { load: 0.1, qos_violation: false, backlog: 0.0 });
+            assert_eq!(d.n_active, 6, "pure DVFS never gates");
+        }
+    }
+
+    #[test]
+    fn ensemble_forced_switch_pins_the_gauge_index() {
+        // The live `predictor_now` gauge publishes
+        // `PredictorKind::index_of_name(active member)`. After a forced
+        // switch on a clean sinusoid the controller must report the
+        // periodic member — and its gauge index — never "ensemble".
+        let opt = optimizer();
+        let mut ctl = GroupController::new(
+            ControlConfig {
+                warmup: 4,
+                predictor: PredictorKind::Ensemble,
+                predictor_period: 24,
+                ..ControlConfig::default()
+            },
+            &opt,
+            elastic_spec(),
+        );
+        assert_eq!(ctl.predictor_now(), "markov", "startup member, not \"ensemble\"");
+        let signal = |t: usize| {
+            0.25 + 0.5
+                * ((t % 24) as f64 / 24.0 * std::f64::consts::TAU).sin().abs()
+        };
+        let mut last = None;
+        for t in 0..400 {
+            last = Some(ctl.decide(&Observation {
+                load: signal(t),
+                qos_violation: false,
+                backlog: 0.0,
+            }));
+        }
+        assert_eq!(ctl.predictor_now(), "periodic", "clean sinusoid forces the switch");
+        assert_eq!(PredictorKind::index_of_name(ctl.predictor_now()), 2);
+        assert_eq!(last.unwrap().predictor, "periodic", "decisions carry the member name");
+    }
+}

@@ -15,6 +15,18 @@
 //! aggregate power and QoS across groups — the live counterpart of
 //! `platform::fleet::FleetReport`.
 //!
+//! Since the control-plane extraction (DESIGN.md S19) the CC itself is a
+//! pure *plant*: it keeps the serving mechanics — arrival counters,
+//! backlog/violation accounting, shard gating + drain, gauges, energy
+//! integration — and delegates every per-epoch decision (predict,
+//! guardband, margin ladder, elastic LUT lookup) to one
+//! [`GroupController`](crate::control::GroupController) per group, the
+//! same engine `platform::Platform` runs offline. The controllers' full
+//! decision logs come back in
+//! [`FleetServingReport::decision_records`]; replaying the observed
+//! per-epoch loads through the offline platform must reproduce them
+//! exactly (`tests/control_equivalence.rs`).
+//!
 //! Each group's CC decision is **elastic** (DESIGN.md S6.1): instead of
 //! DVFS over a fixed instance count, the per-group
 //! [`ElasticLut`](crate::vscale::ElasticLut) picks the minimum-power
@@ -47,18 +59,24 @@ use super::backend::InferenceBackend;
 use super::dispatch::{DispatchPolicy, Dispatcher};
 use super::shard::ShardQueue;
 use super::{Completion, EpochRecord, Request, SubmitError};
-use crate::markov::guardband::{ladder_with, level_for};
-use crate::markov::{Guardband, GuardbandConfig, Predictor, PredictorKind};
+use crate::control::{
+    ControlConfig, DecisionRecord, GroupController, LutSpec, Observation,
+};
+use crate::markov::PredictorKind;
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
-use crate::workload::bin_of_load;
 use crate::platform::{build_platform, PlatformConfig, Policy};
 use crate::power::DesignPower;
 use crate::runtime::{Engine, OpQuery, VoltageSelectorClient};
-use crate::vscale::{CapacityPolicy, ElasticConfig, ElasticLut, Mode, Optimizer};
+use crate::vscale::{CapacityPolicy, Mode, Optimizer};
 
 /// Normalized nominal service clock (Hz); only the ratio to the published
 /// frequency matters for the simulated occupancy.
 pub(crate) const F_NOM_HZ: f64 = 1.0e8;
+
+/// What the CC thread hands back at shutdown: per-group epoch traces and
+/// per-group control-plane decision logs, both index-aligned with the
+/// fleet's groups.
+type CcOutput = (Vec<Vec<EpochRecord>>, Vec<Vec<DecisionRecord>>);
 
 /// One tenant group of a live fleet.
 #[derive(Clone, Debug)]
@@ -105,6 +123,11 @@ pub struct FleetServingConfig {
     pub capacity_policy: CapacityPolicy,
     /// Residual power fraction (of nominal) drawn by a gated instance.
     pub pg_residual: f64,
+    /// Bounded backlog, in units of one epoch's nominal capacity — the
+    /// live twin of the offline `PlatformConfig.max_backlog_steps` (the
+    /// cross-path decision-equivalence contract requires the two to
+    /// match; both default to 1.0).
+    pub max_backlog_steps: f64,
     /// Workload predictor driving every group's CC (DESIGN.md S7):
     /// `Ensemble` runs all predictors shadow-mode per group and switches
     /// the active one with hysteresis.
@@ -145,6 +168,7 @@ impl Default for FleetServingConfig {
             steal: true,
             capacity_policy: CapacityPolicy::Hybrid,
             pg_residual: 0.02,
+            max_backlog_steps: 1.0,
             predictor: PredictorKind::Markov,
             predictor_period: 96,
             qos_target: None,
@@ -327,6 +351,13 @@ pub struct FleetServingReport {
     pub stats: FleetServingStats,
     /// Per-group CC epoch traces (index-aligned with `stats.per_group`).
     pub epoch_records: Vec<Vec<EpochRecord>>,
+    /// Per-group control-plane decision logs (index-aligned with
+    /// `stats.per_group`): the exact [`DecisionRecord`] sequence each
+    /// group's [`GroupController`] produced, one per epoch. Replaying
+    /// the observed epoch loads through the offline `platform::Platform`
+    /// must reproduce these sequences identically
+    /// (`tests/control_equivalence.rs`).
+    pub decision_records: Vec<Vec<DecisionRecord>>,
 }
 
 /// The live multi-tenant coordinator.
@@ -337,7 +368,7 @@ pub struct FleetServing {
     registry: Arc<Registry>,
     shutdown: Arc<AtomicBool>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    controller: Option<std::thread::JoinHandle<Vec<Vec<EpochRecord>>>>,
+    controller: Option<std::thread::JoinHandle<CcOutput>>,
     rejected_total: Arc<Counter>,
     next_id: AtomicU64,
 }
@@ -419,8 +450,12 @@ impl FleetServing {
                 vbram_mv: AtomicU64::new(950),
                 active_now: AtomicU64::new(g.n_instances as u64),
                 margin_now: AtomicU64::new(cfg.margin_t.to_bits()),
+                // Seed with the *active member* name so stats queried
+                // before the first CC epoch report a real predictor
+                // ("markov"), never the literal "ensemble" — the offline
+                // path's active_name() semantics.
                 predictor_now: AtomicU64::new(PredictorKind::index_of_name(
-                    cfg.predictor.name(),
+                    cfg.predictor.initial_active_name(),
                 ) as u64),
                 arrivals_this_epoch: AtomicU64::new(0),
                 admitted: Counter::default(),
@@ -546,7 +581,7 @@ impl FleetServing {
             let stop = shutdown.clone();
             let registry2 = registry.clone();
             let cc_actor = cfg.clock.register_actor("cc");
-            std::thread::spawn(move || -> Vec<Vec<EpochRecord>> {
+            std::thread::spawn(move || -> CcOutput {
                 let _actor = ActorScope::attach(&cfg2.clock, cc_actor);
                 let engine = if cfg2.selector_via_pjrt {
                     Engine::open(&dir).ok()
@@ -556,16 +591,11 @@ impl FleetServing {
                 struct GroupCc {
                     design: DesignPower,
                     optimizer: Optimizer,
-                    /// Margin levels the elastic LUTs were built for
-                    /// (index-aligned with `elastics`): the single static
-                    /// `margin_t`, or the full ladder under the adaptive
-                    /// guardband.
-                    margins: Vec<f64>,
-                    elastics: Vec<ElasticLut>,
-                    predictor: Box<dyn Predictor>,
-                    guardband: Option<Guardband>,
-                    /// Forecast made last epoch for the epoch now ending.
-                    last_predicted: Option<f64>,
+                    /// The shared per-group control plane (DESIGN.md
+                    /// S19): predictor, guardband, margin ladder and
+                    /// per-level elastic LUTs — the same engine the
+                    /// offline platform runs.
+                    controller: GroupController,
                     backlog: f64,
                     cap: f64,
                     margin_gauge: std::sync::Arc<Gauge>,
@@ -576,74 +606,62 @@ impl FleetServing {
                     served_vcore: f64,
                     served_vbram: f64,
                     served_active: usize,
-                    served_margin: f64,
-                    served_predictor: &'static str,
                 }
                 let mut ccs: Vec<GroupCc> = built
                     .into_iter()
                     .zip(&groups)
                     .map(|((design, optimizer), g)| {
-                        // Static margin: one LUT level (the original
-                        // behavior). Adaptive: the whole margin ladder —
-                        // plus margin_t when it is not a ladder level, so
-                        // the pareto cap is exactly representable — is
-                        // pre-built so the per-epoch decision stays a
-                        // table lookup (paper §V).
-                        let margins: Vec<f64> = match cfg2.qos_target {
-                            None => vec![cfg2.margin_t],
-                            Some(_) => ladder_with(cfg2.margin_t),
-                        };
-                        let elastics: Vec<ElasticLut> = margins
-                            .iter()
-                            .map(|&t| {
-                                ElasticLut::build(
-                                    &optimizer,
-                                    &ElasticConfig {
-                                        m_bins: cfg2.m_bins,
-                                        margin_t: t,
-                                        mode: cfg2.mode,
-                                        n_instances: g.n_instances,
-                                        residual: cfg2.pg_residual,
-                                        policy: cfg2.capacity_policy,
-                                        latency_cap_sw: f64::INFINITY,
-                                    },
-                                )
-                            })
-                            .collect();
+                        // All decision machinery — margin ladder, LUT
+                        // builds, guardband — is the controller's
+                        // (DESIGN.md S19); the CC only picks the elastic
+                        // LUT family matching its capacity policy.
+                        let controller = GroupController::new(
+                            ControlConfig {
+                                m_bins: cfg2.m_bins,
+                                margin_t: cfg2.margin_t,
+                                warmup: cfg2.warmup_epochs,
+                                predictor: cfg2.predictor,
+                                predictor_period: cfg2.predictor_period,
+                                qos_target: cfg2.qos_target,
+                            },
+                            &optimizer,
+                            LutSpec::Elastic {
+                                mode: cfg2.mode,
+                                n_instances: g.n_instances,
+                                residual: cfg2.pg_residual,
+                                policy: cfg2.capacity_policy,
+                                latency_cap_sw: f64::INFINITY,
+                            },
+                        );
                         let cap = g.n_instances as f64
                             * (F_NOM_HZ / cfg2.cycles_per_batch)
                             * g.batch as f64
                             * cfg2.epoch.as_secs_f64();
                         let served_vcore = design.chars.logic.v_nom;
                         let served_vbram = design.chars.bram.v_nom;
-                        let predictor = cfg2.predictor.build(
-                            cfg2.m_bins,
-                            cfg2.warmup_epochs,
-                            cfg2.predictor_period,
-                        );
-                        let served_predictor = predictor.active_name();
+                        let margin_gauge =
+                            registry2.gauge(&format!("{}.margin_now", g.name));
+                        let predictor_gauge =
+                            registry2.gauge(&format!("{}.predictor_now", g.name));
+                        // Seed the gauges so reads before the first epoch
+                        // see the startup state (static margin, active
+                        // predictor member) instead of zeros.
+                        margin_gauge.set(cfg2.margin_t);
+                        predictor_gauge.set(PredictorKind::index_of_name(
+                            controller.predictor_now(),
+                        ) as f64);
                         GroupCc {
                             design,
                             optimizer,
-                            margins,
-                            elastics,
-                            predictor,
-                            guardband: cfg2.qos_target.map(|target| {
-                                Guardband::new(GuardbandConfig::new(cfg2.margin_t, target))
-                            }),
-                            last_predicted: None,
+                            controller,
                             backlog: 0.0,
                             cap,
-                            margin_gauge: registry2
-                                .gauge(&format!("{}.margin_now", g.name)),
-                            predictor_gauge: registry2
-                                .gauge(&format!("{}.predictor_now", g.name)),
+                            margin_gauge,
+                            predictor_gauge,
                             served_fr: 1.0,
                             served_vcore,
                             served_vbram,
                             served_active: g.n_instances,
-                            served_margin: cfg2.margin_t,
-                            served_predictor,
                         }
                     })
                     .collect();
@@ -662,55 +680,41 @@ impl FleetServing {
                         // Demand is judged against the capacity that
                         // actually served this epoch — active instances ×
                         // their frequency — not the one about to be
-                        // published.
-                        let served_cap = cc.served_fr * cc.served_active as f64
-                            / g.n_instances as f64;
+                        // published. (Same expression shape as the
+                        // offline plant's capacity so the two paths'
+                        // float results are bit-identical.)
+                        let served_cap = cc.served_fr
+                            * (cc.served_active as f64 / g.n_instances as f64);
                         let demand = load + cc.backlog;
                         let delivered = demand.min(served_cap);
-                        cc.backlog = (demand - delivered).min(1.0);
+                        cc.backlog =
+                            (demand - delivered).min(cfg2.max_backlog_steps);
                         let violated = demand - delivered > 1e-9;
                         if violated {
                             g.violations.inc();
                         }
 
-                        // ---- predict + adaptive guardband ---------------
-                        // Under-prediction is judged at bin granularity
-                        // against the forecast made last epoch.
-                        let under_predicted = cc
-                            .last_predicted
-                            .map(|p| {
-                                bin_of_load(cfg2.m_bins, p)
-                                    < bin_of_load(cfg2.m_bins, load)
-                            })
-                            .unwrap_or(false);
-                        cc.predictor.observe(load);
-                        if let Some(gb) = &mut cc.guardband {
-                            // The paper's "adjustment to the workload":
-                            // an under-prediction or violation boosts the
-                            // margin — and via the LUT ladder the
-                            // frequency published below, within the LUT's
-                            // slack — while clean epochs decay it.
-                            gb.observe(violated, under_predicted);
-                        }
-                        let predicted = cc.predictor.predict();
-                        cc.last_predicted = Some(predicted);
-                        let margin_now = cc
-                            .guardband
-                            .as_ref()
-                            .map(|gb| gb.margin())
-                            .unwrap_or(cfg2.margin_t);
-                        let level = level_for(&cc.margins, margin_now);
-                        let margin_applied = cc.margins[level];
+                        // ---- one decision via the shared control plane --
+                        // Misprediction judgement, predictor training,
+                        // guardband feedback, margin-ladder quantization,
+                        // backlog backpressure and the elastic LUT lookup
+                        // all live in control::GroupController (DESIGN.md
+                        // S19) — the exact engine the offline platform
+                        // runs per step.
+                        let d = cc.controller.decide(&Observation {
+                            load,
+                            qos_violation: violated,
+                            backlog: cc.backlog,
+                        });
 
-                        // Elastic decision: minimum-power (n_active, V, f)
-                        // for the predicted bin at the applied margin
-                        // level (DESIGN.md S6.1 + S7.1).
-                        let entry = *cc.elastics[level].entry_for_load(predicted);
-                        let mut choice = entry.point;
                         // Refine through the AOT'd Voltage Selector when
                         // available; keep the native point on any error.
                         // PG-only pins active instances at nominal V/f, so
-                        // its point is never refined.
+                        // its point is never refined. (Serving-side
+                        // refinement, not a control decision: virtual-time
+                        // runs skip it so the decision log stays
+                        // environment-independent.)
+                        let (mut vcore_next, mut vbram_next) = (d.vcore, d.vbram);
                         if cfg2.capacity_policy != CapacityPolicy::GatingOnly {
                             if let Some(engine) = &engine {
                                 let vs = VoltageSelectorClient::new(engine);
@@ -719,15 +723,14 @@ impl FleetServing {
                                     beta: cc.optimizer.tables.op.beta as f32,
                                     gamma_l: cc.optimizer.tables.op.gamma_l as f32,
                                     gamma_m: cc.optimizer.tables.op.gamma_m as f32,
-                                    sw: (1.0 / entry.freq_ratio) as f32,
+                                    sw: (1.0 / d.freq_ratio) as f32,
                                 };
                                 if let Ok(choices) =
                                     vs.select(cfg2.mode, &cc.optimizer.tables, &[q])
                                 {
                                     if let Some(c) = choices.first() {
-                                        choice.vcore = c.vcore;
-                                        choice.vbram = c.vbram;
-                                        choice.power_norm = c.power_norm;
+                                        vcore_next = c.vcore;
+                                        vbram_next = c.vbram;
                                     }
                                 }
                             }
@@ -752,52 +755,57 @@ impl FleetServing {
                         g.energy_j.add(p * cfg2.epoch.as_secs_f64());
                         g.nominal_energy_j.add(p_nom * cfg2.epoch.as_secs_f64());
                         g.epochs.inc();
+                        // Same column alignment as the offline
+                        // StepRecord: the operating point that SERVED
+                        // this epoch, plus the forecast/margin/predictor
+                        // of the decision MADE this epoch.
                         records[gi].push(EpochRecord {
                             epoch,
                             load,
-                            predicted,
-                            freq_ratio: cc.served_fr,
-                            vcore: cc.served_vcore,
-                            vbram: cc.served_vbram,
+                            decision: DecisionRecord {
+                                predicted: d.predicted,
+                                freq_ratio: cc.served_fr,
+                                vcore: cc.served_vcore,
+                                vbram: cc.served_vbram,
+                                n_active: cc.served_active,
+                                predictor: d.predictor,
+                                margin: d.margin,
+                            },
                             power_w: p,
-                            active: cc.served_active,
-                            predictor: cc.served_predictor,
-                            margin: cc.served_margin,
                         });
 
                         // ---- publish the next operating point -----------
                         g.freq_ratio
-                            .store(entry.freq_ratio.to_bits(), Ordering::Relaxed);
+                            .store(d.freq_ratio.to_bits(), Ordering::Relaxed);
                         g.vcore_mv
-                            .store(volts_to_mv(choice.vcore), Ordering::Relaxed);
+                            .store(volts_to_mv(vcore_next), Ordering::Relaxed);
                         g.vbram_mv
-                            .store(volts_to_mv(choice.vbram), Ordering::Relaxed);
+                            .store(volts_to_mv(vbram_next), Ordering::Relaxed);
                         g.active_now
-                            .store(entry.n_active as u64, Ordering::Relaxed);
-                        let active_predictor = cc.predictor.active_name();
+                            .store(d.n_active as u64, Ordering::Relaxed);
                         g.margin_now
-                            .store(margin_applied.to_bits(), Ordering::Relaxed);
+                            .store(d.margin.to_bits(), Ordering::Relaxed);
                         g.predictor_now.store(
-                            PredictorKind::index_of_name(active_predictor) as u64,
+                            PredictorKind::index_of_name(d.predictor) as u64,
                             Ordering::Relaxed,
                         );
-                        cc.margin_gauge.set(margin_applied);
+                        cc.margin_gauge.set(d.margin);
                         cc.predictor_gauge
-                            .set(PredictorKind::index_of_name(active_predictor) as f64);
+                            .set(PredictorKind::index_of_name(d.predictor) as f64);
 
                         // ---- gate / ungate + drain ----------------------
                         // Shards [n_active..) are gated; anything still
                         // queued on them is re-dispatched into the active
                         // shards so admitted requests are never dropped.
                         for (i, s) in g.shards.iter().enumerate() {
-                            s.set_gated(i >= entry.n_active);
+                            s.set_gated(i >= d.n_active);
                         }
                         let mut cursor = 0usize;
-                        for gated_shard in g.shards.iter().skip(entry.n_active) {
+                        for gated_shard in g.shards.iter().skip(d.n_active) {
                             for mut r in gated_shard.drain_all() {
                                 let mut placed = false;
-                                for _ in 0..entry.n_active {
-                                    let t = cursor % entry.n_active;
+                                for _ in 0..d.n_active {
+                                    let t = cursor % d.n_active;
                                     cursor += 1;
                                     match g.shards[t].try_push(r) {
                                         Ok(()) => {
@@ -816,16 +824,18 @@ impl FleetServing {
                                 }
                             }
                         }
-                        cc.served_fr = entry.freq_ratio;
-                        cc.served_vcore = choice.vcore;
-                        cc.served_vbram = choice.vbram;
-                        cc.served_active = entry.n_active;
-                        cc.served_margin = margin_applied;
-                        cc.served_predictor = active_predictor;
+                        cc.served_fr = d.freq_ratio;
+                        cc.served_vcore = vcore_next;
+                        cc.served_vbram = vbram_next;
+                        cc.served_active = d.n_active;
                     }
                     epoch += 1;
                 }
-                records
+                let decisions = ccs
+                    .iter_mut()
+                    .map(|cc| cc.controller.take_decisions())
+                    .collect();
+                (records, decisions)
             })
         };
 
@@ -1052,12 +1062,12 @@ impl FleetServing {
         let controller = self.controller.take().map(|c| c.join());
         self.cfg.clock.resume_current();
         anyhow::ensure!(!worker_panicked, "worker panicked");
-        let epoch_records = match controller {
-            Some(Ok(records)) => records,
+        let (epoch_records, decision_records) = match controller {
+            Some(Ok(output)) => output,
             Some(Err(_)) => anyhow::bail!("controller panicked"),
-            None => Vec::new(),
+            None => (Vec::new(), Vec::new()),
         };
-        Ok(FleetServingReport { stats: self.stats(), epoch_records })
+        Ok(FleetServingReport { stats: self.stats(), epoch_records, decision_records })
     }
 }
 
@@ -1175,6 +1185,7 @@ pub fn fleet_report_rows(stats: &FleetServingStats) -> Vec<Vec<String>> {
 mod tests {
     use super::*;
     use crate::clock::VirtualClock;
+    use crate::vscale::{ElasticConfig, ElasticLut};
 
     fn reqs(n: usize) -> Vec<Request> {
         // Timestamps route through the injected clock; unit tests pin them
@@ -1332,6 +1343,45 @@ mod tests {
         assert_eq!(
             fleet.registry().gauge("tabla.predictor_now").get(),
             crate::markov::PredictorKind::index_of_name("markov") as f64
+        );
+        fleet.shutdown().unwrap();
+    }
+
+    #[test]
+    fn ensemble_gauge_reports_the_active_member_never_ensemble() {
+        // Regression (ISSUE 5 satellite): the live path used to seed the
+        // predictor_now index from the configured kind, so stats read
+        // before the first CC epoch reported the literal "ensemble"
+        // where the offline path reports the active member.
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        let _driver = ActorScope::enter(&clock, "test-driver");
+        let cfg = FleetServingConfig {
+            groups: vec![GroupConfig {
+                benchmark: "tabla".into(),
+                share: 1.0,
+                n_instances: 2,
+            }],
+            epoch: Duration::from_millis(20),
+            warmup_epochs: 0,
+            selector_via_pjrt: false,
+            predictor: PredictorKind::Ensemble,
+            clock: clock.clone(),
+            ..Default::default()
+        };
+        let fleet = FleetServing::start(cfg, "sim-no-artifacts".into()).unwrap();
+        // Before the first CC epoch: the startup member, not "ensemble".
+        assert_eq!(fleet.stats().per_group[0].predictor_now, "markov");
+        clock.sleep(Duration::from_millis(100));
+        let now = fleet.stats().per_group[0].predictor_now;
+        assert_ne!(now, "ensemble", "the gauge must always name a member");
+        assert!(
+            crate::markov::PREDICTOR_NAMES[1..].contains(&now),
+            "unknown member {now}"
+        );
+        // The registry gauge publishes the member's index table entry.
+        assert_eq!(
+            fleet.registry().gauge("tabla.predictor_now").get(),
+            PredictorKind::index_of_name(now) as f64
         );
         fleet.shutdown().unwrap();
     }

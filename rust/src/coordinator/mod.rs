@@ -255,30 +255,34 @@ pub struct ServingStats {
 }
 
 /// Per-epoch CC trace row.
+///
+/// The decision columns live in the embedded
+/// [`DecisionRecord`](crate::control::DecisionRecord) — shared with the
+/// offline `platform::StepRecord` so the two trace formats cannot drift
+/// — and are reachable directly through `Deref` (`rec.freq_ratio`,
+/// `rec.margin`, ...). Alignment matches `StepRecord` exactly:
+/// `freq_ratio`/`vcore`/`vbram`/`n_active` are the operating point that
+/// *served* this epoch (published at the end of the previous one), and
+/// `predicted`/`predictor`/`margin` come from the decision *made* this
+/// epoch.
 #[derive(Clone, Copy, Debug)]
 pub struct EpochRecord {
     /// Epoch index.
     pub epoch: usize,
     /// Normalized load observed over the epoch.
     pub load: f64,
-    /// Load the predictor forecast for the next epoch.
-    pub predicted: f64,
-    /// f / f_nom that served this epoch.
-    pub freq_ratio: f64,
-    /// Core-rail voltage that served this epoch (V).
-    pub vcore: f64,
-    /// BRAM-rail voltage that served this epoch (V).
-    pub vbram: f64,
+    /// Shared decision columns (see the struct-level note on alignment).
+    pub decision: crate::control::DecisionRecord,
     /// Group power at the serving operating point (W).
     pub power_w: f64,
-    /// Instances that served this epoch (the rest were gated).
-    pub active: usize,
-    /// Prediction source behind the decision that served this epoch (the
-    /// ensemble reports its active member).
-    pub predictor: &'static str,
-    /// Throughput margin (LUT ladder level) behind the decision that
-    /// served this epoch.
-    pub margin: f64,
+}
+
+impl std::ops::Deref for EpochRecord {
+    type Target = crate::control::DecisionRecord;
+
+    fn deref(&self) -> &crate::control::DecisionRecord {
+        &self.decision
+    }
 }
 
 /// Single-tenant serving coordinator: a one-group [`FleetServing`].
@@ -321,6 +325,7 @@ impl Coordinator {
             steal: cfg.steal,
             capacity_policy: cfg.capacity_policy,
             pg_residual: cfg.pg_residual,
+            max_backlog_steps: 1.0,
             predictor: cfg.predictor,
             predictor_period: cfg.predictor_period,
             qos_target: cfg.qos_target,

@@ -17,6 +17,7 @@ pub mod bench_support;
 pub mod cli;
 pub mod clock;
 pub mod config;
+pub mod control;
 pub mod coordinator;
 pub mod simtest;
 pub mod metrics;

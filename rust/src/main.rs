@@ -11,8 +11,8 @@
 
 use wavescale::arch::{BenchmarkSpec, DeviceFamily, TABLE1};
 use wavescale::chars::{CharLibrary, ResourceClass};
-use wavescale::cli::Args;
-use wavescale::config::{policy_by_name, SimConfig};
+use wavescale::cli::{Args, ControlFlags};
+use wavescale::config::SimConfig;
 use wavescale::markov::Predictor;
 use wavescale::netlist::gen::{generate, GenConfig};
 use wavescale::platform::{build_platform, Policy};
@@ -135,7 +135,7 @@ fn sta_cmd(args: &Args) -> Result<(), String> {
     let name = args.flag_or("benchmark", "tabla");
     let spec = BenchmarkSpec::by_name(name).ok_or_else(|| format!("unknown benchmark {name}"))?;
     let scale = args.flag_f64("scale")?.unwrap_or(0.05);
-    let seed = args.flag_usize("seed")?.unwrap_or(2019) as u64;
+    let seed = ControlFlags::parse(args)?.seed_or(2019);
     let net = generate(spec, &GenConfig { scale, seed, luts_per_lab: 10 });
     let rep = analyze(&net, &DelayParams::default(), 8)?;
     let c = net.counts();
@@ -199,9 +199,6 @@ fn simulate(args: &Args) -> Result<(), String> {
     if let Some(b) = args.flag("benchmark") {
         cfg.benchmark = b.to_string();
     }
-    if let Some(p) = args.flag("policy") {
-        cfg.policy = policy_by_name(p)?;
-    }
     if let Some(s) = args.flag_usize("steps")? {
         cfg.workload.steps = s;
     }
@@ -211,14 +208,19 @@ fn simulate(args: &Args) -> Result<(), String> {
     if let Some(n) = args.flag_usize("n-fpgas")? {
         cfg.platform.n_fpgas = n;
     }
-    if let Some(s) = args.flag_usize("seed")? {
-        cfg.workload.seed = s as u64;
+    // Shared control-plane flags (one builder for every subcommand).
+    let flags = ControlFlags::parse(args)?;
+    if let Some(p) = flags.policy {
+        cfg.policy = p;
     }
-    if let Some(p) = args.flag("predictor") {
-        cfg.platform.predictor = wavescale::markov::PredictorKind::by_name(p)?;
+    if let Some(s) = flags.seed {
+        cfg.workload.seed = s;
     }
-    if let Some(q) = args.flag_f64("qos-target")? {
-        cfg.platform.qos_target = Some(q);
+    if let Some(p) = flags.predictor {
+        cfg.platform.predictor = p;
+    }
+    if flags.qos_target.is_some() {
+        cfg.platform.qos_target = flags.qos_target;
     }
     cfg.validate()?;
 
@@ -255,7 +257,7 @@ fn simulate(args: &Args) -> Result<(), String> {
             rows.push(vec![
                 r.step.to_string(),
                 format!("{:.4}", r.load),
-                format!("{:.4}", r.predicted_load),
+                format!("{:.4}", r.predicted),
                 r.predictor.to_string(),
                 format!("{:.3}", r.margin),
                 format!("{:.4}", r.freq_ratio),
@@ -275,9 +277,10 @@ fn simulate(args: &Args) -> Result<(), String> {
 
 fn predict(args: &Args) -> Result<(), String> {
     args.check_known(&["steps", "bins", "kind", "seed", "predictor"])?;
+    let flags = ControlFlags::parse(args)?;
     let steps = args.flag_usize("steps")?.unwrap_or(2000);
     let bins = args.flag_usize("bins")?.unwrap_or(10);
-    let seed = args.flag_usize("seed")?.unwrap_or(7) as u64;
+    let seed = flags.seed_or(7);
     let kind = args.flag_or("kind", "bursty");
     // The cyclic generators' period doubles as the periodic predictor's
     // training cycle — a mismatched period would misreport it as poor on
@@ -292,8 +295,8 @@ fn predict(args: &Args) -> Result<(), String> {
         "square" => (workload::square(steps, 50, 0.2, 0.8), 50),
         other => return Err(format!("unknown workload kind {other}")),
     };
-    let kinds: Vec<wavescale::markov::PredictorKind> = match args.flag("predictor") {
-        Some(name) => vec![wavescale::markov::PredictorKind::by_name(name)?],
+    let kinds: Vec<wavescale::markov::PredictorKind> = match flags.predictor {
+        Some(kind) => vec![kind],
         None => wavescale::markov::PredictorKind::ALL.to_vec(),
     };
     println!("workload {} ({} steps, mean {:.3})", trace.label, trace.len(), trace.mean());
@@ -459,10 +462,11 @@ fn fleet_cmd(args: &Args) -> Result<(), String> {
             .ok_or_else(|| format!("bad group spec {part:?} (want name:share)"))?;
         groups.push((name, share.parse().map_err(|_| format!("bad share in {part:?}"))?));
     }
-    let policy = policy_by_name(args.flag_or("policy", "prop"))?;
+    let flags = ControlFlags::parse(args)?;
+    let policy = flags.policy_or(Policy::Dvfs(Mode::Proposed));
     let steps = args.flag_usize("steps")?.unwrap_or(600);
     let mean = args.flag_f64("mean-load")?.unwrap_or(0.4);
-    let seed = args.flag_usize("seed")?.unwrap_or(2019) as u64;
+    let seed = flags.seed_or(2019);
     let trace = workload::bursty(&wavescale::workload::BurstyConfig {
         steps,
         mean_load: mean,
@@ -502,10 +506,11 @@ fn fleet_cmd(args: &Args) -> Result<(), String> {
 
 fn scenario_cmd(args: &Args) -> Result<(), String> {
     args.check_known(&["name", "steps", "seed", "policy"])?;
+    let flags = ControlFlags::parse(args)?;
     let name = args.flag_or("name", "mixed-tenant");
     let steps = args.flag_usize("steps")?.unwrap_or(600);
-    let seed = args.flag_usize("seed")?.unwrap_or(2019) as u64;
-    let policy = policy_by_name(args.flag_or("policy", "prop"))?;
+    let seed = flags.seed_or(2019);
+    let policy = flags.policy_or(Policy::Dvfs(Mode::Proposed));
     let scenario = wavescale::workload::Scenario::by_name(name, steps, seed)?;
     println!("scenario {name}: {} ({} steps)", scenario.description, scenario.steps());
 
@@ -586,6 +591,7 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
         "scenario", "instances", "epochs", "epoch-ms", "rps", "mode", "artifacts", "seed",
         "capacity", "virtual-time", "predictor", "qos-target",
     ])?;
+    let flags = ControlFlags::parse(args)?;
     let name = args.flag_or("scenario", "mixed-tenant");
     let n_instances = args.flag_usize("instances")?.unwrap_or(2);
     let epochs = args.flag_usize("epochs")?.unwrap_or(12);
@@ -593,15 +599,9 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
     let rps = args.flag_f64("rps")?.unwrap_or(3000.0);
     let mode = wavescale::config::mode_by_name(args.flag_or("mode", "prop"))?;
     let capacity = wavescale::vscale::CapacityPolicy::by_name(args.flag_or("capacity", "hybrid"))?;
-    let predictor =
-        wavescale::markov::PredictorKind::by_name(args.flag_or("predictor", "markov"))?;
-    let qos_target = args.flag_f64("qos-target")?;
-    if let Some(q) = qos_target {
-        if !(0.0..1.0).contains(&q) {
-            return Err("--qos-target must be a violation-rate fraction in [0, 1)".into());
-        }
-    }
-    let seed = args.flag_usize("seed")?.unwrap_or(7) as u64;
+    let predictor = flags.predictor_or(wavescale::markov::PredictorKind::Markov);
+    let qos_target = flags.qos_target;
+    let seed = flags.seed_or(7);
     let virtual_time = args.switch("virtual-time");
     // Bit-identical-per-seed replay must not depend on which artifacts are
     // installed, so virtual time always serves through the deterministic

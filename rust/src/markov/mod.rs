@@ -12,17 +12,16 @@
 //! `EwmaPredictor` and `LastValuePredictor` are baselines for the
 //! prediction-accuracy bench (Fig. 8).
 //!
-//! On top of the single predictors sit the adaptive pieces (DESIGN.md
-//! S7/S7.1): [`Ensemble`] runs every predictor shadow-mode and switches
-//! the active one per workload with hysteresis, and [`Guardband`] closes
-//! the loop from the observed violation rate back onto the throughput
-//! margin — the paper's "adjustment to the workload".
+//! On top of the single predictors sits the adaptive [`Ensemble`]
+//! (DESIGN.md S7): every predictor runs shadow-mode and the active one
+//! switches per workload with hysteresis. The margin side of the loop —
+//! the adaptive [`Guardband`](crate::control::Guardband) and its LUT
+//! ladder — lives in the shared control plane
+//! ([`crate::control::guardband`], DESIGN.md S19/S7.1).
 
 pub mod ensemble;
-pub mod guardband;
 
 pub use ensemble::{Ensemble, EnsembleConfig};
-pub use guardband::{ladder_level, Guardband, GuardbandConfig, MARGIN_LADDER};
 
 use crate::workload::bin_of_load;
 
@@ -101,6 +100,19 @@ impl PredictorKind {
     /// an unknown one would be a new member not yet registered here).
     pub fn index_of_name(name: &str) -> usize {
         PREDICTOR_NAMES.iter().position(|&n| n == name).unwrap_or(0)
+    }
+
+    /// Name of the prediction source that is active at startup — the
+    /// kind itself for single predictors, the [`Ensemble`]'s startup
+    /// member (Markov, the paper's default) for the ensemble. The live
+    /// `predictor_now` gauge is seeded from this so it reports a real
+    /// member from epoch 0 instead of the literal "ensemble"
+    /// (`active_name_consistency` pins it against the built predictor).
+    pub fn initial_active_name(self) -> &'static str {
+        match self {
+            PredictorKind::Ensemble => "markov",
+            k => k.name(),
+        }
     }
 
     /// Build the predictor: `m_bins` workload bins, `warmup` pure-training
@@ -508,6 +520,25 @@ mod tests {
             assert!(err < 0.05, "phase {h}: err {err}");
             p.observe(signal(h));
         }
+    }
+
+    #[test]
+    fn active_name_consistency() {
+        // initial_active_name must agree with what the freshly-built
+        // predictor actually reports, for every kind — the live
+        // predictor_now gauge is seeded from it before the first epoch.
+        for kind in PredictorKind::ALL {
+            let p = kind.build(10, 5, 24);
+            assert_eq!(
+                p.active_name(),
+                kind.initial_active_name(),
+                "{}: gauge seed drifted from the built predictor",
+                kind.name()
+            );
+            assert_ne!(p.active_name(), "", "active name must be a real member");
+        }
+        assert_eq!(PredictorKind::Ensemble.initial_active_name(), "markov");
+        assert_eq!(PredictorKind::Ewma.initial_active_name(), "ewma");
     }
 
     #[test]

@@ -12,15 +12,23 @@
 //! All n FPGA instances process a share of the input stream at the common
 //! frequency; delivered throughput is capacity-limited and shortfalls
 //! carry over as bounded backlog (QoS accounting).
+//!
+//! Since the control-plane extraction (DESIGN.md S19) this module is a
+//! pure *plant*: it keeps the physics — PLL lock, capacity, backlog,
+//! power accounting — and delegates every per-step decision (predict,
+//! guardband, margin ladder, LUT lookup) to the shared
+//! [`GroupController`](crate::control::GroupController), the same engine
+//! the live `coordinator::fleet` CC runs.
 
 pub mod fleet;
 pub mod pll;
 
-use crate::markov::guardband::level_for;
-use crate::markov::{Guardband, GuardbandConfig, Predictor, PredictorKind};
+use crate::control::{
+    ControlConfig, DecisionRecord, GroupController, LutSpec, Observation,
+};
+use crate::markov::PredictorKind;
 use crate::power::DesignPower;
-use crate::vscale::{CapacityPolicy, ElasticConfig, ElasticLut, Mode, Optimizer, VoltageLut};
-use crate::workload::bin_of_load;
+use crate::vscale::{CapacityPolicy, Mode, Optimizer};
 use pll::{DualPll, SinglePll};
 
 /// Platform-level power management policy.
@@ -64,7 +72,10 @@ pub struct PlatformConfig {
     pub tau_s: f64,
     /// Markov bins M.
     pub m_bins: usize,
-    /// Throughput margin t (must exceed 1/m to absorb one-bin misses).
+    /// Throughput margin t, a fraction in [0, 1): capacity is sized for
+    /// the predicted bin's *upper edge* × (1 + t), so the margin absorbs
+    /// boundary effects on top of the edge sizing (paper §IV.A, default
+    /// 5%).
     pub margin_t: f64,
     /// Pure-training steps I before predictions are trusted.
     pub warmup_steps: usize,
@@ -93,6 +104,13 @@ pub struct PlatformConfig {
     /// QoS-at-risk floor, and the margin tracks the observed violation
     /// rate against `target`. `None` keeps the paper's fixed t% margin.
     pub qos_target: Option<f64>,
+    /// Which capacity dimensions [`Policy::Hybrid`]'s elastic search may
+    /// move (DESIGN.md S6.1). `Hybrid` (default) is the joint manager;
+    /// `DvfsOnly` / `GatingOnly` turn `Policy::Hybrid` into exactly the
+    /// live coordinator's baseline capacity policies, which is what the
+    /// cross-path equivalence suite replays. Ignored by the other
+    /// policies.
+    pub capacity_policy: CapacityPolicy,
 }
 
 impl Default for PlatformConfig {
@@ -111,25 +129,29 @@ impl Default for PlatformConfig {
             predictor: PredictorKind::Markov,
             predictor_period: 96,
             qos_target: None,
+            capacity_policy: CapacityPolicy::Hybrid,
         }
     }
 }
 
 /// Per-step record (the rows behind Figs. 10–12).
+///
+/// The decision columns live in the embedded [`DecisionRecord`] —
+/// shared with the live `coordinator::EpochRecord` so the two trace
+/// formats cannot drift — and are reachable directly through `Deref`
+/// (`rec.freq_ratio`, `rec.margin`, ...). Alignment within the record:
+/// `freq_ratio`/`vcore`/`vbram`/`n_active` are the operating point that
+/// *served* this step (chosen at the end of the previous step), while
+/// `predicted`/`predictor`/`margin` come from the decision *made* this
+/// step — the historical column semantics of this trace.
 #[derive(Clone, Copy, Debug)]
 pub struct StepRecord {
     /// Step index.
     pub step: usize,
     /// Normalized load offered this step.
     pub load: f64,
-    /// Load the predictor forecast for this step.
-    pub predicted_load: f64,
-    /// f / f_nom the platform ran at this step.
-    pub freq_ratio: f64,
-    /// Core-rail voltage this step (V).
-    pub vcore: f64,
-    /// BRAM-rail voltage this step (V).
-    pub vbram: f64,
+    /// Shared decision columns (see the struct-level note on alignment).
+    pub decision: DecisionRecord,
     /// Total platform power this step (W), PLLs included.
     pub power_w: f64,
     /// Work actually served (capacity-limited), normalized.
@@ -140,15 +162,20 @@ pub struct StepRecord {
     pub qos_violation: bool,
     /// True when the predictor missed the observed bin.
     pub mispredicted: bool,
-    /// Boards active (not gated) this step; `n_fpgas` for pure-DVFS and
-    /// nominal policies.
+    /// Boards the *power accounting* charged as active this step: the
+    /// decision's count for [`Policy::Hybrid`], `n_fpgas` for pure-DVFS
+    /// and nominal, and the load-tracking `ceil(n·load)` for
+    /// [`Policy::PowerGating`] (whose gating is plant physics, not a
+    /// control decision).
     pub active_boards: f64,
-    /// Prediction source that produced `predicted_load` (the ensemble
-    /// reports its active member).
-    pub predictor: &'static str,
-    /// Throughput margin applied to the decision made this step (the
-    /// ladder level actually used; `margin_t` under the static policy).
-    pub margin: f64,
+}
+
+impl std::ops::Deref for StepRecord {
+    type Target = DecisionRecord;
+
+    fn deref(&self) -> &DecisionRecord {
+        &self.decision
+    }
 }
 
 /// Aggregate simulation outcome.
@@ -178,31 +205,19 @@ pub struct SimReport {
     pub stalled_us: f64,
 }
 
-/// The platform: n instances of one benchmark design + the CC.
+/// The platform: n instances of one benchmark design (the plant) + the
+/// shared per-group control plane making its CC decisions.
 pub struct Platform {
     /// Simulator configuration.
     pub cfg: PlatformConfig,
     /// Power model of the design on its device.
     pub design: DesignPower,
     optimizer: Optimizer,
-    /// Margin levels LUTs were built for: the single `margin_t` under the
-    /// static policy, the full
-    /// [`MARGIN_LADDER`](crate::markov::MARGIN_LADDER) (plus `margin_t`)
-    /// under the adaptive guardband (index-aligned with `luts` /
-    /// `elastics`).
-    margins: Vec<f64>,
-    /// One voltage LUT per margin level.
-    luts: Vec<VoltageLut>,
-    /// Joint gating+DVFS tables per margin level (built only for
-    /// [`Policy::Hybrid`]).
-    elastics: Option<Vec<ElasticLut>>,
     policy: Policy,
-    predictor: Box<dyn Predictor>,
-    /// Adaptive guardband controller (`cfg.qos_target` set).
-    guardband: Option<Guardband>,
-    /// The forecast made last step for this step — misprediction and
-    /// under-prediction are judged at bin granularity against it.
-    last_predicted: Option<f64>,
+    /// The shared control plane (DESIGN.md S19): predictor, guardband,
+    /// margin ladder and per-level LUTs — the same engine the live
+    /// coordinator's CC runs.
+    controller: GroupController,
     plls: PllBank,
     /// Normalized backlog carried between steps.
     backlog: f64,
@@ -231,61 +246,52 @@ impl Platform {
         policy: Policy,
     ) -> Self {
         assert!(cfg.n_fpgas >= 1);
+        // Real invariants (the old margin/bins assert was vacuously true
+        // for every m_bins >= 1): the Markov state space needs >= 2 bins
+        // and the margin is a fraction — same rules SimConfig::validate
+        // enforces on the CLI/JSON path.
+        assert!(cfg.m_bins >= 2, "m_bins must be >= 2");
         assert!(
-            cfg.margin_t > 1.0 / cfg.m_bins as f64 - 1.0 + 1e-12 || cfg.m_bins >= 1,
-            "margin/bins misconfigured"
+            (0.0..1.0).contains(&cfg.margin_t),
+            "margin_t must be a fraction in [0, 1), got {}",
+            cfg.margin_t
         );
-        let mode = match policy {
-            Policy::Dvfs(m) | Policy::DvfsOracle(m) | Policy::Hybrid(m) => m,
-            _ => Mode::FreqOnly,
-        };
-        // Static margin: one LUT level, bit-identical to the original
-        // behavior. Adaptive guardband: the whole margin ladder (plus the
-        // configured margin_t when it is not a ladder level, so the
-        // pareto cap stays exactly representable) is built at "design
-        // synthesis" time (paper §V) so per-step decisions stay a table
-        // lookup.
-        let margins: Vec<f64> = match cfg.qos_target {
-            None => vec![cfg.margin_t],
-            Some(_) => crate::markov::guardband::ladder_with(cfg.margin_t),
-        };
         let cap = cfg.latency_cap_sw.unwrap_or(f64::INFINITY);
-        // Voltage LUTs feed only the pure-DVFS policies; hybrid reads the
-        // elastic tables and the static policies read neither.
-        let luts: Vec<VoltageLut> = match policy {
-            Policy::Dvfs(_) | Policy::DvfsOracle(_) => margins
-                .iter()
-                .map(|&t| {
-                    VoltageLut::build_with_latency_cap(&optimizer, cfg.m_bins, t, mode, cap)
-                })
-                .collect(),
-            _ => Vec::new(),
+        let (vcore, vbram) = (design.chars.logic.v_nom, design.chars.bram.v_nom);
+        // The plant only chooses which LUT family the shared controller
+        // consults; ladder construction, guardband and LUT builds all
+        // live in `control` (DESIGN.md S19).
+        let spec = match policy {
+            Policy::Dvfs(m) | Policy::DvfsOracle(m) => LutSpec::Dvfs {
+                mode: m,
+                n_instances: cfg.n_fpgas,
+                latency_cap_sw: cap,
+            },
+            Policy::Hybrid(m) => LutSpec::Elastic {
+                mode: m,
+                n_instances: cfg.n_fpgas,
+                residual: cfg.pg_residual,
+                policy: cfg.capacity_policy,
+                latency_cap_sw: cap,
+            },
+            Policy::PowerGating | Policy::NominalStatic => LutSpec::Fixed {
+                vcore,
+                vbram,
+                n_instances: cfg.n_fpgas,
+            },
         };
-        let elastics = match policy {
-            Policy::Hybrid(m) => Some(
-                margins
-                    .iter()
-                    .map(|&t| {
-                        ElasticLut::build(
-                            &optimizer,
-                            &ElasticConfig {
-                                m_bins: cfg.m_bins,
-                                margin_t: t,
-                                mode: m,
-                                n_instances: cfg.n_fpgas,
-                                residual: cfg.pg_residual,
-                                policy: CapacityPolicy::Hybrid,
-                                latency_cap_sw: cap,
-                            },
-                        )
-                    })
-                    .collect(),
-            ),
-            _ => None,
-        };
-        let guardband = cfg
-            .qos_target
-            .map(|target| Guardband::new(GuardbandConfig::new(cfg.margin_t, target)));
+        let controller = GroupController::new(
+            ControlConfig {
+                m_bins: cfg.m_bins,
+                margin_t: cfg.margin_t,
+                warmup: cfg.warmup_steps,
+                predictor: cfg.predictor,
+                predictor_period: cfg.predictor_period,
+                qos_target: cfg.qos_target,
+            },
+            &optimizer,
+            spec,
+        );
         let f_nom = design.spec.freq_mhz;
         let plls = if cfg.dual_pll {
             PllBank::Dual(
@@ -300,22 +306,13 @@ impl Platform {
                     .collect(),
             )
         };
-        let predictor =
-            cfg.predictor
-                .build(cfg.m_bins, cfg.warmup_steps, cfg.predictor_period);
-        let (vcore, vbram) = (design.chars.logic.v_nom, design.chars.bram.v_nom);
         let active = cfg.n_fpgas;
         Platform {
             cfg,
             design,
             optimizer,
-            margins,
-            luts,
-            elastics,
             policy,
-            predictor,
-            guardband,
-            last_predicted: None,
+            controller,
             plls,
             backlog: 0.0,
             freq_ratio: 1.0,
@@ -396,63 +393,22 @@ impl Platform {
             + self.design.nominal().total_w() * cfg.pg_residual * gated
             + pll_w;
 
-        // ---- CC: observe, predict, program next step ---------------------
-        // Misprediction is judged against the forecast made *last* step
-        // for this one, at bin granularity (the shared load→bin mapping).
-        let load_bin = bin_of_load(cfg.m_bins, load);
-        let (mispredicted, under_predicted) = match self.last_predicted {
-            Some(p) => {
-                let pb = bin_of_load(cfg.m_bins, p);
-                (pb != load_bin, pb < load_bin)
-            }
-            None => (false, false),
+        // ---- CC: one decision through the shared control plane -----------
+        // Misprediction judgement, predictor training, guardband feedback,
+        // margin-ladder quantization, backlog backpressure and the LUT
+        // lookup all live in `control::GroupController` (DESIGN.md S19) —
+        // the exact engine the live coordinator's CC runs. The oracle
+        // policy overrides the forecast with the true next-step load.
+        let oracle = match self.policy {
+            Policy::DvfsOracle(_) => Some(next_load_oracle.unwrap_or(load)),
+            _ => None,
         };
-        self.predictor.observe(load);
-        // Guardband feedback (DESIGN.md S7.1): an under-prediction or a
-        // violation boosts the margin — and with it the frequency
-        // published for the next step, within the LUT's slack — while
-        // clean steps decay it toward zero (floored at the static margin
-        // while the rolling violation rate exceeds the QoS target).
-        if let Some(gb) = &mut self.guardband {
-            gb.observe(qos_violation, under_predicted);
-        }
-        let predicted = match self.policy {
-            Policy::DvfsOracle(_) => next_load_oracle.unwrap_or(load),
-            _ => self.predictor.predict(),
-        };
-        let margin_now = self
-            .guardband
-            .as_ref()
-            .map(|g| g.margin())
-            .unwrap_or(cfg.margin_t);
-        let level = level_for(&self.margins, margin_now);
-        let margin_applied = self.margins[level];
+        let d = self.controller.decide_with_oracle(
+            &Observation { load, qos_violation, backlog: self.backlog },
+            oracle,
+        );
 
-        // Backlog pressure: size the next step for predicted + carried
-        // work (proportionate backpressure, not a jump to nominal).
-        let eff_load = if self.backlog > 1e-9 {
-            (predicted + self.backlog).min(1.0)
-        } else {
-            predicted
-        };
-        let (next_fr, next_vc, next_vb, next_active) = match (self.policy, &self.elastics) {
-            (Policy::Hybrid(_), Some(els)) => {
-                let e = els[level].entry_for_load(eff_load);
-                (e.freq_ratio, e.point.vcore, e.point.vbram, e.n_active)
-            }
-            (Policy::Dvfs(_) | Policy::DvfsOracle(_), _) => {
-                let e = self.luts[level].entry_for_load(eff_load);
-                (e.freq_ratio, e.point.vcore, e.point.vbram, cfg.n_fpgas)
-            }
-            _ => (
-                1.0,
-                self.design.chars.logic.v_nom,
-                self.design.chars.bram.v_nom,
-                cfg.n_fpgas,
-            ),
-        };
-
-        let f_next = self.design.spec.freq_mhz * next_fr;
+        let f_next = self.design.spec.freq_mhz * d.freq_ratio;
         match &mut self.plls {
             PllBank::Dual(b) => b.iter_mut().for_each(|p| p.program(f_next)),
             PllBank::Single(b) => b.iter_mut().for_each(|p| p.program(f_next)),
@@ -461,24 +417,26 @@ impl Platform {
         let rec = StepRecord {
             step: self.step_idx,
             load,
-            predicted_load: predicted,
-            freq_ratio: self.freq_ratio,
-            vcore: self.vcore,
-            vbram: self.vbram,
+            decision: DecisionRecord {
+                predicted: d.predicted,
+                freq_ratio: self.freq_ratio,
+                vcore: self.vcore,
+                vbram: self.vbram,
+                n_active: self.active,
+                predictor: d.predictor,
+                margin: d.margin,
+            },
             power_w,
             delivered,
             backlog: self.backlog,
             qos_violation,
-            mispredicted,
+            mispredicted: d.mispredicted,
             active_boards,
-            predictor: self.predictor.active_name(),
-            margin: margin_applied,
         };
-        self.last_predicted = Some(predicted);
-        self.freq_ratio = next_fr;
-        self.vcore = next_vc;
-        self.vbram = next_vb;
-        self.active = next_active;
+        self.freq_ratio = d.freq_ratio;
+        self.vcore = d.vcore;
+        self.vbram = d.vbram;
+        self.active = d.n_active;
         self.step_idx += 1;
         let _ = locking;
         rec
@@ -487,16 +445,20 @@ impl Platform {
     /// The margin the guardband currently requests (`margin_t` under the
     /// static policy).
     pub fn margin_now(&self) -> f64 {
-        self.guardband
-            .as_ref()
-            .map(|g| g.margin())
-            .unwrap_or(self.cfg.margin_t)
+        self.controller.margin_now()
     }
 
     /// Name of the prediction source currently active (the ensemble
     /// reports its member).
     pub fn predictor_now(&self) -> &'static str {
-        self.predictor.active_name()
+        self.controller.predictor_now()
+    }
+
+    /// The control plane's full decision log, in step order — what
+    /// `tests/control_equivalence.rs` compares against the live
+    /// coordinator's log for the same observed loads.
+    pub fn decisions(&self) -> &[DecisionRecord] {
+        self.controller.decisions()
     }
 
     /// Run a whole trace and aggregate.

@@ -228,7 +228,7 @@ fn record_json(r: &EpochRecord) -> Json {
         ("vcore", Json::Num(r.vcore)),
         ("vbram", Json::Num(r.vbram)),
         ("power_w", Json::Num(r.power_w)),
-        ("active", Json::Num(r.active as f64)),
+        ("active", Json::Num(r.n_active as f64)),
         ("predictor", Json::Str(r.predictor.to_string())),
         ("margin", Json::Num(r.margin)),
     ])

@@ -1,0 +1,145 @@
+//! Cross-path control-plane equivalence (ISSUE 5 acceptance): the
+//! offline simulator and the live virtual-time coordinator share ONE
+//! decision engine (`control::GroupController`), so replaying the load
+//! sequence a live fleet observed through the offline platform must
+//! reproduce the live fleet's decision log **identically** — same
+//! forecasts, margins, operating points and predictor names, epoch for
+//! epoch, on every named scenario and every capacity policy.
+//!
+//! The live run goes first because its observed loads are quantized by
+//! real request arrivals (`round(trace · share · peak · epoch) / cap`);
+//! the offline plant then consumes exactly those loads. Both plants
+//! start from the same initial state (nominal frequency, all instances
+//! active, no backlog) and use the same capacity/backlog arithmetic, so
+//! decision equality is an induction over epochs — any divergence in
+//! predictor, guardband, ladder or LUT logic between the two paths
+//! breaks it immediately.
+
+use wavescale::platform::{build_platform, PlatformConfig, Policy};
+use wavescale::simtest::{self, SimSpec};
+use wavescale::vscale::{CapacityPolicy, Mode};
+use wavescale::workload::Scenario;
+
+/// Run `spec` live, then replay each group's observed loads through an
+/// offline platform built with the matching control configuration, and
+/// assert the two decision logs are identical.
+fn assert_paths_agree(spec: &SimSpec) {
+    let out = simtest::run(spec).expect("live virtual-time replay");
+    let scenario = Scenario::by_name(&spec.scenario, spec.epochs, spec.seed).unwrap();
+    assert_eq!(out.report.decision_records.len(), scenario.tenants.len());
+    for (gi, tenant) in scenario.tenants.iter().enumerate() {
+        let live = &out.report.decision_records[gi];
+        let loads: Vec<f64> =
+            out.report.epoch_records[gi].iter().map(|r| r.load).collect();
+        assert_eq!(
+            live.len(),
+            loads.len(),
+            "{}/{}: one decision per CC epoch",
+            spec.scenario,
+            tenant.benchmark
+        );
+        assert!(!live.is_empty(), "{}: CC must have run", spec.scenario);
+
+        // The offline plant with the same control configuration: same
+        // bins, margin, warmup, predictor, capacity policy and instance
+        // count as the live CC (FleetServingConfig defaults).
+        let cfg = PlatformConfig {
+            n_fpgas: spec.n_instances,
+            m_bins: 10,
+            margin_t: 0.05,
+            warmup_steps: spec.warmup_epochs,
+            pg_residual: 0.02,
+            // Must mirror FleetServingConfig.max_backlog_steps — the
+            // backlog clamp feeds the shared controller's observations.
+            max_backlog_steps: 1.0,
+            predictor: spec.predictor,
+            predictor_period: Scenario::day_period(spec.epochs),
+            qos_target: spec.qos_target,
+            capacity_policy: spec.policy,
+            ..PlatformConfig::default()
+        };
+        let mut platform =
+            build_platform(&tenant.benchmark, cfg, Policy::Hybrid(Mode::Proposed))
+                .expect("offline platform");
+        for &load in &loads {
+            platform.step(load, None);
+        }
+        assert_eq!(
+            platform.decisions(),
+            live.as_slice(),
+            "{} x {} / {}: offline and live decision sequences diverged",
+            spec.scenario,
+            spec.policy.name(),
+            tenant.benchmark
+        );
+    }
+}
+
+#[test]
+fn offline_and_live_decisions_agree_on_every_scenario_and_capacity_policy() {
+    // 4 named scenarios x {dvfs-only, pg-only, hybrid}: the acceptance
+    // matrix. Static-margin Markov configuration (the golden default).
+    for name in Scenario::NAMES {
+        for policy in CapacityPolicy::ALL {
+            let spec = SimSpec {
+                scenario: name.to_string(),
+                epochs: 18,
+                policy,
+                ..SimSpec::default()
+            };
+            assert_paths_agree(&spec);
+        }
+    }
+}
+
+#[test]
+fn offline_and_live_decisions_agree_under_the_adaptive_ensemble() {
+    // The adaptive path exercises everything the static one does not:
+    // the guardband's boost/decay closed loop walking the margin ladder,
+    // per-level LUT selection, and the ensemble's shadow scoring +
+    // hysteresis switching — all of which must live in the one shared
+    // controller for the logs to stay identical.
+    for name in ["diurnal", "overnight"] {
+        let spec = SimSpec {
+            scenario: name.to_string(),
+            epochs: 36,
+            ..SimSpec::golden_adaptive(name)
+        };
+        assert_paths_agree(&spec);
+    }
+}
+
+#[test]
+fn live_decision_log_matches_the_published_epoch_trace() {
+    // The decision log is the cross-path witness; pin its alignment to
+    // the (golden-checked) epoch trace: decision k's operating point is
+    // what serves epoch k+1, and decision k's forecast is recorded on
+    // epoch k.
+    // Adaptive spec so the margin actually moves epoch to epoch — a
+    // static margin would make the alignment check vacuous.
+    let spec = SimSpec { epochs: 24, ..SimSpec::golden_adaptive("flash-crowd") };
+    let out = simtest::run(&spec).unwrap();
+    for (records, decisions) in
+        out.report.epoch_records.iter().zip(&out.report.decision_records)
+    {
+        assert_eq!(records.len(), decisions.len());
+        // predicted/predictor/margin come from the decision MADE at the
+        // same epoch (identical alignment to the offline StepRecord).
+        for (k, (rec, d)) in records.iter().zip(decisions).enumerate() {
+            assert_eq!(rec.predicted, d.predicted, "epoch {k}: forecast column");
+            assert_eq!(rec.margin, d.margin, "epoch {k}: margin column");
+            assert_eq!(rec.predictor, d.predictor, "epoch {k}: predictor column");
+        }
+        // Epoch 0 is served by the startup state (nominal f, all
+        // instances); epoch k >= 1 by the decision made at epoch k-1.
+        assert_eq!(records[0].freq_ratio, 1.0);
+        for k in 1..records.len() {
+            let served = &records[k].decision;
+            let chosen = &decisions[k - 1];
+            assert_eq!(served.freq_ratio, chosen.freq_ratio, "epoch {k}: served f");
+            assert_eq!(served.n_active, chosen.n_active, "epoch {k}: served active");
+            assert_eq!(served.vcore, chosen.vcore, "epoch {k}: served vcore");
+            assert_eq!(served.vbram, chosen.vbram, "epoch {k}: served vbram");
+        }
+    }
+}

@@ -203,7 +203,7 @@ fn gated_shard_requests_are_redispatched_never_dropped() {
     let g = &report.stats.per_group[0];
     assert_eq!(g.completed, accepted, "gated shards must drain, not drop");
     assert!(
-        report.epoch_records[0].iter().any(|r| r.active < 4),
+        report.epoch_records[0].iter().any(|r| r.n_active < 4),
         "a ~6% load must gate instances: {:?}",
         report.epoch_records[0]
     );
