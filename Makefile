@@ -15,6 +15,9 @@
 #   make bench-predictor  predictor ensemble/guardband sweep (offline +
 #                    virtual-time, seed-pinned) -> results/
 #                    BENCH_predictor.{json,csv} baseline
+#   make faults      fault-injection acceptance suite: board failures,
+#                    stragglers, correlated surges on every scenario x
+#                    policy (seed-pinned, deterministic)
 #   make fmt         rustfmt the whole workspace (CI runs the --check
 #                    twin alongside clippy)
 #   make doc         rustdoc with warnings surfaced
@@ -22,7 +25,7 @@
 ARTIFACTS_DIR := artifacts
 PY            := python3
 
-.PHONY: artifacts build test bench golden bench-coordinator bench-predictor doc fmt fmt-check scenario-smoke clean
+.PHONY: artifacts build test bench golden bench-coordinator bench-predictor doc fmt fmt-check scenario-smoke faults clean
 
 artifacts:
 	cd python && $(PY) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
@@ -79,13 +82,33 @@ fmt-check:
 # overnight trough through both the offline scenario sim (with the
 # dvfs/pg/hybrid side-by-side) and the live serve-fleet coordinator,
 # plus the control-plane suite proving the offline and live paths make
-# identical decisions (DESIGN.md S19).
+# identical decisions (DESIGN.md S19). The adversarial scenarios smoke
+# through serve-fleet with their canonical fault plans injected
+# (--faults; DESIGN.md S20) and tiered-tenants pins per-tenant QoS tiers.
 # CI runs this so the serving path is exercised beyond unit tests.
 scenario-smoke: build
 	cargo run --release -- scenario --name overnight --steps 120
+	cargo run --release -- scenario --name tiered-tenants --steps 120
 	cargo run --release -- serve-fleet --scenario overnight --epochs 6 \
 	    --epoch-ms 60 --rps 800 --instances 2
+	cargo run --release -- serve-fleet --scenario board-failure --epochs 9 \
+	    --epoch-ms 60 --rps 800 --instances 2 --virtual-time --faults
+	cargo run --release -- serve-fleet --scenario straggler --epochs 9 \
+	    --epoch-ms 60 --rps 800 --instances 2 --virtual-time --faults
+	cargo run --release -- serve-fleet --scenario correlated-surge --epochs 9 \
+	    --epoch-ms 60 --rps 800 --instances 2 --virtual-time --faults
+	cargo run --release -- serve-fleet --scenario tiered-tenants --epochs 9 \
+	    --epoch-ms 60 --rps 800 --instances 2 --qos-target standard
 	cargo test --release --test control_equivalence
+
+# Fault-injection acceptance suite (DESIGN.md S20): mid-run board
+# failures, stragglers and correlated surges across every scenario x
+# capacity policy, plus the randomized fault property — seed-pinned so a
+# failure replays exactly.
+faults: build
+	cargo test --release --test sim_faults
+	WAVESCALE_PROP_SEED=2019 cargo test --release --test sim_properties \
+	    prop_fault_injection_preserves_conservation_and_never_drops_work
 
 doc:
 	cargo doc --no-deps

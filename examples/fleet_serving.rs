@@ -67,6 +67,10 @@ fn main() -> anyhow::Result<()> {
                 benchmark: t.benchmark.clone(),
                 share: t.share,
                 n_instances,
+                // Tenant QoS tiers (tiered-tenants scenario) refine the
+                // guardband only when a run-level target is set; this
+                // example keeps the static margin, so they stay inert.
+                qos_target: t.qos_target,
             })
             .collect(),
         epoch,

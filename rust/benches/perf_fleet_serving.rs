@@ -42,8 +42,18 @@ fn wall_clock_serving() {
 
     let cfg = FleetServingConfig {
         groups: vec![
-            GroupConfig { benchmark: "tabla".into(), share: 0.5, n_instances: 2 },
-            GroupConfig { benchmark: "diannao".into(), share: 0.5, n_instances: 2 },
+            GroupConfig {
+                benchmark: "tabla".into(),
+                share: 0.5,
+                n_instances: 2,
+                qos_target: None,
+            },
+            GroupConfig {
+                benchmark: "diannao".into(),
+                share: 0.5,
+                n_instances: 2,
+                qos_target: None,
+            },
         ],
         epoch: Duration::from_millis(100),
         cycles_per_batch: 1.0e4,
@@ -107,10 +117,11 @@ fn wall_clock_serving() {
     );
 }
 
-/// All 4 named scenarios × 3 capacity policies replayed under the
-/// `VirtualClock` in one run; the coordinator perf baseline.
+/// All named scenarios × 3 capacity policies replayed under the
+/// `VirtualClock` in one run — including the adversarial fault scenarios
+/// with their canonical `FaultPlan`s; the coordinator perf baseline.
 fn virtual_time_sweep() {
-    section("perf: virtual-time scenario sweep (4 scenarios x 3 policies)");
+    section("perf: virtual-time scenario sweep (all scenarios x 3 policies)");
     // Warm simtest's memoized netlist+STA platform builds so every timed
     // row measures the replay, not a one-off build that would otherwise
     // land in whichever scenario/policy happens to run first.

@@ -111,8 +111,10 @@ pub struct ControlFlags {
     /// `--predictor <name>`, resolved through
     /// [`PredictorKind::by_name`](crate::markov::PredictorKind::by_name).
     pub predictor: Option<crate::markov::PredictorKind>,
-    /// `--qos-target <fraction>`, validated to [0, 1) (a violation-rate
-    /// target; presence enables the adaptive guardband).
+    /// `--qos-target <fraction|tier>`, validated to [0, 1) (a
+    /// violation-rate target; presence enables the adaptive guardband).
+    /// Tier names `premium` / `standard` / `best-effort` resolve to
+    /// their canonical targets via [`QosTier`](crate::control::QosTier).
     pub qos_target: Option<f64>,
     /// `--policy <name>`, resolved through
     /// [`policy_by_name`](crate::config::policy_by_name).
@@ -130,14 +132,22 @@ impl ControlFlags {
             .flag("predictor")
             .map(crate::markov::PredictorKind::by_name)
             .transpose()?;
-        let qos_target = args.flag_f64("qos-target")?;
-        if let Some(q) = qos_target {
-            if !(0.0..1.0).contains(&q) {
-                return Err(
-                    "--qos-target must be a violation-rate fraction in [0, 1)".into()
-                );
-            }
-        }
+        let qos_target = args
+            .flag("qos-target")
+            .map(|raw| match crate::control::QosTier::by_name(raw) {
+                // Tier names resolve to their canonical targets...
+                Ok(tier) => Ok(tier.target()),
+                // ...anything else must be a fraction in [0, 1).
+                Err(_) => match raw.parse::<f64>() {
+                    Ok(q) if (0.0..1.0).contains(&q) => Ok(q),
+                    _ => Err(
+                        "--qos-target must be a violation-rate fraction in [0, 1) \
+                         or a tier name (premium, standard, best-effort)"
+                            .to_string(),
+                    ),
+                },
+            })
+            .transpose()?;
         let policy = args
             .flag("policy")
             .map(crate::config::policy_by_name)
@@ -234,6 +244,16 @@ mod tests {
         assert_eq!(f.policy_or(Policy::Dvfs(Mode::Proposed)), Policy::Dvfs(Mode::Proposed));
         assert_eq!(f.predictor_or(PredictorKind::Markov), PredictorKind::Markov);
         assert_eq!(f.seed_or(2019), 2019);
+    }
+
+    #[test]
+    fn qos_target_accepts_tier_names() {
+        use crate::control::QosTier;
+        for tier in QosTier::ALL {
+            let f = ControlFlags::parse(&parse(&format!("x --qos-target {}", tier.name())))
+                .unwrap();
+            assert_eq!(f.qos_target, Some(tier.target()), "{}", tier.name());
+        }
     }
 
     #[test]

@@ -53,6 +53,14 @@ pub fn to_duration(t: Tick) -> Duration {
     Duration::from_nanos(t)
 }
 
+/// The DVFS-epoch index a clock reading falls in — the shared
+/// time→epoch mapping the workers use to query a
+/// [`FaultPlan`](crate::workload::FaultPlan) at the epoch the CC indexed
+/// it by. Zero-length epochs clamp to 1 ns so the division is defined.
+pub fn epoch_index(now: Tick, epoch: Duration) -> usize {
+    (now / ticks(epoch).max(1)) as usize
+}
+
 /// The shared wall-clock epoch: all [`WallClock`] values measure from the
 /// same process-wide instant so their ticks are mutually comparable.
 fn wall_epoch() -> Instant {
@@ -518,6 +526,17 @@ impl Drop for ActorScope {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn epoch_index_maps_ticks_to_cc_epochs() {
+        let epoch = Duration::from_millis(50);
+        assert_eq!(epoch_index(0, epoch), 0);
+        assert_eq!(epoch_index(ticks(epoch) - 1, epoch), 0);
+        assert_eq!(epoch_index(ticks(epoch), epoch), 1);
+        assert_eq!(epoch_index(ticks(epoch) * 7 + 1, epoch), 7);
+        // Degenerate epoch lengths stay defined (clamped to 1 ns).
+        assert_eq!(epoch_index(5, Duration::ZERO), 5);
+    }
 
     #[test]
     fn wall_now_is_monotonic_and_shared() {

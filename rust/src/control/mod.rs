@@ -164,6 +164,66 @@ impl Default for ControlConfig {
     }
 }
 
+/// Named per-tenant QoS tiers (DESIGN.md S20): a tenant's tier maps to
+/// the violation-rate target its group's adaptive guardband aims for.
+/// Tiers only *refine* an enabled guardband — when a run's `qos_target`
+/// is `None` (the static-margin baselines) tenant tiers are inert, so
+/// tiered scenarios replay bit-identically under the static policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QosTier {
+    /// Latency-critical tenant: 0.5% violation-rate target.
+    Premium,
+    /// Default tier: 1% violation-rate target (the ISSUE-4 acceptance
+    /// configuration's fleet-wide value).
+    Standard,
+    /// Throughput/batch tenant: 5% violation-rate target.
+    BestEffort,
+}
+
+impl QosTier {
+    /// Every tier, strictest first.
+    pub const ALL: [QosTier; 3] = [QosTier::Premium, QosTier::Standard, QosTier::BestEffort];
+
+    /// CLI/scenario name of the tier.
+    pub fn name(&self) -> &'static str {
+        match self {
+            QosTier::Premium => "premium",
+            QosTier::Standard => "standard",
+            QosTier::BestEffort => "best-effort",
+        }
+    }
+
+    /// The violation-rate target the tier's guardband aims for.
+    pub fn target(&self) -> f64 {
+        match self {
+            QosTier::Premium => 0.005,
+            QosTier::Standard => 0.01,
+            QosTier::BestEffort => 0.05,
+        }
+    }
+
+    /// Resolve a tier by its [`QosTier::name`].
+    pub fn by_name(name: &str) -> Result<QosTier, String> {
+        QosTier::ALL
+            .into_iter()
+            .find(|t| t.name() == name)
+            .ok_or_else(|| {
+                format!(
+                    "unknown QoS tier {name} (known: {})",
+                    QosTier::ALL.map(|t| t.name()).join(", ")
+                )
+            })
+    }
+
+    /// The effective per-group guardband target: the fleet default
+    /// `run_target` gated on, refined by `tenant_tier` when one is set.
+    /// `None` in → `None` out, so static baselines stay bit-identical
+    /// whatever tiers a scenario declares.
+    pub fn effective(run_target: Option<f64>, tenant_tier: Option<f64>) -> Option<f64> {
+        run_target.map(|d| tenant_tier.unwrap_or(d))
+    }
+}
+
 /// Which pre-built lookup tables the controller consults — the only
 /// plant-specific part of the control plane.
 #[derive(Clone, Copy, Debug)]
@@ -487,6 +547,24 @@ mod tests {
             out.push(d.record());
         }
         out
+    }
+
+    #[test]
+    fn qos_tiers_resolve_and_gate_on_the_run_target() {
+        for tier in QosTier::ALL {
+            assert_eq!(QosTier::by_name(tier.name()).unwrap(), tier);
+            assert!((0.0..1.0).contains(&tier.target()));
+        }
+        assert!(QosTier::by_name("gold").is_err());
+        // Tiers are strictly ordered strict -> relaxed.
+        assert!(QosTier::Premium.target() < QosTier::Standard.target());
+        assert!(QosTier::Standard.target() < QosTier::BestEffort.target());
+        // The gating formula: tenant tiers refine an enabled guardband
+        // and are inert when the run disables it.
+        assert_eq!(QosTier::effective(Some(0.01), Some(0.05)), Some(0.05));
+        assert_eq!(QosTier::effective(Some(0.01), None), Some(0.01));
+        assert_eq!(QosTier::effective(None, Some(0.05)), None);
+        assert_eq!(QosTier::effective(None, None), None);
     }
 
     #[test]

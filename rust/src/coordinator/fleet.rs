@@ -60,9 +60,10 @@ use super::dispatch::{DispatchPolicy, Dispatcher};
 use super::shard::ShardQueue;
 use super::{Completion, EpochRecord, Request, SubmitError};
 use crate::control::{
-    ControlConfig, DecisionRecord, GroupController, LutSpec, Observation,
+    ControlConfig, DecisionRecord, GroupController, LutSpec, Observation, QosTier,
 };
 use crate::markov::PredictorKind;
+use crate::workload::FaultPlan;
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::platform::{build_platform, PlatformConfig, Policy};
 use crate::power::DesignPower;
@@ -87,6 +88,12 @@ pub struct GroupConfig {
     pub share: f64,
     /// Worker instances (== shards) in this group.
     pub n_instances: usize,
+    /// Per-tenant QoS tier (violation-rate target). Only refines an
+    /// *enabled* run-level guardband: the effective target is
+    /// [`QosTier::effective`]`(run_target, tier)`, so with the run-level
+    /// `qos_target` at `None` (static margin) tiers are inert and the
+    /// baselines stay bit-identical.
+    pub qos_target: Option<f64>,
 }
 
 /// Configuration of a multi-tenant serving fleet.
@@ -139,6 +146,13 @@ pub struct FleetServingConfig {
     /// violation rate stays under `target` and boosts immediately on an
     /// under-prediction. `None` keeps the static `margin_t`.
     pub qos_target: Option<f64>,
+    /// Deterministic fault-injection schedule (DESIGN.md S20): board
+    /// failures gate + drain shards at CC epoch boundaries, straggler
+    /// windows stretch worker service time, surge windows scale
+    /// [`drive_scenario`]'s offered load. The default empty plan is
+    /// bitwise-neutral — every query returns exactly `1.0` / no failure,
+    /// so fault-free runs reproduce pre-fault traces byte-for-byte.
+    pub faults: Arc<FaultPlan>,
     /// Time source for every wait/sleep/timestamp (DESIGN.md S18):
     /// `clock::wall()` for live serving, a
     /// [`VirtualClock`](crate::clock::VirtualClock) for deterministic
@@ -154,6 +168,7 @@ impl Default for FleetServingConfig {
                 benchmark: "tabla".into(),
                 share: 1.0,
                 n_instances: 2,
+                qos_target: None,
             }],
             epoch: Duration::from_millis(200),
             queue_capacity: 4096,
@@ -172,6 +187,7 @@ impl Default for FleetServingConfig {
             predictor: PredictorKind::Markov,
             predictor_period: 96,
             qos_target: None,
+            faults: Arc::new(FaultPlan::default()),
             clock: clock::wall(),
         }
     }
@@ -208,6 +224,11 @@ pub(super) struct GroupShared {
     pub(super) rejected: Counter,
     pub(super) failed: Counter,
     pub(super) stolen_batches: Counter,
+    /// Requests the CC pulled off a gated or failed shard and re-queued
+    /// onto the active set (failover re-dispatch; never a drop).
+    pub(super) redispatched: Counter,
+    /// Boards of this group currently failed by the fault plan.
+    failed_boards: AtomicU64,
     pub(super) violations: Counter,
     pub(super) epochs: Counter,
     pub(super) latency_us: Histogram,
@@ -285,6 +306,10 @@ pub struct GroupServingStats {
     pub failed: u64,
     /// Batches obtained by work stealing.
     pub stolen_batches: u64,
+    /// Requests re-dispatched off gated/failed shards by the CC drain.
+    pub redispatched: u64,
+    /// Boards currently failed by the fault plan.
+    pub failed_boards_now: usize,
     /// Mean end-to-end latency (s).
     pub mean_latency_s: f64,
     /// Median end-to-end latency (s).
@@ -332,6 +357,8 @@ pub struct FleetServingStats {
     pub failed: u64,
     /// Total stolen batches.
     pub stolen_batches: u64,
+    /// Total failover re-dispatches.
+    pub redispatched: u64,
     /// Total integrated energy (J).
     pub energy_j: f64,
     /// Total nominal-baseline energy (J).
@@ -412,6 +439,35 @@ impl FleetServing {
         for g in &cfg.groups {
             anyhow::ensure!(g.share > 0.0, "{}: share must be positive", g.benchmark);
             anyhow::ensure!(g.n_instances >= 1, "{}: need >= 1 instance", g.benchmark);
+            if let Some(t) = g.qos_target {
+                anyhow::ensure!(
+                    (0.0..1.0).contains(&t),
+                    "{}: qos tier target {t} outside [0, 1)",
+                    g.benchmark
+                );
+            }
+        }
+        // Structural plan checks (windows non-empty, slowdowns >= 1, ...)
+        // are layout-independent; index bounds are checked against each
+        // group's own instance count since groups may differ in size.
+        cfg.faults
+            .validate(usize::MAX, usize::MAX)
+            .map_err(anyhow::Error::msg)?;
+        for f in &cfg.faults.board_failures {
+            anyhow::ensure!(
+                f.group < cfg.groups.len() && f.shard < cfg.groups[f.group].n_instances,
+                "fault plan: board failure ({}, {}) outside the fleet layout",
+                f.group,
+                f.shard
+            );
+        }
+        for w in &cfg.faults.stragglers {
+            anyhow::ensure!(
+                w.group < cfg.groups.len() && w.shard < cfg.groups[w.group].n_instances,
+                "fault plan: straggler ({}, {}) outside the fleet layout",
+                w.group,
+                w.shard
+            );
         }
         // Deterministic virtual-time scheduling needs every participating
         // thread registered; catching a forgotten driver here beats a
@@ -463,6 +519,8 @@ impl FleetServing {
                 rejected: Counter::default(),
                 failed: Counter::default(),
                 stolen_batches: Counter::default(),
+                redispatched: Counter::default(),
+                failed_boards: AtomicU64::new(0),
                 violations: Counter::default(),
                 epochs: Counter::default(),
                 latency_us: Histogram::latency_us(),
@@ -487,6 +545,8 @@ impl FleetServing {
                 let cycles = cfg.cycles_per_batch;
                 let batch_timeout = cfg.batch_timeout;
                 let steal = cfg.steal;
+                let faults = cfg.faults.clone();
+                let epoch_len = cfg.epoch;
                 let clock = cfg.clock.clone();
                 let actor = clock.register_actor(&format!("{}:w{wid}", g.name));
                 workers.push(std::thread::spawn(move || {
@@ -551,8 +611,17 @@ impl FleetServing {
                         };
 
                         // ---- simulated FPGA occupancy ------------------
+                        // A straggler window stretches this shard's
+                        // service time by the plan's slowdown; outside a
+                        // window (and on the empty plan) the factor is
+                        // exactly 1.0, so the multiply is bitwise-neutral.
                         let fr = g.freq_ratio().max(0.05);
-                        let service = cycles / (F_NOM_HZ * fr);
+                        let slow = faults.straggler_slowdown(
+                            gi,
+                            wid,
+                            clock::epoch_index(clock.now(), epoch_len),
+                        );
+                        let service = cycles / (F_NOM_HZ * fr) * slow;
                         clock.sleep(Duration::from_secs_f64(service));
 
                         let now = clock.now();
@@ -606,11 +675,23 @@ impl FleetServing {
                     served_vcore: f64,
                     served_vbram: f64,
                     served_active: usize,
+                    /// Shards that actually served (the decision's active
+                    /// count minus fault-plan failures). Equals
+                    /// `served_active` whenever no board is failed, so
+                    /// fault-free capacity and energy are bit-identical
+                    /// to the pre-fault plant.
+                    served_healthy: usize,
+                    /// Boards failed while the epoch was served.
+                    served_failed: usize,
+                    /// Straggler capacity factor of the serving set
+                    /// (exactly 1.0 without straggler windows).
+                    served_slow: f64,
                 }
                 let mut ccs: Vec<GroupCc> = built
                     .into_iter()
                     .zip(&groups)
-                    .map(|((design, optimizer), g)| {
+                    .enumerate()
+                    .map(|(gi, ((design, optimizer), g))| {
                         // All decision machinery — margin ladder, LUT
                         // builds, guardband — is the controller's
                         // (DESIGN.md S19); the CC only picks the elastic
@@ -622,7 +703,14 @@ impl FleetServing {
                                 warmup: cfg2.warmup_epochs,
                                 predictor: cfg2.predictor,
                                 predictor_period: cfg2.predictor_period,
-                                qos_target: cfg2.qos_target,
+                                // Tenant tiers refine only an *enabled*
+                                // run-level guardband (DESIGN.md S20);
+                                // qos_target None keeps every baseline
+                                // bit-identical regardless of tier.
+                                qos_target: QosTier::effective(
+                                    cfg2.qos_target,
+                                    cfg2.groups[gi].qos_target,
+                                ),
                             },
                             &optimizer,
                             LutSpec::Elastic {
@@ -662,6 +750,15 @@ impl FleetServing {
                             served_vcore,
                             served_vbram,
                             served_active: g.n_instances,
+                            served_healthy: g.n_instances,
+                            served_failed: 0,
+                            // Epoch 0 is served before any CC pass, so
+                            // no board is gated yet; straggler windows
+                            // may still cover it.
+                            served_slow: {
+                                let all: Vec<usize> = (0..g.n_instances).collect();
+                                cfg2.faults.capacity_factor(gi, &all, 0)
+                            },
                         }
                     })
                     .collect();
@@ -683,8 +780,13 @@ impl FleetServing {
                         // published. (Same expression shape as the
                         // offline plant's capacity so the two paths'
                         // float results are bit-identical.)
+                        // Failures shrink the serving set (`served_healthy
+                        // <= served_active`) and straggler windows scale
+                        // it by the mean service-rate factor; both are
+                        // exactly neutral on an empty fault plan.
                         let served_cap = cc.served_fr
-                            * (cc.served_active as f64 / g.n_instances as f64);
+                            * (cc.served_healthy as f64 / g.n_instances as f64)
+                            * cc.served_slow;
                         let demand = load + cc.backlog;
                         let delivered = demand.min(served_cap);
                         cc.backlog =
@@ -747,9 +849,12 @@ impl FleetServing {
                             .breakdown(cc.served_vcore, cc.served_vbram, f_mhz)
                             .total_w();
                         let board_nom = cc.design.nominal().total_w();
+                        // Failed boards are powered down like gated ones
+                        // (residual draw), so energy charges the healthy
+                        // serving set only.
                         let gated =
-                            (g.n_instances - cc.served_active) as f64;
-                        let p = p_board * cc.served_active as f64
+                            (g.n_instances - cc.served_healthy) as f64;
+                        let p = p_board * cc.served_healthy as f64
                             + board_nom * cfg2.pg_residual * gated;
                         let p_nom = board_nom * g.n_instances as f64;
                         g.energy_j.add(p * cfg2.epoch.as_secs_f64());
@@ -772,6 +877,8 @@ impl FleetServing {
                                 margin: d.margin,
                             },
                             power_w: p,
+                            n_failed: cc.served_failed,
+                            slow_factor: cc.served_slow,
                         });
 
                         // ---- publish the next operating point -----------
@@ -794,18 +901,47 @@ impl FleetServing {
                             .set(PredictorKind::index_of_name(d.predictor) as f64);
 
                         // ---- gate / ungate + drain ----------------------
-                        // Shards [n_active..) are gated; anything still
-                        // queued on them is re-dispatched into the active
-                        // shards so admitted requests are never dropped.
+                        // The serving set for the next epoch is the first
+                        // `n_active` *non-failed* shards (DESIGN.md S20).
+                        // Without failures that is exactly [0, n_active),
+                        // the pre-fault behavior. Everything outside the
+                        // set — gated by the decision OR downed by the
+                        // plan — is drained and re-dispatched into it so
+                        // admitted requests are never dropped.
+                        let next_epoch = epoch + 1;
+                        let failed_mask: Vec<bool> = (0..g.n_instances)
+                            .map(|i| cfg2.faults.board_failed(gi, i, next_epoch))
+                            .collect();
+                        let n_failed =
+                            failed_mask.iter().filter(|&&f| f).count();
+                        let mut active: Vec<usize> =
+                            Vec::with_capacity(d.n_active);
+                        for i in 0..g.n_instances {
+                            if !failed_mask[i] && active.len() < d.n_active {
+                                active.push(i);
+                            }
+                        }
+                        if active.is_empty() {
+                            // A plan downing every board at once would
+                            // strand admitted work and deadlock the
+                            // shutdown drain invariant; serve the
+                            // decision's set as if the last board refused
+                            // to die.
+                            active.extend(0..d.n_active.clamp(1, g.n_instances));
+                        }
                         for (i, s) in g.shards.iter().enumerate() {
-                            s.set_gated(i >= d.n_active);
+                            s.set_failed(failed_mask[i]);
+                            s.set_gated(!active.contains(&i));
                         }
                         let mut cursor = 0usize;
-                        for gated_shard in g.shards.iter().skip(d.n_active) {
-                            for mut r in gated_shard.drain_all() {
+                        for (si, shard) in g.shards.iter().enumerate() {
+                            if active.contains(&si) {
+                                continue;
+                            }
+                            for mut r in shard.drain_all() {
                                 let mut placed = false;
-                                for _ in 0..d.n_active {
-                                    let t = cursor % d.n_active;
+                                for _ in 0..active.len() {
+                                    let t = active[cursor % active.len()];
                                     cursor += 1;
                                     match g.shards[t].try_push(r) {
                                         Ok(()) => {
@@ -815,19 +951,27 @@ impl FleetServing {
                                         Err(back) => r = back,
                                     }
                                 }
-                                if !placed {
+                                if placed {
+                                    g.redispatched.inc();
+                                } else {
                                     // Every active shard is full: return
                                     // the request to its original shard
                                     // (bound-free) and retry next epoch —
                                     // never drop admitted work.
-                                    gated_shard.push_unbounded(r);
+                                    shard.push_unbounded(r);
                                 }
                             }
                         }
+                        g.failed_boards
+                            .store(n_failed as u64, Ordering::Relaxed);
                         cc.served_fr = d.freq_ratio;
                         cc.served_vcore = vcore_next;
                         cc.served_vbram = vbram_next;
                         cc.served_active = d.n_active;
+                        cc.served_healthy = active.len();
+                        cc.served_failed = n_failed;
+                        cc.served_slow =
+                            cfg2.faults.capacity_factor(gi, &active, next_epoch);
                     }
                     epoch += 1;
                 }
@@ -988,6 +1132,8 @@ impl FleetServing {
             rejected: g.rejected.get(),
             failed: g.failed.get(),
             stolen_batches: g.stolen_batches.get(),
+            redispatched: g.redispatched.get(),
+            failed_boards_now: g.failed_boards.load(Ordering::Relaxed) as usize,
             mean_latency_s: g.latency_us.mean() / 1e6,
             p50_latency_s: g.latency_us.quantile(0.5) / 1e6,
             p99_latency_s: g.latency_us.quantile(0.99) / 1e6,
@@ -1023,6 +1169,7 @@ impl FleetServing {
             rejected: per_group.iter().map(|g| g.rejected).sum(),
             failed: per_group.iter().map(|g| g.failed).sum(),
             stolen_batches: per_group.iter().map(|g| g.stolen_batches).sum(),
+            redispatched: per_group.iter().map(|g| g.redispatched).sum(),
             energy_j: energy,
             nominal_energy_j: nominal,
             power_gain: if energy > 0.0 { nominal / energy } else { 1.0 },
@@ -1047,6 +1194,7 @@ impl FleetServing {
         for g in &self.groups {
             for s in &g.shards {
                 s.set_gated(false);
+                s.set_failed(false);
                 s.wake_all();
             }
         }
@@ -1092,6 +1240,7 @@ pub fn drive_scenario(
 ) -> u64 {
     let epoch = fleet.cfg.epoch;
     let clock = fleet.clock().clone();
+    let faults = fleet.cfg.faults.clone();
     let mut root = crate::util::prng::Rng::new(seed);
     let mut payload_rngs: Vec<crate::util::prng::Rng> = (0..scenario.tenants.len())
         .map(|i| root.fork(i as u64 + 1))
@@ -1103,8 +1252,15 @@ pub fn drive_scenario(
             .tenants
             .iter()
             .map(|t| {
-                (t.trace.loads[step] * t.share * peak_rps * epoch.as_secs_f64()).round()
-                    as usize
+                // Correlated surges scale every tenant's target together;
+                // the factor is exactly 1.0 outside surge windows, so the
+                // multiply is bitwise-neutral on fault-free plans.
+                (t.trace.loads[step]
+                    * t.share
+                    * peak_rps
+                    * epoch.as_secs_f64()
+                    * faults.surge_multiplier(step))
+                .round() as usize
             })
             .collect();
         let bursts = 16usize;
@@ -1142,7 +1298,7 @@ pub fn drive_scenario(
 pub fn fleet_report_rows(stats: &FleetServingStats) -> Vec<Vec<String>> {
     let mut rows = vec![crate::report::row([
         "group", "share", "backend", "active", "pred", "margin", "done", "rejected",
-        "failed", "stolen", "p50_ms", "p99_ms", "gain", "violations%",
+        "failed", "stolen", "redisp", "p50_ms", "p99_ms", "gain", "violations%",
     ])];
     for g in &stats.per_group {
         rows.push(vec![
@@ -1156,6 +1312,7 @@ pub fn fleet_report_rows(stats: &FleetServingStats) -> Vec<Vec<String>> {
             g.rejected.to_string(),
             g.failed.to_string(),
             g.stolen_batches.to_string(),
+            g.redispatched.to_string(),
             format!("{:.1}", g.p50_latency_s * 1e3),
             format!("{:.1}", g.p99_latency_s * 1e3),
             format!("{:.2}x", g.power_gain),
@@ -1173,6 +1330,7 @@ pub fn fleet_report_rows(stats: &FleetServingStats) -> Vec<Vec<String>> {
         stats.rejected.to_string(),
         stats.failed.to_string(),
         stats.stolen_batches.to_string(),
+        stats.redispatched.to_string(),
         "-".into(),
         "-".into(),
         format!("{:.2}x", stats.power_gain),
@@ -1285,6 +1443,7 @@ mod tests {
                 benchmark: "tabla".into(),
                 share: 1.0,
                 n_instances: 2,
+                qos_target: None,
             }],
             epoch: Duration::from_millis(30),
             warmup_epochs: 0,
@@ -1360,6 +1519,7 @@ mod tests {
                 benchmark: "tabla".into(),
                 share: 1.0,
                 n_instances: 2,
+                qos_target: None,
             }],
             epoch: Duration::from_millis(20),
             warmup_epochs: 0,
@@ -1393,6 +1553,7 @@ mod tests {
                 benchmark: "tabla".into(),
                 share: 0.5,
                 n_instances: 1,
+                qos_target: None,
             }],
             ..Default::default()
         };
@@ -1404,9 +1565,167 @@ mod tests {
                 benchmark: "not-a-benchmark".into(),
                 share: 1.0,
                 n_instances: 1,
+                qos_target: None,
             }],
             ..Default::default()
         };
         assert!(FleetServing::start(cfg, "artifacts".into()).is_err());
+    }
+
+    #[test]
+    fn start_validates_fault_plan_and_qos_tiers() {
+        // A board failure naming a shard outside the group's layout must
+        // be refused at start, not discovered mid-run.
+        let cfg = FleetServingConfig {
+            faults: Arc::new(FaultPlan {
+                board_failures: vec![crate::workload::BoardFailure {
+                    group: 0,
+                    shard: 5,
+                    fail_epoch: 1,
+                    recover_epoch: 2,
+                }],
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        assert!(FleetServing::start(cfg, "artifacts".into()).is_err());
+        let cfg = FleetServingConfig {
+            faults: Arc::new(FaultPlan {
+                stragglers: vec![crate::workload::StragglerWindow {
+                    group: 3,
+                    shard: 0,
+                    from_epoch: 1,
+                    until_epoch: 2,
+                    slowdown: 2.0,
+                }],
+                ..Default::default()
+            }),
+            ..Default::default()
+        };
+        assert!(FleetServing::start(cfg, "artifacts".into()).is_err());
+        let cfg = FleetServingConfig {
+            groups: vec![GroupConfig {
+                benchmark: "tabla".into(),
+                share: 1.0,
+                n_instances: 2,
+                qos_target: Some(1.5),
+            }],
+            ..Default::default()
+        };
+        assert!(FleetServing::start(cfg, "artifacts".into()).is_err());
+    }
+
+    #[test]
+    fn failed_board_is_gated_drained_and_recovers_without_dropping_work() {
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        let _driver = ActorScope::enter(&clock, "test-driver");
+        let faults = Arc::new(FaultPlan {
+            board_failures: vec![crate::workload::BoardFailure {
+                group: 0,
+                shard: 1,
+                fail_epoch: 1,
+                recover_epoch: 3,
+            }],
+            ..Default::default()
+        });
+        let cfg = FleetServingConfig {
+            groups: vec![GroupConfig {
+                benchmark: "tabla".into(),
+                share: 1.0,
+                n_instances: 2,
+                qos_target: None,
+            }],
+            epoch: Duration::from_millis(20),
+            warmup_epochs: 0,
+            selector_via_pjrt: false,
+            faults,
+            clock: clock.clone(),
+            ..Default::default()
+        };
+        let fleet = FleetServing::start(cfg, "sim-no-artifacts".into()).unwrap();
+        let in_dim = fleet.in_dim(0);
+        for step in 0..5 {
+            for _ in 0..8 {
+                let _ = fleet.submit(0, vec![0.1; in_dim]);
+            }
+            clock.sleep(Duration::from_millis(20));
+            if step == 1 {
+                // Inside the failure window the downed shard is flagged
+                // *and* gated, so dispatch, stealing and its worker all
+                // avoid it while the CC re-dispatches its backlog.
+                assert!(fleet.groups[0].shards[1].is_failed());
+                assert!(fleet.groups[0].shards[1].is_gated());
+                assert_eq!(fleet.stats().per_group[0].failed_boards_now, 1);
+            }
+        }
+        clock.sleep(Duration::from_millis(60));
+        let report = fleet.shutdown().unwrap();
+        let g = &report.stats.per_group[0];
+        assert_eq!(
+            g.admitted,
+            g.completed + g.failed,
+            "failover must uphold the drain invariant"
+        );
+        let recs = &report.epoch_records[0];
+        assert_eq!(recs[0].n_failed, 0, "epoch 0 is served before any CC pass");
+        assert!(
+            recs.iter().any(|r| r.n_failed == 1),
+            "the failure window must appear in the trace"
+        );
+        assert!(
+            recs.iter().all(|r| r.slow_factor == 1.0),
+            "no straggler windows in this plan"
+        );
+        let last = recs.last().unwrap();
+        assert_eq!(last.n_failed, 0, "the board recovers before shutdown");
+    }
+
+    #[test]
+    fn straggler_window_scales_capacity_and_preserves_conservation() {
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        let _driver = ActorScope::enter(&clock, "test-driver");
+        let faults = Arc::new(FaultPlan {
+            stragglers: vec![crate::workload::StragglerWindow {
+                group: 0,
+                shard: 0,
+                from_epoch: 1,
+                until_epoch: 3,
+                slowdown: 2.0,
+            }],
+            ..Default::default()
+        });
+        let cfg = FleetServingConfig {
+            groups: vec![GroupConfig {
+                benchmark: "tabla".into(),
+                share: 1.0,
+                n_instances: 2,
+                qos_target: None,
+            }],
+            epoch: Duration::from_millis(20),
+            warmup_epochs: 0,
+            selector_via_pjrt: false,
+            faults,
+            clock: clock.clone(),
+            ..Default::default()
+        };
+        let fleet = FleetServing::start(cfg, "sim-no-artifacts".into()).unwrap();
+        let in_dim = fleet.in_dim(0);
+        for _ in 0..5 {
+            for _ in 0..4 {
+                let _ = fleet.submit(0, vec![0.1; in_dim]);
+            }
+            clock.sleep(Duration::from_millis(20));
+        }
+        clock.sleep(Duration::from_millis(60));
+        let report = fleet.shutdown().unwrap();
+        let g = &report.stats.per_group[0];
+        assert_eq!(g.admitted, g.completed + g.failed);
+        let recs = &report.epoch_records[0];
+        assert!(
+            recs.iter().any(|r| r.slow_factor < 1.0),
+            "the straggler window must shrink the modeled capacity"
+        );
+        assert!(recs.iter().all(|r| r.slow_factor > 0.0 && r.slow_factor <= 1.0));
+        assert!(recs.iter().all(|r| r.n_failed == 0));
     }
 }

@@ -275,6 +275,12 @@ pub struct EpochRecord {
     pub decision: crate::control::DecisionRecord,
     /// Group power at the serving operating point (W).
     pub power_w: f64,
+    /// Boards failed (fault-plan injected, DESIGN.md S20) while the
+    /// epoch was served. Always 0 on an empty plan.
+    pub n_failed: usize,
+    /// Mean straggler service-rate factor of the set that served the
+    /// epoch; exactly `1.0` when no straggler window overlaps.
+    pub slow_factor: f64,
 }
 
 impl std::ops::Deref for EpochRecord {
@@ -311,6 +317,7 @@ impl Coordinator {
                 benchmark: cfg.variant.clone(),
                 share: 1.0,
                 n_instances: cfg.n_instances,
+                qos_target: None,
             }],
             epoch: cfg.epoch,
             queue_capacity: cfg.queue_capacity,
@@ -329,6 +336,7 @@ impl Coordinator {
             predictor: cfg.predictor,
             predictor_period: cfg.predictor_period,
             qos_target: cfg.qos_target,
+            faults: std::sync::Arc::new(crate::workload::FaultPlan::default()),
             clock: cfg.clock.clone(),
         };
         let inner = FleetServing::start_with(fleet_cfg, artifacts_dir, vec![(design, optimizer)])?;

@@ -44,6 +44,7 @@ pub struct ShardQueue {
     depth: AtomicUsize,
     capacity: usize,
     gated: AtomicBool,
+    failed: AtomicBool,
 }
 
 impl ShardQueue {
@@ -64,6 +65,7 @@ impl ShardQueue {
             depth: AtomicUsize::new(0),
             capacity: capacity.max(1),
             gated: AtomicBool::new(false),
+            failed: AtomicBool::new(false),
         }
     }
 
@@ -107,6 +109,21 @@ impl ShardQueue {
         if !gated {
             self.clock.notify_slot(&self.slot);
         }
+    }
+
+    /// True when the fault-injection layer marked this shard's board as
+    /// failed (DESIGN.md S20). Informational: the Central Controller
+    /// *also* gates a failed shard, so dispatch, stealing and the worker
+    /// park all flow through the existing gating machinery — this flag
+    /// only distinguishes "down" from "scaled down" in stats and reports.
+    pub fn is_failed(&self) -> bool {
+        self.failed.load(Ordering::SeqCst)
+    }
+
+    /// Mark the shard's board failed/recovered (set by the CC at epoch
+    /// boundaries from the active `FaultPlan`, cleared on shutdown).
+    pub fn set_failed(&self, failed: bool) {
+        self.failed.store(failed, Ordering::SeqCst);
     }
 
     /// Park the calling worker while the shard is gated; returns when
@@ -338,6 +355,22 @@ mod tests {
         let before = clock.now();
         s.park_while_gated(Duration::from_secs(60));
         assert_eq!(clock.now(), before);
+    }
+
+    #[test]
+    fn failed_flag_is_independent_of_gating() {
+        let s = ShardQueue::new(4);
+        assert!(!s.is_failed());
+        s.set_failed(true);
+        assert!(s.is_failed());
+        assert!(!s.is_gated(), "failure marking alone must not gate");
+        // The CC gates a failed shard through the normal gating path; the
+        // two flags stay independently settable (recovery can ungate
+        // while a later scale-down re-gates the same shard).
+        s.set_gated(true);
+        s.set_failed(false);
+        assert!(s.is_gated());
+        assert!(!s.is_failed());
     }
 
     #[test]

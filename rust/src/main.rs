@@ -46,16 +46,21 @@ SUBCOMMANDS:
              [--epochs N] [--epoch-ms N] [--rps N]
   artifacts  --artifacts <dir>      compile + golden-check all artifacts
   fleet      --groups tabla:0.4,diannao:0.6 [--policy prop] [--steps N]
-  scenario   --name <diurnal|flash-crowd|mixed-tenant|overnight>
+  scenario   --name <diurnal|flash-crowd|mixed-tenant|overnight|
+             board-failure|straggler|correlated-surge|tiered-tenants|
+             long-replay>
              [--steps N] [--seed N] [--policy prop]  (offline fleet sim;
              also reports dvfs-only vs pg-only vs hybrid side by side)
   serve-fleet --scenario <name> [--instances N] [--epochs N]
              [--epoch-ms N] [--rps N] [--artifacts dir]
              [--capacity dvfs|pg|hybrid] [--virtual-time] [--seed N]
-             [--predictor ensemble|markov|...] [--qos-target X]
+             [--predictor ensemble|markov|...]
+             [--qos-target X|premium|standard|best-effort] [--faults]
              (live elastic coordinator; --virtual-time replays the
              scenario deterministically in simulated time — thousands of
-             epochs per wall-second, bit-identical per seed)
+             epochs per wall-second, bit-identical per seed; --faults
+             injects the scenario's canonical FaultPlan — board
+             failures, stragglers, correlated surges)
   experiment <fig1|fig2|fig3|fig4|fig5|fig6|fig8|table1|fig10|fig11|fig12|table2|pll|hybrid|predictor>
              re-run a paper experiment (same code as `cargo bench`)
 ";
@@ -589,7 +594,7 @@ fn print_capacity_comparison(
 fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "scenario", "instances", "epochs", "epoch-ms", "rps", "mode", "artifacts", "seed",
-        "capacity", "virtual-time", "predictor", "qos-target",
+        "capacity", "virtual-time", "predictor", "qos-target", "faults",
     ])?;
     let flags = ControlFlags::parse(args)?;
     let name = args.flag_or("scenario", "mixed-tenant");
@@ -628,6 +633,19 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
         .then(|| wavescale::clock::ActorScope::enter(&clock, "serve-fleet"));
 
     let scenario = wavescale::workload::Scenario::by_name(name, epochs, seed)?;
+    // --faults injects the scenario's canonical fault plan (the one the
+    // golden traces pin); scenarios without one get an empty — and
+    // bitwise-neutral — plan.
+    let faults = if args.switch("faults") {
+        wavescale::workload::FaultPlan::for_scenario(
+            name,
+            scenario.tenants.len(),
+            n_instances,
+            epochs,
+        )
+    } else {
+        wavescale::workload::FaultPlan::default()
+    };
     let cfg = wavescale::coordinator::FleetServingConfig {
         groups: scenario
             .tenants
@@ -636,8 +654,11 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
                 benchmark: t.benchmark.clone(),
                 share: t.share,
                 n_instances,
+                // Tenant QoS tiers refine an enabled run-level guardband.
+                qos_target: t.qos_target,
             })
             .collect(),
+        faults: std::sync::Arc::new(faults.clone()),
         epoch: std::time::Duration::from_millis(epoch_ms as u64),
         mode,
         capacity_policy: capacity,
@@ -664,6 +685,18 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
         },
         if virtual_time { ", virtual time" } else { "" }
     );
+    if args.switch("faults") {
+        if faults.is_empty() {
+            println!("(--faults: {name} has no canonical fault plan; running fault-free)");
+        } else {
+            println!(
+                "fault plan: {} board failure(s), {} straggler window(s), {} surge(s)",
+                faults.board_failures.len(),
+                faults.stragglers.len(),
+                faults.surges.len()
+            );
+        }
+    }
 
     let wall_start = std::time::Instant::now();
     let accepted = wavescale::coordinator::drive_scenario(&fleet, &scenario, rps, seed);

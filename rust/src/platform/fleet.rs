@@ -11,6 +11,7 @@
 //! this offline model is `coordinator::FleetServing`.
 
 use super::{build_platform, Platform, PlatformConfig, Policy, SimReport};
+use crate::control::QosTier;
 use crate::markov::PredictorKind;
 use crate::vscale::Mode;
 use crate::workload::Scenario;
@@ -82,17 +83,33 @@ impl Fleet {
         Ok(Fleet { groups: out })
     }
 
-    /// Build a fleet matching a scenario's group layout.
+    /// Build a fleet matching a scenario's group layout. Tenant QoS tiers
+    /// ([`crate::workload::TenantTrace::qos_target`]) refine the
+    /// run-level guardband target per group via [`QosTier::effective`]:
+    /// they apply only when `cfg.qos_target` is `Some`, so static-margin
+    /// baselines stay bit-identical whatever tiers the scenario declares.
     pub fn from_scenario(
         scenario: &Scenario,
         cfg: PlatformConfig,
         policy: Policy,
     ) -> Result<Self, String> {
         scenario.validate()?;
-        let groups: Vec<(String, f64)> = scenario.groups();
-        let refs: Vec<(&str, f64)> =
-            groups.iter().map(|(n, s)| (n.as_str(), *s)).collect();
-        Fleet::new(&refs, cfg, policy)
+        let mut out = Vec::with_capacity(scenario.tenants.len());
+        for t in &scenario.tenants {
+            let group_cfg = PlatformConfig {
+                qos_target: QosTier::effective(cfg.qos_target, t.qos_target),
+                ..cfg.clone()
+            };
+            out.push(FleetGroup {
+                benchmark: t.benchmark.clone(),
+                share: t.share,
+                platform: build_platform(&t.benchmark, group_cfg, policy)?,
+            });
+        }
+        if out.is_empty() {
+            return Err("fleet needs at least one group".into());
+        }
+        Ok(Fleet { groups: out })
     }
 
     /// Run the common trace. Each group sees the *same normalized load*
@@ -296,6 +313,33 @@ mod tests {
         let other = Scenario::diurnal(300, 1);
         assert!(fleet.run_scenario(&other).is_err());
         assert!(fleet.run_per_group(&[&[0.5][..]]).is_err());
+    }
+
+    #[test]
+    fn scenario_qos_tiers_refine_only_an_enabled_guardband() {
+        let s = Scenario::by_name("tiered-tenants", 120, 2019).unwrap();
+        // Static baseline (guardband off): tiers are inert, every group
+        // keeps qos_target None and the run is bit-identical to a
+        // tierless scenario of the same traces.
+        let fleet = Fleet::from_scenario(
+            &s,
+            PlatformConfig::default(),
+            Policy::Hybrid(Mode::Proposed),
+        )
+        .unwrap();
+        assert!(fleet.groups.iter().all(|g| g.platform.cfg.qos_target.is_none()));
+        // Guardband on: each group resolves to its tenant's tier; the
+        // run-level target is the default for untiered tenants.
+        let cfg = PlatformConfig { qos_target: Some(0.01), ..PlatformConfig::default() };
+        let fleet =
+            Fleet::from_scenario(&s, cfg.clone(), Policy::Hybrid(Mode::Proposed)).unwrap();
+        let targets: Vec<Option<f64>> =
+            fleet.groups.iter().map(|g| g.platform.cfg.qos_target).collect();
+        assert_eq!(targets, vec![Some(0.005), Some(0.01), Some(0.05)]);
+        let legacy = Scenario::by_name("diurnal", 120, 2019).unwrap();
+        let fleet =
+            Fleet::from_scenario(&legacy, cfg, Policy::Hybrid(Mode::Proposed)).unwrap();
+        assert!(fleet.groups.iter().all(|g| g.platform.cfg.qos_target == Some(0.01)));
     }
 
     #[test]

@@ -44,7 +44,7 @@ use crate::platform::{build_platform, PlatformConfig, Policy};
 use crate::power::DesignPower;
 use crate::util::json::Json;
 use crate::vscale::{CapacityPolicy, Mode, Optimizer};
-use crate::workload::Scenario;
+use crate::workload::{FaultPlan, Scenario};
 
 /// An artifacts directory that never exists: simulations always use the
 /// deterministic native backend so traces are environment-independent.
@@ -81,6 +81,11 @@ pub struct SimSpec {
     /// `Some(target)` enables the adaptive QoS-feedback guardband
     /// (DESIGN.md S7.1).
     pub qos_target: Option<f64>,
+    /// Deterministic fault-injection schedule (DESIGN.md S20). The
+    /// default empty plan is bitwise-neutral; [`SimSpec::golden`]
+    /// attaches each adversarial scenario's canonical plan so its golden
+    /// trace captures the injected faults.
+    pub faults: FaultPlan,
 }
 
 impl Default for SimSpec {
@@ -99,6 +104,7 @@ impl Default for SimSpec {
             warmup_epochs: 2,
             predictor: PredictorKind::Markov,
             qos_target: None,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -108,7 +114,16 @@ impl SimSpec {
     /// seed 2019, hybrid capacity. Golden files are keyed on
     /// `{scenario}_{policy}` so keep these parameters stable.
     pub fn golden(scenario: &str) -> SimSpec {
-        SimSpec { scenario: scenario.into(), epochs: 48, ..SimSpec::default() }
+        // Adversarial scenarios carry their canonical fault plan (group 0
+        // of the golden 2-instance layout); every other name resolves to
+        // the empty — bitwise-neutral — plan, so legacy goldens are
+        // untouched.
+        SimSpec {
+            scenario: scenario.into(),
+            epochs: 48,
+            faults: FaultPlan::for_scenario(scenario, 1, 2, 48),
+            ..SimSpec::default()
+        }
     }
 
     /// The adaptive-path golden spec: like [`SimSpec::golden`] but with
@@ -192,6 +207,7 @@ pub fn run_scenario(spec: &SimSpec, scenario: &Scenario) -> Result<SimOutcome> {
                 benchmark: t.benchmark.clone(),
                 share: t.share,
                 n_instances: spec.n_instances,
+                qos_target: t.qos_target,
             })
             .collect(),
         epoch: spec.epoch,
@@ -206,6 +222,7 @@ pub fn run_scenario(spec: &SimSpec, scenario: &Scenario) -> Result<SimOutcome> {
         // ensemble member trains on the actual cycle.
         predictor_period: Scenario::day_period(spec.epochs),
         qos_target: spec.qos_target,
+        faults: Arc::new(spec.faults.clone()),
         clock: clock.clone(),
         ..Default::default()
     };
@@ -231,6 +248,8 @@ fn record_json(r: &EpochRecord) -> Json {
         ("active", Json::Num(r.n_active as f64)),
         ("predictor", Json::Str(r.predictor.to_string())),
         ("margin", Json::Num(r.margin)),
+        ("failed", Json::Num(r.n_failed as f64)),
+        ("slow", Json::Num(r.slow_factor)),
     ])
 }
 
@@ -260,6 +279,7 @@ pub fn trace_json(spec: &SimSpec, scenario: &Scenario, report: &FleetServingRepo
         ("peak_rps", Json::Num(spec.peak_rps)),
         ("n_instances", Json::Num(spec.n_instances as f64)),
         ("epoch_ms", Json::Num(spec.epoch.as_secs_f64() * 1e3)),
+        ("faults", spec.faults.to_json()),
         ("groups", Json::Arr(groups)),
     ])
 }
@@ -343,6 +363,18 @@ mod tests {
             ..SimSpec::golden("diurnal")
         };
         assert_eq!(spec.golden_stem(), "diurnal_hybrid_ewma");
+    }
+
+    #[test]
+    fn golden_specs_attach_canonical_fault_plans() {
+        // Only the three fault-carrying adversarial scenarios inject
+        // anything; everything else gets the bitwise-neutral empty plan.
+        assert!(SimSpec::golden("overnight").faults.is_empty());
+        assert!(SimSpec::golden("tiered-tenants").faults.is_empty());
+        assert!(SimSpec::golden("long-replay").faults.is_empty());
+        assert_eq!(SimSpec::golden("board-failure").faults.board_failures.len(), 1);
+        assert_eq!(SimSpec::golden("straggler").faults.stragglers.len(), 1);
+        assert_eq!(SimSpec::golden("correlated-surge").faults.surges.len(), 1);
     }
 
     #[test]

@@ -1,0 +1,507 @@
+//! Deterministic fault-injection plans (DESIGN.md S20).
+//!
+//! A [`FaultPlan`] is a seed-driven, epoch-indexed schedule of the three
+//! adversarial conditions a production multi-FPGA fleet sees on top of
+//! well-behaved load curves:
+//!
+//! * **board failures** — a shard goes dark for a window of epochs and
+//!   later recovers ([`BoardFailure`]);
+//! * **stragglers** — a shard's backend service time inflates by a
+//!   multiplicative slowdown for a window ([`StragglerWindow`]);
+//! * **correlated surges** — every tenant's offered load is multiplied
+//!   by a common factor for a window ([`SurgeWindow`]).
+//!
+//! The plan is *pure data*: the coordinator's CC gates/drains failed
+//! shards, workers stretch their service sleeps, and the scenario driver
+//! scales its per-step targets, all by querying the plan at the current
+//! epoch index. Because every query on an **empty plan** returns exactly
+//! `1.0` (and IEEE-754 guarantees `x * 1.0 == x` bitwise) or reports no
+//! failure, attaching an empty plan reproduces the fault-free simulation
+//! byte-for-byte — no special-case branches needed for the existing
+//! golden traces.
+
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+/// One shard is down for the epoch window `[fail_epoch, recover_epoch)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BoardFailure {
+    /// Fleet group (tenant) index.
+    pub group: usize,
+    /// Shard index within the group.
+    pub shard: usize,
+    /// First epoch the board is failed (CC applies it at the epoch
+    /// boundary, so epoch 0 — served before any CC pass — never fails).
+    pub fail_epoch: usize,
+    /// First epoch the board is healthy again (exclusive end).
+    pub recover_epoch: usize,
+}
+
+/// One shard's backend service time is inflated by `slowdown` for the
+/// epoch window `[from_epoch, until_epoch)`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StragglerWindow {
+    /// Fleet group (tenant) index.
+    pub group: usize,
+    /// Shard index within the group.
+    pub shard: usize,
+    /// First epoch of the latency spike.
+    pub from_epoch: usize,
+    /// First epoch past the spike (exclusive end).
+    pub until_epoch: usize,
+    /// Service-time multiplier, ≥ 1 (4.0 = a 4× straggler).
+    pub slowdown: f64,
+}
+
+/// Every tenant's offered load is multiplied by `multiplier` for the
+/// epoch window `[from_epoch, until_epoch)` — a correlated cross-tenant
+/// surge (flash event hitting the whole fleet at once).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SurgeWindow {
+    /// First epoch of the surge.
+    pub from_epoch: usize,
+    /// First epoch past the surge (exclusive end).
+    pub until_epoch: usize,
+    /// Demand multiplier, > 0 (1.8 = 80% extra offered load).
+    pub multiplier: f64,
+}
+
+/// A deterministic schedule of injected faults for one simulation run.
+///
+/// The default (empty) plan injects nothing and is bitwise-neutral: every
+/// multiplier query returns exactly `1.0` and no board ever fails.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Board-down windows.
+    pub board_failures: Vec<BoardFailure>,
+    /// Latency-spike windows.
+    pub stragglers: Vec<StragglerWindow>,
+    /// Correlated demand-surge windows.
+    pub surges: Vec<SurgeWindow>,
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.board_failures.is_empty() && self.stragglers.is_empty() && self.surges.is_empty()
+    }
+
+    /// Is `shard` of `group` failed at `epoch`?
+    pub fn board_failed(&self, group: usize, shard: usize, epoch: usize) -> bool {
+        self.board_failures.iter().any(|f| {
+            f.group == group
+                && f.shard == shard
+                && (f.fail_epoch..f.recover_epoch).contains(&epoch)
+        })
+    }
+
+    /// Number of failed shards of `group` at `epoch`, over `n_instances`.
+    pub fn failed_count(&self, group: usize, n_instances: usize, epoch: usize) -> usize {
+        (0..n_instances)
+            .filter(|&s| self.board_failed(group, s, epoch))
+            .count()
+    }
+
+    /// Service-time multiplier for `shard` of `group` at `epoch`: the max
+    /// of all overlapping straggler windows, or exactly `1.0`.
+    pub fn straggler_slowdown(&self, group: usize, shard: usize, epoch: usize) -> f64 {
+        self.stragglers
+            .iter()
+            .filter(|w| {
+                w.group == group
+                    && w.shard == shard
+                    && (w.from_epoch..w.until_epoch).contains(&epoch)
+            })
+            .fold(1.0, |acc, w| acc.max(w.slowdown))
+    }
+
+    /// Offered-load multiplier at `epoch`: the product of all overlapping
+    /// surge windows, or exactly `1.0`.
+    pub fn surge_multiplier(&self, epoch: usize) -> f64 {
+        self.surges
+            .iter()
+            .filter(|w| (w.from_epoch..w.until_epoch).contains(&epoch))
+            .fold(1.0, |acc, w| acc * w.multiplier)
+    }
+
+    /// Mean service-rate factor of the given active shard set of `group`
+    /// at `epoch` — the CC's capacity model for stragglers: a 4×-slowed
+    /// shard contributes 1/4 of a healthy shard's rate. Exactly `1.0`
+    /// when no straggler window overlaps (and for an empty set).
+    pub fn capacity_factor(&self, group: usize, active: &[usize], epoch: usize) -> f64 {
+        if self.stragglers.is_empty() || active.is_empty() {
+            return 1.0;
+        }
+        let sum: f64 = active
+            .iter()
+            .map(|&s| 1.0 / self.straggler_slowdown(group, s, epoch))
+            .sum();
+        sum / active.len() as f64
+    }
+
+    /// Check structural invariants against a fleet layout: indices in
+    /// range, non-empty windows, slowdowns ≥ 1, multipliers finite and
+    /// positive.
+    pub fn validate(&self, n_groups: usize, n_instances: usize) -> Result<(), String> {
+        for f in &self.board_failures {
+            if f.group >= n_groups || f.shard >= n_instances {
+                return Err(format!(
+                    "board failure ({}, {}) out of fleet {n_groups}x{n_instances}",
+                    f.group, f.shard
+                ));
+            }
+            if f.fail_epoch >= f.recover_epoch {
+                return Err(format!(
+                    "board failure window [{}, {}) is empty",
+                    f.fail_epoch, f.recover_epoch
+                ));
+            }
+        }
+        for w in &self.stragglers {
+            if w.group >= n_groups || w.shard >= n_instances {
+                return Err(format!(
+                    "straggler ({}, {}) out of fleet {n_groups}x{n_instances}",
+                    w.group, w.shard
+                ));
+            }
+            if w.from_epoch >= w.until_epoch {
+                return Err(format!(
+                    "straggler window [{}, {}) is empty",
+                    w.from_epoch, w.until_epoch
+                ));
+            }
+            if !(w.slowdown.is_finite() && w.slowdown >= 1.0) {
+                return Err(format!("straggler slowdown {} must be >= 1", w.slowdown));
+            }
+        }
+        for w in &self.surges {
+            if w.from_epoch >= w.until_epoch {
+                return Err(format!(
+                    "surge window [{}, {}) is empty",
+                    w.from_epoch, w.until_epoch
+                ));
+            }
+            if !(w.multiplier.is_finite() && w.multiplier > 0.0) {
+                return Err(format!("surge multiplier {} must be positive", w.multiplier));
+            }
+        }
+        Ok(())
+    }
+
+    /// A randomized-but-deterministic plan for property tests: the same
+    /// seed over the same fleet layout reproduces the plan exactly. At
+    /// most one failure + one straggler per group and one fleet-wide
+    /// surge, all with windows inside `[1, epochs]`, so any layout yields
+    /// a valid plan.
+    pub fn scripted(seed: u64, n_groups: usize, n_instances: usize, epochs: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xfau64.rotate_left(56));
+        let mut plan = FaultPlan::default();
+        let last = epochs.max(2);
+        for g in 0..n_groups {
+            let mut r = rng.fork(g as u64 + 1);
+            if r.bool(0.7) {
+                let fail = r.index(1, last);
+                plan.board_failures.push(BoardFailure {
+                    group: g,
+                    shard: r.index(0, n_instances.max(1)),
+                    fail_epoch: fail,
+                    recover_epoch: r.index(fail + 1, last + 2),
+                });
+            }
+            if r.bool(0.6) {
+                let from = r.index(1, last);
+                plan.stragglers.push(StragglerWindow {
+                    group: g,
+                    shard: r.index(0, n_instances.max(1)),
+                    from_epoch: from,
+                    until_epoch: r.index(from + 1, last + 2),
+                    slowdown: r.range(1.5, 6.0),
+                });
+            }
+        }
+        if rng.bool(0.5) {
+            let from = rng.index(1, last);
+            plan.surges.push(SurgeWindow {
+                from_epoch: from,
+                until_epoch: rng.index(from + 1, last + 2),
+                multiplier: rng.range(1.2, 2.0),
+            });
+        }
+        plan
+    }
+
+    /// The canonical plan a named scenario carries in its golden trace:
+    /// `board-failure`, `straggler` and `correlated-surge` each inject
+    /// their headline fault mid-run; every other scenario (including the
+    /// four legacy names) gets the empty — bitwise-neutral — plan.
+    pub fn for_scenario(
+        name: &str,
+        n_groups: usize,
+        n_instances: usize,
+        epochs: usize,
+    ) -> FaultPlan {
+        let mut plan = FaultPlan::default();
+        if n_groups == 0 || n_instances == 0 || epochs == 0 {
+            return plan;
+        }
+        match name {
+            "board-failure" => {
+                // The last shard of the first group goes dark for the
+                // middle third of the run, then recovers.
+                let fail = (epochs / 3).max(1);
+                plan.board_failures.push(BoardFailure {
+                    group: 0,
+                    shard: n_instances - 1,
+                    fail_epoch: fail,
+                    recover_epoch: (epochs * 2 / 3).max(fail + 1),
+                });
+            }
+            "straggler" => {
+                // Shard 0 of the first group runs 4x slow for the middle
+                // half of the run.
+                let from = (epochs / 4).max(1);
+                plan.stragglers.push(StragglerWindow {
+                    group: 0,
+                    shard: 0,
+                    from_epoch: from,
+                    until_epoch: (epochs * 3 / 4).max(from + 1),
+                    slowdown: 4.0,
+                });
+            }
+            "correlated-surge" => {
+                // All tenants surge together to 1.8x demand mid-run.
+                let from = (epochs * 2 / 5).max(1);
+                plan.surges.push(SurgeWindow {
+                    from_epoch: from,
+                    until_epoch: (epochs * 3 / 5).max(from + 1),
+                    multiplier: 1.8,
+                });
+            }
+            _ => {}
+        }
+        plan
+    }
+
+    /// Deterministic JSON rendering for trace headers — an empty plan
+    /// serializes to empty arrays so legacy goldens that never carried a
+    /// plan read unambiguously.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "board_failures",
+                Json::Arr(
+                    self.board_failures
+                        .iter()
+                        .map(|f| {
+                            Json::obj(vec![
+                                ("group", Json::Num(f.group as f64)),
+                                ("shard", Json::Num(f.shard as f64)),
+                                ("fail_epoch", Json::Num(f.fail_epoch as f64)),
+                                ("recover_epoch", Json::Num(f.recover_epoch as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "stragglers",
+                Json::Arr(
+                    self.stragglers
+                        .iter()
+                        .map(|w| {
+                            Json::obj(vec![
+                                ("group", Json::Num(w.group as f64)),
+                                ("shard", Json::Num(w.shard as f64)),
+                                ("from_epoch", Json::Num(w.from_epoch as f64)),
+                                ("until_epoch", Json::Num(w.until_epoch as f64)),
+                                ("slowdown", Json::Num(w.slowdown)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "surges",
+                Json::Arr(
+                    self.surges
+                        .iter()
+                        .map(|w| {
+                            Json::obj(vec![
+                                ("from_epoch", Json::Num(w.from_epoch as f64)),
+                                ("until_epoch", Json::Num(w.until_epoch as f64)),
+                                ("multiplier", Json::Num(w.multiplier)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_bitwise_neutral() {
+        let p = FaultPlan::default();
+        assert!(p.is_empty());
+        for epoch in 0..8 {
+            assert!(!p.board_failed(0, 0, epoch));
+            assert_eq!(p.straggler_slowdown(1, 1, epoch).to_bits(), 1.0f64.to_bits());
+            assert_eq!(p.surge_multiplier(epoch).to_bits(), 1.0f64.to_bits());
+            assert_eq!(p.capacity_factor(0, &[0, 1, 2], epoch).to_bits(), 1.0f64.to_bits());
+        }
+        p.validate(0, 0).unwrap();
+    }
+
+    #[test]
+    fn windows_are_half_open_and_indexed() {
+        let p = FaultPlan {
+            board_failures: vec![BoardFailure {
+                group: 1,
+                shard: 0,
+                fail_epoch: 3,
+                recover_epoch: 6,
+            }],
+            stragglers: vec![StragglerWindow {
+                group: 0,
+                shard: 1,
+                from_epoch: 2,
+                until_epoch: 4,
+                slowdown: 4.0,
+            }],
+            surges: vec![SurgeWindow { from_epoch: 5, until_epoch: 7, multiplier: 1.5 }],
+        };
+        p.validate(2, 2).unwrap();
+        assert!(!p.board_failed(1, 0, 2));
+        assert!(p.board_failed(1, 0, 3));
+        assert!(p.board_failed(1, 0, 5));
+        assert!(!p.board_failed(1, 0, 6), "recover epoch is exclusive");
+        assert!(!p.board_failed(0, 0, 4), "wrong group never fails");
+        assert!(!p.board_failed(1, 1, 4), "wrong shard never fails");
+        assert_eq!(p.failed_count(1, 2, 4), 1);
+        assert_eq!(p.failed_count(1, 2, 6), 0);
+        assert_eq!(p.straggler_slowdown(0, 1, 2), 4.0);
+        assert_eq!(p.straggler_slowdown(0, 1, 4), 1.0);
+        assert_eq!(p.straggler_slowdown(0, 0, 3), 1.0);
+        assert_eq!(p.surge_multiplier(5), 1.5);
+        assert_eq!(p.surge_multiplier(7), 1.0);
+        // One 4x shard + one healthy shard: mean rate (1 + 1/4) / 2.
+        assert!((p.capacity_factor(0, &[0, 1], 3) - 0.625).abs() < 1e-12);
+        assert_eq!(p.capacity_factor(0, &[0], 3), 1.0);
+    }
+
+    #[test]
+    fn overlapping_windows_compose() {
+        let p = FaultPlan {
+            board_failures: vec![],
+            stragglers: vec![
+                StragglerWindow { group: 0, shard: 0, from_epoch: 1, until_epoch: 5, slowdown: 2.0 },
+                StragglerWindow { group: 0, shard: 0, from_epoch: 3, until_epoch: 6, slowdown: 3.0 },
+            ],
+            surges: vec![
+                SurgeWindow { from_epoch: 1, until_epoch: 4, multiplier: 1.5 },
+                SurgeWindow { from_epoch: 2, until_epoch: 3, multiplier: 2.0 },
+            ],
+        };
+        assert_eq!(p.straggler_slowdown(0, 0, 2), 2.0);
+        assert_eq!(p.straggler_slowdown(0, 0, 3), 3.0, "max of overlapping slowdowns");
+        assert!((p.surge_multiplier(2) - 3.0).abs() < 1e-12, "surges multiply");
+        assert_eq!(p.surge_multiplier(3), 1.5);
+    }
+
+    #[test]
+    fn validate_rejects_bad_plans() {
+        let out_of_range = FaultPlan {
+            board_failures: vec![BoardFailure { group: 2, shard: 0, fail_epoch: 1, recover_epoch: 2 }],
+            ..Default::default()
+        };
+        assert!(out_of_range.validate(2, 2).is_err());
+        let empty_window = FaultPlan {
+            stragglers: vec![StragglerWindow {
+                group: 0,
+                shard: 0,
+                from_epoch: 5,
+                until_epoch: 5,
+                slowdown: 2.0,
+            }],
+            ..Default::default()
+        };
+        assert!(empty_window.validate(1, 1).is_err());
+        let speedup = FaultPlan {
+            stragglers: vec![StragglerWindow {
+                group: 0,
+                shard: 0,
+                from_epoch: 1,
+                until_epoch: 2,
+                slowdown: 0.5,
+            }],
+            ..Default::default()
+        };
+        assert!(speedup.validate(1, 1).is_err(), "slowdown < 1 is a speedup, refuse");
+        let bad_surge = FaultPlan {
+            surges: vec![SurgeWindow { from_epoch: 1, until_epoch: 2, multiplier: -1.0 }],
+            ..Default::default()
+        };
+        assert!(bad_surge.validate(1, 1).is_err());
+    }
+
+    #[test]
+    fn scripted_plans_are_deterministic_and_valid() {
+        for seed in 0..50u64 {
+            let a = FaultPlan::scripted(seed, 3, 2, 12);
+            let b = FaultPlan::scripted(seed, 3, 2, 12);
+            assert_eq!(a, b, "seed {seed} must reproduce the plan");
+            a.validate(3, 2).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        }
+        // Tiny layouts still produce valid plans.
+        FaultPlan::scripted(7, 1, 1, 3).validate(1, 1).unwrap();
+        assert_ne!(
+            FaultPlan::scripted(1, 3, 2, 12),
+            FaultPlan::scripted(2, 3, 2, 12),
+            "seed must steer the plan"
+        );
+    }
+
+    #[test]
+    fn canonical_scenario_plans() {
+        let p = FaultPlan::for_scenario("board-failure", 2, 2, 48);
+        assert_eq!(p.board_failures.len(), 1);
+        assert!(p.stragglers.is_empty() && p.surges.is_empty());
+        assert!(p.board_failed(0, 1, 20));
+        assert!(!p.board_failed(0, 1, 40), "board recovers");
+        p.validate(2, 2).unwrap();
+
+        let p = FaultPlan::for_scenario("straggler", 2, 2, 48);
+        assert_eq!(p.stragglers.len(), 1);
+        assert_eq!(p.straggler_slowdown(0, 0, 24), 4.0);
+        p.validate(2, 2).unwrap();
+
+        let p = FaultPlan::for_scenario("correlated-surge", 3, 2, 48);
+        assert_eq!(p.surges.len(), 1);
+        assert!((p.surge_multiplier(24) - 1.8).abs() < 1e-12);
+        p.validate(3, 2).unwrap();
+
+        // Legacy + fault-free adversarial scenarios carry the empty plan.
+        for name in ["diurnal", "flash-crowd", "mixed-tenant", "overnight", "tiered-tenants", "long-replay"] {
+            assert!(FaultPlan::for_scenario(name, 2, 2, 48).is_empty(), "{name}");
+        }
+        // Tiny runs still yield non-empty, valid windows.
+        FaultPlan::for_scenario("board-failure", 1, 1, 2).validate(1, 1).unwrap();
+        FaultPlan::for_scenario("straggler", 1, 1, 2).validate(1, 1).unwrap();
+        FaultPlan::for_scenario("correlated-surge", 1, 1, 2).validate(1, 1).unwrap();
+    }
+
+    #[test]
+    fn json_rendering_is_deterministic() {
+        let p = FaultPlan::for_scenario("board-failure", 2, 2, 48);
+        let a = p.to_json().to_string_compact();
+        let b = p.to_json().to_string_compact();
+        assert_eq!(a, b);
+        assert!(a.contains("\"fail_epoch\": 16"), "{a}");
+        let empty = FaultPlan::default().to_json().to_string_compact();
+        assert!(empty.contains("\"board_failures\": []"), "{empty}");
+    }
+}

@@ -15,8 +15,10 @@
 //! and the named multi-tenant [`scenarios`] suite that drives both the
 //! simulator and the live coordinator.
 
+pub mod faults;
 pub mod scenarios;
 
+pub use faults::{BoardFailure, FaultPlan, StragglerWindow, SurgeWindow};
 pub use scenarios::{Scenario, TenantTrace};
 
 use crate::util::prng::Rng;
@@ -445,5 +447,52 @@ mod tests {
         // Gaps are fine as long as order is strict.
         let u = Trace::from_csv("step,load\n10,0.1\n20,0.2\n35,0.3\n", "x").unwrap();
         assert_eq!(u.loads, vec![0.1, 0.2, 0.3]);
+    }
+
+    #[test]
+    fn multi_day_timestamped_csv_round_trips_for_long_replay() {
+        // The long-horizon replay path (`long-replay` scenario): a full
+        // week of 96-step diurnal days through the timestamped format.
+        // Quantization to the CSV's 6 decimals must stay within 1e-6 and
+        // the periodic day structure must survive the round trip exactly.
+        let days = 7;
+        let t = periodic(96 * days, 96, 0.08, 0.92, 0.0, 42);
+        let csv = t.to_csv_with_steps();
+        assert_eq!(csv.lines().count(), 96 * days + 1, "header + one row per step");
+        let u = Trace::from_csv(&csv, "week-replay").unwrap();
+        assert_eq!(u.len(), 96 * days);
+        for (a, b) in t.loads.iter().zip(&u.loads) {
+            assert!((a - b).abs() < 1e-6, "CSV quantization must stay under 1e-6");
+        }
+        // The day structure survives exactly: with no jitter, step k and
+        // step k + 96 (days - 1) replay the identical load.
+        for k in 0..96 {
+            assert_eq!(u.loads[k], u.loads[k + 96 * (days - 1)], "step {k}");
+        }
+    }
+
+    #[test]
+    fn long_horizon_csv_rejects_duplicate_and_overlapping_stamps() {
+        // A multi-day recording with a duplicated day boundary (the
+        // classic double-logged midnight) must refuse, pointing at the
+        // offending line.
+        let mut csv = String::from("step,load\n");
+        for d in 0..3 {
+            for s in 0..96 {
+                csv.push_str(&format!("{},0.5\n", d * 96 + s));
+            }
+            // Day 1's recorder re-emits its last stamp at rollover.
+            if d == 1 {
+                csv.push_str(&format!("{},0.5\n", d * 96 + 95));
+            }
+        }
+        let err = Trace::from_csv(&csv, "x").unwrap_err();
+        assert!(err.contains("non-monotonic step 191 after 191"), "{err}");
+        assert!(err.contains("line 194"), "{err}");
+        // An overlapping splice — day 2 restarts inside day 1 — refuses
+        // too, even though each fragment is individually monotonic.
+        let spliced = "step,load\n0,0.1\n96,0.2\n97,0.3\n50,0.4\n51,0.5\n";
+        let err = Trace::from_csv(spliced, "x").unwrap_err();
+        assert!(err.contains("non-monotonic step 50 after 97"), "{err}");
     }
 }

@@ -10,7 +10,15 @@
 //! The built-in suite covers the operating regimes the paper's framework
 //! targets (§VI): a diurnal datacenter day, a flash-crowd spike, a mixed
 //! multi-tenant bursty day, and a low-utilization overnight valley, plus
-//! CSV replay for real traces.
+//! CSV replay for real traces — and the adversarial suite (DESIGN.md
+//! S20): board failures, stragglers, correlated surges, QoS-tiered
+//! tenants and a long-horizon timestamped-CSV replay. The adversarial
+//! fault windows themselves live in a [`FaultPlan`](super::FaultPlan)
+//! attached by the harness (`simtest::SimSpec::golden` /
+//! `FaultPlan::for_scenario`), so the *workload* side of every scenario
+//! stays a plain multi-tenant trace bundle both control paths can drive.
+
+use crate::control::QosTier;
 
 use super::{bursty, periodic, poisson, BurstyConfig, Trace};
 
@@ -24,6 +32,10 @@ pub struct TenantTrace {
     pub share: f64,
     /// Normalized offered load per step/epoch.
     pub trace: Trace,
+    /// Per-tenant QoS tier target (DESIGN.md S20): refines the run-level
+    /// `qos_target` when the adaptive guardband is enabled
+    /// ([`QosTier::effective`]); inert under the static baselines.
+    pub qos_target: Option<f64>,
 }
 
 /// A named multi-tenant workload scenario.
@@ -38,9 +50,19 @@ pub struct Scenario {
 }
 
 impl Scenario {
-    /// Names accepted by [`Scenario::by_name`].
-    pub const NAMES: [&'static str; 4] =
-        ["diurnal", "flash-crowd", "mixed-tenant", "overnight"];
+    /// Names accepted by [`Scenario::by_name`]: the four operating-regime
+    /// scenarios, then the five adversarial ones (DESIGN.md S20).
+    pub const NAMES: [&'static str; 9] = [
+        "diurnal",
+        "flash-crowd",
+        "mixed-tenant",
+        "overnight",
+        "board-failure",
+        "straggler",
+        "correlated-surge",
+        "tiered-tenants",
+        "long-replay",
+    ];
 
     /// Build a named scenario.
     pub fn by_name(name: &str, steps: usize, seed: u64) -> Result<Scenario, String> {
@@ -49,6 +71,11 @@ impl Scenario {
             "flash-crowd" => Scenario::flash_crowd(steps, seed),
             "mixed-tenant" => Scenario::mixed_tenant(steps, seed),
             "overnight" => Scenario::overnight(steps, seed),
+            "board-failure" => Scenario::board_failure(steps, seed),
+            "straggler" => Scenario::straggler(steps, seed),
+            "correlated-surge" => Scenario::correlated_surge(steps, seed),
+            "tiered-tenants" => Scenario::tiered_tenants(steps, seed),
+            "long-replay" => Scenario::long_replay(steps, seed),
             other => {
                 return Err(format!(
                     "unknown scenario {other} (known: {})",
@@ -95,8 +122,8 @@ impl Scenario {
             name: "diurnal".into(),
             description: "anti-phased day/night sinusoids across two tenants".into(),
             tenants: vec![
-                TenantTrace { benchmark: "tabla".into(), share: 0.5, trace: day },
-                TenantTrace { benchmark: "diannao".into(), share: 0.5, trace: night },
+                TenantTrace { benchmark: "tabla".into(), share: 0.5, trace: day, qos_target: None },
+                TenantTrace { benchmark: "diannao".into(), share: 0.5, trace: night, qos_target: None },
             ],
         }
     }
@@ -128,8 +155,8 @@ impl Scenario {
             description: "near-peak spike on the user-facing tenant over a quiet baseline"
                 .into(),
             tenants: vec![
-                TenantTrace { benchmark: "tabla".into(), share: 0.6, trace: front },
-                TenantTrace { benchmark: "dnnweaver".into(), share: 0.4, trace: back },
+                TenantTrace { benchmark: "tabla".into(), share: 0.6, trace: front, qos_target: None },
+                TenantTrace { benchmark: "dnnweaver".into(), share: 0.4, trace: back, qos_target: None },
             ],
         }
     }
@@ -151,9 +178,9 @@ impl Scenario {
             description: "three tenants with distinct burstiness/mean sharing one fleet"
                 .into(),
             tenants: vec![
-                TenantTrace { benchmark: "tabla".into(), share: 0.40, trace: a },
-                TenantTrace { benchmark: "diannao".into(), share: 0.35, trace: b },
-                TenantTrace { benchmark: "stripes".into(), share: 0.25, trace: c },
+                TenantTrace { benchmark: "tabla".into(), share: 0.40, trace: a, qos_target: None },
+                TenantTrace { benchmark: "diannao".into(), share: 0.35, trace: b, qos_target: None },
+                TenantTrace { benchmark: "stripes".into(), share: 0.25, trace: c, qos_target: None },
             ],
         }
     }
@@ -173,8 +200,134 @@ impl Scenario {
             name: "overnight".into(),
             description: "low-utilization overnight valley across both tenants".into(),
             tenants: vec![
-                TenantTrace { benchmark: "tabla".into(), share: 0.5, trace: a },
-                TenantTrace { benchmark: "dnnweaver".into(), share: 0.5, trace: b },
+                TenantTrace { benchmark: "tabla".into(), share: 0.5, trace: a, qos_target: None },
+                TenantTrace { benchmark: "dnnweaver".into(), share: 0.5, trace: b, qos_target: None },
+            ],
+        }
+    }
+
+    /// Two steady Poisson tenants — deliberately unspectacular load so
+    /// the golden/property signal of the `board-failure` runs is the
+    /// injected failure window ([`FaultPlan::for_scenario`]: the first
+    /// group loses its last shard for the middle third of the run), not
+    /// workload churn.
+    ///
+    /// [`FaultPlan::for_scenario`]: super::FaultPlan::for_scenario
+    pub fn board_failure(steps: usize, seed: u64) -> Scenario {
+        let a = poisson(steps, 0.35, 1_000.0, seed);
+        let b = poisson(steps, 0.30, 1_000.0, seed ^ 0xb0a2d);
+        Scenario {
+            name: "board-failure".into(),
+            description: "steady tenants; a board fails mid-run and later recovers".into(),
+            tenants: vec![
+                TenantTrace { benchmark: "tabla".into(), share: 0.5, trace: a, qos_target: None },
+                TenantTrace { benchmark: "diannao".into(), share: 0.5, trace: b, qos_target: None },
+            ],
+        }
+    }
+
+    /// A user-facing Poisson tenant over a diurnal background; the
+    /// canonical plan slows one of the first group's shards 4× for the
+    /// middle half of the run (backend latency spike — the datacenter
+    /// straggler case).
+    pub fn straggler(steps: usize, seed: u64) -> Scenario {
+        let front = poisson(steps, 0.30, 1_000.0, seed);
+        let period = Scenario::day_period(steps);
+        let back = periodic(steps, period, 0.15, 0.70, 0.02, seed ^ 0x57a6);
+        Scenario {
+            name: "straggler".into(),
+            description: "one shard runs 4x slow mid-run under steady demand".into(),
+            tenants: vec![
+                TenantTrace { benchmark: "tabla".into(), share: 0.55, trace: front, qos_target: None },
+                TenantTrace { benchmark: "stripes".into(), share: 0.45, trace: back, qos_target: None },
+            ],
+        }
+    }
+
+    /// Three moderately-loaded tenants whose *offered demand* is
+    /// multiplied fleet-wide by the canonical plan's surge window — the
+    /// correlated cross-tenant flash event. The traces themselves stay
+    /// baseline: the surge lives in the [`FaultPlan`](super::FaultPlan)
+    /// so offline replays of the same scenario see the un-surged
+    /// workload.
+    pub fn correlated_surge(steps: usize, seed: u64) -> Scenario {
+        let a = poisson(steps, 0.30, 1_000.0, seed);
+        let period = Scenario::day_period(steps);
+        let b = periodic(steps, period, 0.12, 0.65, 0.02, seed ^ 0x5139e);
+        let c = poisson(steps, 0.25, 1_000.0, seed ^ 0xc0de);
+        Scenario {
+            name: "correlated-surge".into(),
+            description: "all tenants surge together to 1.8x demand mid-run".into(),
+            tenants: vec![
+                TenantTrace { benchmark: "tabla".into(), share: 0.40, trace: a, qos_target: None },
+                TenantTrace { benchmark: "diannao".into(), share: 0.35, trace: b, qos_target: None },
+                TenantTrace { benchmark: "dnnweaver".into(), share: 0.25, trace: c, qos_target: None },
+            ],
+        }
+    }
+
+    /// Three tenants with explicit QoS tiers: a latency-critical premium
+    /// tenant, a standard tenant, and a best-effort batch tenant whose
+    /// relaxed guardband target lets its group decay margin faster. The
+    /// tiers refine the run-level `qos_target` only when the adaptive
+    /// guardband is on ([`QosTier::effective`]), so static-baseline
+    /// replays of this scenario are bit-identical to an untiered one.
+    pub fn tiered_tenants(steps: usize, seed: u64) -> Scenario {
+        let premium = poisson(steps, 0.35, 1_000.0, seed);
+        let period = Scenario::day_period(steps);
+        let standard = periodic(steps, period, 0.15, 0.75, 0.02, seed ^ 0x71e2);
+        let batch = periodic(steps, period, 0.20, 0.60, 0.01, seed ^ 0xba7c4);
+        Scenario {
+            name: "tiered-tenants".into(),
+            description: "premium/standard/best-effort tenants with per-tier QoS targets"
+                .into(),
+            tenants: vec![
+                TenantTrace {
+                    benchmark: "tabla".into(),
+                    share: 0.40,
+                    trace: premium,
+                    qos_target: Some(QosTier::Premium.target()),
+                },
+                TenantTrace {
+                    benchmark: "diannao".into(),
+                    share: 0.35,
+                    trace: standard,
+                    qos_target: Some(QosTier::Standard.target()),
+                },
+                TenantTrace {
+                    benchmark: "stripes".into(),
+                    share: 0.25,
+                    trace: batch,
+                    qos_target: Some(QosTier::BestEffort.target()),
+                },
+            ],
+        }
+    }
+
+    /// Long-horizon replay through the timestamped-CSV path: both
+    /// tenants' traces are generated, serialized (`step,load` for the
+    /// diurnal tenant, plain `load` for the Poisson one), and parsed
+    /// back through [`Trace::from_csv`] — so every run of this scenario
+    /// exercises the exact recording formats a production trace archive
+    /// would replay, including the 6-decimal quantization.
+    pub fn long_replay(steps: usize, seed: u64) -> Scenario {
+        let period = Scenario::day_period(steps);
+        let front = periodic(steps, period, 0.12, 0.82, 0.02, seed);
+        let back = poisson(steps, 0.28, 1_000.0, seed ^ 0x10e9);
+        // Round-trip both serialization formats. The CSVs are produced by
+        // the serializers `from_csv` is the documented inverse of, so a
+        // parse failure here is a format regression, not bad input.
+        let front = Trace::from_csv(&front.to_csv_with_steps(), "long-replay-diurnal")
+            .expect("to_csv_with_steps output must parse");
+        let back = Trace::from_csv(&back.to_csv(), "long-replay-poisson")
+            .expect("to_csv output must parse");
+        Scenario {
+            name: "long-replay".into(),
+            description: "multi-day diurnal archive replayed via the timestamped CSV path"
+                .into(),
+            tenants: vec![
+                TenantTrace { benchmark: "tabla".into(), share: 0.5, trace: front, qos_target: None },
+                TenantTrace { benchmark: "dnnweaver".into(), share: 0.5, trace: back, qos_target: None },
             ],
         }
     }
@@ -188,6 +341,7 @@ impl Scenario {
                 benchmark: benchmark.to_string(),
                 share: *share,
                 trace: Trace::from_csv(csv, &format!("{benchmark}-replay"))?,
+                qos_target: None,
             });
         }
         let s = Scenario {
@@ -292,6 +446,64 @@ mod tests {
         let s = Scenario::overnight(2_000, 5);
         for t in &s.tenants {
             assert!(t.trace.mean() < 0.2, "{}: mean {}", t.benchmark, t.trace.mean());
+        }
+    }
+
+    #[test]
+    fn tiered_tenants_declare_ordered_tiers() {
+        let s = Scenario::tiered_tenants(240, 2019);
+        let tiers: Vec<f64> = s.tenants.iter().map(|t| t.qos_target.unwrap()).collect();
+        assert_eq!(
+            tiers,
+            vec![
+                QosTier::Premium.target(),
+                QosTier::Standard.target(),
+                QosTier::BestEffort.target()
+            ],
+            "strictest tier first, batch tier last"
+        );
+        // Every other named scenario leaves tenants untiered.
+        for name in Scenario::NAMES {
+            if name != "tiered-tenants" {
+                let s = Scenario::by_name(name, 48, 2019).unwrap();
+                assert!(
+                    s.tenants.iter().all(|t| t.qos_target.is_none()),
+                    "{name} must not declare tiers"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn long_replay_goes_through_both_csv_formats() {
+        let s = Scenario::long_replay(480, 2019);
+        assert_eq!(s.steps(), 480);
+        assert_eq!(s.tenants[0].trace.label, "long-replay-diurnal");
+        assert_eq!(s.tenants[1].trace.label, "long-replay-poisson");
+        // The replayed loads are the 6-decimal quantization of the
+        // generated ones — identical to regenerating and re-parsing.
+        let period = Scenario::day_period(480);
+        let fresh = periodic(480, period, 0.12, 0.82, 0.02, 2019);
+        for (replayed, orig) in s.tenants[0].trace.loads.iter().zip(&fresh.loads) {
+            assert!((replayed - orig).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn adversarial_scenarios_stay_moderate_without_their_fault_plans() {
+        // The fault windows live in the FaultPlan, not the traces: the
+        // workload side of the fault-carrying scenarios must stay
+        // moderate so the injected fault is the dominant signal.
+        for name in ["board-failure", "straggler", "correlated-surge"] {
+            let s = Scenario::by_name(name, 400, 2019).unwrap();
+            for t in &s.tenants {
+                let mean = t.trace.mean();
+                assert!(
+                    (0.05..0.6).contains(&mean),
+                    "{name}/{}: mean {mean} out of the moderate band",
+                    t.benchmark
+                );
+            }
         }
     }
 

@@ -54,7 +54,10 @@ fn assert_paths_agree(spec: &SimSpec) {
             max_backlog_steps: 1.0,
             predictor: spec.predictor,
             predictor_period: Scenario::day_period(spec.epochs),
-            qos_target: spec.qos_target,
+            // Mirror the live per-tenant tier resolution
+            // (QosTier::effective): tiers refine only an enabled
+            // run-level guardband.
+            qos_target: spec.qos_target.map(|d| tenant.qos_target.unwrap_or(d)),
             capacity_policy: spec.policy,
             ..PlatformConfig::default()
         };
@@ -77,8 +80,12 @@ fn assert_paths_agree(spec: &SimSpec) {
 
 #[test]
 fn offline_and_live_decisions_agree_on_every_scenario_and_capacity_policy() {
-    // 4 named scenarios x {dvfs-only, pg-only, hybrid}: the acceptance
-    // matrix. Static-margin Markov configuration (the golden default).
+    // Every named scenario (adversarial ones included) x {dvfs-only,
+    // pg-only, hybrid}: the acceptance matrix. Static-margin Markov
+    // configuration (the golden default). SimSpec::default carries the
+    // empty fault plan — cross-path equivalence is a *fault-free*
+    // contract, since the offline plant has no fault model; injected
+    // runs are covered by tests/sim_faults.rs instead.
     for name in Scenario::NAMES {
         for policy in CapacityPolicy::ALL {
             let spec = SimSpec {
@@ -99,7 +106,10 @@ fn offline_and_live_decisions_agree_under_the_adaptive_ensemble() {
     // per-level LUT selection, and the ensemble's shadow scoring +
     // hysteresis switching — all of which must live in the one shared
     // controller for the logs to stay identical.
-    for name in ["diurnal", "overnight"] {
+    // tiered-tenants additionally pins the per-tenant QoS tier
+    // resolution: both paths must route each group's guardband at its
+    // own effective target (premium/standard/best-effort).
+    for name in ["diurnal", "overnight", "tiered-tenants"] {
         let spec = SimSpec {
             scenario: name.to_string(),
             epochs: 36,

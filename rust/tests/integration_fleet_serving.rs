@@ -19,8 +19,18 @@ use wavescale::workload::Scenario;
 fn two_group_cfg() -> FleetServingConfig {
     FleetServingConfig {
         groups: vec![
-            GroupConfig { benchmark: "tabla".into(), share: 0.5, n_instances: 2 },
-            GroupConfig { benchmark: "dnnweaver".into(), share: 0.5, n_instances: 2 },
+            GroupConfig {
+                benchmark: "tabla".into(),
+                share: 0.5,
+                n_instances: 2,
+                qos_target: None,
+            },
+            GroupConfig {
+                benchmark: "dnnweaver".into(),
+                share: 0.5,
+                n_instances: 2,
+                qos_target: None,
+            },
         ],
         epoch: Duration::from_millis(50),
         cycles_per_batch: 1.0e4,
@@ -81,7 +91,12 @@ fn fleet_serves_two_groups_and_reports_per_group_qos() {
 #[test]
 fn per_shard_backpressure_rejects_under_overload() {
     let cfg = FleetServingConfig {
-        groups: vec![GroupConfig { benchmark: "tabla".into(), share: 1.0, n_instances: 2 }],
+        groups: vec![GroupConfig {
+            benchmark: "tabla".into(),
+            share: 1.0,
+            n_instances: 2,
+            qos_target: None,
+        }],
         epoch: Duration::from_millis(100),
         // Tiny total capacity (split across 2 shards) + very slow service.
         queue_capacity: 8,
@@ -151,6 +166,7 @@ fn drive_scenario_survives_overlong_epochs() {
                 benchmark: t.benchmark.clone(),
                 share: t.share,
                 n_instances: 1,
+                qos_target: t.qos_target,
             })
             .collect(),
         epoch: Duration::from_millis(1),
@@ -175,6 +191,7 @@ fn gated_shard_requests_are_redispatched_never_dropped() {
             benchmark: "tabla".into(),
             share: 1.0,
             n_instances: 4,
+            qos_target: None,
         }],
         epoch: Duration::from_millis(40),
         cycles_per_batch: 2.0e5,

@@ -1,0 +1,186 @@
+//! Fault-injection acceptance suite (DESIGN.md S20): a mid-run shard
+//! failure — plus a straggler window and a correlated load surge — is
+//! injected into EVERY named scenario under EVERY capacity policy on the
+//! `VirtualClock`, and each run must
+//!
+//! 1. uphold the conservation invariant `admitted == completed + failed`
+//!    per group (with `failed == 0`: the failed board's queue is drained
+//!    and re-dispatched, never dropped, and the native backend cannot
+//!    fail);
+//! 2. replay bitwise run-to-run: the published trace JSON of two runs
+//!    with the same seed and the same `FaultPlan` is byte-identical;
+//! 3. actually observe the injection: some epoch records a failed board,
+//!    and the board has recovered by the final epoch.
+//!
+//! Cross-path (offline vs live) equivalence is deliberately NOT asserted
+//! here — the offline plant has no fault model, so equivalence is a
+//! fault-free contract checked by `tests/control_equivalence.rs`.
+
+use wavescale::simtest::{self, SimSpec};
+use wavescale::vscale::CapacityPolicy;
+use wavescale::workload::{BoardFailure, FaultPlan, Scenario, StragglerWindow, SurgeWindow};
+
+/// An adversarial mid-run plan sized to the fleet layout: the LAST shard
+/// of every group fails for the middle third of the run, shard 0 of
+/// group 0 straggles at 3x service time over the same stretch, and a
+/// 1.5x correlated surge hits every tenant at once.
+fn mid_run_plan(n_groups: usize, n_instances: usize, epochs: usize) -> FaultPlan {
+    let fail = (epochs / 3).max(1);
+    let recover = (epochs * 2 / 3).max(fail + 1);
+    FaultPlan {
+        board_failures: (0..n_groups)
+            .map(|group| BoardFailure {
+                group,
+                shard: n_instances - 1,
+                fail_epoch: fail,
+                recover_epoch: recover,
+            })
+            .collect(),
+        stragglers: vec![StragglerWindow {
+            group: 0,
+            shard: 0,
+            from_epoch: fail,
+            until_epoch: recover,
+            slowdown: 3.0,
+        }],
+        surges: vec![SurgeWindow { from_epoch: fail, until_epoch: recover, multiplier: 1.5 }],
+    }
+}
+
+fn assert_conserved(spec: &SimSpec, out: &simtest::SimOutcome) {
+    let mut admitted_total = 0u64;
+    for g in &out.report.stats.per_group {
+        assert_eq!(
+            g.admitted,
+            g.completed + g.failed,
+            "{spec:?} {}: conservation broken under faults",
+            g.name
+        );
+        assert_eq!(g.failed, 0, "{spec:?} {}: fault drain dropped requests", g.name);
+        admitted_total += g.admitted;
+    }
+    assert_eq!(
+        admitted_total, out.accepted,
+        "{spec:?}: accepted diverged from the per-group admitted sum"
+    );
+    // The fleet-level re-dispatch counter is the sum of the groups'.
+    let redisp: u64 = out.report.stats.per_group.iter().map(|g| g.redispatched).sum();
+    assert_eq!(out.report.stats.redispatched, redisp, "{spec:?}: redispatched aggregation");
+}
+
+#[test]
+fn mid_run_shard_failure_conserves_and_replays_bitwise_on_every_scenario_x_policy() {
+    for name in Scenario::NAMES {
+        for policy in CapacityPolicy::ALL {
+            let mut spec = SimSpec { policy, epochs: 12, ..SimSpec::golden(name) };
+            let scenario = Scenario::by_name(name, spec.epochs, spec.seed).unwrap();
+            spec.faults =
+                mid_run_plan(scenario.tenants.len(), spec.n_instances, spec.epochs);
+
+            let a = simtest::run(&spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+            assert_conserved(&spec, &a);
+
+            // The failure must be visible in the published epoch trace —
+            // and gone again by the end (recovery un-gates the board).
+            for records in &a.report.epoch_records {
+                assert!(
+                    records.iter().any(|r| r.n_failed >= 1),
+                    "{name} x {}: mid-run board failure never observed",
+                    policy.name()
+                );
+                assert_eq!(
+                    records.last().unwrap().n_failed,
+                    0,
+                    "{name} x {}: board must have recovered by the final epoch",
+                    policy.name()
+                );
+            }
+            // Group 0's straggler window depresses its capacity factor.
+            assert!(
+                a.report.epoch_records[0].iter().any(|r| r.slow_factor < 1.0),
+                "{name} x {}: straggler window never observed",
+                policy.name()
+            );
+
+            // Bitwise run-to-run determinism WITH the injected faults.
+            let b = simtest::run(&spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+            let ja = simtest::trace_json(&spec, &scenario, &a.report).to_string_compact();
+            let jb = simtest::trace_json(&spec, &scenario, &b.report).to_string_compact();
+            assert_eq!(ja, jb, "{name} x {}: faulted replay diverged", policy.name());
+        }
+    }
+}
+
+#[test]
+fn correlated_surge_raises_offered_load_and_nothing_leaks() {
+    // A surge-only plan against the identical seed admits strictly more
+    // work than the fault-free run (the driver multiplies every tenant's
+    // offered load inside the window) and still conserves it all.
+    let base = SimSpec { epochs: 10, ..SimSpec::golden("diurnal") };
+    let mut surged = base.clone();
+    surged.faults = FaultPlan {
+        surges: vec![SurgeWindow { from_epoch: 1, until_epoch: 9, multiplier: 2.0 }],
+        ..FaultPlan::default()
+    };
+    let plain = simtest::run(&base).unwrap();
+    let spiked = simtest::run(&surged).unwrap();
+    assert_conserved(&base, &plain);
+    assert_conserved(&surged, &spiked);
+    assert!(
+        spiked.accepted > plain.accepted,
+        "2x surge must admit more work: {} vs {}",
+        spiked.accepted,
+        plain.accepted
+    );
+}
+
+#[test]
+fn all_boards_failed_falls_back_instead_of_deadlocking() {
+    // Adversarial corner: the plan fails EVERY shard of a group at once.
+    // The coordinator falls back to serving on the nominal active set
+    // (a failed board that still answers beats a wedged drain), so the
+    // run completes and conserves rather than deadlocking shutdown.
+    let mut spec = SimSpec { epochs: 8, ..SimSpec::golden("overnight") };
+    let scenario = Scenario::by_name(&spec.scenario, spec.epochs, spec.seed).unwrap();
+    spec.faults = FaultPlan {
+        board_failures: (0..scenario.tenants.len())
+            .flat_map(|group| {
+                (0..spec.n_instances).map(move |shard| BoardFailure {
+                    group,
+                    shard,
+                    fail_epoch: 2,
+                    recover_epoch: 6,
+                })
+            })
+            .collect(),
+        ..FaultPlan::default()
+    };
+    let out = simtest::run(&spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+    assert_conserved(&spec, &out);
+    for records in &out.report.epoch_records {
+        assert!(
+            records.iter().any(|r| r.n_failed == spec.n_instances),
+            "total-outage window never observed"
+        );
+        assert_eq!(records.last().unwrap().n_failed, 0, "fleet must recover");
+    }
+}
+
+#[test]
+fn scripted_plans_validate_against_the_fleet_layout() {
+    // FaultPlan::scripted only emits windows inside the layout it was
+    // given, so attaching it to the matching spec always passes start
+    // validation — across many seeds.
+    for seed in 0..32u64 {
+        let mut spec = SimSpec { epochs: 6, ..SimSpec::golden("mixed-tenant") };
+        let scenario = Scenario::by_name(&spec.scenario, spec.epochs, spec.seed).unwrap();
+        spec.seed = seed;
+        spec.faults =
+            FaultPlan::scripted(seed, scenario.tenants.len(), spec.n_instances, spec.epochs);
+        spec.faults
+            .validate(scenario.tenants.len(), spec.n_instances)
+            .unwrap_or_else(|e| panic!("seed {seed}: scripted plan invalid: {e}"));
+        let out = simtest::run(&spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+        assert_conserved(&spec, &out);
+    }
+}

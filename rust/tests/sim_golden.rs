@@ -81,6 +81,7 @@ fn golden_traces_and_determinism() {
     }
 
     same_seed_replays_byte_identically_and_seeds_matter();
+    identical_fault_plans_replay_byte_identically();
     virtual_runs_are_independent_of_installed_artifacts();
 }
 
@@ -121,6 +122,36 @@ fn same_seed_replays_byte_identically_and_seeds_matter() {
     let c = simtest::run(&other).unwrap();
     let jc = simtest::trace_json(&other, &scenario_other, &c.report).to_string_pretty();
     assert_ne!(ja, jc, "seed must steer the replay");
+}
+
+fn identical_fault_plans_replay_byte_identically() {
+    // Fault-injection determinism regression: the same seed AND the same
+    // FaultPlan must reproduce the trace JSON byte for byte — including
+    // the injected straggler window's per-epoch capacity column — and
+    // removing the plan (same seed) must steer the replay.
+    let spec = SimSpec::golden("straggler");
+    assert!(!spec.faults.is_empty(), "straggler golden must carry its canonical plan");
+    let scenario = Scenario::by_name(&spec.scenario, spec.epochs, spec.seed).unwrap();
+    let a = simtest::run(&spec).unwrap();
+    let b = simtest::run(&spec).unwrap();
+    let ja = simtest::trace_json(&spec, &scenario, &a.report).to_string_pretty();
+    let jb = simtest::trace_json(&spec, &scenario, &b.report).to_string_pretty();
+    assert_eq!(ja, jb, "identical FaultPlan must replay byte-identically");
+    // The plan is part of the published trace, and the slowdown shows up
+    // in the per-epoch capacity column during its window.
+    assert!(ja.contains("\"stragglers\""), "trace must embed the fault plan");
+    assert!(
+        a.report.epoch_records[0].iter().any(|r| r.slow_factor < 1.0),
+        "straggler window must depress the capacity factor"
+    );
+    let clean = SimSpec { faults: Default::default(), ..spec.clone() };
+    let c = simtest::run(&clean).unwrap();
+    let jc = simtest::trace_json(&clean, &scenario, &c.report).to_string_pretty();
+    assert_ne!(ja, jc, "the fault plan must steer the replay");
+    assert!(
+        c.report.epoch_records[0].iter().all(|r| r.slow_factor == 1.0),
+        "an empty plan must keep the capacity factor at exactly 1.0"
+    );
 }
 
 fn virtual_runs_are_independent_of_installed_artifacts() {

@@ -9,7 +9,9 @@
 //! 1. every shard-queue op sequence matches a model queue (FIFO order,
 //!    capacity bound, depth mirror);
 //! 2. `admitted == completed + failed` at shutdown and the gated-shard
-//!    drain never drops a request, for arbitrary scenarios/policies;
+//!    drain never drops a request, for arbitrary scenarios/policies —
+//!    with and without a scripted `FaultPlan` injecting board failures,
+//!    stragglers and load surges;
 //! 3. the same seed replays byte-identically;
 //! 4. live hybrid capacity energy is never worse than the better of the
 //!    dvfs-only / pg-only baselines (within 1%).
@@ -23,7 +25,7 @@ use wavescale::simtest::{self, SimSpec};
 use wavescale::util::prng::Rng;
 use wavescale::util::prop::{assert_that, check};
 use wavescale::vscale::CapacityPolicy;
-use wavescale::workload::Scenario;
+use wavescale::workload::{FaultPlan, Scenario};
 
 fn req(id: u64) -> Request {
     Request { id, payload: vec![], submitted: 0 }
@@ -129,6 +131,10 @@ fn random_spec(rng: &mut Rng) -> SimSpec {
         // and guardband configuration space, not just the defaults.
         predictor: *rng.choose(&PredictorKind::ALL),
         qos_target: if rng.bool(0.5) { Some(*rng.choose(&[0.01, 0.05, 0.25])) } else { None },
+        // Fault-free by default; the dedicated fault property below draws
+        // a scripted plan so the other properties keep their exact
+        // no-fault baselines (empty plans are bitwise-neutral).
+        faults: FaultPlan::default(),
     }
 }
 
@@ -151,6 +157,48 @@ fn prop_admitted_equals_completed_plus_failed_and_nothing_is_dropped() {
             // The native backend cannot fail, so the gated-shard drain
             // must deliver every admitted request to completion.
             assert_that(g.failed == 0, format!("{}: native backend failed", g.name))?;
+            admitted_total += g.admitted;
+        }
+        assert_that(
+            admitted_total == out.accepted,
+            format!("{spec:?}: accepted {} != admitted {admitted_total}", out.accepted),
+        )
+    });
+}
+
+#[test]
+fn prop_fault_injection_preserves_conservation_and_never_drops_work() {
+    // Satellite of the fault-injection tentpole: an arbitrary scripted
+    // FaultPlan (board failures, stragglers, surges — drawn per case)
+    // over an arbitrary scenario/policy/predictor spec must uphold the
+    // shutdown-drain invariant. Board failure gates + re-dispatches; it
+    // must never lose a request or invent a completion.
+    check("faulted fleet conserves admitted requests", 60, |rng| {
+        let mut spec = random_spec(rng);
+        spec.epochs = rng.index(4, 9);
+        let scenario = Scenario::by_name(&spec.scenario, spec.epochs, spec.seed)?;
+        spec.faults = FaultPlan::scripted(
+            rng.next_u64(),
+            scenario.tenants.len(),
+            spec.n_instances,
+            spec.epochs,
+        );
+        let out = simtest::run(&spec).map_err(|e| format!("{spec:?}: {e}"))?;
+        let mut admitted_total = 0u64;
+        for g in &out.report.stats.per_group {
+            assert_that(
+                g.admitted == g.completed + g.failed,
+                format!(
+                    "{spec:?} {}: admitted {} != completed {} + failed {}",
+                    g.name, g.admitted, g.completed, g.failed
+                ),
+            )?;
+            // Failed boards re-dispatch their queues; the native backend
+            // itself cannot fail, so the drain must never drop work.
+            assert_that(
+                g.failed == 0,
+                format!("{spec:?} {}: fault drain dropped {} requests", g.name, g.failed),
+            )?;
             admitted_total += g.admitted;
         }
         assert_that(
