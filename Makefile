@@ -18,6 +18,9 @@
 #   make faults      fault-injection acceptance suite: board failures,
 #                    stragglers, correlated surges on every scenario x
 #                    policy (seed-pinned, deterministic)
+#   make topology-smoke  fleet-of-fleets acceptance: 2- and 4-node runs
+#                    of every scenario, scripted migrations, distributed
+#                    control equivalence (DESIGN.md S21)
 #   make fmt         rustfmt the whole workspace (CI runs the --check
 #                    twin alongside clippy)
 #   make doc         rustdoc with warnings surfaced
@@ -25,7 +28,7 @@
 ARTIFACTS_DIR := artifacts
 PY            := python3
 
-.PHONY: artifacts build test bench golden bench-coordinator bench-predictor doc fmt fmt-check scenario-smoke faults clean
+.PHONY: artifacts build test bench golden bench-coordinator bench-predictor doc fmt fmt-check scenario-smoke faults topology-smoke clean
 
 artifacts:
 	cd python && $(PY) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
@@ -109,6 +112,24 @@ faults: build
 	cargo test --release --test sim_faults
 	WAVESCALE_PROP_SEED=2019 cargo test --release --test sim_properties \
 	    prop_fault_injection_preserves_conservation_and_never_drops_work
+
+# Fleet-of-fleets acceptance (DESIGN.md S21): 2- and 4-node virtual-time
+# runs of every scenario under the hybrid policy (conservation + node-count
+# invariance + bitwise replay), scripted-migration conservation, the
+# distributed control-equivalence matrix (N in {1,2,4} x scenario x
+# policy), the randomized migration property, and a live 2-/4-node
+# serve-fleet smoke with the topology snapshot printed.
+topology-smoke: build
+	cargo test --release --test sim_topology
+	cargo test --release --test control_equivalence \
+	    offline_and_live_decisions_agree_on_every_scenario_and_capacity_policy
+	WAVESCALE_PROP_SEED=2019 cargo test --release --test sim_properties \
+	    prop_migration_conserves_work
+	cargo run --release -- serve-fleet --scenario mixed-tenant --epochs 9 \
+	    --epoch-ms 60 --rps 800 --instances 2 --nodes 2 --virtual-time
+	cargo run --release -- serve-fleet --scenario diurnal --epochs 9 \
+	    --epoch-ms 60 --rps 800 --instances 2 --nodes 4 --virtual-time
+	cargo run --release -- topology --scenario mixed-tenant --nodes 4
 
 doc:
 	cargo doc --no-deps

@@ -15,7 +15,12 @@
 //!   decision to its [`GroupController`];
 //! * the live CC keeps only serving mechanics — arrival counters, shard
 //!   gating/drain, gauges, energy integration — and delegates each
-//!   epoch's decision to one [`GroupController`] per tenant group.
+//!   epoch's decision to one [`GroupController`] per tenant group. Since
+//!   the fleet-of-fleets split (DESIGN.md S21) that CC loop runs in
+//!   `coordinator::node`, one thread per serving node, and a group's
+//!   controller migrates *whole* between nodes — the decision sequence is
+//!   continuous across moves, which is what lets the distributed fleet
+//!   keep this module's equivalence contract at any node count.
 //!
 //! A plant feeds the controller one [`Observation`] per step/epoch (the
 //! observed load, whether capacity was violated, the carried backlog)

@@ -11,6 +11,11 @@
 //!
 //! Both are lock-free; work stealing on the worker side covers whatever
 //! imbalance the policy leaves behind.
+//!
+//! In a multi-node fleet each node's slice has its own dispatcher: the
+//! cross-node hop (which node's slice receives the submit) is decided one
+//! layer up by `coordinator::router` from the topology's hosting masks,
+//! and this policy then places the request within the chosen node.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;

@@ -1,51 +1,41 @@
-//! Multi-tenant sharded serving (DESIGN.md S11.5).
+//! Multi-tenant sharded serving — fleet composition root (DESIGN.md
+//! S11.5, S21).
 //!
-//! Lifts `platform::fleet`'s *offline* group concept into the live request
-//! path: one [`FleetServing`] coordinator serves several benchmark groups
-//! (e.g. Tabla + DianNao) concurrently. Each group owns
+//! Since the fleet-of-fleets split this file owns *composition only*; the
+//! three layers it assembles each live in their own module with an
+//! explicit source of truth:
 //!
-//! * its worker instances and their bounded [`ShardQueue`]s,
-//! * a [`Dispatcher`] (least-loaded or round-robin) plus work stealing,
-//! * its own Markov predictor, voltage LUT and published DVFS operating
-//!   point (an independent DVFS domain),
+//! * [`topology`](super::topology) — [`FleetTopology`], the versioned,
+//!   pure-data map of groups → nodes → shards behind a
+//!   [`TopologyStore`]; every placement question is answered here.
+//! * [`node`](super::node) — per-node data planes ([shard queues +
+//!   dispatcher + workers]) and the node CC thread running the *identical*
+//!   [`GroupController`](crate::control::GroupController) decision loop
+//!   per hosted group, with migration = gate + drain + re-dispatch +
+//!   controller hand-off.
+//! * [`router`](super::router) — submit routing across nodes (least
+//!   loaded among hosting nodes; work stealing stays node-local) and the
+//!   opt-in saturation rebalancer.
 //!
-//! while a single Central Controller thread walks every group each epoch
-//! (paper Fig. 9's CC, generalized to heterogeneous tenants) and a shared
-//! fleet-level [`Registry`](crate::metrics::Registry) + [`FleetServingStats`]
-//! aggregate power and QoS across groups — the live counterpart of
-//! `platform::fleet::FleetReport`.
+//! A [`FleetServing`] with the default `nodes: 1` is the legacy
+//! single-process coordinator, bit-identical: same actor registration
+//! order, same epoch-pass float expressions, same submit placement —
+//! every pre-split test, scenario and golden replays unchanged. With
+//! `nodes: N` the same groups spread round-robin across N node agents,
+//! and `tests/control_equivalence.rs` holds the distributed decision
+//! logs to the offline `Platform` replay.
 //!
-//! Since the control-plane extraction (DESIGN.md S19) the CC itself is a
-//! pure *plant*: it keeps the serving mechanics — arrival counters,
-//! backlog/violation accounting, shard gating + drain, gauges, energy
-//! integration — and delegates every per-epoch decision (predict,
-//! guardband, margin ladder, elastic LUT lookup) to one
-//! [`GroupController`](crate::control::GroupController) per group, the
-//! same engine `platform::Platform` runs offline. The controllers' full
-//! decision logs come back in
-//! [`FleetServingReport::decision_records`]; replaying the observed
-//! per-epoch loads through the offline platform must reproduce them
-//! exactly (`tests/control_equivalence.rs`).
-//!
-//! Each group's CC decision is **elastic** (DESIGN.md S6.1): instead of
-//! DVFS over a fixed instance count, the per-group
-//! [`ElasticLut`](crate::vscale::ElasticLut) picks the minimum-power
-//! (n_active, Vcore, Vbram, f) combination for the predicted bin. Gated
-//! instances draw `pg_residual` of nominal power; their shards are
-//! flagged so dispatch and stealing skip them, their workers park on the
-//! shard condvar, and the CC drains any requests still queued on a gated
-//! shard into the active shards every epoch — admitted work is never
-//! dropped. `capacity_policy` selects the two baselines (`DvfsOnly`,
-//! `GatingOnly`) for side-by-side runs.
-//!
-//! All sleeping, waiting and timestamping goes through the configured
-//! [`Clock`](crate::clock::Clock) (DESIGN.md S18). Workers and the CC are
-//! registered clock *actors* in deterministic order (workers first, then
-//! the CC), so a fleet on a
-//! [`VirtualClock`](crate::clock::VirtualClock) is a deterministic
-//! discrete-event simulation: [`drive_scenario`] replays epochs in
-//! virtual time and two runs with the same seed produce byte-identical
-//! [`EpochRecord`] traces (`simtest`).
+//! Each group keeps its own predictor, voltage LUT and DVFS domain; the
+//! elastic capacity manager, fault-plan semantics and the
+//! `admitted == completed + failed` drain invariant are unchanged from
+//! the monolith (DESIGN.md S6.1, S20) — the epoch pass moved verbatim
+//! into `node::GroupCc::run_epoch`. All sleeping, waiting and
+//! timestamping goes through the configured
+//! [`Clock`](crate::clock::Clock) (DESIGN.md S18), so a fleet on a
+//! [`VirtualClock`](crate::clock::VirtualClock) — any node count — is a
+//! deterministic discrete-event simulation: [`drive_scenario`] replays
+//! epochs in virtual time and two runs with the same seed produce
+//! byte-identical [`EpochRecord`] traces (`simtest`).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -53,31 +43,26 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use crate::clock::{self, ActorScope, Clock};
+use crate::clock::{self, Clock};
 
 use super::backend::InferenceBackend;
 use super::dispatch::{DispatchPolicy, Dispatcher};
+use super::node::{self, GroupCc, GroupSlice, Handover, NodeCtx, NodeShared, WorkerEnv};
+use super::router::{RebalanceConfig, Router};
 use super::shard::ShardQueue;
-use super::{Completion, EpochRecord, Request, SubmitError};
-use crate::control::{
-    ControlConfig, DecisionRecord, GroupController, LutSpec, Observation, QosTier,
-};
+use super::topology::{FleetTopology, MigrationPlan, TopologySnapshot, TopologyStore, MAX_NODES};
+use super::{EpochRecord, Request, SubmitError};
+use crate::control::DecisionRecord;
 use crate::markov::PredictorKind;
-use crate::workload::FaultPlan;
 use crate::metrics::{Counter, Gauge, Histogram, Registry};
 use crate::platform::{build_platform, PlatformConfig, Policy};
 use crate::power::DesignPower;
-use crate::runtime::{Engine, OpQuery, VoltageSelectorClient};
 use crate::vscale::{CapacityPolicy, Mode, Optimizer};
+use crate::workload::FaultPlan;
 
 /// Normalized nominal service clock (Hz); only the ratio to the published
 /// frequency matters for the simulated occupancy.
 pub(crate) const F_NOM_HZ: f64 = 1.0e8;
-
-/// What the CC thread hands back at shutdown: per-group epoch traces and
-/// per-group control-plane decision logs, both index-aligned with the
-/// fleet's groups.
-type CcOutput = (Vec<Vec<EpochRecord>>, Vec<Vec<DecisionRecord>>);
 
 /// One tenant group of a live fleet.
 #[derive(Clone, Debug)]
@@ -90,11 +75,79 @@ pub struct GroupConfig {
     pub n_instances: usize,
     /// Per-tenant QoS tier (violation-rate target). Only refines an
     /// *enabled* run-level guardband: the effective target is
-    /// [`QosTier::effective`]`(run_target, tier)`, so with the run-level
-    /// `qos_target` at `None` (static margin) tiers are inert and the
-    /// baselines stay bit-identical.
+    /// [`QosTier::effective`](crate::control::QosTier::effective)`(run_target, tier)`,
+    /// so with the run-level `qos_target` at `None` (static margin) tiers
+    /// are inert and the baselines stay bit-identical.
     pub qos_target: Option<f64>,
 }
+
+/// Why a [`FleetServingConfig`] was rejected at construction. Typed so
+/// callers (and tests) can distinguish a duplicate tenant from a bad
+/// share sum without string matching; [`FleetServing::start_with`] wraps
+/// these into its `anyhow` error.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConfigError {
+    /// The fleet has no groups at all.
+    NoGroups,
+    /// Two groups share one benchmark/tenant name — later name lookups
+    /// ([`FleetServing::group_index`]) would silently shadow the second.
+    DuplicateGroup(String),
+    /// A group's benchmark name is empty.
+    EmptyGroupName,
+    /// A group has zero shards/instances.
+    ZeroShards(String),
+    /// A group's traffic share is not positive.
+    NonPositiveShare(String),
+    /// Group shares do not sum to ~1 (the actual sum).
+    BadShareSum(f64),
+    /// A tenant QoS tier target outside `[0, 1)`.
+    BadQosTier {
+        /// Offending group name.
+        group: String,
+        /// The rejected target.
+        target: f64,
+    },
+    /// Node count outside `[1, MAX_NODES]`.
+    BadNodeCount(usize),
+    /// The fault plan is structurally invalid or names shards outside
+    /// the fleet layout.
+    BadFaultPlan(String),
+    /// The migration plan is structurally invalid for this layout.
+    BadMigrationPlan(String),
+    /// The rebalancer config is unusable (zero sustain or a negative
+    /// backlog threshold).
+    BadRebalance(String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::NoGroups => write!(f, "fleet needs at least one group"),
+            ConfigError::DuplicateGroup(name) => {
+                write!(f, "duplicate group name {name:?}: tenant lookups would shadow")
+            }
+            ConfigError::EmptyGroupName => write!(f, "group benchmark name is empty"),
+            ConfigError::ZeroShards(name) => write!(f, "{name}: need >= 1 instance"),
+            ConfigError::NonPositiveShare(name) => {
+                write!(f, "{name}: share must be positive")
+            }
+            ConfigError::BadShareSum(sum) => {
+                write!(f, "group shares sum to {sum}, expected 1")
+            }
+            ConfigError::BadQosTier { group, target } => {
+                write!(f, "{group}: qos tier target {target} outside [0, 1)")
+            }
+            ConfigError::BadNodeCount(n) => {
+                write!(f, "node count {n} outside [1, {MAX_NODES}]")
+            }
+            ConfigError::BadFaultPlan(why) => write!(f, "fault plan: {why}"),
+            ConfigError::BadMigrationPlan(why) => write!(f, "migration plan: {why}"),
+            ConfigError::BadRebalance(why) => write!(f, "rebalance config: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// Configuration of a multi-tenant serving fleet.
 #[derive(Clone, Debug)]
@@ -122,7 +175,7 @@ pub struct FleetServingConfig {
     pub warmup_epochs: usize,
     /// Shard selection policy on the submit path.
     pub dispatch: DispatchPolicy,
-    /// Allow idle workers to steal from sibling shards.
+    /// Allow idle workers to steal from sibling shards (node-local).
     pub steal: bool,
     /// How each group's CC trades instance gating against DVFS per epoch
     /// (DESIGN.md S6.1): `Hybrid` is the elastic capacity manager,
@@ -153,11 +206,27 @@ pub struct FleetServingConfig {
     /// bitwise-neutral — every query returns exactly `1.0` / no failure,
     /// so fault-free runs reproduce pre-fault traces byte-for-byte.
     pub faults: Arc<FaultPlan>,
+    /// Serving nodes (DESIGN.md S21): groups spread round-robin across
+    /// `nodes` node agents, each running the identical CC decision loop
+    /// for its hosted groups. The default `1` is the legacy
+    /// single-process coordinator, bit-identical to the pre-split path.
+    pub nodes: usize,
+    /// Deterministic scripted migration schedule (DESIGN.md S21.3): at
+    /// each listed epoch the hosting node gates + drains its slice into
+    /// the destination's and hands the group's controller over. The
+    /// default empty plan is bitwise-neutral.
+    pub migrations: Arc<MigrationPlan>,
+    /// Opt-in saturation rebalancer (DESIGN.md S21.3): `Some(..)` lets a
+    /// node migrate a group away after sustained modeled backlog. The
+    /// default `None` keeps placements fixed so every legacy run and
+    /// equivalence contract is untouched.
+    pub rebalance: Option<RebalanceConfig>,
     /// Time source for every wait/sleep/timestamp (DESIGN.md S18):
     /// `clock::wall()` for live serving, a
     /// [`VirtualClock`](crate::clock::VirtualClock) for deterministic
     /// simulation. Under a virtual clock the starting thread must already
-    /// be a registered actor ([`ActorScope::enter`]).
+    /// be a registered actor
+    /// ([`ActorScope::enter`](crate::clock::ActorScope::enter)).
     pub clock: Arc<dyn Clock>,
 }
 
@@ -188,47 +257,138 @@ impl Default for FleetServingConfig {
             predictor_period: 96,
             qos_target: None,
             faults: Arc::new(FaultPlan::default()),
+            nodes: 1,
+            migrations: Arc::new(MigrationPlan::default()),
+            rebalance: None,
             clock: clock::wall(),
         }
     }
 }
 
-/// Shared state of one live group.
+impl FleetServingConfig {
+    /// Structural validation, run by [`FleetServing::start_with`] before
+    /// any thread spawns: group names (non-empty, unique), shard counts,
+    /// shares, QoS tiers, node count, and the fault / migration plans
+    /// against this layout. Typed errors so callers can match on the
+    /// exact defect.
+    pub fn validate(&self) -> std::result::Result<(), ConfigError> {
+        if self.groups.is_empty() {
+            return Err(ConfigError::NoGroups);
+        }
+        for g in &self.groups {
+            if g.benchmark.is_empty() {
+                return Err(ConfigError::EmptyGroupName);
+            }
+            if g.n_instances == 0 {
+                return Err(ConfigError::ZeroShards(g.benchmark.clone()));
+            }
+            if g.share <= 0.0 {
+                return Err(ConfigError::NonPositiveShare(g.benchmark.clone()));
+            }
+            if let Some(t) = g.qos_target {
+                if !(0.0..1.0).contains(&t) {
+                    return Err(ConfigError::BadQosTier {
+                        group: g.benchmark.clone(),
+                        target: t,
+                    });
+                }
+            }
+        }
+        // Duplicate tenant names: group_index()/submit_to() resolve by
+        // name and would silently shadow the later group.
+        for (i, g) in self.groups.iter().enumerate() {
+            if self.groups[..i].iter().any(|o| o.benchmark == g.benchmark) {
+                return Err(ConfigError::DuplicateGroup(g.benchmark.clone()));
+            }
+        }
+        let share_sum: f64 = self.groups.iter().map(|g| g.share).sum();
+        if (share_sum - 1.0).abs() >= 1e-6 {
+            return Err(ConfigError::BadShareSum(share_sum));
+        }
+        if self.nodes == 0 || self.nodes > MAX_NODES {
+            return Err(ConfigError::BadNodeCount(self.nodes));
+        }
+        // Structural plan checks (windows non-empty, slowdowns >= 1, ...)
+        // are layout-independent; index bounds are checked against each
+        // group's own instance count since groups may differ in size.
+        self.faults
+            .validate(usize::MAX, usize::MAX)
+            .map_err(ConfigError::BadFaultPlan)?;
+        for f in &self.faults.board_failures {
+            if f.group >= self.groups.len() || f.shard >= self.groups[f.group].n_instances {
+                return Err(ConfigError::BadFaultPlan(format!(
+                    "board failure ({}, {}) outside the fleet layout",
+                    f.group, f.shard
+                )));
+            }
+        }
+        for w in &self.faults.stragglers {
+            if w.group >= self.groups.len() || w.shard >= self.groups[w.group].n_instances {
+                return Err(ConfigError::BadFaultPlan(format!(
+                    "straggler ({}, {}) outside the fleet layout",
+                    w.group, w.shard
+                )));
+            }
+        }
+        self.migrations
+            .validate(self.groups.len(), self.nodes)
+            .map_err(ConfigError::BadMigrationPlan)?;
+        if let Some(rb) = &self.rebalance {
+            if rb.sustain == 0 {
+                return Err(ConfigError::BadRebalance(
+                    "sustain must be >= 1 epoch".into(),
+                ));
+            }
+            if !(rb.min_backlog >= 0.0) {
+                return Err(ConfigError::BadRebalance(format!(
+                    "min_backlog {} must be >= 0",
+                    rb.min_backlog
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Shared state of one live group — placement-independent: counters,
+/// published operating point and latency surface follow the group
+/// through migrations, while the queues/dispatcher live per-node in
+/// [`GroupSlice`].
 pub(super) struct GroupShared {
     pub(super) name: String,
     pub(super) share: f64,
     pub(super) n_instances: usize,
-    pub(super) shards: Vec<Arc<ShardQueue>>,
-    pub(super) dispatcher: Dispatcher,
     pub(super) backend_name: &'static str,
     pub(super) in_dim: usize,
     pub(super) out_dim: usize,
     pub(super) batch: usize,
-    freq_ratio: AtomicU64,
-    vcore_mv: AtomicU64,
-    vbram_mv: AtomicU64,
-    active_now: AtomicU64,
+    pub(super) freq_ratio: AtomicU64,
+    pub(super) vcore_mv: AtomicU64,
+    pub(super) vbram_mv: AtomicU64,
+    pub(super) active_now: AtomicU64,
     /// Currently applied throughput margin (f64 bits).
-    margin_now: AtomicU64,
+    pub(super) margin_now: AtomicU64,
     /// Index of the active prediction source in
     /// [`crate::markov::PREDICTOR_NAMES`].
-    predictor_now: AtomicU64,
-    arrivals_this_epoch: AtomicU64,
+    pub(super) predictor_now: AtomicU64,
     /// Requests successfully placed on some shard. Shutdown-drain
     /// invariant: workers may exit only once
     /// `admitted == completed + failed` — queue emptiness alone is racy
-    /// because the CC's gated-shard drain holds requests outside any
-    /// queue while re-dispatching them.
+    /// because the CC's gated-shard drain (and a migration hand-off)
+    /// holds requests outside any queue while re-dispatching them.
     pub(super) admitted: Counter,
     pub(super) completed: Counter,
     pub(super) rejected: Counter,
     pub(super) failed: Counter,
     pub(super) stolen_batches: Counter,
-    /// Requests the CC pulled off a gated or failed shard and re-queued
-    /// onto the active set (failover re-dispatch; never a drop).
+    /// Requests the CC pulled off a gated or failed shard — or a
+    /// migrating slice — and re-queued (failover re-dispatch; never a
+    /// drop).
     pub(super) redispatched: Counter,
+    /// Cross-node migrations this group has undergone.
+    pub(super) migrated: Counter,
     /// Boards of this group currently failed by the fault plan.
-    failed_boards: AtomicU64,
+    pub(super) failed_boards: AtomicU64,
     pub(super) violations: Counter,
     pub(super) epochs: Counter,
     pub(super) latency_us: Histogram,
@@ -237,7 +397,7 @@ pub(super) struct GroupShared {
 }
 
 impl GroupShared {
-    fn freq_ratio(&self) -> f64 {
+    pub(super) fn freq_ratio(&self) -> f64 {
         f64::from_bits(self.freq_ratio.load(Ordering::Relaxed))
     }
 }
@@ -246,42 +406,6 @@ impl GroupShared {
 /// Truncation would report e.g. 0.7 V (stored as 0.6999…) as 699 mV.
 pub(crate) fn volts_to_mv(v: f64) -> u64 {
     (v * 1000.0).round() as u64
-}
-
-/// Pull a batch for worker `wid`: first from its home shard (waiting up to
-/// `wait` for the first request), then — when idle and `steal` is on —
-/// from the deepest sibling shard. Gated siblings are skipped (their
-/// backlog belongs to the CC's drain/re-dispatch pass). Returns the batch
-/// and whether it was stolen.
-pub(super) fn claim_batch(
-    shards: &[Arc<ShardQueue>],
-    wid: usize,
-    max: usize,
-    wait: Duration,
-    steal: bool,
-) -> (Vec<Request>, bool) {
-    let batch = shards[wid].pop_wait(max, wait);
-    if !batch.is_empty() || !steal || shards.len() < 2 {
-        return (batch, false);
-    }
-    // Steal roughly half of the deepest sibling's backlog.
-    let mut victim = None;
-    let mut depth = 0usize;
-    for (i, s) in shards.iter().enumerate() {
-        if i != wid && !s.is_gated() && s.len() > depth {
-            depth = s.len();
-            victim = Some(i);
-        }
-    }
-    match victim {
-        Some(v) => {
-            let take = depth.div_ceil(2).clamp(1, max);
-            let stolen = shards[v].steal_upto(take);
-            let got = !stolen.is_empty();
-            (stolen, got)
-        }
-        None => (Vec::new(), false),
-    }
 }
 
 /// Per-group serving statistics (live or final).
@@ -295,6 +419,8 @@ pub struct GroupServingStats {
     pub n_instances: usize,
     /// Inference backend the group's workers use (`pjrt` or `native`).
     pub backend: &'static str,
+    /// Name of the node currently hosting the group (DESIGN.md S21).
+    pub node_now: String,
     /// Requests accepted onto some shard (the drain invariant:
     /// `admitted == completed + failed` at shutdown).
     pub admitted: u64,
@@ -306,8 +432,10 @@ pub struct GroupServingStats {
     pub failed: u64,
     /// Batches obtained by work stealing.
     pub stolen_batches: u64,
-    /// Requests re-dispatched off gated/failed shards by the CC drain.
+    /// Requests re-dispatched off gated/failed/migrating shards.
     pub redispatched: u64,
+    /// Cross-node migrations this group has undergone.
+    pub migrated: u64,
     /// Boards currently failed by the fault plan.
     pub failed_boards_now: usize,
     /// Mean end-to-end latency (s).
@@ -340,7 +468,7 @@ pub struct GroupServingStats {
     /// Prediction source currently active (the ensemble reports its
     /// member).
     pub predictor_now: &'static str,
-    /// Requests currently queued across the group's shards.
+    /// Requests currently queued across the group's shards (all nodes).
     pub queue_depth: usize,
 }
 
@@ -359,6 +487,8 @@ pub struct FleetServingStats {
     pub stolen_batches: u64,
     /// Total failover re-dispatches.
     pub redispatched: u64,
+    /// Total cross-node migrations.
+    pub migrated: u64,
     /// Total integrated energy (J).
     pub energy_j: f64,
     /// Total nominal-baseline energy (J).
@@ -376,26 +506,33 @@ pub struct FleetServingStats {
 pub struct FleetServingReport {
     /// Aggregate + per-group statistics at shutdown.
     pub stats: FleetServingStats,
-    /// Per-group CC epoch traces (index-aligned with `stats.per_group`).
+    /// Per-group CC epoch traces (index-aligned with `stats.per_group`);
+    /// continuous across migrations — the trace travels with the
+    /// controller.
     pub epoch_records: Vec<Vec<EpochRecord>>,
     /// Per-group control-plane decision logs (index-aligned with
     /// `stats.per_group`): the exact [`DecisionRecord`] sequence each
-    /// group's [`GroupController`] produced, one per epoch. Replaying
+    /// group's [`GroupController`](crate::control::GroupController)
+    /// produced, one per epoch, wherever the group was hosted. Replaying
     /// the observed epoch loads through the offline `platform::Platform`
     /// must reproduce these sequences identically
     /// (`tests/control_equivalence.rs`).
     pub decision_records: Vec<Vec<DecisionRecord>>,
 }
 
-/// The live multi-tenant coordinator.
+/// The live multi-tenant coordinator: topology + node agents + router.
 pub struct FleetServing {
     /// Configuration the fleet was started with.
     pub cfg: FleetServingConfig,
     groups: Vec<Arc<GroupShared>>,
+    nodes: Vec<Arc<NodeShared>>,
+    store: Arc<TopologyStore>,
+    router: Router,
+    handover: Arc<Handover>,
     registry: Arc<Registry>,
     shutdown: Arc<AtomicBool>,
     workers: Vec<std::thread::JoinHandle<()>>,
-    controller: Option<std::thread::JoinHandle<CcOutput>>,
+    controllers: Vec<std::thread::JoinHandle<Vec<GroupCc>>>,
     rejected_total: Arc<Counter>,
     next_id: AtomicU64,
 }
@@ -424,51 +561,13 @@ impl FleetServing {
         artifacts_dir: std::path::PathBuf,
         built: Vec<(DesignPower, Optimizer)>,
     ) -> Result<Self> {
-        anyhow::ensure!(!cfg.groups.is_empty(), "fleet needs at least one group");
+        cfg.validate()?;
         anyhow::ensure!(
             built.len() == cfg.groups.len(),
             "got {} design/optimizer pairs for {} groups",
             built.len(),
             cfg.groups.len()
         );
-        let share_sum: f64 = cfg.groups.iter().map(|g| g.share).sum();
-        anyhow::ensure!(
-            (share_sum - 1.0).abs() < 1e-6,
-            "group shares sum to {share_sum}, expected 1"
-        );
-        for g in &cfg.groups {
-            anyhow::ensure!(g.share > 0.0, "{}: share must be positive", g.benchmark);
-            anyhow::ensure!(g.n_instances >= 1, "{}: need >= 1 instance", g.benchmark);
-            if let Some(t) = g.qos_target {
-                anyhow::ensure!(
-                    (0.0..1.0).contains(&t),
-                    "{}: qos tier target {t} outside [0, 1)",
-                    g.benchmark
-                );
-            }
-        }
-        // Structural plan checks (windows non-empty, slowdowns >= 1, ...)
-        // are layout-independent; index bounds are checked against each
-        // group's own instance count since groups may differ in size.
-        cfg.faults
-            .validate(usize::MAX, usize::MAX)
-            .map_err(anyhow::Error::msg)?;
-        for f in &cfg.faults.board_failures {
-            anyhow::ensure!(
-                f.group < cfg.groups.len() && f.shard < cfg.groups[f.group].n_instances,
-                "fault plan: board failure ({}, {}) outside the fleet layout",
-                f.group,
-                f.shard
-            );
-        }
-        for w in &cfg.faults.stragglers {
-            anyhow::ensure!(
-                w.group < cfg.groups.len() && w.shard < cfg.groups[w.group].n_instances,
-                "fault plan: straggler ({}, {}) outside the fleet layout",
-                w.group,
-                w.shard
-            );
-        }
         // Deterministic virtual-time scheduling needs every participating
         // thread registered; catching a forgotten driver here beats a
         // silent free-running simulation.
@@ -481,22 +580,17 @@ impl FleetServing {
         let registry = Arc::new(Registry::new());
         let shutdown = Arc::new(AtomicBool::new(false));
 
-        // ---- per-group shared state -----------------------------------
+        // ---- per-group shared state (placement-independent) ------------
         let mut groups: Vec<Arc<GroupShared>> = Vec::with_capacity(cfg.groups.len());
         for g in &cfg.groups {
             // Probe once for dims + backend availability; workers re-open
             // their own backend (PJRT clients are not shared across
             // threads).
             let probe = InferenceBackend::open(&artifacts_dir, &g.benchmark);
-            let per_shard = cfg.queue_capacity.div_ceil(g.n_instances);
             groups.push(Arc::new(GroupShared {
                 name: g.benchmark.clone(),
                 share: g.share,
                 n_instances: g.n_instances,
-                shards: (0..g.n_instances)
-                    .map(|_| Arc::new(ShardQueue::with_clock(per_shard, cfg.clock.clone())))
-                    .collect(),
-                dispatcher: Dispatcher::new(cfg.dispatch),
                 backend_name: probe.name(),
                 in_dim: probe.in_dim(),
                 out_dim: probe.out_dim(),
@@ -513,13 +607,13 @@ impl FleetServing {
                 predictor_now: AtomicU64::new(PredictorKind::index_of_name(
                     cfg.predictor.initial_active_name(),
                 ) as u64),
-                arrivals_this_epoch: AtomicU64::new(0),
                 admitted: Counter::default(),
                 completed: Counter::default(),
                 rejected: Counter::default(),
                 failed: Counter::default(),
                 stolen_batches: Counter::default(),
                 redispatched: Counter::default(),
+                migrated: Counter::default(),
                 failed_boards: AtomicU64::new(0),
                 violations: Counter::default(),
                 epochs: Counter::default(),
@@ -529,468 +623,110 @@ impl FleetServing {
             }));
         }
 
-        // ---- workers ---------------------------------------------------
-        // Clock actors are registered *here*, on the starting thread, so
-        // their ids — and with them every virtual-time scheduling decision
-        // — are assigned in deterministic program order (workers in
-        // group/instance order, then the CC), not in racy thread-startup
-        // order.
-        let mut workers = Vec::new();
-        for (gi, gshared) in groups.iter().enumerate() {
-            for wid in 0..cfg.groups[gi].n_instances {
-                let g = gshared.clone();
-                let dir = artifacts_dir.clone();
-                let stop = shutdown.clone();
-                let fleet_completed = registry.counter("fleet.completed");
-                let cycles = cfg.cycles_per_batch;
-                let batch_timeout = cfg.batch_timeout;
-                let steal = cfg.steal;
-                let faults = cfg.faults.clone();
-                let epoch_len = cfg.epoch;
-                let clock = cfg.clock.clone();
-                let actor = clock.register_actor(&format!("{}:w{wid}", g.name));
-                workers.push(std::thread::spawn(move || {
-                    let _actor = ActorScope::attach(&clock, actor);
-                    let backend = InferenceBackend::open(&dir, &g.name);
-                    let batch_cap = backend.batch();
-                    let in_dim = backend.in_dim();
-                    loop {
-                        // Gated instance: park on the shard condvar until
-                        // the CC scales back up or shutdown starts. The
-                        // timeout bounds a racily-missed wakeup.
-                        if g.shards[wid].is_gated() && !stop.load(Ordering::Relaxed) {
-                            g.shards[wid].park_while_gated(Duration::from_millis(25));
-                            continue;
-                        }
-                        let (mut reqs, stolen) =
-                            claim_batch(&g.shards, wid, batch_cap, batch_timeout, steal);
-                        if stolen {
-                            g.stolen_batches.inc();
-                        }
-                        if reqs.is_empty() {
-                            // Exit only once every admitted request has
-                            // been served or failed. After `stop` no new
-                            // requests are admitted (shutdown consumes
-                            // the fleet), so `admitted` is frozen and
-                            // this equality is race-free — unlike a
-                            // queue-emptiness check, it also covers
-                            // requests the CC's gated-shard drain is
-                            // holding outside any queue. The Acquire on
-                            // the stop flag pairs with shutdown()'s
-                            // Release store so every admitted.inc()
-                            // sequenced before shutdown is visible here;
-                            // stale (low) completed/failed reads only
-                            // delay exit by a loop iteration.
-                            if stop.load(Ordering::Acquire)
-                                && g.admitted.get()
-                                    == g.completed.get() + g.failed.get()
-                            {
-                                return;
-                            }
-                            continue;
-                        }
-                        // Top up a partial batch without waiting.
-                        if reqs.len() < batch_cap {
-                            reqs.extend(g.shards[wid].pop_upto(batch_cap - reqs.len()));
-                        }
+        // ---- topology: the single source of truth for placement --------
+        let topology = FleetTopology::spread(cfg.groups.clone(), cfg.nodes)
+            .map_err(anyhow::Error::new)?;
+        let store = Arc::new(TopologyStore::new(topology));
 
-                        // ---- real inference (PJRT or native) -----------
-                        let mut x = vec![0.0f32; batch_cap * in_dim];
-                        for (i, r) in reqs.iter().enumerate() {
-                            x[i * in_dim..(i + 1) * in_dim].copy_from_slice(&r.payload);
-                        }
-                        // A failing backend must not kill the worker: a dead
-                        // worker leaves its shard undrained and shutdown()
-                        // would wait on it forever. Count and move on.
-                        let y = match backend.infer(&x) {
-                            Ok(y) => y,
-                            Err(_) => {
-                                g.failed.add(reqs.len() as u64);
-                                continue;
-                            }
-                        };
-
-                        // ---- simulated FPGA occupancy ------------------
-                        // A straggler window stretches this shard's
-                        // service time by the plan's slowdown; outside a
-                        // window (and on the empty plan) the factor is
-                        // exactly 1.0, so the multiply is bitwise-neutral.
-                        let fr = g.freq_ratio().max(0.05);
-                        let slow = faults.straggler_slowdown(
-                            gi,
-                            wid,
-                            clock::epoch_index(clock.now(), epoch_len),
-                        );
-                        let service = cycles / (F_NOM_HZ * fr) * slow;
-                        clock.sleep(Duration::from_secs_f64(service));
-
-                        let now = clock.now();
-                        for (i, r) in reqs.iter().enumerate() {
-                            let lat_ticks = now.saturating_sub(r.submitted);
-                            g.latency_us.observe(lat_ticks as f64 / 1e3);
-                            g.completed.inc();
-                            fleet_completed.inc();
-                            let _ = Completion {
-                                id: r.id,
-                                worker: wid,
-                                latency: clock::to_duration(lat_ticks),
-                                y0: y[i * backend.out_dim()],
-                            };
-                        }
-                    }
-                }));
-            }
-        }
-
-        // ---- central controller (one thread for the whole fleet) -------
-        let controller = {
-            let groups = groups.clone();
-            let cfg2 = cfg.clone();
-            let dir = artifacts_dir.clone();
-            let stop = shutdown.clone();
-            let registry2 = registry.clone();
-            let cc_actor = cfg.clock.register_actor("cc");
-            std::thread::spawn(move || -> CcOutput {
-                let _actor = ActorScope::attach(&cfg2.clock, cc_actor);
-                let engine = if cfg2.selector_via_pjrt {
-                    Engine::open(&dir).ok()
-                } else {
-                    None
-                };
-                struct GroupCc {
-                    design: DesignPower,
-                    optimizer: Optimizer,
-                    /// The shared per-group control plane (DESIGN.md
-                    /// S19): predictor, guardband, margin ladder and
-                    /// per-level elastic LUTs — the same engine the
-                    /// offline platform runs.
-                    controller: GroupController,
-                    backlog: f64,
-                    cap: f64,
-                    margin_gauge: std::sync::Arc<Gauge>,
-                    predictor_gauge: std::sync::Arc<Gauge>,
-                    // Operating point that served the epoch now ending
-                    // (published at the END of the previous iteration).
-                    served_fr: f64,
-                    served_vcore: f64,
-                    served_vbram: f64,
-                    served_active: usize,
-                    /// Shards that actually served (the decision's active
-                    /// count minus fault-plan failures). Equals
-                    /// `served_active` whenever no board is failed, so
-                    /// fault-free capacity and energy are bit-identical
-                    /// to the pre-fault plant.
-                    served_healthy: usize,
-                    /// Boards failed while the epoch was served.
-                    served_failed: usize,
-                    /// Straggler capacity factor of the serving set
-                    /// (exactly 1.0 without straggler windows).
-                    served_slow: f64,
-                }
-                let mut ccs: Vec<GroupCc> = built
-                    .into_iter()
-                    .zip(&groups)
+        // ---- per-node data planes --------------------------------------
+        // Every node carries a slice for every group so a migration never
+        // allocates on the hot path; non-hosted slices start gated (their
+        // workers park) and open only when a hand-off lands.
+        let nodes: Vec<Arc<NodeShared>> = (0..cfg.nodes)
+            .map(|id| {
+                let slices = cfg
+                    .groups
+                    .iter()
                     .enumerate()
-                    .map(|(gi, ((design, optimizer), g))| {
-                        // All decision machinery — margin ladder, LUT
-                        // builds, guardband — is the controller's
-                        // (DESIGN.md S19); the CC only picks the elastic
-                        // LUT family matching its capacity policy.
-                        let controller = GroupController::new(
-                            ControlConfig {
-                                m_bins: cfg2.m_bins,
-                                margin_t: cfg2.margin_t,
-                                warmup: cfg2.warmup_epochs,
-                                predictor: cfg2.predictor,
-                                predictor_period: cfg2.predictor_period,
-                                // Tenant tiers refine only an *enabled*
-                                // run-level guardband (DESIGN.md S20);
-                                // qos_target None keeps every baseline
-                                // bit-identical regardless of tier.
-                                qos_target: QosTier::effective(
-                                    cfg2.qos_target,
-                                    cfg2.groups[gi].qos_target,
-                                ),
-                            },
-                            &optimizer,
-                            LutSpec::Elastic {
-                                mode: cfg2.mode,
-                                n_instances: g.n_instances,
-                                residual: cfg2.pg_residual,
-                                policy: cfg2.capacity_policy,
-                                latency_cap_sw: f64::INFINITY,
-                            },
-                        );
-                        let cap = g.n_instances as f64
-                            * (F_NOM_HZ / cfg2.cycles_per_batch)
-                            * g.batch as f64
-                            * cfg2.epoch.as_secs_f64();
-                        let served_vcore = design.chars.logic.v_nom;
-                        let served_vbram = design.chars.bram.v_nom;
-                        let margin_gauge =
-                            registry2.gauge(&format!("{}.margin_now", g.name));
-                        let predictor_gauge =
-                            registry2.gauge(&format!("{}.predictor_now", g.name));
-                        // Seed the gauges so reads before the first epoch
-                        // see the startup state (static margin, active
-                        // predictor member) instead of zeros.
-                        margin_gauge.set(cfg2.margin_t);
-                        predictor_gauge.set(PredictorKind::index_of_name(
-                            controller.predictor_now(),
-                        ) as f64);
-                        GroupCc {
-                            design,
-                            optimizer,
-                            controller,
-                            backlog: 0.0,
-                            cap,
-                            margin_gauge,
-                            predictor_gauge,
-                            served_fr: 1.0,
-                            served_vcore,
-                            served_vbram,
-                            served_active: g.n_instances,
-                            served_healthy: g.n_instances,
-                            served_failed: 0,
-                            // Epoch 0 is served before any CC pass, so
-                            // no board is gated yet; straggler windows
-                            // may still cover it.
-                            served_slow: {
-                                let all: Vec<usize> = (0..g.n_instances).collect();
-                                cfg2.faults.capacity_factor(gi, &all, 0)
-                            },
+                    .map(|(gi, gc)| {
+                        let per_shard = cfg.queue_capacity.div_ceil(gc.n_instances);
+                        let shards: Vec<Arc<ShardQueue>> = (0..gc.n_instances)
+                            .map(|_| {
+                                Arc::new(ShardQueue::with_clock(per_shard, cfg.clock.clone()))
+                            })
+                            .collect();
+                        if store.hosting_mask(gi) & (1u64 << id) == 0 {
+                            for s in &shards {
+                                s.set_gated(true);
+                            }
+                        }
+                        GroupSlice {
+                            shards,
+                            dispatcher: Dispatcher::new(cfg.dispatch),
+                            arrivals_this_epoch: AtomicU64::new(0),
                         }
                     })
                     .collect();
-                let mut records: Vec<Vec<EpochRecord>> =
-                    vec![Vec::new(); groups.len()];
-                let mut epoch = 0usize;
-                while !stop.load(Ordering::Relaxed) {
-                    cfg2.clock.sleep(cfg2.epoch);
-                    for (gi, g) in groups.iter().enumerate() {
-                        let cc = &mut ccs[gi];
-                        let arrivals =
-                            g.arrivals_this_epoch.swap(0, Ordering::Relaxed) as f64;
-                        let load = (arrivals / cc.cap).min(1.0);
-
-                        // ---- per-tenant QoS accounting ------------------
-                        // Demand is judged against the capacity that
-                        // actually served this epoch — active instances ×
-                        // their frequency — not the one about to be
-                        // published. (Same expression shape as the
-                        // offline plant's capacity so the two paths'
-                        // float results are bit-identical.)
-                        // Failures shrink the serving set (`served_healthy
-                        // <= served_active`) and straggler windows scale
-                        // it by the mean service-rate factor; both are
-                        // exactly neutral on an empty fault plan.
-                        let served_cap = cc.served_fr
-                            * (cc.served_healthy as f64 / g.n_instances as f64)
-                            * cc.served_slow;
-                        let demand = load + cc.backlog;
-                        let delivered = demand.min(served_cap);
-                        cc.backlog =
-                            (demand - delivered).min(cfg2.max_backlog_steps);
-                        let violated = demand - delivered > 1e-9;
-                        if violated {
-                            g.violations.inc();
-                        }
-
-                        // ---- one decision via the shared control plane --
-                        // Misprediction judgement, predictor training,
-                        // guardband feedback, margin-ladder quantization,
-                        // backlog backpressure and the elastic LUT lookup
-                        // all live in control::GroupController (DESIGN.md
-                        // S19) — the exact engine the offline platform
-                        // runs per step.
-                        let d = cc.controller.decide(&Observation {
-                            load,
-                            qos_violation: violated,
-                            backlog: cc.backlog,
-                        });
-
-                        // Refine through the AOT'd Voltage Selector when
-                        // available; keep the native point on any error.
-                        // PG-only pins active instances at nominal V/f, so
-                        // its point is never refined. (Serving-side
-                        // refinement, not a control decision: virtual-time
-                        // runs skip it so the decision log stays
-                        // environment-independent.)
-                        let (mut vcore_next, mut vbram_next) = (d.vcore, d.vbram);
-                        if cfg2.capacity_policy != CapacityPolicy::GatingOnly {
-                            if let Some(engine) = &engine {
-                                let vs = VoltageSelectorClient::new(engine);
-                                let q = OpQuery {
-                                    alpha: cc.optimizer.tables.op.alpha as f32,
-                                    beta: cc.optimizer.tables.op.beta as f32,
-                                    gamma_l: cc.optimizer.tables.op.gamma_l as f32,
-                                    gamma_m: cc.optimizer.tables.op.gamma_m as f32,
-                                    sw: (1.0 / d.freq_ratio) as f32,
-                                };
-                                if let Ok(choices) =
-                                    vs.select(cfg2.mode, &cc.optimizer.tables, &[q])
-                                {
-                                    if let Some(c) = choices.first() {
-                                        vcore_next = c.vcore;
-                                        vbram_next = c.vbram;
-                                    }
-                                }
-                            }
-                        }
-
-                        // ---- energy integration + trace row -------------
-                        // Charged at the point that served the epoch; the
-                        // freshly chosen point is charged next epoch.
-                        // Active instances at the scaled point, gated ones
-                        // at the residual of nominal.
-                        let f_mhz = cc.design.spec.freq_mhz * cc.served_fr;
-                        let p_board = cc
-                            .design
-                            .breakdown(cc.served_vcore, cc.served_vbram, f_mhz)
-                            .total_w();
-                        let board_nom = cc.design.nominal().total_w();
-                        // Failed boards are powered down like gated ones
-                        // (residual draw), so energy charges the healthy
-                        // serving set only.
-                        let gated =
-                            (g.n_instances - cc.served_healthy) as f64;
-                        let p = p_board * cc.served_healthy as f64
-                            + board_nom * cfg2.pg_residual * gated;
-                        let p_nom = board_nom * g.n_instances as f64;
-                        g.energy_j.add(p * cfg2.epoch.as_secs_f64());
-                        g.nominal_energy_j.add(p_nom * cfg2.epoch.as_secs_f64());
-                        g.epochs.inc();
-                        // Same column alignment as the offline
-                        // StepRecord: the operating point that SERVED
-                        // this epoch, plus the forecast/margin/predictor
-                        // of the decision MADE this epoch.
-                        records[gi].push(EpochRecord {
-                            epoch,
-                            load,
-                            decision: DecisionRecord {
-                                predicted: d.predicted,
-                                freq_ratio: cc.served_fr,
-                                vcore: cc.served_vcore,
-                                vbram: cc.served_vbram,
-                                n_active: cc.served_active,
-                                predictor: d.predictor,
-                                margin: d.margin,
-                            },
-                            power_w: p,
-                            n_failed: cc.served_failed,
-                            slow_factor: cc.served_slow,
-                        });
-
-                        // ---- publish the next operating point -----------
-                        g.freq_ratio
-                            .store(d.freq_ratio.to_bits(), Ordering::Relaxed);
-                        g.vcore_mv
-                            .store(volts_to_mv(vcore_next), Ordering::Relaxed);
-                        g.vbram_mv
-                            .store(volts_to_mv(vbram_next), Ordering::Relaxed);
-                        g.active_now
-                            .store(d.n_active as u64, Ordering::Relaxed);
-                        g.margin_now
-                            .store(d.margin.to_bits(), Ordering::Relaxed);
-                        g.predictor_now.store(
-                            PredictorKind::index_of_name(d.predictor) as u64,
-                            Ordering::Relaxed,
-                        );
-                        cc.margin_gauge.set(d.margin);
-                        cc.predictor_gauge
-                            .set(PredictorKind::index_of_name(d.predictor) as f64);
-
-                        // ---- gate / ungate + drain ----------------------
-                        // The serving set for the next epoch is the first
-                        // `n_active` *non-failed* shards (DESIGN.md S20).
-                        // Without failures that is exactly [0, n_active),
-                        // the pre-fault behavior. Everything outside the
-                        // set — gated by the decision OR downed by the
-                        // plan — is drained and re-dispatched into it so
-                        // admitted requests are never dropped.
-                        let next_epoch = epoch + 1;
-                        let failed_mask: Vec<bool> = (0..g.n_instances)
-                            .map(|i| cfg2.faults.board_failed(gi, i, next_epoch))
-                            .collect();
-                        let n_failed =
-                            failed_mask.iter().filter(|&&f| f).count();
-                        let mut active: Vec<usize> =
-                            Vec::with_capacity(d.n_active);
-                        for i in 0..g.n_instances {
-                            if !failed_mask[i] && active.len() < d.n_active {
-                                active.push(i);
-                            }
-                        }
-                        if active.is_empty() {
-                            // A plan downing every board at once would
-                            // strand admitted work and deadlock the
-                            // shutdown drain invariant; serve the
-                            // decision's set as if the last board refused
-                            // to die.
-                            active.extend(0..d.n_active.clamp(1, g.n_instances));
-                        }
-                        for (i, s) in g.shards.iter().enumerate() {
-                            s.set_failed(failed_mask[i]);
-                            s.set_gated(!active.contains(&i));
-                        }
-                        let mut cursor = 0usize;
-                        for (si, shard) in g.shards.iter().enumerate() {
-                            if active.contains(&si) {
-                                continue;
-                            }
-                            for mut r in shard.drain_all() {
-                                let mut placed = false;
-                                for _ in 0..active.len() {
-                                    let t = active[cursor % active.len()];
-                                    cursor += 1;
-                                    match g.shards[t].try_push(r) {
-                                        Ok(()) => {
-                                            placed = true;
-                                            break;
-                                        }
-                                        Err(back) => r = back,
-                                    }
-                                }
-                                if placed {
-                                    g.redispatched.inc();
-                                } else {
-                                    // Every active shard is full: return
-                                    // the request to its original shard
-                                    // (bound-free) and retry next epoch —
-                                    // never drop admitted work.
-                                    shard.push_unbounded(r);
-                                }
-                            }
-                        }
-                        g.failed_boards
-                            .store(n_failed as u64, Ordering::Relaxed);
-                        cc.served_fr = d.freq_ratio;
-                        cc.served_vcore = vcore_next;
-                        cc.served_vbram = vbram_next;
-                        cc.served_active = d.n_active;
-                        cc.served_healthy = active.len();
-                        cc.served_failed = n_failed;
-                        cc.served_slow =
-                            cfg2.faults.capacity_factor(gi, &active, next_epoch);
-                    }
-                    epoch += 1;
-                }
-                let decisions = ccs
-                    .iter_mut()
-                    .map(|cc| cc.controller.take_decisions())
-                    .collect();
-                (records, decisions)
+                Arc::new(NodeShared { id, name: format!("node{id}"), slices })
             })
-        };
+            .collect();
 
+        // ---- control planes, parked for adoption -----------------------
+        // Built on the starting thread (pure LUT compute, no clock
+        // access) and deposited into the hand-off slots; each node CC
+        // adopts its initially-hosted groups at thread start, exactly as
+        // a later migration's destination would.
+        let handover = Arc::new(Handover::new(cfg.groups.len()));
+        for (gi, ((design, optimizer), g)) in built.into_iter().zip(&groups).enumerate() {
+            handover.deposit(gi, GroupCc::new(gi, design, optimizer, &cfg, g));
+        }
+
+        // ---- workers ---------------------------------------------------
+        // Clock actors are registered *here*, on the starting thread, so
+        // their ids — and with them every virtual-time scheduling decision
+        // — are assigned in deterministic program order (nodes in id
+        // order, groups in index order, instances in order; then the node
+        // CCs in id order). With one node this is exactly the legacy
+        // monolith's order, so the 1-node path schedules identically.
+        let mut workers = Vec::new();
+        {
+            let env = WorkerEnv {
+                cfg: &cfg,
+                artifacts_dir: &artifacts_dir,
+                registry: &registry,
+                stop: &shutdown,
+                single_node: cfg.nodes == 1,
+            };
+            for nd in &nodes {
+                for (gi, gshared) in groups.iter().enumerate() {
+                    for wid in 0..cfg.groups[gi].n_instances {
+                        workers.push(node::spawn_worker(&env, nd, gshared, gi, wid));
+                    }
+                }
+            }
+        }
+
+        // ---- node controllers (one CC thread per node) -----------------
+        let controllers: Vec<std::thread::JoinHandle<Vec<GroupCc>>> = nodes
+            .iter()
+            .map(|nd| {
+                node::spawn_node_cc(NodeCtx {
+                    cfg: cfg.clone(),
+                    groups: groups.clone(),
+                    nodes: nodes.clone(),
+                    me: nd.id,
+                    store: store.clone(),
+                    handover: handover.clone(),
+                    registry: registry.clone(),
+                    stop: shutdown.clone(),
+                    artifacts_dir: artifacts_dir.clone(),
+                })
+            })
+            .collect();
+
+        let router = Router::new(store.clone(), nodes.clone());
         let rejected_total = registry.counter("fleet.rejected");
         Ok(FleetServing {
             cfg,
             groups,
+            nodes,
+            store,
+            router,
+            handover,
             registry,
             shutdown,
             workers,
-            controller: Some(controller),
+            controllers,
             rejected_total,
             next_id: AtomicU64::new(0),
         })
@@ -999,6 +735,11 @@ impl FleetServing {
     /// Number of tenant groups.
     pub fn n_groups(&self) -> usize {
         self.groups.len()
+    }
+
+    /// Number of serving nodes.
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
     }
 
     /// Benchmark names of the groups, in index order.
@@ -1030,12 +771,13 @@ impl FleetServing {
         self.groups[group].batch
     }
 
-    /// Requests currently queued across a group's shards.
+    /// Requests currently queued across a group's shards, on every node.
     ///
     /// # Panics
     /// Panics when `group >= n_groups()` (see [`FleetServing::in_dim`]).
     pub fn queue_len(&self, group: usize) -> usize {
-        self.groups[group].shards.iter().map(|s| s.len()).sum()
+        let _ = &self.groups[group];
+        self.nodes.iter().map(|n| n.slices[group].depth()).sum()
     }
 
     /// The shared fleet-level metrics registry.
@@ -1049,10 +791,19 @@ impl FleetServing {
         &self.cfg.clock
     }
 
-    /// Submit one request to a group. Errors are typed backpressure-style
-    /// signals, never aborts: `UnknownGroup` for an out-of-range index,
-    /// `BadPayload` for a wrong-width payload, `QueueFull` when every
-    /// active shard of the group is at capacity.
+    /// Live observability copy of the fleet map — placement, health and
+    /// per-node load; the `topology` CLI subcommand prints its
+    /// [`TopologySnapshot::to_json`] document (DESIGN.md S21.4).
+    pub fn topology_snapshot(&self) -> TopologySnapshot {
+        self.store.snapshot()
+    }
+
+    /// Submit one request to a group. The router picks the hosting node
+    /// (lock-free topology read), the node's dispatcher picks the shard.
+    /// Errors are typed backpressure-style signals, never aborts:
+    /// `UnknownGroup` for an out-of-range index, `BadPayload` for a
+    /// wrong-width payload, `QueueFull` when every active shard of the
+    /// group is at capacity.
     pub fn submit(
         &self,
         group: usize,
@@ -1065,44 +816,25 @@ impl FleetServing {
         if payload.len() != g.in_dim {
             return Err(SubmitError::BadPayload { expected: g.in_dim, got: payload.len() });
         }
+        let slice = &self.nodes[self.router.route(group)].slices[group];
         // The CC's workload counter sees *offered* demand (paper Fig. 9's
         // arrival counter), so rejected requests still push the predictor
         // toward higher frequency — essential under flash-crowd overload,
         // where admitted traffic alone is capped by the current drain rate.
-        g.arrivals_this_epoch.fetch_add(1, Ordering::Relaxed);
+        slice.arrivals_this_epoch.fetch_add(1, Ordering::Relaxed);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let mut req = Request { id, payload, submitted: self.cfg.clock.now() };
-        let first = g.dispatcher.pick(&g.shards);
-        match g.shards[first].try_push(req) {
-            Ok(()) => {}
-            Err(back) => {
-                req = back;
-                let n = g.shards.len();
-                let mut placed = false;
-                for step in 1..n {
-                    let idx = (first + step) % n;
-                    // Gated shards' workers are parked; routing there
-                    // would strand the request until the next CC drain.
-                    if g.shards[idx].is_gated() {
-                        continue;
-                    }
-                    match g.shards[idx].try_push(req) {
-                        Ok(()) => {
-                            placed = true;
-                            break;
-                        }
-                        Err(back) => req = back,
-                    }
-                }
-                if !placed {
-                    g.rejected.inc();
-                    self.rejected_total.inc();
-                    return Err(SubmitError::QueueFull);
-                }
+        let req = Request { id, payload, submitted: self.cfg.clock.now() };
+        match node::place_request(slice, req) {
+            Ok(()) => {
+                g.admitted.inc();
+                Ok(id)
+            }
+            Err(e) => {
+                g.rejected.inc();
+                self.rejected_total.inc();
+                Err(e)
             }
         }
-        g.admitted.inc();
-        Ok(id)
     }
 
     /// Submit by benchmark name (convenience over [`FleetServing::submit`]);
@@ -1118,7 +850,7 @@ impl FleetServing {
         self.submit(gi, payload)
     }
 
-    fn group_stats(&self, g: &GroupShared) -> GroupServingStats {
+    fn group_stats(&self, gi: usize, g: &GroupShared) -> GroupServingStats {
         let energy = g.energy_j.get();
         let nominal = g.nominal_energy_j.get();
         let epochs = g.epochs.get();
@@ -1127,12 +859,19 @@ impl FleetServing {
             share: g.share,
             n_instances: g.n_instances,
             backend: g.backend_name,
+            node_now: self.store.with(|t| {
+                t.nodes_hosting(gi)
+                    .first()
+                    .map(|&n| t.nodes()[n].name.clone())
+                    .unwrap_or_default()
+            }),
             admitted: g.admitted.get(),
             completed: g.completed.get(),
             rejected: g.rejected.get(),
             failed: g.failed.get(),
             stolen_batches: g.stolen_batches.get(),
             redispatched: g.redispatched.get(),
+            migrated: g.migrated.get(),
             failed_boards_now: g.failed_boards.load(Ordering::Relaxed) as usize,
             mean_latency_s: g.latency_us.mean() / 1e6,
             p50_latency_s: g.latency_us.quantile(0.5) / 1e6,
@@ -1154,14 +893,18 @@ impl FleetServing {
                     .copied()
                     .unwrap_or("markov")
             },
-            queue_depth: g.shards.iter().map(|s| s.len()).sum(),
+            queue_depth: self.nodes.iter().map(|n| n.slices[gi].depth()).sum(),
         }
     }
 
     /// Aggregate fleet + per-group statistics (live snapshot).
     pub fn stats(&self) -> FleetServingStats {
-        let per_group: Vec<GroupServingStats> =
-            self.groups.iter().map(|g| self.group_stats(g)).collect();
+        let per_group: Vec<GroupServingStats> = self
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(gi, g)| self.group_stats(gi, g))
+            .collect();
         let energy: f64 = per_group.iter().map(|g| g.energy_j).sum();
         let nominal: f64 = per_group.iter().map(|g| g.nominal_energy_j).sum();
         FleetServingStats {
@@ -1170,6 +913,7 @@ impl FleetServing {
             failed: per_group.iter().map(|g| g.failed).sum(),
             stolen_batches: per_group.iter().map(|g| g.stolen_batches).sum(),
             redispatched: per_group.iter().map(|g| g.redispatched).sum(),
+            migrated: per_group.iter().map(|g| g.migrated).sum(),
             energy_j: energy,
             nominal_energy_j: nominal,
             power_gain: if energy > 0.0 { nominal / energy } else { 1.0 },
@@ -1182,24 +926,27 @@ impl FleetServing {
         }
     }
 
-    /// Stop accepting work, drain every shard, join workers and the CC,
-    /// and return the final report with per-group epoch traces. Gated
-    /// instances are ungated first so their workers wake and help drain.
+    /// Stop accepting work, drain every shard on every node, join workers
+    /// and the node CCs, and return the final report with per-group epoch
+    /// traces. Gated instances (including every non-hosting replica) are
+    /// ungated first so their workers wake and help drain.
     pub fn shutdown(mut self) -> Result<FleetServingReport> {
         // Release pairs with the workers' Acquire load: every
         // `admitted.inc()` sequenced before this call is visible to a
         // worker that observes the flag, so the admitted == completed +
         // failed drain invariant cannot read a stale admitted count.
         self.shutdown.store(true, Ordering::Release);
-        for g in &self.groups {
-            for s in &g.shards {
-                s.set_gated(false);
-                s.set_failed(false);
-                s.wake_all();
+        for nd in &self.nodes {
+            for slice in &nd.slices {
+                for s in &slice.shards {
+                    s.set_gated(false);
+                    s.set_failed(false);
+                    s.wake_all();
+                }
             }
         }
         // Under VirtualClock the joining thread must leave the scheduling
-        // set while workers and the CC drain — a Running-but-blocked
+        // set while workers and the CCs drain — a Running-but-blocked
         // joiner would stop virtual time for everyone. resume() must run
         // on every path, so joins collect errors instead of early-return.
         self.cfg.clock.suspend_current();
@@ -1207,14 +954,28 @@ impl FleetServing {
         for w in self.workers.drain(..) {
             worker_panicked |= w.join().is_err();
         }
-        let controller = self.controller.take().map(|c| c.join());
+        let mut cc_panicked = false;
+        let mut ccs: Vec<GroupCc> = Vec::with_capacity(self.groups.len());
+        for c in self.controllers.drain(..) {
+            match c.join() {
+                Ok(hosted) => ccs.extend(hosted),
+                Err(_) => cc_panicked = true,
+            }
+        }
         self.cfg.clock.resume_current();
         anyhow::ensure!(!worker_panicked, "worker panicked");
-        let (epoch_records, decision_records) = match controller {
-            Some(Ok(output)) => output,
-            Some(Err(_)) => anyhow::bail!("controller panicked"),
-            None => (Vec::new(), Vec::new()),
-        };
+        anyhow::ensure!(!cc_panicked, "controller panicked");
+        // A hand-off that raced the stop flag leaves its controller
+        // parked in the slot, adopted by no one; it still owes records.
+        ccs.extend(self.handover.drain());
+        let mut epoch_records: Vec<Vec<EpochRecord>> = vec![Vec::new(); self.groups.len()];
+        let mut decision_records: Vec<Vec<DecisionRecord>> =
+            vec![Vec::new(); self.groups.len()];
+        for mut cc in ccs {
+            let gi = cc.gi;
+            epoch_records[gi] = std::mem::take(&mut cc.records);
+            decision_records[gi] = cc.controller.take_decisions();
+        }
         Ok(FleetServingReport { stats: self.stats(), epoch_records, decision_records })
     }
 }
@@ -1223,15 +984,14 @@ impl FleetServing {
 /// epoch, offered load per group = `trace · share · peak_rps`, spread
 /// over 16 bursts per epoch, plus one epoch of drain time at the end.
 /// Returns the number of accepted submissions. Shared by the
-/// `serve-fleet` CLI subcommand, `examples/fleet_serving.rs` and the
-/// `simtest` virtual-time harness.
+/// `serve-fleet` CLI subcommand and the `simtest` virtual-time harness.
 ///
 /// Pacing follows the *fleet's* clock, so under a
 /// [`VirtualClock`](crate::clock::VirtualClock) the whole replay runs in
 /// simulation time. Every stochastic input derives from `seed` — payload
 /// streams are forked per tenant so one tenant's draws do not depend on
 /// its neighbours' model dims or submission order — which makes two runs
-/// with the same seed bit-identical.
+/// with the same seed bit-identical, at any node count.
 pub fn drive_scenario(
     fleet: &FleetServing,
     scenario: &crate::workload::Scenario,
@@ -1297,14 +1057,15 @@ pub fn drive_scenario(
 /// group, fleet totals last) for `report::table`.
 pub fn fleet_report_rows(stats: &FleetServingStats) -> Vec<Vec<String>> {
     let mut rows = vec![crate::report::row([
-        "group", "share", "backend", "active", "pred", "margin", "done", "rejected",
-        "failed", "stolen", "redisp", "p50_ms", "p99_ms", "gain", "violations%",
+        "group", "share", "backend", "node", "active", "pred", "margin", "done", "rejected",
+        "failed", "stolen", "redisp", "migr", "p50_ms", "p99_ms", "gain", "violations%",
     ])];
     for g in &stats.per_group {
         rows.push(vec![
             g.name.clone(),
             format!("{:.2}", g.share),
             g.backend.to_string(),
+            g.node_now.clone(),
             format!("{}/{}", g.active_now, g.n_instances),
             g.predictor_now.to_string(),
             format!("{:.2}", g.margin_now),
@@ -1313,6 +1074,7 @@ pub fn fleet_report_rows(stats: &FleetServingStats) -> Vec<Vec<String>> {
             g.failed.to_string(),
             g.stolen_batches.to_string(),
             g.redispatched.to_string(),
+            g.migrated.to_string(),
             format!("{:.1}", g.p50_latency_s * 1e3),
             format!("{:.1}", g.p99_latency_s * 1e3),
             format!("{:.2}x", g.power_gain),
@@ -1326,11 +1088,13 @@ pub fn fleet_report_rows(stats: &FleetServingStats) -> Vec<Vec<String>> {
         "-".into(),
         "-".into(),
         "-".into(),
+        "-".into(),
         stats.completed.to_string(),
         stats.rejected.to_string(),
         stats.failed.to_string(),
         stats.stolen_batches.to_string(),
         stats.redispatched.to_string(),
+        stats.migrated.to_string(),
         "-".into(),
         "-".into(),
         format!("{:.2}x", stats.power_gain),
@@ -1342,78 +1106,11 @@ pub fn fleet_report_rows(stats: &FleetServingStats) -> Vec<Vec<String>> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::clock::VirtualClock;
+    use crate::clock::{ActorScope, VirtualClock};
     use crate::vscale::{ElasticConfig, ElasticLut};
 
-    fn reqs(n: usize) -> Vec<Request> {
-        // Timestamps route through the injected clock; unit tests pin them
-        // to tick 0 so no helper ever reads wall time mid-test.
-        (0..n)
-            .map(|i| Request { id: i as u64, payload: vec![0.0; 2], submitted: 0 })
-            .collect()
-    }
-
-    #[test]
-    fn claim_batch_steals_from_deepest_sibling_when_idle() {
-        let shards: Vec<Arc<ShardQueue>> =
-            (0..3).map(|_| Arc::new(ShardQueue::new(64))).collect();
-        for r in reqs(8) {
-            shards[0].try_push(r).unwrap();
-        }
-        for r in reqs(2) {
-            shards[1].try_push(r).unwrap();
-        }
-        // Worker 2 is idle; it must steal ~half of shard 0's backlog.
-        let (batch, stolen) =
-            claim_batch(&shards, 2, 16, Duration::from_millis(1), true);
-        assert!(stolen, "idle worker must steal");
-        assert_eq!(batch.len(), 4);
-        assert_eq!(shards[0].len(), 4);
-        assert_eq!(shards[1].len(), 2, "shallower sibling untouched");
-    }
-
-    #[test]
-    fn claim_batch_prefers_home_shard_and_respects_steal_flag() {
-        let shards: Vec<Arc<ShardQueue>> =
-            (0..2).map(|_| Arc::new(ShardQueue::new(64))).collect();
-        for r in reqs(3) {
-            shards[1].try_push(r).unwrap();
-        }
-        shards[0]
-            .try_push(Request { id: 99, payload: vec![], submitted: 0 })
-            .unwrap();
-        let (batch, stolen) =
-            claim_batch(&shards, 0, 16, Duration::from_millis(1), true);
-        assert!(!stolen, "home work comes first");
-        assert_eq!(batch.len(), 1);
-        assert_eq!(batch[0].id, 99);
-
-        // With stealing disabled the idle worker stays empty-handed.
-        let (batch, stolen) =
-            claim_batch(&shards, 0, 16, Duration::from_millis(1), false);
-        assert!(!stolen);
-        assert!(batch.is_empty());
-        assert_eq!(shards[1].len(), 3);
-    }
-
-    #[test]
-    fn claim_batch_never_steals_from_a_gated_sibling() {
-        let shards: Vec<Arc<ShardQueue>> =
-            (0..3).map(|_| Arc::new(ShardQueue::new(64))).collect();
-        for r in reqs(8) {
-            shards[1].try_push(r).unwrap();
-        }
-        shards[1].set_gated(true);
-        for r in reqs(2) {
-            shards[2].try_push(r).unwrap();
-        }
-        // Worker 0 is idle; the deepest shard is gated, so it must steal
-        // from the shallower active sibling instead.
-        let (batch, stolen) =
-            claim_batch(&shards, 0, 16, Duration::from_millis(1), true);
-        assert!(stolen);
-        assert_eq!(batch.len(), 1, "steals half of the active sibling's 2");
-        assert_eq!(shards[1].len(), 8, "gated backlog is left for the CC drain");
+    fn group(benchmark: &str, share: f64, n_instances: usize) -> GroupConfig {
+        GroupConfig { benchmark: benchmark.into(), share, n_instances, qos_target: None }
     }
 
     #[test]
@@ -1428,23 +1125,68 @@ mod tests {
     }
 
     #[test]
+    fn config_validation_returns_typed_errors() {
+        // Duplicate tenant names (the pre-validation config accepted
+        // these and group_index() silently shadowed the second group).
+        let cfg = FleetServingConfig {
+            groups: vec![group("tabla", 0.5, 1), group("tabla", 0.5, 1)],
+            ..Default::default()
+        };
+        assert_eq!(cfg.validate(), Err(ConfigError::DuplicateGroup("tabla".into())));
+        // Empty name.
+        let cfg = FleetServingConfig { groups: vec![group("", 1.0, 1)], ..Default::default() };
+        assert_eq!(cfg.validate(), Err(ConfigError::EmptyGroupName));
+        // Zero shards.
+        let cfg =
+            FleetServingConfig { groups: vec![group("tabla", 1.0, 0)], ..Default::default() };
+        assert_eq!(cfg.validate(), Err(ConfigError::ZeroShards("tabla".into())));
+        // No groups at all.
+        let cfg = FleetServingConfig { groups: vec![], ..Default::default() };
+        assert_eq!(cfg.validate(), Err(ConfigError::NoGroups));
+        // Bad share sum.
+        let cfg =
+            FleetServingConfig { groups: vec![group("tabla", 0.5, 1)], ..Default::default() };
+        assert_eq!(cfg.validate(), Err(ConfigError::BadShareSum(0.5)));
+        // Node count outside [1, MAX_NODES].
+        let cfg = FleetServingConfig { nodes: 0, ..Default::default() };
+        assert_eq!(cfg.validate(), Err(ConfigError::BadNodeCount(0)));
+        // A migration plan naming a group outside the layout.
+        let cfg = FleetServingConfig {
+            nodes: 2,
+            migrations: Arc::new(MigrationPlan {
+                moves: vec![super::super::topology::ScriptedMigration {
+                    epoch: 1,
+                    group: 5,
+                    from: 0,
+                    to: 1,
+                }],
+            }),
+            ..Default::default()
+        };
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadMigrationPlan(_))));
+        // A rebalancer that would fire on zero sustained epochs.
+        let cfg = FleetServingConfig {
+            nodes: 2,
+            rebalance: Some(RebalanceConfig { min_backlog: 0.5, sustain: 0 }),
+            ..Default::default()
+        };
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadRebalance(_))));
+        // The default config is valid.
+        FleetServingConfig::default().validate().unwrap();
+    }
+
+    #[test]
     fn published_gauges_pin_to_the_lut_entry() {
         // With no load, no warmup and no PJRT refinement, the CC must
         // publish exactly the bin-0 elastic LUT entry — voltages rounded
-        // to millivolts, not truncated. Runs under VirtualClock: the old
-        // version polled wall time with a 10 s deadline loop; here the CC
+        // to millivolts, not truncated. Runs under VirtualClock: the CC
         // fires at virtual ticks 30/60/90 ms and sleeping 100 virtual ms
         // yields *exactly* three epochs, deterministically, in
         // microseconds of wall time.
         let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
         let _driver = ActorScope::enter(&clock, "test-driver");
         let cfg = FleetServingConfig {
-            groups: vec![GroupConfig {
-                benchmark: "tabla".into(),
-                share: 1.0,
-                n_instances: 2,
-                qos_target: None,
-            }],
+            groups: vec![group("tabla", 1.0, 2)],
             epoch: Duration::from_millis(30),
             warmup_epochs: 0,
             selector_via_pjrt: false,
@@ -1495,14 +1237,21 @@ mod tests {
         // fixed margin and the Markov predictor, in stats and gauges.
         assert!((g.margin_now - 0.05).abs() < 1e-12, "margin {}", g.margin_now);
         assert_eq!(g.predictor_now, "markov");
+        // The legacy un-namespaced gauge is the 1-node back-compat
+        // alias; the canonical name is namespaced by hosting node.
         assert!(
             (fleet.registry().gauge("tabla.margin_now").get() - 0.05).abs() < 1e-12,
-            "margin gauge must be published"
+            "margin gauge must be published under the 1-node alias"
+        );
+        assert!(
+            (fleet.registry().gauge("node0.tabla.margin_now").get() - 0.05).abs() < 1e-12,
+            "margin gauge must be published under the node namespace"
         );
         assert_eq!(
             fleet.registry().gauge("tabla.predictor_now").get(),
             crate::markov::PredictorKind::index_of_name("markov") as f64
         );
+        assert_eq!(g.node_now, "node0");
         fleet.shutdown().unwrap();
     }
 
@@ -1515,12 +1264,7 @@ mod tests {
         let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
         let _driver = ActorScope::enter(&clock, "test-driver");
         let cfg = FleetServingConfig {
-            groups: vec![GroupConfig {
-                benchmark: "tabla".into(),
-                share: 1.0,
-                n_instances: 2,
-                qos_target: None,
-            }],
+            groups: vec![group("tabla", 1.0, 2)],
             epoch: Duration::from_millis(20),
             warmup_epochs: 0,
             selector_via_pjrt: false,
@@ -1549,24 +1293,14 @@ mod tests {
     #[test]
     fn start_validates_group_shares() {
         let cfg = FleetServingConfig {
-            groups: vec![GroupConfig {
-                benchmark: "tabla".into(),
-                share: 0.5,
-                n_instances: 1,
-                qos_target: None,
-            }],
+            groups: vec![group("tabla", 0.5, 1)],
             ..Default::default()
         };
         assert!(FleetServing::start(cfg, "artifacts".into()).is_err());
         let cfg = FleetServingConfig { groups: vec![], ..Default::default() };
         assert!(FleetServing::start(cfg, "artifacts".into()).is_err());
         let cfg = FleetServingConfig {
-            groups: vec![GroupConfig {
-                benchmark: "not-a-benchmark".into(),
-                share: 1.0,
-                n_instances: 1,
-                qos_target: None,
-            }],
+            groups: vec![group("not-a-benchmark", 1.0, 1)],
             ..Default::default()
         };
         assert!(FleetServing::start(cfg, "artifacts".into()).is_err());
@@ -1629,12 +1363,7 @@ mod tests {
             ..Default::default()
         });
         let cfg = FleetServingConfig {
-            groups: vec![GroupConfig {
-                benchmark: "tabla".into(),
-                share: 1.0,
-                n_instances: 2,
-                qos_target: None,
-            }],
+            groups: vec![group("tabla", 1.0, 2)],
             epoch: Duration::from_millis(20),
             warmup_epochs: 0,
             selector_via_pjrt: false,
@@ -1653,8 +1382,9 @@ mod tests {
                 // Inside the failure window the downed shard is flagged
                 // *and* gated, so dispatch, stealing and its worker all
                 // avoid it while the CC re-dispatches its backlog.
-                assert!(fleet.groups[0].shards[1].is_failed());
-                assert!(fleet.groups[0].shards[1].is_gated());
+                let shard = &fleet.nodes[0].slices[0].shards[1];
+                assert!(shard.is_failed());
+                assert!(shard.is_gated());
                 assert_eq!(fleet.stats().per_group[0].failed_boards_now, 1);
             }
         }
@@ -1695,12 +1425,7 @@ mod tests {
             ..Default::default()
         });
         let cfg = FleetServingConfig {
-            groups: vec![GroupConfig {
-                benchmark: "tabla".into(),
-                share: 1.0,
-                n_instances: 2,
-                qos_target: None,
-            }],
+            groups: vec![group("tabla", 1.0, 2)],
             epoch: Duration::from_millis(20),
             warmup_epochs: 0,
             selector_via_pjrt: false,
@@ -1727,5 +1452,74 @@ mod tests {
         );
         assert!(recs.iter().all(|r| r.slow_factor > 0.0 && r.slow_factor <= 1.0));
         assert!(recs.iter().all(|r| r.n_failed == 0));
+    }
+
+    #[test]
+    fn two_node_fleet_migrates_on_script_and_conserves_work() {
+        // A 2-node fleet hosting one group on node0; a scripted move at
+        // epoch 1 hands it to node1. Placement must follow, both nodes'
+        // namespaced gauges must exist (the collision the namespacing
+        // fixes), and no admitted request may be dropped.
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        let _driver = ActorScope::enter(&clock, "test-driver");
+        let cfg = FleetServingConfig {
+            groups: vec![group("tabla", 1.0, 2)],
+            epoch: Duration::from_millis(20),
+            warmup_epochs: 0,
+            selector_via_pjrt: false,
+            nodes: 2,
+            migrations: Arc::new(MigrationPlan {
+                moves: vec![super::super::topology::ScriptedMigration {
+                    epoch: 1,
+                    group: 0,
+                    from: 0,
+                    to: 1,
+                }],
+            }),
+            clock: clock.clone(),
+            ..Default::default()
+        };
+        let fleet = FleetServing::start(cfg, "sim-no-artifacts".into()).unwrap();
+        assert_eq!(fleet.n_nodes(), 2);
+        assert_eq!(fleet.stats().per_group[0].node_now, "node0");
+        let in_dim = fleet.in_dim(0);
+        for _ in 0..6 {
+            for _ in 0..8 {
+                let _ = fleet.submit(0, vec![0.1; in_dim]);
+            }
+            clock.sleep(Duration::from_millis(20));
+        }
+        clock.sleep(Duration::from_millis(60));
+        let snap = fleet.topology_snapshot();
+        assert_eq!(snap.groups[0].hosted_on, vec!["node1".to_string()]);
+        assert!(snap.version >= 1, "the move must bump the topology version");
+        // Both hosts published under their own namespace — the collision
+        // the `{node}.{group}.*` scheme fixes — and the un-namespaced
+        // alias stays reserved for 1-node fleets.
+        let names: Vec<String> = fleet
+            .registry()
+            .snapshot()
+            .into_iter()
+            .map(|(name, _)| name)
+            .collect();
+        assert!(names.iter().any(|n| n == "node0.tabla.margin_now"), "{names:?}");
+        assert!(names.iter().any(|n| n == "node1.tabla.margin_now"), "{names:?}");
+        assert!(
+            !names.iter().any(|n| n == "tabla.margin_now"),
+            "multi-node fleets must not publish the ambiguous alias"
+        );
+        let report = fleet.shutdown().unwrap();
+        let g = &report.stats.per_group[0];
+        assert_eq!(g.node_now, "node1");
+        assert_eq!(g.migrated, 1);
+        assert_eq!(
+            g.admitted,
+            g.completed + g.failed,
+            "migration must uphold the drain invariant"
+        );
+        assert!(
+            !report.epoch_records[0].is_empty(),
+            "the epoch trace must travel with the controller"
+        );
     }
 }

@@ -24,6 +24,16 @@
 //! is the single-tenant facade over a one-group fleet, kept for the
 //! simple serve path and the perf benches.
 //!
+//! The fleet itself is composed from three layers (DESIGN.md S21):
+//! [`topology`] — the versioned pure-data map of groups → nodes → shards
+//! behind a [`TopologyStore`]; [`node`](self) agents — per-node data
+//! planes plus a CC thread running the shared
+//! [`GroupController`](crate::control::GroupController) loop per hosted
+//! group; and a [`router`](self) that places submits on the hosting node
+//! and (opt-in, [`RebalanceConfig`]) migrates groups off saturated
+//! nodes. A `nodes: 1` fleet — the default — is the legacy single-process
+//! coordinator, bit-identical.
+//!
 //! The FPGA's *service rate* is simulated: a batch occupies its instance
 //! for `cycles / (f_nom · freq_ratio)`; the numeric inference itself is
 //! real execution. Energy is integrated from the power model at the
@@ -55,15 +65,23 @@
 pub mod backend;
 pub mod dispatch;
 pub mod fleet;
+mod node;
+mod router;
 pub mod shard;
+pub mod topology;
 
 pub use backend::{variant_dims, InferenceBackend, NativeDnn};
 pub use dispatch::{DispatchPolicy, Dispatcher};
 pub use fleet::{
-    drive_scenario, fleet_report_rows, FleetServing, FleetServingConfig, FleetServingReport,
-    FleetServingStats, GroupConfig, GroupServingStats,
+    drive_scenario, fleet_report_rows, ConfigError, FleetServing, FleetServingConfig,
+    FleetServingReport, FleetServingStats, GroupConfig, GroupServingStats,
 };
+pub use router::RebalanceConfig;
 pub use shard::ShardQueue;
+pub use topology::{
+    FleetTopology, MigrationPlan, NodeHealth, NodeInfo, ScriptedMigration, TopologyError,
+    TopologySnapshot, TopologyStore, MAX_NODES,
+};
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -265,7 +283,7 @@ pub struct ServingStats {
 /// *served* this epoch (published at the end of the previous one), and
 /// `predicted`/`predictor`/`margin` come from the decision *made* this
 /// epoch.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct EpochRecord {
     /// Epoch index.
     pub epoch: usize,
@@ -337,6 +355,9 @@ impl Coordinator {
             predictor_period: cfg.predictor_period,
             qos_target: cfg.qos_target,
             faults: std::sync::Arc::new(crate::workload::FaultPlan::default()),
+            nodes: 1,
+            migrations: std::sync::Arc::new(MigrationPlan::default()),
+            rebalance: None,
             clock: cfg.clock.clone(),
         };
         let inner = FleetServing::start_with(fleet_cfg, artifacts_dir, vec![(design, optimizer)])?;

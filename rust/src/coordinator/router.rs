@@ -1,0 +1,104 @@
+//! Cross-node request routing + rebalancing policy (DESIGN.md S21).
+//!
+//! The router is the thin top layer of the fleet-of-fleets split: given a
+//! tenant's group index it picks the *node* whose slice receives the
+//! submit, reading placement lock-free from the
+//! [`TopologyStore`](super::topology::TopologyStore)'s hosting-mask
+//! mirrors. Within the chosen node, shard selection stays the node's
+//! business ([`place_request`](super::node::place_request)) and work
+//! stealing never crosses a node boundary.
+//!
+//! The canonical topologies host each group on exactly one node, so the
+//! hot path is a single mask read + `trailing_zeros`. Should a future
+//! layout set several hosting bits, the router degrades to least-loaded
+//! among the hosting nodes (queue-depth sum over the group's slice, ties
+//! to the lowest node id) — the same policy the in-node dispatcher uses
+//! one level down.
+//!
+//! [`RebalanceConfig`] parameterizes the opt-in saturation rebalancer
+//! that runs inside each node's CC (`coordinator::node`): a group whose
+//! modeled backlog stays at or above `min_backlog` for `sustain`
+//! consecutive epochs is migrated to the node currently hosting the
+//! fewest worker instances. It defaults to off (`None` in
+//! [`FleetServingConfig`](super::FleetServingConfig)) so every legacy
+//! single-node run and every equivalence golden stays bit-identical.
+
+use std::sync::Arc;
+
+use super::node::NodeShared;
+use super::topology::TopologyStore;
+
+/// When the opt-in rebalancer migrates a group off a saturated node.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RebalanceConfig {
+    /// Modeled-backlog threshold (in epochs of nominal capacity, the
+    /// same unit as `max_backlog_steps`) at or above which an epoch
+    /// counts toward saturation.
+    pub min_backlog: f64,
+    /// Consecutive over-threshold epochs before the group migrates —
+    /// hysteresis so one flash-crowd epoch does not bounce placements.
+    pub sustain: usize,
+}
+
+impl Default for RebalanceConfig {
+    fn default() -> Self {
+        RebalanceConfig { min_backlog: 0.5, sustain: 3 }
+    }
+}
+
+/// Routes submits to the hosting node's slice.
+pub(super) struct Router {
+    store: Arc<TopologyStore>,
+    nodes: Vec<Arc<NodeShared>>,
+}
+
+impl Router {
+    /// A router over the fleet's nodes and its topology store.
+    pub(super) fn new(store: Arc<TopologyStore>, nodes: Vec<Arc<NodeShared>>) -> Router {
+        Router { store, nodes }
+    }
+
+    /// Node id whose slice should receive a submit for group `gi`:
+    /// lock-free single-host fast path, least-loaded among hosting nodes
+    /// otherwise (ties to the lowest id).
+    pub(super) fn route(&self, gi: usize) -> usize {
+        let mask = self.store.hosting_mask(gi);
+        if mask.count_ones() == 1 {
+            return mask.trailing_zeros() as usize;
+        }
+        let mut best: Option<(usize, usize)> = None; // (depth, node id)
+        for (id, node) in self.nodes.iter().enumerate() {
+            if mask & (1u64 << id) == 0 {
+                continue;
+            }
+            let depth = node.slices[gi].depth();
+            if best.map_or(true, |(d, _)| depth < d) {
+                best = Some((depth, id));
+            }
+        }
+        // A group is hosted somewhere by construction (validated at
+        // start, preserved by migrate); the fallback covers a torn
+        // wall-clock read mid-migration, where node 0 merely queues the
+        // request until the next drain.
+        best.map(|(_, id)| id).unwrap_or(0)
+    }
+}
+
+/// Migration destination for a group leaving `exclude`: the other node
+/// hosting the fewest worker instances (ties to the lowest id). `None`
+/// on a 1-node fleet.
+pub(super) fn pick_migration_target(store: &TopologyStore, exclude: usize) -> Option<usize> {
+    store.with(|t| {
+        let mut best: Option<(usize, usize)> = None; // (instances, node id)
+        for id in 0..t.nodes().len() {
+            if id == exclude {
+                continue;
+            }
+            let load = t.hosted_instances(id);
+            if best.map_or(true, |(l, _)| load < l) {
+                best = Some((load, id));
+            }
+        }
+        best.map(|(_, id)| id)
+    })
+}

@@ -5,9 +5,12 @@
 //! become the scaling bottleneck. A [`ShardQueue`] is owned by exactly one
 //! worker (its *home* shard) and bounded individually, so submit-side
 //! backpressure and wakeups touch one shard lock instead of a global one.
-//! Idle workers may *steal* from sibling shards (see
-//! [`claim_batch`](super::fleet)) which keeps tail latency flat when the
-//! dispatcher's load estimate lags reality.
+//! Idle workers may *steal* from sibling shards (`claim_batch` in
+//! `coordinator::node`) which keeps tail latency flat when the
+//! dispatcher's load estimate lags reality. Stealing — like the shards
+//! themselves — is strictly node-local in a multi-node fleet (DESIGN.md
+//! S21): cross-node movement of queued work happens only through a
+//! migration's drain + re-dispatch.
 //!
 //! A relaxed atomic `depth` mirrors the queue length so dispatchers can
 //! pick the least-loaded shard without taking any lock.

@@ -1,0 +1,727 @@
+//! Fleet topology — the single source of truth for group placement
+//! (DESIGN.md S21).
+//!
+//! A [`FleetTopology`] is a *versioned, pure-data* map of the fleet:
+//! which node hosts which tenant group, each node's capacity and health,
+//! and each group's shard count and QoS tier. Nothing in here owns a
+//! thread, a queue or a backend — the topology is data that the router
+//! reads on every submit and the node agents cache by version, exactly
+//! the coordinator-as-source-of-truth pattern: mutations (migrations,
+//! health changes) go through the [`TopologyStore`], bump the version,
+//! and every consumer refreshes from the store when its cached version
+//! goes stale.
+//!
+//! Placement changes are *migrations*: [`FleetTopology::migrate`] moves a
+//! group's hosting bit from one node to another. The serving-side
+//! mechanics (gate + drain + re-dispatch of the in-flight backlog, then
+//! controller hand-off) live in `coordinator::node`; this module only
+//! records the authoritative outcome. A [`MigrationPlan`] is the
+//! deterministic scripted twin of `workload::FaultPlan`: epoch-indexed
+//! moves that the hosting node executes at CC epoch boundaries, so a
+//! seeded virtual-time run replays its migrations bitwise
+//! (`tests/sim_properties.rs::prop_migration_conserves_work`).
+//!
+//! [`TopologySnapshot`] is the observability surface — the `topology` CLI
+//! subcommand prints its [`TopologySnapshot::to_json`] document (schema
+//! in DESIGN.md S21.4), the live analog of a `GET /topology` endpoint.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::prng::Rng;
+
+use super::fleet::GroupConfig;
+
+/// Most nodes a topology may carry: hosting sets are stored as `u64`
+/// bitmasks so the router's hot path reads placement lock-free.
+pub const MAX_NODES: usize = 64;
+
+/// Health of one node, as recorded in the topology.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeHealth {
+    /// Serving normally.
+    Healthy,
+    /// The node's rebalancer reported sustained backlog pressure; the
+    /// router still routes here but the rebalancer is looking for a
+    /// migration target.
+    Saturated,
+}
+
+impl NodeHealth {
+    /// Stable lowercase name (snapshot JSON uses it).
+    pub fn name(self) -> &'static str {
+        match self {
+            NodeHealth::Healthy => "healthy",
+            NodeHealth::Saturated => "saturated",
+        }
+    }
+}
+
+/// Static description + mutable health of one node.
+#[derive(Clone, Debug)]
+pub struct NodeInfo {
+    /// Display name (`node0`, `node1`, ...), used to namespace per-node
+    /// metrics as `{node}.{group}.*`.
+    pub name: String,
+    /// Worker instances this node can host across all groups.
+    pub capacity: usize,
+    /// Current health state.
+    pub health: NodeHealth,
+}
+
+/// Why a topology (or a mutation of it) was rejected.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TopologyError {
+    /// Node count outside `[1, MAX_NODES]`.
+    BadNodeCount(usize),
+    /// A group index outside the topology's group list.
+    UnknownGroup(usize),
+    /// A node index outside the topology's node list.
+    UnknownNode(usize),
+    /// `migrate` named a source node that does not host the group.
+    NotHostedOn {
+        /// Group index of the rejected move.
+        group: usize,
+        /// Node the caller claimed was hosting it.
+        node: usize,
+    },
+    /// `migrate` named an identical source and destination.
+    SelfMigration(usize),
+}
+
+impl std::fmt::Display for TopologyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TopologyError::BadNodeCount(n) => {
+                write!(f, "node count {n} outside [1, {MAX_NODES}]")
+            }
+            TopologyError::UnknownGroup(g) => write!(f, "group index {g} not in topology"),
+            TopologyError::UnknownNode(n) => write!(f, "node index {n} not in topology"),
+            TopologyError::NotHostedOn { group, node } => {
+                write!(f, "group {group} is not hosted on node {node}")
+            }
+            TopologyError::SelfMigration(n) => {
+                write!(f, "migration source and destination are both node {n}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TopologyError {}
+
+/// The versioned, pure-data fleet map: groups → nodes → shards.
+///
+/// `hosting[gi]` is a bitmask over node ids; bit `n` set means node `n`
+/// hosts a slice (shard set + workers) of group `gi`. The canonical
+/// layouts built by [`FleetTopology::spread`] host every group on exactly
+/// one node, and [`FleetTopology::migrate`] preserves that invariant —
+/// one controller per group, wherever it lives, which is what keeps the
+/// distributed decision logs identical to the offline replay
+/// (`tests/control_equivalence.rs`).
+#[derive(Clone, Debug)]
+pub struct FleetTopology {
+    version: u64,
+    nodes: Vec<NodeInfo>,
+    groups: Vec<GroupConfig>,
+    hosting: Vec<u64>,
+}
+
+impl FleetTopology {
+    /// The legacy single-process layout: one node hosting every group.
+    pub fn single_node(groups: Vec<GroupConfig>) -> FleetTopology {
+        // 1 is always a valid node count, so spread cannot fail here.
+        match Self::spread(groups, 1) {
+            Ok(t) => t,
+            Err(_) => unreachable!("single-node spread is always valid"),
+        }
+    }
+
+    /// Spread `groups` round-robin over `n_nodes` nodes (group `i` →
+    /// node `i % n_nodes`), each node named `node{i}` with capacity for
+    /// the whole fleet so any later migration has a feasible target.
+    pub fn spread(groups: Vec<GroupConfig>, n_nodes: usize) -> Result<FleetTopology, TopologyError> {
+        if n_nodes == 0 || n_nodes > MAX_NODES {
+            return Err(TopologyError::BadNodeCount(n_nodes));
+        }
+        let capacity: usize = groups.iter().map(|g| g.n_instances).sum();
+        let nodes = (0..n_nodes)
+            .map(|i| NodeInfo {
+                name: format!("node{i}"),
+                capacity,
+                health: NodeHealth::Healthy,
+            })
+            .collect();
+        let hosting = (0..groups.len()).map(|gi| 1u64 << (gi % n_nodes)).collect();
+        Ok(FleetTopology { version: 0, nodes, groups, hosting })
+    }
+
+    /// Monotonic version; every mutation bumps it.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// The topology's nodes, id-ordered.
+    pub fn nodes(&self) -> &[NodeInfo] {
+        &self.nodes
+    }
+
+    /// The topology's groups, index-aligned with the fleet's.
+    pub fn groups(&self) -> &[GroupConfig] {
+        &self.groups
+    }
+
+    /// Hosting bitmask of a group (bit `n` ⇒ node `n` hosts it).
+    pub fn hosting_mask(&self, group: usize) -> u64 {
+        self.hosting.get(group).copied().unwrap_or(0)
+    }
+
+    /// Node ids hosting a group, ascending.
+    pub fn nodes_hosting(&self, group: usize) -> Vec<usize> {
+        let mask = self.hosting_mask(group);
+        (0..self.nodes.len()).filter(|n| mask & (1 << n) != 0).collect()
+    }
+
+    /// Whether node `node` hosts group `group`.
+    pub fn is_hosted_on(&self, group: usize, node: usize) -> bool {
+        self.hosting_mask(group) & (1u64 << node) != 0
+    }
+
+    /// Worker instances node `node` currently hosts (its placement load).
+    pub fn hosted_instances(&self, node: usize) -> usize {
+        self.groups
+            .iter()
+            .enumerate()
+            .filter(|(gi, _)| self.is_hosted_on(*gi, node))
+            .map(|(_, g)| g.n_instances)
+            .sum()
+    }
+
+    /// Move a group's hosting bit from `from` to `to`, bumping the
+    /// version. The data plane (drain + re-dispatch + controller
+    /// hand-off) must run *before* this call so consumers that refresh on
+    /// the new version observe a consistent fleet.
+    pub fn migrate(&mut self, group: usize, from: usize, to: usize) -> Result<(), TopologyError> {
+        if group >= self.groups.len() {
+            return Err(TopologyError::UnknownGroup(group));
+        }
+        if from >= self.nodes.len() {
+            return Err(TopologyError::UnknownNode(from));
+        }
+        if to >= self.nodes.len() {
+            return Err(TopologyError::UnknownNode(to));
+        }
+        if from == to {
+            return Err(TopologyError::SelfMigration(from));
+        }
+        if !self.is_hosted_on(group, from) {
+            return Err(TopologyError::NotHostedOn { group, node: from });
+        }
+        self.hosting[group] = (self.hosting[group] & !(1u64 << from)) | (1u64 << to);
+        self.version += 1;
+        Ok(())
+    }
+
+    /// Record a node's health, bumping the version on change only (so
+    /// steady-state health reports do not invalidate consumer caches).
+    pub fn set_health(&mut self, node: usize, health: NodeHealth) -> Result<(), TopologyError> {
+        let info = self.nodes.get_mut(node).ok_or(TopologyError::UnknownNode(node))?;
+        if info.health != health {
+            info.health = health;
+            self.version += 1;
+        }
+        Ok(())
+    }
+
+    /// An immutable observability copy of the whole map.
+    pub fn snapshot(&self) -> TopologySnapshot {
+        TopologySnapshot {
+            version: self.version,
+            nodes: self
+                .nodes
+                .iter()
+                .enumerate()
+                .map(|(id, n)| NodeSnapshot {
+                    id,
+                    name: n.name.clone(),
+                    capacity: n.capacity,
+                    health: n.health,
+                    hosted_instances: self.hosted_instances(id),
+                    hosted_groups: self
+                        .groups
+                        .iter()
+                        .enumerate()
+                        .filter(|(gi, _)| self.is_hosted_on(*gi, id))
+                        .map(|(_, g)| g.benchmark.clone())
+                        .collect(),
+                })
+                .collect(),
+            groups: self
+                .groups
+                .iter()
+                .enumerate()
+                .map(|(gi, g)| GroupSnapshot {
+                    name: g.benchmark.clone(),
+                    share: g.share,
+                    n_shards: g.n_instances,
+                    qos_target: g.qos_target,
+                    hosted_on: self
+                        .nodes_hosting(gi)
+                        .into_iter()
+                        .map(|n| self.nodes[n].name.clone())
+                        .collect(),
+                })
+                .collect(),
+        }
+    }
+}
+
+/// One node's row in a [`TopologySnapshot`].
+#[derive(Clone, Debug)]
+pub struct NodeSnapshot {
+    /// Node id (bit position in hosting masks).
+    pub id: usize,
+    /// Display name.
+    pub name: String,
+    /// Worker instances the node can host.
+    pub capacity: usize,
+    /// Health at snapshot time.
+    pub health: NodeHealth,
+    /// Worker instances currently placed here.
+    pub hosted_instances: usize,
+    /// Benchmark names of the groups hosted here.
+    pub hosted_groups: Vec<String>,
+}
+
+/// One group's row in a [`TopologySnapshot`].
+#[derive(Clone, Debug)]
+pub struct GroupSnapshot {
+    /// Benchmark / tenant name.
+    pub name: String,
+    /// Provisioned traffic share.
+    pub share: f64,
+    /// Shards (worker instances) per hosting node.
+    pub n_shards: usize,
+    /// Per-tenant QoS tier target, when set.
+    pub qos_target: Option<f64>,
+    /// Names of the hosting nodes, id-ascending.
+    pub hosted_on: Vec<String>,
+}
+
+/// Point-in-time copy of the fleet map for observability — what the
+/// `topology` CLI subcommand prints (DESIGN.md S21.4 documents the JSON
+/// schema).
+#[derive(Clone, Debug)]
+pub struct TopologySnapshot {
+    /// Topology version the snapshot was taken at.
+    pub version: u64,
+    /// Per-node placement + health.
+    pub nodes: Vec<NodeSnapshot>,
+    /// Per-group placement, index-aligned with the fleet's groups.
+    pub groups: Vec<GroupSnapshot>,
+}
+
+impl TopologySnapshot {
+    /// Deterministic JSON rendering (key order fixed, so two snapshots of
+    /// the same topology serialize byte-identically).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(self.version as f64)),
+            (
+                "nodes",
+                Json::Arr(
+                    self.nodes
+                        .iter()
+                        .map(|n| {
+                            Json::obj(vec![
+                                ("id", Json::Num(n.id as f64)),
+                                ("name", Json::Str(n.name.clone())),
+                                ("capacity", Json::Num(n.capacity as f64)),
+                                ("health", Json::Str(n.health.name().into())),
+                                ("hosted_instances", Json::Num(n.hosted_instances as f64)),
+                                (
+                                    "hosted_groups",
+                                    Json::Arr(
+                                        n.hosted_groups
+                                            .iter()
+                                            .map(|g| Json::Str(g.clone()))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "groups",
+                Json::Arr(
+                    self.groups
+                        .iter()
+                        .map(|g| {
+                            Json::obj(vec![
+                                ("name", Json::Str(g.name.clone())),
+                                ("share", Json::Num(g.share)),
+                                ("shards", Json::Num(g.n_shards as f64)),
+                                (
+                                    "qos_target",
+                                    g.qos_target.map(Json::Num).unwrap_or(Json::Null),
+                                ),
+                                (
+                                    "hosted_on",
+                                    Json::Arr(
+                                        g.hosted_on
+                                            .iter()
+                                            .map(|n| Json::Str(n.clone()))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// One scripted group move: at the CC pass for `epoch`, the node hosting
+/// `group` (which the plan claims is `from`) gates + drains its slice,
+/// re-dispatches the backlog into `to`'s slice, and hands the group's
+/// controller over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ScriptedMigration {
+    /// CC epoch index at which the move executes.
+    pub epoch: usize,
+    /// Group index to move.
+    pub group: usize,
+    /// Node expected to host the group when the epoch arrives. A stale
+    /// `from` (the group moved elsewhere first) makes the move a no-op —
+    /// the topology, not the plan, is the source of truth.
+    pub from: usize,
+    /// Destination node.
+    pub to: usize,
+}
+
+/// A deterministic, epoch-indexed migration schedule — the placement
+/// twin of `workload::FaultPlan`. The default empty plan is neutral:
+/// no CC pass ever matches a move, so plans-off runs replay untouched.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MigrationPlan {
+    /// Scripted moves, in no particular order; the hosting node executes
+    /// the ones matching its id at each epoch boundary.
+    pub moves: Vec<ScriptedMigration>,
+}
+
+impl MigrationPlan {
+    /// Whether the plan schedules anything at all.
+    pub fn is_empty(&self) -> bool {
+        self.moves.is_empty()
+    }
+
+    /// Moves scheduled for `epoch` whose claimed source is `node`.
+    pub fn moves_at(&self, epoch: usize, node: usize) -> impl Iterator<Item = &ScriptedMigration> {
+        self.moves.iter().filter(move |m| m.epoch == epoch && m.from == node)
+    }
+
+    /// Structural validation against a fleet layout: indices in range,
+    /// no self-moves, at most one move per (group, epoch) so execution
+    /// order within a pass can never be ambiguous.
+    pub fn validate(&self, n_groups: usize, n_nodes: usize) -> Result<(), String> {
+        for m in &self.moves {
+            if m.group >= n_groups {
+                return Err(format!("migration names group {} of {n_groups}", m.group));
+            }
+            if m.from >= n_nodes || m.to >= n_nodes {
+                return Err(format!(
+                    "migration ({} -> {}) outside the {n_nodes}-node fleet",
+                    m.from, m.to
+                ));
+            }
+            if m.from == m.to {
+                return Err(format!("migration of group {} moves to its own node", m.group));
+            }
+        }
+        for (i, a) in self.moves.iter().enumerate() {
+            for b in &self.moves[i + 1..] {
+                if a.group == b.group && a.epoch == b.epoch {
+                    return Err(format!(
+                        "two moves of group {} at epoch {}",
+                        a.group, a.epoch
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// A randomized-but-deterministic plan for property tests: the same
+    /// seed over the same layout reproduces the plan exactly. Moves are
+    /// *coherent* — each group's moves chain from its round-robin start
+    /// node through random destinations at strictly increasing epochs —
+    /// so with the rebalancer off every scripted move finds its group
+    /// where the plan expects it and executes.
+    pub fn scripted(seed: u64, n_groups: usize, n_nodes: usize, epochs: usize) -> MigrationPlan {
+        let mut plan = MigrationPlan::default();
+        if n_nodes < 2 || n_groups == 0 || epochs < 3 {
+            return plan;
+        }
+        let mut rng = Rng::new(seed ^ 0x70u64.rotate_left(48));
+        for g in 0..n_groups {
+            let mut r = rng.fork(g as u64 + 1);
+            let mut host = g % n_nodes;
+            let mut epoch = 0usize;
+            let n_moves = r.index(0, 3);
+            for _ in 0..n_moves {
+                // Leave the last epoch for the post-move drain.
+                if epoch + 1 >= epochs.saturating_sub(1) {
+                    break;
+                }
+                epoch = r.index(epoch + 1, epochs.saturating_sub(1));
+                let mut to = r.index(0, n_nodes - 1);
+                if to >= host {
+                    to += 1; // uniform over nodes != host
+                }
+                plan.moves.push(ScriptedMigration { epoch, group: g, from: host, to });
+                host = to;
+            }
+        }
+        plan
+    }
+
+    /// Deterministic JSON rendering for trace headers.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.moves
+                .iter()
+                .map(|m| {
+                    Json::obj(vec![
+                        ("epoch", Json::Num(m.epoch as f64)),
+                        ("group", Json::Num(m.group as f64)),
+                        ("from", Json::Num(m.from as f64)),
+                        ("to", Json::Num(m.to as f64)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Shared, mutation-serialized home of the fleet's [`FleetTopology`] —
+/// the object node agents and the router actually hold.
+///
+/// Reads on the submit hot path never take the lock: the store mirrors
+/// the version and every group's hosting mask into atomics, refreshed
+/// under the same mutex that serializes mutations. Consumers cache
+/// whatever they derive from a read and re-derive when
+/// [`TopologyStore::version`] moves past their cached value.
+#[derive(Debug)]
+pub struct TopologyStore {
+    inner: Mutex<FleetTopology>,
+    version: AtomicU64,
+    hosting: Vec<AtomicU64>,
+}
+
+impl TopologyStore {
+    /// Wrap a topology for shared use.
+    pub fn new(topology: FleetTopology) -> TopologyStore {
+        let hosting = (0..topology.groups().len())
+            .map(|gi| AtomicU64::new(topology.hosting_mask(gi)))
+            .collect();
+        TopologyStore {
+            version: AtomicU64::new(topology.version()),
+            hosting,
+            inner: Mutex::new(topology),
+        }
+    }
+
+    fn locked(&self) -> std::sync::MutexGuard<'_, FleetTopology> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Lock-free current version (cache invalidation signal).
+    pub fn version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    /// Lock-free hosting mask of a group.
+    pub fn hosting_mask(&self, group: usize) -> u64 {
+        self.hosting.get(group).map(|m| m.load(Ordering::Acquire)).unwrap_or(0)
+    }
+
+    /// Node ids hosting a group right now, ascending (lock-free).
+    pub fn nodes_hosting(&self, group: usize) -> Vec<usize> {
+        let mask = self.hosting_mask(group);
+        (0..MAX_NODES).filter(|n| mask & (1 << n) != 0).collect()
+    }
+
+    /// Run a closure over the locked topology (observability reads that
+    /// need more than a mask).
+    pub fn with<T>(&self, f: impl FnOnce(&FleetTopology) -> T) -> T {
+        f(&self.locked())
+    }
+
+    /// Apply a migration and publish the new mask + version. The Release
+    /// stores pair with consumers' Acquire loads: a consumer that sees
+    /// the new version also sees the new mask.
+    pub fn migrate(&self, group: usize, from: usize, to: usize) -> Result<(), TopologyError> {
+        let mut t = self.locked();
+        t.migrate(group, from, to)?;
+        if let Some(slot) = self.hosting.get(group) {
+            slot.store(t.hosting_mask(group), Ordering::Release);
+        }
+        self.version.store(t.version(), Ordering::Release);
+        Ok(())
+    }
+
+    /// Record a node's health (version bumps only on change).
+    pub fn set_health(&self, node: usize, health: NodeHealth) -> Result<(), TopologyError> {
+        let mut t = self.locked();
+        t.set_health(node, health)?;
+        self.version.store(t.version(), Ordering::Release);
+        Ok(())
+    }
+
+    /// Observability snapshot of the current map.
+    pub fn snapshot(&self) -> TopologySnapshot {
+        self.locked().snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn groups(n: usize) -> Vec<GroupConfig> {
+        (0..n)
+            .map(|i| GroupConfig {
+                benchmark: format!("g{i}"),
+                share: 1.0 / n as f64,
+                n_instances: 2,
+                qos_target: None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn spread_places_groups_round_robin() {
+        let t = FleetTopology::spread(groups(3), 2).unwrap();
+        assert_eq!(t.nodes_hosting(0), vec![0]);
+        assert_eq!(t.nodes_hosting(1), vec![1]);
+        assert_eq!(t.nodes_hosting(2), vec![0]);
+        assert_eq!(t.hosted_instances(0), 4);
+        assert_eq!(t.hosted_instances(1), 2);
+        assert_eq!(t.version(), 0);
+        assert!(FleetTopology::spread(groups(1), 0).is_err());
+        assert!(FleetTopology::spread(groups(1), MAX_NODES + 1).is_err());
+    }
+
+    #[test]
+    fn migrate_moves_the_hosting_bit_and_bumps_the_version() {
+        let mut t = FleetTopology::spread(groups(2), 2).unwrap();
+        t.migrate(0, 0, 1).unwrap();
+        assert_eq!(t.nodes_hosting(0), vec![1]);
+        assert_eq!(t.version(), 1);
+        // Typed rejections, version untouched.
+        assert_eq!(t.migrate(0, 0, 1), Err(TopologyError::NotHostedOn { group: 0, node: 0 }));
+        assert_eq!(t.migrate(9, 0, 1), Err(TopologyError::UnknownGroup(9)));
+        assert_eq!(t.migrate(0, 1, 1), Err(TopologyError::SelfMigration(1)));
+        assert_eq!(t.migrate(0, 1, 7), Err(TopologyError::UnknownNode(7)));
+        assert_eq!(t.version(), 1);
+    }
+
+    #[test]
+    fn health_bumps_version_only_on_change() {
+        let mut t = FleetTopology::spread(groups(1), 2).unwrap();
+        t.set_health(1, NodeHealth::Healthy).unwrap();
+        assert_eq!(t.version(), 0, "no-op health writes must not churn caches");
+        t.set_health(1, NodeHealth::Saturated).unwrap();
+        assert_eq!(t.version(), 1);
+        assert_eq!(t.nodes()[1].health, NodeHealth::Saturated);
+    }
+
+    #[test]
+    fn store_mirrors_masks_and_version_lock_free() {
+        let store = TopologyStore::new(FleetTopology::spread(groups(2), 2).unwrap());
+        assert_eq!(store.version(), 0);
+        assert_eq!(store.hosting_mask(0), 0b01);
+        assert_eq!(store.hosting_mask(1), 0b10);
+        store.migrate(1, 1, 0).unwrap();
+        assert_eq!(store.version(), 1);
+        assert_eq!(store.hosting_mask(1), 0b01);
+        assert_eq!(store.nodes_hosting(1), vec![0]);
+        assert_eq!(store.with(|t| t.hosted_instances(0)), 4);
+    }
+
+    #[test]
+    fn snapshot_json_is_deterministic_and_complete() {
+        let store = TopologyStore::new(FleetTopology::spread(groups(2), 2).unwrap());
+        let a = store.snapshot().to_json().to_string_pretty();
+        let b = store.snapshot().to_json().to_string_pretty();
+        assert_eq!(a, b, "snapshots of an unchanged topology are byte-stable");
+        let json = store.snapshot().to_json();
+        assert_eq!(json.path("version").and_then(Json::as_f64), Some(0.0));
+        assert_eq!(
+            json.path("nodes").and_then(Json::as_arr).map(|n| n.len()),
+            Some(2)
+        );
+        assert_eq!(
+            json.path("groups").and_then(Json::as_arr).map(|g| g.len()),
+            Some(2)
+        );
+        let g0 = &json.path("groups").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(g0.get("name").and_then(Json::as_str), Some("g0"));
+        assert_eq!(
+            g0.get("hosted_on").and_then(Json::as_arr).map(|h| h.len()),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn scripted_migration_plans_are_deterministic_and_coherent() {
+        let a = MigrationPlan::scripted(7, 3, 4, 24);
+        let b = MigrationPlan::scripted(7, 3, 4, 24);
+        assert_eq!(a, b, "same seed, same plan");
+        a.validate(3, 4).unwrap();
+        // Chained coherence: each group's moves start at its round-robin
+        // home and each move departs where the previous one landed.
+        for g in 0..3 {
+            let mut host = g % 4;
+            for m in a.moves.iter().filter(|m| m.group == g) {
+                assert_eq!(m.from, host, "group {g} move departs its current host");
+                host = m.to;
+            }
+        }
+        assert!(MigrationPlan::scripted(7, 3, 1, 24).is_empty(), "1 node: nowhere to go");
+        assert_ne!(
+            MigrationPlan::scripted(8, 3, 4, 24),
+            a,
+            "different seeds should (generically) differ"
+        );
+    }
+
+    #[test]
+    fn migration_plan_validation_rejects_malformed_moves() {
+        let bad = |m| MigrationPlan { moves: vec![m] };
+        assert!(bad(ScriptedMigration { epoch: 1, group: 5, from: 0, to: 1 })
+            .validate(2, 2)
+            .is_err());
+        assert!(bad(ScriptedMigration { epoch: 1, group: 0, from: 0, to: 2 })
+            .validate(2, 2)
+            .is_err());
+        assert!(bad(ScriptedMigration { epoch: 1, group: 0, from: 1, to: 1 })
+            .validate(2, 2)
+            .is_err());
+        let dup = MigrationPlan {
+            moves: vec![
+                ScriptedMigration { epoch: 2, group: 0, from: 0, to: 1 },
+                ScriptedMigration { epoch: 2, group: 0, from: 1, to: 0 },
+            ],
+        };
+        assert!(dup.validate(2, 2).is_err(), "ambiguous same-epoch double move");
+        MigrationPlan::default().validate(0, 1).unwrap();
+    }
+}

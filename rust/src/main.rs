@@ -61,6 +61,11 @@ SUBCOMMANDS:
              epochs per wall-second, bit-identical per seed; --faults
              injects the scenario's canonical FaultPlan — board
              failures, stragglers, correlated surges)
+             [--nodes N] (spread the groups round-robin over N node
+             agents; submits are routed by the fleet topology)
+  topology   --scenario <name> [--nodes N] [--instances N] [--epochs N]
+             (run a short virtual-time fleet and print the live
+             TopologySnapshot as JSON — DESIGN.md S21.4 schema)
   experiment <fig1|fig2|fig3|fig4|fig5|fig6|fig8|table1|fig10|fig11|fig12|table2|pll|hybrid|predictor>
              re-run a paper experiment (same code as `cargo bench`)
 ";
@@ -93,6 +98,7 @@ fn run(argv: &[String]) -> Result<(), String> {
         "fleet" => fleet_cmd(&args),
         "scenario" => scenario_cmd(&args),
         "serve-fleet" => serve_fleet_cmd(&args),
+        "topology" => topology_cmd(&args),
         "experiment" => experiment_cmd(&args),
         other => Err(format!("unknown subcommand {other}\n{USAGE}")),
     }
@@ -594,11 +600,12 @@ fn print_capacity_comparison(
 fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "scenario", "instances", "epochs", "epoch-ms", "rps", "mode", "artifacts", "seed",
-        "capacity", "virtual-time", "predictor", "qos-target", "faults",
+        "capacity", "virtual-time", "predictor", "qos-target", "faults", "nodes",
     ])?;
     let flags = ControlFlags::parse(args)?;
     let name = args.flag_or("scenario", "mixed-tenant");
     let n_instances = args.flag_usize("instances")?.unwrap_or(2);
+    let n_nodes = args.flag_usize("nodes")?.unwrap_or(1);
     let epochs = args.flag_usize("epochs")?.unwrap_or(12);
     let epoch_ms = args.flag_usize("epoch-ms")?.unwrap_or(150);
     let rps = args.flag_f64("rps")?.unwrap_or(3000.0);
@@ -647,17 +654,7 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
         wavescale::workload::FaultPlan::default()
     };
     let cfg = wavescale::coordinator::FleetServingConfig {
-        groups: scenario
-            .tenants
-            .iter()
-            .map(|t| wavescale::coordinator::GroupConfig {
-                benchmark: t.benchmark.clone(),
-                share: t.share,
-                n_instances,
-                // Tenant QoS tiers refine an enabled run-level guardband.
-                qos_target: t.qos_target,
-            })
-            .collect(),
+        groups: scenario.group_configs(n_instances),
         faults: std::sync::Arc::new(faults.clone()),
         epoch: std::time::Duration::from_millis(epoch_ms as u64),
         mode,
@@ -665,6 +662,7 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
         predictor,
         predictor_period: wavescale::workload::Scenario::day_period(epochs),
         qos_target,
+        nodes: n_nodes,
         // The PJRT selector round-trip is skipped in virtual time so the
         // trace cannot depend on which artifacts are installed.
         selector_via_pjrt: !virtual_time,
@@ -674,8 +672,8 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
     let fleet = wavescale::coordinator::FleetServing::start(cfg, dir.into())
         .map_err(|e| e.to_string())?;
     println!(
-        "serving scenario {name}: {} groups x {n_instances} instances, {epochs} epochs, \
-         capacity policy {}, predictor {}{}{}",
+        "serving scenario {name}: {} groups x {n_instances} instances on {n_nodes} node(s), \
+         {epochs} epochs, capacity policy {}, predictor {}{}{}",
         scenario.tenants.len(),
         capacity.name(),
         predictor.name(),
@@ -725,6 +723,41 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
         ..Default::default()
     };
     print_capacity_comparison(&scenario, offline_cfg, mode)?;
+    Ok(())
+}
+
+/// `topology` — spin up a virtual-time fleet on N node agents, replay a few
+/// epochs of the scenario, and print the live [`TopologySnapshot`] as JSON
+/// (DESIGN.md S21.4). The run is deterministic per seed, so the snapshot is
+/// stable enough to diff in scripts.
+fn topology_cmd(args: &Args) -> Result<(), String> {
+    args.check_known(&["scenario", "nodes", "instances", "epochs", "seed"])?;
+    let name = args.flag_or("scenario", "mixed-tenant");
+    let n_nodes = args.flag_usize("nodes")?.unwrap_or(2);
+    let n_instances = args.flag_usize("instances")?.unwrap_or(2);
+    let epochs = args.flag_usize("epochs")?.unwrap_or(4);
+    let seed = args.flag_usize("seed")?.unwrap_or(7) as u64;
+
+    let clock: std::sync::Arc<dyn wavescale::clock::Clock> =
+        std::sync::Arc::new(wavescale::clock::VirtualClock::new());
+    let _driver = wavescale::clock::ActorScope::enter(&clock, "topology");
+
+    let scenario = wavescale::workload::Scenario::by_name(name, epochs, seed)?;
+    let cfg = wavescale::coordinator::FleetServingConfig {
+        groups: scenario.group_configs(n_instances),
+        epoch: std::time::Duration::from_millis(50),
+        nodes: n_nodes,
+        selector_via_pjrt: false,
+        clock: clock.clone(),
+        ..Default::default()
+    };
+    // The deterministic native backend: a directory that never exists.
+    let fleet = wavescale::coordinator::FleetServing::start(cfg, "sim-no-artifacts".into())
+        .map_err(|e| e.to_string())?;
+    wavescale::coordinator::drive_scenario(&fleet, &scenario, 1000.0, seed);
+    let snapshot = fleet.topology_snapshot();
+    fleet.shutdown().map_err(|e| e.to_string())?;
+    println!("{}", snapshot.to_json().to_string_pretty());
     Ok(())
 }
 

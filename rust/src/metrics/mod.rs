@@ -205,6 +205,15 @@ impl Registry {
             .clone()
     }
 
+    /// Resolve the gauge `{scope}.{name}` — the namespacing convention
+    /// for per-owner metrics (`{node}.{group}.margin_now`, ...). Exactly
+    /// equivalent to [`Registry::gauge`] on the joined name, so a scoped
+    /// resolve and a flat resolve of the same full name share one
+    /// instance.
+    pub fn scoped_gauge(&self, scope: &str, name: &str) -> Arc<Gauge> {
+        self.gauge(&format!("{scope}.{name}"))
+    }
+
     /// Flatten all metrics into sorted `(name, value)` rows (counters as
     /// f64; gauges as stored).
     pub fn snapshot(&self) -> Vec<(String, f64)> {
@@ -308,6 +317,16 @@ mod tests {
                 ("fleet.energy_j".to_string(), 1.5),
             ]
         );
+    }
+
+    #[test]
+    fn scoped_gauge_is_the_flat_gauge_under_the_joined_name() {
+        let r = Registry::new();
+        let scoped = r.scoped_gauge("node0.tabla", "margin_now");
+        scoped.set(0.07);
+        let flat = r.gauge("node0.tabla.margin_now");
+        assert!(Arc::ptr_eq(&scoped, &flat), "one instance per full name");
+        assert!((flat.get() - 0.07).abs() < 1e-12);
     }
 
     #[test]

@@ -37,7 +37,7 @@ use anyhow::Result;
 use crate::clock::{ActorScope, Clock, VirtualClock};
 use crate::coordinator::{
     drive_scenario, EpochRecord, FleetServing, FleetServingConfig, FleetServingReport,
-    GroupConfig,
+    MigrationPlan,
 };
 use crate::markov::PredictorKind;
 use crate::platform::{build_platform, PlatformConfig, Policy};
@@ -86,6 +86,13 @@ pub struct SimSpec {
     /// attaches each adversarial scenario's canonical plan so its golden
     /// trace captures the injected faults.
     pub faults: FaultPlan,
+    /// Serving nodes (DESIGN.md S21). The default `1` is the legacy
+    /// single-process layout — bit-identical to the pre-topology path,
+    /// so every committed golden is keyed to it.
+    pub n_nodes: usize,
+    /// Deterministic scripted migration schedule (DESIGN.md S21.3); the
+    /// default empty plan is bitwise-neutral.
+    pub migrations: MigrationPlan,
 }
 
 impl Default for SimSpec {
@@ -105,6 +112,8 @@ impl Default for SimSpec {
             predictor: PredictorKind::Markov,
             qos_target: None,
             faults: FaultPlan::default(),
+            n_nodes: 1,
+            migrations: MigrationPlan::default(),
         }
     }
 }
@@ -141,10 +150,13 @@ impl SimSpec {
     /// File stem of the golden trace for this spec: `{scenario}_{policy}`
     /// for the default static Markov configuration, with a
     /// `_{predictor}[-adaptive]` suffix when the predictor or guardband
-    /// differ (so new adaptive goldens never collide with the old keys).
+    /// differ (so new adaptive goldens never collide with the old keys)
+    /// and a `_n{N}` suffix for multi-node layouts (1-node specs keep the
+    /// legacy keys — that path is bit-identical to the pre-topology
+    /// coordinator, so its goldens must not churn).
     pub fn golden_stem(&self) -> String {
         let base = format!("{}_{}", self.scenario, self.policy.name());
-        if self.predictor == PredictorKind::Markov && self.qos_target.is_none() {
+        let base = if self.predictor == PredictorKind::Markov && self.qos_target.is_none() {
             base
         } else {
             format!(
@@ -152,6 +164,11 @@ impl SimSpec {
                 self.predictor.name(),
                 if self.qos_target.is_some() { "-adaptive" } else { "" }
             )
+        };
+        if self.n_nodes == 1 {
+            base
+        } else {
+            format!("{base}_n{}", self.n_nodes)
         }
     }
 }
@@ -200,16 +217,7 @@ pub fn run_scenario(spec: &SimSpec, scenario: &Scenario) -> Result<SimOutcome> {
     let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
     let _driver = ActorScope::enter(&clock, "sim-driver");
     let cfg = FleetServingConfig {
-        groups: scenario
-            .tenants
-            .iter()
-            .map(|t| GroupConfig {
-                benchmark: t.benchmark.clone(),
-                share: t.share,
-                n_instances: spec.n_instances,
-                qos_target: t.qos_target,
-            })
-            .collect(),
+        groups: scenario.group_configs(spec.n_instances),
         epoch: spec.epoch,
         queue_capacity: spec.queue_capacity,
         batch_timeout: spec.batch_timeout,
@@ -223,6 +231,8 @@ pub fn run_scenario(spec: &SimSpec, scenario: &Scenario) -> Result<SimOutcome> {
         predictor_period: Scenario::day_period(spec.epochs),
         qos_target: spec.qos_target,
         faults: Arc::new(spec.faults.clone()),
+        nodes: spec.n_nodes,
+        migrations: Arc::new(spec.migrations.clone()),
         clock: clock.clone(),
         ..Default::default()
     };
@@ -269,7 +279,7 @@ pub fn trace_json(spec: &SimSpec, scenario: &Scenario, report: &FleetServingRepo
             ])
         })
         .collect();
-    Json::obj(vec![
+    let mut fields = vec![
         ("scenario", Json::Str(spec.scenario.clone())),
         ("policy", Json::Str(spec.policy.name().to_string())),
         ("predictor", Json::Str(spec.predictor.name().to_string())),
@@ -280,8 +290,16 @@ pub fn trace_json(spec: &SimSpec, scenario: &Scenario, report: &FleetServingRepo
         ("n_instances", Json::Num(spec.n_instances as f64)),
         ("epoch_ms", Json::Num(spec.epoch.as_secs_f64() * 1e3)),
         ("faults", spec.faults.to_json()),
-        ("groups", Json::Arr(groups)),
-    ])
+    ];
+    // Topology fields appear only on multi-node specs: the 1-node path is
+    // bit-identical to the pre-topology coordinator, and its committed
+    // goldens must stay byte-stable.
+    if spec.n_nodes != 1 {
+        fields.push(("n_nodes", Json::Num(spec.n_nodes as f64)));
+        fields.push(("migrations", spec.migrations.to_json()));
+    }
+    fields.push(("groups", Json::Arr(groups)));
+    Json::obj(fields)
 }
 
 /// What [`check_golden`] did.
@@ -363,6 +381,12 @@ mod tests {
             ..SimSpec::golden("diurnal")
         };
         assert_eq!(spec.golden_stem(), "diurnal_hybrid_ewma");
+        // Multi-node layouts get their own key space; 1-node keeps the
+        // legacy keys so committed goldens never churn.
+        let spec = SimSpec { n_nodes: 4, ..SimSpec::golden("diurnal") };
+        assert_eq!(spec.golden_stem(), "diurnal_hybrid_n4");
+        let spec = SimSpec { n_nodes: 1, ..SimSpec::golden_adaptive("overnight") };
+        assert_eq!(spec.golden_stem(), "overnight_hybrid_ensemble-adaptive");
     }
 
     #[test]

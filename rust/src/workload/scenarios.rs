@@ -99,6 +99,23 @@ impl Scenario {
         }
     }
 
+    /// The fleet group configs this scenario's tenants imply, one group
+    /// per tenant at `n_instances` workers each. Shared by the
+    /// `serve-fleet` CLI and the `simtest` harness so the two serving
+    /// paths build identical fleets from a scenario.
+    pub fn group_configs(&self, n_instances: usize) -> Vec<crate::coordinator::GroupConfig> {
+        self.tenants
+            .iter()
+            .map(|t| crate::coordinator::GroupConfig {
+                benchmark: t.benchmark.clone(),
+                share: t.share,
+                n_instances,
+                // Tenant QoS tiers refine an enabled run-level guardband.
+                qos_target: t.qos_target,
+            })
+            .collect()
+    }
+
     /// Every named scenario at the given size, in [`Scenario::NAMES`]
     /// order — the iteration surface behind the capacity-policy
     /// comparison tests and the `hybrid_capacity` bench.

@@ -14,16 +14,24 @@
 //! decision equality is an induction over epochs — any divergence in
 //! predictor, guardband, ladder or LUT logic between the two paths
 //! breaks it immediately.
+//!
+//! PR 7 extends the contract to the distributed fleet: spreading the same
+//! groups over N node agents (N in {1, 2, 4}) must not move a single
+//! decision. Migration-free, each group is hosted on exactly one node and
+//! its router delivers every submit there, so the hosted CC observes the
+//! same load sequence the 1-node fleet does — the decision log is
+//! *invariant in the node count* and still replays offline.
 
 use wavescale::platform::{build_platform, PlatformConfig, Policy};
-use wavescale::simtest::{self, SimSpec};
+use wavescale::simtest::{self, SimOutcome, SimSpec};
 use wavescale::vscale::{CapacityPolicy, Mode};
 use wavescale::workload::Scenario;
 
 /// Run `spec` live, then replay each group's observed loads through an
 /// offline platform built with the matching control configuration, and
-/// assert the two decision logs are identical.
-fn assert_paths_agree(spec: &SimSpec) {
+/// assert the two decision logs are identical. Returns the live outcome
+/// so callers can make cross-spec assertions without re-running.
+fn assert_paths_agree(spec: &SimSpec) -> SimOutcome {
     let out = simtest::run(spec).expect("live virtual-time replay");
     let scenario = Scenario::by_name(&spec.scenario, spec.epochs, spec.seed).unwrap();
     assert_eq!(out.report.decision_records.len(), scenario.tenants.len());
@@ -76,25 +84,44 @@ fn assert_paths_agree(spec: &SimSpec) {
             tenant.benchmark
         );
     }
+    out
 }
 
 #[test]
 fn offline_and_live_decisions_agree_on_every_scenario_and_capacity_policy() {
     // Every named scenario (adversarial ones included) x {dvfs-only,
-    // pg-only, hybrid}: the acceptance matrix. Static-margin Markov
-    // configuration (the golden default). SimSpec::default carries the
-    // empty fault plan — cross-path equivalence is a *fault-free*
-    // contract, since the offline plant has no fault model; injected
-    // runs are covered by tests/sim_faults.rs instead.
+    // pg-only, hybrid} x {1, 2, 4} serving nodes: the acceptance matrix.
+    // Static-margin Markov configuration (the golden default).
+    // SimSpec::default carries the empty fault plan — cross-path
+    // equivalence is a *fault-free*, migration-free contract, since the
+    // offline plant has no fault or topology model; injected runs are
+    // covered by tests/sim_faults.rs and scripted migrations by
+    // tests/sim_topology.rs.
     for name in Scenario::NAMES {
         for policy in CapacityPolicy::ALL {
-            let spec = SimSpec {
-                scenario: name.to_string(),
-                epochs: 18,
-                policy,
-                ..SimSpec::default()
-            };
-            assert_paths_agree(&spec);
+            let mut single_node_log = None;
+            for n_nodes in [1usize, 2, 4] {
+                let spec = SimSpec {
+                    scenario: name.to_string(),
+                    epochs: 18,
+                    policy,
+                    n_nodes,
+                    ..SimSpec::default()
+                };
+                let out = assert_paths_agree(&spec);
+                // Node-count invariance: the distributed fleet must make
+                // the same decisions the single-node fleet does, epoch
+                // for epoch, group for group.
+                match &single_node_log {
+                    None => single_node_log = Some(out.report.decision_records),
+                    Some(base) => assert_eq!(
+                        &out.report.decision_records,
+                        base,
+                        "{name} x {}: {n_nodes}-node fleet diverged from 1-node decisions",
+                        policy.name()
+                    ),
+                }
+            }
         }
     }
 }

@@ -19,7 +19,7 @@
 use std::collections::VecDeque;
 use std::time::Duration;
 
-use wavescale::coordinator::{Request, ShardQueue};
+use wavescale::coordinator::{MigrationPlan, Request, ShardQueue};
 use wavescale::markov::PredictorKind;
 use wavescale::simtest::{self, SimSpec};
 use wavescale::util::prng::Rng;
@@ -135,6 +135,10 @@ fn random_spec(rng: &mut Rng) -> SimSpec {
         // a scripted plan so the other properties keep their exact
         // no-fault baselines (empty plans are bitwise-neutral).
         faults: FaultPlan::default(),
+        // Single-node, migration-free by default for the same reason; the
+        // dedicated topology property below draws both.
+        n_nodes: 1,
+        migrations: MigrationPlan::default(),
     }
 }
 
@@ -204,6 +208,71 @@ fn prop_fault_injection_preserves_conservation_and_never_drops_work() {
         assert_that(
             admitted_total == out.accepted,
             format!("{spec:?}: accepted {} != admitted {admitted_total}", out.accepted),
+        )
+    });
+}
+
+#[test]
+fn prop_migration_conserves_work() {
+    // Satellite of the fleet-of-fleets tentpole (DESIGN.md S21.3): an
+    // arbitrary coherent scripted MigrationPlan over an arbitrary
+    // multi-node spec must uphold the shutdown-drain invariant. A
+    // migration gates + drains the source slice and re-dispatches into
+    // the destination; it must never lose a request, invent a
+    // completion, or perturb determinism.
+    check("migrating fleet conserves admitted requests", 30, |rng| {
+        let mut spec = random_spec(rng);
+        spec.epochs = rng.index(5, 10);
+        spec.n_nodes = rng.index(2, 5);
+        let scenario = Scenario::by_name(&spec.scenario, spec.epochs, spec.seed)?;
+        spec.migrations = MigrationPlan::scripted(
+            rng.next_u64(),
+            scenario.tenants.len(),
+            spec.n_nodes,
+            spec.epochs,
+        );
+        let out = simtest::run(&spec).map_err(|e| format!("{spec:?}: {e}"))?;
+        let mut admitted_total = 0u64;
+        for g in &out.report.stats.per_group {
+            assert_that(
+                g.admitted == g.completed + g.failed,
+                format!(
+                    "{spec:?} {}: admitted {} != completed {} + failed {}",
+                    g.name, g.admitted, g.completed, g.failed
+                ),
+            )?;
+            // The native backend cannot fail, so the migration drain must
+            // deliver every admitted request to completion: zero drops.
+            assert_that(
+                g.failed == 0,
+                format!("{spec:?} {}: migration dropped {} requests", g.name, g.failed),
+            )?;
+            admitted_total += g.admitted;
+        }
+        assert_that(
+            admitted_total == out.accepted,
+            format!("{spec:?}: accepted {} != admitted {admitted_total}", out.accepted),
+        )?;
+        // Every scripted move departs before the drive loop ends (the
+        // plan leaves the final epochs for the drain), so the executed
+        // count must equal the plan exactly.
+        assert_that(
+            out.report.stats.migrated == spec.migrations.moves.len() as u64,
+            format!(
+                "{spec:?}: executed {} migrations, plan scripted {}",
+                out.report.stats.migrated,
+                spec.migrations.moves.len()
+            ),
+        )?;
+        // Migrations stay inside the deterministic replay contract: the
+        // same seed over the same plan is bitwise-identical.
+        let again = simtest::run(&spec).map_err(|e| format!("{spec:?}: {e}"))?;
+        let ja = simtest::trace_json(&spec, &scenario, &out.report).to_string_compact();
+        let jb = simtest::trace_json(&spec, &scenario, &again.report).to_string_compact();
+        assert_that(ja == jb, format!("{spec:?}: migrating traces diverged"))?;
+        assert_that(
+            again.report.stats.migrated == out.report.stats.migrated,
+            "migration count diverged between identical replays",
         )
     });
 }

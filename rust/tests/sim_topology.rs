@@ -1,0 +1,156 @@
+//! Multi-node topology acceptance suite (DESIGN.md S21): the fleet-of-
+//! fleets refactor must not change a single observable number.
+//!
+//! 1. every named scenario replays on 2- and 4-node fleets with the
+//!    conservation invariant (`admitted == completed + failed`, zero
+//!    drops) intact, and the per-group epoch trace is **bit-identical to
+//!    the 1-node run** — spreading groups over node agents moves where
+//!    the work executes, never what the controller decides;
+//! 2. the same multi-node seed replays byte-identically run to run;
+//! 3. scripted migrations (DESIGN.md S21.3) execute exactly as planned,
+//!    conserve all admitted work, and keep the epoch trace travelling
+//!    with the controller in order;
+//! 4. 1-node specs keep the legacy golden keys and the legacy trace
+//!    bytes — no `n_nodes`/`migrations` header fields, no `_n{N}` stem
+//!    suffix — so committed goldens never churn.
+
+use wavescale::coordinator::MigrationPlan;
+use wavescale::simtest::{self, SimSpec};
+use wavescale::workload::Scenario;
+
+fn assert_conserved(spec: &SimSpec, out: &simtest::SimOutcome) {
+    let mut admitted_total = 0u64;
+    for g in &out.report.stats.per_group {
+        assert_eq!(
+            g.admitted,
+            g.completed + g.failed,
+            "{spec:?} {}: conservation broken across nodes",
+            g.name
+        );
+        assert_eq!(g.failed, 0, "{spec:?} {}: topology layer dropped requests", g.name);
+        admitted_total += g.admitted;
+    }
+    assert_eq!(
+        admitted_total, out.accepted,
+        "{spec:?}: accepted diverged from the per-group admitted sum"
+    );
+}
+
+#[test]
+fn multi_node_fleets_match_the_single_node_trace_on_every_scenario() {
+    for name in Scenario::NAMES {
+        let base = SimSpec { scenario: name.to_string(), epochs: 10, ..SimSpec::default() };
+        let single = simtest::run(&base).unwrap_or_else(|e| panic!("{base:?}: {e}"));
+        assert_conserved(&base, &single);
+        for n_nodes in [2usize, 4] {
+            let spec = SimSpec { n_nodes, ..base.clone() };
+            let scenario = Scenario::by_name(name, spec.epochs, spec.seed).unwrap();
+            let a = simtest::run(&spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+            assert_conserved(&spec, &a);
+
+            // Round-robin spread: group gi lives on node gi % N for the
+            // whole migration-free run, and nothing ever moves.
+            for (gi, g) in a.report.stats.per_group.iter().enumerate() {
+                assert_eq!(
+                    g.node_now,
+                    format!("node{}", gi % n_nodes),
+                    "{name} x {n_nodes} nodes: group {gi} hosted off its home node"
+                );
+                assert_eq!(g.migrated, 0, "{name}: migration-free run migrated");
+            }
+
+            // Node-count invariance, bit for bit: same loads, same
+            // decisions, same published epoch records as the 1-node run.
+            assert_eq!(
+                a.report.epoch_records, single.report.epoch_records,
+                "{name} x {n_nodes} nodes: epoch trace diverged from the 1-node fleet"
+            );
+            assert_eq!(
+                a.report.decision_records, single.report.decision_records,
+                "{name} x {n_nodes} nodes: decision log diverged from the 1-node fleet"
+            );
+
+            // Run-to-run bitwise determinism at N > 1.
+            let b = simtest::run(&spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+            let ja = simtest::trace_json(&spec, &scenario, &a.report).to_string_compact();
+            let jb = simtest::trace_json(&spec, &scenario, &b.report).to_string_compact();
+            assert_eq!(ja, jb, "{name} x {n_nodes} nodes: replay diverged");
+        }
+    }
+}
+
+#[test]
+fn scripted_migrations_execute_as_planned_and_conserve_work() {
+    // A coherent scripted plan over a 3-node mixed-tenant fleet: every
+    // move departs where the plan expects (the chained generator
+    // guarantees it), so the executed count equals the plan exactly and
+    // the drain hands every queued request to the destination.
+    for seed in [3u64, 11, 2019] {
+        let mut spec = SimSpec {
+            scenario: "mixed-tenant".into(),
+            epochs: 12,
+            n_nodes: 3,
+            seed,
+            ..SimSpec::default()
+        };
+        let scenario = Scenario::by_name(&spec.scenario, spec.epochs, spec.seed).unwrap();
+        spec.migrations =
+            MigrationPlan::scripted(seed, scenario.tenants.len(), spec.n_nodes, spec.epochs);
+        spec.migrations
+            .validate(scenario.tenants.len(), spec.n_nodes)
+            .unwrap_or_else(|e| panic!("seed {seed}: scripted plan invalid: {e}"));
+
+        let out = simtest::run(&spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+        assert_conserved(&spec, &out);
+        assert_eq!(
+            out.report.stats.migrated,
+            spec.migrations.moves.len() as u64,
+            "{spec:?}: executed migrations diverged from the scripted plan"
+        );
+        let migrated: u64 = out.report.stats.per_group.iter().map(|g| g.migrated).sum();
+        assert_eq!(out.report.stats.migrated, migrated, "{spec:?}: migrated aggregation");
+
+        // The epoch trace travels with the controller: records stay in
+        // strictly increasing epoch order across every hand-off (an
+        // adoption may cost one epoch of records, never reorder them).
+        for (gi, records) in out.report.epoch_records.iter().enumerate() {
+            assert!(!records.is_empty(), "{spec:?}: group {gi} trace lost in migration");
+            for w in records.windows(2) {
+                assert!(
+                    w[0].epoch < w[1].epoch,
+                    "{spec:?}: group {gi} trace reordered across a hand-off"
+                );
+            }
+        }
+
+        // Migrations stay inside the bitwise replay contract.
+        let again = simtest::run(&spec).unwrap_or_else(|e| panic!("{spec:?}: {e}"));
+        let ja = simtest::trace_json(&spec, &scenario, &out.report).to_string_compact();
+        let jb = simtest::trace_json(&spec, &scenario, &again.report).to_string_compact();
+        assert_eq!(ja, jb, "seed {seed}: migrating replay diverged");
+    }
+}
+
+#[test]
+fn single_node_specs_keep_the_legacy_golden_keys_and_trace_bytes() {
+    // The 1-node path is the pre-topology coordinator, bit for bit: its
+    // golden stem carries no node suffix and its trace JSON carries no
+    // topology header fields, so every committed golden survives PR 7
+    // unchanged.
+    let spec = SimSpec { epochs: 6, ..SimSpec::default() };
+    assert_eq!(spec.golden_stem(), "overnight_hybrid");
+    let scenario = Scenario::by_name(&spec.scenario, spec.epochs, spec.seed).unwrap();
+    let out = simtest::run(&spec).unwrap();
+    let text = simtest::trace_json(&spec, &scenario, &out.report).to_string_compact();
+    assert!(!text.contains("n_nodes"), "1-node trace must not grow topology fields");
+    assert!(!text.contains("migrations"), "1-node trace must not grow a migration field");
+
+    // Multi-node specs get their own golden namespace and do publish the
+    // topology header.
+    let spec4 = SimSpec { n_nodes: 4, ..spec.clone() };
+    assert_eq!(spec4.golden_stem(), "overnight_hybrid_n4");
+    let out4 = simtest::run(&spec4).unwrap();
+    let text4 = simtest::trace_json(&spec4, &scenario, &out4.report).to_string_compact();
+    assert!(text4.contains("\"n_nodes\""), "multi-node trace must record the layout");
+    assert!(text4.contains("\"migrations\""), "multi-node trace must record the plan");
+}
