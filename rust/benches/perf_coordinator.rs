@@ -5,7 +5,12 @@
 //! deterministic native backend otherwise, so it runs in any environment.
 //! The interesting number is submit() cost: with per-instance shard queues
 //! it must stay flat (or improve) as n_instances grows, where the old
-//! single global mutex queue degraded under contention.
+//! single global mutex queue degraded under contention. Since ISSUE 8 the
+//! shard queue's hot path is a lock-free MPMC ring (DESIGN.md S22) — a
+//! submit is one length CAS plus one ring-slot claim, with the staging
+//! mutex touched only by consumers — so this sweep doubles as the
+//! mutex-vs-ring acceptance gate: the 8-instance µs/req must stay flat or
+//! better against the committed baseline.
 
 mod common;
 

@@ -30,6 +30,7 @@ fn main() {
         wall_clock_serving();
     }
     virtual_time_sweep();
+    batch_knob_sweep();
 }
 
 /// Part one: live wall-clock serving of a 2-group fleet (submit-path
@@ -187,4 +188,45 @@ fn virtual_time_sweep() {
         Ok(p) => println!("[json] {} (coordinator perf baseline)", p.display()),
         Err(e) => eprintln!("[json] failed to write BENCH_coordinator.json: {e}"),
     }
+}
+
+/// Fixed vs adaptive dispatch batch (DESIGN.md S22) on the live virtual
+/// fleet: every named scenario under hybrid capacity, knob off then on.
+/// The adaptive CC grows batches while downclocked, so the interesting
+/// columns are energy and violations at trough exits / surge onsets.
+fn batch_knob_sweep() {
+    section("perf: batch knob (fixed vs adaptive dispatch batch, hybrid)");
+    let mut rows = vec![wavescale::report::row([
+        "scenario", "batch", "energy_j", "gain", "violations%", "p99_ms", "wall_ms",
+    ])];
+    for name in Scenario::NAMES {
+        let mut energies = Vec::with_capacity(2);
+        for adaptive in [false, true] {
+            let spec = SimSpec { adaptive_batch: adaptive, ..SimSpec::golden(name) };
+            let out = simtest::run(&spec).expect("batch-knob replay");
+            let s = &out.report.stats;
+            let worst_p99 = s
+                .per_group
+                .iter()
+                .map(|g| g.p99_latency_s)
+                .fold(0.0f64, f64::max);
+            energies.push(s.energy_j);
+            rows.push(vec![
+                name.to_string(),
+                if adaptive { "adaptive".into() } else { "fixed".to_string() },
+                format!("{:.3}", s.energy_j),
+                format!("{:.3}", s.power_gain),
+                format!("{:.2}", s.violation_rate * 100.0),
+                format!("{:.2}", worst_p99 * 1e3),
+                format!("{:.2}", out.wall.as_secs_f64() * 1e3),
+            ]);
+        }
+        println!(
+            "  {name:<16} fixed {:8.3} J | adaptive {:8.3} J | delta {:+.2}%",
+            energies[0],
+            energies[1],
+            (energies[1] / energies[0].max(1e-12) - 1.0) * 100.0
+        );
+    }
+    common::emit_csv("BENCH_batch_knob.csv", &rows);
 }

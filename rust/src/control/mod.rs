@@ -85,6 +85,14 @@ pub struct Decision {
     pub vbram: f64,
     /// Instances to keep active (the rest are gated).
     pub n_active: usize,
+    /// Requests per dispatched inference batch for the next step/epoch.
+    /// Fixed at [`ControlConfig::batch_nominal`] unless
+    /// [`ControlConfig::adaptive_batch`] is set, in which case low
+    /// frequency ratios get proportionally bigger batches (amortize
+    /// `cycles_per_batch` overhead when cycles are slow and latency
+    /// headroom is already spent) while full frequency keeps the nominal
+    /// latency-bounding batch.
+    pub batch: usize,
     /// Name of the prediction source that produced `predicted` (the
     /// ensemble reports its active member, never "ensemble").
     pub predictor: &'static str,
@@ -105,10 +113,32 @@ impl Decision {
             vcore: self.vcore,
             vbram: self.vbram,
             n_active: self.n_active,
+            batch: self.batch,
             predictor: self.predictor,
             margin: self.margin,
         }
     }
+}
+
+/// Throughput multiplier of serving batches of `batch` requests instead
+/// of the nominal `batch_nominal`, with `overhead` per-dispatch overhead
+/// cycles expressed as a fraction of `cycles_per_batch` (DESIGN.md S22).
+///
+/// Model: one dispatch of `b` requests costs
+/// `cycles_per_batch * (b/b0 + overhead)` cycles — work scales with
+/// fill, the overhead (weight/DMA setup, pipeline refill) is paid once
+/// per dispatch. Relative to the nominal batch the delivered
+/// requests-per-cycle ratio is `(1 + ov) / (1 + ov * b0 / b)`.
+///
+/// `batch == batch_nominal` returns **exactly** 1.0 (early return, no
+/// float round-trip), so fixed-batch runs multiply capacities by the
+/// identity and stay bit-identical to the pre-knob traces.
+pub fn batch_amortization(batch: usize, batch_nominal: usize, overhead: f64) -> f64 {
+    if batch == batch_nominal {
+        return 1.0;
+    }
+    let (b, b0) = (batch.max(1) as f64, batch_nominal.max(1) as f64);
+    (1.0 + overhead) / (1.0 + overhead * b0 / b)
 }
 
 /// The decision columns shared by the offline `platform::StepRecord` and
@@ -130,6 +160,8 @@ pub struct DecisionRecord {
     pub vbram: f64,
     /// Active (non-gated) instances.
     pub n_active: usize,
+    /// Requests per dispatched inference batch.
+    pub batch: usize,
     /// Prediction source (the ensemble reports its active member).
     pub predictor: &'static str,
     /// Throughput margin applied.
@@ -154,6 +186,16 @@ pub struct ControlConfig {
     /// `Some(target)` enables the adaptive QoS-feedback guardband
     /// (DESIGN.md S7.1); `None` keeps the static `margin_t`.
     pub qos_target: Option<f64>,
+    /// Nominal requests per dispatched inference batch (the backend's
+    /// native geometry; every decision publishes this when
+    /// `adaptive_batch` is off).
+    pub batch_nominal: usize,
+    /// Treat batch size as a control knob: scale the published batch
+    /// inversely with the decided frequency ratio (clamped to
+    /// `[batch_nominal, 4 * batch_nominal]`) so slow, low-voltage epochs
+    /// amortize per-dispatch overhead while full-frequency epochs keep
+    /// the nominal latency-bounding batch.
+    pub adaptive_batch: bool,
 }
 
 impl Default for ControlConfig {
@@ -165,6 +207,8 @@ impl Default for ControlConfig {
             predictor: PredictorKind::Markov,
             predictor_period: 96,
             qos_target: None,
+            batch_nominal: 16,
+            adaptive_batch: false,
         }
     }
 }
@@ -483,12 +527,29 @@ impl GroupController {
             vcore,
             vbram,
             n_active,
+            batch: self.batch_for(freq_ratio),
             predictor: self.predictor.active_name(),
             mispredicted,
             under_predicted,
         };
         self.log.push(d.record());
         d
+    }
+
+    /// The batch size to publish for an epoch decided at `freq_ratio`:
+    /// the nominal backend geometry under the fixed policy; inversely
+    /// proportional to the frequency ratio (clamped to `[b0, 4*b0]`)
+    /// under `adaptive_batch`. A half-speed epoch doubles the batch —
+    /// each dispatch's fixed overhead is amortized over twice the
+    /// requests exactly when cycles are slowest and the per-request
+    /// latency budget is already being spent on clock stretch; at full
+    /// frequency the clamp floor keeps the latency-bounding nominal.
+    fn batch_for(&self, freq_ratio: f64) -> usize {
+        let b0 = self.cfg.batch_nominal.max(1);
+        if !self.cfg.adaptive_batch || freq_ratio <= 0.0 {
+            return b0;
+        }
+        ((b0 as f64 / freq_ratio).round() as usize).clamp(b0, 4 * b0)
     }
 }
 
@@ -758,6 +819,80 @@ mod tests {
             let d = ctl.decide(&Observation { load: 0.1, qos_violation: false, backlog: 0.0 });
             assert_eq!(d.n_active, 6, "pure DVFS never gates");
         }
+    }
+
+    #[test]
+    fn fixed_batch_policy_always_publishes_nominal() {
+        let opt = optimizer();
+        let mut ctl = GroupController::new(
+            ControlConfig { warmup: 0, ..ControlConfig::default() },
+            &opt,
+            elastic_spec(),
+        );
+        for load in [0.05, 0.35, 0.65, 0.95] {
+            let d = ctl.decide(&Observation { load, qos_violation: false, backlog: 0.0 });
+            assert_eq!(d.batch, 16, "fixed policy must publish the nominal batch");
+            assert_eq!(d.record().batch, 16, "record carries the batch column");
+        }
+    }
+
+    #[test]
+    fn adaptive_batch_scales_inversely_with_frequency() {
+        // Pure DVFS must serve a low bin by downclocking (capacity is
+        // freq_ratio alone — no gating escape hatch), so the adaptive
+        // batch law is observable without depending on which shape the
+        // hybrid optimizer happens to pick.
+        let opt = optimizer();
+        let mut ctl = GroupController::new(
+            ControlConfig {
+                warmup: 0,
+                adaptive_batch: true,
+                ..ControlConfig::default()
+            },
+            &opt,
+            LutSpec::Dvfs {
+                mode: Mode::Proposed,
+                n_instances: 4,
+                latency_cap_sw: f64::INFINITY,
+            },
+        );
+        let obs = |load| Observation { load, qos_violation: false, backlog: 0.0 };
+        let low = ctl.decide_with_oracle(&obs(0.12), Some(0.12));
+        assert!(
+            low.freq_ratio < 1.0 - 1e-9,
+            "DVFS at a low bin must downclock: {low:?}"
+        );
+        assert!(low.batch > 16, "downclocked epochs must batch bigger: {low:?}");
+        assert!(low.batch <= 64, "clamped at 4x nominal");
+        // The exact law: round(b0 / freq_ratio), clamped to [b0, 4*b0].
+        let want = ((16.0 / low.freq_ratio).round() as usize).clamp(16, 64);
+        assert_eq!(low.batch, want);
+        // A top-bin forecast forces full frequency -> nominal batch.
+        let high = ctl.decide_with_oracle(&obs(0.97), Some(0.97));
+        assert!((high.freq_ratio - 1.0).abs() < 1e-9, "top bin runs full speed: {high:?}");
+        assert_eq!(high.batch, 16, "full frequency keeps the latency-bounding nominal");
+    }
+
+    #[test]
+    fn batch_amortization_is_exact_at_nominal_and_monotone() {
+        // Identity at the nominal batch must be *exact* (fixed-batch
+        // traces multiply capacity by it every step).
+        assert_eq!(batch_amortization(16, 16, 0.1).to_bits(), 1.0f64.to_bits());
+        assert_eq!(batch_amortization(1, 1, 0.25).to_bits(), 1.0f64.to_bits());
+        // Bigger batches amortize more; the gain is bounded by 1 + ov.
+        let ov = 0.1;
+        let mut prev = batch_amortization(16, 16, ov);
+        for b in [20, 24, 32, 48, 64, 128] {
+            let a = batch_amortization(b, 16, ov);
+            assert!(a > prev, "amortization must rise with batch: {b} -> {a}");
+            assert!(a < 1.0 + ov + 1e-12, "gain bounded by the overhead itself");
+            prev = a;
+        }
+        // Sub-nominal batches pay the overhead over fewer requests.
+        assert!(batch_amortization(8, 16, ov) < 1.0);
+        assert!(batch_amortization(1, 16, ov) < batch_amortization(8, 16, ov));
+        // Zero overhead means batch size cannot matter.
+        assert!((batch_amortization(64, 16, 0.0) - 1.0).abs() < 1e-15);
     }
 
     #[test]

@@ -59,11 +59,23 @@ impl Dispatcher {
         self.policy
     }
 
+    /// Last-resort pick when a racy gated-flag scan came up empty: re-scan
+    /// once and prefer *any* ungated shard over the blind shard-0
+    /// fallback. Under a board-0 failure plan the old unconditional
+    /// fallback routed the racing submit onto the failed shard, stranding
+    /// it until the next CC epoch drain; shard 0 is now chosen only when
+    /// the re-scan confirms every shard reads gated (the CC never gates
+    /// all instances, so that state is itself a transient race).
+    fn fallback(shards: &[Arc<ShardQueue>]) -> usize {
+        shards.iter().position(|s| !s.is_gated()).unwrap_or(0)
+    }
+
     /// Choose a shard index for the next request. Gated shards (elastic
     /// capacity manager, DESIGN.md S6.1) are skipped — their worker is
     /// parked, so routing to them would strand the request until the next
-    /// CC drain. Falls back to shard 0 if every shard reads gated (the CC
-    /// never gates all instances, but the flags are read racily).
+    /// CC drain. The gated flags are read racily; when a scan comes up
+    /// empty the pick re-scans once ([`Dispatcher::fallback`]) before
+    /// settling on shard 0.
     pub fn pick(&self, shards: &[Arc<ShardQueue>]) -> usize {
         debug_assert!(!shards.is_empty());
         match self.policy {
@@ -73,7 +85,7 @@ impl Dispatcher {
                 // the next active shard, skewing its queue depth.
                 let active = shards.iter().filter(|s| !s.is_gated()).count();
                 if active == 0 {
-                    return 0;
+                    return Self::fallback(shards);
                 }
                 let k = self.cursor.fetch_add(1, Ordering::Relaxed) % active;
                 shards
@@ -82,9 +94,9 @@ impl Dispatcher {
                     .filter(|(_, s)| !s.is_gated())
                     .nth(k)
                     .map(|(i, _)| i)
-                    // Gating flags moved between count and scan: any
-                    // active shard is fine.
-                    .unwrap_or(0)
+                    // Gating flags moved between count and scan: take any
+                    // still-active shard rather than blind shard 0.
+                    .unwrap_or_else(|| Self::fallback(shards))
             }
             DispatchPolicy::LeastLoaded => {
                 let mut best = None;
@@ -99,7 +111,7 @@ impl Dispatcher {
                         best = Some(i);
                     }
                 }
-                best.unwrap_or(0)
+                best.unwrap_or_else(|| Self::fallback(shards))
             }
         }
     }
@@ -148,6 +160,52 @@ mod tests {
         s[2].set_gated(true);
         assert_eq!(ll.pick(&s), 0);
         assert_eq!(rr.pick(&s), 0);
+    }
+
+    #[test]
+    fn pick_avoids_the_failed_board_under_the_canonical_board_0_plan() {
+        use crate::workload::FaultPlan;
+
+        // The canonical board-failure plan over a single-instance layout
+        // fails board 0 for the middle third of the run; mirror the CC's
+        // gate pass onto shard 0 of a 3-shard group.
+        let plan = FaultPlan::for_scenario("board-failure", 1, 1, 48);
+        let mid_epoch = 24;
+        assert!(plan.board_failed(0, 0, mid_epoch), "canonical plan must fail board 0");
+        let s = shards(3);
+        s[0].set_failed(true);
+        s[0].set_gated(true);
+
+        // Deterministic: neither policy may route onto the failed board.
+        for d in [
+            Dispatcher::new(DispatchPolicy::RoundRobin),
+            Dispatcher::new(DispatchPolicy::LeastLoaded),
+        ] {
+            for _ in 0..32 {
+                assert_ne!(d.pick(&s), 0, "{}: picked the failed board", d.policy().name());
+            }
+        }
+
+        // Racy: a CC-like thread toggles shard 1's gate while submits
+        // race it. The old empty-scan fallback returned shard 0 — the
+        // failed board — whenever the gated-flag count and scan straddled
+        // a toggle; the re-scan fallback must always land on an ungated
+        // sibling instead (shard 2 stays active throughout).
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let (s2, stop2) = (s.clone(), stop.clone());
+        let toggler = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                s2[1].set_gated(true);
+                s2[1].set_gated(false);
+            }
+        });
+        let rr = Dispatcher::new(DispatchPolicy::RoundRobin);
+        for _ in 0..5000 {
+            let pick = rr.pick(&s);
+            assert_ne!(pick, 0, "round-robin raced onto the failed board");
+        }
+        stop.store(true, Ordering::Relaxed);
+        toggler.join().unwrap();
     }
 
     #[test]

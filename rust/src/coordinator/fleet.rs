@@ -117,6 +117,9 @@ pub enum ConfigError {
     /// The rebalancer config is unusable (zero sustain or a negative
     /// backlog threshold).
     BadRebalance(String),
+    /// The batch knob is unusable (zero nominal batch or a non-finite /
+    /// negative dispatch overhead).
+    BadBatch(String),
 }
 
 impl std::fmt::Display for ConfigError {
@@ -143,6 +146,7 @@ impl std::fmt::Display for ConfigError {
             ConfigError::BadFaultPlan(why) => write!(f, "fault plan: {why}"),
             ConfigError::BadMigrationPlan(why) => write!(f, "migration plan: {why}"),
             ConfigError::BadRebalance(why) => write!(f, "rebalance config: {why}"),
+            ConfigError::BadBatch(why) => write!(f, "batch config: {why}"),
         }
     }
 }
@@ -162,6 +166,22 @@ pub struct FleetServingConfig {
     pub batch_timeout: Duration,
     /// Cycles one batch occupies an instance (service time = cycles / f).
     pub cycles_per_batch: f64,
+    /// Nominal requests per dispatched inference batch (the backend's
+    /// native geometry; the offline twin is
+    /// `PlatformConfig::batch_nominal`).
+    pub batch_nominal: usize,
+    /// Treat batch size as a per-epoch control decision (DESIGN.md S22):
+    /// each group's CC publishes bigger batches at low frequency ratios
+    /// to amortize per-dispatch overhead, nominal at full speed. Off by
+    /// default — fixed-batch fleets replay pre-knob traces byte-for-byte
+    /// (the amortization multiplier is an exact 1.0 at the nominal).
+    pub adaptive_batch: bool,
+    /// Per-dispatch overhead as a fraction of `cycles_per_batch` (weight
+    /// swap / DMA setup / pipeline refill) — what
+    /// [`batch_amortization`](crate::control::batch_amortization) trades
+    /// against batch size, in the worker's service-time charge and the
+    /// CC's capacity model alike.
+    pub batch_overhead: f64,
     /// Voltage mode for every group's CC decisions.
     pub mode: Mode,
     /// Query the AOT'd Pallas Voltage Selector through PJRT when it is
@@ -243,6 +263,9 @@ impl Default for FleetServingConfig {
             queue_capacity: 4096,
             batch_timeout: Duration::from_millis(5),
             cycles_per_batch: 2.0e5,
+            batch_nominal: 16,
+            adaptive_batch: false,
+            batch_overhead: 0.1,
             mode: Mode::Proposed,
             selector_via_pjrt: true,
             m_bins: 10,
@@ -346,6 +369,15 @@ impl FleetServingConfig {
                 )));
             }
         }
+        if self.batch_nominal == 0 {
+            return Err(ConfigError::BadBatch("batch_nominal must be >= 1".into()));
+        }
+        if !(self.batch_overhead >= 0.0 && self.batch_overhead.is_finite()) {
+            return Err(ConfigError::BadBatch(format!(
+                "batch_overhead {} must be finite and >= 0",
+                self.batch_overhead
+            )));
+        }
         Ok(())
     }
 }
@@ -362,6 +394,12 @@ pub(super) struct GroupShared {
     pub(super) in_dim: usize,
     pub(super) out_dim: usize,
     pub(super) batch: usize,
+    /// Requests per dispatched batch the CC currently asks workers to
+    /// claim (DESIGN.md S22): the configured nominal unless
+    /// `adaptive_batch` publishes a bigger one at low frequency. Distinct
+    /// from `batch`, the backend artifact's fixed tensor geometry —
+    /// workers chunk a claimed set into `batch`-sized dispatches.
+    pub(super) batch_now: AtomicU64,
     pub(super) freq_ratio: AtomicU64,
     pub(super) vcore_mv: AtomicU64,
     pub(super) vbram_mv: AtomicU64,
@@ -462,6 +500,9 @@ pub struct GroupServingStats {
     pub vbram_now: f64,
     /// Instances currently active (not gated by the elastic manager).
     pub active_now: usize,
+    /// Requests per dispatched batch the CC currently publishes (the
+    /// configured nominal unless `adaptive_batch` is on).
+    pub batch_now: usize,
     /// Throughput margin the CC currently applies (static `margin_t` or
     /// the adaptive guardband's ladder level).
     pub margin_now: f64,
@@ -595,6 +636,7 @@ impl FleetServing {
                 in_dim: probe.in_dim(),
                 out_dim: probe.out_dim(),
                 batch: probe.batch(),
+                batch_now: AtomicU64::new(cfg.batch_nominal.max(1) as u64),
                 freq_ratio: AtomicU64::new(1.0f64.to_bits()),
                 vcore_mv: AtomicU64::new(800),
                 vbram_mv: AtomicU64::new(950),
@@ -885,6 +927,7 @@ impl FleetServing {
             vcore_now: g.vcore_mv.load(Ordering::Relaxed) as f64 / 1000.0,
             vbram_now: g.vbram_mv.load(Ordering::Relaxed) as f64 / 1000.0,
             active_now: g.active_now.load(Ordering::Relaxed) as usize,
+            batch_now: g.batch_now.load(Ordering::Relaxed) as usize,
             margin_now: f64::from_bits(g.margin_now.load(Ordering::Relaxed)),
             predictor_now: {
                 let idx = g.predictor_now.load(Ordering::Relaxed) as usize;
@@ -1171,6 +1214,13 @@ mod tests {
             ..Default::default()
         };
         assert!(matches!(cfg.validate(), Err(ConfigError::BadRebalance(_))));
+        // A zero nominal batch and a negative/NaN overhead are refused.
+        let cfg = FleetServingConfig { batch_nominal: 0, ..Default::default() };
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadBatch(_))));
+        let cfg = FleetServingConfig { batch_overhead: -0.1, ..Default::default() };
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadBatch(_))));
+        let cfg = FleetServingConfig { batch_overhead: f64::NAN, ..Default::default() };
+        assert!(matches!(cfg.validate(), Err(ConfigError::BadBatch(_))));
         // The default config is valid.
         FleetServingConfig::default().validate().unwrap();
     }

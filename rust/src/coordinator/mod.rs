@@ -2,10 +2,10 @@
 //! (DESIGN.md S11).
 //!
 //! Layer-3 topology (Fig. 9 adapted to a serving framework):
-//!   * per-instance bounded **shard queues** with lock-free depth mirrors,
-//!     least-loaded/round-robin dispatch and work stealing on idle workers
-//!     (DESIGN.md S11.2–S11.3) — the old single global `Mutex<VecDeque>`
-//!     queue is gone,
+//!   * per-instance bounded **shard queues** over a lock-free MPMC ring
+//!     (DESIGN.md S22) with exact depth mirrors, least-loaded/round-robin
+//!     dispatch and work stealing on idle workers (DESIGN.md S11.2–S11.3)
+//!     — the old single global `Mutex<VecDeque>` queue is gone,
 //!   * one worker thread per simulated FPGA instance, each executing the
 //!     benchmark's AOT-compiled DNN artifact through its own PJRT client —
 //!     or the deterministic native backend when PJRT/artifacts are absent
@@ -330,6 +330,10 @@ impl Coordinator {
         design: DesignPower,
         optimizer: Optimizer,
     ) -> Result<Self> {
+        // Batch-knob fields keep their fleet defaults: the single-tenant
+        // facade predates the adaptive-batch controller and stays on the
+        // fixed nominal geometry (DESIGN.md S22).
+        let batch_defaults = FleetServingConfig::default();
         let fleet_cfg = FleetServingConfig {
             groups: vec![GroupConfig {
                 benchmark: cfg.variant.clone(),
@@ -341,6 +345,9 @@ impl Coordinator {
             queue_capacity: cfg.queue_capacity,
             batch_timeout: cfg.batch_timeout,
             cycles_per_batch: cfg.cycles_per_batch,
+            batch_nominal: batch_defaults.batch_nominal,
+            adaptive_batch: batch_defaults.adaptive_batch,
+            batch_overhead: batch_defaults.batch_overhead,
             mode: cfg.mode,
             selector_via_pjrt: cfg.selector_via_pjrt,
             m_bins: cfg.m_bins,

@@ -34,7 +34,9 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::clock::{self, ActorScope};
-use crate::control::{ControlConfig, GroupController, LutSpec, Observation, QosTier};
+use crate::control::{
+    batch_amortization, ControlConfig, GroupController, LutSpec, Observation, QosTier,
+};
 use crate::markov::PredictorKind;
 use crate::metrics::{Gauge, Registry};
 use crate::power::DesignPower;
@@ -149,6 +151,7 @@ pub(super) fn spawn_worker(
     let stop = env.stop.clone();
     let fleet_completed = env.registry.counter("fleet.completed");
     let cycles = env.cfg.cycles_per_batch;
+    let overhead = env.cfg.batch_overhead;
     let batch_timeout = env.cfg.batch_timeout;
     let steal = env.cfg.steal;
     let faults = env.cfg.faults.clone();
@@ -164,8 +167,12 @@ pub(super) fn spawn_worker(
         let _actor = ActorScope::attach(&clock, actor);
         let shards = &node.slices[gi].shards;
         let backend = InferenceBackend::open(&dir, &g.name);
-        let batch_cap = backend.batch();
+        // The artifact's fixed tensor geometry — the chunk size every
+        // dispatch is padded to. The *claim target* is the CC's decided
+        // batch (DESIGN.md S22), read fresh each iteration below.
+        let geometry = backend.batch();
         let in_dim = backend.in_dim();
+        let out_dim = backend.out_dim();
         loop {
             // Gated instance (scaled down, failed, or a non-hosting
             // node's replica): park on the shard condvar until the CC
@@ -175,7 +182,11 @@ pub(super) fn spawn_worker(
                 shards[wid].park_while_gated(Duration::from_millis(25));
                 continue;
             }
-            let (mut reqs, stolen) = claim_batch(shards, wid, batch_cap, batch_timeout, steal);
+            // Honor the CC's decided batch: claim up to it (never below
+            // the artifact geometry — a smaller claim would just pad).
+            let claim_cap =
+                (g.batch_now.load(Ordering::Relaxed) as usize).max(geometry).max(1);
+            let (mut reqs, stolen) = claim_batch(shards, wid, claim_cap, batch_timeout, steal);
             if stolen {
                 g.stolen_batches.inc();
             }
@@ -201,40 +212,68 @@ pub(super) fn spawn_worker(
                 continue;
             }
             // Top up a partial batch without waiting.
-            if reqs.len() < batch_cap {
-                reqs.extend(shards[wid].pop_upto(batch_cap - reqs.len()));
+            if reqs.len() < claim_cap {
+                reqs.extend(shards[wid].pop_upto(claim_cap - reqs.len()));
             }
 
             // ---- real inference (PJRT or native) -----------
-            let mut x = vec![0.0f32; batch_cap * in_dim];
-            for (i, r) in reqs.iter().enumerate() {
-                x[i * in_dim..(i + 1) * in_dim].copy_from_slice(&r.payload);
-            }
-            // A failing backend must not kill the worker: a dead worker
-            // leaves its shard undrained and shutdown() would wait on it
-            // forever. Count and move on.
-            let y = match backend.infer(&x) {
-                Ok(y) => y,
-                Err(_) => {
-                    g.failed.add(reqs.len() as u64);
-                    continue;
+            // The decided batch can exceed the artifact's fixed tensor
+            // geometry, so the claimed set is dispatched in
+            // geometry-sized chunks, each padded to the full shape the
+            // backend demands. A failing backend must not kill the
+            // worker — a dead worker leaves its shard undrained and
+            // shutdown() would wait on it forever — so failed chunks are
+            // counted and skipped while the rest of the set proceeds.
+            let n_chunks = reqs.len().div_ceil(geometry);
+            let mut chunk_ok = vec![false; n_chunks];
+            let mut y0 = vec![0.0f32; reqs.len()];
+            let mut served = 0usize;
+            for (ci, chunk) in reqs.chunks(geometry).enumerate() {
+                let mut x = vec![0.0f32; geometry * in_dim];
+                for (i, r) in chunk.iter().enumerate() {
+                    x[i * in_dim..(i + 1) * in_dim].copy_from_slice(&r.payload);
                 }
-            };
+                match backend.infer(&x) {
+                    Ok(y) => {
+                        chunk_ok[ci] = true;
+                        served += chunk.len();
+                        for i in 0..chunk.len() {
+                            y0[ci * geometry + i] = y[i * out_dim];
+                        }
+                    }
+                    Err(_) => g.failed.add(chunk.len() as u64),
+                }
+            }
+            if served == 0 {
+                continue;
+            }
 
             // ---- simulated FPGA occupancy ------------------
-            // A straggler window stretches this shard's service time by
-            // the plan's slowdown; outside a window (and on the empty
-            // plan) the factor is exactly 1.0, so the multiply is
-            // bitwise-neutral. Fault-plan indices are (group, shard), so
-            // the window follows the shard wherever the group is hosted.
+            // Service scales with batch *fill* (a 1-request dispatch no
+            // longer pays the full cycles_per_batch the offline model
+            // never charged it), plus a per-dispatch overhead fraction;
+            // the (1 + overhead) normalizer keeps a full nominal batch
+            // at exactly the classic cycles / f charge, so the realized
+            // per-instance rate is (F_NOM/cycles)·geometry·fr times the
+            // same batch_amortization factor the CC's capacity model
+            // applies (DESIGN.md S22). A straggler window stretches the
+            // service time by the plan's slowdown; outside a window the
+            // factor is exactly 1.0. Fault-plan indices are
+            // (group, shard), so the window follows the shard wherever
+            // the group is hosted.
             let fr = g.freq_ratio().max(0.05);
             let slow =
                 faults.straggler_slowdown(gi, wid, clock::epoch_index(clock.now(), epoch_len));
-            let service = cycles / (F_NOM_HZ * fr) * slow;
+            let fill = served as f64 / geometry as f64;
+            let service =
+                cycles * (fill + overhead) / ((1.0 + overhead) * F_NOM_HZ * fr) * slow;
             clock.sleep(Duration::from_secs_f64(service));
 
             let now = clock.now();
             for (i, r) in reqs.iter().enumerate() {
+                if !chunk_ok[i / geometry] {
+                    continue;
+                }
                 let lat_ticks = now.saturating_sub(r.submitted);
                 g.latency_us.observe(lat_ticks as f64 / 1e3);
                 g.completed.inc();
@@ -243,7 +282,7 @@ pub(super) fn spawn_worker(
                     id: r.id,
                     worker: wid,
                     latency: clock::to_duration(lat_ticks),
-                    y0: y[i * backend.out_dim()],
+                    y0: y0[i],
                 };
             }
         }
@@ -314,6 +353,10 @@ pub(super) struct GroupCc {
     /// Straggler capacity factor of the serving set (exactly 1.0
     /// without straggler windows).
     served_slow: f64,
+    /// Batch size that served the epoch now ending (decided at the end
+    /// of the previous pass; the nominal until the first adaptive
+    /// decision lands). Mirrors the offline plant's `batch` field.
+    served_batch: usize,
     /// Last published margin / predictor index — re-seeds the adopting
     /// node's gauges so a hand-off never rewinds the published surface.
     last_margin: f64,
@@ -354,6 +397,8 @@ impl GroupCc {
                 // guardband (DESIGN.md S20); qos_target None keeps every
                 // baseline bit-identical regardless of tier.
                 qos_target: QosTier::effective(cfg.qos_target, cfg.groups[gi].qos_target),
+                batch_nominal: cfg.batch_nominal,
+                adaptive_batch: cfg.adaptive_batch,
             },
             &optimizer,
             LutSpec::Elastic {
@@ -390,6 +435,7 @@ impl GroupCc {
                 let all: Vec<usize> = (0..g.n_instances).collect();
                 cfg.faults.capacity_factor(gi, &all, 0)
             },
+            served_batch: cfg.batch_nominal.max(1),
             last_margin: cfg.margin_t,
             last_predictor_idx,
             records: Vec::new(),
@@ -427,8 +473,14 @@ impl GroupCc {
         // (`served_healthy <= served_active`) and straggler windows
         // scale it by the mean service-rate factor; both are exactly
         // neutral on an empty fault plan.
-        let served_cap =
-            self.served_fr * (self.served_healthy as f64 / g.n_instances as f64) * self.served_slow;
+        // Batch amortization multiplies LAST (DESIGN.md S22): it is an
+        // exact 1.0 at the nominal batch and the offline plant appends
+        // the same factor to the same product shape, so fixed-batch runs
+        // and the cross-path equivalence contract stay bit-identical.
+        let served_cap = self.served_fr
+            * (self.served_healthy as f64 / g.n_instances as f64)
+            * self.served_slow
+            * batch_amortization(self.served_batch, cfg.batch_nominal, cfg.batch_overhead);
         let demand = load + self.backlog;
         let delivered = demand.min(served_cap);
         self.backlog = (demand - delivered).min(cfg.max_backlog_steps);
@@ -504,6 +556,7 @@ impl GroupCc {
                 vcore: self.served_vcore,
                 vbram: self.served_vbram,
                 n_active: self.served_active,
+                batch: self.served_batch,
                 predictor: d.predictor,
                 margin: d.margin,
             },
@@ -517,6 +570,9 @@ impl GroupCc {
         g.vcore_mv.store(volts_to_mv(vcore_next), Ordering::Relaxed);
         g.vbram_mv.store(volts_to_mv(vbram_next), Ordering::Relaxed);
         g.active_now.store(d.n_active as u64, Ordering::Relaxed);
+        // Workers read this as their claim target: the decided batch for
+        // the next epoch (the nominal whenever adaptive_batch is off).
+        g.batch_now.store(d.batch as u64, Ordering::Relaxed);
         g.margin_now.store(d.margin.to_bits(), Ordering::Relaxed);
         g.predictor_now
             .store(PredictorKind::index_of_name(d.predictor) as u64, Ordering::Relaxed);
@@ -588,6 +644,7 @@ impl GroupCc {
         self.served_healthy = active.len();
         self.served_failed = n_failed;
         self.served_slow = cfg.faults.capacity_factor(gi, &active, next_epoch);
+        self.served_batch = d.batch;
     }
 }
 

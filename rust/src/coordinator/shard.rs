@@ -1,10 +1,10 @@
-//! Bounded per-instance shard queues (DESIGN.md S11.2).
+//! Bounded per-instance shard queues (DESIGN.md S11.2, S22).
 //!
 //! The serving path used to funnel every request through one global
 //! `Mutex<VecDeque>`; under many instances the single lock and condvar
 //! become the scaling bottleneck. A [`ShardQueue`] is owned by exactly one
 //! worker (its *home* shard) and bounded individually, so submit-side
-//! backpressure and wakeups touch one shard lock instead of a global one.
+//! backpressure and wakeups touch one shard instead of a global lock.
 //! Idle workers may *steal* from sibling shards (`claim_batch` in
 //! `coordinator::node`) which keeps tail latency flat when the
 //! dispatcher's load estimate lags reality. Stealing — like the shards
@@ -12,8 +12,27 @@
 //! S21): cross-node movement of queued work happens only through a
 //! migration's drain + re-dispatch.
 //!
-//! A relaxed atomic `depth` mirrors the queue length so dispatchers can
-//! pick the least-loaded shard without taking any lock.
+//! # Lock-free core (DESIGN.md S22)
+//!
+//! The hot submit path is **lock-free**: producers enqueue into a bounded
+//! MPMC ring of sequence-stamped slots (Vyukov's scheme — claim a
+//! position with one CAS, publish the payload with one release-store).
+//! `try_push` therefore costs two atomic RMWs and no lock, which is what
+//! `perf_coordinator`'s µs/req-at-8-instances gate measures.
+//!
+//! The consumer side keeps the *exact* deque semantics the model-based
+//! property tests in `tests/sim_properties.rs` pin (FIFO front pops,
+//! back-of-queue stealing, full drains, a depth mirror that is exact
+//! between operations): consumers serialize on a small **staging** deque
+//! — the logical queue is `staging ++ ring` — and *reap* completed ring
+//! slots into it before operating. Reaping preserves ring order, so FIFO
+//! and per-producer order survive; only consumers contend on the staging
+//! lock, never submitters.
+//!
+//! `push_unbounded` (the Central Controller's drain/re-dispatch path) may
+//! exceed both the logical capacity and the physical ring: it overflows
+//! into staging *after* reaping every position claimed before it, which
+//! keeps per-producer FIFO intact across the spill.
 //!
 //! For the elastic capacity manager (DESIGN.md S6.1) a shard can be
 //! **gated**: dispatchers and stealing skip it, its worker parks on the
@@ -27,8 +46,12 @@
 //! worker parks in simulation time, so a whole serving run is
 //! deterministic. Lost wakeups are prevented by the slot's generation
 //! counter — the waiter samples it *before* re-checking the queue, and a
-//! notify that lands in between makes the wait return immediately.
+//! notify that lands in between makes the wait return immediately. As a
+//! second guard, `pop_wait` drains the queue once more *after* its
+//! deadline passes: a push landing between the empty re-check and the
+//! deadline comparison is returned instead of stranded.
 
+use std::cell::UnsafeCell;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -38,16 +61,141 @@ use crate::clock::{self, Clock, WaitSlot};
 
 use super::Request;
 
-/// A bounded MPSC-style request queue owned by one worker instance.
-#[derive(Debug)]
+/// Physical ring sizes are capped so a huge configured capacity cannot
+/// balloon the slot array; pushes beyond the ring spill into staging.
+const MAX_RING_SLOTS: usize = 1 << 16;
+
+/// One slot of the lock-free ring. `seq` encodes the slot's lap state
+/// (Vyukov MPMC): equal to the position when free for a producer, to
+/// `position + 1` when a payload is published, and to `position + size`
+/// once the reaper has emptied it for the next lap.
+struct Slot {
+    seq: AtomicUsize,
+    val: UnsafeCell<Option<Request>>,
+}
+
+/// Bounded lock-free MPMC ring: producers are fully lock-free; slots are
+/// emptied only by the single reaper (the consumer holding the shard's
+/// staging lock), in position order, so ring order is FIFO.
+struct Ring {
+    buf: Box<[Slot]>,
+    mask: usize,
+    /// Next position a producer claims (CAS).
+    enqueue_pos: AtomicUsize,
+    /// Next position the reaper consumes. Written only under the staging
+    /// lock; atomic so overflowing producers can snapshot progress.
+    dequeue_pos: AtomicUsize,
+}
+
+// SAFETY: `val` is written by exactly one producer — the winner of the
+// `enqueue_pos` CAS for that position — strictly before its release-store
+// of `seq`, and read by exactly one reaper — the consumer holding the
+// staging lock — strictly after an acquire-load observes that store. The
+// slot is not reused until the reaper's own release-store of the next-lap
+// `seq` value, which the next producer acquire-loads. No two threads ever
+// access a `val` concurrently.
+unsafe impl Sync for Ring {}
+unsafe impl Send for Ring {}
+
+impl Ring {
+    fn new(capacity: usize) -> Self {
+        let size = capacity.next_power_of_two().min(MAX_RING_SLOTS);
+        let buf: Box<[Slot]> = (0..size)
+            .map(|i| Slot { seq: AtomicUsize::new(i), val: UnsafeCell::new(None) })
+            .collect();
+        Ring {
+            mask: size - 1,
+            buf,
+            enqueue_pos: AtomicUsize::new(0),
+            dequeue_pos: AtomicUsize::new(0),
+        }
+    }
+
+    /// Lock-free push; hands the request back when the ring is physically
+    /// full (one whole lap of unconsumed slots).
+    fn push(&self, r: Request) -> Result<(), Request> {
+        let mut pos = self.enqueue_pos.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.buf[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq.wrapping_sub(pos) as isize;
+            if diff == 0 {
+                match self.enqueue_pos.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: winning the CAS gives this thread
+                        // exclusive write access to the slot until the
+                        // release-store of `seq` publishes it (see the
+                        // `unsafe impl Sync` contract).
+                        unsafe { *slot.val.get() = Some(r) };
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        return Ok(());
+                    }
+                    Err(p) => pos = p,
+                }
+            } else if diff < 0 {
+                return Err(r);
+            } else {
+                pos = self.enqueue_pos.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Reap the oldest published item, if any. FIFO: stops (returns
+    /// `None`) at a claimed-but-unpublished slot rather than skipping it.
+    /// Caller must hold the shard's staging lock (single reaper).
+    fn reap_one(&self) -> Option<Request> {
+        let pos = self.dequeue_pos.load(Ordering::Relaxed);
+        let slot = &self.buf[pos & self.mask];
+        let seq = slot.seq.load(Ordering::Acquire);
+        if seq.wrapping_sub(pos.wrapping_add(1)) as isize == 0 {
+            // SAFETY: `seq == pos + 1` happens-after the producer's
+            // release-store, so the payload is fully written and ours to
+            // take; the staging lock excludes any other reaper.
+            let r = unsafe { (*slot.val.get()).take() };
+            slot.seq
+                .store(pos.wrapping_add(self.buf.len()), Ordering::Release);
+            self.dequeue_pos.store(pos.wrapping_add(1), Ordering::Relaxed);
+            r
+        } else {
+            None
+        }
+    }
+
+    /// Current producer frontier (positions before it are claimed).
+    fn claimed_frontier(&self) -> usize {
+        self.enqueue_pos.load(Ordering::Acquire)
+    }
+}
+
+/// A bounded lock-free request queue owned by one worker instance.
 pub struct ShardQueue {
-    q: Mutex<VecDeque<Request>>,
+    ring: Ring,
+    /// Reaped front of the logical queue plus unbounded overflow; its
+    /// mutex doubles as the consumer-side (reaper) serialization lock.
+    staging: Mutex<VecDeque<Request>>,
     clock: Arc<dyn Clock>,
     slot: Arc<WaitSlot>,
-    depth: AtomicUsize,
+    /// Exact logical length (staging + ring), maintained push/pop side.
+    len: AtomicUsize,
     capacity: usize,
     gated: AtomicBool,
     failed: AtomicBool,
+}
+
+impl std::fmt::Debug for ShardQueue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardQueue")
+            .field("len", &self.len())
+            .field("capacity", &self.capacity)
+            .field("gated", &self.is_gated())
+            .field("failed", &self.is_failed())
+            .finish()
+    }
 }
 
 impl ShardQueue {
@@ -61,25 +209,82 @@ impl ShardQueue {
     /// passes its own clock so `VirtualClock` runs are deterministic).
     pub fn with_clock(capacity: usize, clock: Arc<dyn Clock>) -> Self {
         let slot = clock.new_slot();
+        let capacity = capacity.max(1);
         ShardQueue {
-            q: Mutex::new(VecDeque::new()),
+            ring: Ring::new(capacity),
+            staging: Mutex::new(VecDeque::new()),
             clock,
             slot,
-            depth: AtomicUsize::new(0),
-            capacity: capacity.max(1),
+            len: AtomicUsize::new(0),
+            capacity,
             gated: AtomicBool::new(false),
             failed: AtomicBool::new(false),
         }
     }
 
-    /// Take the queue lock, recovering from poisoning: a `VecDeque` of
-    /// requests has no invariant a panicking peer could have broken, and
-    /// losing queued requests to a poisoned lock would drop admitted work.
+    /// Take the staging (reaper) lock, recovering from poisoning: a
+    /// `VecDeque` of requests has no invariant a panicking peer could have
+    /// broken, and losing queued requests to a poisoned lock would drop
+    /// admitted work.
     fn locked(&self) -> MutexGuard<'_, VecDeque<Request>> {
-        match self.q.lock() {
+        match self.staging.lock() {
             Ok(g) => g,
             Err(poisoned) => poisoned.into_inner(),
         }
+    }
+
+    /// Move every published ring item into staging, in ring (FIFO) order.
+    fn reap_all(&self, st: &mut VecDeque<Request>) {
+        while let Some(r) = self.ring.reap_one() {
+            st.push_back(r);
+        }
+    }
+
+    /// Reap until every position claimed before `target` has been moved
+    /// into staging, spinning through claimed-but-unpublished slots (the
+    /// producer is mid-publish; it finishes without needing any lock, so
+    /// the spin is bounded and deadlock-free).
+    fn reap_until(&self, st: &mut VecDeque<Request>, target: usize) {
+        while (target.wrapping_sub(self.ring.dequeue_pos.load(Ordering::Relaxed)) as isize) > 0
+        {
+            match self.ring.reap_one() {
+                Some(r) => st.push_back(r),
+                None => std::hint::spin_loop(),
+            }
+        }
+    }
+
+    /// Spill `r` behind everything claimed in the ring before it: reap up
+    /// to the claim frontier, then append to staging. Preserves FIFO and
+    /// per-producer order across the overflow (this thread's own earlier
+    /// pushes are all before the frontier).
+    fn overflow_push(&self, r: Request) {
+        let target = self.ring.claimed_frontier();
+        let mut st = self.locked();
+        self.reap_until(&mut st, target);
+        st.push_back(r);
+    }
+
+    /// Take up to `max` requests from the front. Returns the items and
+    /// whether the queue held *any* published item (so `pop_wait` can
+    /// distinguish "empty queue" from a zero-`max` call).
+    fn take_front(&self, max: usize) -> (Vec<Request>, bool) {
+        let mut st = self.locked();
+        // Top up staging so the front `max` items (at least one, for the
+        // emptiness probe) are present in deque form.
+        while st.len() < max.max(1) {
+            match self.ring.reap_one() {
+                Some(r) => st.push_back(r),
+                None => break,
+            }
+        }
+        let nonempty = !st.is_empty();
+        let n = st.len().min(max);
+        let out: Vec<Request> = st.drain(..n).collect();
+        if n > 0 {
+            self.len.fetch_sub(n, Ordering::AcqRel);
+        }
+        (out, nonempty)
     }
 
     /// Maximum number of queued requests before pushes are refused.
@@ -87,9 +292,9 @@ impl ShardQueue {
         self.capacity
     }
 
-    /// Lock-free depth estimate (exact between lock releases).
+    /// Lock-free depth mirror (exact between operations).
     pub fn len(&self) -> usize {
-        self.depth.load(Ordering::Relaxed)
+        self.len.load(Ordering::Relaxed)
     }
 
     /// True when the shard currently holds no requests.
@@ -143,14 +348,30 @@ impl ShardQueue {
 
     /// Enqueue a request; on a full shard the request is handed back so
     /// the dispatcher can retry elsewhere or reject (backpressure).
+    /// Lock-free: one CAS on the length guard, one CAS on the ring
+    /// position (the staging spill runs only when an unbounded backlog
+    /// already exceeds the physical ring).
     pub fn try_push(&self, r: Request) -> Result<(), Request> {
-        {
-            let mut q = self.locked();
-            if q.len() >= self.capacity {
+        let mut len = self.len.load(Ordering::Relaxed);
+        loop {
+            if len >= self.capacity {
                 return Err(r);
             }
-            q.push_back(r);
-            self.depth.store(q.len(), Ordering::Relaxed);
+            match self.len.compare_exchange_weak(
+                len,
+                len + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(l) => len = l,
+            }
+        }
+        if let Err(r) = self.ring.push(r) {
+            // The ring is physically full (an unbounded backlog, or a
+            // capacity above the slot cap): spill in order instead of
+            // refusing work the length guard already admitted.
+            self.overflow_push(r);
         }
         self.clock.notify_slot(&self.slot);
         Ok(())
@@ -161,42 +382,38 @@ impl ShardQueue {
     /// admitted* must never be dropped, even if every shard it could move
     /// to filled up concurrently.
     pub fn push_unbounded(&self, r: Request) {
-        {
-            let mut q = self.locked();
-            q.push_back(r);
-            self.depth.store(q.len(), Ordering::Relaxed);
+        self.len.fetch_add(1, Ordering::AcqRel);
+        if let Err(r) = self.ring.push(r) {
+            self.overflow_push(r);
         }
         self.clock.notify_slot(&self.slot);
     }
 
     /// Dequeue up to `max` requests without blocking.
     pub fn pop_upto(&self, max: usize) -> Vec<Request> {
-        let mut q = self.locked();
-        let n = q.len().min(max);
-        let out: Vec<Request> = q.drain(..n).collect();
-        self.depth.store(q.len(), Ordering::Relaxed);
-        out
+        self.take_front(max).0
     }
 
     /// Dequeue up to `max` requests, waiting up to `wait` for the first
     /// one to arrive. Returns empty only once `wait` has fully elapsed on
-    /// the shard's clock with nothing queued.
+    /// the shard's clock with nothing queued — including a final drain at
+    /// the deadline, so a push landing between the empty re-check and the
+    /// deadline comparison is returned, not stranded (its notify
+    /// generation was already consumed by this waiter).
     pub fn pop_wait(&self, max: usize, wait: Duration) -> Vec<Request> {
         let deadline = self.clock.now().saturating_add(clock::ticks(wait));
         loop {
             let observed = self.slot.generation();
-            {
-                let mut q = self.locked();
-                if !q.is_empty() {
-                    let n = q.len().min(max);
-                    let out: Vec<Request> = q.drain(..n).collect();
-                    self.depth.store(q.len(), Ordering::Relaxed);
-                    return out;
-                }
+            let (out, nonempty) = self.take_front(max);
+            if nonempty {
+                return out;
             }
             let now = self.clock.now();
             if now >= deadline {
-                return Vec::new();
+                // Final drain: the deadline check above is outside the
+                // staging lock, so a push may have landed since the
+                // take_front that found the queue empty.
+                return self.take_front(max).0;
             }
             self.clock
                 .wait_slot(&self.slot, observed, clock::to_duration(deadline - now));
@@ -206,19 +423,26 @@ impl ShardQueue {
     /// Take up to `max` requests from the *back* of the queue (work
     /// stealing; the home worker keeps FIFO order at the front).
     pub fn steal_upto(&self, max: usize) -> Vec<Request> {
-        let mut q = self.locked();
-        let n = q.len().min(max);
-        let keep = q.len() - n;
-        let out: Vec<Request> = q.split_off(keep).into_iter().collect();
-        self.depth.store(q.len(), Ordering::Relaxed);
+        let mut st = self.locked();
+        self.reap_all(&mut st);
+        let n = st.len().min(max);
+        let keep = st.len() - n;
+        let out: Vec<Request> = st.split_off(keep).into_iter().collect();
+        if n > 0 {
+            self.len.fetch_sub(n, Ordering::AcqRel);
+        }
         out
     }
 
     /// Drain the whole queue in FIFO order (the CC's gated-shard drain).
     pub fn drain_all(&self) -> Vec<Request> {
-        let mut q = self.locked();
-        let out: Vec<Request> = q.drain(..).collect();
-        self.depth.store(0, Ordering::Relaxed);
+        let mut st = self.locked();
+        self.reap_all(&mut st);
+        let n = st.len();
+        let out: Vec<Request> = st.drain(..).collect();
+        if n > 0 {
+            self.len.fetch_sub(n, Ordering::AcqRel);
+        }
         out
     }
 
@@ -231,7 +455,7 @@ impl ShardQueue {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::clock::{ActorScope, VirtualClock};
+    use crate::clock::{ActorScope, Tick, VirtualClock};
 
     fn req(id: u64) -> Request {
         Request { id, payload: vec![0.0; 4], submitted: 0 }
@@ -282,6 +506,28 @@ mod tests {
     }
 
     #[test]
+    fn unbounded_overflow_preserves_fifo_across_ring_and_staging() {
+        // Capacity 2 means a 2-slot physical ring: the third and fourth
+        // pushes spill through the staging overflow path, and every mixed
+        // pop/steal/drain below must still see one FIFO queue.
+        let s = ShardQueue::new(2);
+        assert!(s.try_push(req(0)).is_ok());
+        assert!(s.try_push(req(1)).is_ok());
+        s.push_unbounded(req(2));
+        s.push_unbounded(req(3));
+        assert_eq!(s.len(), 4);
+        assert!(s.try_push(req(4)).is_err(), "bound still enforced over the backlog");
+        let front = s.pop_upto(2);
+        assert_eq!(front.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1]);
+        assert!(s.try_push(req(4)).is_err(), "backlog still at capacity");
+        let stolen = s.steal_upto(1);
+        assert_eq!(stolen.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3]);
+        let rest = s.drain_all();
+        assert_eq!(rest.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        assert!(s.is_empty());
+    }
+
+    #[test]
     fn pop_wait_returns_queued_work_without_waiting() {
         let s = ShardQueue::new(8);
         s.try_push(req(7)).unwrap();
@@ -327,6 +573,94 @@ mod tests {
         let s = ShardQueue::with_clock(8, clock.clone());
         assert!(s.pop_wait(4, Duration::from_millis(20)).is_empty());
         assert_eq!(clock.now(), crate::clock::ticks(Duration::from_millis(20)));
+    }
+
+    #[test]
+    fn pop_wait_returns_a_push_landing_exactly_at_the_deadline_tick() {
+        // Virtual-time pin of the deadline-edge contract: the producer is
+        // actor 0 and sleeps to exactly the consumer's deadline tick, so
+        // the scheduler runs the push *before* the waiter's deadline turn.
+        // The waiter must return the request — waking at exactly the
+        // deadline tick — not an empty timeout.
+        let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+        let _me = ActorScope::enter(&clock, "producer");
+        let s = Arc::new(ShardQueue::with_clock(8, clock.clone()));
+        let actor = clock.register_actor("consumer");
+        let (s2, c2) = (s.clone(), clock.clone());
+        let h = std::thread::spawn(move || {
+            let _scope = ActorScope::attach(&c2, actor);
+            let got = s2.pop_wait(4, Duration::from_millis(20));
+            (got, c2.now())
+        });
+        clock.sleep(Duration::from_millis(20));
+        s.try_push(req(11)).unwrap();
+        clock.suspend_current();
+        let (got, woke_at) = h.join().unwrap();
+        clock.resume_current();
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![11]);
+        assert_eq!(
+            woke_at,
+            crate::clock::ticks(Duration::from_millis(20)),
+            "the deadline-tick push must be served at the deadline tick"
+        );
+    }
+
+    /// Clock wrapper reproducing the `pop_wait` deadline race the final
+    /// drain fixes: its second `now()` call — `pop_wait`'s deadline check
+    /// after an empty take — pushes a request, landing it exactly in the
+    /// window between the empty re-check and the `now >= deadline` branch.
+    #[derive(Debug)]
+    struct RaceClock {
+        inner: Arc<dyn Clock>,
+        queue: Mutex<Option<Arc<ShardQueue>>>,
+        now_calls: AtomicUsize,
+    }
+
+    impl Clock for RaceClock {
+        fn now(&self) -> Tick {
+            if self.now_calls.fetch_add(1, Ordering::SeqCst) == 1 {
+                if let Some(q) = self.queue.lock().unwrap().clone() {
+                    q.push_unbounded(req(42));
+                }
+            }
+            self.inner.now()
+        }
+        fn sleep(&self, d: Duration) {
+            self.inner.sleep(d);
+        }
+        fn new_slot(&self) -> Arc<WaitSlot> {
+            self.inner.new_slot()
+        }
+        fn wait_slot(&self, slot: &WaitSlot, observed_gen: u64, timeout: Duration) {
+            self.inner.wait_slot(slot, observed_gen, timeout);
+        }
+        fn notify_slot(&self, slot: &WaitSlot) {
+            self.inner.notify_slot(slot);
+        }
+    }
+
+    #[test]
+    fn pop_wait_drains_a_push_racing_the_deadline_check() {
+        // Regression for the stranded-push bug: before the final drain,
+        // this exact interleaving returned empty and left id 42 queued
+        // with its notify generation already consumed by the waiter.
+        let race = Arc::new(RaceClock {
+            inner: clock::wall(),
+            queue: Mutex::new(None),
+            now_calls: AtomicUsize::new(0),
+        });
+        let clock: Arc<dyn Clock> = race.clone();
+        let s = Arc::new(ShardQueue::with_clock(8, clock));
+        *race.queue.lock().unwrap() = Some(s.clone());
+        // now() #1 computes the (zero-wait) deadline; the empty take runs;
+        // now() #2 injects the push and then reports the deadline passed.
+        let got = s.pop_wait(4, Duration::ZERO);
+        assert_eq!(
+            got.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![42],
+            "the deadline-racing push must be drained, not stranded"
+        );
+        assert!(s.is_empty());
     }
 
     #[test]

@@ -186,6 +186,28 @@ impl Fleet {
         Ok(out)
     }
 
+    /// Run `scenario` under hybrid capacity with the batch knob off and
+    /// on — otherwise identical fleets — returning `(label, report)` rows
+    /// `["fixed-batch", "adaptive-batch"]` (DESIGN.md S22). This is the
+    /// offline side-by-side behind the ISSUE-8 acceptance gate and the
+    /// `perf_fleet_serving` batch comparison: the adaptive controller
+    /// grows dispatch batches while downclocked, amortizing the
+    /// per-dispatch overhead exactly when cycles are scarce.
+    pub fn compare_batch_policies(
+        scenario: &Scenario,
+        cfg: PlatformConfig,
+        mode: Mode,
+    ) -> Result<Vec<(String, FleetReport)>, String> {
+        let mut out = Vec::with_capacity(2);
+        for adaptive in [false, true] {
+            let knob = PlatformConfig { adaptive_batch: adaptive, ..cfg.clone() };
+            let mut fleet = Fleet::from_scenario(scenario, knob, Policy::Hybrid(mode))?;
+            let label = if adaptive { "adaptive-batch" } else { "fixed-batch" };
+            out.push((label.to_string(), fleet.run_scenario(scenario)?));
+        }
+        Ok(out)
+    }
+
     /// Run `scenario` under hybrid capacity once per predictor
     /// configuration — the static-margin Markov baseline first, then
     /// every [`PredictorKind`] with the adaptive guardband at
@@ -375,6 +397,50 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn adaptive_batch_never_worse_than_fixed_on_any_named_scenario() {
+        // Acceptance gate for the batch knob (ISSUE 8): on every named
+        // scenario the adaptive-batch hybrid's energy is within 1% of
+        // the fixed-batch hybrid's, and it strictly wins somewhere — the
+        // amortization factor only exceeds 1 while downclocked, so the
+        // win comes from absorbing load that arrives against a
+        // still-low served frequency (trough exits, surge onsets).
+        let mut strictly_better = 0usize;
+        for s in Scenario::all(240, 2019) {
+            let rows = Fleet::compare_batch_policies(
+                &s,
+                PlatformConfig::default(),
+                Mode::Proposed,
+            )
+            .unwrap();
+            assert_eq!(rows.len(), 2);
+            assert_eq!(rows[0].0, "fixed-batch");
+            assert_eq!(rows[1].0, "adaptive-batch");
+            let (fixed, adaptive) = (rows[0].1.energy_j(), rows[1].1.energy_j());
+            assert!(
+                adaptive <= fixed * 1.01,
+                "{}: adaptive batch {adaptive} J vs fixed {fixed} J",
+                s.name
+            );
+            // The knob must never buy energy with QoS: violations stay
+            // within half a point of the fixed-batch baseline.
+            assert!(
+                rows[1].1.violation_rate <= rows[0].1.violation_rate + 0.005,
+                "{}: adaptive violations {} vs fixed {}",
+                s.name,
+                rows[1].1.violation_rate,
+                rows[0].1.violation_rate
+            );
+            if adaptive < fixed - 1e-9 {
+                strictly_better += 1;
+            }
+        }
+        assert!(
+            strictly_better >= 1,
+            "adaptive batch never strictly beat fixed on any named scenario"
+        );
     }
 
     #[test]

@@ -24,7 +24,8 @@ pub mod fleet;
 pub mod pll;
 
 use crate::control::{
-    ControlConfig, DecisionRecord, GroupController, LutSpec, Observation,
+    batch_amortization, ControlConfig, DecisionRecord, GroupController, LutSpec,
+    Observation,
 };
 use crate::markov::PredictorKind;
 use crate::power::DesignPower;
@@ -111,6 +112,19 @@ pub struct PlatformConfig {
     /// cross-path equivalence suite replays. Ignored by the other
     /// policies.
     pub capacity_policy: CapacityPolicy,
+    /// Nominal requests per dispatched inference batch (the backend's
+    /// native geometry; mirrors the live `FleetServingConfig`).
+    pub batch_nominal: usize,
+    /// Treat batch size as a per-step control decision (DESIGN.md S22):
+    /// the controller publishes bigger batches at low frequency ratios to
+    /// amortize per-dispatch overhead. Off by default — fixed-batch runs
+    /// multiply capacity by an exact 1.0 and stay bit-identical to the
+    /// pre-knob traces.
+    pub adaptive_batch: bool,
+    /// Per-dispatch overhead as a fraction of `cycles_per_batch` (weight
+    /// swap/DMA setup/pipeline refill), the lever
+    /// [`batch_amortization`] trades against batch size.
+    pub batch_overhead: f64,
 }
 
 impl Default for PlatformConfig {
@@ -130,6 +144,9 @@ impl Default for PlatformConfig {
             predictor_period: 96,
             qos_target: None,
             capacity_policy: CapacityPolicy::Hybrid,
+            batch_nominal: 16,
+            adaptive_batch: false,
+            batch_overhead: 0.1,
         }
     }
 }
@@ -140,8 +157,9 @@ impl Default for PlatformConfig {
 /// shared with the live `coordinator::EpochRecord` so the two trace
 /// formats cannot drift — and are reachable directly through `Deref`
 /// (`rec.freq_ratio`, `rec.margin`, ...). Alignment within the record:
-/// `freq_ratio`/`vcore`/`vbram`/`n_active` are the operating point that
-/// *served* this step (chosen at the end of the previous step), while
+/// `freq_ratio`/`vcore`/`vbram`/`n_active`/`batch` are the operating
+/// point that *served* this step (chosen at the end of the previous
+/// step), while
 /// `predicted`/`predictor`/`margin` come from the decision *made* this
 /// step — the historical column semantics of this trace.
 #[derive(Clone, Copy, Debug)]
@@ -228,6 +246,9 @@ pub struct Platform {
     vbram: f64,
     /// Boards active this step (only [`Policy::Hybrid`] gates below n).
     active: usize,
+    /// Requests per dispatched batch this step (set at the end of the
+    /// previous step, like the frequency; starts at the nominal).
+    batch: usize,
     step_idx: usize,
 }
 
@@ -288,6 +309,8 @@ impl Platform {
                 predictor: cfg.predictor,
                 predictor_period: cfg.predictor_period,
                 qos_target: cfg.qos_target,
+                batch_nominal: cfg.batch_nominal,
+                adaptive_batch: cfg.adaptive_batch,
             },
             &optimizer,
             spec,
@@ -307,6 +330,7 @@ impl Platform {
             )
         };
         let active = cfg.n_fpgas;
+        let batch = cfg.batch_nominal.max(1);
         Platform {
             cfg,
             design,
@@ -319,6 +343,7 @@ impl Platform {
             vcore,
             vbram,
             active,
+            batch,
             step_idx: 0,
         }
     }
@@ -357,7 +382,13 @@ impl Platform {
             Policy::Hybrid(_) => self.active as f64 / n,
             _ => 1.0,
         };
-        let capacity = self.freq_ratio * active_frac * (1.0 - stalled_frac);
+        // Batch amortization (DESIGN.md S22): serving batches above the
+        // nominal geometry spreads the per-dispatch overhead over more
+        // requests. Exactly 1.0 at the nominal batch, so fixed-batch runs
+        // stay bit-identical.
+        let amort =
+            batch_amortization(self.batch, cfg.batch_nominal, cfg.batch_overhead);
+        let capacity = self.freq_ratio * active_frac * (1.0 - stalled_frac) * amort;
         let demand = load + self.backlog;
         let delivered = demand.min(capacity);
         self.backlog = (demand - delivered).min(cfg.max_backlog_steps);
@@ -423,6 +454,7 @@ impl Platform {
                 vcore: self.vcore,
                 vbram: self.vbram,
                 n_active: self.active,
+                batch: self.batch,
                 predictor: d.predictor,
                 margin: d.margin,
             },
@@ -437,6 +469,7 @@ impl Platform {
         self.vcore = d.vcore;
         self.vbram = d.vbram;
         self.active = d.n_active;
+        self.batch = d.batch;
         self.step_idx += 1;
         let _ = locking;
         rec
@@ -810,6 +843,39 @@ mod tests {
         assert!(
             tail_names.iter().any(|n| *n == "periodic"),
             "late steps should be served by the periodic member: {tail_names:?}"
+        );
+    }
+
+    #[test]
+    fn fixed_batch_is_the_exact_identity_and_adaptive_batches_bigger_when_slow() {
+        // Fixed policy: every record carries the nominal batch and the
+        // capacity multiplier is the exact 1.0 identity — the trace is
+        // bit-identical to the pre-knob platform by construction.
+        let t = test_trace();
+        let fixed = sim(Policy::Dvfs(Mode::Proposed), &t);
+        assert!(fixed.records.iter().all(|r| r.batch == 16));
+        // Adaptive: downclocked steps publish bigger batches following
+        // the inverse-frequency law, clamped to [b0, 4*b0]; QoS must not
+        // degrade (amortization only adds capacity at batch > nominal).
+        let cfg = PlatformConfig {
+            warmup_steps: 10,
+            adaptive_batch: true,
+            ..Default::default()
+        };
+        let mut p = build_platform("tabla", cfg, Policy::Dvfs(Mode::Proposed)).unwrap();
+        let r = p.run(&t);
+        assert!(
+            r.records.iter().skip(11).any(|x| x.batch > 16),
+            "a bursty trace has slow steps that must batch bigger"
+        );
+        for x in r.records.iter() {
+            assert!((16..=64).contains(&x.batch), "clamp violated: {}", x.batch);
+        }
+        assert!(
+            r.violation_rate <= fixed.violation_rate + 0.02,
+            "adaptive {} vs fixed {}",
+            r.violation_rate,
+            fixed.violation_rate
         );
     }
 

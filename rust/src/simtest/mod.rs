@@ -93,6 +93,11 @@ pub struct SimSpec {
     /// Deterministic scripted migration schedule (DESIGN.md S21.3); the
     /// default empty plan is bitwise-neutral.
     pub migrations: MigrationPlan,
+    /// Let every group's CC scale the dispatch batch with its frequency
+    /// decision (DESIGN.md S22). The default `false` pins the nominal
+    /// batch, which is bitwise-neutral — committed goldens stay keyed to
+    /// the fixed-batch path.
+    pub adaptive_batch: bool,
 }
 
 impl Default for SimSpec {
@@ -114,6 +119,7 @@ impl Default for SimSpec {
             faults: FaultPlan::default(),
             n_nodes: 1,
             migrations: MigrationPlan::default(),
+            adaptive_batch: false,
         }
     }
 }
@@ -165,10 +171,18 @@ impl SimSpec {
                 if self.qos_target.is_some() { "-adaptive" } else { "" }
             )
         };
-        if self.n_nodes == 1 {
+        let base = if self.n_nodes == 1 {
             base
         } else {
             format!("{base}_n{}", self.n_nodes)
+        };
+        // Adaptive-batch specs get their own key space; fixed-batch (the
+        // default) keeps the legacy keys — that path is bit-identical to
+        // the pre-batch-knob coordinator, so its goldens must not churn.
+        if self.adaptive_batch {
+            format!("{base}_abatch")
+        } else {
+            base
         }
     }
 }
@@ -233,6 +247,7 @@ pub fn run_scenario(spec: &SimSpec, scenario: &Scenario) -> Result<SimOutcome> {
         faults: Arc::new(spec.faults.clone()),
         nodes: spec.n_nodes,
         migrations: Arc::new(spec.migrations.clone()),
+        adaptive_batch: spec.adaptive_batch,
         clock: clock.clone(),
         ..Default::default()
     };
@@ -258,6 +273,7 @@ fn record_json(r: &EpochRecord) -> Json {
         ("active", Json::Num(r.n_active as f64)),
         ("predictor", Json::Str(r.predictor.to_string())),
         ("margin", Json::Num(r.margin)),
+        ("batch", Json::Num(r.batch as f64)),
         ("failed", Json::Num(r.n_failed as f64)),
         ("slow", Json::Num(r.slow_factor)),
     ])
@@ -297,6 +313,12 @@ pub fn trace_json(spec: &SimSpec, scenario: &Scenario, report: &FleetServingRepo
     if spec.n_nodes != 1 {
         fields.push(("n_nodes", Json::Num(spec.n_nodes as f64)));
         fields.push(("migrations", spec.migrations.to_json()));
+    }
+    // Same rule for the batch knob: the fixed-batch path is bit-identical
+    // to the pre-batch-knob coordinator, so only `_abatch` specs carry
+    // the field.
+    if spec.adaptive_batch {
+        fields.push(("adaptive_batch", Json::Bool(true)));
     }
     fields.push(("groups", Json::Arr(groups)));
     Json::obj(fields)
@@ -387,6 +409,16 @@ mod tests {
         assert_eq!(spec.golden_stem(), "diurnal_hybrid_n4");
         let spec = SimSpec { n_nodes: 1, ..SimSpec::golden_adaptive("overnight") };
         assert_eq!(spec.golden_stem(), "overnight_hybrid_ensemble-adaptive");
+        // The batch knob keys the same way: off (default) is the legacy
+        // stem, on appends `_abatch` after every other suffix.
+        let spec = SimSpec { adaptive_batch: true, ..SimSpec::golden("diurnal") };
+        assert_eq!(spec.golden_stem(), "diurnal_hybrid_abatch");
+        let spec = SimSpec {
+            adaptive_batch: true,
+            n_nodes: 4,
+            ..SimSpec::golden("diurnal")
+        };
+        assert_eq!(spec.golden_stem(), "diurnal_hybrid_n4_abatch");
     }
 
     #[test]

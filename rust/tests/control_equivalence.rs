@@ -67,6 +67,9 @@ fn assert_paths_agree(spec: &SimSpec) -> SimOutcome {
             // run-level guardband.
             qos_target: spec.qos_target.map(|d| tenant.qos_target.unwrap_or(d)),
             capacity_policy: spec.policy,
+            // Mirror the batch knob; batch_nominal/batch_overhead ride
+            // the shared defaults on both paths.
+            adaptive_batch: spec.adaptive_batch,
             ..PlatformConfig::default()
         };
         let mut platform =
@@ -127,6 +130,71 @@ fn offline_and_live_decisions_agree_on_every_scenario_and_capacity_policy() {
 }
 
 #[test]
+fn offline_and_live_decisions_agree_with_the_batch_knob_enabled() {
+    // ISSUE 8: the batch decision rides the one shared controller, so
+    // turning the knob on must not move a single decision out of
+    // alignment between the paths. Pure-DVFS runs actually exercise the
+    // scaling law (the hybrid can serve a low bin by gating at full
+    // frequency, which keeps the batch nominal); the overnight trough
+    // forces a downclock, so at least one decided batch must exceed the
+    // nominal 16 there.
+    let mut saw_scaled_batch = false;
+    for (name, policy) in [
+        ("overnight", CapacityPolicy::DvfsOnly),
+        ("flash-crowd", CapacityPolicy::DvfsOnly),
+        ("diurnal", CapacityPolicy::Hybrid),
+    ] {
+        let spec = SimSpec {
+            scenario: name.to_string(),
+            epochs: 18,
+            policy,
+            adaptive_batch: true,
+            ..SimSpec::default()
+        };
+        let out = assert_paths_agree(&spec);
+        for group in &out.report.decision_records {
+            for d in group {
+                assert!(
+                    (16..=64).contains(&d.batch),
+                    "{name}: decided batch {} outside [nominal, 4x nominal]",
+                    d.batch
+                );
+                saw_scaled_batch |= d.batch > 16;
+            }
+        }
+    }
+    assert!(saw_scaled_batch, "no DVFS trough ever scaled the batch above nominal");
+}
+
+#[test]
+fn partial_batches_charge_only_their_fill_of_the_service_time() {
+    // ISSUE 8 satellite: the live worker used to occupy its instance for
+    // the full cycles_per_batch (2e5 / 1e8 Hz = 2 ms) even when the
+    // dispatched batch held a single request, while the offline model
+    // credited fractional batches — sparse traffic paid a 2 ms service
+    // floor per request. Occupancy now scales with batch fill
+    // (DESIGN.md S22), so under sparse load a dispatch of k <= 4
+    // requests costs cycles·(k/16 + 0.1)/(1.1·f) < 1 ms. Warmup spans
+    // the whole run so the CC pins nominal frequency and the bound is
+    // deterministic.
+    let spec = SimSpec {
+        epochs: 12,
+        peak_rps: 80.0, // ~4 requests per 50 ms epoch: every batch is partial
+        warmup_epochs: 12,
+        ..SimSpec::default()
+    };
+    let out = simtest::run(&spec).expect("sparse replay");
+    let g = &out.report.stats.per_group[0];
+    assert!(g.completed > 0, "sparse run must still serve requests");
+    assert!(
+        g.p99_latency_s < 1.0e-3,
+        "p99 {} s: a partial batch is still being charged the full \
+         cycles_per_batch occupancy",
+        g.p99_latency_s
+    );
+}
+
+#[test]
 fn offline_and_live_decisions_agree_under_the_adaptive_ensemble() {
     // The adaptive path exercises everything the static one does not:
     // the guardband's boost/decay closed loop walking the margin ladder,
@@ -153,8 +221,13 @@ fn live_decision_log_matches_the_published_epoch_trace() {
     // what serves epoch k+1, and decision k's forecast is recorded on
     // epoch k.
     // Adaptive spec so the margin actually moves epoch to epoch — a
-    // static margin would make the alignment check vacuous.
-    let spec = SimSpec { epochs: 24, ..SimSpec::golden_adaptive("flash-crowd") };
+    // static margin would make the alignment check vacuous. The batch
+    // knob is on so the batch column is pinned under movement too.
+    let spec = SimSpec {
+        epochs: 24,
+        adaptive_batch: true,
+        ..SimSpec::golden_adaptive("flash-crowd")
+    };
     let out = simtest::run(&spec).unwrap();
     for (records, decisions) in
         out.report.epoch_records.iter().zip(&out.report.decision_records)
@@ -168,8 +241,11 @@ fn live_decision_log_matches_the_published_epoch_trace() {
             assert_eq!(rec.predictor, d.predictor, "epoch {k}: predictor column");
         }
         // Epoch 0 is served by the startup state (nominal f, all
-        // instances); epoch k >= 1 by the decision made at epoch k-1.
+        // instances, the nominal batch); epoch k >= 1 by the decision
+        // made at epoch k-1 — the batch column lags like the operating
+        // point, not like the forecast columns.
         assert_eq!(records[0].freq_ratio, 1.0);
+        assert_eq!(records[0].batch, 16, "epoch 0 is served at the nominal batch");
         for k in 1..records.len() {
             let served = &records[k].decision;
             let chosen = &decisions[k - 1];
@@ -177,6 +253,7 @@ fn live_decision_log_matches_the_published_epoch_trace() {
             assert_eq!(served.n_active, chosen.n_active, "epoch {k}: served active");
             assert_eq!(served.vcore, chosen.vcore, "epoch {k}: served vcore");
             assert_eq!(served.vbram, chosen.vbram, "epoch {k}: served vbram");
+            assert_eq!(served.batch, chosen.batch, "epoch {k}: served batch");
         }
     }
 }
