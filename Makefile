@@ -23,12 +23,19 @@
 #                    control equivalence (DESIGN.md S21)
 #   make fmt         rustfmt the whole workspace (CI runs the --check
 #                    twin alongside clippy)
+#   make lint        determinism lint (tools/detlint) over rust/src
+#   make loom        exhaustive loom model checking of the lock-free
+#                    coordinator core (rust/tests/loom_models.rs)
+#   make miri        Miri over the unsafe slot-protocol unit tests
+#                    (nightly toolchain + miri component)
+#   make tsan        ThreadSanitizer over the concurrency test subset
+#                    (nightly + rust-src; advisory in CI)
 #   make doc         rustdoc with warnings surfaced
 
 ARTIFACTS_DIR := artifacts
 PY            := python3
 
-.PHONY: artifacts build test bench golden bench-coordinator bench-predictor doc fmt fmt-check scenario-smoke faults topology-smoke clean
+.PHONY: artifacts build test bench golden bench-coordinator bench-predictor doc fmt fmt-check lint loom miri tsan scenario-smoke faults topology-smoke clean
 
 artifacts:
 	cd python && $(PY) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
@@ -130,6 +137,38 @@ topology-smoke: build
 	cargo run --release -- serve-fleet --scenario diurnal --epochs 9 \
 	    --epoch-ms 60 --rps 800 --instances 2 --nodes 4 --virtual-time
 	cargo run --release -- topology --scenario mixed-tenant --nodes 4
+
+# Determinism lint (DESIGN.md S23): rejects wall-clock reads outside
+# clock/, hash-ordered collections in decision/trace paths, NaN-unstable
+# float sorts, OS-entropy randomness, and std::sync imports that bypass
+# the crate::sync loom shim. An audited exception is marked in-source:
+#   // detlint: allow(<rule>) -- <reason>
+lint:
+	cargo run --release -p detlint -- rust/src
+
+# Exhaustive loom model checking of the lock-free coordinator core: the
+# five S23 invariants in rust/tests/loom_models.rs, every schedule
+# explored (no iteration cap). Set LOOM_MAX_PREEMPTIONS=2 for a quick
+# local smoke pass; CI runs unbounded.
+loom:
+	RUSTFLAGS="--cfg loom" cargo test --release -p wavescale --test loom_models
+
+# Miri over the unsafe slot-protocol code: the ShardQueue unit tests
+# drive both Ring unsafe sites (producer publish, reaper take) plus the
+# Sync/Send contracts under the interpreter's aliasing + data-race
+# checks. Requires: rustup +nightly component add miri.
+miri:
+	cargo +nightly miri test -p wavescale --lib coordinator::shard
+
+# ThreadSanitizer over the concurrency test subset (shard queue, clock
+# wait slots, dispatch). Needs nightly + the rust-src component for
+# -Zbuild-std (TSan must instrument std too). Advisory in CI: TSan has
+# no false positives on data races but can flag lock-order inversions
+# the deterministic tests never hit.
+tsan:
+	RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test -p wavescale --lib \
+	    -Zbuild-std --target x86_64-unknown-linux-gnu \
+	    coordinator::shard coordinator::dispatch clock::
 
 doc:
 	cargo doc --no-deps

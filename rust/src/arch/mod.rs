@@ -162,7 +162,7 @@ impl DeviceFamily {
             ),
         ];
         frac.iter()
-            .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+            .max_by(|a, b| a.0.total_cmp(&b.0))
             .unwrap()
             .1
     }

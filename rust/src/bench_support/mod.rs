@@ -5,6 +5,8 @@
 //! iteration count and a minimum wall time are reached, and reports
 //! median / mean / p95 per-iteration times.
 
+// detlint: allow(wallclock) -- a benchmark harness measures wall time by
+// definition; bench binaries never write replayable traces
 use std::time::{Duration, Instant};
 
 /// Timing summary of one benchmarked closure.
@@ -37,7 +39,7 @@ impl BenchResult {
 /// Benchmark a closure. The closure's return value is black-boxed.
 pub fn bench_fn<T>(name: &str, mut f: impl FnMut() -> T) -> BenchResult {
     // Warmup: at least 3 iterations / 50 ms.
-    let warm_start = Instant::now();
+    let warm_start = Instant::now(); // detlint: allow(wallclock) -- bench timing
     let mut warm_iters = 0;
     while warm_iters < 3 || warm_start.elapsed() < Duration::from_millis(50) {
         black_box(f());
@@ -48,9 +50,9 @@ pub fn bench_fn<T>(name: &str, mut f: impl FnMut() -> T) -> BenchResult {
     }
 
     let mut samples: Vec<Duration> = Vec::new();
-    let run_start = Instant::now();
+    let run_start = Instant::now(); // detlint: allow(wallclock) -- bench timing
     while samples.len() < 10 || run_start.elapsed() < Duration::from_millis(300) {
-        let t0 = Instant::now();
+        let t0 = Instant::now(); // detlint: allow(wallclock) -- bench timing
         black_box(f());
         samples.push(t0.elapsed());
         if samples.len() >= 100_000 {

@@ -29,11 +29,19 @@
 //! immediately, so no wakeup can be lost and the queue lock is never held
 //! across a park.
 
-use std::collections::{BTreeMap, HashMap};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::collections::BTreeMap;
+// detlint: allow(hash-collection) -- `threads` maps ThreadId -> ActorId for
+// lookup only; scheduling scans iterate `actors` (a BTreeMap), never this.
+use std::collections::HashMap;
+// detlint: allow(std-sync-bypass) -- OnceLock guards the process-wide wall
+// epoch `Instant`; it is not a model-checked primitive and loom has no
+// equivalent (the wall epoch is irrelevant under virtual-time replay).
+use std::sync::OnceLock;
 use std::thread::ThreadId;
 use std::time::{Duration, Instant};
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 /// A point in time, in nanoseconds since the clock's epoch (process start
 /// for [`WallClock`], simulation start for [`VirtualClock`]).

@@ -17,8 +17,8 @@
 //! layer up by `coordinator::router` from the topology's hosting masks,
 //! and this policy then places the request within the chosen node.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::Arc;
 
 use super::shard::ShardQueue;
 
@@ -191,7 +191,7 @@ mod tests {
         // failed board — whenever the gated-flag count and scan straddled
         // a toggle; the re-scan fallback must always land on an ungated
         // sibling instead (shard 2 stays active throughout).
-        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let stop = Arc::new(crate::sync::atomic::AtomicBool::new(false));
         let (s2, stop2) = (s.clone(), stop.clone());
         let toggler = std::thread::spawn(move || {
             while !stop2.load(Ordering::Relaxed) {

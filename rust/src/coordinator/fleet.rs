@@ -37,9 +37,10 @@
 //! epochs in virtual time and two runs with the same seed produce
 //! byte-identical [`EpochRecord`] traces (`simtest`).
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
 use std::time::Duration;
+
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::Arc;
 
 use anyhow::Result;
 

@@ -83,8 +83,9 @@ pub use topology::{
     TopologySnapshot, TopologyStore, MAX_NODES,
 };
 
-use std::sync::Arc;
 use std::time::Duration;
+
+use crate::sync::Arc;
 
 use anyhow::Result;
 
@@ -361,9 +362,9 @@ impl Coordinator {
             predictor: cfg.predictor,
             predictor_period: cfg.predictor_period,
             qos_target: cfg.qos_target,
-            faults: std::sync::Arc::new(crate::workload::FaultPlan::default()),
+            faults: Arc::new(crate::workload::FaultPlan::default()),
             nodes: 1,
-            migrations: std::sync::Arc::new(MigrationPlan::default()),
+            migrations: Arc::new(MigrationPlan::default()),
             rebalance: None,
             clock: cfg.clock.clone(),
         };

@@ -29,9 +29,10 @@
 //! conservation invariant `admitted == completed + failed` holds through
 //! every move (`tests/sim_properties.rs::prop_migration_conserves_work`).
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
 use std::time::Duration;
+
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::{Arc, Mutex};
 
 use crate::clock::{self, ActorScope};
 use crate::control::{
@@ -1068,10 +1069,132 @@ mod tests {
 
     #[test]
     fn handover_slots_park_take_and_drain() {
-        // Exercised with the slot machinery only (GroupCc construction
-        // needs a platform build; the integration suites cover that).
+        // Empty-slot behavior; the tests below cover real controllers.
         let h = Handover::new(2);
         assert!(h.take(0).is_none());
+        assert!(h.drain().is_empty());
+    }
+
+    /// Full platform build for one benchmark — the same construction the
+    /// fleet runs per group, shrunk to test scale (netlist at 5%).
+    fn built_platform(bench: &str) -> (DesignPower, Optimizer) {
+        use crate::arch::{BenchmarkSpec, DeviceFamily};
+        use crate::chars::CharLibrary;
+        use crate::netlist::gen::{generate, GenConfig};
+        use crate::power::PowerParams;
+        use crate::sta::{analyze, DelayParams};
+
+        let chars = CharLibrary::stratix_iv_22nm();
+        let spec = BenchmarkSpec::by_name(bench).unwrap();
+        let design = DesignPower::from_spec(
+            spec,
+            &DeviceFamily::stratix_iv(),
+            chars.clone(),
+            PowerParams::default(),
+        )
+        .unwrap();
+        let net = generate(spec, &GenConfig { scale: 0.05, seed: 2019, luts_per_lab: 10 });
+        let rep = analyze(&net, &DelayParams::default(), 8).unwrap();
+        let optimizer = Optimizer::new(chars.grid(), design.rail_tables(&rep.cp))
+            .with_paths(&chars, rep.top_paths.clone());
+        (design, optimizer)
+    }
+
+    fn shared_for(cfg: &FleetServingConfig, gi: usize) -> GroupShared {
+        use crate::metrics::{Counter, Histogram};
+
+        let g = &cfg.groups[gi];
+        GroupShared {
+            name: g.benchmark.clone(),
+            share: g.share,
+            n_instances: g.n_instances,
+            backend_name: "native",
+            in_dim: 8,
+            out_dim: 4,
+            batch: 16,
+            batch_now: AtomicU64::new(cfg.batch_nominal.max(1) as u64),
+            freq_ratio: AtomicU64::new(1.0f64.to_bits()),
+            vcore_mv: AtomicU64::new(800),
+            vbram_mv: AtomicU64::new(950),
+            active_now: AtomicU64::new(g.n_instances as u64),
+            margin_now: AtomicU64::new(cfg.margin_t.to_bits()),
+            predictor_now: AtomicU64::new(0),
+            admitted: Counter::default(),
+            completed: Counter::default(),
+            rejected: Counter::default(),
+            failed: Counter::default(),
+            stolen_batches: Counter::default(),
+            redispatched: Counter::default(),
+            migrated: Counter::default(),
+            failed_boards: AtomicU64::new(0),
+            violations: Counter::default(),
+            epochs: Counter::default(),
+            latency_us: Histogram::latency_us(),
+            energy_j: Gauge::default(),
+            nominal_energy_j: Gauge::default(),
+        }
+    }
+
+    /// A real `GroupCc` — full controller, LUT family, operating point —
+    /// not a stand-in, so the hand-off tests below move the same object
+    /// migrations do.
+    fn real_cc(gi: usize, cfg: &FleetServingConfig) -> GroupCc {
+        let (design, optimizer) = built_platform(&cfg.groups[gi].benchmark);
+        GroupCc::new(gi, design, optimizer, cfg, &shared_for(cfg, gi))
+    }
+
+    #[test]
+    fn handover_drain_returns_unadopted_controllers_with_their_state() {
+        let mut cfg = FleetServingConfig::default();
+        cfg.groups.push(cfg.groups[0].clone());
+        let h = Handover::new(cfg.groups.len());
+
+        let cc0 = real_cc(0, &cfg);
+        let mut cc1 = real_cc(1, &cfg);
+        // State the next hosting node must resume from: pretend cc1 was
+        // mid-saturation when its node relinquished it.
+        cc1.backlog = 7.5;
+        cc1.sat_streak = 3;
+        h.deposit(0, cc0);
+        h.deposit(1, cc1);
+
+        let adopted = h.take(0).expect("a deposited controller is claimable");
+        assert_eq!(adopted.gi, 0);
+        assert!(h.take(0).is_none(), "a controller is adopted at most once");
+
+        // Shutdown raced the move: the adopter re-parks cc0 and exits.
+        // The sweep must return every parked controller, state intact.
+        h.deposit(0, adopted);
+        let drained = h.drain();
+        assert_eq!(drained.iter().map(|c| c.gi).collect::<Vec<_>>(), vec![0, 1]);
+        assert_eq!(
+            drained[1].backlog, 7.5,
+            "modeled backlog must travel with the controller"
+        );
+        assert_eq!(drained[1].sat_streak, 3);
+        assert!(h.drain().is_empty(), "the sweep leaves every slot empty");
+    }
+
+    /// Hand-off slots recover from poisoning: a CC panicking mid-move
+    /// must not strand (or lose) another group's controller. Std mutexes
+    /// only — the loom shim's mutex has no poisoning.
+    #[test]
+    #[cfg(not(loom))]
+    fn handover_slots_recover_from_poisoning() {
+        let cfg = FleetServingConfig::default();
+        let h = Arc::new(Handover::new(1));
+
+        let hc = Arc::clone(&h);
+        let panicked = std::thread::spawn(move || {
+            let _guard = hc.slots[0].lock().unwrap();
+            panic!("simulated CC panic during a hand-off");
+        })
+        .join();
+        assert!(panicked.is_err());
+
+        h.deposit(0, real_cc(0, &cfg));
+        let cc = h.take(0).expect("a poisoned slot still hands the controller over");
+        assert_eq!(cc.gi, 0);
         assert!(h.drain().is_empty());
     }
 }

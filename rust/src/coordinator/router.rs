@@ -23,7 +23,7 @@
 //! [`FleetServingConfig`](super::FleetServingConfig)) so every legacy
 //! single-node run and every equivalence golden stays bit-identical.
 
-use std::sync::Arc;
+use crate::sync::Arc;
 
 use super::node::NodeShared;
 use super::topology::TopologyStore;

@@ -50,12 +50,27 @@
 //! second guard, `pop_wait` drains the queue once more *after* its
 //! deadline passes: a push landing between the empty re-check and the
 //! deadline comparison is returned instead of stranded.
+//!
+//! # Verification (DESIGN.md S23)
+//!
+//! Every synchronization primitive here is imported through [`crate::sync`]
+//! so `tests/loom_models.rs` (built with `RUSTFLAGS="--cfg loom"`, run via
+//! `make loom`) can exhaustively model-check the ring: the exact capacity
+//! bound, per-producer FIFO across `overflow_push` reaping, the `WaitSlot`
+//! generation protocol, and gate/drain vs. push conservation. The
+//! `Ordering::*` choice at every atomic site is justified in the DESIGN.md
+//! S23 table; `// SAFETY:` comments on the four unsafe sites below are the
+//! audited exclusivity arguments, and under `cfg(loom)` the shim's
+//! `UnsafeCell` turns any violation of them into a model failure.
 
-use std::cell::UnsafeCell;
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
+
+use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::sync::cell::UnsafeCell;
+use crate::sync::{Arc, Mutex, MutexGuard};
 
 use crate::clock::{self, Clock, WaitSlot};
 
@@ -87,19 +102,34 @@ struct Ring {
     dequeue_pos: AtomicUsize,
 }
 
-// SAFETY: `val` is written by exactly one producer — the winner of the
-// `enqueue_pos` CAS for that position — strictly before its release-store
-// of `seq`, and read by exactly one reaper — the consumer holding the
-// staging lock — strictly after an acquire-load observes that store. The
-// slot is not reused until the reaper's own release-store of the next-lap
-// `seq` value, which the next producer acquire-loads. No two threads ever
-// access a `val` concurrently.
+// SAFETY (audited, unsafe sites 1 & 2 of 4 — DESIGN.md S23): `val` is
+// written by exactly one producer — the winner of the `enqueue_pos` CAS
+// for that position — strictly before its release-store of `seq`, and read
+// by exactly one reaper — the consumer holding the staging lock — strictly
+// after an acquire-load observes that store. The slot is not reused until
+// the reaper's own release-store of the next-lap `seq` value, which the
+// next producer acquire-loads. No two threads ever access a `val`
+// concurrently; under `cfg(loom)` the shim `UnsafeCell`'s access-window
+// tracking enforces exactly this claim across every explored interleaving.
 unsafe impl Sync for Ring {}
+// SAFETY: as above — `Request` itself is `Send`, and slot payloads move
+// between threads only through the published-slot protocol.
 unsafe impl Send for Ring {}
 
 impl Ring {
     fn new(capacity: usize) -> Self {
-        let size = capacity.next_power_of_two().min(MAX_RING_SLOTS);
+        // At least 2 slots: in a 1-slot ring the sequence value a producer
+        // publishes at position `p` (`p + 1`) is the same value that marks
+        // the slot free for position `p + size == p + 1`, so a second
+        // unbounded push racing ahead of the reaper would claim the slot
+        // and overwrite the unconsumed request — and the reaper, waiting
+        // for a sequence that can no longer appear, would spin forever.
+        // Found by the loom model
+        // `per_producer_fifo_survives_overflow_reaping` at capacity 1
+        // (DESIGN.md S23). Two slots restore the Vyukov invariant that
+        // "published" (`p + 1`) and "free next lap" (`p + size`) are
+        // distinct values.
+        let size = capacity.next_power_of_two().max(2).min(MAX_RING_SLOTS);
         let buf: Box<[Slot]> = (0..size)
             .map(|i| Slot { seq: AtomicUsize::new(i), val: UnsafeCell::new(None) })
             .collect();
@@ -127,11 +157,12 @@ impl Ring {
                     Ordering::Relaxed,
                 ) {
                     Ok(_) => {
-                        // SAFETY: winning the CAS gives this thread
-                        // exclusive write access to the slot until the
-                        // release-store of `seq` publishes it (see the
-                        // `unsafe impl Sync` contract).
-                        unsafe { *slot.val.get() = Some(r) };
+                        // SAFETY (unsafe site 3 of 4): winning the CAS
+                        // gives this thread exclusive write access to the
+                        // slot until the release-store of `seq` publishes
+                        // it (see the `unsafe impl Sync` contract), so no
+                        // other access window can overlap this write.
+                        slot.val.with_mut(|p| unsafe { *p = Some(r) });
                         slot.seq.store(pos.wrapping_add(1), Ordering::Release);
                         return Ok(());
                     }
@@ -153,10 +184,11 @@ impl Ring {
         let slot = &self.buf[pos & self.mask];
         let seq = slot.seq.load(Ordering::Acquire);
         if seq.wrapping_sub(pos.wrapping_add(1)) as isize == 0 {
-            // SAFETY: `seq == pos + 1` happens-after the producer's
-            // release-store, so the payload is fully written and ours to
-            // take; the staging lock excludes any other reaper.
-            let r = unsafe { (*slot.val.get()).take() };
+            // SAFETY (unsafe site 4 of 4): `seq == pos + 1` happens-after
+            // the producer's release-store, so the payload is fully
+            // written and ours to take; the staging lock excludes any
+            // other reaper, so this is the only live access window.
+            let r = slot.val.with_mut(|p| unsafe { (*p).take() });
             slot.seq
                 .store(pos.wrapping_add(self.buf.len()), Ordering::Release);
             self.dequeue_pos.store(pos.wrapping_add(1), Ordering::Relaxed);
@@ -167,8 +199,16 @@ impl Ring {
     }
 
     /// Current producer frontier (positions before it are claimed).
+    ///
+    /// Relaxed (was Acquire; S23): `enqueue_pos` is only ever mutated by
+    /// Relaxed CASes, so an Acquire load here paired with no release and
+    /// ordered nothing. The value is used purely as a reap-target bound —
+    /// payload visibility is carried by each slot's `seq` acquire in
+    /// `reap_one` — and the caller's *own* prior claims are visible by
+    /// same-thread coherence. Covered by the loom model
+    /// `per_producer_fifo_survives_overflow_reaping`.
     fn claimed_frontier(&self) -> usize {
-        self.enqueue_pos.load(Ordering::Acquire)
+        self.enqueue_pos.load(Ordering::Relaxed)
     }
 }
 
@@ -249,7 +289,9 @@ impl ShardQueue {
         {
             match self.ring.reap_one() {
                 Some(r) => st.push_back(r),
-                None => std::hint::spin_loop(),
+                // Under `cfg(loom)` this spin yields to the scheduler so
+                // the mid-publish producer can finish (see crate::sync).
+                None => crate::sync::hint::spin_loop(),
             }
         }
     }
@@ -282,7 +324,13 @@ impl ShardQueue {
         let n = st.len().min(max);
         let out: Vec<Request> = st.drain(..n).collect();
         if n > 0 {
-            self.len.fetch_sub(n, Ordering::AcqRel);
+            // Relaxed (was AcqRel; S23): `len` is a pure counter — the
+            // capacity bound needs only the atomic's total modification
+            // order, and no payload is published through it (slot `seq`
+            // and the staging mutex carry data visibility). Covered by
+            // loom models `bounded_push_never_over_admits` and
+            // `gate_drain_vs_push_never_drops`.
+            self.len.fetch_sub(n, Ordering::Relaxed);
         }
         (out, nonempty)
     }
@@ -305,7 +353,15 @@ impl ShardQueue {
     /// True when the elastic capacity manager has gated this shard's
     /// instance (dispatch and stealing skip it; its worker is parked).
     pub fn is_gated(&self) -> bool {
-        self.gated.load(Ordering::SeqCst)
+        // Acquire/Release (was SeqCst; S23): the flag needs no total
+        // order against other atomics — a stale `true` read is resolved
+        // by the `WaitSlot` generation protocol (the worker samples the
+        // generation *before* re-checking the flag, and `set_gated`'s
+        // notify moves it), and a stale `false` read only delays a skip
+        // decision one dispatch round. Covered by loom models
+        // `waitslot_generation_has_no_lost_wakeups` and
+        // `gate_drain_vs_push_never_drops`.
+        self.gated.load(Ordering::Acquire)
     }
 
     /// Gate or ungate the shard. Ungating wakes the parked worker; the
@@ -313,7 +369,7 @@ impl ShardQueue {
     /// that read the gated flag just before this call sees a moved
     /// generation and returns from its wait immediately.
     pub fn set_gated(&self, gated: bool) {
-        self.gated.store(gated, Ordering::SeqCst);
+        self.gated.store(gated, Ordering::Release);
         if !gated {
             self.clock.notify_slot(&self.slot);
         }
@@ -325,13 +381,16 @@ impl ShardQueue {
     /// park all flow through the existing gating machinery — this flag
     /// only distinguishes "down" from "scaled down" in stats and reports.
     pub fn is_failed(&self) -> bool {
-        self.failed.load(Ordering::SeqCst)
+        // Acquire/Release (was SeqCst; S23): informational flag — the CC
+        // is the only writer and every consumer tolerates one-epoch
+        // staleness (gating, not this flag, stops dispatch).
+        self.failed.load(Ordering::Acquire)
     }
 
     /// Mark the shard's board failed/recovered (set by the CC at epoch
     /// boundaries from the active `FaultPlan`, cleared on shutdown).
     pub fn set_failed(&self, failed: bool) {
-        self.failed.store(failed, Ordering::SeqCst);
+        self.failed.store(failed, Ordering::Release);
     }
 
     /// Park the calling worker while the shard is gated; returns when
@@ -357,10 +416,14 @@ impl ShardQueue {
             if len >= self.capacity {
                 return Err(r);
             }
+            // Relaxed success (was AcqRel; S23): see `take_front` — the
+            // counter's modification order alone enforces the bound; loom
+            // model `bounded_push_never_over_admits` explores every
+            // push/pop race at the exact-capacity edge.
             match self.len.compare_exchange_weak(
                 len,
                 len + 1,
-                Ordering::AcqRel,
+                Ordering::Relaxed,
                 Ordering::Relaxed,
             ) {
                 Ok(_) => break,
@@ -382,7 +445,7 @@ impl ShardQueue {
     /// admitted* must never be dropped, even if every shard it could move
     /// to filled up concurrently.
     pub fn push_unbounded(&self, r: Request) {
-        self.len.fetch_add(1, Ordering::AcqRel);
+        self.len.fetch_add(1, Ordering::Relaxed);
         if let Err(r) = self.ring.push(r) {
             self.overflow_push(r);
         }
@@ -429,7 +492,7 @@ impl ShardQueue {
         let keep = st.len() - n;
         let out: Vec<Request> = st.split_off(keep).into_iter().collect();
         if n > 0 {
-            self.len.fetch_sub(n, Ordering::AcqRel);
+            self.len.fetch_sub(n, Ordering::Relaxed);
         }
         out
     }
@@ -441,7 +504,7 @@ impl ShardQueue {
         let n = st.len();
         let out: Vec<Request> = st.drain(..).collect();
         if n > 0 {
-            self.len.fetch_sub(n, Ordering::AcqRel);
+            self.len.fetch_sub(n, Ordering::Relaxed);
         }
         out
     }
@@ -720,5 +783,38 @@ mod tests {
         assert_eq!(drained.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3, 4]);
         assert!(s.is_empty());
         assert!(s.drain_all().is_empty());
+    }
+
+    /// `locked()` recovers a poisoned staging mutex instead of panicking
+    /// or dropping admitted work (the queue holds plain requests, so a
+    /// panicking peer cannot have left a broken invariant behind). Std
+    /// mutexes only — the loom shim's mutex has no poisoning.
+    #[test]
+    #[cfg(not(loom))]
+    fn poisoned_staging_lock_recovers_without_losing_requests() {
+        let s = Arc::new(ShardQueue::new(4));
+        s.try_push(req(1)).unwrap();
+        s.try_push(req(2)).unwrap();
+
+        // Poison the staging mutex: a worker panicking mid-reap.
+        let sc = Arc::clone(&s);
+        let panicked = std::thread::spawn(move || {
+            let _guard = sc.staging.lock().unwrap();
+            panic!("simulated worker panic while holding the staging lock");
+        })
+        .join();
+        assert!(panicked.is_err());
+        assert!(s.staging.is_poisoned(), "the panic must have poisoned the lock");
+
+        // Every consumer path still sees both requests, in order.
+        assert_eq!(s.pop_upto(1).iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(s.drain_all().iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        assert!(s.is_empty());
+
+        // And the producer/consumer cycle keeps working afterwards.
+        s.try_push(req(3)).unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.steal_upto(4).iter().map(|r| r.id).collect::<Vec<_>>(), vec![3]);
+        assert!(s.is_empty());
     }
 }

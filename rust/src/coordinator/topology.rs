@@ -25,8 +25,8 @@
 //! subcommand prints its [`TopologySnapshot::to_json`] document (schema
 //! in DESIGN.md S21.4), the live analog of a `GET /topology` endpoint.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{Mutex, MutexGuard};
 
 use crate::util::json::Json;
 use crate::util::prng::Rng;
@@ -535,7 +535,7 @@ impl TopologyStore {
         }
     }
 
-    fn locked(&self) -> std::sync::MutexGuard<'_, FleetTopology> {
+    fn locked(&self) -> MutexGuard<'_, FleetTopology> {
         match self.inner.lock() {
             Ok(g) => g,
             Err(poisoned) => poisoned.into_inner(),

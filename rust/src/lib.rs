@@ -28,6 +28,7 @@ pub mod platform;
 pub mod power;
 pub mod runtime;
 pub mod sta;
+pub mod sync;
 pub mod markov;
 pub mod util;
 pub mod workload;

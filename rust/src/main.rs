@@ -377,6 +377,8 @@ fn serve(args: &Args) -> Result<(), String> {
     println!("serving dnn_{variant} on {n_instances} instances for {epochs} epochs...");
     let mut rng = wavescale::util::prng::Rng::new(42);
     let total = std::time::Duration::from_millis((epochs * epoch_ms) as u64);
+    // detlint: allow(wallclock) -- live serve mode paces real traffic on
+    // real time; nothing here feeds the replayable decision log
     let start = std::time::Instant::now();
     let mut sent = 0u64;
     while start.elapsed() < total {
@@ -696,6 +698,8 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
         }
     }
 
+    // detlint: allow(wallclock) -- wall-time is reporting-only here (run
+    // duration line); the scenario itself runs on the fleet's clock
     let wall_start = std::time::Instant::now();
     let accepted = wavescale::coordinator::drive_scenario(&fleet, &scenario, rps, seed);
     let report = fleet.shutdown().map_err(|e| e.to_string())?;

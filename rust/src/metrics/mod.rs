@@ -4,8 +4,9 @@
 //! the returned `Arc` and update it lock-free afterwards.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::sync::{Arc, Mutex};
 
 /// Monotonic counter.
 #[derive(Debug, Default)]

@@ -30,6 +30,8 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex, OnceLock};
+// detlint: allow(wallclock) -- Instant only feeds SimOutcome::wall (how
+// long the test harness took); the simulation runs on VirtualClock
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -227,7 +229,7 @@ pub fn run(spec: &SimSpec) -> Result<SimOutcome> {
 
 /// Replay an already-built scenario under `spec`'s fleet parameters.
 pub fn run_scenario(spec: &SimSpec, scenario: &Scenario) -> Result<SimOutcome> {
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // detlint: allow(wallclock) -- harness wall time
     let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
     let _driver = ActorScope::enter(&clock, "sim-driver");
     let cfg = FleetServingConfig {

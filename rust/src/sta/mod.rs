@@ -232,9 +232,9 @@ pub fn analyze(net: &Netlist, d: &DelayParams, top_k: usize) -> Result<TimingRep
     if endpoints.is_empty() {
         return Err("netlist has no outputs".into());
     }
-    endpoints.sort_by(|&a, &b| {
-        arrival[b as usize].partial_cmp(&arrival[a as usize]).unwrap()
-    });
+    // total_cmp: arrivals are finite here, but a NaN from a degenerate
+    // delay model must not panic the ranking or make it order-unstable.
+    endpoints.sort_by(|&a, &b| arrival[b as usize].total_cmp(&arrival[a as usize]));
 
     let (cp, cp_nodes) = backtrack(net, d, &pred, endpoints[0]);
     let mut top_paths = vec![cp];

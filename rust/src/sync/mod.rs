@@ -1,0 +1,90 @@
+//! Loom-switchable synchronization primitives (DESIGN.md S23).
+//!
+//! Every module on the sim-replay-critical concurrency path
+//! (`coordinator/`, `clock/`, `metrics/`) imports its atomics, locks and
+//! `UnsafeCell` through this shim instead of `std` — enforced statically by
+//! `tools/detlint` rule `std-sync-bypass`. In a normal build the re-exports
+//! *are* the `std` types (zero cost, zero behavior change); under
+//! `RUSTFLAGS="--cfg loom"` they switch to the loom model checker's
+//! instrumented equivalents so `tests/loom_models.rs` can exhaustively
+//! explore every interleaving of the lock-free core (the Vyukov ring in
+//! `coordinator::shard`, the `WaitSlot` generation protocol, the
+//! `TopologyStore` mask publication).
+//!
+//! Two deliberate deviations from a 1:1 swap:
+//!
+//! * [`Arc`] is re-exported from `std` in **both** modes. The models never
+//!   assert on `Arc` internals (loom's own `Arc` adds only leak
+//!   accounting), and `std::sync::Arc` supports the unsized coercion to
+//!   `Arc<dyn Clock>` that the serving path relies on, which an
+//!   instrumented replacement type cannot provide on stable Rust.
+//! * [`cell::UnsafeCell`] is a thin wrapper exposing loom's closure-based
+//!   `with`/`with_mut` accessors in both modes, so the unsafe slot code in
+//!   `coordinator::shard` is written once and gets loom's concurrent-access
+//!   detection for free under `cfg(loom)`.
+
+pub use std::sync::Arc;
+
+#[cfg(not(loom))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+#[cfg(loom)]
+pub use loom::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+/// Atomic integer/bool types and memory orderings, switched between
+/// `std::sync::atomic` and `loom::sync::atomic` by `cfg(loom)`.
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{fence, AtomicBool, AtomicU64, AtomicUsize, Ordering};
+}
+
+/// Interior-mutability cell with loom's closure-based access protocol.
+pub mod cell {
+    #[cfg(loom)]
+    pub use loom::cell::UnsafeCell;
+
+    /// `std::cell::UnsafeCell` behind loom's `with`/`with_mut` API.
+    ///
+    /// The closures receive the raw pointer; dereferencing it is still
+    /// `unsafe` and every call site must carry a `// SAFETY:` comment
+    /// (audited in `coordinator::shard`, see DESIGN.md S23). Under
+    /// `cfg(loom)` the loom version of this type additionally panics the
+    /// model when two threads' access windows overlap, turning a wrong
+    /// SAFETY argument into a deterministic test failure.
+    #[cfg(not(loom))]
+    #[derive(Debug)]
+    pub struct UnsafeCell<T>(std::cell::UnsafeCell<T>);
+
+    #[cfg(not(loom))]
+    impl<T> UnsafeCell<T> {
+        /// Wrap `value` in a cell.
+        pub fn new(value: T) -> Self {
+            UnsafeCell(std::cell::UnsafeCell::new(value))
+        }
+
+        /// Run `f` with a shared raw pointer to the contents.
+        pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+            f(self.0.get())
+        }
+
+        /// Run `f` with an exclusive raw pointer to the contents.
+        pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+            f(self.0.get())
+        }
+    }
+}
+
+/// Spin-loop hint; under loom a spin must yield so the cooperative
+/// scheduler can run the thread the spinner is waiting on.
+pub mod hint {
+    #[cfg(not(loom))]
+    pub use std::hint::spin_loop;
+
+    /// Loom build: a spin is a scheduling point, not a CPU hint.
+    #[cfg(loom)]
+    pub fn spin_loop() {
+        loom::thread::yield_now();
+    }
+}

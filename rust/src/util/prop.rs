@@ -16,6 +16,20 @@
 //!     prop::assert_that(v == w, "double sort differs")
 //! });
 //! ```
+//!
+//! `check_shrink` splits a property into an input generator and a
+//! predicate over that input; when a case fails, the harness greedily
+//! shrinks the input through [`Shrink`] candidates and reports both the
+//! original and the minimal failing input alongside the replay seed:
+//!
+//! ```text
+//! prop::check_shrink(
+//!     "sum is monotone",
+//!     100,
+//!     |rng| (0..rng.index(1, 50)).map(|_| rng.index(0, 10)).collect::<Vec<usize>>(),
+//!     |v| prop::assert_that(v.iter().sum::<usize>() >= v.len() / 2, "sum too small"),
+//! );
+//! ```
 
 use crate::util::prng::Rng;
 
@@ -60,6 +74,156 @@ pub fn check(name: &str, n: usize, mut property: impl FnMut(&mut Rng) -> CaseRes
     }
 }
 
+/// Inputs that can propose strictly smaller variants of themselves, for
+/// `check_shrink`'s failure minimization. Candidates should be ordered
+/// most-aggressive first (the harness takes the first that still fails).
+pub trait Shrink: Clone + std::fmt::Debug {
+    /// Strictly smaller candidate inputs; empty when already minimal.
+    fn shrink(&self) -> Vec<Self>;
+}
+
+fn shrink_unsigned(v: u64) -> Vec<u64> {
+    let mut out: Vec<u64> = [0, v / 2, v.saturating_sub(1)]
+        .into_iter()
+        .filter(|&c| c < v)
+        .collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+macro_rules! shrink_uint {
+    ($($t:ty),*) => {$(
+        impl Shrink for $t {
+            fn shrink(&self) -> Vec<Self> {
+                shrink_unsigned(*self as u64).into_iter().map(|v| v as $t).collect()
+            }
+        }
+    )*};
+}
+shrink_uint!(usize, u64, u32, u16, u8);
+
+impl Shrink for bool {
+    fn shrink(&self) -> Vec<Self> {
+        if *self { vec![false] } else { Vec::new() }
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let n = self.len();
+        let mut out = Vec::new();
+        if n == 0 {
+            return out;
+        }
+        // Structural shrinks first (empty, halves, single removals),
+        // then element-wise shrinks.
+        out.push(Vec::new());
+        if n > 1 {
+            out.push(self[..n / 2].to_vec());
+            out.push(self[n / 2..].to_vec());
+        }
+        for i in 0..n {
+            let mut v = self.clone();
+            v.remove(i);
+            out.push(v);
+        }
+        for i in 0..n {
+            for s in self[i].shrink() {
+                let mut v = self.clone();
+                v[i] = s;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> =
+            self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<Self> {
+        let (a, b, c) = self;
+        let mut out: Vec<Self> = Vec::new();
+        out.extend(a.shrink().into_iter().map(|a| (a, b.clone(), c.clone())));
+        out.extend(b.shrink().into_iter().map(|b| (a.clone(), b, c.clone())));
+        out.extend(c.shrink().into_iter().map(|c| (a.clone(), b.clone(), c)));
+        out
+    }
+}
+
+/// Property re-evaluations the shrink loop may spend per failing case.
+/// A bound, not a target: greedy descent usually converges in far fewer,
+/// and the budget is only ever spent on an already-failing case.
+const MAX_SHRINK_EVALS: usize = 2048;
+
+/// Like [`check`], but with the case split into `gen` (rng → input) and
+/// `property` (input → result) so a failing input can be minimized: the
+/// harness greedily adopts the first [`Shrink`] candidate that still
+/// fails, repeating until no candidate fails or the eval budget runs
+/// out, then panics with the original input, the minimal input, and the
+/// replay seed (`WAVESCALE_PROP_SEED`).
+///
+/// Racy properties shrink best-effort: a candidate whose failure is a
+/// narrow interleaving may pass its single re-run and be skipped, so the
+/// reported minimum is an upper bound on the true minimal case — the
+/// original failing input is always printed for exact replay.
+pub fn check_shrink<T: Shrink>(
+    name: &str,
+    n: usize,
+    gen: impl Fn(&mut Rng) -> T,
+    property: impl Fn(&T) -> CaseResult,
+) {
+    let base = std::env::var("WAVESCALE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0x5EED_2019);
+    for case in 0..n {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        let msg = match property(&input) {
+            Ok(()) => continue,
+            Err(msg) => msg,
+        };
+
+        let mut minimal = input.clone();
+        let mut min_msg = msg.clone();
+        let mut steps = 0usize;
+        let mut evals = 0usize;
+        'descend: loop {
+            for cand in minimal.shrink() {
+                if evals >= MAX_SHRINK_EVALS {
+                    break 'descend;
+                }
+                evals += 1;
+                if let Err(m) = property(&cand) {
+                    minimal = cand;
+                    min_msg = m;
+                    steps += 1;
+                    continue 'descend;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{name}' failed on case {case}/{n} \
+             (replay with WAVESCALE_PROP_SEED={base}, case seed {seed})\n\
+             original input: {input:?}\n\
+             original failure: {msg}\n\
+             shrunk input ({steps} steps, {evals} evals): {minimal:?}\n\
+             shrunk failure: {min_msg}"
+        );
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -86,5 +250,57 @@ mod tests {
     fn assert_close_tolerance() {
         assert!(assert_close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
         assert!(assert_close(1.0, 1.1, 1e-3, "x").is_err());
+    }
+
+    #[test]
+    fn unsigned_shrink_proposes_strictly_smaller_unique_candidates() {
+        assert_eq!(5usize.shrink(), vec![0, 2, 4]);
+        assert_eq!(2usize.shrink(), vec![0, 1]);
+        assert_eq!(1usize.shrink(), vec![0]);
+        assert!(0usize.shrink().is_empty());
+        assert_eq!(true.shrink(), vec![false]);
+        assert!(false.shrink().is_empty());
+    }
+
+    #[test]
+    fn vec_shrink_covers_structure_and_elements() {
+        let cands = vec![4usize, 1].shrink();
+        assert!(cands.contains(&vec![]), "empty candidate missing");
+        assert!(cands.contains(&vec![4]), "half candidates missing");
+        assert!(cands.contains(&vec![1]), "removal candidates missing");
+        assert!(cands.contains(&vec![2, 1]), "element shrink missing");
+        assert!(cands.iter().all(|c| c != &vec![4, 1]), "no-op candidate");
+    }
+
+    #[test]
+    fn check_shrink_passing_property_never_shrinks() {
+        check_shrink("always ok", 25, |rng| rng.index(0, 100), |_| Ok(()));
+    }
+
+    /// A deterministic failure ("no element may reach 3") must minimize
+    /// all the way to the boundary: greedy descent through empty / half /
+    /// removal / element candidates always reaches `[3]`.
+    #[test]
+    fn check_shrink_minimizes_to_the_boundary() {
+        let caught = std::panic::catch_unwind(|| {
+            check_shrink(
+                "all elements below 3",
+                8,
+                |rng| {
+                    (0..rng.index(3, 10))
+                        .map(|_| rng.index(0, 100))
+                        .collect::<Vec<usize>>()
+                },
+                |v| assert_that(v.iter().all(|&x| x < 3), "element >= 3"),
+            );
+        });
+        let msg = caught
+            .expect_err("the property must fail")
+            .downcast::<String>()
+            .expect("panic payload is the formatted report");
+        assert!(msg.contains("replay with WAVESCALE_PROP_SEED="), "{msg}");
+        assert!(msg.contains("original input:"), "{msg}");
+        assert!(msg.contains("shrunk input"), "{msg}");
+        assert!(msg.contains("[3]"), "expected the minimal input [3] in: {msg}");
     }
 }

@@ -440,7 +440,7 @@ mod tests {
         let a = &s.tenants[0].trace.loads;
         let b = &s.tenants[1].trace.loads;
         // When tabla peaks, diannao should be near its valley.
-        let peak_a = (0..a.len()).max_by(|&i, &j| a[i].partial_cmp(&a[j]).unwrap()).unwrap();
+        let peak_a = (0..a.len()).max_by(|&i, &j| a[i].total_cmp(&a[j])).unwrap();
         assert!(a[peak_a] > 0.7, "tabla peak {}", a[peak_a]);
         assert!(b[peak_a] < 0.45, "diannao at tabla's peak: {}", b[peak_a]);
     }

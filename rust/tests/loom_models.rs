@@ -1,0 +1,300 @@
+//! Loom model checking of the lock-free coordinator core (DESIGN.md S23).
+//!
+//! Compiled only under `RUSTFLAGS="--cfg loom"` (`make loom`); a plain
+//! `cargo test` builds this file to an empty test crate. Each model is
+//! explored *exhaustively*: the vendored loom runtime enumerates every
+//! schedule of every instrumented operation via depth-first search over
+//! scheduling decisions, with no iteration cap. A model passes only when
+//! every interleaving upholds its invariant.
+//!
+//! # Model sizing
+//!
+//! Exhaustive exploration without partial-order reduction is exponential
+//! in instrumented operations, so every model here is a *micro* model:
+//! ring capacity 1–2 (the exact-capacity edge is where the races live),
+//! one or two operations per thread, three or more threads per the S23
+//! checklist. These are the smallest configurations that still contain
+//! each race — over-admission needs a full ring plus a racing pop,
+//! frontier reaping needs more pushes than physical slots, a lost wakeup
+//! needs one waiter and one notifier, and torn publication needs one
+//! writer and concurrent fast-path readers. `LOOM_MAX_PREEMPTIONS` can
+//! bound exploration for a quick smoke pass (e.g. `=2`), but the CI job
+//! and the acceptance bar run unbounded.
+//!
+//! # Fidelity caveat
+//!
+//! The vendored runtime is sequentially consistent: it explores every
+//! *interleaving* but not weak-memory *reorderings*, so `Relaxed` vs
+//! `Acquire` mistakes surface only through interleavings they enable
+//! (e.g. a stale bounded-length snapshot), not through store buffering.
+//! The analytical pairing argument for each ordering lives in the
+//! DESIGN.md S23 audit table; the models verify the protocols above the
+//! orderings. The deadlock-timeout rule matters for model 3: a timed
+//! condvar wait is woken by timeout only when *no* thread is runnable,
+//! and `loom::timeout_fired()` reports whether that rescue ever fired —
+//! so asserting `!timeout_fired()` proves the wakeup protocol alone, with
+//! no timeout assist, delivered the item in every schedule.
+//!
+//! These models found a real bug: at capacity 1 the ring allocated a
+//! single slot, where a producer's published sequence (`p + 1`) is
+//! indistinguishable from "free for position `p + 1`", letting a second
+//! unbounded push overwrite an unconsumed request and wedging the reaper.
+//! `Ring::new` now clamps the slot count to 2 (see shard.rs).
+
+#![cfg(loom)]
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use wavescale::coordinator::{FleetTopology, GroupConfig, Request, ShardQueue, TopologyStore};
+
+fn req(id: u64) -> Request {
+    Request { id, payload: vec![0.0; 2], submitted: 0 }
+}
+
+fn ids(rs: &[Request]) -> Vec<u64> {
+    rs.iter().map(|r| r.id).collect()
+}
+
+/// S23 invariant 1: racing bounded pushes never admit past the exact
+/// capacity bound, even with a concurrent pop freeing a slot mid-race.
+///
+/// Capacity 1, two producers (`try_push`) and one consumer (`pop_upto`)
+/// — the smallest configuration where the length-guard CAS, the ring
+/// claim CAS and the consumer's `fetch_sub` all contend on the same
+/// slot. Checks conservation (every admitted request is popped or still
+/// queued, exactly once) and the bound (`len <= capacity` once quiesced;
+/// mid-flight over-admission would corrupt the slot protocol and show up
+/// as a lost or duplicated id).
+#[test]
+fn bounded_push_never_over_admits() {
+    loom::model(|| {
+        let q = Arc::new(ShardQueue::new(1));
+
+        let producers: Vec<_> = [1u64, 2]
+            .into_iter()
+            .map(|id| {
+                let q = Arc::clone(&q);
+                loom::thread::spawn(move || q.try_push(req(id)).is_ok())
+            })
+            .collect();
+        let consumer = {
+            let q = Arc::clone(&q);
+            loom::thread::spawn(move || q.pop_upto(1))
+        };
+
+        let admitted = producers
+            .into_iter()
+            .filter(|h| h.join().unwrap())
+            .count();
+        let popped = consumer.join().unwrap();
+
+        assert!(admitted >= 1, "the first length-guard CAS cannot lose");
+        assert!(q.len() <= q.capacity(), "over-admitted: len {} > cap 1", q.len());
+
+        let mut collected = popped;
+        collected.extend(q.drain_all());
+        assert_eq!(
+            collected.len(),
+            admitted,
+            "admitted {} but recovered {:?}",
+            admitted,
+            ids(&collected)
+        );
+        let unique: HashSet<u64> = collected.iter().map(|r| r.id).collect();
+        assert_eq!(unique.len(), collected.len(), "duplicated id: {:?}", ids(&collected));
+        assert!(q.is_empty());
+    });
+}
+
+/// S23 invariant 2: per-producer FIFO order survives `overflow_push`
+/// frontier reaping.
+///
+/// Capacity 1 (2 physical slots after the S23 fix), two producers each
+/// pushing two requests via `push_unbounded` — four pushes through a
+/// two-slot ring force the overflow path: the spilling producer reaps
+/// the claimed frontier into staging (spinning through any
+/// mid-publish slot) before appending its own request. In every
+/// schedule, each producer's second request must drain after its first.
+/// At capacity 1 this model also exercised the single-slot ring
+/// overwrite bug described in the module docs.
+#[test]
+fn per_producer_fifo_survives_overflow_reaping() {
+    loom::model(|| {
+        let q = Arc::new(ShardQueue::new(1));
+
+        let producers: Vec<_> = [100u64, 200]
+            .into_iter()
+            .map(|base| {
+                let q = Arc::clone(&q);
+                loom::thread::spawn(move || {
+                    q.push_unbounded(req(base + 1));
+                    q.push_unbounded(req(base + 2));
+                })
+            })
+            .collect();
+        for h in producers {
+            h.join().unwrap();
+        }
+
+        let drained = ids(&q.drain_all());
+        assert_eq!(drained.len(), 4, "dropped a request: {drained:?}");
+        for base in [100u64, 200] {
+            let per: Vec<u64> = drained.iter().copied().filter(|id| id / 100 == base / 100).collect();
+            assert_eq!(
+                per,
+                vec![base + 1, base + 2],
+                "producer {base} order violated in drain {drained:?}"
+            );
+        }
+        assert!(q.is_empty());
+    });
+}
+
+/// S23 invariant 3: the WaitSlot generation protocol has no lost
+/// wakeups in `pop_wait`.
+///
+/// One producer pushes a single request while a waiter sits in
+/// `pop_wait` with a deadline far beyond the model. The classic lost
+/// wakeup is notify-before-wait: the producer's `notify_slot` lands
+/// between the waiter's empty `take_front` and its condvar wait. The
+/// generation counter (sampled *before* the emptiness probe, compared
+/// under the slot mutex) must close that window in every schedule.
+/// The waiter must always return the item, and must never be rescued by
+/// the deadlock-timeout rule — `loom::timeout_fired()` stays false, so
+/// the wakeup itself (not the timeout) made progress.
+#[test]
+fn waitslot_generation_has_no_lost_wakeups() {
+    loom::model(|| {
+        let q = Arc::new(ShardQueue::new(2));
+
+        let producer = {
+            let q = Arc::clone(&q);
+            loom::thread::spawn(move || q.try_push(req(7)).unwrap())
+        };
+        let waiter = {
+            let q = Arc::clone(&q);
+            loom::thread::spawn(move || q.pop_wait(1, Duration::from_secs(3600)))
+        };
+
+        producer.join().unwrap();
+        let got = waiter.join().unwrap();
+
+        assert_eq!(ids(&got), vec![7], "pop_wait lost the pushed request");
+        assert!(
+            !loom::timeout_fired(),
+            "waiter only progressed via the deadlock-timeout rescue: lost wakeup"
+        );
+    });
+}
+
+/// S23 invariant 4: a gate + drain racing concurrent pushes never drops
+/// a request.
+///
+/// The Central Controller's migration/fault path gates a shard and
+/// drains it while the dispatcher may still be pushing (`try_push`) and
+/// the re-dispatch path may be force-feeding it (`push_unbounded`).
+/// Gating does not reject pushes — it only parks the worker — so the
+/// invariant is conservation: every admitted request is in the CC's
+/// drain or still queued for the next epoch's drain, exactly once.
+#[test]
+fn gate_drain_vs_push_never_drops() {
+    loom::model(|| {
+        let q = Arc::new(ShardQueue::new(2));
+
+        let pusher = {
+            let q = Arc::clone(&q);
+            loom::thread::spawn(move || {
+                let mut admitted = 0usize;
+                if q.try_push(req(1)).is_ok() {
+                    admitted += 1;
+                }
+                q.push_unbounded(req(2));
+                admitted + 1
+            })
+        };
+        let cc = {
+            let q = Arc::clone(&q);
+            loom::thread::spawn(move || {
+                q.set_gated(true);
+                q.drain_all()
+            })
+        };
+
+        let admitted = pusher.join().unwrap();
+        let drained = cc.join().unwrap();
+        let leftover = q.drain_all();
+
+        let mut collected = drained;
+        collected.extend(leftover);
+        assert_eq!(
+            collected.len(),
+            admitted,
+            "gate/drain dropped a request: admitted {} recovered {:?}",
+            admitted,
+            ids(&collected)
+        );
+        let unique: HashSet<u64> = collected.iter().map(|r| r.id).collect();
+        assert_eq!(unique.len(), collected.len(), "duplicated id: {:?}", ids(&collected));
+        assert!(q.is_empty());
+        assert!(q.is_gated(), "gate flag must survive the race");
+    });
+}
+
+/// S23 invariant 5: `TopologyStore` version/mask publication is never
+/// observed torn by the router fast path.
+///
+/// `migrate` publishes the new hosting mask with a Release store and
+/// *then* the new version with a Release store; the router fast path
+/// loads version first (cache-invalidation probe), mask second, both
+/// Acquire. Two readers race one migration of group 0 from node 0 to
+/// node 1. In every schedule each reader must see either layout, never
+/// a torn one: a reader that observes the new version must also observe
+/// the new mask (mask-before-version publication order), and the mask
+/// is always exactly one of the two valid single-host values.
+#[test]
+fn topology_version_mask_publication_is_never_torn() {
+    loom::model(|| {
+        let group = GroupConfig {
+            benchmark: "g0".to_string(),
+            share: 1.0,
+            n_instances: 1,
+            qos_target: None,
+        };
+        let topo = FleetTopology::spread(vec![group], 2).unwrap();
+        let v0 = topo.version();
+        let store = Arc::new(TopologyStore::new(topo));
+        assert_eq!(store.hosting_mask(0), 0b01);
+
+        let migrator = {
+            let store = Arc::clone(&store);
+            loom::thread::spawn(move || store.migrate(0, 0, 1).unwrap())
+        };
+        let readers: Vec<_> = (0..2)
+            .map(|_| {
+                let store = Arc::clone(&store);
+                loom::thread::spawn(move || {
+                    // Router fast path order: version probe, then mask.
+                    let v = store.version();
+                    let m = store.hosting_mask(0);
+                    (v, m)
+                })
+            })
+            .collect();
+
+        migrator.join().unwrap();
+        for h in readers {
+            let (v, m) = h.join().unwrap();
+            assert!(m == 0b01 || m == 0b10, "torn hosting mask {m:#b}");
+            if v > v0 {
+                assert_eq!(
+                    m, 0b10,
+                    "reader saw the new version {v} with the old mask {m:#b}"
+                );
+            }
+        }
+        assert_eq!(store.version(), v0 + 1);
+        assert_eq!(store.hosting_mask(0), 0b10);
+    });
+}

@@ -4,7 +4,10 @@
 //! The fleet-level properties run the *live* coordinator — real worker
 //! and CC threads — on a `VirtualClock`, so hundreds of randomized
 //! scenarios replay in seconds and each failure reports a replayable
-//! seed (`WAVESCALE_PROP_SEED`):
+//! seed (`WAVESCALE_PROP_SEED`). The concurrent ring properties
+//! additionally shrink on failure (`util::prop::check_shrink`): the
+//! report carries both the original failing shape and the minimal
+//! producers/per/cap triple that still breaks.
 //!
 //! 1. every shard-queue op sequence matches a model queue (FIFO order,
 //!    capacity bound, depth mirror);
@@ -25,7 +28,7 @@ use wavescale::coordinator::{MigrationPlan, Request, ShardQueue};
 use wavescale::markov::PredictorKind;
 use wavescale::simtest::{self, SimSpec};
 use wavescale::util::prng::Rng;
-use wavescale::util::prop::{assert_that, check};
+use wavescale::util::prop::{assert_that, check, check_shrink, Shrink};
 use wavescale::vscale::CapacityPolicy;
 use wavescale::workload::{FaultPlan, Scenario};
 
@@ -119,6 +122,41 @@ fn tagged(producer: usize, seq: usize) -> u64 {
     (producer as u64) << 32 | seq as u64
 }
 
+/// Randomized shape of a concurrent ring exercise. Shrinks toward fewer
+/// producers, fewer requests per producer and a smaller ring, so a
+/// failing case minimizes to the tightest schedule that still breaks
+/// (floors keep every candidate a meaningful exercise). The failing
+/// seed is printed either way, so even an unshrinkably-racy case
+/// replays exactly via `WAVESCALE_PROP_SEED`.
+#[derive(Clone, Copy, Debug)]
+struct RingCase {
+    producers: usize,
+    per: usize,
+    cap: usize,
+}
+
+impl Shrink for RingCase {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        for producers in self.producers.shrink() {
+            if producers >= 1 {
+                out.push(RingCase { producers, ..*self });
+            }
+        }
+        for per in self.per.shrink() {
+            if per >= 1 {
+                out.push(RingCase { per, ..*self });
+            }
+        }
+        for cap in self.cap.shrink() {
+            if cap >= 1 {
+                out.push(RingCase { cap, ..*self });
+            }
+        }
+        out
+    }
+}
+
 #[test]
 fn prop_ring_preserves_per_producer_fifo_under_concurrent_pushes() {
     // ISSUE 8 tentpole property: the lock-free ring serializes producers
@@ -126,48 +164,56 @@ fn prop_ring_preserves_per_producer_fifo_under_concurrent_pushes() {
     // *per-producer* FIFO — every producer's requests come out in the
     // order that producer pushed them, with nothing lost or duplicated,
     // even while a consumer drains concurrently.
-    check("ring per-producer FIFO under contention", 16, |rng| {
-        let n_producers = rng.index(2, 5);
-        let per = rng.index(64, 257);
+    check_shrink(
+        "ring per-producer FIFO under contention",
+        16,
         // Small rings force the overflow-staging path; larger ones keep
         // most traffic on the lock-free fast path.
-        let q = Arc::new(ShardQueue::new(rng.index(4, 65)));
-        let handles: Vec<_> = (0..n_producers)
-            .map(|p| {
-                let q = q.clone();
-                std::thread::spawn(move || {
-                    for s in 0..per {
-                        q.push_unbounded(req(tagged(p, s)));
-                    }
+        |rng| RingCase {
+            producers: rng.index(2, 5),
+            per: rng.index(64, 257),
+            cap: rng.index(4, 65),
+        },
+        |case| {
+            let RingCase { producers: n_producers, per, cap } = *case;
+            let q = Arc::new(ShardQueue::new(cap));
+            let handles: Vec<_> = (0..n_producers)
+                .map(|p| {
+                    let q = q.clone();
+                    std::thread::spawn(move || {
+                        for s in 0..per {
+                            q.push_unbounded(req(tagged(p, s)));
+                        }
+                    })
                 })
-            })
-            .collect();
-        // Single consumer racing the producers (home-worker shape).
-        let total = n_producers * per;
-        let mut got: Vec<u64> = Vec::with_capacity(total);
-        while got.len() < total {
-            got.extend(q.pop_upto(16).iter().map(|r| r.id));
-        }
-        for h in handles {
-            h.join().map_err(|_| "producer panicked".to_string())?;
-        }
-        assert_that(q.len() == 0, "depth mirror nonzero after full drain")?;
-        let unique: HashSet<u64> = got.iter().copied().collect();
-        assert_that(
-            unique.len() == total,
-            format!("{} unique of {total}: lost or duplicated requests", unique.len()),
-        )?;
-        let mut next_seq = vec![0u64; n_producers];
-        for id in got {
-            let (p, s) = ((id >> 32) as usize, id & 0xffff_ffff);
+                .collect();
+            // Single consumer racing the producers (home-worker shape).
+            let total = n_producers * per;
+            let mut got: Vec<u64> = Vec::with_capacity(total);
+            while got.len() < total {
+                got.extend(q.pop_upto(16).iter().map(|r| r.id));
+            }
+            for h in handles {
+                h.join().map_err(|_| "producer panicked".to_string())?;
+            }
+            assert_that(q.len() == 0, "depth mirror nonzero after full drain")?;
+            let unique: HashSet<u64> = got.iter().copied().collect();
             assert_that(
-                s == next_seq[p],
-                format!("producer {p}: popped seq {s}, expected {}", next_seq[p]),
+                unique.len() == total,
+                format!("{} unique of {total}: lost or duplicated requests", unique.len()),
             )?;
-            next_seq[p] += 1;
-        }
-        Ok(())
-    });
+            let mut next_seq = vec![0u64; n_producers];
+            for id in got {
+                let (p, s) = ((id >> 32) as usize, id & 0xffff_ffff);
+                assert_that(
+                    s == next_seq[p],
+                    format!("producer {p}: popped seq {s}, expected {}", next_seq[p]),
+                )?;
+                next_seq[p] += 1;
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
@@ -175,41 +221,50 @@ fn prop_ring_capacity_bound_is_exact_under_concurrent_bounded_pushes() {
     // Bounded admission is a backpressure contract: racing try_push
     // callers must never over-admit past the configured capacity, and
     // every accepted request must still be there afterwards.
-    check("ring capacity bound under contention", 16, |rng| {
-        let cap = rng.index(1, 49);
-        let q = Arc::new(ShardQueue::new(cap));
-        let accepted = Arc::new(AtomicUsize::new(0));
-        let handles: Vec<_> = (0..4usize)
-            .map(|p| {
-                let (q, accepted) = (q.clone(), accepted.clone());
-                std::thread::spawn(move || {
-                    for s in 0..64 {
-                        if q.try_push(req(tagged(p, s))).is_ok() {
-                            accepted.fetch_add(1, Ordering::Relaxed);
+    check_shrink(
+        "ring capacity bound under contention",
+        16,
+        |rng| RingCase {
+            producers: rng.index(2, 6),
+            per: rng.index(32, 97),
+            cap: rng.index(1, 49),
+        },
+        |case| {
+            let RingCase { producers, per, cap } = *case;
+            let q = Arc::new(ShardQueue::new(cap));
+            let accepted = Arc::new(AtomicUsize::new(0));
+            let handles: Vec<_> = (0..producers)
+                .map(|p| {
+                    let (q, accepted) = (q.clone(), accepted.clone());
+                    std::thread::spawn(move || {
+                        for s in 0..per {
+                            if q.try_push(req(tagged(p, s))).is_ok() {
+                                accepted.fetch_add(1, Ordering::Relaxed);
+                            }
                         }
-                    }
+                    })
                 })
-            })
-            .collect();
-        for h in handles {
-            h.join().map_err(|_| "producer panicked".to_string())?;
-        }
-        let admitted = accepted.load(Ordering::Relaxed);
-        assert_that(
-            admitted <= cap,
-            format!("admitted {admitted} past capacity {cap}"),
-        )?;
-        assert_that(
-            q.len() == admitted,
-            format!("depth mirror {} != admitted {admitted}", q.len()),
-        )?;
-        let drained = q.drain_all();
-        let unique: HashSet<u64> = drained.iter().map(|r| r.id).collect();
-        assert_that(
-            unique.len() == admitted,
-            format!("drained {} unique of {admitted} admitted", unique.len()),
-        )
-    });
+                .collect();
+            for h in handles {
+                h.join().map_err(|_| "producer panicked".to_string())?;
+            }
+            let admitted = accepted.load(Ordering::Relaxed);
+            assert_that(
+                admitted <= cap,
+                format!("admitted {admitted} past capacity {cap}"),
+            )?;
+            assert_that(
+                q.len() == admitted,
+                format!("depth mirror {} != admitted {admitted}", q.len()),
+            )?;
+            let drained = q.drain_all();
+            let unique: HashSet<u64> = drained.iter().map(|r| r.id).collect();
+            assert_that(
+                unique.len() == admitted,
+                format!("drained {} unique of {admitted} admitted", unique.len()),
+            )
+        },
+    );
 }
 
 #[test]
@@ -219,57 +274,65 @@ fn prop_ring_drain_never_drops_under_gating_and_failure_churn() {
     // while pushes, steals and pops are in flight must never lose a
     // request: whatever the racing consumers missed, the final drain
     // returns exactly.
-    check("ring conserves work under flag churn", 12, |rng| {
-        let n_producers = rng.index(2, 4);
-        let per = rng.index(64, 193);
-        let q = Arc::new(ShardQueue::new(rng.index(4, 33)));
-        let stop = Arc::new(AtomicBool::new(false));
-        let churn = {
-            let (q, stop) = (q.clone(), stop.clone());
-            std::thread::spawn(move || {
-                while !stop.load(Ordering::Relaxed) {
-                    q.set_gated(true);
-                    q.set_failed(true);
-                    q.set_failed(false);
-                    q.set_gated(false);
-                }
-            })
-        };
-        let producers: Vec<_> = (0..n_producers)
-            .map(|p| {
-                let q = q.clone();
+    check_shrink(
+        "ring conserves work under flag churn",
+        12,
+        |rng| RingCase {
+            producers: rng.index(2, 4),
+            per: rng.index(64, 193),
+            cap: rng.index(4, 33),
+        },
+        |case| {
+            let RingCase { producers: n_producers, per, cap } = *case;
+            let q = Arc::new(ShardQueue::new(cap));
+            let stop = Arc::new(AtomicBool::new(false));
+            let churn = {
+                let (q, stop) = (q.clone(), stop.clone());
                 std::thread::spawn(move || {
-                    for s in 0..per {
-                        q.push_unbounded(req(tagged(p, s)));
+                    while !stop.load(Ordering::Relaxed) {
+                        q.set_gated(true);
+                        q.set_failed(true);
+                        q.set_failed(false);
+                        q.set_gated(false);
                     }
                 })
-            })
-            .collect();
-        // A racing popper and stealer collect what they can; the drain
-        // sweeps the remainder after the producers retire.
-        let mut got: Vec<u64> = Vec::new();
-        for _ in 0..per {
-            got.extend(q.pop_upto(4).iter().map(|r| r.id));
-            got.extend(q.steal_upto(2).iter().map(|r| r.id));
-        }
-        for h in producers {
-            h.join().map_err(|_| "producer panicked".to_string())?;
-        }
-        got.extend(q.drain_all().iter().map(|r| r.id));
-        stop.store(true, Ordering::Relaxed);
-        churn.join().map_err(|_| "churn thread panicked".to_string())?;
-        let total = n_producers * per;
-        let unique: HashSet<u64> = got.iter().copied().collect();
-        assert_that(
-            got.len() == total && unique.len() == total,
-            format!(
-                "collected {} ({} unique) of {total}: churn lost or duplicated work",
-                got.len(),
-                unique.len()
-            ),
-        )?;
-        assert_that(q.len() == 0, "depth mirror nonzero after final drain")
-    });
+            };
+            let producers: Vec<_> = (0..n_producers)
+                .map(|p| {
+                    let q = q.clone();
+                    std::thread::spawn(move || {
+                        for s in 0..per {
+                            q.push_unbounded(req(tagged(p, s)));
+                        }
+                    })
+                })
+                .collect();
+            // A racing popper and stealer collect what they can; the drain
+            // sweeps the remainder after the producers retire.
+            let mut got: Vec<u64> = Vec::new();
+            for _ in 0..per {
+                got.extend(q.pop_upto(4).iter().map(|r| r.id));
+                got.extend(q.steal_upto(2).iter().map(|r| r.id));
+            }
+            for h in producers {
+                h.join().map_err(|_| "producer panicked".to_string())?;
+            }
+            got.extend(q.drain_all().iter().map(|r| r.id));
+            stop.store(true, Ordering::Relaxed);
+            churn.join().map_err(|_| "churn thread panicked".to_string())?;
+            let total = n_producers * per;
+            let unique: HashSet<u64> = got.iter().copied().collect();
+            assert_that(
+                got.len() == total && unique.len() == total,
+                format!(
+                    "collected {} ({} unique) of {total}: churn lost or duplicated work",
+                    got.len(),
+                    unique.len()
+                ),
+            )?;
+            assert_that(q.len() == 0, "depth mirror nonzero after final drain")
+        },
+    );
 }
 
 /// A randomized small scenario spec; every parameter that could matter is

@@ -1,0 +1,59 @@
+//! Instrumented `UnsafeCell` with concurrent-access detection.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::rt;
+
+/// An `UnsafeCell` whose `with`/`with_mut` access windows are tracked by
+/// the checker: two overlapping windows (any writer concurrent with any
+/// other access) fail the model with the offending schedule. A scheduling
+/// point *inside* each window gives overlap a chance to manifest, so a
+/// wrong `// SAFETY:` exclusivity argument becomes a deterministic test
+/// failure instead of silent UB.
+#[derive(Debug, Default)]
+pub struct UnsafeCell<T> {
+    data: std::cell::UnsafeCell<T>,
+    readers: AtomicUsize,
+    writers: AtomicUsize,
+}
+
+impl<T> UnsafeCell<T> {
+    /// Wrap `value` in a cell.
+    pub fn new(value: T) -> Self {
+        UnsafeCell {
+            data: std::cell::UnsafeCell::new(value),
+            readers: AtomicUsize::new(0),
+            writers: AtomicUsize::new(0),
+        }
+    }
+
+    /// Run `f` with a shared raw pointer to the contents; the window must
+    /// not overlap any `with_mut` window.
+    pub fn with<R>(&self, f: impl FnOnce(*const T) -> R) -> R {
+        rt::op();
+        if self.writers.load(Ordering::SeqCst) != 0 {
+            rt::fail_current("UnsafeCell: immutable access concurrent with a mutable access".into());
+        }
+        self.readers.fetch_add(1, Ordering::SeqCst);
+        rt::op(); // let an overlapping writer run and be detected
+        let out = f(self.data.get());
+        self.readers.fetch_sub(1, Ordering::SeqCst);
+        out
+    }
+
+    /// Run `f` with an exclusive raw pointer to the contents; the window
+    /// must not overlap any other access window.
+    pub fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        rt::op();
+        if self.writers.fetch_add(1, Ordering::SeqCst) != 0 {
+            rt::fail_current("UnsafeCell: two concurrent mutable accesses".into());
+        }
+        if self.readers.load(Ordering::SeqCst) != 0 {
+            rt::fail_current("UnsafeCell: mutable access concurrent with an immutable access".into());
+        }
+        rt::op(); // let an overlapping accessor run and be detected
+        let out = f(self.data.get());
+        self.writers.fetch_sub(1, Ordering::SeqCst);
+        out
+    }
+}

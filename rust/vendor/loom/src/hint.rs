@@ -1,0 +1,8 @@
+//! Spin-loop hint: under the checker a spin must yield, or a schedule
+//! that keeps running the spinner would never terminate.
+
+/// Scheduling hint used inside spin loops; equivalent to
+/// [`crate::thread::yield_now`].
+pub fn spin_loop() {
+    crate::thread::yield_now();
+}

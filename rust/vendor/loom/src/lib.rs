@@ -1,0 +1,51 @@
+//! Offline, API-compatible subset of the [loom] concurrency model checker.
+//!
+//! The build environment is fully offline, so the real crates.io `loom`
+//! cannot be pulled in; this vendored stand-in implements the part of its
+//! API that `wavescale`'s `crate::sync` shim re-exports, backed by a real
+//! (if simpler) model checker:
+//!
+//! * every model thread is an OS thread driven by a **cooperative
+//!   scheduler** — exactly one model thread runs at any instant, and every
+//!   instrumented operation (atomic access, mutex lock/unlock, condvar
+//!   wait/notify, `UnsafeCell` access window, spawn/join/yield) is a
+//!   scheduling point;
+//! * [`model`] runs the closure repeatedly, performing an **exhaustive
+//!   depth-first search over all scheduling decisions**: each execution
+//!   replays a recorded decision prefix and flips the next unexplored
+//!   branch, until no unexplored branch remains. There is no iteration
+//!   cap by default (`LOOM_MAX_BRANCHES=0`); `LOOM_MAX_PREEMPTIONS` can
+//!   optionally bound preemptive switches the way real loom does.
+//!
+//! On an invariant violation (user panic, detected deadlock, overlapping
+//! `UnsafeCell` access windows) the failing schedule — the sequence of
+//! chosen thread ids — is printed so the interleaving can be reasoned
+//! about, and [`model`] panics, failing the test.
+//!
+//! # Fidelity limits (vs. real loom)
+//!
+//! * **Sequential consistency only.** Operations execute with `SeqCst`
+//!   semantics regardless of the `Ordering` passed; the checker explores
+//!   all *interleavings* but not weak-memory *reorderings*, so it detects
+//!   logic races (lost wakeups, over-admission, torn publication, slot
+//!   aliasing) but cannot prove a `Relaxed`-vs-`Acquire` choice correct.
+//!   The DESIGN.md S23 ordering table carries the pairing arguments.
+//! * `compare_exchange_weak` never fails spuriously (callers loop anyway).
+//! * Condvars have no spurious wakeups; `wait_timeout` "times out" only
+//!   when the whole model would otherwise deadlock (every thread blocked).
+//!   A protocol that silently *relies* on a timeout to recover from a lost
+//!   wakeup is therefore visible to models via [`timeout_fired`].
+//! * `thread::yield_now` (and the shim's `hint::spin_loop`) deschedules
+//!   the caller until another runnable thread has executed at least one
+//!   operation, which keeps spin loops from exploding the schedule space —
+//!   the same pruning real loom applies to yields.
+//!
+//! [loom]: https://docs.rs/loom
+
+pub mod cell;
+pub mod hint;
+mod rt;
+pub mod sync;
+pub mod thread;
+
+pub use rt::{model, timeout_fired};

@@ -1,0 +1,533 @@
+//! Cooperative scheduler and exhaustive schedule explorer.
+//!
+//! One `Execution` is one run of the model closure under one schedule.
+//! Model threads are OS threads that hand a single "active" token around:
+//! a thread may only perform an instrumented operation while it holds the
+//! token, and every operation routes through [`Execution::transition`],
+//! which picks the next thread to run. When more than one thread is
+//! runnable the pick is a recorded `Decision`; [`model`] drives the
+//! depth-first search by replaying a decision prefix and advancing the
+//! last branch that still has unexplored alternatives.
+
+use std::cell::RefCell;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar as OsCondvar, Mutex as OsMutex, MutexGuard as OsGuard};
+
+/// Upper bound on model threads (keeps the schedule space sane).
+pub(crate) const MAX_THREADS: usize = 8;
+
+/// Per-execution operation bound; tripping it means a loop in the model
+/// makes no progress under some schedule (e.g. an un-yielding spin).
+const MAX_OPS_PER_EXECUTION: usize = 1_000_000;
+
+/// Panic payload used to unwind model threads once an execution aborts;
+/// never reported as a failure itself.
+pub(crate) struct AbortToken;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Run {
+    /// Schedulable.
+    Runnable,
+    /// Descheduled by `yield_now` until another thread runs an op.
+    Yielded,
+    /// Waiting for a mutex (id) to be released.
+    BlockedLock(usize),
+    /// Waiting on a condvar (cv id, mutex id, whether the wait is timed).
+    BlockedCondvar(usize, usize, bool),
+    /// Waiting for a thread (id) to finish.
+    BlockedJoin(usize),
+    /// Returned (or unwound).
+    Finished,
+}
+
+/// One scheduling decision: which of `num` runnable candidates ran.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Decision {
+    /// Index into the (tid-sorted) candidate list.
+    chosen: usize,
+    /// Candidate count at this point (for replay validation/backtrack).
+    num: usize,
+    /// Chosen thread id (for failure traces).
+    tid: usize,
+}
+
+struct ExecState {
+    threads: Vec<Run>,
+    /// Set while a condvar waiter was released by the deadlock-timeout
+    /// rule rather than a notify.
+    woken_by_timeout: Vec<bool>,
+    /// Thread currently holding the run token (`usize::MAX` once done).
+    active: usize,
+    decisions: Vec<Decision>,
+    /// Next decision index (replayed below `decisions.len()` at entry).
+    depth: usize,
+    ops: usize,
+    /// Mutexes: `Some(tid)` while held.
+    locks: Vec<Option<usize>>,
+    condvars: usize,
+    abort: bool,
+    failure: Option<String>,
+    timeout_fired: bool,
+    preemptions: usize,
+    preemption_bound: Option<usize>,
+    finished: usize,
+}
+
+pub(crate) struct Execution {
+    state: OsMutex<ExecState>,
+    cv: OsCondvar,
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<(Arc<Execution>, usize)>> = const { RefCell::new(None) };
+}
+
+fn current() -> (Arc<Execution>, usize) {
+    CURRENT.with(|c| {
+        c.borrow()
+            .clone()
+            .expect("loom primitive used outside of loom::model")
+    })
+}
+
+impl Execution {
+    fn new(replay: Vec<Decision>, preemption_bound: Option<usize>) -> Self {
+        Execution {
+            state: OsMutex::new(ExecState {
+                threads: vec![Run::Runnable],
+                woken_by_timeout: vec![false],
+                active: 0,
+                decisions: replay,
+                depth: 0,
+                ops: 0,
+                locks: Vec::new(),
+                condvars: 0,
+                abort: false,
+                failure: None,
+                timeout_fired: false,
+                preemptions: 0,
+                preemption_bound,
+                finished: 0,
+            }),
+            cv: OsCondvar::new(),
+        }
+    }
+
+    /// Record a failure (first one wins) and abort the execution.
+    fn fail(&self, st: &mut ExecState, msg: String) {
+        if st.failure.is_none() {
+            let trace: Vec<usize> = st.decisions[..st.depth].iter().map(|d| d.tid).collect();
+            st.failure = Some(format!("{msg}\n  schedule (thread ids): {trace:?}"));
+        }
+        st.abort = true;
+        self.cv.notify_all();
+    }
+
+    /// Pick the next thread to run. Called with the state lock held by a
+    /// thread that has already moved itself to its new `Run` state.
+    fn schedule(&self, st: &mut ExecState) {
+        if st.abort {
+            self.cv.notify_all();
+            return;
+        }
+        if st.finished == st.threads.len() {
+            st.active = usize::MAX;
+            self.cv.notify_all();
+            return;
+        }
+        st.ops += 1;
+        if st.ops > MAX_OPS_PER_EXECUTION {
+            self.fail(
+                st,
+                format!("execution exceeded {MAX_OPS_PER_EXECUTION} operations (unbounded spin loop in the model?)"),
+            );
+            return;
+        }
+        let mut candidates: Vec<usize>;
+        loop {
+            candidates = (0..st.threads.len())
+                .filter(|&t| st.threads[t] == Run::Runnable)
+                .collect();
+            if !candidates.is_empty() {
+                break;
+            }
+            // No plain runnable thread: promote yielded threads first,
+            // then (only when the model would otherwise be stuck) fire
+            // every timed condvar wait, and only then call it a deadlock.
+            let yielded: Vec<usize> = (0..st.threads.len())
+                .filter(|&t| st.threads[t] == Run::Yielded)
+                .collect();
+            if !yielded.is_empty() {
+                for t in yielded {
+                    st.threads[t] = Run::Runnable;
+                }
+                continue;
+            }
+            let timed: Vec<usize> = (0..st.threads.len())
+                .filter(|&t| matches!(st.threads[t], Run::BlockedCondvar(_, _, true)))
+                .collect();
+            if !timed.is_empty() {
+                for t in timed {
+                    st.threads[t] = Run::Runnable;
+                    st.woken_by_timeout[t] = true;
+                }
+                st.timeout_fired = true;
+                continue;
+            }
+            self.fail(st, "deadlock: every model thread is blocked".to_string());
+            return;
+        }
+        // Optional loom-style preemption bounding (LOOM_MAX_PREEMPTIONS).
+        let prev = st.active;
+        if let Some(bound) = st.preemption_bound {
+            if st.preemptions >= bound && candidates.contains(&prev) {
+                candidates = vec![prev];
+            }
+        }
+        let chosen = if st.depth < st.decisions.len() {
+            let d = st.decisions[st.depth];
+            if d.num != candidates.len() {
+                self.fail(
+                    st,
+                    format!(
+                        "nondeterministic model: replay expected {} candidates at decision {}, found {}",
+                        d.num,
+                        st.depth,
+                        candidates.len()
+                    ),
+                );
+                return;
+            }
+            candidates[d.chosen]
+        } else {
+            st.decisions.push(Decision { chosen: 0, num: candidates.len(), tid: candidates[0] });
+            candidates[0]
+        };
+        st.decisions[st.depth].tid = chosen;
+        st.depth += 1;
+        if chosen != prev && st.threads.get(prev).copied() == Some(Run::Runnable) {
+            st.preemptions += 1;
+        }
+        // A yielded thread becomes runnable again once any *other* thread
+        // has been granted an operation.
+        for t in 0..st.threads.len() {
+            if t != chosen && st.threads[t] == Run::Yielded {
+                st.threads[t] = Run::Runnable;
+            }
+        }
+        st.active = chosen;
+        self.cv.notify_all();
+    }
+
+    /// Block the calling OS thread until it is the scheduled model thread.
+    fn wait_for_turn(&self, tid: usize) {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.abort {
+                drop(st);
+                panic::panic_any(AbortToken);
+            }
+            if st.active == tid && st.threads[tid] == Run::Runnable {
+                return;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// One scheduling point: move the caller to `to`, schedule, and (for
+    /// non-final states) wait until the caller is scheduled again.
+    fn transition(&self, tid: usize, to: Run) {
+        let mut st = self.state.lock().unwrap();
+        if st.abort {
+            drop(st);
+            panic::panic_any(AbortToken);
+        }
+        st.threads[tid] = to;
+        self.schedule(&mut st);
+        drop(st);
+        if to != Run::Finished {
+            self.wait_for_turn(tid);
+        }
+    }
+
+    fn locked(&self) -> OsGuard<'_, ExecState> {
+        self.state.lock().unwrap()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hooks used by the instrumented primitive types.
+// ---------------------------------------------------------------------------
+
+/// Plain scheduling point before a shared-memory operation.
+pub(crate) fn op() {
+    let (exec, tid) = current();
+    exec.transition(tid, Run::Runnable);
+}
+
+/// Report an invariant violation detected by a primitive (e.g. an
+/// overlapping `UnsafeCell` access window) and unwind the caller.
+pub(crate) fn fail_current(msg: String) -> ! {
+    let (exec, tid) = current();
+    {
+        let mut st = exec.locked();
+        exec.fail(&mut st, format!("thread {tid}: {msg}"));
+    }
+    panic::panic_any(AbortToken);
+}
+
+pub(crate) fn alloc_lock() -> usize {
+    let (exec, _) = current();
+    let mut st = exec.locked();
+    st.locks.push(None);
+    st.locks.len() - 1
+}
+
+pub(crate) fn alloc_condvar() -> usize {
+    let (exec, _) = current();
+    let mut st = exec.locked();
+    st.condvars += 1;
+    st.condvars - 1
+}
+
+pub(crate) fn lock_acquire(id: usize) {
+    let (exec, tid) = current();
+    loop {
+        exec.transition(tid, Run::Runnable);
+        let mut st = exec.locked();
+        if st.abort {
+            drop(st);
+            panic::panic_any(AbortToken);
+        }
+        if st.locks[id].is_none() {
+            st.locks[id] = Some(tid);
+            return;
+        }
+        st.threads[tid] = Run::BlockedLock(id);
+        exec.schedule(&mut st);
+        drop(st);
+        exec.wait_for_turn(tid);
+    }
+}
+
+fn release_lock_inner(st: &mut ExecState, id: usize) {
+    st.locks[id] = None;
+    for t in 0..st.threads.len() {
+        if st.threads[t] == Run::BlockedLock(id) {
+            st.threads[t] = Run::Runnable;
+        }
+    }
+}
+
+pub(crate) fn lock_release(id: usize) {
+    let (exec, tid) = current();
+    let mut st = exec.locked();
+    release_lock_inner(&mut st, id);
+    if std::thread::panicking() || st.abort {
+        // Guard dropped during an unwind (or after an abort): release the
+        // lock so peers can proceed, but do not schedule — a second panic
+        // here would abort the process.
+        exec.cv.notify_all();
+        return;
+    }
+    exec.schedule(&mut st);
+    drop(st);
+    exec.wait_for_turn(tid);
+}
+
+/// Condvar wait: atomically release the mutex and block; returns whether
+/// the wakeup came from the deadlock-timeout rule (not a notify). The
+/// caller re-acquires the mutex via [`lock_acquire`] before returning to
+/// user code.
+pub(crate) fn condvar_wait(cv: usize, lock: usize, timed: bool) -> bool {
+    let (exec, tid) = current();
+    {
+        let mut st = exec.locked();
+        if st.abort {
+            drop(st);
+            panic::panic_any(AbortToken);
+        }
+        release_lock_inner(&mut st, lock);
+        st.woken_by_timeout[tid] = false;
+        st.threads[tid] = Run::BlockedCondvar(cv, lock, timed);
+        exec.schedule(&mut st);
+    }
+    exec.wait_for_turn(tid);
+    lock_acquire(lock);
+    let st = exec.locked();
+    st.woken_by_timeout[tid]
+}
+
+pub(crate) fn condvar_notify(cv: usize, all: bool) {
+    let (exec, tid) = current();
+    {
+        let mut st = exec.locked();
+        if st.abort {
+            drop(st);
+            panic::panic_any(AbortToken);
+        }
+        for t in 0..st.threads.len() {
+            if matches!(st.threads[t], Run::BlockedCondvar(c, _, _) if c == cv) {
+                st.threads[t] = Run::Runnable;
+                if !all {
+                    break;
+                }
+            }
+        }
+    }
+    exec.transition(tid, Run::Runnable);
+}
+
+pub(crate) fn yield_now() {
+    let (exec, tid) = current();
+    exec.transition(tid, Run::Yielded);
+}
+
+/// Register a new model thread; returns its id. The spawning thread then
+/// passes through a scheduling point so the child is immediately eligible.
+pub(crate) fn register_thread() -> (Arc<Execution>, usize) {
+    let (exec, _) = current();
+    let child = {
+        let mut st = exec.locked();
+        assert!(
+            st.threads.len() < MAX_THREADS,
+            "loom model spawned more than {MAX_THREADS} threads"
+        );
+        st.threads.push(Run::Runnable);
+        st.woken_by_timeout.push(false);
+        st.threads.len() - 1
+    };
+    (exec, child)
+}
+
+/// Scheduling point after a spawn (gives the child a chance to run).
+pub(crate) fn post_spawn() {
+    op();
+}
+
+/// Body wrapper for every model OS thread: waits for its first turn, runs
+/// the closure, records any non-abort panic as the model failure, and
+/// marks the thread finished (waking joiners).
+pub(crate) fn run_thread<T>(
+    exec: Arc<Execution>,
+    tid: usize,
+    f: impl FnOnce() -> T,
+) -> std::thread::Result<T> {
+    CURRENT.with(|c| *c.borrow_mut() = Some((exec.clone(), tid)));
+    let result = panic::catch_unwind(AssertUnwindSafe(|| {
+        exec.wait_for_turn(tid);
+        f()
+    }));
+    let mut st = exec.locked();
+    if let Err(payload) = &result {
+        if !payload.is::<AbortToken>() {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic payload>".to_string());
+            exec.fail(&mut st, format!("thread {tid} panicked: {msg}"));
+        } else {
+            st.abort = true;
+        }
+    }
+    st.threads[tid] = Run::Finished;
+    st.finished += 1;
+    for t in 0..st.threads.len() {
+        if st.threads[t] == Run::BlockedJoin(tid) {
+            st.threads[t] = Run::Runnable;
+        }
+    }
+    exec.schedule(&mut st);
+    drop(st);
+    CURRENT.with(|c| *c.borrow_mut() = None);
+    result
+}
+
+/// Cooperatively wait for `target` to finish.
+pub(crate) fn join_wait(target: usize) {
+    let (exec, tid) = current();
+    loop {
+        let mut st = exec.locked();
+        if st.abort {
+            drop(st);
+            panic::panic_any(AbortToken);
+        }
+        if st.threads[target] == Run::Finished {
+            return;
+        }
+        st.threads[tid] = Run::BlockedJoin(target);
+        exec.schedule(&mut st);
+        drop(st);
+        exec.wait_for_turn(tid);
+    }
+}
+
+/// True when the current execution released a timed condvar wait via the
+/// deadlock-timeout rule — i.e. a wakeup was *lost* and only the timeout
+/// rescued progress. Models asserting "no lost wakeups" check this.
+pub fn timeout_fired() -> bool {
+    let (exec, _) = current();
+    let st = exec.locked();
+    st.timeout_fired
+}
+
+// ---------------------------------------------------------------------------
+// The explorer.
+// ---------------------------------------------------------------------------
+
+fn env_usize(name: &str) -> Option<usize> {
+    std::env::var(name).ok().and_then(|v| v.parse().ok())
+}
+
+/// Run `f` under every schedule (exhaustive DFS over scheduling
+/// decisions); panics with the failing schedule on the first violation.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    let f = Arc::new(f);
+    let preemption_bound = env_usize("LOOM_MAX_PREEMPTIONS");
+    let max_branches = env_usize("LOOM_MAX_BRANCHES").unwrap_or(0);
+    let mut replay: Vec<Decision> = Vec::new();
+    let mut iters = 0usize;
+    loop {
+        iters += 1;
+        let exec = Arc::new(Execution::new(replay.clone(), preemption_bound));
+        let (e2, f2) = (exec.clone(), f.clone());
+        let main = std::thread::spawn(move || {
+            let _ = run_thread(e2, 0, move || f2());
+        });
+        // Wait for every model thread (including late spawns) to finish.
+        {
+            let mut st = exec.state.lock().unwrap();
+            while st.finished < st.threads.len() {
+                st = exec.cv.wait(st).unwrap();
+            }
+        }
+        let _ = main.join();
+        let st = exec.state.lock().unwrap();
+        if let Some(failure) = &st.failure {
+            panic!("loom: model failed on execution {iters}:\n  {failure}");
+        }
+        replay = st.decisions.clone();
+        drop(st);
+        // Backtrack: advance the deepest decision with an unexplored
+        // alternative; drop fully-explored suffixes.
+        loop {
+            match replay.last_mut() {
+                None => return, // every schedule explored
+                Some(d) if d.chosen + 1 < d.num => {
+                    d.chosen += 1;
+                    break;
+                }
+                Some(_) => {
+                    replay.pop();
+                }
+            }
+        }
+        if max_branches != 0 && iters >= max_branches {
+            panic!("loom: LOOM_MAX_BRANCHES={max_branches} reached before the schedule space was exhausted");
+        }
+    }
+}

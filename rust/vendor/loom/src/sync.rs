@@ -1,0 +1,159 @@
+//! Instrumented `Mutex`/`Condvar` plus the `atomic` submodule.
+
+use std::cell::UnsafeCell as StdUnsafeCell;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicUsize as StdAtomicUsize, Ordering as StdOrdering};
+use std::sync::LockResult;
+use std::time::Duration;
+
+use crate::rt;
+
+pub use std::sync::Arc;
+
+pub mod atomic;
+
+const ID_UNSET: usize = usize::MAX;
+
+/// Lazily bind a primitive to a per-execution scheduler id. Objects are
+/// created fresh inside each execution of the model closure, so the id is
+/// allocated on first use and lives exactly as long as the execution.
+fn bind_id(slot: &StdAtomicUsize, alloc: fn() -> usize) -> usize {
+    let cur = slot.load(StdOrdering::Relaxed);
+    if cur != ID_UNSET {
+        return cur;
+    }
+    let id = alloc();
+    match slot.compare_exchange(ID_UNSET, id, StdOrdering::Relaxed, StdOrdering::Relaxed) {
+        Ok(_) => id,
+        Err(existing) => existing,
+    }
+}
+
+/// Model-checked mutual exclusion lock (cooperative; blocking a model
+/// thread deschedules it, it never blocks the OS thread uncooperatively).
+#[derive(Debug)]
+pub struct Mutex<T> {
+    id: StdAtomicUsize,
+    data: StdUnsafeCell<T>,
+}
+
+// SAFETY: the scheduler guarantees at most one `MutexGuard` exists per
+// mutex at a time (ownership is tracked in `ExecState::locks`), so `data`
+// is never accessed concurrently.
+unsafe impl<T: Send> Send for Mutex<T> {}
+unsafe impl<T: Send> Sync for Mutex<T> {}
+
+impl<T> Mutex<T> {
+    /// Create a new unlocked mutex.
+    pub fn new(value: T) -> Self {
+        Mutex { id: StdAtomicUsize::new(ID_UNSET), data: StdUnsafeCell::new(value) }
+    }
+
+    fn lock_id(&self) -> usize {
+        bind_id(&self.id, rt::alloc_lock)
+    }
+
+    /// Acquire the lock, descheduling the model thread while contended.
+    /// Never returns `Err`: a panicking model thread aborts the whole
+    /// execution, so poisoning is unobservable under the checker.
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        let id = self.lock_id();
+        rt::lock_acquire(id);
+        Ok(MutexGuard { lock: self })
+    }
+
+    /// Consume the mutex, returning the inner value.
+    pub fn into_inner(self) -> LockResult<T> {
+        Ok(self.data.into_inner())
+    }
+}
+
+/// Scoped ownership of a [`Mutex`]; releases (a scheduling point) on drop.
+#[derive(Debug)]
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        // SAFETY: the guard proves this model thread holds the lock.
+        unsafe { &*self.lock.data.get() }
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        // SAFETY: as above; `&mut self` gives unique guard access.
+        unsafe { &mut *self.lock.data.get() }
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        rt::lock_release(self.lock.lock_id());
+    }
+}
+
+/// Result of a timed condvar wait; `timed_out` is true only when the
+/// deadlock-timeout rule (see crate docs) released the waiter.
+#[derive(Debug, Clone, Copy)]
+pub struct WaitTimeoutResult(bool);
+
+impl WaitTimeoutResult {
+    /// Whether the wait ended by timeout rather than a notification.
+    pub fn timed_out(&self) -> bool {
+        self.0
+    }
+}
+
+/// Model-checked condition variable.
+#[derive(Debug)]
+pub struct Condvar {
+    id: StdAtomicUsize,
+}
+
+impl Condvar {
+    /// Create a new condvar.
+    pub fn new() -> Self {
+        Condvar { id: StdAtomicUsize::new(ID_UNSET) }
+    }
+
+    fn cv_id(&self) -> usize {
+        bind_id(&self.id, rt::alloc_condvar)
+    }
+
+    /// Release the guard's mutex and wait for a notification (no spurious
+    /// wakeups are modeled).
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let lock = guard.lock;
+        std::mem::forget(guard); // release happens inside condvar_wait
+        rt::condvar_wait(self.cv_id(), lock.lock_id(), false);
+        Ok(MutexGuard { lock })
+    }
+
+    /// Timed wait. The duration is not simulated: the wait "times out"
+    /// only when every model thread is otherwise blocked, which makes a
+    /// protocol that leans on timeouts to paper over lost wakeups visible
+    /// via [`crate::timeout_fired`].
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        _dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        let lock = guard.lock;
+        std::mem::forget(guard);
+        let timed_out = rt::condvar_wait(self.cv_id(), lock.lock_id(), true);
+        Ok((MutexGuard { lock }, WaitTimeoutResult(timed_out)))
+    }
+
+    /// Wake one waiter (the lowest thread id, deterministically).
+    pub fn notify_one(&self) {
+        rt::condvar_notify(self.cv_id(), false);
+    }
+
+    /// Wake every waiter.
+    pub fn notify_all(&self) {
+        rt::condvar_notify(self.cv_id(), true);
+    }
+}

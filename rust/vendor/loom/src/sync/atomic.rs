@@ -1,0 +1,169 @@
+//! Instrumented atomics. Every operation is a scheduling point; the value
+//! itself lives in the matching `std` atomic and is accessed with `SeqCst`
+//! regardless of the ordering the caller passes (see crate docs: the
+//! checker explores interleavings under sequential consistency, not
+//! weak-memory reorderings).
+
+use crate::rt;
+
+pub use std::sync::atomic::Ordering;
+
+/// Instrumented memory fence (scheduling point + `SeqCst` fence).
+pub fn fence(_order: Ordering) {
+    rt::op();
+    std::sync::atomic::fence(Ordering::SeqCst);
+}
+
+macro_rules! atomic_int {
+    ($name:ident, $ty:ty) => {
+        /// Instrumented integer atomic (see module docs).
+        #[derive(Debug, Default)]
+        pub struct $name(std::sync::atomic::$name);
+
+        impl $name {
+            /// Create a new atomic with the given initial value.
+            pub fn new(v: $ty) -> Self {
+                $name(std::sync::atomic::$name::new(v))
+            }
+
+            /// Load the value.
+            pub fn load(&self, _order: Ordering) -> $ty {
+                rt::op();
+                self.0.load(Ordering::SeqCst)
+            }
+
+            /// Store a value.
+            pub fn store(&self, v: $ty, _order: Ordering) {
+                rt::op();
+                self.0.store(v, Ordering::SeqCst)
+            }
+
+            /// Swap in a value, returning the previous one.
+            pub fn swap(&self, v: $ty, _order: Ordering) -> $ty {
+                rt::op();
+                self.0.swap(v, Ordering::SeqCst)
+            }
+
+            /// Add, returning the previous value.
+            pub fn fetch_add(&self, v: $ty, _order: Ordering) -> $ty {
+                rt::op();
+                self.0.fetch_add(v, Ordering::SeqCst)
+            }
+
+            /// Subtract, returning the previous value.
+            pub fn fetch_sub(&self, v: $ty, _order: Ordering) -> $ty {
+                rt::op();
+                self.0.fetch_sub(v, Ordering::SeqCst)
+            }
+
+            /// Maximum, returning the previous value.
+            pub fn fetch_max(&self, v: $ty, _order: Ordering) -> $ty {
+                rt::op();
+                self.0.fetch_max(v, Ordering::SeqCst)
+            }
+
+            /// Minimum, returning the previous value.
+            pub fn fetch_min(&self, v: $ty, _order: Ordering) -> $ty {
+                rt::op();
+                self.0.fetch_min(v, Ordering::SeqCst)
+            }
+
+            /// Compare-and-exchange.
+            pub fn compare_exchange(
+                &self,
+                current: $ty,
+                new: $ty,
+                _success: Ordering,
+                _failure: Ordering,
+            ) -> Result<$ty, $ty> {
+                rt::op();
+                self.0.compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst)
+            }
+
+            /// Weak compare-and-exchange; never fails spuriously under the
+            /// checker (callers loop on failure anyway).
+            pub fn compare_exchange_weak(
+                &self,
+                current: $ty,
+                new: $ty,
+                success: Ordering,
+                failure: Ordering,
+            ) -> Result<$ty, $ty> {
+                self.compare_exchange(current, new, success, failure)
+            }
+
+            /// Consume the atomic, returning the value (no scheduling
+            /// point: requires unique ownership).
+            pub fn into_inner(self) -> $ty {
+                self.0.into_inner()
+            }
+        }
+    };
+}
+
+atomic_int!(AtomicUsize, usize);
+atomic_int!(AtomicU64, u64);
+
+/// Instrumented boolean atomic (see module docs).
+#[derive(Debug, Default)]
+pub struct AtomicBool(std::sync::atomic::AtomicBool);
+
+impl AtomicBool {
+    /// Create a new atomic with the given initial value.
+    pub fn new(v: bool) -> Self {
+        AtomicBool(std::sync::atomic::AtomicBool::new(v))
+    }
+
+    /// Load the value.
+    pub fn load(&self, _order: Ordering) -> bool {
+        rt::op();
+        self.0.load(Ordering::SeqCst)
+    }
+
+    /// Store a value.
+    pub fn store(&self, v: bool, _order: Ordering) {
+        rt::op();
+        self.0.store(v, Ordering::SeqCst)
+    }
+
+    /// Swap in a value, returning the previous one.
+    pub fn swap(&self, v: bool, _order: Ordering) -> bool {
+        rt::op();
+        self.0.swap(v, Ordering::SeqCst)
+    }
+
+    /// Logical AND, returning the previous value.
+    pub fn fetch_and(&self, v: bool, _order: Ordering) -> bool {
+        rt::op();
+        self.0.fetch_and(v, Ordering::SeqCst)
+    }
+
+    /// Logical OR, returning the previous value.
+    pub fn fetch_or(&self, v: bool, _order: Ordering) -> bool {
+        rt::op();
+        self.0.fetch_or(v, Ordering::SeqCst)
+    }
+
+    /// Compare-and-exchange.
+    pub fn compare_exchange(
+        &self,
+        current: bool,
+        new: bool,
+        _success: Ordering,
+        _failure: Ordering,
+    ) -> Result<bool, bool> {
+        rt::op();
+        self.0.compare_exchange(current, new, Ordering::SeqCst, Ordering::SeqCst)
+    }
+
+    /// Weak compare-and-exchange; never fails spuriously.
+    pub fn compare_exchange_weak(
+        &self,
+        current: bool,
+        new: bool,
+        success: Ordering,
+        failure: Ordering,
+    ) -> Result<bool, bool> {
+        self.compare_exchange(current, new, success, failure)
+    }
+}

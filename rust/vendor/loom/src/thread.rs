@@ -1,0 +1,40 @@
+//! Model-thread spawn/join/yield.
+
+use crate::rt;
+
+/// Handle to a spawned model thread.
+pub struct JoinHandle<T> {
+    tid: usize,
+    os: Option<std::thread::JoinHandle<std::thread::Result<T>>>,
+}
+
+impl<T> JoinHandle<T> {
+    /// Cooperatively wait for the thread to finish and return its result.
+    pub fn join(mut self) -> std::thread::Result<T> {
+        rt::join_wait(self.tid);
+        self.os
+            .take()
+            .expect("join called twice")
+            .join()
+            .expect("model OS thread vanished")
+    }
+}
+
+/// Spawn a model thread. The closure does not run until the scheduler
+/// grants it a turn, so the spawn itself is an explored decision point.
+pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let (exec, tid) = rt::register_thread();
+    let os = std::thread::spawn(move || rt::run_thread(exec, tid, f));
+    rt::post_spawn();
+    JoinHandle { tid, os: Some(os) }
+}
+
+/// Deschedule the caller until another runnable thread has executed at
+/// least one operation (loom's spin-loop pruning semantics).
+pub fn yield_now() {
+    rt::yield_now();
+}

@@ -1,0 +1,408 @@
+//! detlint — determinism lint for the wavescale replay-exact paths.
+//!
+//! The repo's central claim (EXPERIMENTS.md) is that every simulated run
+//! is replay-exact: same seed, same decision log, bit-identical report.
+//! That property dies quietly — one `Instant::now()` in a decision path,
+//! one iteration over a randomized-state `HashMap`, one NaN-unstable
+//! float sort — so this tool rejects the hazard *patterns* at lint time
+//! rather than chasing nondeterminism after the fact.
+//!
+//! ## Rules
+//!
+//! | rule | rejects | where |
+//! |------|---------|-------|
+//! | `wallclock` | `Instant::now` / `SystemTime` / `std::time::Instant` — wall time bypassing the `clock/` abstraction | everywhere except `clock/` |
+//! | `hash-collection` | importing or naming `std::collections::HashMap`/`HashSet` (iteration order is seeded per-process) | decision/trace modules (see `HASH_SCOPE`) |
+//! | `float-sort` | `sort_by`/`max_by`/`min_by` through `partial_cmp`, or `partial_cmp(..).unwrap()` — NaN panics / unstable order; use `total_cmp` | everywhere |
+//! | `randomness` | `thread_rng` / `rand::random` / `from_entropy` / `RandomState` — OS-entropy randomness | everywhere |
+//! | `std-sync-bypass` | `std::sync` / `std::cell` / `std::hint` imports that bypass the `crate::sync` loom shim | `coordinator/`, `clock/`, `metrics/` |
+//!
+//! ## Allows
+//!
+//! A finding is suppressed by an audit comment on the same line or the
+//! directly preceding comment line(s):
+//!
+//! ```text
+//! // detlint: allow(hash-collection) -- keyed by ThreadId, lookup only
+//! use std::collections::HashMap;
+//! ```
+//!
+//! The reason after `--` is mandatory: an allow is a reviewed claim that
+//! the use is sound, not an opt-out. Unknown rule names in an allow are
+//! reported as errors so typos cannot silently disable coverage.
+//!
+//! ## Mechanics and limits
+//!
+//! The scan is line-based over `rust/src/**/*.rs` (vendored crates and
+//! the `sync/` shim itself are excluded). Text after `//` on a line is
+//! ignored, so prose mentioning a pattern does not trip the lint; the
+//! flip side is that a `//` inside a string literal truncates matching
+//! for that line. That trade keeps the tool dependency-free (no parser)
+//! and has no false negatives on the patterns above in this codebase.
+//!
+//! Exit status: 0 clean, 1 findings, 2 usage/IO error.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// A lint rule: a stable name users put in allow comments, a scope
+/// predicate over repo-relative paths, a line predicate, and the message
+/// explaining the determinism hazard.
+struct Rule {
+    name: &'static str,
+    message: &'static str,
+    in_scope: fn(&str) -> bool,
+    matches: fn(&str) -> bool,
+}
+
+/// Decision/trace-path modules where hash-randomized iteration order can
+/// leak into logs, schedules, or reports.
+const HASH_SCOPE: [&str; 7] = [
+    "coordinator/", "clock/", "control/", "vscale/", "workload/", "markov/", "metrics/",
+];
+
+/// Modules whose concurrency primitives must route through the
+/// `crate::sync` shim so loom models exercise the real code.
+const SHIM_SCOPE: [&str; 3] = ["coordinator/", "clock/", "metrics/"];
+
+const RULES: [Rule; 5] = [
+    Rule {
+        name: "wallclock",
+        message: "wall-clock time outside clock/: route through the Clock trait so \
+                  virtual-clock replays stay deterministic",
+        in_scope: |p| !p.starts_with("clock/"),
+        matches: |l| {
+            (has_word(l, "Instant") || has_word(l, "SystemTime"))
+                && (l.contains("std::time::") || l.contains("::now("))
+        },
+    },
+    Rule {
+        name: "hash-collection",
+        message: "HashMap/HashSet in a decision/trace path: iteration order is \
+                  seeded per-process; use BTreeMap/BTreeSet or an index-keyed Vec",
+        in_scope: |p| HASH_SCOPE.iter().any(|s| p.starts_with(s)),
+        matches: |l| {
+            (l.contains("collections::HashMap") || l.contains("collections::HashSet"))
+                || (l.trim_start().starts_with("use ")
+                    && (has_word(l, "HashMap") || has_word(l, "HashSet")))
+        },
+    },
+    Rule {
+        name: "float-sort",
+        message: "float ordering through partial_cmp: NaN panics the unwrap or \
+                  destabilizes the order; use f64::total_cmp",
+        in_scope: |_| true,
+        matches: |l| {
+            let sorting = ["sort_by", "max_by", "min_by"].iter().any(|s| l.contains(s));
+            (sorting && l.contains("partial_cmp"))
+                || (l.contains("partial_cmp(") && l.contains(").unwrap()"))
+        },
+    },
+    Rule {
+        name: "randomness",
+        message: "OS-entropy randomness: derive from the run seed (util::prop / \
+                  workload generators) so runs are replayable",
+        in_scope: |_| true,
+        matches: |l| {
+            has_word(l, "thread_rng")
+                || l.contains("rand::random")
+                || has_word(l, "from_entropy")
+                || has_word(l, "RandomState")
+        },
+    },
+    Rule {
+        name: "std-sync-bypass",
+        message: "std concurrency primitive bypasses the crate::sync shim: loom \
+                  models cannot see it; import from crate::sync instead",
+        in_scope: |p| SHIM_SCOPE.iter().any(|s| p.starts_with(s)),
+        matches: |l| {
+            l.contains("std::sync::") || l.contains("std::cell::") || l.contains("std::hint::")
+        },
+    },
+];
+
+struct Finding {
+    path: PathBuf,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}",
+            self.path.display(),
+            self.line,
+            self.rule,
+            self.message
+        )
+    }
+}
+
+/// `needle` appears in `hay` delimited by non-identifier characters.
+fn has_word(hay: &str, needle: &str) -> bool {
+    let mut start = 0;
+    while let Some(i) = hay[start..].find(needle) {
+        let at = start + i;
+        let before = hay[..at].chars().next_back();
+        let after = hay[at + needle.len()..].chars().next();
+        let boundary = |c: Option<char>| c.map_or(true, |c| !c.is_alphanumeric() && c != '_');
+        if boundary(before) && boundary(after) {
+            return true;
+        }
+        start = at + needle.len();
+    }
+    false
+}
+
+/// Rule names named by `// detlint: allow(rule, rule) -- reason` markers
+/// in a line; `Err` on a marker with no reason or an unknown rule name.
+fn parse_allows(line: &str, out: &mut Vec<&'static str>) -> Result<(), String> {
+    let Some(at) = line.find("detlint: allow(") else {
+        return Ok(());
+    };
+    let rest = &line[at + "detlint: allow(".len()..];
+    let Some(close) = rest.find(')') else {
+        return Err("malformed allow: missing ')'".to_string());
+    };
+    if !rest[close..].contains("--") {
+        return Err("allow without a reason: append `-- <why this is sound>`".to_string());
+    }
+    for name in rest[..close].split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        match RULES.iter().find(|r| r.name == name) {
+            Some(r) => out.push(r.name),
+            None => return Err(format!("allow names unknown rule `{name}`")),
+        }
+    }
+    Ok(())
+}
+
+/// Lint one file; `rel` is its path relative to the scan root, with the
+/// root itself stripped (e.g. `coordinator/shard.rs`).
+fn lint_file(path: &Path, rel: &str, src: &str, findings: &mut Vec<Finding>) {
+    // Allows from directly preceding comment-only lines, pending
+    // attachment to the next code line.
+    let mut pending: Vec<&'static str> = Vec::new();
+    for (idx, raw) in src.lines().enumerate() {
+        let line_no = idx + 1;
+        let mut allows = Vec::new();
+        if let Err(msg) = parse_allows(raw, &mut allows) {
+            findings.push(Finding {
+                path: path.to_path_buf(),
+                line: line_no,
+                rule: "allow-syntax",
+                message: msg,
+            });
+        }
+        let trimmed = raw.trim_start();
+        let comment_only = trimmed.starts_with("//") || trimmed.is_empty();
+        if comment_only {
+            // Comment (or blank) line: accumulate allows for the code
+            // line that follows; nothing on it can match a rule.
+            pending.extend(allows);
+            continue;
+        }
+        allows.extend(pending.drain(..));
+
+        // Strip the trailing comment so prose never matches a rule.
+        let code = raw.split("//").next().unwrap_or(raw);
+        for rule in &RULES {
+            if (rule.in_scope)(rel) && (rule.matches)(code) && !allows.contains(&rule.name) {
+                findings.push(Finding {
+                    path: path.to_path_buf(),
+                    line: line_no,
+                    rule: rule.name,
+                    message: rule.message.to_string(),
+                });
+            }
+        }
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, skipping vendored crates
+/// and the `sync/` shim (whose whole job is wrapping `std::sync`).
+fn collect(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for entry in entries {
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        if path.is_dir() {
+            if name == "vendor" || name == "sync" || name == "target" {
+                continue;
+            }
+            collect(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.iter().any(|a| a == "--help" || a == "-h") {
+        println!("usage: detlint [SRC_ROOT]...   (default: rust/src)");
+        println!("rules:");
+        for r in &RULES {
+            println!("  {:<16} {}", r.name, r.message);
+        }
+        return ExitCode::SUCCESS;
+    }
+    let roots: Vec<PathBuf> = if args.is_empty() {
+        vec![PathBuf::from("rust/src")]
+    } else {
+        args.iter().map(PathBuf::from).collect()
+    };
+
+    let mut findings = Vec::new();
+    let mut scanned = 0usize;
+    for root in &roots {
+        let mut files = Vec::new();
+        if let Err(e) = collect(root, &mut files) {
+            eprintln!("detlint: cannot scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+        for file in files {
+            let src = match fs::read_to_string(&file) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("detlint: cannot read {}: {e}", file.display());
+                    return ExitCode::from(2);
+                }
+            };
+            let rel = file
+                .strip_prefix(root)
+                .unwrap_or(&file)
+                .to_string_lossy()
+                .replace('\\', "/");
+            lint_file(&file, &rel, &src, &mut findings);
+            scanned += 1;
+        }
+    }
+
+    for f in &findings {
+        println!("{f}");
+    }
+    if findings.is_empty() {
+        println!("detlint: {scanned} files clean");
+        ExitCode::SUCCESS
+    } else {
+        println!("detlint: {} finding(s) in {scanned} files", findings.len());
+        ExitCode::FAILURE
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_str(rel: &str, src: &str) -> Vec<String> {
+        let mut findings = Vec::new();
+        lint_file(Path::new(rel), rel, src, &mut findings);
+        findings.iter().map(|f| f.rule.to_string()).collect()
+    }
+
+    #[test]
+    fn wallclock_flagged_outside_clock() {
+        assert_eq!(
+            lint_str("coordinator/x.rs", "let t = std::time::Instant::now();"),
+            vec!["wallclock"]
+        );
+        assert!(lint_str("clock/mod.rs", "let t = std::time::Instant::now();").is_empty());
+    }
+
+    #[test]
+    fn wallclock_ignores_duration_only_imports() {
+        assert!(lint_str("coordinator/x.rs", "use std::time::Duration;").is_empty());
+    }
+
+    #[test]
+    fn hash_collection_scoped_to_decision_paths() {
+        assert_eq!(
+            lint_str("control/x.rs", "use std::collections::HashMap;"),
+            vec!["hash-collection"]
+        );
+        // Reporting/CLI layers may hash freely.
+        assert!(lint_str("main.rs", "use std::collections::HashMap;").is_empty());
+    }
+
+    #[test]
+    fn float_sort_catches_single_and_multi_line_shapes() {
+        assert_eq!(
+            lint_str("sta/x.rs", "v.sort_by(|a, b| a.partial_cmp(b).unwrap());"),
+            vec!["float-sort"]
+        );
+        // The sta/mod.rs shape that motivated the rule: unwrap on its
+        // own line still contains `partial_cmp(..).unwrap()`.
+        assert_eq!(
+            lint_str("sta/x.rs", "arrival[b].partial_cmp(&arrival[a]).unwrap()"),
+            vec!["float-sort"]
+        );
+        assert!(lint_str("sta/x.rs", "v.sort_by(|a, b| a.total_cmp(b));").is_empty());
+    }
+
+    #[test]
+    fn sync_bypass_scoped_to_shim_modules() {
+        assert_eq!(
+            lint_str("coordinator/x.rs", "use std::sync::Mutex;"),
+            vec!["std-sync-bypass"]
+        );
+        assert!(lint_str("runtime/mod.rs", "use std::sync::Mutex;").is_empty());
+        assert!(lint_str("coordinator/x.rs", "use crate::sync::Mutex;").is_empty());
+    }
+
+    #[test]
+    fn same_line_and_preceding_line_allows_suppress() {
+        let inline = "use std::collections::HashMap; // detlint: allow(hash-collection) -- lookup only";
+        assert!(lint_str("clock/mod.rs", inline).is_empty());
+        let preceding = "\
+// detlint: allow(std-sync-bypass) -- OnceLock epoch, wrapped before use
+use std::sync::OnceLock;
+";
+        assert!(lint_str("clock/mod.rs", preceding).is_empty());
+    }
+
+    #[test]
+    fn allow_does_not_leak_past_the_next_code_line() {
+        let src = "\
+// detlint: allow(hash-collection) -- first use audited
+use std::collections::HashMap;
+use std::collections::HashSet;
+";
+        assert_eq!(lint_str("control/x.rs", src), vec!["hash-collection"]);
+    }
+
+    #[test]
+    fn allow_without_reason_or_unknown_rule_is_an_error() {
+        let no_reason = "use std::sync::Mutex; // detlint: allow(std-sync-bypass)";
+        assert_eq!(
+            lint_str("coordinator/x.rs", no_reason),
+            vec!["allow-syntax", "std-sync-bypass"]
+        );
+        let typo = "use std::sync::Mutex; // detlint: allow(std-sync-bypas) -- oops";
+        assert_eq!(
+            lint_str("coordinator/x.rs", typo),
+            vec!["allow-syntax", "std-sync-bypass"]
+        );
+    }
+
+    #[test]
+    fn prose_in_comments_never_matches() {
+        let src = "// the old sort_by(partial_cmp().unwrap()) panicked on NaN\nlet x = 1;";
+        assert!(lint_str("sta/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn randomness_flagged_everywhere() {
+        assert_eq!(
+            lint_str("util/x.rs", "let mut rng = thread_rng();"),
+            vec!["randomness"]
+        );
+    }
+}
