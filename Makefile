@@ -15,6 +15,9 @@
 #   make bench-predictor  predictor ensemble/guardband sweep (offline +
 #                    virtual-time, seed-pinned) -> results/
 #                    BENCH_predictor.{json,csv} baseline
+#   make sim-scale   sequential vs parallel virtual-time engine at
+#                    10/100/1000 synthetic groups (DESIGN.md S24) ->
+#                    results/BENCH_sim_scale.{json,csv}
 #   make faults      fault-injection acceptance suite: board failures,
 #                    stragglers, correlated surges on every scenario x
 #                    policy (seed-pinned, deterministic)
@@ -35,7 +38,7 @@
 ARTIFACTS_DIR := artifacts
 PY            := python3
 
-.PHONY: artifacts build test bench golden bench-coordinator bench-predictor doc fmt fmt-check lint loom miri tsan scenario-smoke faults topology-smoke clean
+.PHONY: artifacts build test bench golden bench-coordinator bench-predictor sim-scale doc fmt fmt-check lint loom miri tsan scenario-smoke faults topology-smoke clean
 
 artifacts:
 	cd python && $(PY) -m compile.aot --out-dir ../$(ARTIFACTS_DIR)
@@ -79,6 +82,14 @@ bench-coordinator: build
 # seed-pinned and deterministic) into results/BENCH_predictor.{json,csv}.
 bench-predictor: build
 	cargo bench --bench perf_predictor
+
+# Scale sweep of the conservative parallel discrete-event engine
+# (DESIGN.md S24): sequential vs parallel replay of synthetic fleets at
+# 10/100/1000 groups, asserting byte-identical traces and reporting the
+# wall-clock speedup into results/BENCH_sim_scale.{json,csv}. Set
+# WAVESCALE_SCALE_MAX=100 on small runners to skip the 1000-group row.
+sim-scale: build
+	cargo bench --bench perf_sim_scale
 
 # Format the workspace / verify it is formatted (fmt-check is the CI
 # twin, run alongside clippy).
@@ -140,16 +151,19 @@ topology-smoke: build
 
 # Determinism lint (DESIGN.md S23): rejects wall-clock reads outside
 # clock/, hash-ordered collections in decision/trace paths, NaN-unstable
-# float sorts, OS-entropy randomness, and std::sync imports that bypass
-# the crate::sync loom shim. An audited exception is marked in-source:
+# float sorts, OS-entropy randomness, std::sync imports that bypass the
+# crate::sync loom shim, and raw thread spawns outside the
+# registered-actor protocol. An audited exception is marked in-source:
 #   // detlint: allow(<rule>) -- <reason>
 lint:
 	cargo run --release -p detlint -- rust/src
 
-# Exhaustive loom model checking of the lock-free coordinator core: the
-# five S23 invariants in rust/tests/loom_models.rs, every schedule
-# explored (no iteration cap). Set LOOM_MAX_PREEMPTIONS=2 for a quick
-# local smoke pass; CI runs unbounded.
+# Exhaustive loom model checking of the concurrency core: the five S23
+# invariants over the lock-free shard/topology code plus the two S24
+# barrier/merge models of the parallel virtual clock, all in
+# rust/tests/loom_models.rs, every schedule explored (no iteration cap).
+# Set LOOM_MAX_PREEMPTIONS=2 for a quick local smoke pass; CI runs
+# unbounded.
 loom:
 	RUSTFLAGS="--cfg loom" cargo test --release -p wavescale --test loom_models
 

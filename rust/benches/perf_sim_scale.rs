@@ -1,0 +1,122 @@
+//! Perf: virtual-time scale sweep — sequential vs conservative-parallel
+//! discrete-event engine (DESIGN.md S24) on synthetic fleets of 10, 100,
+//! and 1000 tenant groups.
+//!
+//! Each fleet size replays the same `synthetic-N` scenario twice — once
+//! on the sequential `VirtualClock` golden reference, once on
+//! `ParallelVirtualClock` — asserts the two traces are **byte-identical**
+//! (the equivalence contract `tests/sim_parallel.rs` pins), and reports
+//! the wall-clock speedup. Emits `results/BENCH_sim_scale.{json,csv}`;
+//! the acceptance target is ≥4x at 100+ groups on 8 cores. Run via
+//! `make sim-scale`.
+
+mod common;
+
+use wavescale::bench_support::section;
+use wavescale::simtest::{self, SimSpec};
+use wavescale::util::json::Json;
+use wavescale::workload::Scenario;
+
+/// Group counts swept; override the largest with WAVESCALE_SCALE_MAX
+/// (e.g. 100 on small CI runners — the JSON records what actually ran).
+const SWEEP: [usize; 3] = [10, 100, 1000];
+
+fn spec_for(n_groups: usize) -> SimSpec {
+    SimSpec {
+        scenario: format!("synthetic-{n_groups}"),
+        // Short horizon, one instance per group: the sweep measures
+        // engine scheduling throughput as actor count grows, and 1000
+        // groups is already 1000 worker threads.
+        epochs: 12,
+        n_instances: 1,
+        warmup_epochs: 1,
+        ..SimSpec::default()
+    }
+}
+
+fn main() {
+    section("perf: virtual-time scale sweep (sequential vs parallel engine)");
+    let max = std::env::var("WAVESCALE_SCALE_MAX")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(usize::MAX);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("  ({cores} cores available)");
+
+    // Warm the memoized netlist+STA builds for all five Table-1 bases so
+    // the timed rows measure replay, not one-off platform construction.
+    simtest::run(&SimSpec { epochs: 1, ..spec_for(5) }).expect("warmup replay");
+
+    let mut rows = vec![wavescale::report::row([
+        "groups", "engine", "epochs", "accepted", "completed", "energy_j", "wall_ms", "speedup",
+    ])];
+    let mut runs = Vec::new();
+    for n_groups in SWEEP {
+        if n_groups > max {
+            println!("  (skipping {n_groups} groups: WAVESCALE_SCALE_MAX={max})");
+            continue;
+        }
+        let spec = spec_for(n_groups);
+        let scenario = Scenario::by_name(&spec.scenario, spec.epochs, spec.seed).expect("scenario");
+
+        let seq = simtest::run(&spec).expect("sequential replay");
+        let par_spec = SimSpec { parallel: true, ..spec.clone() };
+        let par = simtest::run(&par_spec).expect("parallel replay");
+
+        // The whole point of the conservative engine: same bytes, less
+        // wall. A mismatch is a determinism bug, not a perf regression.
+        let seq_trace = simtest::trace_json(&spec, &scenario, &seq.report).to_string_pretty();
+        let par_trace = simtest::trace_json(&spec, &scenario, &par.report).to_string_pretty();
+        assert_eq!(seq_trace, par_trace, "parallel trace diverged at {n_groups} groups");
+
+        let seq_ms = seq.wall.as_secs_f64() * 1e3;
+        let par_ms = par.wall.as_secs_f64() * 1e3;
+        let speedup = seq_ms / par_ms.max(1e-9);
+        println!(
+            "  {n_groups:>5} groups: sequential {seq_ms:9.1} ms | parallel {par_ms:9.1} ms | \
+             {speedup:5.2}x speedup (traces byte-identical)"
+        );
+        for (engine, out, wall_ms, sp) in
+            [("sequential", &seq, seq_ms, 1.0), ("parallel", &par, par_ms, speedup)]
+        {
+            rows.push(vec![
+                n_groups.to_string(),
+                engine.to_string(),
+                spec.epochs.to_string(),
+                out.accepted.to_string(),
+                out.report.stats.completed.to_string(),
+                format!("{:.3}", out.report.stats.energy_j),
+                format!("{wall_ms:.2}"),
+                format!("{sp:.3}"),
+            ]);
+        }
+        runs.push(Json::obj(vec![
+            ("groups", Json::Num(n_groups as f64)),
+            ("epochs", Json::Num(spec.epochs as f64)),
+            ("seed", Json::Num(spec.seed as f64)),
+            ("accepted", Json::Num(seq.accepted as f64)),
+            ("completed", Json::Num(seq.report.stats.completed as f64)),
+            ("sequential_wall_ms", Json::Num(seq_ms)),
+            ("parallel_wall_ms", Json::Num(par_ms)),
+            ("speedup", Json::Num(speedup)),
+            ("traces_identical", Json::Bool(true)),
+        ]));
+        if n_groups >= 100 {
+            let verdict = if speedup >= 4.0 { "meets" } else { "below" };
+            println!("    target >=4x at 100+ groups on 8 cores: {verdict} ({speedup:.2}x on {cores} cores)");
+        }
+    }
+
+    common::emit_csv("BENCH_sim_scale.csv", &rows);
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("perf_sim_scale".into())),
+        ("mode", Json::Str(if cfg!(debug_assertions) { "debug" } else { "release" }.into())),
+        ("cores", Json::Num(cores as f64)),
+        ("target_speedup_at_100_groups", Json::Num(4.0)),
+        ("runs", Json::Arr(runs)),
+    ]);
+    match wavescale::report::write_results("BENCH_sim_scale.json", &doc.to_string_pretty()) {
+        Ok(p) => println!("[json] {} (scale-sweep baseline)", p.display()),
+        Err(e) => eprintln!("[json] failed to write BENCH_sim_scale.json: {e}"),
+    }
+}

@@ -21,6 +21,12 @@
 //!   CC epochs — is a deterministic function of the seed: a thousand-epoch
 //!   scenario replays in milliseconds and two runs produce byte-identical
 //!   traces (`simtest`, DESIGN.md S18).
+//! * [`ParallelVirtualClock`] — the conservative domain-parallel twin of
+//!   `VirtualClock` (DESIGN.md S24): actors are partitioned into
+//!   advance-domains via [`Clock::register_actor_in`] and independent
+//!   domains advance concurrently between control-domain barriers, with
+//!   traces byte-identical to the sequential engine (the golden
+//!   reference — see `tests/sim_parallel.rs`).
 //!
 //! Blocking-wait integration uses a *generation counter* instead of an
 //! atomically-released mutex: the waiter samples [`WaitSlot::generation`],
@@ -42,6 +48,10 @@ use std::time::{Duration, Instant};
 
 use crate::sync::atomic::{AtomicU64, Ordering};
 use crate::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+mod parallel;
+
+pub use parallel::ParallelVirtualClock;
 
 /// A point in time, in nanoseconds since the clock's epoch (process start
 /// for [`WallClock`], simulation start for [`VirtualClock`]).
@@ -141,8 +151,25 @@ pub trait Clock: Send + Sync + std::fmt::Debug {
 
     /// Allocate an actor id on the *spawning* thread (deterministic,
     /// program-order ids). No-op (returns 0) under wall time.
+    ///
+    /// Ids are handed out strictly in call order on the registering
+    /// thread — golden-trace ordering depends on this, and both virtual
+    /// engines assert it so sequential and parallel registrations can
+    /// never drift ([`VirtualClock`] ties, e.g., worker claim priority to
+    /// actor id via registration order).
     fn register_actor(&self, _name: &str) -> ActorId {
         0
+    }
+
+    /// [`Clock::register_actor`], targeted at advance-domain `domain` of a
+    /// parallel engine. Domain 0 is the control domain (scenario drivers,
+    /// CC epoch loops); domains > 0 hold independent worker pools. Clocks
+    /// without domains (wall time, the sequential [`VirtualClock`]) ignore
+    /// the domain — so callers can tag domains unconditionally and the
+    /// sequential golden reference still sees identical registration
+    /// order.
+    fn register_actor_in(&self, name: &str, _domain: usize) -> ActorId {
+        self.register_actor(name)
     }
 
     /// Bind the calling thread to a registered actor; under virtual time
@@ -440,6 +467,15 @@ impl Clock for VirtualClock {
         let mut guard = self.locked();
         let id = guard.next_actor;
         guard.next_actor += 1;
+        // Program-order allocation: every id is strictly greater than all
+        // ids already handed out, even when registrations from the driving
+        // thread interleave with attaches/detaches of earlier actors.
+        // Golden ordering (and sequential/parallel equivalence) depends on
+        // this, so assert it rather than documenting it.
+        debug_assert!(
+            guard.actors.last_key_value().map_or(true, |(&last, _)| id > last),
+            "actor id {id} not in program order"
+        );
         guard.actors.insert(id, Actor { name: name.to_string(), state: ActorState::Ready });
         id
     }
@@ -571,6 +607,7 @@ mod tests {
         // Notify path.
         let slot2 = slot.clone();
         let gen = slot.generation();
+        // detlint: allow(thread-spawn) -- wall-clock test; no simulated time
         let h = std::thread::spawn(move || {
             let t0 = Instant::now();
             WallClock.wait_slot(&slot2, gen, Duration::from_secs(10));
@@ -598,6 +635,8 @@ mod tests {
         let _me = ActorScope::enter(&clock, "main");
         let id = clock.register_actor("child");
         let c2 = clock.clone();
+        // detlint: allow(thread-spawn) -- actor pre-registered above; the
+        // thread attaches before touching simulated time
         let child = std::thread::spawn(move || {
             let _scope = ActorScope::attach(&c2, id);
             let mut ticks_seen = Vec::new();
@@ -626,6 +665,8 @@ mod tests {
         let id = clock.register_actor("waiter");
         let c2 = clock.clone();
         let s2 = slot.clone();
+        // detlint: allow(thread-spawn) -- actor pre-registered above; the
+        // thread attaches before touching simulated time
         let h = std::thread::spawn(move || {
             let _scope = ActorScope::attach(&c2, id);
             let gen = s2.generation();
@@ -665,6 +706,8 @@ mod tests {
             let c2 = clock.clone();
             let ord = order.clone();
             let tag = tag.to_string();
+            // detlint: allow(thread-spawn) -- actor pre-registered above;
+            // the thread attaches before touching simulated time
             handles.push(std::thread::spawn(move || {
                 let _scope = ActorScope::attach(&c2, id);
                 c2.sleep(Duration::from_millis(5));
@@ -678,5 +721,51 @@ mod tests {
         }
         clock.resume_current();
         assert_eq!(*order.lock().unwrap(), vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn actor_ids_allocate_in_program_order_across_engines_and_domains() {
+        // The documented contract: ids are handed out strictly in call
+        // order on the registering thread, even when plain registrations
+        // interleave with parallel-mode (domain-tagged) registrations and
+        // with attach/detach churn of earlier actors. Golden ordering in
+        // both engines depends on it.
+        let clocks: [Arc<dyn Clock>; 2] =
+            [Arc::new(VirtualClock::new()), Arc::new(ParallelVirtualClock::with_workers(2))];
+        for clock in clocks {
+            // The driver enters first (the coordinator invariant: all
+            // registration happens while the driving actor runs).
+            let me = ActorScope::enter(&clock, "main");
+            let a = clock.register_actor("a");
+            let b = clock.register_actor_in("b", 3);
+            // Churn: an attach of an earlier actor between allocations
+            // (it blocks until the driver parks, like a spawned worker).
+            let c2 = clock.clone();
+            let bh = {
+                // detlint: allow(thread-spawn) -- actor pre-registered
+                // above; the thread attaches before touching simulated time
+                std::thread::spawn(move || {
+                    let _scope = ActorScope::attach(&c2, b);
+                })
+            };
+            let c = clock.register_actor_in("c", 1);
+            let d = clock.register_actor("d");
+            assert!(
+                me.id() < a && a < b && b < c && c < d,
+                "ids must be strictly increasing: {} {a} {b} {c} {d}",
+                me.id()
+            );
+            // Registered-but-never-attached actors would wedge the drain
+            // below once the scheduler picks them; retire them first.
+            for id in [a, c, d] {
+                clock.detach_actor(id);
+            }
+            clock.suspend_current();
+            bh.join().unwrap();
+            clock.resume_current();
+            let e = clock.register_actor("e");
+            assert!(e > d, "attach/detach churn must not recycle ids");
+            clock.detach_actor(e);
+        }
     }
 }

@@ -1,0 +1,808 @@
+//! Conservative parallel discrete-event engine (DESIGN.md S24).
+//!
+//! [`ParallelVirtualClock`] is the throughput twin of the deliberately
+//! sequential [`VirtualClock`](super::VirtualClock): actors are
+//! partitioned into *advance-domains* at registration
+//! ([`Clock::register_actor_in`]), and actors from **different** domains
+//! may hold the CPU simultaneously, so a thousand-group fleet sweep uses
+//! every core instead of one. Replays stay bitwise-identical to the
+//! sequential engine because the scheduler is *conservative*: it only
+//! runs an event concurrently when no earlier event anywhere in the
+//! system could possibly affect it.
+//!
+//! # Domain partition rule
+//!
+//! Domain 0 is the **control domain**: the scenario driver, every node
+//! CC, and any actor registered through plain
+//! [`Clock::register_actor`]. Domains `d > 0` hold worker pools whose
+//! actors touch only domain-local state (their group's shards, counters,
+//! histogram) plus commuting shared atomics. The coordinator maps group
+//! `gi`'s workers — across all nodes — to domain `gi + 1`
+//! (`coordinator::node::spawn_worker`). The soundness obligation on
+//! callers: **all cross-domain interaction originates from domain 0**
+//! (submits, gating, drains, slot notifies), which in this codebase is
+//! an audited structural property — workers never notify a slot and
+//! never read another group's order-sensitive state.
+//!
+//! # Barrier protocol
+//!
+//! Each domain has its own virtual time `now[d]`, the stamp of its last
+//! grant. Scheduling is a fence against the control domain's next event
+//! `E0` (its lowest-id Ready actor, else its earliest parked
+//! `(deadline, id)`):
+//!
+//! * a worker-domain candidate runs concurrently (up to the configured
+//!   worker cap) while the *sequential* scheduler would run it before
+//!   `E0` — Ready candidates beat any parked `E0`; parked candidates
+//!   need `(deadline, id) < (deadline0, id0)` lexicographically;
+//! * when no worker candidate may start and nothing is running, the
+//!   control candidate is granted **exclusively** (an epoch barrier):
+//!   every event ordered before it has fully executed, so the control
+//!   actor observes exactly the sequential prefix;
+//! * cross-domain wakeups raised by non-control actors are deferred and
+//!   merged at the next barrier in `(deadline, actor id)` order (inert
+//!   for the coordinator workload, where only control notifies across
+//!   domains, but it keeps the engine safe for arbitrary actor graphs).
+//!
+//! # Equivalence sketch
+//!
+//! Project the sequential schedule onto one domain: because domains
+//! interact only through control-originated events, the projection is
+//! itself the domain's local sequential schedule, and a domain actor's
+//! `now()` reads equal its own last grant stamp. The fence grants a
+//! worker event only when every sequentially-earlier event has run, and
+//! grants control events exclusively, so each domain executes exactly
+//! its projection and control observes exactly the sequential global
+//! state at every barrier — traces are byte-identical, which
+//! `tests/sim_parallel.rs` asserts over every scenario × policy × node
+//! count, and a randomized property in `tests/sim_properties.rs`
+//! shrinks any counterexample. The worker cap only throttles real
+//! concurrency (grantable sets commute); with a cap of 1 the engine
+//! degenerates to the exact sequential event order.
+
+use std::collections::BTreeMap;
+// detlint: allow(hash-collection) -- `threads` maps ThreadId -> ActorId for
+// lookup only (same contract as VirtualClock); scheduling scans iterate
+// `actors` (a BTreeMap), never this.
+use std::collections::HashMap;
+use std::thread::ThreadId;
+use std::time::Duration;
+
+use crate::sync::atomic::Ordering;
+use crate::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use super::{ticks, ActorId, Clock, Tick, WaitSlot};
+
+/// Scheduling state of one parallel-clock actor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum PState {
+    /// Runnable; `at` is the virtual time of the event that made it so
+    /// (its wake deadline, or the notifier's clock), the stamp its
+    /// domain time advances to on grant.
+    Ready { at: Tick },
+    /// Holding the CPU (at most one per domain).
+    Running,
+    /// Blocked until `deadline` or a notify on `slot`.
+    Parked { deadline: Tick, slot: Option<u64> },
+    /// Out of the scheduling set (blocked outside the clock).
+    Suspended,
+}
+
+#[derive(Debug)]
+struct PActor {
+    name: String,
+    domain: usize,
+    state: PState,
+    /// Per-actor condvar (all bound to the one scheduler mutex): a grant
+    /// wakes exactly its target instead of `notify_all`-ing a
+    /// thousand-actor herd on every scheduling step.
+    cv: Arc<Condvar>,
+}
+
+/// A domain's next event under the sequential rule: its lowest-id Ready
+/// actor, else its earliest `(deadline, id)` parked actor.
+#[derive(Clone, Copy, Debug)]
+struct Cand {
+    id: ActorId,
+    time: Tick,
+    ready: bool,
+}
+
+/// A cross-domain wakeup raised by a non-control actor, parked until the
+/// next barrier (see module docs — the deterministic merge rule).
+#[derive(Clone, Copy, Debug)]
+struct DeferredWake {
+    at: Tick,
+    slot: u64,
+}
+
+#[derive(Debug)]
+struct PSched {
+    /// Domain-local virtual time: stamp of the domain's last grant.
+    now: Vec<Tick>,
+    /// Whether the domain currently has a Running actor.
+    busy: Vec<bool>,
+    next_actor: ActorId,
+    next_slot: u64,
+    /// Total Running actors (all domains).
+    n_running: usize,
+    /// BTreeMap so candidate scans are in deterministic id order.
+    actors: BTreeMap<ActorId, PActor>,
+    threads: HashMap<ThreadId, ActorId>,
+    deferred: Vec<DeferredWake>,
+}
+
+/// Deterministic discrete-event time with conservative domain-parallel
+/// execution. Drop-in for [`VirtualClock`](super::VirtualClock) — same
+/// actor protocol, same traces (see the module docs for the equivalence
+/// argument) — but actors registered into distinct domains via
+/// [`Clock::register_actor_in`] run concurrently between control-domain
+/// barriers.
+#[derive(Debug)]
+pub struct ParallelVirtualClock {
+    sched: Mutex<PSched>,
+    /// Cap on concurrently Running worker-domain actors. Purely a
+    /// throughput knob: grantable sets commute, so the cap (and the
+    /// machine's core count) never changes a trace.
+    workers: usize,
+}
+
+impl Default for ParallelVirtualClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ParallelVirtualClock {
+    /// A fresh parallel simulation clock at tick 0 with no actors, with
+    /// the worker cap matching the machine's available parallelism.
+    pub fn new() -> Self {
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8);
+        Self::with_workers(workers)
+    }
+
+    /// A fresh clock capping concurrently-running worker actors at
+    /// `workers` (clamped to ≥ 1). `with_workers(1)` executes the exact
+    /// sequential event order — useful for bisecting a suspected
+    /// equivalence break.
+    pub fn with_workers(workers: usize) -> Self {
+        ParallelVirtualClock {
+            sched: Mutex::new(PSched {
+                now: vec![0],
+                busy: vec![false],
+                next_actor: 1,
+                next_slot: 1,
+                n_running: 0,
+                actors: BTreeMap::new(),
+                threads: HashMap::new(),
+                deferred: Vec::new(),
+            }),
+            workers: workers.max(1),
+        }
+    }
+
+    /// The configured worker cap.
+    pub fn worker_cap(&self) -> usize {
+        self.workers
+    }
+
+    fn locked(&self) -> MutexGuard<'_, PSched> {
+        match self.sched.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    fn current(sched: &PSched) -> Option<ActorId> {
+        sched.threads.get(&std::thread::current().id()).copied()
+    }
+
+    fn current_or_panic(sched: &PSched, op: &str) -> ActorId {
+        match Self::current(sched) {
+            Some(id) => id,
+            None => panic!(
+                "ParallelVirtualClock::{op} from a thread that is not a registered actor; \
+                 enter the clock first (clock::ActorScope::enter)"
+            ),
+        }
+    }
+
+    /// The sequential-rule candidate of `domain`: lowest-id Ready actor,
+    /// else earliest `(deadline, id)` parked actor.
+    fn domain_candidate(sched: &PSched, domain: usize) -> Option<Cand> {
+        let mut best: Option<(Tick, ActorId)> = None;
+        for (&id, a) in sched.actors.iter().filter(|(_, a)| a.domain == domain) {
+            match a.state {
+                // BTreeMap iteration is id-ascending, so the first Ready
+                // actor seen is the lowest-id one — and Ready beats any
+                // parked deadline under the sequential rule.
+                PState::Ready { at } => return Some(Cand { id, time: at, ready: true }),
+                PState::Parked { deadline, .. } => {
+                    if best.map_or(true, |b| (deadline, id) < b) {
+                        best = Some((deadline, id));
+                    }
+                }
+                _ => {}
+            }
+        }
+        best.map(|(time, id)| Cand { id, time, ready: false })
+    }
+
+    /// Would the sequential scheduler run worker candidate `w` before the
+    /// control domain's next event `c0`? (The conservative fence.)
+    fn fence_allows(c0: Option<&Cand>, w: &Cand) -> bool {
+        match c0 {
+            // No pending control event: the worker event has no earlier
+            // cross-domain cause left to wait for.
+            None => true,
+            // Ready-vs-Ready resolves by id; a parked worker never
+            // overtakes a Ready control actor.
+            Some(c) if c.ready => w.ready && w.id < c.id,
+            // Ready beats parked; parked-vs-parked is (deadline, id).
+            Some(c) => w.ready || (w.time, w.id) < (c.time, c.id),
+        }
+    }
+
+    /// Move `id` to Running, advance its domain clock to the grant stamp,
+    /// and wake its thread.
+    fn grant(sched: &mut PSched, id: ActorId) {
+        let Some(a) = sched.actors.get_mut(&id) else { return };
+        let at = match a.state {
+            PState::Ready { at } => at,
+            PState::Parked { deadline, .. } => deadline,
+            // Running/Suspended actors are never selected as candidates.
+            _ => return,
+        };
+        a.state = PState::Running;
+        let domain = a.domain;
+        let cv = a.cv.clone();
+        if at > sched.now[domain] {
+            sched.now[domain] = at;
+        }
+        sched.busy[domain] = true;
+        sched.n_running += 1;
+        cv.notify_all();
+    }
+
+    /// Apply the deferred cross-domain wakeups in deterministic
+    /// `(deadline, actor id)` merge order. A wake flips only actors still
+    /// parked on the slot, so when several wakes target one actor the
+    /// earliest stamp wins — independent of raise order.
+    fn apply_deferred(sched: &mut PSched) {
+        let mut pending = std::mem::take(&mut sched.deferred);
+        pending.sort_by_key(|w| (w.at, w.slot));
+        for w in pending {
+            for a in sched.actors.values_mut() {
+                if let PState::Parked { slot: Some(sid), .. } = a.state {
+                    if sid == w.slot {
+                        a.state = PState::Ready { at: w.at };
+                    }
+                }
+            }
+        }
+    }
+
+    /// The scheduler: grant every worker-domain candidate the fence
+    /// admits (up to the worker cap), and when the system quiesces with
+    /// nothing admissible, grant the control candidate exclusively — the
+    /// barrier. Panics on a genuine simulated deadlock, mirroring
+    /// [`VirtualClock`](super::VirtualClock)'s contract.
+    fn dispatch(&self, sched: &mut PSched) {
+        // A running control actor IS the fence: its whole step happens
+        // before anything sequenced after it may start.
+        if sched.busy[0] {
+            return;
+        }
+        loop {
+            let c0 = Self::domain_candidate(sched, 0);
+            let mut grantable: Vec<Cand> = Vec::new();
+            for d in 1..sched.now.len() {
+                if sched.busy[d] {
+                    continue;
+                }
+                if let Some(w) = Self::domain_candidate(sched, d) {
+                    // An infinite park is never a grant; it either waits
+                    // out the fence or participates in deadlock below.
+                    if (w.ready || w.time != Tick::MAX) && Self::fence_allows(c0.as_ref(), &w)
+                    {
+                        grantable.push(w);
+                    }
+                }
+            }
+            // Deterministic grant order: earliest (time, id) first. Order
+            // among concurrent grants is trace-neutral (distinct domains
+            // commute); sorting just makes the cap bite predictably.
+            grantable.sort_by_key(|c| (c.time, c.id));
+            let mut granted = false;
+            for w in grantable {
+                if sched.n_running >= self.workers {
+                    break;
+                }
+                Self::grant(sched, w.id);
+                granted = true;
+            }
+            if granted || sched.n_running > 0 {
+                return;
+            }
+            // Quiesced and nothing admitted ahead of the fence. Merge any
+            // deferred cross-domain wakeups first — they may produce a
+            // Ready actor that the sequential rule runs before c0.
+            if !sched.deferred.is_empty() {
+                Self::apply_deferred(sched);
+                continue;
+            }
+            match c0 {
+                Some(c) if c.ready || c.time != Tick::MAX => {
+                    Self::grant(sched, c.id);
+                }
+                _ => {
+                    // No control event and no admissible worker: actors
+                    // parked without a finite deadline are a genuine
+                    // deadlock; an empty/suspended-only registry is the
+                    // quiescent state (next attach/resume reschedules).
+                    let stuck: Vec<&str> = sched
+                        .actors
+                        .values()
+                        .filter(|a| matches!(a.state, PState::Parked { .. } | PState::Ready { .. }))
+                        .map(|a| a.name.as_str())
+                        .collect();
+                    assert!(
+                        stuck.is_empty(),
+                        "virtual clock deadlock: every actor is parked without a finite \
+                         deadline: {stuck:?}"
+                    );
+                }
+            }
+            return;
+        }
+    }
+
+    /// Park the current actor with `state`, hand the CPU back to the
+    /// scheduler, and block until this actor is Running again.
+    fn park_and_wait(&self, mut guard: MutexGuard<'_, PSched>, id: ActorId, state: PState) {
+        let Some(a) = guard.actors.get_mut(&id) else { return };
+        let was_running = a.state == PState::Running;
+        let domain = a.domain;
+        let cv = a.cv.clone();
+        a.state = state;
+        if was_running {
+            guard.busy[domain] = false;
+            guard.n_running -= 1;
+        }
+        self.dispatch(&mut guard);
+        self.block_until_running(guard, id, &cv);
+    }
+
+    fn block_until_running(&self, mut guard: MutexGuard<'_, PSched>, id: ActorId, cv: &Condvar) {
+        loop {
+            match guard.actors.get(&id).map(|a| a.state) {
+                Some(PState::Running) => return,
+                // Removed while blocked (a shutdown racing a barrier):
+                // unblock rather than wait on a condvar nobody signals.
+                None => return,
+                _ => {}
+            }
+            guard = match cv.wait(guard) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+
+    /// The running actor's domain and local time; for a non-actor (or
+    /// suspended) caller, the global quiesce view `max(now[d])` — what
+    /// the sequential global clock reads once every domain has advanced.
+    fn observed_now(sched: &PSched) -> Tick {
+        match Self::current(sched).and_then(|id| sched.actors.get(&id)) {
+            Some(a) if a.state == PState::Running => sched.now[a.domain],
+            _ => sched.now.iter().copied().max().unwrap_or(0),
+        }
+    }
+}
+
+impl Clock for ParallelVirtualClock {
+    fn now(&self) -> Tick {
+        Self::observed_now(&self.locked())
+    }
+
+    fn sleep(&self, d: Duration) {
+        let guard = self.locked();
+        let id = Self::current_or_panic(&guard, "sleep");
+        let Some(a) = guard.actors.get(&id) else { return };
+        let deadline = guard.now[a.domain].saturating_add(ticks(d));
+        self.park_and_wait(guard, id, PState::Parked { deadline, slot: None });
+    }
+
+    fn new_slot(&self) -> Arc<WaitSlot> {
+        let mut guard = self.locked();
+        let id = guard.next_slot;
+        guard.next_slot += 1;
+        Arc::new(WaitSlot::with_id(id))
+    }
+
+    fn wait_slot(&self, slot: &WaitSlot, observed_gen: u64, timeout: Duration) {
+        let guard = self.locked();
+        // Generations move only under the scheduler lock (notify_slot),
+        // so this check cannot race a notify.
+        if slot.generation() != observed_gen {
+            return;
+        }
+        let id = Self::current_or_panic(&guard, "wait_slot");
+        let Some(a) = guard.actors.get(&id) else { return };
+        let deadline = guard.now[a.domain].saturating_add(ticks(timeout));
+        self.park_and_wait(guard, id, PState::Parked { deadline, slot: Some(slot.id) });
+    }
+
+    fn notify_slot(&self, slot: &WaitSlot) {
+        let mut guard = self.locked();
+        slot.gen.fetch_add(1, Ordering::SeqCst);
+        let notifier = Self::current(&guard)
+            .and_then(|id| guard.actors.get(&id))
+            .filter(|a| a.state == PState::Running)
+            .map(|a| a.domain);
+        let at = match notifier {
+            Some(d) => guard.now[d],
+            // External (unregistered/suspended) notifier: behaves like
+            // control at the global quiesce time.
+            None => guard.now.iter().copied().max().unwrap_or(0),
+        };
+        match notifier {
+            Some(d) if d != 0 => {
+                // A worker-domain notifier wakes same-domain waiters
+                // immediately (domain-local order is sequential anyway);
+                // cross-domain waiters are deferred to the next barrier
+                // and merged in (deadline, id) order — see module docs.
+                let mut cross = false;
+                for a in guard.actors.values_mut() {
+                    if let PState::Parked { slot: Some(sid), .. } = a.state {
+                        if sid == slot.id {
+                            if a.domain == d {
+                                a.state = PState::Ready { at };
+                            } else {
+                                cross = true;
+                            }
+                        }
+                    }
+                }
+                if cross {
+                    guard.deferred.push(DeferredWake { at, slot: slot.id });
+                }
+            }
+            _ => {
+                // Control (or external) notifier runs at the fence, where
+                // every worker event before `at` has executed: flip every
+                // waiter Ready at the notifier's clock, exactly the
+                // sequential semantics.
+                for a in guard.actors.values_mut() {
+                    if let PState::Parked { slot: Some(sid), .. } = a.state {
+                        if sid == slot.id {
+                            a.state = PState::Ready { at };
+                        }
+                    }
+                }
+            }
+        }
+        // The notifier normally keeps running; dispatch only when no
+        // actor holds a CPU (a notify from outside the actor set).
+        if guard.n_running == 0 {
+            self.dispatch(&mut guard);
+        }
+    }
+
+    fn register_actor(&self, name: &str) -> ActorId {
+        self.register_actor_in(name, 0)
+    }
+
+    fn register_actor_in(&self, name: &str, domain: usize) -> ActorId {
+        let mut guard = self.locked();
+        let id = guard.next_actor;
+        guard.next_actor += 1;
+        // Ids must be handed out in program order on the registering
+        // thread — golden ordering depends on it (see the Clock docs).
+        debug_assert!(
+            guard.actors.last_key_value().map_or(true, |(&last, _)| id > last),
+            "actor id {id} not in program order"
+        );
+        while guard.now.len() <= domain {
+            guard.now.push(0);
+            guard.busy.push(false);
+        }
+        // A new actor first runs at its registrar's clock (the driver
+        // registers the whole fleet before starting it, so in practice
+        // this is tick 0) — same stamp the sequential engine would grant.
+        let at = Self::observed_now(&guard);
+        guard.actors.insert(
+            id,
+            PActor {
+                name: name.to_string(),
+                domain,
+                state: PState::Ready { at },
+                cv: Arc::new(Condvar::new()),
+            },
+        );
+        id
+    }
+
+    fn attach_actor(&self, id: ActorId) {
+        let mut guard = self.locked();
+        guard.threads.insert(std::thread::current().id(), id);
+        let cv = guard.actors.get(&id).map(|a| a.cv.clone());
+        self.dispatch(&mut guard);
+        if let Some(cv) = cv {
+            self.block_until_running(guard, id, &cv);
+        }
+    }
+
+    fn detach_actor(&self, id: ActorId) {
+        let mut guard = self.locked();
+        if let Some(a) = guard.actors.remove(&id) {
+            if a.state == PState::Running {
+                guard.busy[a.domain] = false;
+                guard.n_running -= 1;
+            }
+            // Unblock anyone waiting to observe this actor's state (a
+            // joiner racing the exit sees the None arm above).
+            a.cv.notify_all();
+        }
+        guard.threads.retain(|_, v| *v != id);
+        self.dispatch(&mut guard);
+    }
+
+    fn suspend_current(&self) {
+        let mut guard = self.locked();
+        let Some(id) = Self::current(&guard) else { return };
+        if let Some(a) = guard.actors.get_mut(&id) {
+            let was_running = a.state == PState::Running;
+            let domain = a.domain;
+            a.state = PState::Suspended;
+            if was_running {
+                guard.busy[domain] = false;
+                guard.n_running -= 1;
+            }
+        }
+        self.dispatch(&mut guard);
+        // Deliberately no block: the caller is about to wait on something
+        // outside the clock (thread joins) while the rest drains.
+    }
+
+    fn resume_current(&self) {
+        let guard = self.locked();
+        let Some(id) = Self::current(&guard) else { return };
+        // Re-enter at the global quiesce time: every domain the suspended
+        // actor waited out (joins) has advanced past its last event.
+        let at = guard.now.iter().copied().max().unwrap_or(0);
+        self.park_and_wait(guard, id, PState::Ready { at });
+    }
+
+    fn current_is_actor(&self) -> bool {
+        Self::current(&self.locked()).is_some()
+    }
+
+    fn is_virtual(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ActorScope;
+    use super::*;
+
+    fn clock(workers: usize) -> Arc<dyn Clock> {
+        Arc::new(ParallelVirtualClock::with_workers(workers))
+    }
+
+    /// Register `name` into `domain` and run `body` on a new actor
+    /// thread. The spawn is the sanctioned pre-registered pattern.
+    fn actor<T: Send + 'static>(
+        c: &Arc<dyn Clock>,
+        name: &str,
+        domain: usize,
+        body: impl FnOnce(Arc<dyn Clock>) -> T + Send + 'static,
+    ) -> std::thread::JoinHandle<T> {
+        let id = c.register_actor_in(name, domain);
+        let c = c.clone();
+        // detlint: allow(thread-spawn) -- actor pre-registered above; the
+        // thread attaches before touching simulated time
+        std::thread::spawn(move || {
+            let _scope = ActorScope::attach(&c, id);
+            body(c.clone())
+        })
+    }
+
+    #[test]
+    fn sleep_advances_domain_time_deterministically() {
+        let c = clock(4);
+        let _me = ActorScope::enter(&c, "main");
+        assert_eq!(c.now(), 0);
+        c.sleep(Duration::from_millis(30));
+        assert_eq!(c.now(), ticks(Duration::from_millis(30)));
+    }
+
+    #[test]
+    fn worker_domains_advance_between_control_barriers() {
+        for workers in [1, 4] {
+            let c = clock(workers);
+            let _me = ActorScope::enter(&c, "main");
+            let ms = |m: u64| ticks(Duration::from_millis(m));
+            let mut handles = Vec::new();
+            for (i, tag) in ["a", "b", "c"].iter().enumerate() {
+                handles.push(actor(&c, tag, i + 1, |c| {
+                    let mut seen = Vec::new();
+                    for _ in 0..3 {
+                        c.sleep(Duration::from_millis(10));
+                        seen.push(c.now());
+                    }
+                    seen
+                }));
+            }
+            // The control barrier at 100 ms fences every worker event.
+            c.sleep(Duration::from_millis(100));
+            c.suspend_current();
+            for h in handles {
+                assert_eq!(h.join().unwrap(), vec![ms(10), ms(20), ms(30)]);
+            }
+            c.resume_current();
+            assert_eq!(c.now(), ms(100));
+        }
+    }
+
+    #[test]
+    fn control_notify_wakes_cross_domain_waiter_at_notify_time() {
+        let c = clock(4);
+        let _me = ActorScope::enter(&c, "main");
+        let slot = c.new_slot();
+        let s2 = slot.clone();
+        let h = actor(&c, "waiter", 1, move |c| {
+            let gen = s2.generation();
+            c.wait_slot(&s2, gen, Duration::from_secs(60));
+            c.now()
+        });
+        c.sleep(Duration::from_millis(25));
+        c.notify_slot(&slot);
+        c.suspend_current();
+        let woke_at = h.join().unwrap();
+        c.resume_current();
+        assert_eq!(woke_at, ticks(Duration::from_millis(25)), "notify, not timeout, must wake");
+    }
+
+    #[test]
+    fn worker_cross_domain_wakeups_merge_at_the_barrier_in_order() {
+        // A worker-domain notifier raises a cross-domain wakeup for a
+        // waiter in another domain; the wake is deferred and merged at
+        // the next barrier carrying the notifier's clock. The 1 ms
+        // control barrier between spawning the two sequences the park
+        // before the notifier exists — worker-originated cross-domain
+        // notifies are only order-safe across a fence (see module docs;
+        // the coordinator routes all of its through domain 0).
+        let c = clock(4);
+        let _me = ActorScope::enter(&c, "main");
+        let slot = c.new_slot();
+        let s2 = slot.clone();
+        let waiter = actor(&c, "waiter", 3, move |c| {
+            let gen = s2.generation();
+            c.wait_slot(&s2, gen, Duration::from_secs(60));
+            c.now()
+        });
+        // Barrier: control runs again only once the waiter has parked.
+        c.sleep(Duration::from_millis(1));
+        let s3 = slot.clone();
+        let notifier = actor(&c, "notifier", 1, move |c| {
+            // Granted at the registrar's clock (1 ms), so the notify —
+            // and the deferred wake's stamp — lands at 8 ms.
+            c.sleep(Duration::from_millis(7));
+            c.notify_slot(&s3);
+        });
+        // The barrier at 51 ms merges the deferred wake (stamp 8 ms).
+        c.sleep(Duration::from_millis(50));
+        c.suspend_current();
+        notifier.join().unwrap();
+        let woke_at = waiter.join().unwrap();
+        c.resume_current();
+        assert_eq!(woke_at, ticks(Duration::from_millis(8)), "merge must keep the raise stamp");
+    }
+
+    #[test]
+    fn zero_actor_domains_are_inert() {
+        // Registering into a sparse domain space (only domains 0 and 5
+        // populated) must not wedge or perturb scheduling.
+        let c = clock(2);
+        let _me = ActorScope::enter(&c, "main");
+        let h = actor(&c, "lonely", 5, |c| {
+            c.sleep(Duration::from_millis(10));
+            c.now()
+        });
+        c.sleep(Duration::from_millis(20));
+        c.suspend_current();
+        assert_eq!(h.join().unwrap(), ticks(Duration::from_millis(10)));
+        c.resume_current();
+        assert_eq!(c.now(), ticks(Duration::from_millis(20)));
+    }
+
+    #[test]
+    fn sole_actor_of_a_domain_can_exit_mid_epoch() {
+        // A domain whose only actor detaches between barriers leaves an
+        // empty domain behind; control must keep advancing past it.
+        let c = clock(4);
+        let _me = ActorScope::enter(&c, "main");
+        let h = actor(&c, "ephemeral", 2, |c| {
+            c.sleep(Duration::from_millis(5));
+            // ActorScope drop detaches here, mid-epoch.
+        });
+        c.sleep(Duration::from_millis(40));
+        c.suspend_current();
+        h.join().unwrap();
+        c.resume_current();
+        assert_eq!(c.now(), ticks(Duration::from_millis(40)));
+    }
+
+    #[test]
+    fn shutdown_racing_a_barrier_drains_cleanly() {
+        // Suspend (the shutdown join pattern) while workers still hold
+        // pending events: the workers must drain to completion and the
+        // resumed control actor observes the global quiesce time.
+        let c = clock(4);
+        let _me = ActorScope::enter(&c, "main");
+        let mut handles = Vec::new();
+        for i in 0..4 {
+            handles.push(actor(&c, &format!("w{i}"), i + 1, move |c| {
+                for _ in 0..=i {
+                    c.sleep(Duration::from_millis(10));
+                }
+                c.now()
+            }));
+        }
+        c.suspend_current();
+        for (i, h) in handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap(), ticks(Duration::from_millis(10 * (i as u64 + 1))));
+        }
+        c.resume_current();
+        // Global quiesce: the slowest worker finished at 40 ms.
+        assert_eq!(c.now(), ticks(Duration::from_millis(40)));
+    }
+
+    #[test]
+    fn ready_ties_resolve_by_actor_id_within_a_domain() {
+        let c = clock(4);
+        let _me = ActorScope::enter(&c, "main");
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for tag in ["a", "b"] {
+            let ord = order.clone();
+            let tag = tag.to_string();
+            handles.push(actor(&c, &tag, 1, move |c| {
+                c.sleep(Duration::from_millis(5));
+                ord.lock().unwrap().push(tag);
+            }));
+        }
+        c.sleep(Duration::from_millis(50));
+        c.suspend_current();
+        for h in handles {
+            h.join().unwrap();
+        }
+        c.resume_current();
+        assert_eq!(*order.lock().unwrap(), vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn stale_generation_returns_without_parking() {
+        let c = clock(2);
+        let _me = ActorScope::enter(&c, "main");
+        let slot = c.new_slot();
+        let gen = slot.generation();
+        c.notify_slot(&slot);
+        c.wait_slot(&slot, gen, Duration::from_secs(60));
+        assert_eq!(c.now(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn all_infinite_parks_panic_like_the_sequential_engine() {
+        let c = clock(2);
+        let _me = ActorScope::enter(&c, "main");
+        let slot = c.new_slot();
+        let gen = slot.generation();
+        // Sole actor parking forever with no possible notifier.
+        c.wait_slot(&slot, gen, Duration::from_nanos(Tick::MAX));
+    }
+}

@@ -23,7 +23,12 @@ use crate::util::prng::Rng;
 
 /// (in_dim, out_dim) per benchmark variant; mirrors the python layer's
 /// `DNN_VARIANTS` first/last dims (python/compile/model.py).
+///
+/// Synthetic scale-sweep tenants are named `{base}@{suffix}` (group names
+/// must be unique but the five Table-1 designs are the only real
+/// artifacts), so geometry keys on the base variant before the `@`.
 pub fn variant_dims(variant: &str) -> (usize, usize) {
+    let variant = variant.split('@').next().unwrap_or(variant);
     match variant {
         "tabla" => (128, 64),
         "dnnweaver" => (256, 64),
@@ -241,5 +246,7 @@ mod tests {
             assert!(i >= 64 && o == 64, "{v}");
         }
         assert_eq!(variant_dims("unknown"), (128, 64));
+        // Synthetic scale-sweep tenants key geometry on their base design.
+        assert_eq!(variant_dims("stripes@0042"), variant_dims("stripes"));
     }
 }

@@ -193,6 +193,7 @@ mod tests {
         // sibling instead (shard 2 stays active throughout).
         let stop = Arc::new(crate::sync::atomic::AtomicBool::new(false));
         let (s2, stop2) = (s.clone(), stop.clone());
+        // detlint: allow(thread-spawn) -- race-stress test; no simulated time
         let toggler = std::thread::spawn(move || {
             while !stop2.load(Ordering::Relaxed) {
                 s2[1].set_gated(true);

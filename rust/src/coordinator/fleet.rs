@@ -721,6 +721,13 @@ impl FleetServing {
         // order, groups in index order, instances in order; then the node
         // CCs in id order). With one node this is exactly the legacy
         // monolith's order, so the 1-node path schedules identically.
+        // Under `ParallelVirtualClock` the same calls also partition the
+        // fleet into advance-domains: group gi's workers (all nodes) land
+        // in domain gi+1 and the CCs join the driver in control domain 0,
+        // so independent groups simulate concurrently between CC-epoch
+        // barriers (DESIGN.md S24). The sequential engine ignores the
+        // domain tags, keeping registration order — and traces —
+        // identical in both modes.
         let mut workers = Vec::new();
         {
             let env = WorkerEnv {

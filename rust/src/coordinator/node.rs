@@ -163,7 +163,13 @@ pub(super) fn spawn_worker(
     } else {
         format!("{}:{}:w{wid}", node.name, g.name)
     };
-    let actor = clock.register_actor(&label);
+    // Advance-domain gi+1: a group's workers (across all nodes) share
+    // group-global state, so they form one domain; domain 0 stays the
+    // control domain (driver + CCs). Under the sequential engine the
+    // domain tag is ignored (DESIGN.md S24).
+    let actor = clock.register_actor_in(&label, gi + 1);
+    // detlint: allow(thread-spawn) -- actor pre-registered above; the
+    // thread attaches before touching simulated time
     std::thread::spawn(move || {
         let _actor = ActorScope::attach(&clock, actor);
         let shards = &node.slices[gi].shards;
@@ -725,7 +731,12 @@ pub(super) fn spawn_node_cc(ctx: NodeCtx) -> std::thread::JoinHandle<Vec<GroupCc
     } else {
         format!("{}:cc", ctx.nodes[ctx.me].name)
     };
-    let actor = ctx.cfg.clock.register_actor(&label);
+    // Node CCs are control-domain actors: they run the cross-group epoch
+    // barrier (adopt/migrate/rebalance), so the parallel engine must fence
+    // every worker domain against them (DESIGN.md S24).
+    let actor = ctx.cfg.clock.register_actor_in(&label, 0);
+    // detlint: allow(thread-spawn) -- actor pre-registered above; the
+    // thread attaches before touching simulated time
     std::thread::spawn(move || {
         let _actor = ActorScope::attach(&ctx.cfg.clock, actor);
         let engine = if ctx.cfg.selector_via_pjrt {
@@ -1185,6 +1196,7 @@ mod tests {
         let h = Arc::new(Handover::new(1));
 
         let hc = Arc::clone(&h);
+        // detlint: allow(thread-spawn) -- poisoning test; no simulated time
         let panicked = std::thread::spawn(move || {
             let _guard = hc.slots[0].lock().unwrap();
             panic!("simulated CC panic during a hand-off");

@@ -610,6 +610,8 @@ mod tests {
         let s = Arc::new(ShardQueue::with_clock(8, clock.clone()));
         let actor = clock.register_actor("consumer");
         let (s2, c2) = (s.clone(), clock.clone());
+        // detlint: allow(thread-spawn) -- actor pre-registered above; the
+        // thread attaches before touching simulated time
         let h = std::thread::spawn(move || {
             let _scope = ActorScope::attach(&c2, actor);
             let got = s2.pop_wait(4, Duration::from_secs(5));
@@ -650,6 +652,8 @@ mod tests {
         let s = Arc::new(ShardQueue::with_clock(8, clock.clone()));
         let actor = clock.register_actor("consumer");
         let (s2, c2) = (s.clone(), clock.clone());
+        // detlint: allow(thread-spawn) -- actor pre-registered above; the
+        // thread attaches before touching simulated time
         let h = std::thread::spawn(move || {
             let _scope = ActorScope::attach(&c2, actor);
             let got = s2.pop_wait(4, Duration::from_millis(20));
@@ -740,6 +744,8 @@ mod tests {
         // Ungating wakes a parked worker long before its timeout.
         let actor = clock.register_actor("worker");
         let (s2, c2) = (s.clone(), clock.clone());
+        // detlint: allow(thread-spawn) -- actor pre-registered above; the
+        // thread attaches before touching simulated time
         let h = std::thread::spawn(move || {
             let _scope = ActorScope::attach(&c2, actor);
             s2.park_while_gated(Duration::from_secs(60));
@@ -798,6 +804,7 @@ mod tests {
 
         // Poison the staging mutex: a worker panicking mid-reap.
         let sc = Arc::clone(&s);
+        // detlint: allow(thread-spawn) -- poisoning test; no simulated time
         let panicked = std::thread::spawn(move || {
             let _guard = sc.staging.lock().unwrap();
             panic!("simulated worker panic while holding the staging lock");

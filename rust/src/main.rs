@@ -63,6 +63,13 @@ SUBCOMMANDS:
              failures, stragglers, correlated surges)
              [--nodes N] (spread the groups round-robin over N node
              agents; submits are routed by the fleet topology)
+             [--parallel] [--parallel-workers K] (with --virtual-time:
+             replay on the conservative parallel engine — independent
+             groups advance concurrently between CC-epoch barriers,
+             traces byte-identical to sequential, DESIGN.md S24 — then
+             rerun the sequential reference and print the speedup;
+             scenario `synthetic-N` builds an N-group synthetic fleet
+             for scale sweeps)
   topology   --scenario <name> [--nodes N] [--instances N] [--epochs N]
              (run a short virtual-time fleet and print the live
              TopologySnapshot as JSON — DESIGN.md S21.4 schema)
@@ -602,7 +609,8 @@ fn print_capacity_comparison(
 fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
     args.check_known(&[
         "scenario", "instances", "epochs", "epoch-ms", "rps", "mode", "artifacts", "seed",
-        "capacity", "virtual-time", "predictor", "qos-target", "faults", "nodes",
+        "capacity", "virtual-time", "predictor", "qos-target", "faults", "nodes", "parallel",
+        "parallel-workers",
     ])?;
     let flags = ControlFlags::parse(args)?;
     let name = args.flag_or("scenario", "mixed-tenant");
@@ -629,17 +637,14 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
         args.flag_or("artifacts", "artifacts")
     };
 
-    // Under --virtual-time the whole fleet runs on a deterministic
-    // discrete-event clock: the replay is bit-identical per --seed and a
-    // long scenario takes milliseconds instead of epochs x epoch-ms of
-    // wall time (DESIGN.md S18).
-    let clock: std::sync::Arc<dyn wavescale::clock::Clock> = if virtual_time {
-        std::sync::Arc::new(wavescale::clock::VirtualClock::new())
-    } else {
-        wavescale::clock::wall()
-    };
-    let _driver = virtual_time
-        .then(|| wavescale::clock::ActorScope::enter(&clock, "serve-fleet"));
+    // --parallel swaps the sequential discrete-event engine for the
+    // conservative parallel one (DESIGN.md S24); traces are byte-identical
+    // by the equivalence contract, only the wall clock changes.
+    let parallel_workers = args.flag_usize("parallel-workers")?;
+    let parallel = args.switch("parallel") || parallel_workers.is_some();
+    if parallel && !virtual_time {
+        return Err("--parallel/--parallel-workers require --virtual-time".into());
+    }
 
     let scenario = wavescale::workload::Scenario::by_name(name, epochs, seed)?;
     // --faults injects the scenario's canonical fault plan (the one the
@@ -655,24 +660,57 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
     } else {
         wavescale::workload::FaultPlan::default()
     };
-    let cfg = wavescale::coordinator::FleetServingConfig {
-        groups: scenario.group_configs(n_instances),
-        faults: std::sync::Arc::new(faults.clone()),
-        epoch: std::time::Duration::from_millis(epoch_ms as u64),
-        mode,
-        capacity_policy: capacity,
-        predictor,
-        predictor_period: wavescale::workload::Scenario::day_period(epochs),
-        qos_target,
-        nodes: n_nodes,
-        // The PJRT selector round-trip is skipped in virtual time so the
-        // trace cannot depend on which artifacts are installed.
-        selector_via_pjrt: !virtual_time,
-        clock: clock.clone(),
-        ..Default::default()
+    // One full serving run (fresh fleet, fresh clock). Under
+    // --virtual-time the whole fleet runs on a deterministic
+    // discrete-event clock: the replay is bit-identical per --seed and a
+    // long scenario takes milliseconds instead of epochs x epoch-ms of
+    // wall time (DESIGN.md S18). `par` picks the engine; returns
+    // (accepted, report, wall seconds).
+    let run_once = |par: bool| -> Result<
+        (u64, wavescale::coordinator::FleetServingReport, f64),
+        String,
+    > {
+        let clock: std::sync::Arc<dyn wavescale::clock::Clock> = if !virtual_time {
+            wavescale::clock::wall()
+        } else if par {
+            match parallel_workers {
+                Some(k) => {
+                    std::sync::Arc::new(wavescale::clock::ParallelVirtualClock::with_workers(k))
+                }
+                None => std::sync::Arc::new(wavescale::clock::ParallelVirtualClock::new()),
+            }
+        } else {
+            std::sync::Arc::new(wavescale::clock::VirtualClock::new())
+        };
+        let _driver = virtual_time
+            .then(|| wavescale::clock::ActorScope::enter(&clock, "serve-fleet"));
+        let cfg = wavescale::coordinator::FleetServingConfig {
+            groups: scenario.group_configs(n_instances),
+            faults: std::sync::Arc::new(faults.clone()),
+            epoch: std::time::Duration::from_millis(epoch_ms as u64),
+            mode,
+            capacity_policy: capacity,
+            predictor,
+            predictor_period: wavescale::workload::Scenario::day_period(epochs),
+            qos_target,
+            nodes: n_nodes,
+            // The PJRT selector round-trip is skipped in virtual time so
+            // the trace cannot depend on which artifacts are installed.
+            selector_via_pjrt: !virtual_time,
+            clock: clock.clone(),
+            ..Default::default()
+        };
+        let fleet = wavescale::coordinator::FleetServing::start(cfg, dir.into())
+            .map_err(|e| e.to_string())?;
+        // detlint: allow(wallclock) -- wall-time is reporting-only here
+        // (run duration / speedup lines); the scenario itself runs on the
+        // fleet's clock
+        let wall_start = std::time::Instant::now();
+        let accepted = wavescale::coordinator::drive_scenario(&fleet, &scenario, rps, seed);
+        let report = fleet.shutdown().map_err(|e| e.to_string())?;
+        Ok((accepted, report, wall_start.elapsed().as_secs_f64()))
     };
-    let fleet = wavescale::coordinator::FleetServing::start(cfg, dir.into())
-        .map_err(|e| e.to_string())?;
+
     println!(
         "serving scenario {name}: {} groups x {n_instances} instances on {n_nodes} node(s), \
          {epochs} epochs, capacity policy {}, predictor {}{}{}",
@@ -683,7 +721,13 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
             Some(q) => format!(" (adaptive guardband, QoS target {:.1}%)", q * 100.0),
             None => String::new(),
         },
-        if virtual_time { ", virtual time" } else { "" }
+        if parallel {
+            ", parallel virtual time"
+        } else if virtual_time {
+            ", virtual time"
+        } else {
+            ""
+        }
     );
     if args.switch("faults") {
         if faults.is_empty() {
@@ -698,11 +742,7 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
         }
     }
 
-    // detlint: allow(wallclock) -- wall-time is reporting-only here (run
-    // duration line); the scenario itself runs on the fleet's clock
-    let wall_start = std::time::Instant::now();
-    let accepted = wavescale::coordinator::drive_scenario(&fleet, &scenario, rps, seed);
-    let report = fleet.shutdown().map_err(|e| e.to_string())?;
+    let (accepted, report, wall_s) = run_once(parallel)?;
 
     println!("accepted {accepted} submissions");
     if virtual_time {
@@ -710,7 +750,30 @@ fn serve_fleet_cmd(args: &Args) -> Result<(), String> {
             "replayed {:.1} s of virtual time in {:.0} ms wall (seed {seed}; reruns are \
              bit-identical)",
             (epochs + 1) as f64 * epoch_ms as f64 / 1e3,
-            wall_start.elapsed().as_secs_f64() * 1e3
+            wall_s * 1e3
+        );
+    }
+    if parallel {
+        // Rerun on the sequential golden reference: the speedup line is
+        // the tentpole number, and the summary comparison is a cheap
+        // determinism cross-check (the full byte-equality contract lives
+        // in tests/sim_parallel.rs).
+        let (seq_accepted, seq_report, seq_wall_s) = run_once(false)?;
+        let equal = seq_accepted == accepted
+            && seq_report.stats.energy_j.to_bits() == report.stats.energy_j.to_bits()
+            && seq_report
+                .stats
+                .per_group
+                .iter()
+                .zip(&report.stats.per_group)
+                .all(|(a, b)| a.admitted == b.admitted && a.completed == b.completed);
+        println!(
+            "parallel speedup: {:.2}x (parallel {:.0} ms vs sequential {:.0} ms wall; \
+             summaries {})",
+            seq_wall_s / wall_s.max(1e-9),
+            wall_s * 1e3,
+            seq_wall_s * 1e3,
+            if equal { "identical" } else { "DIVERGED — determinism bug, please report" }
         );
     }
     print!("{}", table(&wavescale::coordinator::fleet_report_rows(&report.stats)));

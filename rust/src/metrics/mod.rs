@@ -338,6 +338,8 @@ mod tests {
         for _ in 0..4 {
             let c = c.clone();
             let h = h.clone();
+            // detlint: allow(thread-spawn) -- counter stress test; no
+            // simulated time
             threads.push(std::thread::spawn(move || {
                 for i in 0..10_000 {
                     c.inc();

@@ -564,6 +564,10 @@ pub fn build_platform(
     use crate::power::PowerParams;
     use crate::sta::{analyze, DelayParams};
 
+    // Synthetic scale-sweep tenants are named `{base}@{suffix}` (group
+    // names must be unique; only the Table-1 designs physically exist) —
+    // the platform is built for the base design.
+    let benchmark = benchmark.split('@').next().unwrap_or(benchmark);
     let spec = BenchmarkSpec::by_name(benchmark)
         .ok_or_else(|| format!("unknown benchmark {benchmark}"))?;
     let chars = CharLibrary::stratix_iv_22nm();

@@ -10,6 +10,12 @@
 //! * two runs with the same [`SimSpec`] produce **byte-identical** JSON
 //!   epoch traces.
 //!
+//! `SimSpec.parallel` swaps in the conservative parallel engine
+//! ([`ParallelVirtualClock`], DESIGN.md S24), which runs independent
+//! tenant groups concurrently between CC-epoch barriers and — by the
+//! equivalence contract asserted in `tests/sim_parallel.rs` — produces
+//! the *same bytes* as the sequential golden reference.
+//!
 //! On top of [`run`] sits the golden-trace harness: [`check_golden`]
 //! replays a spec, serializes the per-group [`EpochRecord`] trace with
 //! [`trace_json`], and compares it against the committed file under
@@ -36,7 +42,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::clock::{ActorScope, Clock, VirtualClock};
+use crate::clock::{ActorScope, Clock, ParallelVirtualClock, VirtualClock};
 use crate::coordinator::{
     drive_scenario, EpochRecord, FleetServing, FleetServingConfig, FleetServingReport,
     MigrationPlan,
@@ -100,6 +106,13 @@ pub struct SimSpec {
     /// batch, which is bitwise-neutral — committed goldens stay keyed to
     /// the fixed-batch path.
     pub adaptive_batch: bool,
+    /// Replay on the conservative parallel engine
+    /// ([`ParallelVirtualClock`], DESIGN.md S24) instead of the sequential
+    /// golden reference. Every replay builds a fresh engine, and parallel
+    /// traces are byte-identical to sequential ones by contract
+    /// (`tests/sim_parallel.rs`), so the golden stem — and the trace JSON
+    /// — deliberately do not key on this knob.
+    pub parallel: bool,
 }
 
 impl Default for SimSpec {
@@ -122,6 +135,7 @@ impl Default for SimSpec {
             n_nodes: 1,
             migrations: MigrationPlan::default(),
             adaptive_batch: false,
+            parallel: false,
         }
     }
 }
@@ -204,6 +218,10 @@ pub struct SimOutcome {
 /// are deterministic but expensive, and property suites start hundreds of
 /// fleets.
 fn built_for(benchmark: &str) -> Result<(DesignPower, Optimizer)> {
+    // Synthetic scale-sweep tenants are named `{base}@{suffix}` to keep
+    // group names unique; the physical design is the base benchmark, so
+    // the build (and the memo entry) keys on it.
+    let benchmark = benchmark.split('@').next().unwrap_or(benchmark);
     static CACHE: OnceLock<Mutex<HashMap<String, (DesignPower, Optimizer)>>> = OnceLock::new();
     let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
     let mut map = match cache.lock() {
@@ -230,7 +248,14 @@ pub fn run(spec: &SimSpec) -> Result<SimOutcome> {
 /// Replay an already-built scenario under `spec`'s fleet parameters.
 pub fn run_scenario(spec: &SimSpec, scenario: &Scenario) -> Result<SimOutcome> {
     let t0 = Instant::now(); // detlint: allow(wallclock) -- harness wall time
-    let clock: Arc<dyn Clock> = Arc::new(VirtualClock::new());
+    // A fresh engine per replay: no scheduler state survives between
+    // runs, so a parallel replay can never contaminate a sequential one
+    // (or vice versa) inside one process.
+    let clock: Arc<dyn Clock> = if spec.parallel {
+        Arc::new(ParallelVirtualClock::new())
+    } else {
+        Arc::new(VirtualClock::new())
+    };
     let _driver = ActorScope::enter(&clock, "sim-driver");
     let cfg = FleetServingConfig {
         groups: scenario.group_configs(spec.n_instances),
@@ -421,6 +446,10 @@ mod tests {
             ..SimSpec::golden("diurnal")
         };
         assert_eq!(spec.golden_stem(), "diurnal_hybrid_n4_abatch");
+        // The parallel engine is trace-equivalent by contract, so it
+        // shares the sequential stem — goldens are engine-independent.
+        let spec = SimSpec { parallel: true, ..SimSpec::golden("diurnal") };
+        assert_eq!(spec.golden_stem(), "diurnal_hybrid");
     }
 
     #[test]

@@ -77,10 +77,18 @@ impl Scenario {
             "tiered-tenants" => Scenario::tiered_tenants(steps, seed),
             "long-replay" => Scenario::long_replay(steps, seed),
             other => {
+                // `synthetic-N` builds an N-group scale-sweep fleet (see
+                // [`Scenario::synthetic_fleet`]); any N is accepted, so
+                // the name is parsed rather than listed in NAMES.
+                if let Some(n) =
+                    other.strip_prefix("synthetic-").and_then(|s| s.parse::<usize>().ok())
+                {
+                    return Ok(Scenario::synthetic_fleet(n, steps, seed));
+                }
                 return Err(format!(
-                    "unknown scenario {other} (known: {})",
+                    "unknown scenario {other} (known: {}, synthetic-N)",
                     Scenario::NAMES.join(", ")
-                ))
+                ));
             }
         })
     }
@@ -349,6 +357,50 @@ impl Scenario {
         }
     }
 
+    /// A synthetic `n_groups`-tenant fleet for scale sweeps (the
+    /// `perf_sim_scale` bench and `serve-fleet --parallel`, DESIGN.md
+    /// S24). Tenants are named `{base}@{index:04}` — group names must be
+    /// unique, and only the five Table-1 designs physically exist, so the
+    /// base benchmark cycles through Table 1 while the `@` suffix keeps
+    /// names distinct (the backend and build memo key on the base; see
+    /// `coordinator::backend::variant_dims`). Each tenant gets an equal
+    /// share and its own seeded trace, cycling the three generator
+    /// families so a big fleet mixes diurnal, Poisson, and bursty demand.
+    /// Not part of [`Scenario::NAMES`]: golden suites iterate those, and
+    /// a thousand-group golden would be all bulk and no signal.
+    pub fn synthetic_fleet(n_groups: usize, steps: usize, seed: u64) -> Scenario {
+        const BASES: [&str; 5] = ["tabla", "dnnweaver", "diannao", "stripes", "proteus"];
+        let n_groups = n_groups.max(1);
+        let share = 1.0 / n_groups as f64;
+        let period = Scenario::day_period(steps);
+        let tenants = (0..n_groups)
+            .map(|i| {
+                let tseed = seed.wrapping_add(0x9e37_79b9_7f4a_7c15u64.wrapping_mul(i as u64 + 1));
+                let trace = match i % 3 {
+                    0 => periodic(steps, period, 0.10, 0.80, 0.02, tseed),
+                    1 => poisson(steps, 0.30, 1_000.0, tseed),
+                    _ => bursty(&BurstyConfig {
+                        steps,
+                        mean_load: 0.25,
+                        seed: tseed,
+                        ..Default::default()
+                    }),
+                };
+                TenantTrace {
+                    benchmark: format!("{}@{i:04}", BASES[i % BASES.len()]),
+                    share,
+                    trace,
+                    qos_target: None,
+                }
+            })
+            .collect();
+        Scenario {
+            name: format!("synthetic-{n_groups}"),
+            description: format!("{n_groups} synthetic tenants cycling Table-1 designs"),
+            tenants,
+        }
+    }
+
     /// Build a replay scenario from `(benchmark, share, csv_text)` rows —
     /// each CSV in the [`Trace::to_csv`] format.
     pub fn replay(name: &str, specs: &[(&str, f64, &str)]) -> Result<Scenario, String> {
@@ -522,6 +574,41 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn synthetic_fleet_scales_and_validates() {
+        for n in [1, 10, 137] {
+            let s = Scenario::synthetic_fleet(n, 48, 2019);
+            s.validate().unwrap_or_else(|e| panic!("n={n}: {e}"));
+            assert_eq!(s.tenants.len(), n);
+            assert_eq!(s.steps(), 48);
+            // Unique names (fleet validation rejects duplicates) keyed on
+            // real Table-1 bases.
+            let mut names: Vec<&str> =
+                s.tenants.iter().map(|t| t.benchmark.as_str()).collect();
+            names.sort_unstable();
+            names.dedup();
+            assert_eq!(names.len(), n, "names must be unique");
+            for t in &s.tenants {
+                let base = t.benchmark.split('@').next().unwrap();
+                assert!(
+                    ["tabla", "dnnweaver", "diannao", "stripes", "proteus"].contains(&base),
+                    "{}",
+                    t.benchmark
+                );
+            }
+        }
+        // Deterministic in the seed.
+        let a = Scenario::synthetic_fleet(10, 48, 7);
+        let b = Scenario::synthetic_fleet(10, 48, 7);
+        for (ta, tb) in a.tenants.iter().zip(&b.tenants) {
+            assert_eq!(ta.trace.loads, tb.trace.loads);
+        }
+        // `synthetic-N` resolves through by_name like any named scenario.
+        let s = Scenario::by_name("synthetic-25", 48, 7).unwrap();
+        assert_eq!(s.tenants.len(), 25);
+        assert!(Scenario::by_name("synthetic-x", 48, 7).is_err());
     }
 
     #[test]

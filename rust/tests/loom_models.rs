@@ -47,6 +47,7 @@ use std::collections::HashSet;
 use std::sync::Arc;
 use std::time::Duration;
 
+use wavescale::clock::{ticks, ActorScope, Clock, ParallelVirtualClock};
 use wavescale::coordinator::{FleetTopology, GroupConfig, Request, ShardQueue, TopologyStore};
 
 fn req(id: u64) -> Request {
@@ -296,5 +297,108 @@ fn topology_version_mask_publication_is_never_torn() {
         }
         assert_eq!(store.version(), v0 + 1);
         assert_eq!(store.hosting_mask(0), 0b10);
+    });
+}
+
+/// S24 invariant 1: the parallel virtual clock's barrier protocol is
+/// schedule-independent — every interleaving of two worker-domain actors
+/// racing a control-domain barrier yields the same virtual-time
+/// observations the sequential engine would produce.
+///
+/// The smallest configuration with real domain concurrency: two worker
+/// domains (cap 2, so both actors can hold a CPU simultaneously) and one
+/// control actor whose 30 ms sleep is the fence. Whatever order loom
+/// runs the grants, attaches and parks in, each worker must observe its
+/// own domain clock at 10 ms, and the control actor must not resume
+/// until both worker events (sequentially ordered before its barrier)
+/// have fully executed. A fence bug shows up as a worker reading a
+/// control-advanced clock (or vice versa); a lost grant wedges the model
+/// and is caught by loom's deadlock detection.
+#[test]
+fn parallel_clock_barrier_is_schedule_independent() {
+    loom::model(|| {
+        let c: Arc<dyn Clock> = Arc::new(ParallelVirtualClock::with_workers(2));
+        let _me = ActorScope::enter(&c, "control");
+        let workers: Vec<_> = (0..2u64)
+            .map(|i| {
+                let id = c.register_actor_in(&format!("w{i}"), i as usize + 1);
+                let c = Arc::clone(&c);
+                loom::thread::spawn(move || {
+                    let _scope = ActorScope::attach(&c, id);
+                    c.sleep(Duration::from_millis(10));
+                    c.now()
+                })
+            })
+            .collect();
+        c.sleep(Duration::from_millis(30));
+        let at_barrier = c.now();
+        c.suspend_current();
+        for h in workers {
+            assert_eq!(
+                h.join().unwrap(),
+                ticks(Duration::from_millis(10)),
+                "worker observed a foreign domain clock"
+            );
+        }
+        c.resume_current();
+        assert_eq!(at_barrier, ticks(Duration::from_millis(30)));
+        // Post-quiesce view: the maximum over domain clocks.
+        assert_eq!(c.now(), ticks(Duration::from_millis(30)));
+    });
+}
+
+/// S24 invariant 2: a worker-originated cross-domain wakeup is deferred
+/// and merged at the next barrier with the notifier's clock, in every
+/// schedule — the merge may never be lost, applied twice, or applied
+/// with a schedule-dependent stamp.
+///
+/// One waiter (domain 3) parks on a slot; a control barrier sequences
+/// that park before the notifier (domain 1) exists — the precondition
+/// under which worker-originated notifies are order-safe (module docs:
+/// the coordinator routes all cross-domain notifies through domain 0).
+/// The notifier is granted at the registrar's 1 ms clock and notifies
+/// after a 7 ms sleep, so in every interleaving the deferred wake must
+/// deliver exactly stamp 8 ms to the waiter, with no timeout assist.
+#[test]
+fn parallel_clock_defers_and_merges_cross_domain_wakeups() {
+    loom::model(|| {
+        let c: Arc<dyn Clock> = Arc::new(ParallelVirtualClock::with_workers(2));
+        let _me = ActorScope::enter(&c, "control");
+        let slot = c.new_slot();
+        let waiter = {
+            let id = c.register_actor_in("waiter", 3);
+            let (c, slot) = (Arc::clone(&c), slot.clone());
+            loom::thread::spawn(move || {
+                let _scope = ActorScope::attach(&c, id);
+                let gen = slot.generation();
+                c.wait_slot(&slot, gen, Duration::from_secs(3600));
+                c.now()
+            })
+        };
+        // Barrier: control runs again only once the waiter has parked.
+        c.sleep(Duration::from_millis(1));
+        let notifier = {
+            let id = c.register_actor_in("notifier", 1);
+            let (c, slot) = (Arc::clone(&c), slot.clone());
+            loom::thread::spawn(move || {
+                let _scope = ActorScope::attach(&c, id);
+                c.sleep(Duration::from_millis(7));
+                c.notify_slot(&slot);
+            })
+        };
+        c.sleep(Duration::from_millis(50));
+        c.suspend_current();
+        notifier.join().unwrap();
+        let woke_at = waiter.join().unwrap();
+        c.resume_current();
+        assert_eq!(
+            woke_at,
+            ticks(Duration::from_millis(8)),
+            "deferred wake must carry the notifier's clock through the merge"
+        );
+        assert!(
+            !loom::timeout_fired(),
+            "waiter only progressed via the deadlock-timeout rescue: lost deferred wake"
+        );
     });
 }

@@ -367,7 +367,102 @@ fn random_spec(rng: &mut Rng) -> SimSpec {
         // cases: conservation, determinism and the guardband contract
         // must hold with the CC rescaling dispatch batches mid-run.
         adaptive_batch: rng.bool(0.25),
+        // Sequential engine by default: these properties pin the golden
+        // reference's behavior, and the dedicated equivalence property
+        // below runs both engines and diffs the traces.
+        parallel: false,
     }
+}
+
+/// Randomized shape of a parallel-vs-sequential equivalence case. Shrinks
+/// toward shorter horizons, fewer instances and fewer nodes so a failing
+/// divergence minimizes to the smallest replay that still splits the
+/// engines. Fault-carrying cases keep their epoch/instance counts (the
+/// scripted plan is keyed to them); node count always shrinks.
+#[derive(Clone, Debug)]
+struct EqCase {
+    spec: SimSpec,
+}
+
+impl Shrink for EqCase {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let resizable = self.spec.faults.is_empty();
+        if resizable {
+            for epochs in self.spec.epochs.shrink() {
+                if epochs >= 2 {
+                    out.push(EqCase { spec: SimSpec { epochs, ..self.spec.clone() } });
+                }
+            }
+            for n_instances in self.spec.n_instances.shrink() {
+                if n_instances >= 1 {
+                    out.push(EqCase { spec: SimSpec { n_instances, ..self.spec.clone() } });
+                }
+            }
+        }
+        for n_nodes in self.spec.n_nodes.shrink() {
+            if n_nodes >= 1 {
+                out.push(EqCase { spec: SimSpec { n_nodes, ..self.spec.clone() } });
+            }
+        }
+        out
+    }
+}
+
+#[test]
+fn prop_parallel_engine_is_trace_equivalent_to_sequential() {
+    // ISSUE 10 tentpole property (DESIGN.md S24): for an arbitrary
+    // scenario / policy / predictor / node-count spec — with scripted
+    // faults in a third of the cases, and synthetic scale fleets in a
+    // quarter — the conservative parallel engine must replay the exact
+    // bytes the sequential golden reference produces. The named-matrix
+    // version lives in tests/sim_parallel.rs; this one walks the
+    // configuration space the matrix cannot enumerate.
+    check_shrink(
+        "parallel replay == sequential replay",
+        24,
+        |rng| {
+            let mut spec = random_spec(rng);
+            spec.epochs = rng.index(3, 7);
+            spec.n_nodes = *rng.choose(&[1usize, 1, 2, 4]);
+            if rng.bool(0.25) {
+                // Synthetic fleets reach group counts (and thus
+                // advance-domain counts) no named scenario has.
+                spec.scenario = format!("synthetic-{}", rng.index(2, 13));
+                spec.n_instances = 1;
+            }
+            if rng.bool(0.33) {
+                let scenario = Scenario::by_name(&spec.scenario, spec.epochs, spec.seed)
+                    .expect("generated scenario");
+                spec.faults = FaultPlan::scripted(
+                    rng.next_u64(),
+                    scenario.tenants.len(),
+                    spec.n_instances,
+                    spec.epochs,
+                );
+            }
+            EqCase { spec }
+        },
+        |case| {
+            let spec = &case.spec;
+            let scenario = Scenario::by_name(&spec.scenario, spec.epochs, spec.seed)?;
+            let seq = simtest::run(spec).map_err(|e| format!("sequential {spec:?}: {e}"))?;
+            let par_spec = SimSpec { parallel: true, ..spec.clone() };
+            let par =
+                simtest::run(&par_spec).map_err(|e| format!("parallel {par_spec:?}: {e}"))?;
+            let js = simtest::trace_json(spec, &scenario, &seq.report).to_string_compact();
+            let jp = simtest::trace_json(&par_spec, &scenario, &par.report).to_string_compact();
+            assert_that(js == jp, format!("{spec:?}: parallel trace diverged from sequential"))?;
+            assert_that(
+                seq.accepted == par.accepted,
+                format!("{spec:?}: accepted {} vs {}", seq.accepted, par.accepted),
+            )?;
+            assert_that(
+                seq.report.stats.energy_j.to_bits() == par.report.stats.energy_j.to_bits(),
+                format!("{spec:?}: engines disagree on integrated energy"),
+            )
+        },
+    );
 }
 
 #[test]

@@ -16,6 +16,7 @@
 //! | `float-sort` | `sort_by`/`max_by`/`min_by` through `partial_cmp`, or `partial_cmp(..).unwrap()` — NaN panics / unstable order; use `total_cmp` | everywhere |
 //! | `randomness` | `thread_rng` / `rand::random` / `from_entropy` / `RandomState` — OS-entropy randomness | everywhere |
 //! | `std-sync-bypass` | `std::sync` / `std::cell` / `std::hint` imports that bypass the `crate::sync` loom shim | `coordinator/`, `clock/`, `metrics/` |
+//! | `thread-spawn` | `thread::spawn` / `thread::Builder` outside the registered-actor protocol — an unregistered thread is invisible to the virtual scheduler (and to the parallel engine's advance-domains) | everywhere |
 //!
 //! ## Allows
 //!
@@ -67,7 +68,7 @@ const HASH_SCOPE: [&str; 7] = [
 /// `crate::sync` shim so loom models exercise the real code.
 const SHIM_SCOPE: [&str; 3] = ["coordinator/", "clock/", "metrics/"];
 
-const RULES: [Rule; 5] = [
+const RULES: [Rule; 6] = [
     Rule {
         name: "wallclock",
         message: "wall-clock time outside clock/: route through the Clock trait so \
@@ -120,6 +121,15 @@ const RULES: [Rule; 5] = [
         matches: |l| {
             l.contains("std::sync::") || l.contains("std::cell::") || l.contains("std::hint::")
         },
+    },
+    Rule {
+        name: "thread-spawn",
+        message: "raw OS thread spawn: pre-register the actor on the spawning \
+                  thread (Clock::register_actor / register_actor_in) and attach \
+                  inside the thread, or the virtual scheduler cannot order it; \
+                  audited wall-clock-only spawns take an allow",
+        in_scope: |_| true,
+        matches: |l| l.contains("thread::spawn") || l.contains("thread::Builder"),
     },
 ];
 
@@ -404,5 +414,28 @@ use std::collections::HashSet;
             lint_str("util/x.rs", "let mut rng = thread_rng();"),
             vec!["randomness"]
         );
+    }
+
+    #[test]
+    fn thread_spawn_flagged_without_registered_actor_allow() {
+        assert_eq!(
+            lint_str("clock/parallel.rs", "let h = std::thread::spawn(move || work());"),
+            vec!["thread-spawn"]
+        );
+        assert_eq!(
+            lint_str("coordinator/node.rs", "thread::Builder::new().spawn(f)?;"),
+            vec!["thread-spawn"]
+        );
+        // The sanctioned pattern: an audited allow naming why the spawn is
+        // outside (or ahead of) the scheduler's view.
+        let audited = "\
+// detlint: allow(thread-spawn) -- actor pre-registered above; the
+// thread attaches before touching simulated time
+let h = std::thread::spawn(run);
+";
+        assert!(lint_str("coordinator/node.rs", audited).is_empty());
+        // Registered-actor plumbing itself never matches: spawning is the
+        // hazard, registration is the cure.
+        assert!(lint_str("clock/parallel.rs", "let id = c.register_actor_in(n, 3);").is_empty());
     }
 }
